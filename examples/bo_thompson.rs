@@ -1,0 +1,40 @@
+//! Thompson-sampling Bayesian optimization on Hartmann-6 (Fig. 4 left):
+//! compares candidate-set sizes and samplers.
+//!
+//! Run: `cargo run --release --example bo_thompson -- [--evals 40] [--reps 3]`
+
+use ciq::bo::{run_bo, testfns::Hartmann6, BoConfig, Problem, Sampler};
+use ciq::util::cli::Args;
+
+fn main() -> ciq::Result<()> {
+    let args = Args::parse();
+    let evals = args.get_or("evals", 40usize);
+    let reps = args.get_or("reps", 3u64);
+    let problem = Hartmann6;
+    let opt = problem.optimum().unwrap();
+
+    println!("== Thompson-sampling BO on {} (optimum {:.4}) ==", problem.name(), opt);
+    println!("{:<18} {:>8} {:>12}", "config", "T", "mean regret");
+    for (label, sampler, t) in [
+        ("Cholesky-500", Sampler::Cholesky, 500),
+        ("CIQ-500", Sampler::Ciq, 500),
+        ("CIQ-2000", Sampler::Ciq, 2000),
+        ("RFF-2000", Sampler::Rff, 2000),
+    ] {
+        let mut regrets = Vec::new();
+        for rep in 0..reps {
+            let cfg = BoConfig {
+                candidates: t,
+                evaluations: evals,
+                sampler,
+                fit_steps: 10,
+                ..Default::default()
+            };
+            let trace = run_bo(&problem, &cfg, 100 + rep)?;
+            regrets.push(trace.best() - opt);
+        }
+        println!("{:<18} {:>8} {:>12.4}", label, t, ciq::util::mean(&regrets));
+    }
+    println!("(larger candidate sets improve regret; CIQ scales where Cholesky cannot)");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust/PJRT runtime.
+
+HLO text (NOT ``MLIR``/``.serialize()`` protos) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out, default ../artifacts):
+  kernel_mvm_n{n}_d{d}_r{r}_k{kind}.hlo.txt
+      inputs: xs (n,d) f32, b (n,r) f32, s2 () f32, noise () f32
+      output: (n,r) f32                       [1-tuple]
+  ciq_sqrt_n{n}_d{d}_q{q}_j{j}_k{kind}.hlo.txt
+      inputs: xs (n,d), b (n,), shifts (q,), weights (q,), s2 (), noise ()
+      output: (2n+1,) = [sqrt | invsqrt | max_residual]   [1-tuple]
+plus manifest.json describing every artifact.
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import kernel_mvm as km
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_kernel_mvm(n, d, r, kind, tm, tn):
+    fn = lambda xs, b, s2, noise: model.batched_mvm(
+        xs, b, s2, noise, kind=kind, use_pallas=True, tm=tm, tn=tn
+    )
+    return jax.jit(fn).lower(f32((n, d)), f32((n, r)), f32(()), f32(()))
+
+
+def lower_ciq_sqrt(n, d, q, j, kind, tm, tn):
+    fn = lambda xs, b, shifts, weights, s2, noise: model.ciq_sqrt(
+        xs, b, shifts, weights, s2, noise,
+        iters=j, kind=kind, use_pallas=True, tm=tm, tn=tn,
+    )
+    return jax.jit(fn).lower(
+        f32((n, d)), f32((n,)), f32((q,)), f32((q,)), f32(()), f32(())
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=256, help="data size for artifacts")
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--r", type=int, default=8, help="RHS batch for kernel_mvm artifact")
+    ap.add_argument("--q", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=64)
+    ap.add_argument("--tile", type=int, default=64)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"artifacts": []}
+
+    jobs = []
+    for kind, kname in [(km.RBF, "rbf"), (km.MATERN52, "matern52")]:
+        jobs.append(
+            (
+                f"kernel_mvm_n{args.n}_d{args.d}_r{args.r}_{kname}",
+                lower_kernel_mvm(args.n, args.d, args.r, kind, args.tile, args.tile),
+                {
+                    "kind": "kernel_mvm",
+                    "kernel": kname,
+                    "n": args.n,
+                    "d": args.d,
+                    "r": args.r,
+                    "inputs": [[args.n, args.d], [args.n, args.r], [], []],
+                    "output": [args.n, args.r],
+                },
+            )
+        )
+    jobs.append(
+        (
+            f"ciq_sqrt_n{args.n}_d{args.d}_q{args.q}_j{args.iters}_rbf",
+            lower_ciq_sqrt(args.n, args.d, args.q, args.iters, km.RBF, args.tile, args.tile),
+            {
+                "kind": "ciq_sqrt",
+                "kernel": "rbf",
+                "n": args.n,
+                "d": args.d,
+                "q": args.q,
+                "iters": args.iters,
+                "inputs": [[args.n, args.d], [args.n], [args.q], [args.q], [], []],
+                "output": [2 * args.n + 1],
+            },
+        )
+    )
+
+    for name, lowered, meta in jobs:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, name + ".hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        meta["file"] = name + ".hlo.txt"
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Layer 1: tiled kernel-matrix MVM as a Pallas kernel.
+
+The whole msMINRES-CIQ stack reduces to repeated products ``K @ B`` with a
+kernel matrix ``K_ij = s^2 rho(||x_i - x_j|| / ell)`` that is never
+materialized. This kernel computes the product tile by tile:
+
+* grid = (row_tiles, col_tiles); each step loads a ``(tm, d)`` block of rows,
+  a ``(tn, d)`` block of columns and a ``(tn, r)`` block of ``B`` into VMEM,
+* the pairwise squared distances are formed through an MXU-friendly
+  contraction ``|x|^2 + |y|^2 - 2 x @ y^T`` (a ``(tm, d) x (d, tn)`` matmul),
+* the kernel tile is evaluated in registers and immediately contracted
+  against the ``B`` block (a second matmul), accumulating into the
+  ``(tm, r)`` output block that lives in VMEM across the column-tile loop.
+
+This is the TPU re-thinking of the paper's CUDA map-reduce MVMs: the
+BlockSpec index maps below express the HBM<->VMEM schedule that the paper's
+GPU implementation expressed with threadblocks (DESIGN.md
+section "Hardware adaptation").
+
+Pallas runs with ``interpret=True`` (the image's PJRT plugin is CPU-only;
+real-TPU lowering would emit a Mosaic custom call). Numerics are identical.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# kernel families (static argument)
+RBF = 0
+MATERN12 = 1
+MATERN32 = 2
+MATERN52 = 3
+
+_SQRT3 = 3.0 ** 0.5
+_SQRT5 = 5.0 ** 0.5
+
+
+def _rho(kind: int, d2):
+    """Correlation as a function of squared scaled distance (traced)."""
+    if kind == RBF:
+        return jnp.exp(-0.5 * d2)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-30))
+    if kind == MATERN12:
+        return jnp.exp(-r)
+    if kind == MATERN32:
+        a = _SQRT3 * r
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == MATERN52:
+        a = _SQRT5 * r
+        return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+    raise ValueError(f"unknown kernel kind {kind}")
+
+
+def _mvm_kernel(kind, x_ref, sq_ref, xt_ref, sqt_ref, b_ref, s2_ref, o_ref):
+    """One (row_tile, col_tile) grid step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = x_ref[...]          # (tm, d)
+    xj = xt_ref[...]         # (tn, d)
+    # MXU contraction for pairwise distances
+    inner = jnp.dot(xi, xj.T)                     # (tm, tn)
+    d2 = sq_ref[...][:, None] + sqt_ref[...][None, :] - 2.0 * inner
+    d2 = jnp.maximum(d2, 0.0)
+    k_tile = s2_ref[0] * _rho(kind, d2)           # (tm, tn)
+    o_ref[...] += jnp.dot(k_tile, b_ref[...])     # (tm, r)
+
+
+@partial(jax.jit, static_argnames=("kind", "tm", "tn"))
+def kernel_mvm(xs, b, s2, noise, kind: int = RBF, tm: int = 64, tn: int = 64):
+    """``(K + noise*I) @ b`` for ``K_ij = s2 * rho(||xs_i - xs_j||)``.
+
+    Args:
+      xs: ``(n, d)`` data already scaled by 1/lengthscale.
+      b: ``(n, r)`` right-hand sides.
+      s2: scalar outputscale.
+      noise: scalar diagonal noise.
+      kind: kernel family (RBF / MATERN12 / MATERN32 / MATERN52).
+      tm, tn: row/column tile sizes (n must be divisible by both).
+
+    Returns:
+      ``(n, r)`` product.
+    """
+    n, d = xs.shape
+    r = b.shape[1]
+    assert n % tm == 0 and n % tn == 0, "n must be divisible by tile sizes"
+    sq = jnp.sum(xs * xs, axis=1)
+    s2_arr = jnp.reshape(s2, (1,)).astype(xs.dtype)
+    grid = (n // tm, n // tn)
+    out = pl.pallas_call(
+        partial(_mvm_kernel, kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),   # row block of X
+            pl.BlockSpec((tm,), lambda i, j: (i,)),       # row sq-norms
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),   # col block of X
+            pl.BlockSpec((tn,), lambda i, j: (j,)),       # col sq-norms
+            pl.BlockSpec((tn, r), lambda i, j: (j, 0)),   # B block
+            pl.BlockSpec((1,), lambda i, j: (0,)),        # s2
+        ],
+        out_specs=pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), xs.dtype),
+        interpret=True,
+    )(xs, sq, xs, sq, b, s2_arr)
+    return out + noise * b
+
+
+def vmem_bytes_estimate(tm: int, tn: int, d: int, r: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md section Perf).
+
+    Counts the row block, column block, B block, distance tile, kernel tile
+    and output accumulator (double-buffered inputs x2).
+    """
+    inputs = (tm * d + tn * d + tn * r + tm + tn) * dtype_bytes * 2  # double buffer
+    scratch = (tm * tn) * dtype_bytes * 2  # d2 + k_tile
+    accum = tm * r * dtype_bytes
+    return inputs + scratch + accum
+
+
+def mxu_utilization_estimate(tm: int, tn: int, d: int, r: int) -> float:
+    """Fraction of the tile's FLOPs that are MXU matmuls (vs VPU pointwise)."""
+    mxu = 2 * tm * tn * d + 2 * tm * tn * r
+    vpu = 8 * tm * tn  # exp / mul / add chain per element (approx)
+    return mxu / (mxu + vpu)

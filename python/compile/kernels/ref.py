@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the Pallas kernel MVM (the L1 correctness signal).
+
+Materializes the kernel matrix densely — O(n^2) memory, fine at test sizes —
+and multiplies. ``kernel_mvm`` must match this to float32 tolerance for all
+kernel families, shapes and tile sizes.
+"""
+
+import jax.numpy as jnp
+
+from . import kernel_mvm as km
+
+
+def dense_kernel(xs, s2, noise, kind: int = km.RBF):
+    """Dense ``K = s2 * rho(dist) + noise*I`` from scaled data ``xs``."""
+    sq = jnp.sum(xs * xs, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * xs @ xs.T
+    d2 = jnp.maximum(d2, 0.0)
+    k = s2 * km._rho(kind, d2)
+    return k + noise * jnp.eye(xs.shape[0], dtype=xs.dtype)
+
+
+def kernel_mvm_ref(xs, b, s2, noise, kind: int = km.RBF):
+    """Reference ``(K + noise I) @ b``."""
+    return dense_kernel(xs, s2, noise, kind) @ b

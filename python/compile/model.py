@@ -1,0 +1,133 @@
+"""Layer 2: the msMINRES-CIQ pipeline as a traced JAX program.
+
+The recurrence mirrors ``rust/src/krylov/msminres.rs`` exactly, but is
+vectorized over the Q shifts (leading axis) and runs a *fixed* number of
+iterations J so the whole computation lowers to a single static HLO module:
+
+  inputs : xs (n,d) scaled data, b (n,), shifts (Q,), weights (Q,),
+           s2 (scalar), noise (scalar)
+  output : concat([K^{1/2} b, K^{-1/2} b, max_residual])  -- shape (2n+1,)
+
+Quadrature weights/shifts are *runtime inputs* (computed by the Rust
+coordinator from its own Lanczos + elliptic-function code), so one artifact
+serves any spectrum. The MVM inside the loop is the Layer-1 Pallas kernel.
+
+Python only runs at build time: ``aot.py`` lowers these functions to HLO
+text which ``rust/src/runtime`` loads and executes via PJRT.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kernel_mvm as km
+
+
+def _msminres_step(mvm, carry, _):
+    """One shared-Lanczos + per-shift-QR step (vectorized over shifts)."""
+    (v, v_prev, beta_k, c1, s1, c2, s2g, phi, d_prev, d_prev2, x, shifts) = carry
+    w = mvm(v) - beta_k * v_prev
+    alpha = jnp.dot(v, w)
+    w = w - alpha * v
+    beta_next = jnp.linalg.norm(w)
+    safe_beta = jnp.maximum(beta_next, 1e-30)
+
+    eps = s2g * beta_k                      # (Q,)
+    delta_bar = c2 * beta_k                 # (Q,)
+    a = alpha + shifts                      # (Q,)
+    delta = c1 * delta_bar + s1 * a
+    gamma_bar = -s1 * delta_bar + c1 * a
+    gamma = jnp.sqrt(gamma_bar**2 + beta_next**2)
+    gamma = jnp.maximum(gamma, 1e-30)
+    c = gamma_bar / gamma
+    s = beta_next / gamma
+    tau = c * phi
+    phi_new = -s * phi
+
+    d_new = (v[None, :] - delta[:, None] * d_prev - eps[:, None] * d_prev2) / gamma[:, None]
+    x_new = x + tau[:, None] * d_new
+
+    carry = (
+        w / safe_beta,      # v_{k+1}
+        v,                  # v_k becomes previous
+        beta_next,
+        c, s, c1, s1,       # rotate Givens history
+        phi_new,
+        d_new, d_prev,
+        x_new,
+        shifts,
+    )
+    return carry, None
+
+
+@partial(
+    jax.jit,
+    static_argnames=("iters", "kind", "use_pallas", "tm", "tn"),
+)
+def ciq_sqrt(
+    xs,
+    b,
+    shifts,
+    weights,
+    s2,
+    noise,
+    *,
+    iters: int = 64,
+    kind: int = km.RBF,
+    use_pallas: bool = True,
+    tm: int = 64,
+    tn: int = 64,
+):
+    """msMINRES-CIQ: returns ``concat([K^{1/2}b, K^{-1/2}b, max_res])``."""
+    n = xs.shape[0]
+    q = shifts.shape[0]
+    dtype = xs.dtype
+
+    if use_pallas:
+        def mvm(v):
+            return km.kernel_mvm(xs, v[:, None], s2, noise, kind=kind, tm=tm, tn=tn)[:, 0]
+    else:
+        from .kernels import ref
+
+        kmat = ref.dense_kernel(xs, s2, noise, kind)
+
+        def mvm(v):
+            return kmat @ v
+
+    beta1 = jnp.linalg.norm(b)
+    safe_beta1 = jnp.maximum(beta1, 1e-30)
+    v0 = b / safe_beta1
+
+    carry = (
+        v0,
+        jnp.zeros((n,), dtype),
+        jnp.zeros((), dtype),                 # beta_k
+        jnp.ones((q,), dtype),                # c1
+        jnp.zeros((q,), dtype),               # s1
+        jnp.ones((q,), dtype),                # c2
+        jnp.zeros((q,), dtype),               # s2
+        jnp.full((q,), 1.0, dtype) * beta1,   # phi
+        jnp.zeros((q, n), dtype),             # d_prev
+        jnp.zeros((q, n), dtype),             # d_prev2
+        jnp.zeros((q, n), dtype),             # x
+        shifts.astype(dtype),
+    )
+    carry, _ = jax.lax.scan(partial(_msminres_step, mvm), carry, None, length=iters)
+    phi = carry[7]
+    x = carry[10]
+
+    inv_sqrt = weights.astype(dtype) @ x          # (n,)
+    sqrt = mvm(inv_sqrt)                          # K^{1/2} b = K K^{-1/2} b
+    max_res = jnp.max(jnp.abs(phi)) / safe_beta1
+    return jnp.concatenate([sqrt, inv_sqrt, max_res[None]])
+
+
+@partial(jax.jit, static_argnames=("kind", "use_pallas", "tm", "tn"))
+def batched_mvm(xs, b, s2, noise, *, kind: int = km.RBF, use_pallas: bool = True, tm: int = 64, tn: int = 64):
+    """Standalone batched kernel MVM artifact: ``(K + noise I) B``."""
+    if use_pallas:
+        return km.kernel_mvm(xs, b, s2, noise, kind=kind, tm=tm, tn=tn)
+    from .kernels import ref
+
+    return ref.kernel_mvm_ref(xs, b, s2, noise, kind)

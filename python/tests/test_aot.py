@@ -1,0 +1,43 @@
+"""AOT lowering tests: the HLO-text interchange contract with the Rust side.
+
+The Rust runtime parses artifacts with `HloModuleProto::from_text_file`, so
+the emitted text must be genuine HLO module text (not StableHLO/MLIR), with
+the agreed parameter arity and a single tuple result.
+"""
+
+import jax.numpy as jnp
+
+from compile import aot
+
+
+def test_kernel_mvm_lowering_emits_hlo_text():
+    lowered = aot.lower_kernel_mvm(n=64, d=2, r=4, kind=0, tm=32, tn=32)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), "must be HLO text, not MLIR"
+    assert "ENTRY" in text
+    # 4 parameters: xs, b, s2, noise
+    for i in range(4):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+    assert "parameter(4)" not in text
+    # output shape (n, r) appears as the root tuple element
+    assert "f32[64,4]" in text
+
+
+def test_ciq_lowering_has_fixed_iteration_structure():
+    lowered = aot.lower_ciq_sqrt(n=64, d=2, q=4, j=8, kind=0, tm=32, tn=32)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # 6 parameters: xs, b, shifts, weights, s2, noise
+    for i in range(6):
+        assert f"parameter({i})" in text
+    # output: concat([sqrt, invsqrt, residual]) of length 2n+1
+    assert "f32[129]" in text, "expected 2n+1 = 129 output"
+    # the fixed-J loop lowers to a while op over the scan
+    assert "while" in text, "msMINRES scan should lower to an HLO while loop"
+
+
+def test_artifact_roundtrips_through_fresh_lowering():
+    # same inputs => identical HLO text (determinism of the AOT pipeline)
+    t1 = aot.to_hlo_text(aot.lower_kernel_mvm(32, 2, 2, 0, 16, 16))
+    t2 = aot.to_hlo_text(aot.lower_kernel_mvm(32, 2, 2, 0, 16, 16))
+    assert t1 == t2

@@ -1,0 +1,85 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, tile sizes, kernel families and dtypes; explicit
+tests pin down the known values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kernel_mvm as km
+from compile.kernels import ref
+
+KINDS = [km.RBF, km.MATERN12, km.MATERN32, km.MATERN52]
+
+
+def _data(n, d, r, seed):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(n, d)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, r)), dtype=jnp.float32)
+    return xs, b
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_matches_ref_all_kernels(kind):
+    xs, b = _data(128, 3, 4, seed=kind)
+    out = km.kernel_mvm(xs, b, 1.3, 0.05, kind=kind, tm=32, tn=32)
+    expect = ref.kernel_mvm_ref(xs, b, 1.3, 0.05, kind)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([8, 16, 32]),
+    d=st.integers(min_value=1, max_value=5),
+    r=st.integers(min_value=1, max_value=6),
+    kind=st.sampled_from(KINDS),
+    s2=st.floats(min_value=0.1, max_value=5.0),
+    noise=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_hypothesis_shape_sweep(n_tiles, tile, d, r, kind, s2, noise):
+    n = n_tiles * tile
+    xs, b = _data(n, d, r, seed=n * 7 + d * 3 + r)
+    out = km.kernel_mvm(xs, b, s2, noise, kind=kind, tm=tile, tn=tile)
+    expect = ref.kernel_mvm_ref(xs, b, jnp.float32(s2), jnp.float32(noise), kind)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=3e-3, atol=3e-3)
+
+
+def test_tile_size_invariance():
+    xs, b = _data(96, 2, 3, seed=11)
+    outs = [
+        np.asarray(km.kernel_mvm(xs, b, 1.0, 0.1, kind=km.RBF, tm=tm, tn=tn))
+        for (tm, tn) in [(8, 8), (16, 32), (96, 96), (32, 8)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_identity_limit():
+    # At huge distance (tiny lengthscale scaled-out), K -> s2*I on diagonal
+    n = 32
+    xs = jnp.asarray(np.arange(n, dtype=np.float32)[:, None] * 100.0)
+    b = jnp.eye(n, dtype=jnp.float32)[:, :4]
+    out = km.kernel_mvm(xs, b, 2.0, 0.5, kind=km.RBF, tm=16, tn=16)
+    expect = 2.5 * b  # (s2 + noise) * I @ b
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_constant_vector_rowsums():
+    xs, _ = _data(64, 2, 1, seed=3)
+    ones = jnp.ones((64, 1), dtype=jnp.float32)
+    out = km.kernel_mvm(xs, ones, 1.0, 0.0, kind=km.RBF, tm=32, tn=32)
+    k = ref.dense_kernel(xs, 1.0, 0.0, km.RBF)
+    np.testing.assert_allclose(np.asarray(out)[:, 0], np.asarray(k.sum(axis=1)), rtol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    # default tiles must fit comfortably in 16 MB VMEM
+    assert km.vmem_bytes_estimate(64, 64, 4, 8) < 16 * 2**20
+    assert km.vmem_bytes_estimate(256, 256, 8, 16) < 16 * 2**20
+    # MXU share should dominate for matmul-heavy tiles
+    assert km.mxu_utilization_estimate(128, 128, 8, 8) > 0.6

@@ -1,0 +1,92 @@
+"""L2 correctness: the jax msMINRES-CIQ pipeline vs dense linear algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import kernel_mvm as km
+from compile.kernels import ref
+
+
+def _quadrature(q, lam_min, lam_max):
+    """Hale et al. weights/shifts via scipy (mirror of rust/src/quadrature)."""
+    from scipy.special import ellipj, ellipk
+
+    k2 = lam_min / lam_max
+    kp2 = 1.0 - k2
+    big_kp = ellipk(kp2)
+    u = (np.arange(1, q + 1) - 0.5) / q
+    sn, cn, dn, _ = ellipj(u * big_kp, kp2)
+    shifts = lam_min * (sn / cn) ** 2
+    weights = 2.0 * np.sqrt(lam_min) * big_kp * dn / (np.pi * q * cn**2)
+    return shifts.astype(np.float32), weights.astype(np.float32)
+
+
+def _setup(n=64, d=2, seed=0, noise=0.5):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(n, d)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), dtype=jnp.float32)
+    kmat = np.asarray(ref.dense_kernel(xs, 1.0, noise, km.RBF), dtype=np.float64)
+    evals = np.linalg.eigvalsh(kmat)
+    shifts, weights = _quadrature(8, float(evals[0]) * 0.9, float(evals[-1]) * 1.1)
+    return xs, b, kmat, shifts, weights
+
+
+def _exact_sqrt_mvm(kmat, b, power):
+    evals, evecs = np.linalg.eigh(kmat)
+    return evecs @ (np.maximum(evals, 1e-12) ** power * (evecs.T @ np.asarray(b, np.float64)))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_ciq_sqrt_matches_eigh(use_pallas):
+    xs, b, kmat, shifts, weights = _setup()
+    out = model.ciq_sqrt(
+        xs, b, jnp.asarray(shifts), jnp.asarray(weights), 1.0, 0.5,
+        iters=80, kind=km.RBF, use_pallas=use_pallas, tm=32, tn=32,
+    )
+    n = xs.shape[0]
+    sqrt, inv_sqrt, res = np.asarray(out[:n]), np.asarray(out[n : 2 * n]), float(out[-1])
+    exact_sqrt = _exact_sqrt_mvm(kmat, b, 0.5)
+    exact_inv = _exact_sqrt_mvm(kmat, b, -0.5)
+    rel_s = np.linalg.norm(sqrt - exact_sqrt) / np.linalg.norm(exact_sqrt)
+    rel_i = np.linalg.norm(inv_sqrt - exact_inv) / np.linalg.norm(exact_inv)
+    assert rel_s < 5e-3, f"sqrt rel err {rel_s}"
+    assert rel_i < 5e-3, f"invsqrt rel err {rel_i}"
+    assert res < 1e-3, f"residual {res}"
+
+
+def test_residual_decreases_with_iters():
+    xs, b, _, shifts, weights = _setup(seed=1)
+    res = []
+    for j in [4, 16, 64]:
+        out = model.ciq_sqrt(
+            xs, b, jnp.asarray(shifts), jnp.asarray(weights), 1.0, 0.5,
+            iters=j, kind=km.RBF, use_pallas=False,
+        )
+        res.append(float(out[-1]))
+    assert res[2] < res[1] < res[0], f"residuals not decreasing: {res}"
+
+
+def test_sqrt_squares_to_mvm():
+    # K^{1/2}(K^{1/2} b) == K b
+    xs, b, kmat, shifts, weights = _setup(seed=2)
+    args = (jnp.asarray(shifts), jnp.asarray(weights), 1.0, 0.5)
+    n = xs.shape[0]
+    out1 = model.ciq_sqrt(xs, b, *args, iters=80, use_pallas=False)
+    half = out1[:n]
+    out2 = model.ciq_sqrt(xs, half, *args, iters=80, use_pallas=False)
+    full = np.asarray(out2[:n], dtype=np.float64)
+    exact = kmat @ np.asarray(b, np.float64)
+    rel = np.linalg.norm(full - exact) / np.linalg.norm(exact)
+    assert rel < 2e-2, f"K^1/2 K^1/2 b vs K b rel err {rel}"
+
+
+def test_batched_mvm_matches_ref():
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(rng.normal(size=(64, 3)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 8)), dtype=jnp.float32)
+    out = model.batched_mvm(xs, b, 1.2, 0.3, kind=km.MATERN52, use_pallas=True, tm=32, tn=32)
+    expect = ref.kernel_mvm_ref(xs, b, jnp.float32(1.2), jnp.float32(0.3), km.MATERN52)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,53 @@
+//! Shared helpers for the self-timed bench harnesses (criterion is not
+//! available offline; each bench prints the paper's rows as TSV plus a
+//! PASS/FAIL shape check and exits non-zero on FAIL).
+
+use ciq::baselines::rsvd::orthonormalize;
+use ciq::linalg::Matrix;
+use ciq::rng::Pcg64;
+
+/// Random SPD matrix with the prescribed spectrum (orthogonal conjugation).
+pub fn spd_with_spectrum(evals: &[f64], rng: &mut Pcg64) -> Matrix {
+    let n = evals.len();
+    let a = Matrix::randn(n, n, rng);
+    let q = orthonormalize(&a);
+    let mut scaled = q.clone();
+    for j in 0..n {
+        for i in 0..n {
+            scaled[(i, j)] *= evals[j];
+        }
+    }
+    scaled.matmul(&q.transpose())
+}
+
+/// The paper's Fig. 1 / S1 spectrum families.
+pub fn spectrum(name: &str, n: usize) -> Vec<f64> {
+    match name {
+        "invsqrt" => (1..=n).map(|t| 1.0 / (t as f64).sqrt()).collect(),
+        "inv" => (1..=n).map(|t| 1.0 / t as f64).collect(),
+        "invsq" => (1..=n).map(|t| 1.0 / (t as f64).powi(2)).collect(),
+        "exp" => (1..=n).map(|t| (-(t as f64) / (n as f64 / 8.0)).exp()).collect(),
+        other => panic!("unknown spectrum {other}"),
+    }
+}
+
+/// Report a PASS/FAIL shape check; exit non-zero on failure.
+pub fn shape_check(label: &str, ok: bool) {
+    if ok {
+        println!("SHAPE CHECK [{label}]: PASS");
+    } else {
+        println!("SHAPE CHECK [{label}]: FAIL");
+        std::process::exit(1);
+    }
+}
+
+/// Median wall-clock seconds of `reps` runs of `f`.
+pub fn bench_median(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    ciq::util::median(&times)
+}

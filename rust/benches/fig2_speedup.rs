@@ -1,0 +1,67 @@
+//! Fig. 2 (middle/right): wall-clock speedup of msMINRES-CIQ over Cholesky
+//! for forward+backward `K^{-1/2}b`, as a function of N and the number of
+//! right-hand sides.
+//!
+//! Paper shape: CIQ's advantage grows with N (up to 15× on their GPU) and
+//! shrinks as RHS count amortizes the Cholesky factorization; the crossover
+//! moves right with more RHS but CIQ still wins at large N.
+//!
+//! Run: `cargo bench --bench fig2_speedup [-- --sizes 500,1000,2000 --rhs 1,16,64]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::linalg::{Cholesky, Matrix};
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::rng::Pcg64;
+use ciq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let sizes = args.get_list("sizes", &[500usize, 1000, 2000]);
+    let rhs_counts = args.get_list("rhs", &[1usize, 16, 64]);
+    let mut rng = Pcg64::seeded(args.get_or("seed", 5u64));
+
+    println!("# Fig. 2 (mid/right): CIQ vs Cholesky, forward+backward K^(-1/2)b");
+    println!("N\trhs\tchol_s\tciq_s\tspeedup");
+    let mut speedups: Vec<(usize, usize, f64)> = Vec::new();
+    for &n in &sizes {
+        // Kin40k-like synthetic data (8-D standardized features)
+        let x = Matrix::randn(n, 8, &mut rng);
+        let op = KernelOp::new(&x, KernelType::Matern52, 1.5, 1.0, 1e-2);
+        for &r in &rhs_counts {
+            let b = Matrix::randn(n, r, &mut rng);
+            // --- Cholesky: factor + whiten each column + backward-ish solve
+            let t_chol = common::bench_median(3, || {
+                let k = op.to_dense();
+                let chol = Cholesky::with_jitter(&k, 1e-8).expect("chol");
+                for j in 0..r {
+                    let col = b.col(j);
+                    let w = chol.whiten_mvm(&col);
+                    let _ = chol.solve_lt(&w); // backward-pass triangular solve
+                }
+            });
+            // --- CIQ: blocked forward + backward (second msMINRES call)
+            let solver = Ciq::new(CiqOptions { q_points: 8, tol: 1e-4, max_iters: 300, ..Default::default() });
+            let t_ciq = common::bench_median(3, || {
+                let (_fwd, _iters) = solver.invsqrt_mvm_block(&op, &b).expect("ciq fwd");
+                let (_bwd, _) = solver.invsqrt_mvm_block(&op, &b).expect("ciq bwd");
+            });
+            let speedup = t_chol / t_ciq;
+            println!("{n}\t{r}\t{t_chol:.3}\t{t_ciq:.3}\t{speedup:.2}");
+            speedups.push((n, r, speedup));
+        }
+    }
+    // shape checks: speedup grows with N at fixed RHS; shrinks with RHS at fixed N
+    let n_lo = sizes[0];
+    let n_hi = *sizes.last().unwrap();
+    let r0 = rhs_counts[0];
+    let s_lo = speedups.iter().find(|s| s.0 == n_lo && s.1 == r0).unwrap().2;
+    let s_hi = speedups.iter().find(|s| s.0 == n_hi && s.1 == r0).unwrap().2;
+    common::shape_check("speedup grows with N (Fig. 2 mid)", s_hi > s_lo);
+    let r_hi = *rhs_counts.last().unwrap();
+    let s_rlo = speedups.iter().find(|s| s.0 == n_hi && s.1 == r0).unwrap().2;
+    let s_rhi = speedups.iter().find(|s| s.0 == n_hi && s.1 == r_hi).unwrap().2;
+    common::shape_check("many RHS amortize Cholesky (Fig. 2 right)", s_rhi < s_rlo * 1.5);
+}

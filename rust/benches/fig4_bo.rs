@@ -1,0 +1,76 @@
+//! Fig. 4: Thompson-sampling BO regret vs candidate-set size and sampler, on
+//! Hartmann-6 and the 12-D lander controller problem.
+//!
+//! Paper shape: larger candidate sets give lower final regret; CIQ with a
+//! large T beats RFF at the same T; Cholesky is restricted to small T.
+//!
+//! Run: `cargo bench --bench fig4_bo [-- --reps 3 --evals 40 --lander]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ciq::bo::lander::Lander;
+use ciq::bo::testfns::Hartmann6;
+use ciq::bo::{run_bo, BoConfig, Problem, Sampler};
+use ciq::ciq::CiqOptions;
+use ciq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let reps = args.get_or("reps", 2u64);
+    let evals = args.get_or("evals", 25usize);
+    let t_small = args.get_or("t-small", 500usize);
+    let t_large = args.get_or("t-large", 1500usize);
+
+    println!("# Fig. 4: TS-BO mean final objective over {reps} replications, {evals} evals");
+    println!("problem\tconfig\tT\tmean_best\tsem");
+
+    let hart = Hartmann6;
+    let lander = Lander { episodes: 10 };
+    let mut problems: Vec<&dyn Problem> = vec![&hart];
+    if args.has("lander") {
+        problems.push(&lander);
+    }
+
+    let mut summary: Vec<(String, String, f64)> = Vec::new();
+    for problem in problems {
+        let configs: Vec<(String, Sampler, usize)> = vec![
+            (format!("Cholesky-{t_small}"), Sampler::Cholesky, t_small),
+            (format!("CIQ-{t_small}"), Sampler::Ciq, t_small),
+            (format!("CIQ-{t_large}"), Sampler::Ciq, t_large),
+            (format!("RFF-{t_large}"), Sampler::Rff, t_large),
+        ];
+        for (label, sampler, t) in configs {
+            let mut bests = Vec::new();
+            for rep in 0..reps {
+                let cfg = BoConfig {
+                    candidates: t,
+                    evaluations: evals,
+                    init: 10,
+                    batch: 5,
+                    sampler,
+                    fit_steps: 10,
+                    ciq: CiqOptions { tol: 1e-3, max_iters: 80, ..Default::default() },
+                    ..Default::default()
+                };
+                bests.push(run_bo(problem, &cfg, 7000 + rep).expect("bo").best());
+            }
+            let mean = ciq::util::mean(&bests);
+            let sem = ciq::util::std_dev(&bests) / (reps as f64).sqrt();
+            println!("{}\t{label}\t{t}\t{mean:.4}\t{sem:.4}", problem.name());
+            summary.push((problem.name().to_string(), label, mean));
+        }
+    }
+
+    // shape: CIQ-large <= CIQ-small + noise margin, on Hartmann
+    let get = |label: &str| summary.iter().find(|s| s.0 == "hartmann6" && s.1.starts_with(label)).unwrap().2;
+    let margin = 0.25;
+    common::shape_check(
+        "larger candidate sets help (Fig. 4)",
+        get(&format!("CIQ-{t_large}")) <= get(&format!("CIQ-{t_small}")) + margin,
+    );
+    common::shape_check(
+        "CIQ-small ≈ Cholesky-small (same model, rotated sample)",
+        (get(&format!("CIQ-{t_small}")) - get(&format!("Cholesky-{t_small}"))).abs() < 0.6,
+    );
+}

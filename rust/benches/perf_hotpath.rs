@@ -1,0 +1,72 @@
+//! §Perf microbenchmarks: the three L3 hot paths the optimization pass
+//! iterates on — (1) the partitioned kernel MVM (tile size, threading),
+//! (2) the msMINRES per-iteration recurrence overhead, (3) RHS batching in
+//! the coordinator (block-msMINRES vs per-vector solves).
+//!
+//! Run: `cargo bench --bench perf_hotpath [-- --n 3000]`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::krylov::msminres::{msminres, MsMinresOptions};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::rng::Pcg64;
+use ciq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let n = args.get_or("n", 1500usize);
+    let mut rng = Pcg64::seeded(args.get_or("seed", 6u64));
+    let x = Matrix::randn(n, 4, &mut rng);
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    println!("# perf 1: kernel MVM (N={n}, d=4) — tile-size sweep");
+    println!("tile\tms\tgflops");
+    let flops = 2.0 * (n as f64) * (n as f64) * (4.0 + 1.0);
+    let mut best_ms = f64::INFINITY;
+    for tile in [32usize, 64, 128, 256, 512] {
+        let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-1).with_tile(tile);
+        let t = common::bench_median(5, || {
+            let _ = op.matvec(&v);
+        });
+        println!("{tile}\t{:.2}\t{:.2}", t * 1e3, flops / t / 1e9);
+        best_ms = best_ms.min(t * 1e3);
+    }
+
+    println!("# perf 2: msMINRES recurrence overhead (Q sweep at fixed J)");
+    println!("q\tms_total\tms_per_iter");
+    let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-1);
+    let j = 20;
+    for q in [1usize, 4, 8, 16] {
+        let shifts: Vec<f64> = (0..q).map(|i| 0.1 * (i + 1) as f64).collect();
+        let t = common::bench_median(3, || {
+            let _ = msminres(
+                &op,
+                &v,
+                &shifts,
+                &MsMinresOptions { max_iters: j, tol: 1e-30, weights: None },
+            );
+        });
+        println!("{q}\t{:.1}\t{:.2}", t * 1e3, t * 1e3 / j as f64);
+    }
+
+    println!("# perf 3: RHS batching (block msMINRES vs per-vector) at r=4");
+    let r = 4;
+    let b = Matrix::randn(n, r, &mut rng);
+    let solver = Ciq::new(CiqOptions { q_points: 8, tol: 1e-4, max_iters: 200, ..Default::default() });
+    let t_block = common::bench_median(3, || {
+        let _ = solver.invsqrt_mvm_block(&op, &b).expect("block");
+    });
+    let t_loop = common::bench_median(3, || {
+        for jcol in 0..r {
+            let _ = solver.invsqrt_mvm(&op, &b.col(jcol)).expect("solo");
+        }
+    });
+    println!("block\t{:.1} ms", t_block * 1e3);
+    println!("loop\t{:.1} ms", t_loop * 1e3);
+    println!("batching_speedup\t{:.2}x", t_loop / t_block);
+
+    common::shape_check("MVM under 1 GF/s would signal a regression", flops / (best_ms / 1e3) / 1e9 > 0.5);
+}

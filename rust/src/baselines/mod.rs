@@ -1,0 +1,9 @@
+//! Baselines the paper compares against: Cholesky sampling/whitening
+//! (in [`crate::linalg::chol`]), Random Fourier Features ([`rff`]) and
+//! randomized SVD ([`rsvd`]).
+
+pub mod rff;
+pub mod rsvd;
+
+pub use rff::RandomFourierFeatures;
+pub use rsvd::RandomizedSvdSqrt;

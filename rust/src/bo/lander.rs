@@ -1,0 +1,210 @@
+//! From-scratch 2-D lunar-lander controller-tuning problem (the paper's
+//! Fig. 4 right uses OpenAI gym's `LunarLander-v2`; we build the physics
+//! ourselves — DESIGN.md §Substitutions).
+//!
+//! Dynamics: a point-mass lander with orientation falls under gravity over
+//! flat terrain; actions each step are {nothing, left thruster, right
+//! thruster, main engine}. The 12-parameter heuristic controller family
+//! follows Eriksson et al. [21]: PD-style gains mapping state to target
+//! angle/hover plus firing thresholds. Reward = landing bonus − crash
+//! penalty − fuel − distance, averaged over a fixed set of random initial
+//! conditions. The objective is the *negated* mean reward (minimization).
+
+use super::Problem;
+use crate::rng::Pcg64;
+
+/// Lander state.
+#[derive(Clone, Copy, Debug)]
+struct State {
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    angle: f64,
+    vangle: f64,
+    fuel: f64,
+}
+
+const DT: f64 = 0.05;
+const GRAVITY: f64 = -1.0;
+const MAIN_THRUST: f64 = 2.2;
+const SIDE_TORQUE: f64 = 1.2;
+const SIDE_THRUST: f64 = 0.18;
+const MAX_STEPS: usize = 400;
+
+/// One simulated episode under a 12-parameter controller.
+/// Returns the episode reward (higher is better).
+fn episode(params: &[f64; 12], seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    let mut s = State {
+        x: rng.uniform_in(-0.6, 0.6),
+        y: rng.uniform_in(1.2, 1.6),
+        vx: rng.uniform_in(-0.3, 0.3),
+        vy: rng.uniform_in(-0.4, 0.0),
+        angle: rng.uniform_in(-0.2, 0.2),
+        vangle: rng.uniform_in(-0.1, 0.1),
+        fuel: 0.0,
+    };
+    let p = params;
+    for _ in 0..MAX_STEPS {
+        // --- controller (12 parameters, Eriksson et al. heuristic family) ---
+        let mut angle_targ = s.x * p[0] + s.vx * p[1];
+        angle_targ = angle_targ.clamp(-p[2], p[2]);
+        let hover_targ = p[3] * s.x.abs() + p[4];
+        let angle_todo = (angle_targ - s.angle) * p[5] - s.vangle * p[6];
+        let hover_todo = (hover_targ - s.y) * p[7] - s.vy * p[8];
+
+        // action selection
+        let mut main_on = false;
+        let mut side: f64 = 0.0;
+        if hover_todo > angle_todo.abs() && hover_todo > p[9] {
+            main_on = true;
+        } else if angle_todo < -p[10] {
+            side = -1.0;
+        } else if angle_todo > p[11] {
+            side = 1.0;
+        }
+
+        // --- physics ---
+        let mut ax = 0.0;
+        let mut ay = GRAVITY;
+        if main_on {
+            ax += MAIN_THRUST * (-s.angle.sin());
+            ay += MAIN_THRUST * s.angle.cos();
+            s.fuel += 0.3 * DT;
+        }
+        if side != 0.0 {
+            s.vangle += side * SIDE_TORQUE * DT;
+            ax += side * SIDE_THRUST * s.angle.cos();
+            s.fuel += 0.03 * DT;
+        }
+        s.vx += ax * DT;
+        s.vy += ay * DT;
+        s.x += s.vx * DT;
+        s.y += s.vy * DT;
+        s.angle += s.vangle * DT;
+
+        // touchdown / crash
+        if s.y <= 0.0 {
+            let gentle = s.vy.abs() < 0.5 && s.vx.abs() < 0.5 && s.angle.abs() < 0.35;
+            let on_pad = s.x.abs() < 0.3;
+            let mut r = -s.fuel - s.x.abs();
+            if gentle && on_pad {
+                r += 100.0;
+            } else if gentle {
+                r += 30.0;
+            } else {
+                r -= 100.0; // crash
+            }
+            return r;
+        }
+        // drifted away
+        if s.x.abs() > 2.5 || s.y > 3.0 {
+            return -100.0 - s.fuel;
+        }
+    }
+    // ran out of time hovering
+    -50.0 - s.fuel
+}
+
+/// The 12-D controller-tuning problem: parameters live in `[0,1]^12` and are
+/// affinely mapped to physical gain ranges; objective = −(mean reward over
+/// `episodes` fixed seeds).
+pub struct Lander {
+    /// number of fixed evaluation episodes (paper uses 50)
+    pub episodes: usize,
+}
+
+impl Default for Lander {
+    fn default() -> Self {
+        Lander { episodes: 20 }
+    }
+}
+
+/// gain ranges for the 12 parameters
+const RANGES: [(f64, f64); 12] = [
+    (0.0, 2.0),  // x -> target angle
+    (0.0, 2.0),  // vx -> target angle
+    (0.1, 1.0),  // angle clamp
+    (0.0, 1.0),  // |x| -> hover target
+    (0.0, 0.5),  // hover bias
+    (0.1, 8.0),  // angle P gain
+    (0.0, 4.0),  // angle D gain
+    (0.1, 8.0),  // hover P gain
+    (0.0, 8.0),  // hover D gain
+    (0.0, 1.0),  // main-engine threshold
+    (0.0, 0.6),  // left threshold
+    (0.0, 0.6),  // right threshold
+];
+
+impl Problem for Lander {
+    fn dim(&self) -> usize {
+        12
+    }
+
+    fn eval(&self, z: &[f64]) -> f64 {
+        let mut p = [0.0f64; 12];
+        for i in 0..12 {
+            let (lo, hi) = RANGES[i];
+            p[i] = lo + (hi - lo) * z[i].clamp(0.0, 1.0);
+        }
+        let mut total = 0.0;
+        for e in 0..self.episodes {
+            total += episode(&p, 1000 + e as u64);
+        }
+        -(total / self.episodes as f64)
+    }
+
+    fn name(&self) -> &str {
+        "lander12"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_objective() {
+        let l = Lander { episodes: 5 };
+        let z = [0.5; 12];
+        assert_eq!(l.eval(&z), l.eval(&z));
+    }
+
+    #[test]
+    fn objective_discriminates_controllers() {
+        let l = Lander { episodes: 10 };
+        // zero gains: free fall → crashes (bad)
+        let freefall = l.eval(&[0.0; 12]);
+        // a hand-tuned reasonable controller
+        let decent = l.eval(&[0.3, 0.5, 0.5, 0.3, 0.4, 0.6, 0.4, 0.6, 0.4, 0.05, 0.1, 0.1]);
+        assert!(
+            decent < freefall,
+            "tuned controller ({decent}) should beat free fall ({freefall})"
+        );
+    }
+
+    #[test]
+    fn a_good_controller_lands_sometimes() {
+        // search a small random sample for a controller that achieves
+        // positive average reward (objective < 0) — ensures the problem is
+        // solvable, not degenerate
+        let l = Lander { episodes: 10 };
+        let mut rng = Pcg64::seeded(9);
+        let mut best = f64::INFINITY;
+        for _ in 0..60 {
+            let z: Vec<f64> = (0..12).map(|_| rng.uniform()).collect();
+            best = best.min(l.eval(&z));
+        }
+        assert!(best < 60.0, "even random search should find non-crashing controllers, best={best}");
+    }
+
+    #[test]
+    fn episode_terminates_and_is_bounded() {
+        let p = [1.0f64; 12];
+        for seed in 0..5 {
+            let r = episode(&p, seed);
+            assert!((-300.0..=150.0).contains(&r), "reward {r} out of bounds");
+        }
+    }
+}

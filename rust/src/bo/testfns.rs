@@ -1,0 +1,127 @@
+//! Standard global-optimization test problems (scaled to `[0,1]^d`).
+
+use super::Problem;
+
+/// Hartmann-6: 6 local minima, global optimum −3.32237 (the paper's Fig. 4
+/// left / Fig. 2 posterior-covariance test case).
+pub struct Hartmann6;
+
+const H6_A: [[f64; 6]; 4] = [
+    [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+    [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+    [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+    [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+];
+const H6_C: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+const H6_P: [[f64; 6]; 4] = [
+    [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+    [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+    [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+    [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+];
+
+impl Problem for Hartmann6 {
+    fn dim(&self) -> usize {
+        6
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut outer = 0.0;
+        for i in 0..4 {
+            let mut inner = 0.0;
+            for j in 0..6 {
+                let d = x[j] - H6_P[i][j];
+                inner += H6_A[i][j] * d * d;
+            }
+            outer += H6_C[i] * (-inner).exp();
+        }
+        -outer
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(-3.32237)
+    }
+    fn name(&self) -> &str {
+        "hartmann6"
+    }
+}
+
+/// Branin (2-D), rescaled to `[0,1]²`; optimum ≈ 0.397887.
+pub struct Branin2;
+
+impl Problem for Branin2 {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, z: &[f64]) -> f64 {
+        let x = 15.0 * z[0] - 5.0;
+        let y = 15.0 * z[1];
+        let a = 1.0;
+        let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+        let c = 5.0 / std::f64::consts::PI;
+        let r = 6.0;
+        let s = 10.0;
+        let t = 1.0 / (8.0 * std::f64::consts::PI);
+        a * (y - b * x * x + c * x - r).powi(2) + s * (1.0 - t) * x.cos() + s
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.397887)
+    }
+    fn name(&self) -> &str {
+        "branin2"
+    }
+}
+
+/// Ackley in `d` dims on `[0,1]^d` (mapped to `[-5,5]^d`); optimum 0 at center.
+pub struct Ackley {
+    /// dimension
+    pub d: usize,
+}
+
+impl Problem for Ackley {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn eval(&self, z: &[f64]) -> f64 {
+        let x: Vec<f64> = z.iter().map(|v| 10.0 * v - 5.0).collect();
+        let n = self.d as f64;
+        let s1: f64 = x.iter().map(|v| v * v).sum::<f64>() / n;
+        let s2: f64 = x.iter().map(|v| (2.0 * std::f64::consts::PI * v).cos()).sum::<f64>() / n;
+        -20.0 * (-0.2 * s1.sqrt()).exp() - s2.exp() + 20.0 + std::f64::consts::E
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+    fn name(&self) -> &str {
+        "ackley"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hartmann_known_optimum() {
+        // global minimizer (Surjanovic & Bingham)
+        let xopt = [0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573];
+        let v = Hartmann6.eval(&xopt);
+        assert!((v - (-3.32237)).abs() < 1e-4, "hartmann at optimum = {v}");
+        // any other point is worse
+        assert!(Hartmann6.eval(&[0.5; 6]) > v);
+    }
+
+    #[test]
+    fn branin_known_optimum() {
+        // one of the three minimizers: (pi, 2.275) → scaled
+        let z = [(std::f64::consts::PI + 5.0) / 15.0, 2.275 / 15.0];
+        let v = Branin2.eval(&z);
+        assert!((v - 0.397887).abs() < 1e-4, "branin at optimum = {v}");
+    }
+
+    #[test]
+    fn ackley_optimum_at_center() {
+        let a = Ackley { d: 4 };
+        let v = a.eval(&[0.5; 4]);
+        assert!(v.abs() < 1e-9, "ackley at center = {v}");
+        assert!(a.eval(&[0.9; 4]) > 1.0);
+    }
+}

@@ -1,0 +1,379 @@
+//! msMINRES-CIQ (Alg. 1): `K^{1/2} b` and `K^{-1/2} b` through MVMs only.
+//!
+//! Pipeline: Lanczos estimates `(λ_min, λ_max)` (≈10 MVMs) → the Hale
+//! quadrature rule produces `Q` weights/shifts → msMINRES computes all `Q`
+//! shifted solves with `J` MVMs → the weighted combination gives
+//! `K^{-1/2} b ≈ Σ_q w_q (t_q I + K)^{-1} b`, and one extra MVM gives
+//! `K^{1/2} b = K · K^{-1/2} b`.
+//!
+//! Total cost `O((J + J_eig + 1) · ξ(K))` time and `O(QN)` memory
+//! (Property 1); backward pass via Eq. (3) costs one more msMINRES call
+//! ([`Ciq::backward`]).
+
+pub mod precond;
+
+use crate::krylov::msminres::{msminres, msminres_block, MsMinresOptions};
+use crate::krylov::{estimate_extreme_eigenvalues, EigenBounds};
+use crate::linalg::Matrix;
+use crate::operators::LinearOp;
+use crate::quadrature::{ciq_quadrature, QuadratureRule};
+use crate::rng::Pcg64;
+use crate::Result;
+
+/// Options for the CIQ solver.
+#[derive(Clone, Debug)]
+pub struct CiqOptions {
+    /// Number of quadrature points `Q` (paper: 8 suffices for 1e-4).
+    pub q_points: usize,
+    /// msMINRES iteration cap `J`.
+    pub max_iters: usize,
+    /// msMINRES relative-residual tolerance.
+    pub tol: f64,
+    /// Lanczos iterations for eigenvalue estimation.
+    pub lanczos_iters: usize,
+    /// Seed for the Lanczos probe vector.
+    pub seed: u64,
+    /// Use the weighted (CIQ-aware) stopping criterion instead of max-shift.
+    pub weighted_stop: bool,
+}
+
+impl Default for CiqOptions {
+    fn default() -> Self {
+        CiqOptions {
+            q_points: 8,
+            max_iters: 400,
+            tol: 1e-4,
+            lanczos_iters: 15,
+            seed: 0x51C2,
+            weighted_stop: false,
+        }
+    }
+}
+
+/// Result of a CIQ solve.
+#[derive(Clone, Debug)]
+pub struct CiqResult {
+    /// `≈ K^{±1/2} b`.
+    pub solution: Vec<f64>,
+    /// msMINRES iterations used (== MVM count of the solve phase).
+    pub iterations: usize,
+    /// Max relative residual across shifts at exit.
+    pub residual: f64,
+    /// Spectral bounds used for the quadrature rule.
+    pub bounds: EigenBounds,
+    /// Shifted solves `(t_q I + K)^{-1} b` (kept for the backward pass).
+    pub shifted_solves: Vec<Vec<f64>>,
+    /// The quadrature rule used.
+    pub rule: QuadratureRule,
+}
+
+/// Backward-pass payload: the vector–Jacobian product of Eq. (3) in factored
+/// form, `∂/∂K ≈ -(1/2) Σ_q w_q (l_q r_qᵀ + r_q l_qᵀ)`.
+pub struct CiqBackward {
+    /// Per-quadrature-point `(w_q, l_q, r_q)` with
+    /// `l_q = (t_qI+K)^{-1} v`, `r_q = (t_qI+K)^{-1} b`.
+    pub terms: Vec<(f64, Vec<f64>, Vec<f64>)>,
+}
+
+impl CiqBackward {
+    /// Materialize the dense gradient matrix (tests / small N only).
+    pub fn to_dense(&self, n: usize) -> Matrix {
+        let mut g = Matrix::zeros(n, n);
+        for (w, l, r) in &self.terms {
+            for i in 0..n {
+                for j in 0..n {
+                    g[(i, j)] += -0.5 * w * (l[i] * r[j] + r[i] * l[j]);
+                }
+            }
+        }
+        g
+    }
+
+    /// Contract with a symmetric direction `D`: `Σ_ij G_ij D_ij` — the
+    /// directional derivative of `vᵀ K^{-1/2} b` along `dK = D`.
+    pub fn contract(&self, d: &Matrix) -> f64 {
+        let mut acc = 0.0;
+        for (w, l, r) in &self.terms {
+            // <-(w/2)(l rᵀ + r lᵀ), D> = -w · lᵀ D r  (D symmetric)
+            let dr = d.matvec(r);
+            acc += -w * crate::util::dot(l, &dr);
+        }
+        acc
+    }
+}
+
+/// The msMINRES-CIQ solver.
+pub struct Ciq {
+    /// Options.
+    pub opts: CiqOptions,
+}
+
+impl Ciq {
+    /// Create a solver.
+    pub fn new(opts: CiqOptions) -> Ciq {
+        Ciq { opts }
+    }
+
+    /// Estimate spectral bounds of `op` with Lanczos.
+    pub fn bounds(&self, op: &dyn LinearOp) -> Result<EigenBounds> {
+        let mut rng = Pcg64::seeded(self.opts.seed);
+        estimate_extreme_eigenvalues(op, self.opts.lanczos_iters, &mut rng)
+    }
+
+    /// Build the quadrature rule for `op` (estimating bounds if not given).
+    pub fn rule(&self, op: &dyn LinearOp, bounds: Option<EigenBounds>) -> Result<(QuadratureRule, EigenBounds)> {
+        let b = match bounds {
+            Some(b) => b,
+            None => self.bounds(op)?,
+        };
+        let rule = ciq_quadrature(self.opts.q_points, b.lambda_min, b.lambda_max)?;
+        Ok((rule, b))
+    }
+
+    fn ms_opts(&self, rule: &QuadratureRule) -> MsMinresOptions {
+        MsMinresOptions {
+            max_iters: self.opts.max_iters,
+            tol: self.opts.tol,
+            weights: if self.opts.weighted_stop { Some(rule.weights.clone()) } else { None },
+        }
+    }
+
+    /// `K^{-1/2} b` (whitening).
+    pub fn invsqrt_mvm(&self, op: &dyn LinearOp, b: &[f64]) -> Result<CiqResult> {
+        self.invsqrt_with_bounds(op, b, None)
+    }
+
+    /// `K^{-1/2} b` with caller-supplied spectral bounds (skips Lanczos —
+    /// used when many solves share one operator).
+    pub fn invsqrt_with_bounds(
+        &self,
+        op: &dyn LinearOp,
+        b: &[f64],
+        bounds: Option<EigenBounds>,
+    ) -> Result<CiqResult> {
+        let (rule, bnds) = self.rule(op, bounds)?;
+        let ms = msminres(op, b, &rule.shifts, &self.ms_opts(&rule));
+        let n = op.size();
+        let mut sol = vec![0.0; n];
+        for (w, c) in rule.weights.iter().zip(&ms.solutions) {
+            crate::util::axpy(*w, c, &mut sol);
+        }
+        Ok(CiqResult {
+            solution: sol,
+            iterations: ms.iterations,
+            residual: ms.residuals.iter().cloned().fold(0.0, f64::max),
+            bounds: bnds,
+            shifted_solves: ms.solutions,
+            rule,
+        })
+    }
+
+    /// `K^{1/2} b` (sampling): `K · (Σ_q w_q (t_qI+K)^{-1} b)`.
+    pub fn sqrt_mvm(&self, op: &dyn LinearOp, b: &[f64]) -> Result<CiqResult> {
+        self.sqrt_with_bounds(op, b, None)
+    }
+
+    /// `K^{1/2} b` with caller-supplied bounds.
+    pub fn sqrt_with_bounds(
+        &self,
+        op: &dyn LinearOp,
+        b: &[f64],
+        bounds: Option<EigenBounds>,
+    ) -> Result<CiqResult> {
+        let mut res = self.invsqrt_with_bounds(op, b, bounds)?;
+        res.solution = op.matvec(&res.solution);
+        Ok(res)
+    }
+
+    /// Blocked whitening for `r` right-hand sides (columns of `b`): shares
+    /// every iteration's MVMs as one `matmat`. Returns `(solutions, per-column
+    /// iterations)`.
+    pub fn invsqrt_mvm_block(&self, op: &dyn LinearOp, b: &Matrix) -> Result<(Matrix, Vec<usize>)> {
+        let (rule, _) = self.rule(op, None)?;
+        let (sols, iters, _res) = msminres_block(op, b, &rule.shifts, &self.ms_opts(&rule));
+        let n = op.size();
+        let mut out = Matrix::zeros(n, b.cols());
+        for (w, c) in rule.weights.iter().zip(&sols) {
+            for i in 0..n {
+                for j in 0..b.cols() {
+                    out[(i, j)] += w * c[(i, j)];
+                }
+            }
+        }
+        Ok((out, iters))
+    }
+
+    /// Blocked sampling: `K^{1/2} B`.
+    pub fn sqrt_mvm_block(&self, op: &dyn LinearOp, b: &Matrix) -> Result<(Matrix, Vec<usize>)> {
+        let (inv, iters) = self.invsqrt_mvm_block(op, b)?;
+        Ok((op.matmat(&inv), iters))
+    }
+
+    /// Backward pass (Eq. 3): given the forward result for `K^{-1/2} b` and a
+    /// back-propagated gradient `v`, compute the vector–Jacobian product
+    /// `vᵀ (∂ K^{-1/2} b / ∂K)` in factored form. Costs one extra msMINRES
+    /// call (the `r_q` solves are reused from the forward pass).
+    pub fn backward(&self, op: &dyn LinearOp, forward: &CiqResult, v: &[f64]) -> Result<CiqBackward> {
+        let rule = &forward.rule;
+        let ms = msminres(op, v, &rule.shifts, &self.ms_opts(rule));
+        let terms = rule
+            .weights
+            .iter()
+            .zip(ms.solutions.into_iter().zip(&forward.shifted_solves))
+            .map(|(&w, (l, r))| (w, l, r.clone()))
+            .collect();
+        Ok(CiqBackward { terms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::{spd_inv_sqrt, spd_sqrt};
+    use crate::operators::DenseOp;
+    use crate::util::rel_err;
+
+    fn random_spd(n: usize, seed: u64, jitter: f64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += jitter;
+        }
+        k
+    }
+
+    #[test]
+    fn sqrt_matches_eigendecomposition() {
+        let n = 60;
+        let k = random_spd(n, 1, n as f64 * 0.5);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, q_points: 10, ..Default::default() });
+        let res = solver.sqrt_mvm(&op, &b).unwrap();
+        let exact = spd_sqrt(&k).unwrap().matvec(&b);
+        let err = rel_err(&res.solution, &exact);
+        assert!(err < 1e-5, "err={err}");
+    }
+
+    #[test]
+    fn invsqrt_matches_eigendecomposition() {
+        let n = 50;
+        let k = random_spd(n, 3, n as f64 * 0.5);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(4);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, q_points: 10, ..Default::default() });
+        let res = solver.invsqrt_mvm(&op, &b).unwrap();
+        let exact = spd_inv_sqrt(&k).unwrap().matvec(&b);
+        let err = rel_err(&res.solution, &exact);
+        assert!(err < 1e-5, "err={err}");
+    }
+
+    #[test]
+    fn sqrt_then_sqrt_is_mvm() {
+        // K^{1/2}(K^{1/2} b) ≈ K b
+        let n = 40;
+        let k = random_spd(n, 5, n as f64);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(6);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-9, q_points: 12, ..Default::default() });
+        let half = solver.sqrt_mvm(&op, &b).unwrap().solution;
+        let full = solver.sqrt_mvm(&op, &half).unwrap().solution;
+        let exact = k.matvec(&b);
+        assert!(rel_err(&full, &exact) < 1e-4);
+    }
+
+    #[test]
+    fn block_matches_single() {
+        let n = 30;
+        let k = random_spd(n, 7, n as f64 * 0.4);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(8);
+        let b = Matrix::randn(n, 4, &mut rng);
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+        let (block, _) = solver.invsqrt_mvm_block(&op, &b).unwrap();
+        for j in 0..4 {
+            let single = solver.invsqrt_mvm(&op, &b.col(j)).unwrap();
+            let err = rel_err(&block.col(j), &single.solution);
+            assert!(err < 1e-6, "col {j}: {err}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let n = 12;
+        let k = random_spd(n, 9, n as f64 * 0.6);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(10);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-11, q_points: 14, ..Default::default() });
+        let fwd = solver.invsqrt_mvm(&op, &b).unwrap();
+        let bwd = solver.backward(&op, &fwd, &v).unwrap();
+        let g = bwd.to_dense(n);
+        // finite differences of f(K) = vᵀ K^{-1/2} b along symmetric directions
+        let f = |kk: &Matrix| -> f64 {
+            let m = spd_inv_sqrt(kk).unwrap();
+            crate::util::dot(&v, &m.matvec(&b))
+        };
+        let h = 1e-5;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (5, 2), (7, 7)] {
+            let mut kp = k.clone();
+            let mut km = k.clone();
+            if i == j {
+                kp[(i, i)] += h;
+                km[(i, i)] -= h;
+            } else {
+                kp[(i, j)] += h;
+                kp[(j, i)] += h;
+                km[(i, j)] -= h;
+                km[(j, i)] -= h;
+            }
+            let fd = (f(&kp) - f(&km)) / (2.0 * h);
+            let analytic = if i == j { g[(i, i)] } else { g[(i, j)] + g[(j, i)] };
+            assert!(
+                (fd - analytic).abs() < 2e-3 * (1.0 + fd.abs()),
+                "({i},{j}): fd={fd} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn contract_matches_dense_gradient() {
+        let n = 10;
+        let k = random_spd(n, 11, n as f64 * 0.7);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(12);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-10, ..Default::default() });
+        let fwd = solver.invsqrt_mvm(&op, &b).unwrap();
+        let bwd = solver.backward(&op, &fwd, &v).unwrap();
+        let mut d = Matrix::randn(n, n, &mut rng);
+        d.symmetrize();
+        let g = bwd.to_dense(n);
+        let mut expect = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                expect += g[(i, j)] * d[(i, j)];
+            }
+        }
+        let got = bwd.contract(&d);
+        assert!((got - expect).abs() < 1e-8 * (1.0 + expect.abs()));
+    }
+
+    #[test]
+    fn respects_iteration_budget() {
+        let n = 80;
+        let k = random_spd(n, 13, 0.01); // ill conditioned
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(14);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { max_iters: 9, tol: 1e-14, ..Default::default() });
+        let res = solver.invsqrt_mvm(&op, &b).unwrap();
+        assert!(res.iterations <= 9);
+    }
+}

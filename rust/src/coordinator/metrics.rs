@@ -1,0 +1,110 @@
+//! Service metrics: counters, latency histogram, batch sizes, msMINRES
+//! iteration telemetry (the data behind Fig. S7).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics for the sampling service.
+#[derive(Default)]
+pub struct Metrics {
+    /// Requests submitted.
+    pub submitted: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+    batch_sizes: Mutex<Vec<usize>>,
+    iter_counts: Mutex<Vec<usize>>,
+}
+
+impl Metrics {
+    /// Record one request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    /// Record a dispatched batch size.
+    pub fn record_batch(&self, size: usize) {
+        self.batch_sizes.lock().unwrap().push(size);
+    }
+
+    /// Record msMINRES iteration counts (per RHS).
+    pub fn record_iters(&self, iters: &[usize]) {
+        self.iter_counts.lock().unwrap().extend_from_slice(iters);
+    }
+
+    /// Latency percentile in microseconds (p in [0,100]).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return 0;
+        }
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    /// Largest batch dispatched.
+    pub fn max_batch_size(&self) -> usize {
+        self.batch_sizes.lock().unwrap().iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        let v = self.batch_sizes.lock().unwrap();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<usize>() as f64 / v.len() as f64
+    }
+
+    /// Histogram of msMINRES iteration counts with the given bucket width —
+    /// regenerates Fig. S7 from live service traffic.
+    pub fn iteration_histogram(&self, bucket: usize) -> Vec<(usize, usize)> {
+        let v = self.iter_counts.lock().unwrap();
+        let mut hist: std::collections::BTreeMap<usize, usize> = Default::default();
+        for &it in v.iter() {
+            *hist.entry((it / bucket.max(1)) * bucket.max(1)).or_default() += 1;
+        }
+        hist.into_iter().collect()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+            self.mean_batch_size(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_histogram() {
+        let m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.latency_percentile_us(0.0), 100);
+        assert_eq!(m.latency_percentile_us(50.0), 300);
+        assert_eq!(m.latency_percentile_us(100.0), 500);
+        m.record_iters(&[5, 12, 13, 27]);
+        let h = m.iteration_histogram(10);
+        assert_eq!(h, vec![(0, 1), (10, 2), (20, 1)]);
+        m.record_batch(3);
+        m.record_batch(7);
+        assert_eq!(m.max_batch_size(), 7);
+        assert!((m.mean_batch_size() - 5.0).abs() < 1e-12);
+        assert!(!m.summary().is_empty());
+    }
+}

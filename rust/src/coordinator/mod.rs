@@ -1,0 +1,381 @@
+//! The L3 coordinator: a batching **GP sampling service**.
+//!
+//! A production deployment of this paper looks like a service that answers
+//! `K^{1/2} b` (sampling) and `K^{-1/2} b` (whitening) requests against a set
+//! of registered covariance operators. The coordinator:
+//!
+//! * accepts requests over an MPSC channel (each carries its own one-shot
+//!   response channel),
+//! * **dynamically batches** requests that target the same `(operator, kind)`
+//!   pair — up to `max_batch` RHS or `max_wait` of queueing delay — because
+//!   msMINRES shares its per-iteration MVMs across a whole batch
+//!   ([`crate::krylov::msminres::msminres_block`]), the marginal cost of an
+//!   extra RHS is far below a solo solve (this is the knob Fig. 2 mid/right
+//!   sweeps),
+//! * executes batches on a worker pool sized to the machine,
+//! * records per-request latency and batch-size metrics.
+
+pub mod metrics;
+
+pub use metrics::Metrics;
+
+use crate::ciq::{Ciq, CiqOptions};
+use crate::linalg::Matrix;
+use crate::operators::LinearOp;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What the client wants computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReqKind {
+    /// `K^{1/2} b` — drawing a sample with covariance `K` from white noise.
+    Sample,
+    /// `K^{-1/2} b` — whitening `b` against `K`.
+    Whiten,
+}
+
+/// A shared covariance operator registered with the service.
+pub type SharedOp = Arc<dyn LinearOp + Send + Sync>;
+
+/// One request.
+struct Request {
+    op_name: String,
+    kind: ReqKind,
+    rhs: Vec<f64>,
+    enqueued: Instant,
+    respond: Sender<crate::Result<Vec<f64>>>,
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Max RHS per batch.
+    pub max_batch: usize,
+    /// Max time a request may wait for batch-mates.
+    pub max_wait: Duration,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// CIQ solver options.
+    pub ciq: CiqOptions,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            ciq: CiqOptions::default(),
+        }
+    }
+}
+
+/// Handle to a running sampling service.
+pub struct SamplingService {
+    tx: Option<Sender<Request>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+/// A pending response.
+pub struct Ticket {
+    rx: Receiver<crate::Result<Vec<f64>>>,
+}
+
+impl Ticket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> crate::Result<Vec<f64>> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(crate::Error::Runtime("service dropped request".into())))
+    }
+}
+
+struct Batch {
+    op_name: String,
+    kind: ReqKind,
+    requests: Vec<Request>,
+}
+
+impl SamplingService {
+    /// Start the service with a set of named operators.
+    pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, ops, rx, m2));
+        SamplingService { tx: Some(tx), dispatcher: Some(dispatcher), metrics }
+    }
+
+    /// Submit a request; returns a [`Ticket`] to wait on.
+    pub fn submit(&self, op_name: &str, kind: ReqKind, rhs: Vec<f64>) -> Ticket {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            op_name: op_name.to_string(),
+            kind,
+            rhs,
+            enqueued: Instant::now(),
+            respond: rtx,
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        // if the dispatcher is gone the Ticket will report the failure
+        let _ = self.tx.as_ref().unwrap().send(req);
+        Ticket { rx: rrx }
+    }
+
+    /// Service metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drains in-flight requests.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SamplingService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    config: ServiceConfig,
+    ops: HashMap<String, SharedOp>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    // worker pool
+    let (btx, brx) = mpsc::channel::<Batch>();
+    let brx = Arc::new(std::sync::Mutex::new(brx));
+    let ops = Arc::new(ops);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for _ in 0..config.workers.max(1) {
+        let brx = brx.clone();
+        let ops = ops.clone();
+        let metrics = metrics.clone();
+        let ciq_opts = config.ciq.clone();
+        let stop = stop.clone();
+        workers.push(std::thread::spawn(move || loop {
+            let batch = {
+                let guard = brx.lock().unwrap();
+                match guard.recv_timeout(Duration::from_millis(20)) {
+                    Ok(b) => b,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            };
+            execute_batch(&ops, &ciq_opts, batch, &metrics);
+        }));
+    }
+
+    // batching loop
+    let mut pending: HashMap<(String, ReqKind), Vec<Request>> = HashMap::new();
+    loop {
+        let timeout = if pending.is_empty() { Duration::from_millis(50) } else { config.max_wait };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let key = (req.op_name.clone(), req.kind);
+                let queue = pending.entry(key.clone()).or_default();
+                queue.push(req);
+                if queue.len() >= config.max_batch {
+                    let requests = pending.remove(&key).unwrap();
+                    metrics.record_batch(requests.len());
+                    let _ = btx.send(Batch { op_name: key.0, kind: key.1, requests });
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // flush everything that waited long enough (or anything, on idle)
+                let keys: Vec<_> = pending.keys().cloned().collect();
+                for key in keys {
+                    let flush = pending
+                        .get(&key)
+                        .map(|q| {
+                            q.first()
+                                .map(|r| r.enqueued.elapsed() >= config.max_wait)
+                                .unwrap_or(false)
+                        })
+                        .unwrap_or(false);
+                    if flush {
+                        let requests = pending.remove(&key).unwrap();
+                        metrics.record_batch(requests.len());
+                        let _ = btx.send(Batch { op_name: key.0, kind: key.1, requests });
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // drain remaining
+                for ((op_name, kind), requests) in pending.drain() {
+                    metrics.record_batch(requests.len());
+                    let _ = btx.send(Batch { op_name, kind, requests });
+                }
+                break;
+            }
+        }
+    }
+    drop(btx);
+    stop.store(true, Ordering::Release);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn execute_batch(
+    ops: &HashMap<String, SharedOp>,
+    ciq_opts: &CiqOptions,
+    batch: Batch,
+    metrics: &Metrics,
+) {
+    let op = match ops.get(&batch.op_name) {
+        Some(op) => op.clone(),
+        None => {
+            for req in batch.requests {
+                let _ = req
+                    .respond
+                    .send(Err(crate::Error::Invalid(format!("unknown operator '{}'", batch.op_name))));
+            }
+            return;
+        }
+    };
+    let n = op.size();
+    // validate sizes
+    let mut valid = Vec::new();
+    for req in batch.requests {
+        if req.rhs.len() != n {
+            let _ = req.respond.send(Err(crate::Error::Shape(format!(
+                "rhs len {} != operator size {n}",
+                req.rhs.len()
+            ))));
+        } else {
+            valid.push(req);
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let r = valid.len();
+    let mut b = Matrix::zeros(n, r);
+    for (j, req) in valid.iter().enumerate() {
+        for i in 0..n {
+            b[(i, j)] = req.rhs[i];
+        }
+    }
+    let solver = Ciq::new(ciq_opts.clone());
+    let result = match batch.kind {
+        ReqKind::Sample => solver.sqrt_mvm_block(op.as_ref(), &b),
+        ReqKind::Whiten => solver.invsqrt_mvm_block(op.as_ref(), &b),
+    };
+    match result {
+        Ok((out, iters)) => {
+            metrics.record_iters(&iters);
+            for (j, req) in valid.into_iter().enumerate() {
+                let col = out.col(j);
+                metrics.record_latency(req.enqueued.elapsed());
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Ok(col));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch solve failed: {e}");
+            for req in valid {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(crate::Error::Numerical(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::DenseOp;
+    use crate::rng::Pcg64;
+    use crate::util::rel_err;
+
+    fn make_op(n: usize, seed: u64) -> (SharedOp, Matrix) {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64 * 0.5;
+        }
+        (Arc::new(DenseOp::new(k.clone())), k)
+    }
+
+    #[test]
+    fn roundtrip_whiten_then_sample() {
+        let n = 24;
+        let (op, _k) = make_op(n, 1);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let w = svc.submit("k", ReqKind::Whiten, b.clone()).wait().unwrap();
+        let s = svc.submit("k", ReqKind::Sample, w).wait().unwrap();
+        assert!(rel_err(&s, &b) < 1e-4, "whiten→sample roundtrip");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_operator_errors() {
+        let (op, _) = make_op(8, 3);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let svc = SamplingService::start(ServiceConfig::default(), ops);
+        let r = svc.submit("nope", ReqKind::Sample, vec![0.0; 8]).wait();
+        assert!(r.is_err());
+        let r2 = svc.submit("k", ReqKind::Sample, vec![0.0; 3]).wait();
+        assert!(r2.is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered_and_batched() {
+        let n = 16;
+        let (op, k) = make_op(n, 4);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            workers: 2,
+            ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(5);
+        let reqs: Vec<Vec<f64>> = (0..20).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let tickets: Vec<Ticket> =
+            reqs.iter().map(|b| svc.submit("k", ReqKind::Whiten, b.clone())).collect();
+        // compare each against the solo exact computation
+        let exact_map = crate::linalg::eigen::spd_inv_sqrt(&k).unwrap();
+        for (t, b) in tickets.into_iter().zip(&reqs) {
+            let got = t.wait().unwrap();
+            let exact = exact_map.matvec(b);
+            assert!(rel_err(&got, &exact) < 1e-5);
+        }
+        assert_eq!(svc.metrics().completed.load(Ordering::Relaxed), 20);
+        assert!(svc.metrics().max_batch_size() > 1, "batching never kicked in");
+        svc.shutdown();
+    }
+}

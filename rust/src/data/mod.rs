@@ -1,0 +1,275 @@
+//! Synthetic datasets standing in for the paper's UCI/climate data
+//! (3DRoad, Precipitation, CovType — see DESIGN.md §Substitutions).
+//!
+//! Each generator draws a smooth random field (a sum of random RBF bumps —
+//! a draw from an approximate GP prior) over `[0,1]^d` and observes it with
+//! the noise model matching the paper's likelihood choice:
+//! Gaussian (3droad-like), Student-T (precipitation-like: heavy-tailed),
+//! Bernoulli (covtype-like: thresholded field).
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// A regression / classification dataset.
+pub struct Dataset {
+    /// inputs, `n × d`, standardized
+    pub x: Matrix,
+    /// targets (standardized for regression; ±1 for classification)
+    pub y: Vec<f64>,
+    /// human-readable name
+    pub name: String,
+}
+
+/// Latent smooth field: `f(x) = Σ_k a_k exp(-‖x−c_k‖²/2ℓ²)`.
+pub struct SmoothField {
+    centers: Matrix,
+    amps: Vec<f64>,
+    ell: f64,
+}
+
+impl SmoothField {
+    /// Random field with `k` bumps in `d` dims.
+    pub fn random(d: usize, k: usize, ell: f64, rng: &mut Pcg64) -> SmoothField {
+        let mut centers = Matrix::zeros(k, d);
+        for i in 0..k {
+            for j in 0..d {
+                centers[(i, j)] = rng.uniform();
+            }
+        }
+        let amps: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        SmoothField { centers, amps, ell }
+    }
+
+    /// Evaluate at one point.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for k in 0..self.centers.rows() {
+            let c = self.centers.row(k);
+            let d2: f64 = c.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum();
+            acc += self.amps[k] * (-0.5 * d2 / (self.ell * self.ell)).exp();
+        }
+        acc
+    }
+}
+
+fn random_inputs(n: usize, d: usize, rng: &mut Pcg64) -> Matrix {
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            x[(i, j)] = rng.uniform();
+        }
+    }
+    x
+}
+
+fn standardize(y: &mut [f64]) {
+    let m = crate::util::mean(y);
+    let s = crate::util::std_dev(y).max(1e-12);
+    for v in y {
+        *v = (*v - m) / s;
+    }
+}
+
+/// Gaussian-noise regression (3droad substitute, D=2 spatial).
+pub fn gaussian_regression(n: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let field = SmoothField::random(d, 60, 0.12, &mut rng);
+    let x = random_inputs(n, d, &mut rng);
+    let mut y: Vec<f64> = (0..n).map(|i| field.eval(x.row(i))).collect();
+    standardize(&mut y);
+    for v in &mut y {
+        *v += noise * rng.normal();
+    }
+    Dataset { x, y, name: format!("synth-gaussian-{d}d") }
+}
+
+/// Heavy-tailed (Student-T) regression (precipitation substitute, D=3).
+pub fn student_t_regression(n: usize, d: usize, scale: f64, dof: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let field = SmoothField::random(d, 60, 0.15, &mut rng);
+    let x = random_inputs(n, d, &mut rng);
+    let mut y: Vec<f64> = (0..n).map(|i| field.eval(x.row(i))).collect();
+    standardize(&mut y);
+    for v in &mut y {
+        // Student-T noise: normal / sqrt(gamma)
+        let g = rng.gamma(dof / 2.0, dof / 2.0);
+        *v += scale * rng.normal() / g.sqrt();
+    }
+    Dataset { x, y, name: format!("synth-student-{d}d") }
+}
+
+/// Binary classification from a thresholded field (covtype substitute).
+pub fn binary_classification(n: usize, d: usize, flip_prob: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let field = SmoothField::random(d, 80, 0.18, &mut rng);
+    let x = random_inputs(n, d, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let f = field.eval(x.row(i));
+            let label = if f > 0.0 { 1.0 } else { -1.0 };
+            if rng.uniform() < flip_prob {
+                -label
+            } else {
+                label
+            }
+        })
+        .collect();
+    Dataset { x, y, name: format!("synth-binary-{d}d") }
+}
+
+impl Dataset {
+    /// Size.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic train/test split.
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| -> Dataset {
+            let mut x = Matrix::zeros(ids.len(), self.x.cols());
+            let mut y = Vec::with_capacity(ids.len());
+            for (r, &i) in ids.iter().enumerate() {
+                for j in 0..self.x.cols() {
+                    x[(r, j)] = self.x[(i, j)];
+                }
+                y.push(self.y[i]);
+            }
+            Dataset { x, y, name: self.name.clone() }
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// K-means(-ish) inducing point selection: `m` centers via a few Lloyd
+    /// iterations from a random subset init.
+    pub fn kmeans_centers(&self, m: usize, iters: usize, rng: &mut Pcg64) -> Matrix {
+        let n = self.len();
+        let d = self.x.cols();
+        let m = m.min(n);
+        let init = rng.sample_indices(n, m);
+        let mut centers = Matrix::zeros(m, d);
+        for (c, &i) in init.iter().enumerate() {
+            for j in 0..d {
+                centers[(c, j)] = self.x[(i, j)];
+            }
+        }
+        let mut assign = vec![0usize; n];
+        for _ in 0..iters {
+            // assignment
+            for i in 0..n {
+                let xi = self.x.row(i);
+                let mut best = (f64::INFINITY, 0usize);
+                for c in 0..m {
+                    let cc = centers.row(c);
+                    let d2: f64 = xi.iter().zip(cc).map(|(a, b)| (a - b) * (a - b)).sum();
+                    if d2 < best.0 {
+                        best = (d2, c);
+                    }
+                }
+                assign[i] = best.1;
+            }
+            // update
+            let mut sums = Matrix::zeros(m, d);
+            let mut counts = vec![0usize; m];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                for j in 0..d {
+                    sums[(c, j)] += self.x[(i, j)];
+                }
+            }
+            for c in 0..m {
+                if counts[c] > 0 {
+                    for j in 0..d {
+                        centers[(c, j)] = sums[(c, j)] / counts[c] as f64;
+                    }
+                }
+            }
+        }
+        centers
+    }
+
+    /// Random minibatch indices.
+    pub fn minibatch(&self, size: usize, rng: &mut Pcg64) -> Vec<usize> {
+        rng.sample_indices(self.len(), size.min(self.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regression_is_standardized_and_smooth() {
+        let ds = gaussian_regression(500, 2, 0.1, 1);
+        assert_eq!(ds.len(), 500);
+        let m = crate::util::mean(&ds.y);
+        assert!(m.abs() < 0.2, "mean {m}");
+        // smoothness: nearby points have correlated targets
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d2: f64 = ds
+                    .x
+                    .row(i)
+                    .iter()
+                    .zip(ds.x.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d2 < 0.001 {
+                    num += (ds.y[i] - ds.y[j]).abs();
+                    den += 1.0;
+                }
+            }
+        }
+        if den > 0.0 {
+            assert!(num / den < 1.0, "nearby targets differ too much");
+        }
+    }
+
+    #[test]
+    fn classification_labels_valid() {
+        let ds = binary_classification(300, 3, 0.1, 2);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(pos > 30 && pos < 270, "degenerate class balance: {pos}");
+    }
+
+    #[test]
+    fn student_t_has_heavier_tails() {
+        let g = gaussian_regression(4000, 2, 0.3, 3);
+        let t = student_t_regression(4000, 2, 0.3, 3.0, 3);
+        let kurt = |y: &[f64]| {
+            let m = crate::util::mean(y);
+            let s2 = y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / y.len() as f64;
+            y.iter().map(|v| (v - m).powi(4)).sum::<f64>() / y.len() as f64 / (s2 * s2)
+        };
+        assert!(kurt(&t.y) > kurt(&g.y), "student-t should be heavier tailed");
+    }
+
+    #[test]
+    fn split_and_kmeans() {
+        let ds = gaussian_regression(200, 2, 0.1, 4);
+        let mut rng = Pcg64::seeded(5);
+        let (tr, te) = ds.split(0.75, &mut rng);
+        assert_eq!(tr.len(), 150);
+        assert_eq!(te.len(), 50);
+        let z = ds.kmeans_centers(16, 5, &mut rng);
+        assert_eq!(z.rows(), 16);
+        // all centers within the unit cube
+        for i in 0..16 {
+            for j in 0..2 {
+                assert!((0.0..=1.0).contains(&z[(i, j)]));
+            }
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Exact Gaussian-process regression — the Bayesian-optimization surrogate
+//! (Sec. 5.2). Training data stays small (≤ a few hundred BO evaluations),
+//! so hyperparameters are fit with dense marginal-likelihood gradients; the
+//! expensive object is the *posterior covariance at `T` candidate points*,
+//! which is exposed as a [`LinearOp`] (`K** − W Wᵀ`) so CIQ can sample from
+//! it with `O(T²)` time / `O(T)` extra memory.
+
+use crate::ciq::{Ciq, CiqOptions};
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::kernel::cross_kernel;
+use crate::operators::{KernelOp, KernelType, LinearOp, SubtractLowRankOp};
+use crate::rng::Pcg64;
+use crate::{Error, Result};
+
+/// GP hyperparameters (isotropic lengthscale).
+#[derive(Clone, Copy, Debug)]
+pub struct GpHyper {
+    /// lengthscale ℓ
+    pub lengthscale: f64,
+    /// kernel variance s²
+    pub outputscale: f64,
+    /// observation noise σ²
+    pub noise: f64,
+}
+
+impl Default for GpHyper {
+    fn default() -> Self {
+        GpHyper { lengthscale: 0.3, outputscale: 1.0, noise: 1e-2 }
+    }
+}
+
+/// Exact GP with RBF/Matérn kernel.
+pub struct ExactGp {
+    /// training inputs `n × d`
+    pub x: Matrix,
+    /// training targets
+    pub y: Vec<f64>,
+    /// kernel family
+    pub kind: KernelType,
+    /// hyperparameters
+    pub hyper: GpHyper,
+    chol: Option<Cholesky>,
+    alpha: Vec<f64>,
+}
+
+impl ExactGp {
+    /// Create (call [`ExactGp::refit`] or [`ExactGp::fit_hypers`] before predicting).
+    pub fn new(x: Matrix, y: Vec<f64>, kind: KernelType, hyper: GpHyper) -> ExactGp {
+        ExactGp { x, y, kind, hyper, chol: None, alpha: vec![] }
+    }
+
+    fn ell_vec(&self) -> Vec<f64> {
+        vec![self.hyper.lengthscale; self.x.cols()]
+    }
+
+    /// Recompute the Cholesky factor and `α = (K+σ²I)^{-1} y`.
+    pub fn refit(&mut self) -> Result<()> {
+        let op = KernelOp::new(&self.x, self.kind, self.hyper.lengthscale, self.hyper.outputscale, self.hyper.noise);
+        let k = op.to_dense();
+        let chol = Cholesky::with_jitter(&k, 1e-8)?;
+        self.alpha = chol.solve(&self.y);
+        self.chol = Some(chol);
+        Ok(())
+    }
+
+    /// Log marginal likelihood (requires refit).
+    pub fn log_marginal(&self) -> Result<f64> {
+        let chol = self.chol.as_ref().ok_or_else(|| Error::Invalid("call refit() first".into()))?;
+        let n = self.y.len() as f64;
+        Ok(-0.5 * crate::util::dot(&self.y, &self.alpha)
+            - 0.5 * chol.logdet()
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Fit hyperparameters by Adam on the log marginal likelihood
+    /// (analytic gradients via `tr((ααᵀ − K^{-1}) ∂K/∂θ)/2`).
+    pub fn fit_hypers(&mut self, steps: usize, lr: f64) -> Result<f64> {
+        let n = self.x.rows();
+        // log-parameters
+        let mut log_p = [
+            self.hyper.lengthscale.ln(),
+            self.hyper.outputscale.ln(),
+            self.hyper.noise.ln(),
+        ];
+        let mut m = [0.0; 3];
+        let mut v = [0.0; 3];
+        let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+        let mut last_lml = f64::NEG_INFINITY;
+        for t in 1..=steps {
+            self.hyper = GpHyper {
+                lengthscale: log_p[0].exp(),
+                outputscale: log_p[1].exp(),
+                noise: log_p[2].exp().max(1e-8),
+            };
+            self.refit()?;
+            last_lml = self.log_marginal()?;
+            let chol = self.chol.as_ref().unwrap();
+            // K^{-1} via solves on identity columns (n is small for BO)
+            let mut kinv = Matrix::zeros(n, n);
+            for j in 0..n {
+                let mut e = vec![0.0; n];
+                e[j] = 1.0;
+                let col = chol.solve(&e);
+                for i in 0..n {
+                    kinv[(i, j)] = col[i];
+                }
+            }
+            // dK/dθ matrices
+            let op = KernelOp::new(&self.x, self.kind, self.hyper.lengthscale, self.hyper.outputscale, 0.0);
+            let kmat = op.to_dense();
+            let ell = self.ell_vec();
+            let mut grad = [0.0f64; 3];
+            // grad = 0.5 tr((ααᵀ - K^{-1}) dK/dθ)
+            for i in 0..n {
+                for j in 0..n {
+                    let aij = self.alpha[i] * self.alpha[j] - kinv[(i, j)];
+                    // dK/d log s2 = K (noise-free part)
+                    grad[1] += 0.5 * aij * kmat[(i, j)];
+                    // dK/d log ell
+                    let d2: f64 = self
+                        .x
+                        .row(i)
+                        .iter()
+                        .zip(self.x.row(j))
+                        .zip(&ell)
+                        .map(|((a, b), l)| {
+                            let t = (a - b) / l;
+                            t * t
+                        })
+                        .sum();
+                    let r = d2.sqrt();
+                    grad[0] += 0.5 * aij * self.hyper.outputscale * self.kind.drho_dlog_ell(r);
+                    if i == j {
+                        // dK/d log noise = σ² I
+                        grad[2] += 0.5 * aij * self.hyper.noise;
+                    }
+                }
+            }
+            // Adam ascent
+            for p in 0..3 {
+                m[p] = b1 * m[p] + (1.0 - b1) * grad[p];
+                v[p] = b2 * v[p] + (1.0 - b2) * grad[p] * grad[p];
+                let mh = m[p] / (1.0 - b1.powi(t as i32));
+                let vh = v[p] / (1.0 - b2.powi(t as i32));
+                log_p[p] += lr * mh / (vh.sqrt() + eps);
+            }
+            // clamp to sane ranges (paper's BO bounds, Appx. F)
+            log_p[0] = log_p[0].clamp((0.01f64).ln(), (2.0f64).ln());
+            log_p[1] = log_p[1].clamp((0.05f64).ln(), (50.0f64).ln());
+            log_p[2] = log_p[2].clamp((1e-6f64).ln(), (1e-2f64).ln());
+        }
+        self.hyper = GpHyper {
+            lengthscale: log_p[0].exp(),
+            outputscale: log_p[1].exp(),
+            noise: log_p[2].exp().max(1e-8),
+        };
+        self.refit()?;
+        Ok(last_lml)
+    }
+
+    /// Posterior mean at test points.
+    pub fn posterior_mean(&self, x_star: &Matrix) -> Result<Vec<f64>> {
+        if self.chol.is_none() {
+            return Err(Error::Invalid("call refit() first".into()));
+        }
+        let kxs = cross_kernel(x_star, &self.x, self.kind, &self.ell_vec(), self.hyper.outputscale);
+        Ok(kxs.matvec(&self.alpha))
+    }
+
+    /// Posterior-covariance pieces at `T` test points: the kernel operator
+    /// `K**` (with tiny jitter for SPD safety) and the low-rank correction
+    /// factor `W = K*n L^{-T}` such that `Cov = K** − W Wᵀ`.
+    pub fn posterior_cov_parts(&self, x_star: &Matrix, jitter: f64) -> Result<(KernelOp, Matrix)> {
+        let chol = self.chol.as_ref().ok_or_else(|| Error::Invalid("call refit() first".into()))?;
+        let t = x_star.rows();
+        let n = self.x.rows();
+        let kxs = cross_kernel(x_star, &self.x, self.kind, &self.ell_vec(), self.hyper.outputscale); // T×n
+        // W = K*n L^{-T}: rows w_i solve L w_i = k_i  (so W Wᵀ = K*n K^{-1} Kn*)
+        let mut w = Matrix::zeros(t, n);
+        for i in 0..t {
+            let ki = kxs.row(i).to_vec();
+            let wi = chol.solve_l(&ki);
+            for j in 0..n {
+                w[(i, j)] = wi[j];
+            }
+        }
+        let kss = KernelOp::new(x_star, self.kind, self.hyper.lengthscale, self.hyper.outputscale, jitter);
+        Ok((kss, w))
+    }
+
+    /// Draw one posterior sample at `x_star` with CIQ (O(T²) time, O(T) mem).
+    pub fn sample_posterior_ciq(
+        &self,
+        x_star: &Matrix,
+        opts: &CiqOptions,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<f64>> {
+        let mean = self.posterior_mean(x_star)?;
+        let (kss, w) = self.posterior_cov_parts(x_star, 1e-4)?;
+        // the jitter-free posterior covariance is a Schur complement (PSD),
+        // so λ_min ≥ jitter — certify it for the CIQ quadrature
+        let cov = SubtractLowRankOp::new(&kss, w).with_lambda_min_bound(1e-4);
+        let eps: Vec<f64> = (0..x_star.rows()).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(opts.clone());
+        let dev = solver.sqrt_mvm(&cov, &eps)?.solution;
+        Ok(mean.iter().zip(&dev).map(|(m, d)| m + d).collect())
+    }
+
+    /// Draw one posterior sample with dense Cholesky (O(T³) / O(T²) —
+    /// the baseline).
+    pub fn sample_posterior_cholesky(&self, x_star: &Matrix, rng: &mut Pcg64) -> Result<Vec<f64>> {
+        let mean = self.posterior_mean(x_star)?;
+        let (kss, w) = self.posterior_cov_parts(x_star, 1e-4)?;
+        let cov_op = SubtractLowRankOp::new(&kss, w);
+        let cov = cov_op.to_dense();
+        let chol = Cholesky::with_jitter(&cov, 1e-8)?;
+        let eps: Vec<f64> = (0..x_star.rows()).map(|_| rng.normal()).collect();
+        let dev = chol.sample_mvm(&eps);
+        Ok(mean.iter().zip(&dev).map(|(m, d)| m + d).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_gp(n: usize, seed: u64) -> ExactGp {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = Matrix::zeros(n, 1);
+        for i in 0..n {
+            x[(i, 0)] = rng.uniform();
+        }
+        let y: Vec<f64> = (0..n).map(|i| (6.0 * x[(i, 0)]).sin() + 0.05 * rng.normal()).collect();
+        ExactGp::new(x, y, KernelType::Matern52, GpHyper { lengthscale: 0.2, outputscale: 1.0, noise: 1e-3 })
+    }
+
+    #[test]
+    fn posterior_interpolates_training_data() {
+        let mut gp = toy_gp(30, 1);
+        gp.refit().unwrap();
+        let mean = gp.posterior_mean(&gp.x.clone()).unwrap();
+        let rmse = (mean
+            .iter()
+            .zip(&gp.y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / 30.0)
+            .sqrt();
+        assert!(rmse < 0.1, "rmse {rmse}");
+    }
+
+    #[test]
+    fn fit_improves_marginal_likelihood() {
+        let mut gp = toy_gp(40, 2);
+        gp.hyper = GpHyper { lengthscale: 1.5, outputscale: 0.1, noise: 5e-3 };
+        gp.refit().unwrap();
+        let before = gp.log_marginal().unwrap();
+        let after = gp.fit_hypers(30, 0.1).unwrap();
+        assert!(after > before, "lml {before} -> {after}");
+    }
+
+    #[test]
+    fn ciq_and_cholesky_samples_share_moments() {
+        let mut gp = toy_gp(25, 3);
+        gp.refit().unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let mut xs = Matrix::zeros(40, 1);
+        for i in 0..40 {
+            xs[(i, 0)] = i as f64 / 39.0;
+        }
+        let opts = CiqOptions { tol: 1e-7, ..Default::default() };
+        let reps = 60;
+        let mut mean_c = vec![0.0; 40];
+        let mut mean_q = vec![0.0; 40];
+        for _ in 0..reps {
+            let sc = gp.sample_posterior_cholesky(&xs, &mut rng).unwrap();
+            let sq = gp.sample_posterior_ciq(&xs, &opts, &mut rng).unwrap();
+            for i in 0..40 {
+                mean_c[i] += sc[i] / reps as f64;
+                mean_q[i] += sq[i] / reps as f64;
+            }
+        }
+        let pm = gp.posterior_mean(&xs).unwrap();
+        for i in 0..40 {
+            assert!((mean_c[i] - pm[i]).abs() < 0.5, "chol mean off at {i}");
+            assert!((mean_q[i] - pm[i]).abs() < 0.5, "ciq mean off at {i}");
+        }
+    }
+
+    #[test]
+    fn posterior_cov_is_psd_operator() {
+        let mut gp = toy_gp(20, 5);
+        gp.refit().unwrap();
+        let mut rng = Pcg64::seeded(6);
+        let xs = Matrix::randn(30, 1, &mut rng);
+        let (kss, w) = gp.posterior_cov_parts(&xs, 1e-6).unwrap();
+        let cov = SubtractLowRankOp::new(&kss, w);
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+            let q = crate::util::dot(&v, &cov.matvec(&v));
+            assert!(q > -1e-8, "posterior covariance not PSD: {q}");
+        }
+    }
+}

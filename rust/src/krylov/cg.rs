@@ -1,0 +1,130 @@
+//! Preconditioned conjugate gradients — used for the `O(M²)` natural-gradient
+//! solves with `S'` (Appx. E, footnote: Jacobi preconditioner) and for the
+//! Gibbs-sampler posterior means.
+
+use crate::operators::LinearOp;
+use crate::util::{axpy, dot, norm2};
+
+/// Options for [`pcg`].
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    /// Maximum iterations.
+    pub max_iters: usize,
+    /// Relative-residual tolerance.
+    pub tol: f64,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { max_iters: 500, tol: 1e-8 }
+    }
+}
+
+/// Preconditioned CG: solve `K x = b` for SPD `K`, with an optional
+/// preconditioner given as a *solve* closure `z = P^{-1} r`.
+/// Returns `(x, relative_residual, iterations)`.
+pub fn pcg(
+    op: &dyn LinearOp,
+    b: &[f64],
+    precond: Option<&dyn Fn(&[f64]) -> Vec<f64>>,
+    opts: &CgOptions,
+) -> (Vec<f64>, f64, usize) {
+    let n = op.size();
+    assert_eq!(b.len(), n);
+    let bnorm = norm2(b);
+    if bnorm == 0.0 {
+        return (vec![0.0; n], 0.0, 0);
+    }
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = match precond {
+        Some(p) => p(&r),
+        None => r.clone(),
+    };
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut iters = 0;
+    let mut res = 1.0;
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        let kp = op.matvec(&p);
+        let pkp = dot(&p, &kp);
+        if pkp <= 0.0 || !pkp.is_finite() {
+            break; // loss of positive definiteness; return best iterate
+        }
+        let alpha = rz / pkp;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &kp, &mut r);
+        res = norm2(&r) / bnorm;
+        if res < opts.tol {
+            break;
+        }
+        z = match precond {
+            Some(pre) => pre(&r),
+            None => r.clone(),
+        };
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    (x, res, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Matrix};
+    use crate::operators::{DenseOp, LinearOp};
+    use crate::rng::Pcg64;
+    use crate::util::rel_err;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64 * 0.3;
+        }
+        k
+    }
+
+    #[test]
+    fn matches_direct() {
+        let n = 40;
+        let k = spd(n, 1);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (x, res, _) = pcg(&op, &b, None, &CgOptions { max_iters: 300, tol: 1e-12 });
+        let exact = Cholesky::new(&k).unwrap().solve(&b);
+        assert!(rel_err(&x, &exact) < 1e-8, "res={res}");
+    }
+
+    #[test]
+    fn jacobi_preconditioner_reduces_iterations() {
+        // strongly scaled diagonal => Jacobi helps a lot
+        let n = 80;
+        let mut k = spd(n, 3);
+        for i in 0..n {
+            let s = 1.0 + 100.0 * (i as f64 / n as f64);
+            for j in 0..n {
+                k[(i, j)] *= s.sqrt();
+                k[(j, i)] *= s.sqrt();
+            }
+        }
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(4);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = CgOptions { max_iters: 500, tol: 1e-9 };
+        let (_, _, it_plain) = pcg(&op, &b, None, &opts);
+        let diag = op.diagonal();
+        let pre = move |r: &[f64]| -> Vec<f64> { r.iter().zip(&diag).map(|(ri, di)| ri / di).collect() };
+        let (x, _, it_pre) = pcg(&op, &b, Some(&pre), &opts);
+        let exact = Cholesky::new(&k).unwrap().solve(&b);
+        assert!(rel_err(&x, &exact) < 1e-6);
+        assert!(it_pre <= it_plain, "precond {it_pre} vs plain {it_plain}");
+    }
+}

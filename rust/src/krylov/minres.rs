@@ -1,0 +1,56 @@
+//! Standard MINRES (Alg. 3 of the paper) — implemented as the single-shift
+//! special case of [`super::msminres`]: identical recurrence, `t = 0`.
+
+use super::msminres::{msminres, MsMinresOptions};
+use crate::operators::LinearOp;
+
+/// Solve `K c = b` with MINRES. Returns `(solution, relative_residual,
+/// iterations)`.
+pub fn minres(op: &dyn LinearOp, b: &[f64], max_iters: usize, tol: f64) -> (Vec<f64>, f64, usize) {
+    let opts = MsMinresOptions { max_iters, tol, weights: None };
+    let mut res = msminres(op, b, &[0.0], &opts);
+    (res.solutions.swap_remove(0), res.residuals[0], res.iterations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Matrix};
+    use crate::operators::DenseOp;
+    use crate::rng::Pcg64;
+    use crate::util::rel_err;
+
+    #[test]
+    fn matches_direct_solve() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 45;
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64 * 0.2;
+        }
+        let op = DenseOp::new(k.clone());
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (x, res, iters) = minres(&op, &b, 300, 1e-10);
+        let exact = Cholesky::new(&k).unwrap().solve(&b);
+        assert!(rel_err(&x, &exact) < 1e-7);
+        assert!(res < 1e-10);
+        assert!(iters <= 300);
+    }
+
+    #[test]
+    fn works_on_indefinite_systems() {
+        // MINRES handles symmetric indefinite K (unlike CG).
+        let n = 20;
+        let mut k = Matrix::eye(n);
+        for i in 0..n {
+            k[(i, i)] = if i % 2 == 0 { 2.0 } else { -3.0 };
+        }
+        let mut rng = Pcg64::seeded(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let op = DenseOp::new(k.clone());
+        let (x, res, _) = minres(&op, &b, 100, 1e-12);
+        let kx = k.matvec(&x);
+        assert!(rel_err(&kx, &b) < 1e-8, "res={res}");
+    }
+}

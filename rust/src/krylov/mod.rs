@@ -1,0 +1,14 @@
+//! Krylov-subspace methods: Lanczos extreme-eigenvalue estimation,
+//! MINRES, multi-shift MINRES (msMINRES — Alg. 4 of the paper), and
+//! preconditioned conjugate gradients.
+
+pub mod lanczos;
+pub mod minres;
+pub mod msminres;
+pub mod cg;
+pub mod slq;
+
+pub use lanczos::{estimate_extreme_eigenvalues, lanczos_tridiag, EigenBounds};
+pub use minres::minres;
+pub use msminres::{msminres, msminres_block, MsMinresOptions, MsMinresResult};
+pub use cg::{pcg, CgOptions};

@@ -1,0 +1,479 @@
+//! Multi-shift MINRES (Alg. 4 of the paper).
+//!
+//! Solves all `Q` shifted systems `(K + t_q I) c_q = b` simultaneously from a
+//! *single* Krylov subspace: one MVM per iteration regardless of `Q`,
+//! exploiting the shift invariance `K_J(K, b) = K_J(K + tI, b)` (Obs. 1).
+//! Per shift, the tridiagonal QR is updated with Givens rotations and the
+//! solution advances through a three-term "search direction" recurrence, so
+//! total extra storage is `O(QN)` (Property 1).
+
+use crate::linalg::Matrix;
+use crate::operators::LinearOp;
+use crate::util::{axpy, dot, norm2};
+
+/// Options for [`msminres`].
+#[derive(Clone, Debug)]
+pub struct MsMinresOptions {
+    /// Maximum iterations `J`.
+    pub max_iters: usize,
+    /// Relative-residual stopping tolerance (per shift).
+    pub tol: f64,
+    /// Optional CIQ weights: when set, stop on the *weighted* residual
+    /// `Σ_q |w_q|·res_q / Σ_q |w_q|` instead of the max over shifts.
+    pub weights: Option<Vec<f64>>,
+}
+
+impl Default for MsMinresOptions {
+    fn default() -> Self {
+        MsMinresOptions { max_iters: 400, tol: 1e-4, weights: None }
+    }
+}
+
+/// Result of a (multi-shift) MINRES run.
+#[derive(Clone, Debug)]
+pub struct MsMinresResult {
+    /// One solution vector per shift: `c_q ≈ (K + t_q I)^{-1} b`.
+    pub solutions: Vec<Vec<f64>>,
+    /// Relative residuals per shift at exit.
+    pub residuals: Vec<f64>,
+    /// Iterations executed (= MVMs performed).
+    pub iterations: usize,
+    /// Whether the stopping tolerance was reached.
+    pub converged: bool,
+    /// Max-over-shifts relative residual after each iteration (Fig. 2 left).
+    pub residual_history: Vec<f64>,
+}
+
+/// Per-shift recurrence state.
+struct ShiftState {
+    /// previous two Givens rotations
+    c1: f64,
+    s1: f64,
+    c2: f64,
+    s2: f64,
+    /// running rhs component; |phi_bar| is the absolute residual
+    phi_bar: f64,
+    /// search directions d_{k-1}, d_{k-2}
+    d_prev: Vec<f64>,
+    d_prev2: Vec<f64>,
+    /// current solution
+    x: Vec<f64>,
+    /// frozen once converged
+    done: bool,
+}
+
+impl ShiftState {
+    fn new(n: usize, beta1: f64) -> ShiftState {
+        ShiftState {
+            c1: 1.0,
+            s1: 0.0,
+            c2: 1.0,
+            s2: 0.0,
+            phi_bar: beta1,
+            d_prev: vec![0.0; n],
+            d_prev2: vec![0.0; n],
+            x: vec![0.0; n],
+            done: false,
+        }
+    }
+
+    /// Advance one MINRES step given this iteration's Lanczos scalars and
+    /// vector. `beta_k` couples v_{k-1},v_k (0 at k=1); `beta_next` is the
+    /// new subdiagonal.
+    #[inline]
+    fn step(&mut self, shift: f64, alpha: f64, beta_k: f64, beta_next: f64, v: &[f64]) {
+        let eps = self.s2 * beta_k;
+        let delta_bar = self.c2 * beta_k;
+        let a = alpha + shift;
+        let delta = self.c1 * delta_bar + self.s1 * a;
+        let gamma_bar = -self.s1 * delta_bar + self.c1 * a;
+        let gamma = (gamma_bar * gamma_bar + beta_next * beta_next).sqrt();
+        // Givens zeroing beta_next; guard breakdown (gamma == 0 happens only
+        // for exactly-singular shifted systems, impossible for t > 0 SPD).
+        let (c, s) = if gamma > 0.0 { (gamma_bar / gamma, beta_next / gamma) } else { (1.0, 0.0) };
+        let tau = c * self.phi_bar;
+        self.phi_bar = -s * self.phi_bar;
+        // d_k = (v_k - delta d_{k-1} - eps d_{k-2}) / gamma
+        // then x += tau d_k. Reuse d_prev2's buffer as the new direction.
+        let inv_gamma = if gamma > 0.0 { 1.0 / gamma } else { 0.0 };
+        for i in 0..v.len() {
+            let d_new = (v[i] - delta * self.d_prev[i] - eps * self.d_prev2[i]) * inv_gamma;
+            self.d_prev2[i] = d_new; // temporarily stash
+            self.x[i] += tau * d_new;
+        }
+        std::mem::swap(&mut self.d_prev, &mut self.d_prev2);
+        // after swap: d_prev = d_new, d_prev2 = old d_prev  ✓
+        self.c2 = self.c1;
+        self.s2 = self.s1;
+        self.c1 = c;
+        self.s1 = s;
+    }
+}
+
+/// Run msMINRES: returns `c_q ≈ (K + t_q I)^{-1} b` for every shift `t_q`.
+///
+/// `shifts` must be ≥ 0 (SPD + nonnegative shifts keeps every system SPD,
+/// which is what the CIQ quadrature produces — Eq. S5).
+pub fn msminres(
+    op: &dyn LinearOp,
+    b: &[f64],
+    shifts: &[f64],
+    opts: &MsMinresOptions,
+) -> MsMinresResult {
+    let n = op.size();
+    assert_eq!(b.len(), n);
+    assert!(!shifts.is_empty());
+    let beta1 = norm2(b);
+    if beta1 == 0.0 {
+        return MsMinresResult {
+            solutions: vec![vec![0.0; n]; shifts.len()],
+            residuals: vec![0.0; shifts.len()],
+            iterations: 0,
+            converged: true,
+            residual_history: vec![],
+        };
+    }
+    let mut states: Vec<ShiftState> = shifts.iter().map(|_| ShiftState::new(n, beta1)).collect();
+
+    // Lanczos state
+    let mut v: Vec<f64> = b.iter().map(|x| x / beta1).collect();
+    let mut v_prev = vec![0.0; n];
+    let mut beta_k = 0.0f64; // couples v_prev and v
+    let mut iters = 0;
+    let mut converged = false;
+    let mut residual_history = Vec::new();
+
+    for _k in 1..=opts.max_iters {
+        iters += 1;
+        // Lanczos expansion
+        let mut w = op.matvec(&v);
+        if beta_k != 0.0 {
+            axpy(-beta_k, &v_prev, &mut w);
+        }
+        let alpha = dot(&v, &w);
+        axpy(-alpha, &v, &mut w);
+        let beta_next = norm2(&w);
+
+        // advance every (unconverged) shift
+        for (q, st) in states.iter_mut().enumerate() {
+            if !st.done {
+                st.step(shifts[q], alpha, beta_k, beta_next, &v);
+                if (st.phi_bar.abs() / beta1) < opts.tol {
+                    st.done = true;
+                }
+            }
+        }
+
+        residual_history
+            .push(states.iter().map(|st| st.phi_bar.abs() / beta1).fold(0.0, f64::max));
+
+        // stopping criterion
+        let stop = match &opts.weights {
+            Some(ws) => {
+                let wsum: f64 = ws.iter().map(|w| w.abs()).sum();
+                let r: f64 = states
+                    .iter()
+                    .zip(ws)
+                    .map(|(st, w)| w.abs() * (st.phi_bar.abs() / beta1))
+                    .sum::<f64>()
+                    / wsum.max(1e-300);
+                r < opts.tol
+            }
+            None => states.iter().all(|st| st.done),
+        };
+        if stop {
+            converged = true;
+            break;
+        }
+        if beta_next < 1e-13 * alpha.abs().max(1.0) {
+            // Krylov space exhausted: solution is exact in the subspace.
+            converged = true;
+            break;
+        }
+
+        // rotate Lanczos vectors
+        for i in 0..n {
+            let next = w[i] / beta_next;
+            v_prev[i] = v[i];
+            v[i] = next;
+        }
+        beta_k = beta_next;
+    }
+
+    MsMinresResult {
+        residuals: states.iter().map(|st| st.phi_bar.abs() / beta1).collect(),
+        solutions: states.into_iter().map(|st| st.x).collect(),
+        iterations: iters,
+        converged,
+        residual_history,
+    }
+}
+
+/// Block msMINRES: independent recurrences for each column of `b_mat`,
+/// sharing each iteration's MVMs as a single `matmat` (the batching the
+/// coordinator exploits — Fig. 2 mid/right varies this RHS count).
+///
+/// Returns `solutions[q]` as an `n × r` matrix of per-column solves, plus
+/// per-column iteration counts.
+pub fn msminres_block(
+    op: &dyn LinearOp,
+    b_mat: &Matrix,
+    shifts: &[f64],
+    opts: &MsMinresOptions,
+) -> (Vec<Matrix>, Vec<usize>, Vec<f64>) {
+    let n = op.size();
+    let r = b_mat.cols();
+    assert_eq!(b_mat.rows(), n);
+    // per-column Lanczos state
+    let mut beta1 = vec![0.0; r];
+    let mut v = Matrix::zeros(n, r);
+    let mut v_prev = Matrix::zeros(n, r);
+    let mut beta_k = vec![0.0; r];
+    let mut col_done = vec![false; r];
+    let mut col_iters = vec![0usize; r];
+    for j in 0..r {
+        let col = b_mat.col(j);
+        beta1[j] = norm2(&col);
+        if beta1[j] == 0.0 {
+            col_done[j] = true;
+            continue;
+        }
+        for i in 0..n {
+            v[(i, j)] = col[i] / beta1[j];
+        }
+    }
+    let mut states: Vec<Vec<ShiftState>> = (0..shifts.len())
+        .map(|_| (0..r).map(|j| ShiftState::new(n, beta1[j])).collect())
+        .collect();
+
+    let mut scratch_v = vec![0.0; n];
+    for _k in 1..=opts.max_iters {
+        if col_done.iter().all(|&d| d) {
+            break;
+        }
+        let mut w = op.matmat(&v);
+        for j in 0..r {
+            if col_done[j] {
+                continue;
+            }
+            col_iters[j] += 1;
+            // per-column Lanczos update
+            let mut alpha = 0.0;
+            for i in 0..n {
+                let wij = w[(i, j)] - beta_k[j] * v_prev[(i, j)];
+                w[(i, j)] = wij;
+                alpha += v[(i, j)] * wij;
+            }
+            let mut bn2 = 0.0;
+            for i in 0..n {
+                let wij = w[(i, j)] - alpha * v[(i, j)];
+                w[(i, j)] = wij;
+                bn2 += wij * wij;
+            }
+            let beta_next = bn2.sqrt();
+            for i in 0..n {
+                scratch_v[i] = v[(i, j)];
+            }
+            let mut all_done = true;
+            for (q, per_shift) in states.iter_mut().enumerate() {
+                let st = &mut per_shift[j];
+                if !st.done {
+                    st.step(shifts[q], alpha, beta_k[j], beta_next, &scratch_v);
+                    if (st.phi_bar.abs() / beta1[j]) < opts.tol {
+                        st.done = true;
+                    }
+                }
+                all_done &= st.done;
+            }
+            if all_done || beta_next < 1e-13 * alpha.abs().max(1.0) {
+                col_done[j] = true;
+                continue;
+            }
+            for i in 0..n {
+                v_prev[(i, j)] = v[(i, j)];
+                v[(i, j)] = w[(i, j)] / beta_next;
+            }
+            beta_k[j] = beta_next;
+        }
+    }
+
+    let mut max_res = 0.0f64;
+    for per_shift in &states {
+        for (j, st) in per_shift.iter().enumerate() {
+            if beta1[j] > 0.0 {
+                max_res = max_res.max(st.phi_bar.abs() / beta1[j]);
+            }
+        }
+    }
+    let residuals = vec![max_res; shifts.len()];
+    let solutions: Vec<Matrix> = states
+        .into_iter()
+        .map(|per_shift| {
+            let mut m = Matrix::zeros(n, r);
+            for (j, st) in per_shift.into_iter().enumerate() {
+                for i in 0..n {
+                    m[(i, j)] = st.x[i];
+                }
+            }
+            m
+        })
+        .collect();
+    (solutions, col_iters, residuals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Matrix};
+    use crate::operators::DenseOp;
+    use crate::rng::Pcg64;
+    use crate::util::rel_err;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64 * 0.1;
+        }
+        k
+    }
+
+    #[test]
+    fn solves_all_shifts() {
+        let n = 50;
+        let k = random_spd(n, 1);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shifts = [0.0, 0.1, 1.0, 10.0, 100.0];
+        let opts = MsMinresOptions { max_iters: 200, tol: 1e-10, weights: None };
+        let res = msminres(&op, &b, &shifts, &opts);
+        assert!(res.converged);
+        for (q, &t) in shifts.iter().enumerate() {
+            let mut kt = k.clone();
+            for i in 0..n {
+                kt[(i, i)] += t;
+            }
+            let exact = Cholesky::new(&kt).unwrap().solve(&b);
+            let err = rel_err(&res.solutions[q], &exact);
+            assert!(err < 1e-7, "shift {t}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn one_mvm_per_iteration_counts() {
+        // iteration count should be far below N for well-conditioned K
+        let n = 120;
+        let mut k = Matrix::eye(n);
+        for i in 0..n {
+            k[(i, i)] = 1.0 + 0.1 * (i as f64 / n as f64); // kappa ≈ 1.1
+        }
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(3);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let res = msminres(&op, &b, &[0.0, 1.0], &MsMinresOptions::default());
+        assert!(res.converged);
+        assert!(res.iterations < 25, "iterations {}", res.iterations);
+    }
+
+    #[test]
+    fn higher_shifts_converge_faster() {
+        let n = 60;
+        let k = random_spd(n, 4);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(5);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = MsMinresOptions { max_iters: 30, tol: 1e-14, weights: None };
+        let res = msminres(&op, &b, &[0.0, 50.0], &opts);
+        assert!(
+            res.residuals[1] <= res.residuals[0] + 1e-12,
+            "shifted residual {} should be <= unshifted {}",
+            res.residuals[1],
+            res.residuals[0]
+        );
+    }
+
+    #[test]
+    fn residual_tracker_matches_true_residual() {
+        let n = 40;
+        let k = random_spd(n, 6);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(7);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = MsMinresOptions { max_iters: 17, tol: 1e-30, weights: None };
+        let res = msminres(&op, &b, &[0.5], &opts);
+        let mut kt = k.clone();
+        for i in 0..n {
+            kt[(i, i)] += 0.5;
+        }
+        let r_true = {
+            let kx = kt.matvec(&res.solutions[0]);
+            let diff: Vec<f64> = kx.iter().zip(&b).map(|(a, c)| a - c).collect();
+            crate::util::norm2(&diff) / crate::util::norm2(&b)
+        };
+        assert!(
+            (res.residuals[0] - r_true).abs() < 1e-8 * (1.0 + r_true),
+            "tracked {} vs true {r_true}",
+            res.residuals[0]
+        );
+    }
+
+    #[test]
+    fn block_version_matches_single() {
+        let n = 35;
+        let k = random_spd(n, 8);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(9);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let shifts = [0.1, 2.0];
+        let opts = MsMinresOptions { max_iters: 150, tol: 1e-10, weights: None };
+        let (sols, iters, _res) = msminres_block(&op, &b, &shifts, &opts);
+        for j in 0..3 {
+            let col = b.col(j);
+            let single = msminres(&op, &col, &shifts, &opts);
+            for q in 0..2 {
+                let blocked = sols[q].col(j);
+                let err = rel_err(&blocked, &single.solutions[q]);
+                assert!(err < 1e-8, "col {j} shift {q}: {err}");
+            }
+        }
+        assert!(iters.iter().all(|&it| it > 0));
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let op = DenseOp::new(Matrix::eye(10));
+        let res = msminres(&op, &vec![0.0; 10], &[0.0, 1.0], &MsMinresOptions::default());
+        assert!(res.converged);
+        assert_eq!(res.iterations, 0);
+        assert!(res.solutions[0].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn property_msminres_equals_minres_per_shift() {
+        crate::util::proptest::check_default("msminres == per-shift solves", |rng, _| {
+            let n = 12 + rng.below(10);
+            let a = Matrix::randn(n, n, rng);
+            let mut k = a.matmul(&a.transpose());
+            for i in 0..n {
+                k[(i, i)] += n as f64;
+            }
+            let op = DenseOp::new(k.clone());
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let shifts = [rng.uniform() * 5.0, 10.0 + rng.uniform() * 50.0];
+            let opts = MsMinresOptions { max_iters: 300, tol: 1e-11, weights: None };
+            let multi = msminres(&op, &b, &shifts, &opts);
+            for (q, &t) in shifts.iter().enumerate() {
+                let mut kt = k.clone();
+                for i in 0..n {
+                    kt[(i, i)] += t;
+                }
+                let exact = Cholesky::new(&kt).unwrap().solve(&b);
+                let err = rel_err(&multi.solutions[q], &exact);
+                crate::prop_assert!(err < 1e-6, "shift {t}: err {err}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,230 @@
+//! Cholesky factorization `K = L Lᵀ` and triangular solves.
+//!
+//! This is the `O(N³)` baseline the paper compares against (Sec. 2):
+//! `L ε` draws samples from `N(0, K)` and `L^{-1} b` whitens `b`, each
+//! equivalent to `K^{±1/2} b` up to an orthonormal rotation.
+
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor `K = L Lᵀ`. Fails if `K` is not (numerically) positive definite.
+    pub fn new(k: &Matrix) -> Result<Cholesky> {
+        Self::with_jitter(k, 0.0)
+    }
+
+    /// Factor `K + jitter·I = L Lᵀ` (jitter emulates the diagonal fudge the
+    /// baseline implementations need for ill-conditioned kernels).
+    pub fn with_jitter(k: &Matrix, jitter: f64) -> Result<Cholesky> {
+        let n = k.rows();
+        if k.cols() != n {
+            return Err(Error::Shape(format!("cholesky needs square, got {}x{}", n, k.cols())));
+        }
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            // diagonal
+            let mut d = k[(j, j)] + jitter;
+            for p in 0..j {
+                d -= l[(j, p)] * l[(j, p)];
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "cholesky failed at pivot {j}: d={d} (matrix not PD?)"
+                )));
+            }
+            let dj = d.sqrt();
+            l[(j, j)] = dj;
+            // column below the diagonal — row-major friendly ordering
+            for i in (j + 1)..n {
+                let mut s = k[(i, j)] + if i == j { jitter } else { 0.0 };
+                let (ri, rj) = (i * n, j * n);
+                let li = &l.as_slice()[ri..ri + j];
+                let lj = &l.as_slice()[rj..rj + j];
+                for p in 0..j {
+                    s -= li[p] * lj[p];
+                }
+                l[(i, j)] = s / dj;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// `log |K| = 2 Σ log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Forward substitution: solve `L y = b`.
+    pub fn solve_l(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            for p in 0..i {
+                s -= row[p] * y[p];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Back substitution: solve `Lᵀ x = b`.
+    pub fn solve_lt(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for p in (i + 1)..n {
+                s -= self.l[(p, i)] * x[p];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Full solve `K x = b` via `L Lᵀ x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_lt(&self.solve_l(b))
+    }
+
+    /// Sampling map: `L b` ~ `K^{1/2} b` up to rotation.
+    pub fn sample_mvm(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = 0.0;
+            for p in 0..=i {
+                s += row[p] * b[p];
+            }
+            out[i] = s;
+        }
+        out
+    }
+
+    /// Whitening map: `L^{-1} b` ~ `K^{-1/2} b` up to rotation.
+    pub fn whiten_mvm(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_l(b)
+    }
+
+    /// Solve against many right-hand sides (columns of `B`).
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        let a = Matrix::randn(n, n, rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64;
+        }
+        k
+    }
+
+    #[test]
+    fn reconstructs_k() {
+        let mut rng = Pcg64::seeded(1);
+        let k = random_spd(20, &mut rng);
+        let ch = Cholesky::new(&k).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose());
+        assert!(rec.max_abs_diff(&k) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_identity() {
+        let mut rng = Pcg64::seeded(2);
+        let k = random_spd(25, &mut rng);
+        let ch = Cholesky::new(&k).unwrap();
+        let b: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+        let x = ch.solve(&b);
+        let kb = k.matvec(&x);
+        for (a, b) in kb.iter().zip(&b) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn whiten_then_sample_roundtrip() {
+        let mut rng = Pcg64::seeded(3);
+        let k = random_spd(15, &mut rng);
+        let ch = Cholesky::new(&k).unwrap();
+        let b: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let w = ch.whiten_mvm(&b);
+        let s = ch.sample_mvm(&w);
+        for (a, b) in s.iter().zip(&b) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_eig_free_check() {
+        // For K = c I, logdet = n log c.
+        let n = 10;
+        let mut k = Matrix::eye(n);
+        k.scale(3.0);
+        let ch = Cholesky::new(&k).unwrap();
+        assert!((ch.logdet() - n as f64 * 3.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut k = Matrix::eye(3);
+        k[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&k).is_err());
+    }
+
+    #[test]
+    fn whitened_covariance_is_identityish() {
+        // cov(L^{-1} K L^{-T}) = I exactly: check L^{-1} K L^{-T} = I.
+        let mut rng = Pcg64::seeded(4);
+        let k = random_spd(12, &mut rng);
+        let ch = Cholesky::new(&k).unwrap();
+        // compute L^{-1} K L^{-T} column by column
+        for j in 0..12 {
+            let mut e = vec![0.0; 12];
+            e[j] = 1.0;
+            let col = ch.solve_lt(&e); // L^{-T} e_j
+            let kcol = k.matvec(&col);
+            let out = ch.solve_l(&kcol);
+            for (i, &v) in out.iter().enumerate() {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-8);
+            }
+        }
+    }
+}

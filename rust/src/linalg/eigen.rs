@@ -1,0 +1,426 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (`tred2`)
+//! followed by implicit-QL with shifts (`tql2`), ported from the classic
+//! EISPACK routines.
+//!
+//! Used for (i) the *exact* `f(K)` oracle in tests (`spd_sqrt` /
+//! `spd_inv_sqrt`), (ii) eigenvalues of the Lanczos tridiagonal matrix when
+//! estimating `λ_min`, `λ_max` (Appx. B.2 of the paper), and (iii) the
+//! randomized-SVD baseline.
+
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Eigendecomposition `A = V diag(d) Vᵀ` of a symmetric matrix.
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns of `V`.
+    pub vectors: Matrix,
+}
+
+/// Full symmetric eigendecomposition.
+pub fn sym_eig(a: &Matrix) -> Result<SymEig> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape("sym_eig needs square".into()));
+    }
+    // Copy; v will be overwritten with the accumulated transformations.
+    let mut v = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e)?;
+    // sort ascending, permuting eigenvector columns
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    Ok(SymEig { values, vectors })
+}
+
+/// Eigenvalues of a symmetric tridiagonal matrix with diagonal `diag` and
+/// off-diagonal `off` (`off.len() == diag.len() - 1`). Ascending order.
+pub fn tridiag_eigenvalues(diag: &[f64], off: &[f64]) -> Result<Vec<f64>> {
+    let n = diag.len();
+    assert!(off.len() + 1 == n || (n == 0 && off.is_empty()));
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let mut d = diag.to_vec();
+    let mut e = vec![0.0; n];
+    e[1..n].copy_from_slice(off); // EISPACK convention: sub-diagonal in e[1..]
+    tql_values(&mut d, &mut e)?;
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(d)
+}
+
+/// Apply `f` to an SPD matrix through its eigendecomposition: `V f(d) Vᵀ`.
+pub fn spd_matrix_function(a: &Matrix, f: impl Fn(f64) -> f64) -> Result<Matrix> {
+    let eig = sym_eig(a)?;
+    let n = a.rows();
+    let mut scaled = eig.vectors.clone();
+    for j in 0..n {
+        let fj = f(eig.values[j]);
+        for i in 0..n {
+            scaled[(i, j)] *= fj;
+        }
+    }
+    Ok(scaled.matmul(&eig.vectors.transpose()))
+}
+
+/// Exact principal square root `K^{1/2}` (test oracle).
+pub fn spd_sqrt(a: &Matrix) -> Result<Matrix> {
+    spd_matrix_function(a, |x| x.max(0.0).sqrt())
+}
+
+/// Exact inverse square root `K^{-1/2}` (test oracle).
+pub fn spd_inv_sqrt(a: &Matrix) -> Result<Matrix> {
+    spd_matrix_function(a, |x| 1.0 / x.max(1e-300).sqrt())
+}
+
+/// Householder reduction of `v` (symmetric) to tridiagonal form.
+/// On exit `d` holds the diagonal, `e[1..]` the sub-diagonal, and `v` the
+/// accumulated orthogonal transformation. (EISPACK `tred2`.)
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+    for i in (1..n).rev() {
+        // accumulate Householder vectors
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for item in d.iter().take(i) {
+            scale += item.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            for item in d.iter_mut().take(i) {
+                *item /= scale;
+                h += *item * *item;
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for item in e.iter_mut().take(i) {
+                *item = 0.0;
+            }
+            for j in 0..i {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..i {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    v[(k, j)] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // accumulate transformations
+    for i in 0..n - 1 {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    v[(k, j)] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-QL with eigenvector accumulation (EISPACK `tql2`).
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                if iter > 50 {
+                    return Err(Error::Numerical("tql2: too many iterations".into()));
+                }
+                // implicit shift
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for item in d.iter_mut().take(n).skip(l + 2) {
+                    *item -= h;
+                }
+                f += h;
+                // QL sweep
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // accumulate eigenvectors
+                    for k in 0..n {
+                        h = v[(k, i + 1)];
+                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
+                        v[(k, i)] = c * v[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+    Ok(())
+}
+
+/// Eigenvalues-only implicit QL (no eigenvector accumulation) — cheap path
+/// for the small Lanczos tridiagonal matrices.
+fn tql_values(d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                if iter > 50 {
+                    return Err(Error::Numerical("tql: too many iterations".into()));
+                }
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for item in d.iter_mut().take(n).skip(l + 2) {
+                    *item -= h;
+                }
+                f += h;
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_sym(n: usize, rng: &mut Pcg64) -> Matrix {
+        let mut a = Matrix::randn(n, n, rng);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        let a = random_sym(18, &mut rng);
+        let eig = sym_eig(&a).unwrap();
+        // A V = V diag(d)
+        for j in 0..18 {
+            let vj = eig.vectors.col(j);
+            let av = a.matvec(&vj);
+            for i in 0..18 {
+                assert!(
+                    (av[i] - eig.values[j] * vj[i]).abs() < 1e-8,
+                    "eigpair {j} residual too large"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Pcg64::seeded(2);
+        let a = random_sym(15, &mut rng);
+        let eig = sym_eig(&a).unwrap();
+        let vtv = eig.vectors.t_matmul(&eig.vectors);
+        assert!(vtv.max_abs_diff(&Matrix::eye(15)) < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Pcg64::seeded(3);
+        let b = Matrix::randn(12, 12, &mut rng);
+        let mut k = b.matmul(&b.transpose());
+        for i in 0..12 {
+            k[(i, i)] += 12.0;
+        }
+        let s = spd_sqrt(&k).unwrap();
+        let rec = s.matmul(&s);
+        assert!(rec.max_abs_diff(&k) < 1e-7);
+        let si = spd_inv_sqrt(&k).unwrap();
+        let ident = s.matmul(&si);
+        assert!(ident.max_abs_diff(&Matrix::eye(12)) < 1e-7);
+    }
+
+    #[test]
+    fn tridiag_matches_dense() {
+        let diag = [2.0, 3.0, 4.0, 5.0];
+        let off = [1.0, 0.5, 0.25];
+        let n = diag.len();
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = diag[i];
+        }
+        for i in 0..n - 1 {
+            a[(i, i + 1)] = off[i];
+            a[(i + 1, i)] = off[i];
+        }
+        let ev1 = tridiag_eigenvalues(&diag, &off).unwrap();
+        let ev2 = sym_eig(&a).unwrap().values;
+        for (x, y) in ev1.iter().zip(&ev2) {
+            assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let eig = sym_eig(&a).unwrap();
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 3.0).abs() < 1e-12);
+    }
+}

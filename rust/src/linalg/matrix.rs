@@ -1,0 +1,344 @@
+//! Row-major dense matrix with blocked, threaded matrix multiply.
+
+use crate::rng::Pcg64;
+use crate::util::threadpool::parallel_fill;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from an owned row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Matrix of iid standard normals.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Matrix {
+        Matrix { rows, cols, data: (0..rows * cols).map(|_| rng.normal()).collect() }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable row-major backing slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` (copied).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self * v` (matrix–vector).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols, "matvec dim mismatch");
+        let mut out = vec![0.0; self.rows];
+        parallel_fill(&mut out, 256, |start, block| {
+            for (k, o) in block.iter_mut().enumerate() {
+                let row = self.row(start + k);
+                let mut acc = 0.0;
+                for (a, b) in row.iter().zip(v) {
+                    acc += a * b;
+                }
+                *o = acc;
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ * v`.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let vi = v[i];
+            for (o, a) in out.iter_mut().zip(row) {
+                *o += vi * a;
+            }
+        }
+        out
+    }
+
+    /// Blocked, threaded GEMM: `self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        // Parallelize over row blocks of the output; inner loops in ikj order
+        // so the innermost loop streams both `other` and `out` rows.
+        let data_out = out.as_mut_slice();
+        parallel_fill(data_out, 64 * n.max(1), |start_flat, block| {
+            let row0 = start_flat / n;
+            let nrows = block.len() / n;
+            for bi in 0..nrows {
+                let i = row0 + bi;
+                let arow = self.row(i);
+                let orow = &mut block[bi * n..(bi + 1) * n];
+                for p in 0..k {
+                    let a = arow[p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = other.row(p);
+                    for (o, b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ * other` without forming the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul dim mismatch");
+        let (m, n) = (self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for p in 0..self.rows {
+            let arow = self.row(p);
+            let brow = other.row(p);
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry| difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Symmetrize in place: `(A + Aᵀ)/2`.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let avg = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = avg;
+                self[(j, i)] = avg;
+            }
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mul for &Matrix {
+    type Output = Matrix;
+    fn mul(self, rhs: &Matrix) -> Matrix {
+        self.matmul(rhs)
+    }
+}
+
+impl Add for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl Sub for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Matrix::randn(17, 23, &mut rng);
+        let b = Matrix::randn(23, 11, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..17 {
+            for j in 0..11 {
+                let mut s = 0.0;
+                for p in 0..23 {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose_matmul() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Matrix::randn(9, 5, &mut rng);
+        let b = Matrix::randn(9, 7, &mut rng);
+        let c1 = a.t_matmul(&b);
+        let c2 = a.transpose().matmul(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::randn(30, 14, &mut rng);
+        let v: Vec<f64> = (0..14).map(|_| rng.normal()).collect();
+        let y = a.matvec(&v);
+        let vm = Matrix::from_vec(14, 1, v.clone());
+        let y2 = a.matmul(&vm);
+        for i in 0..30 {
+            assert!((y[i] - y2[(i, 0)]).abs() < 1e-12);
+        }
+        let w: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let z = a.matvec_t(&w);
+        let z2 = a.transpose().matvec(&w);
+        for j in 0..14 {
+            assert!((z[j] - z2[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = Matrix::eye(5);
+        let mut rng = Pcg64::seeded(4);
+        let a = Matrix::randn(5, 5, &mut rng);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-15);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::randn(4, 4, &mut rng);
+        let b = Matrix::randn(4, 4, &mut rng);
+        let c = &(&a + &b) - &b;
+        assert!(c.max_abs_diff(&a) < 1e-12);
+        let mut d = a.clone();
+        d.scale(2.0);
+        assert!((&d - &a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn symmetrize_produces_symmetric() {
+        let mut rng = Pcg64::seeded(6);
+        let mut a = Matrix::randn(6, 6, &mut rng);
+        a.symmetrize();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(a[(i, j)], a[(j, i)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! `ciq` — leader binary: CLI over the whole stack.
+//!
+//! Subcommands:
+//! * `sample`  — draw `K^{1/2} ε` samples from a kernel operator (CIQ vs Cholesky)
+//! * `whiten`  — whiten a random vector, report residual + iterations
+//! * `serve`   — run the batching sampling service on synthetic traffic
+//! * `svgp`    — train an SVGP on a synthetic dataset
+//! * `bo`      — run Thompson-sampling Bayesian optimization
+//! * `gibbs`   — image super-resolution Gibbs sampler
+//! * `artifacts` — list + smoke-run the AOT artifacts through PJRT
+
+use ciq::bo::{lander::Lander, run_bo, testfns::Hartmann6, BoConfig, Problem, Sampler};
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::data;
+use ciq::gibbs::{reconstruct, write_pgm, GibbsConfig};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType};
+use ciq::rng::Pcg64;
+use ciq::runtime::{artifacts_dir, discover_artifacts, Runtime, XlaCiq};
+use ciq::svgp::{train, evaluate, Backend, Gaussian, Svgp, SvgpHyper};
+use ciq::util::cli::Args;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn kernel_of(name: &str) -> KernelType {
+    match name {
+        "rbf" => KernelType::Rbf,
+        "matern12" => KernelType::Matern12,
+        "matern32" => KernelType::Matern32,
+        _ => KernelType::Matern52,
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "sample" | "whiten" => cmd_sample(&args, cmd == "whiten"),
+        "serve" => cmd_serve(&args),
+        "svgp" => cmd_svgp(&args),
+        "bo" => cmd_bo(&args),
+        "gibbs" => cmd_gibbs(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            println!(
+                "usage: ciq <sample|whiten|serve|svgp|bo|gibbs|artifacts> [--n N] [--q Q] [--tol T] ...\n\
+                 see README.md for the full flag list"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_sample(args: &Args, whiten: bool) -> ciq::Result<()> {
+    let n = args.get_or("n", 2000usize);
+    let d = args.get_or("d", 3usize);
+    let seed = args.get_or("seed", 0u64);
+    let kind = kernel_of(args.get("kernel").unwrap_or("rbf"));
+    let mut rng = Pcg64::seeded(seed);
+    let x = Matrix::randn(n, d, &mut rng);
+    let op = KernelOp::new(&x, kind, args.get_or("ell", 1.0), args.get_or("s2", 1.0), args.get_or("noise", 1e-2));
+    let solver = Ciq::new(CiqOptions {
+        q_points: args.get_or("q", 8usize),
+        tol: args.get_or("tol", 1e-4),
+        max_iters: args.get_or("max-iters", 400usize),
+        ..Default::default()
+    });
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let (res, secs) = ciq::util::timed(|| {
+        if whiten {
+            solver.invsqrt_mvm(&op, &b)
+        } else {
+            solver.sqrt_mvm(&op, &b)
+        }
+    });
+    let res = res?;
+    println!(
+        "{} n={n} kernel={kind:?}: iters={} residual={:.2e} kappa≈{:.1e} time={secs:.3}s",
+        if whiten { "whiten" } else { "sample" },
+        res.iterations,
+        res.residual,
+        res.bounds.kappa()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> ciq::Result<()> {
+    let n = args.get_or("n", 1000usize);
+    let requests = args.get_or("requests", 64usize);
+    let mut rng = Pcg64::seeded(args.get_or("seed", 0u64));
+    let x = Matrix::randn(n, 2, &mut rng);
+    let op: SharedOp = Arc::new(KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-2));
+    let mut ops = HashMap::new();
+    ops.insert("default".to_string(), op);
+    let svc = SamplingService::start(
+        ServiceConfig {
+            max_batch: args.get_or("max-batch", 16usize),
+            workers: args.get_or("workers", 2usize),
+            ..Default::default()
+        },
+        ops,
+    );
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            svc.submit("default", if i % 2 == 0 { ReqKind::Sample } else { ReqKind::Whiten }, b)
+        })
+        .collect();
+    for t in tickets {
+        t.wait()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("served {requests} requests on n={n} in {dt:.2}s ({:.1} req/s)", requests as f64 / dt);
+    println!("metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_svgp(args: &Args) -> ciq::Result<()> {
+    let n = args.get_or("n", 2000usize);
+    let m = args.get_or("m", 128usize);
+    let steps = args.get_or("steps", 60usize);
+    let backend = if args.get("backend") == Some("cholesky") {
+        Backend::Cholesky
+    } else {
+        Backend::Ciq(CiqOptions { tol: 1e-3, max_iters: 200, ..Default::default() })
+    };
+    let ds = data::gaussian_regression(n, 2, 0.1, args.get_or("seed", 0u64));
+    let mut rng = Pcg64::seeded(1);
+    let (train_set, test_set) = ds.split(0.8, &mut rng);
+    let z = train_set.kmeans_centers(m, 6, &mut rng);
+    let mut model = Svgp::new(z, KernelType::Rbf, SvgpHyper::default(), Box::new(Gaussian { noise: 0.05 }), backend);
+    let stats = train(&mut model, &train_set, steps, args.get_or("batch", 128usize), 0.5, 0.02, &mut rng)?;
+    let metrics = evaluate(&mut model, &test_set)?;
+    println!(
+        "svgp n={} m={m} steps={steps}: NLL={:.4} RMSE={:.4} time={:.1}s ({:.0}ms/step)",
+        train_set.len(),
+        metrics.nll,
+        metrics.error,
+        stats.seconds,
+        1000.0 * stats.seconds / steps as f64
+    );
+    if !model.iteration_log.is_empty() {
+        println!(
+            "msMINRES iterations: mean={:.1} max={}",
+            ciq::util::mean(&model.iteration_log.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            model.iteration_log.iter().max().unwrap()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bo(args: &Args) -> ciq::Result<()> {
+    let problem_name = args.get("problem").unwrap_or("hartmann6");
+    let sampler = match args.get("sampler").unwrap_or("ciq") {
+        "cholesky" => Sampler::Cholesky,
+        "rff" => Sampler::Rff,
+        _ => Sampler::Ciq,
+    };
+    let cfg = BoConfig {
+        candidates: args.get_or("candidates", 2000usize),
+        evaluations: args.get_or("evals", 60usize),
+        sampler,
+        ..Default::default()
+    };
+    let hart = Hartmann6;
+    let lander = Lander::default();
+    let problem: &dyn Problem = if problem_name == "lander" { &lander } else { &hart };
+    let trace = run_bo(problem, &cfg, args.get_or("seed", 0u64))?;
+    println!(
+        "bo {problem_name} sampler={sampler:?} T={}: best={:.4}{}",
+        cfg.candidates,
+        trace.best(),
+        problem
+            .optimum()
+            .map(|o| format!(" regret={:.4}", trace.best() - o))
+            .unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn cmd_gibbs(args: &Args) -> ciq::Result<()> {
+    let cfg = GibbsConfig {
+        n: args.get_or("n", 48usize),
+        samples: args.get_or("samples", 60usize),
+        burn_in: args.get_or("burn-in", 20usize),
+        ..Default::default()
+    };
+    let res = reconstruct(&cfg, args.get_or("seed", 0u64))?;
+    println!(
+        "gibbs {}x{} ({} dims): rmse={:.4} {:.2} samples/s mean_ciq_iters={:.0}",
+        cfg.n,
+        cfg.n,
+        cfg.n * cfg.n,
+        res.rmse,
+        1.0 / res.seconds_per_sample.max(1e-9),
+        res.mean_ciq_iters
+    );
+    if let Some(out) = args.get("out") {
+        write_pgm(std::path::Path::new(out), &res.reconstruction, cfg.n)
+            .map_err(|e| ciq::Error::Runtime(format!("write pgm: {e}")))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> ciq::Result<()> {
+    let dir = artifacts_dir();
+    let metas = discover_artifacts(&dir);
+    if metas.is_empty() {
+        println!("no artifacts in {} — run `make artifacts`", dir.display());
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    for meta in &metas {
+        print!("{} ... ", meta.path.file_name().unwrap().to_string_lossy());
+        let exe = rt.load(meta)?;
+        if meta.kind == "ciq_sqrt" && args.has("run") {
+            let mut rng = Pcg64::seeded(3);
+            let x = Matrix::randn(meta.n, meta.d, &mut rng);
+            let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 0.5);
+            let solver = Ciq::new(CiqOptions { q_points: meta.q, ..Default::default() });
+            let (rule, _) = solver.rule(&op, None)?;
+            let b: Vec<f64> = (0..meta.n).map(|_| rng.normal()).collect();
+            let xc = XlaCiq::new(&rt, exe)?;
+            let out = xc.run(&x, 1.0, 1.0, 0.5, &b, &rule.shifts, &rule.weights)?;
+            println!("ok (residual {:.1e})", out.residual);
+        } else {
+            println!("compiled ok");
+        }
+    }
+    Ok(())
+}

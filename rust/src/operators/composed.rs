@@ -1,0 +1,308 @@
+//! Operator combinators: shifts, scaling, sums, diagonals, low-rank updates.
+
+use super::LinearOp;
+use crate::linalg::Matrix;
+
+/// `K + t I` — the shifted systems at the heart of msMINRES-CIQ.
+pub struct ShiftedOp<'a, T: LinearOp + ?Sized> {
+    inner: &'a T,
+    shift: f64,
+}
+
+impl<'a, T: LinearOp + ?Sized> ShiftedOp<'a, T> {
+    /// Wrap `inner + shift·I`.
+    pub fn new(inner: &'a T, shift: f64) -> Self {
+        ShiftedOp { inner, shift }
+    }
+}
+
+impl<T: LinearOp + ?Sized> LinearOp for ShiftedOp<'_, T> {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.inner.matvec(x);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.shift * xi;
+        }
+        y
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        let mut d = self.inner.diagonal();
+        for di in &mut d {
+            *di += self.shift;
+        }
+        d
+    }
+    fn lambda_min_bound(&self) -> Option<f64> {
+        self.inner.lambda_min_bound().map(|b| b + self.shift)
+    }
+}
+
+/// `c · K`.
+pub struct ScaledOp<'a, T: LinearOp + ?Sized> {
+    inner: &'a T,
+    scale: f64,
+}
+
+impl<'a, T: LinearOp + ?Sized> ScaledOp<'a, T> {
+    /// Wrap `scale · inner`.
+    pub fn new(inner: &'a T, scale: f64) -> Self {
+        ScaledOp { inner, scale }
+    }
+}
+
+impl<T: LinearOp + ?Sized> LinearOp for ScaledOp<'_, T> {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.inner.matvec(x);
+        for yi in &mut y {
+            *yi *= self.scale;
+        }
+        y
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        self.inner.diagonal().into_iter().map(|d| d * self.scale).collect()
+    }
+}
+
+/// `A + B` of two operators of equal size.
+pub struct SumOp<'a> {
+    a: &'a dyn LinearOp,
+    b: &'a dyn LinearOp,
+    wa: f64,
+    wb: f64,
+}
+
+impl<'a> SumOp<'a> {
+    /// `wa·A + wb·B`.
+    pub fn new(a: &'a dyn LinearOp, wa: f64, b: &'a dyn LinearOp, wb: f64) -> Self {
+        assert_eq!(a.size(), b.size(), "SumOp size mismatch");
+        SumOp { a, b, wa, wb }
+    }
+}
+
+impl LinearOp for SumOp<'_> {
+    fn size(&self) -> usize {
+        self.a.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let ya = self.a.matvec(x);
+        let yb = self.b.matvec(x);
+        ya.iter().zip(&yb).map(|(p, q)| self.wa * p + self.wb * q).collect()
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        let da = self.a.diagonal();
+        let db = self.b.diagonal();
+        da.iter().zip(&db).map(|(p, q)| self.wa * p + self.wb * q).collect()
+    }
+}
+
+/// Diagonal operator.
+pub struct DiagOp {
+    d: Vec<f64>,
+}
+
+impl DiagOp {
+    /// Wrap a diagonal.
+    pub fn new(d: Vec<f64>) -> DiagOp {
+        DiagOp { d }
+    }
+}
+
+impl LinearOp for DiagOp {
+    fn size(&self) -> usize {
+        self.d.len()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.d.iter().zip(x).map(|(d, x)| d * x).collect()
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        self.d.clone()
+    }
+}
+
+/// `L Lᵀ + σ² I` for a tall-skinny `L` (`n × r`) — the pivoted-Cholesky
+/// preconditioner's shape. MVM is `O(nr)`.
+pub struct LowRankPlusDiagOp {
+    l: Matrix,
+    sigma2: f64,
+}
+
+impl LowRankPlusDiagOp {
+    /// Wrap `L Lᵀ + σ² I`.
+    pub fn new(l: Matrix, sigma2: f64) -> Self {
+        assert!(sigma2 >= 0.0);
+        LowRankPlusDiagOp { l, sigma2 }
+    }
+
+    /// The low-rank factor.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// σ².
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2
+    }
+}
+
+impl LinearOp for LowRankPlusDiagOp {
+    fn size(&self) -> usize {
+        self.l.rows()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let lt_x = self.l.matvec_t(x);
+        let mut y = self.l.matvec(&lt_x);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.sigma2 * xi;
+        }
+        y
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.size())
+            .map(|i| self.l.row(i).iter().map(|v| v * v).sum::<f64>() + self.sigma2)
+            .collect()
+    }
+}
+
+/// `A − W Wᵀ` for tall-skinny `W` — GP posterior covariance at candidate
+/// points: `K** − K*n (Knn+σ²)⁻¹ Kn*` with `W = K*n L⁻ᵀ`. MVM is
+/// `O(MVM(A) + n·r)`, memory `O(n·r)`.
+pub struct SubtractLowRankOp<'a> {
+    a: &'a dyn LinearOp,
+    w: Matrix,
+    lam_min: Option<f64>,
+}
+
+impl<'a> SubtractLowRankOp<'a> {
+    /// Wrap `A − W Wᵀ`. Caller guarantees positive (semi-)definiteness.
+    pub fn new(a: &'a dyn LinearOp, w: Matrix) -> Self {
+        assert_eq!(a.size(), w.rows(), "SubtractLowRankOp size mismatch");
+        SubtractLowRankOp { a, w, lam_min: None }
+    }
+
+    /// Declare a λ_min lower bound the *caller* can certify — e.g. for a GP
+    /// posterior covariance `(K** + jitter·I) − W Wᵀ` where `K** − W Wᵀ` is a
+    /// Schur complement (PSD), so λ_min ≥ jitter.
+    pub fn with_lambda_min_bound(mut self, bound: f64) -> Self {
+        self.lam_min = Some(bound);
+        self
+    }
+}
+
+impl LinearOp for SubtractLowRankOp<'_> {
+    fn size(&self) -> usize {
+        self.a.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.a.matvec(x);
+        let wt_x = self.w.matvec_t(x);
+        let wwt_x = self.w.matvec(&wt_x);
+        for (yi, wi) in y.iter_mut().zip(&wwt_x) {
+            *yi -= wi;
+        }
+        y
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        let da = self.a.diagonal();
+        (0..self.size())
+            .map(|i| da[i] - self.w.row(i).iter().map(|v| v * v).sum::<f64>())
+            .collect()
+    }
+    fn lambda_min_bound(&self) -> Option<f64> {
+        self.lam_min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::DenseOp;
+    use crate::rng::Pcg64;
+
+    fn sym(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let mut a = Matrix::randn(n, n, &mut rng);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn shifted_and_scaled() {
+        let a = sym(10, 1);
+        let op = DenseOp::new(a.clone());
+        let sh = ShiftedOp::new(&op, 2.5);
+        let mut rng = Pcg64::seeded(2);
+        let x: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let y = sh.matvec(&x);
+        let mut expect = a.matvec(&x);
+        for (e, xi) in expect.iter_mut().zip(&x) {
+            *e += 2.5 * xi;
+        }
+        for (u, v) in y.iter().zip(&expect) {
+            assert!((u - v).abs() < 1e-12);
+        }
+        let sc = ScaledOp::new(&op, -0.5);
+        let z = sc.matvec(&x);
+        let az = a.matvec(&x);
+        for (u, v) in z.iter().zip(&az) {
+            assert!((u + 0.5 * v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sum_and_diag_ops() {
+        let a = sym(8, 3);
+        let b = sym(8, 4);
+        let (oa, ob) = (DenseOp::new(a.clone()), DenseOp::new(b.clone()));
+        let s = SumOp::new(&oa, 2.0, &ob, 3.0);
+        let mut rng = Pcg64::seeded(5);
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let y = s.matvec(&x);
+        let ya = a.matvec(&x);
+        let yb = b.matvec(&x);
+        for i in 0..8 {
+            assert!((y[i] - (2.0 * ya[i] + 3.0 * yb[i])).abs() < 1e-12);
+        }
+        let d = DiagOp::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.matvec(&[1.0, 1.0, 1.0]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.diagonal(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn lowrank_plus_diag_matches_dense() {
+        let mut rng = Pcg64::seeded(6);
+        let l = Matrix::randn(12, 3, &mut rng);
+        let op = LowRankPlusDiagOp::new(l.clone(), 0.7);
+        let dense = {
+            let mut m = l.matmul(&l.transpose());
+            for i in 0..12 {
+                m[(i, i)] += 0.7;
+            }
+            m
+        };
+        assert!(op.to_dense().max_abs_diff(&dense) < 1e-12);
+        let d = op.diagonal();
+        for i in 0..12 {
+            assert!((d[i] - dense[(i, i)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subtract_lowrank_matches_dense() {
+        let mut rng = Pcg64::seeded(7);
+        let base = sym(10, 8);
+        let w = Matrix::randn(10, 2, &mut rng);
+        let op_base = DenseOp::new(base.clone());
+        let op = SubtractLowRankOp::new(&op_base, w.clone());
+        let dense = &base - &w.matmul(&w.transpose());
+        assert!(op.to_dense().max_abs_diff(&dense) < 1e-12);
+        let d = op.diagonal();
+        for i in 0..10 {
+            assert!((d[i] - dense[(i, i)]).abs() < 1e-12);
+        }
+    }
+}

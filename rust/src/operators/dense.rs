@@ -1,0 +1,71 @@
+//! Dense-matrix operator (testing and small-N baselines).
+
+use super::LinearOp;
+use crate::linalg::Matrix;
+
+/// Wrap an explicit symmetric matrix as a [`LinearOp`].
+pub struct DenseOp {
+    k: Matrix,
+}
+
+impl DenseOp {
+    /// Wrap `k` (must be square; symmetry is the caller's contract).
+    pub fn new(k: Matrix) -> DenseOp {
+        assert_eq!(k.rows(), k.cols(), "DenseOp needs square");
+        DenseOp { k }
+    }
+
+    /// Access the underlying matrix.
+    pub fn matrix(&self) -> &Matrix {
+        &self.k
+    }
+}
+
+impl LinearOp for DenseOp {
+    fn size(&self) -> usize {
+        self.k.rows()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.k.matvec(x)
+    }
+
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        self.k.matmul(x)
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.size()).map(|i| self.k[(i, i)]).collect()
+    }
+
+    fn column(&self, j: usize) -> Vec<f64> {
+        self.k.col(j)
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.k.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matvec_and_diag() {
+        let mut rng = Pcg64::seeded(1);
+        let mut a = Matrix::randn(8, 8, &mut rng);
+        a.symmetrize();
+        let op = DenseOp::new(a.clone());
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let y = op.matvec(&x);
+        let y2 = a.matvec(&x);
+        assert_eq!(y, y2);
+        let d = op.diagonal();
+        for i in 0..8 {
+            assert_eq!(d[i], a[(i, i)]);
+        }
+        assert!(op.to_dense().max_abs_diff(&a) < 1e-15);
+    }
+}

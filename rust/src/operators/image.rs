@@ -1,0 +1,354 @@
+//! Image-space linear operators for the Gibbs-sampling super-resolution
+//! experiment (Sec. 5.3): Gaussian blur `B`, decimation `D`, discrete
+//! Laplacian `L` (Eq. S26) — all with reflected (non-periodic) boundaries
+//! and exact adjoints — plus the posterior precision operator
+//! `Λ = γ_obs AᵀA + γ_prior LᵀL` with `A = D B` stacked over `R`
+//! low-resolution observations.
+
+use super::LinearOp;
+
+/// Small 2-D convolution with reflected boundaries and an exact adjoint.
+#[derive(Clone)]
+pub struct Conv2d {
+    /// image side length (operates on n×n images flattened row-major)
+    n: usize,
+    /// filter taps, row-major, `size × size` with odd `size`
+    taps: Vec<f64>,
+    size: usize,
+}
+
+/// Reflect index into `[0, n)` (non-periodic, edge-mirrored).
+#[inline]
+fn reflect(i: isize, n: usize) -> usize {
+    let n = n as isize;
+    let mut i = i;
+    // handles any |i| < 2n, which covers our small filters
+    if i < 0 {
+        i = -i - 1;
+    }
+    if i >= n {
+        i = 2 * n - 1 - i;
+    }
+    debug_assert!(i >= 0 && i < n);
+    i as usize
+}
+
+impl Conv2d {
+    /// Build from explicit taps (`size` odd).
+    pub fn new(n: usize, taps: Vec<f64>, size: usize) -> Conv2d {
+        assert_eq!(taps.len(), size * size);
+        assert!(size % 2 == 1);
+        Conv2d { n, taps, size }
+    }
+
+    /// Gaussian blur with std `sigma` pixels, truncated to `size` taps
+    /// (paper: radius 2.5, size 5), normalized to sum 1.
+    pub fn gaussian_blur(n: usize, sigma: f64, size: usize) -> Conv2d {
+        assert!(size % 2 == 1);
+        let half = (size / 2) as isize;
+        let mut taps = Vec::with_capacity(size * size);
+        for dy in -half..=half {
+            for dx in -half..=half {
+                let r2 = (dx * dx + dy * dy) as f64;
+                taps.push((-r2 / (2.0 * sigma * sigma)).exp());
+            }
+        }
+        let s: f64 = taps.iter().sum();
+        for t in &mut taps {
+            *t /= s;
+        }
+        Conv2d::new(n, taps, size)
+    }
+
+    /// Discrete isotropic Laplacian of Eq. (S26).
+    pub fn laplacian(n: usize) -> Conv2d {
+        let taps = vec![
+            1.0 / 12.0, 2.0 / 12.0, 1.0 / 12.0,
+            2.0 / 12.0, -12.0 / 12.0, 2.0 / 12.0,
+            1.0 / 12.0, 2.0 / 12.0, 1.0 / 12.0,
+        ];
+        Conv2d::new(n, taps, 3)
+    }
+
+    /// Image side length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Forward convolution (gather with reflected boundary).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(x.len(), n * n);
+        let half = (self.size / 2) as isize;
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                let mut t = 0;
+                for dy in -half..=half {
+                    let ii = reflect(i as isize + dy, n);
+                    for dx in -half..=half {
+                        let jj = reflect(j as isize + dx, n);
+                        acc += self.taps[t] * x[ii * n + jj];
+                        t += 1;
+                    }
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Exact adjoint (scatter with the same boundary handling).
+    pub fn apply_adjoint(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(y.len(), n * n);
+        let half = (self.size / 2) as isize;
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = y[i * n + j];
+                if v == 0.0 {
+                    continue;
+                }
+                let mut t = 0;
+                for dy in -half..=half {
+                    let ii = reflect(i as isize + dy, n);
+                    for dx in -half..=half {
+                        let jj = reflect(j as isize + dx, n);
+                        out[ii * n + jj] += self.taps[t] * v;
+                        t += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Block-average decimation from `n×n` down to `m×m` (`n = f·m`).
+#[derive(Clone)]
+pub struct Downsample {
+    n: usize,
+    m: usize,
+    f: usize,
+}
+
+impl Downsample {
+    /// Build an `n → n/factor` decimator.
+    pub fn new(n: usize, factor: usize) -> Downsample {
+        assert!(factor >= 1 && n % factor == 0, "n must be divisible by factor");
+        Downsample { n, m: n / factor, f: factor }
+    }
+
+    /// Low-res side length.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Forward: average each f×f block.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let (n, m, f) = (self.n, self.m, self.f);
+        assert_eq!(x.len(), n * n);
+        let norm = 1.0 / (f * f) as f64;
+        let mut out = vec![0.0; m * m];
+        for bi in 0..m {
+            for bj in 0..m {
+                let mut acc = 0.0;
+                for di in 0..f {
+                    let row = (bi * f + di) * n + bj * f;
+                    for dj in 0..f {
+                        acc += x[row + dj];
+                    }
+                }
+                out[bi * m + bj] = acc * norm;
+            }
+        }
+        out
+    }
+
+    /// Adjoint: spread each low-res value uniformly over its block.
+    pub fn apply_adjoint(&self, y: &[f64]) -> Vec<f64> {
+        let (n, m, f) = (self.n, self.m, self.f);
+        assert_eq!(y.len(), m * m);
+        let norm = 1.0 / (f * f) as f64;
+        let mut out = vec![0.0; n * n];
+        for bi in 0..m {
+            for bj in 0..m {
+                let v = y[bi * m + bj] * norm;
+                for di in 0..f {
+                    let row = (bi * f + di) * n + bj * f;
+                    for dj in 0..f {
+                        out[row + dj] += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Posterior precision `Λ = γ_obs · R · BᵀDᵀD B + γ_prior · LᵀL` of the
+/// super-resolution model (the `R` identical observation operators stack
+/// into a factor of `R` on the data term).
+pub struct PrecisionOp {
+    blur: Conv2d,
+    down: Downsample,
+    lap: Conv2d,
+    /// number of low-resolution observations R
+    pub r: usize,
+    /// observation precision γ_obs
+    pub gamma_obs: f64,
+    /// prior precision γ_prior
+    pub gamma_prior: f64,
+}
+
+impl PrecisionOp {
+    /// Build for an `n×n` latent image, decimation `factor`, `r` low-res
+    /// observations and hyperparameters `(γ_obs, γ_prior)`.
+    pub fn new(n: usize, factor: usize, r: usize, gamma_obs: f64, gamma_prior: f64) -> PrecisionOp {
+        PrecisionOp {
+            blur: Conv2d::gaussian_blur(n, 2.5, 5),
+            down: Downsample::new(n, factor),
+            lap: Conv2d::laplacian(n),
+            r,
+            gamma_obs,
+            gamma_prior,
+        }
+    }
+
+    /// Forward observation map `A x = D(B(x))` (one replicate).
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.down.apply(&self.blur.apply(x))
+    }
+
+    /// Adjoint observation map `Aᵀ y = Bᵀ(Dᵀ(y))` (one replicate).
+    pub fn adjoint(&self, y: &[f64]) -> Vec<f64> {
+        self.blur.apply_adjoint(&self.down.apply_adjoint(y))
+    }
+
+    /// `‖L x‖²` — the prior quadratic form used by the γ_prior conditional.
+    pub fn prior_quad(&self, x: &[f64]) -> f64 {
+        self.lap.apply(x).iter().map(|v| v * v).sum()
+    }
+
+    /// Access the blur operator.
+    pub fn blur(&self) -> &Conv2d {
+        &self.blur
+    }
+
+    /// Access the decimator.
+    pub fn down(&self) -> &Downsample {
+        &self.down
+    }
+}
+
+impl LinearOp for PrecisionOp {
+    fn size(&self) -> usize {
+        self.blur.n() * self.blur.n()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let data = self.adjoint(&self.forward(x));
+        let lap2 = self.lap.apply_adjoint(&self.lap.apply(x));
+        let c_obs = self.gamma_obs * self.r as f64;
+        data.iter()
+            .zip(&lap2)
+            .map(|(d, l)| c_obs * d + self.gamma_prior * l)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::dot;
+
+    #[test]
+    fn reflect_indexing() {
+        assert_eq!(reflect(-1, 5), 0);
+        assert_eq!(reflect(-2, 5), 1);
+        assert_eq!(reflect(0, 5), 0);
+        assert_eq!(reflect(4, 5), 4);
+        assert_eq!(reflect(5, 5), 4);
+        assert_eq!(reflect(6, 5), 3);
+    }
+
+    #[test]
+    fn blur_preserves_constants_and_mass() {
+        let n = 12;
+        let blur = Conv2d::gaussian_blur(n, 2.5, 5);
+        let ones = vec![1.0; n * n];
+        let out = blur.apply(&ones);
+        for &v in &out {
+            assert!((v - 1.0).abs() < 1e-12, "blur must preserve constants, got {v}");
+        }
+    }
+
+    #[test]
+    fn adjoint_is_true_adjoint() {
+        // <Ax, y> == <x, Aᵀy> for random x, y — for blur, laplacian, downsample
+        let n = 10;
+        let mut rng = Pcg64::seeded(1);
+        let x: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        for conv in [Conv2d::gaussian_blur(n, 2.5, 5), Conv2d::laplacian(n)] {
+            let y: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let lhs = dot(&conv.apply(&x), &y);
+            let rhs = dot(&x, &conv.apply_adjoint(&y));
+            assert!((lhs - rhs).abs() < 1e-10, "conv adjoint mismatch {lhs} vs {rhs}");
+        }
+        let ds = Downsample::new(n, 2);
+        let y: Vec<f64> = (0..(n / 2) * (n / 2)).map(|_| rng.normal()).collect();
+        let lhs = dot(&ds.apply(&x), &y);
+        let rhs = dot(&x, &ds.apply_adjoint(&y));
+        assert!((lhs - rhs).abs() < 1e-10, "downsample adjoint mismatch");
+    }
+
+    #[test]
+    fn laplacian_kills_constants() {
+        let n = 8;
+        let lap = Conv2d::laplacian(n);
+        let ones = vec![3.0; n * n];
+        let out = lap.apply(&ones);
+        for &v in &out {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn downsample_averages() {
+        let n = 4;
+        let ds = Downsample::new(n, 2);
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let y = ds.apply(&x);
+        // block (0,0): 0,1,4,5 -> 2.5
+        assert!((y[0] - 2.5).abs() < 1e-12);
+        assert!((y[1] - 4.5).abs() < 1e-12);
+        assert!((y[2] - 10.5).abs() < 1e-12);
+        assert!((y[3] - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precision_op_is_symmetric_psd() {
+        let n = 8;
+        let op = PrecisionOp::new(n, 2, 3, 1.0, 0.5);
+        let mut rng = Pcg64::seeded(2);
+        // symmetry: <Λx, y> == <x, Λy>
+        let x: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let lhs = dot(&op.matvec(&x), &y);
+        let rhs = dot(&x, &op.matvec(&y));
+        assert!((lhs - rhs).abs() < 1e-9 * lhs.abs().max(1.0));
+        // PSD: xᵀΛx >= 0
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let q = dot(&x, &op.matvec(&x));
+            assert!(q >= -1e-10, "quadratic form negative: {q}");
+        }
+        // strictly PD on constants thanks to the data term
+        let c = vec![1.0; n * n];
+        let q = dot(&c, &op.matvec(&c));
+        assert!(q > 1e-6);
+    }
+}

@@ -1,0 +1,375 @@
+//! Kernel-matrix operators with partitioned, O(N)-memory, threaded MVMs.
+//!
+//! `K_ij = s² ρ(‖(x_i − x_j)/ℓ‖) + σ² δ_ij` for RBF / Matérn-ν kernels.
+//! The MVM streams over row/column tiles: each tile of `K` is computed on
+//! the fly from the (lengthscale-scaled) data and immediately contracted
+//! against the right-hand sides, mirroring the paper's map-reduce MVMs
+//! (refs [11, 79]) and the Pallas kernel's HBM↔VMEM schedule at Layer 1.
+
+use super::LinearOp;
+use crate::linalg::Matrix;
+use crate::util::threadpool::parallel_fill;
+
+/// Kernel family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelType {
+    /// Squared-exponential `exp(-r²/2)`.
+    Rbf,
+    /// Matérn ν = 1/2: `exp(-r)`.
+    Matern12,
+    /// Matérn ν = 3/2: `(1+√3 r) exp(-√3 r)`.
+    Matern32,
+    /// Matérn ν = 5/2: `(1+√5 r+5r²/3) exp(-√5 r)`.
+    Matern52,
+}
+
+impl KernelType {
+    /// Correlation as a function of the scaled distance `r ≥ 0`.
+    ///
+    /// The MVM hot loop is exp-bound. We benchmarked a bit-twiddled
+    /// [`crate::util::fastmath::fast_exp`] here and *reverted* it: this
+    /// glibc's `exp` runs at ~6 ns/call and the approximation was 0.9–1.0×
+    /// (see EXPERIMENTS.md §Perf, iteration 2).
+    #[inline]
+    pub fn rho(&self, r: f64) -> f64 {
+        match self {
+            KernelType::Rbf => (-0.5 * r * r).exp(),
+            KernelType::Matern12 => (-r).exp(),
+            KernelType::Matern32 => {
+                let a = 3f64.sqrt() * r;
+                (1.0 + a) * (-a).exp()
+            }
+            KernelType::Matern52 => {
+                let a = 5f64.sqrt() * r;
+                (1.0 + a + a * a / 3.0) * (-a).exp()
+            }
+        }
+    }
+
+    /// `d ρ / d log ℓ` as a function of scaled distance `r` (note
+    /// `dr/d log ℓ = −r`), used for hyperparameter gradients.
+    #[inline]
+    pub fn drho_dlog_ell(&self, r: f64) -> f64 {
+        match self {
+            KernelType::Rbf => r * r * (-0.5 * r * r).exp(),
+            KernelType::Matern12 => r * (-r).exp(),
+            KernelType::Matern32 => {
+                let s = 3f64.sqrt();
+                s * r * s * r * (-s * r).exp()
+            }
+            KernelType::Matern52 => {
+                let s = 5f64.sqrt();
+                let a = s * r;
+                // dρ/dr = -(a/3)(1+a) e^{-a} · s ... computed analytically:
+                // ρ(r) = (1+a+a²/3)e^{-a}, dρ/da = (1/3)a(1+a)·(-e^{-a}) + ...
+                // dρ/da = -(a + a²)/3 · e^{-a} ... derive: d/da[(1+a+a²/3)e^{-a}]
+                //       = (1+2a/3)e^{-a} - (1+a+a²/3)e^{-a} = -(a/3)(1+a)e^{-a}
+                // dρ/dlogℓ = dρ/da · da/dlogℓ = -(a/3)(1+a)e^{-a} · (-a)
+                a * a / 3.0 * (1.0 + a) * (-a).exp()
+            }
+        }
+    }
+}
+
+/// Kernel matrix `K(X, X)` as a [`LinearOp`] with partitioned MVMs.
+pub struct KernelOp {
+    /// data scaled by 1/lengthscale, row-major `n × d`
+    xs: Matrix,
+    /// squared norms of scaled rows
+    sq: Vec<f64>,
+    kind: KernelType,
+    outputscale: f64,
+    /// diagonal noise σ² (added jitter / observation noise)
+    noise: f64,
+    /// row-tile size for the partitioned MVM (perf knob)
+    tile: usize,
+}
+
+impl KernelOp {
+    /// Build from raw data `x` (`n × d`), isotropic `lengthscale`,
+    /// `outputscale` (= s², the kernel variance), and diagonal `noise` (σ²).
+    pub fn new(x: &Matrix, kind: KernelType, lengthscale: f64, outputscale: f64, noise: f64) -> KernelOp {
+        let ell = vec![lengthscale; x.cols()];
+        Self::new_ard(x, kind, &ell, outputscale, noise)
+    }
+
+    /// Build with per-dimension (ARD) lengthscales.
+    pub fn new_ard(x: &Matrix, kind: KernelType, lengthscales: &[f64], outputscale: f64, noise: f64) -> KernelOp {
+        assert_eq!(lengthscales.len(), x.cols());
+        assert!(lengthscales.iter().all(|&l| l > 0.0), "lengthscales must be positive");
+        assert!(outputscale > 0.0 && noise >= 0.0);
+        let (n, d) = (x.rows(), x.cols());
+        let mut xs = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                xs[(i, j)] = x[(i, j)] / lengthscales[j];
+            }
+        }
+        let sq: Vec<f64> = (0..n)
+            .map(|i| xs.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        KernelOp { xs, sq, kind, outputscale, noise, tile: 128 }
+    }
+
+    /// Number of data points.
+    pub fn n(&self) -> usize {
+        self.xs.rows()
+    }
+
+    /// Set the row-tile size (performance tuning).
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        self.tile = tile.max(8);
+        self
+    }
+
+    /// Kernel value between scaled rows `i` and `j`.
+    #[inline]
+    fn kval(&self, i: usize, j: usize) -> f64 {
+        let d2 = (self.sq[i] + self.sq[j]
+            - 2.0 * dot(self.xs.row(i), self.xs.row(j)))
+        .max(0.0);
+        let base = self.outputscale * self.kind.rho(d2.sqrt());
+        if i == j {
+            base + self.noise
+        } else {
+            base
+        }
+    }
+
+    /// Fused gradient contraction `Σ_ij l_i (∂K_ij/∂θ) r_j` for
+    /// `θ ∈ {log ℓ, log s²}`, computed in one tiled O(N² d) pass.
+    /// Returns `(d_log_ell, d_log_s2)`. The noise term is excluded
+    /// (its gradient is `Σ_i l_i r_i · σ²` for log-noise, handled by callers).
+    pub fn grad_contract(&self, l: &[f64], r: &[f64]) -> (f64, f64) {
+        let n = self.n();
+        assert_eq!(l.len(), n);
+        assert_eq!(r.len(), n);
+        let mut d_ell = 0.0;
+        let mut d_s2 = 0.0;
+        for i in 0..n {
+            let xi = self.xs.row(i);
+            let li = l[i];
+            if li == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let d2 = (self.sq[i] + self.sq[j] - 2.0 * dot(xi, self.xs.row(j))).max(0.0);
+                let rr = d2.sqrt();
+                d_ell += li * r[j] * self.outputscale * self.kind.drho_dlog_ell(rr);
+                d_s2 += li * r[j] * self.outputscale * self.kind.rho(rr);
+            }
+        }
+        (d_ell, d_s2)
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+impl LinearOp for KernelOp {
+    fn size(&self) -> usize {
+        self.n()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        let out = self.matmat(&m);
+        out.as_slice().to_vec()
+    }
+
+    fn matmat(&self, b: &Matrix) -> Matrix {
+        let n = self.n();
+        assert_eq!(b.rows(), n, "kernel matmat dim mismatch");
+        let r = b.cols();
+        let mut out = Matrix::zeros(n, r);
+        let tile = self.tile;
+        let flat = out.as_mut_slice();
+        // one block = `tile` output rows; blocks are written disjointly
+        parallel_fill(flat, tile * r.max(1), |start_flat, block| {
+            let i0 = start_flat / r.max(1);
+            let rows = block.len() / r.max(1);
+            for jt in (0..n).step_by(tile) {
+                let j1 = (jt + tile).min(n);
+                for bi in 0..rows {
+                    let i = i0 + bi;
+                    let xi = self.xs.row(i);
+                    let orow = &mut block[bi * r..(bi + 1) * r];
+                    for j in jt..j1 {
+                        let d2 = (self.sq[i] + self.sq[j] - 2.0 * dot(xi, self.xs.row(j))).max(0.0);
+                        let mut k = self.outputscale * self.kind.rho(d2.sqrt());
+                        if i == j {
+                            k += self.noise;
+                        }
+                        let brow = b.row(j);
+                        for (o, bv) in orow.iter_mut().zip(brow) {
+                            *o += k * bv;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        vec![self.outputscale * self.kind.rho(0.0) + self.noise; self.n()]
+    }
+
+    fn column(&self, j: usize) -> Vec<f64> {
+        (0..self.n()).map(|i| self.kval(i, j)).collect()
+    }
+
+    fn lambda_min_bound(&self) -> Option<f64> {
+        // K = s²·C + σ²I with C PSD ⇒ λ_min ≥ σ².
+        if self.noise > 0.0 {
+            Some(self.noise)
+        } else {
+            None
+        }
+    }
+}
+
+/// Cross-kernel matrix `K(X1, X2)` (`n1 × n2`), same scaling conventions as
+/// [`KernelOp`] (no noise term — it is not square in general).
+pub fn cross_kernel(
+    x1: &Matrix,
+    x2: &Matrix,
+    kind: KernelType,
+    lengthscales: &[f64],
+    outputscale: f64,
+) -> Matrix {
+    assert_eq!(x1.cols(), x2.cols());
+    assert_eq!(lengthscales.len(), x1.cols());
+    let (n1, n2, d) = (x1.rows(), x2.rows(), x1.cols());
+    let scale = |x: &Matrix| {
+        let mut s = Matrix::zeros(x.rows(), d);
+        for i in 0..x.rows() {
+            for j in 0..d {
+                s[(i, j)] = x[(i, j)] / lengthscales[j];
+            }
+        }
+        s
+    };
+    let (s1, s2) = (scale(x1), scale(x2));
+    let q1: Vec<f64> = (0..n1).map(|i| s1.row(i).iter().map(|v| v * v).sum()).collect();
+    let q2: Vec<f64> = (0..n2).map(|i| s2.row(i).iter().map(|v| v * v).sum()).collect();
+    let mut out = Matrix::zeros(n1, n2);
+    for i in 0..n1 {
+        let row = s1.row(i);
+        for j in 0..n2 {
+            let d2 = (q1[i] + q2[j] - 2.0 * dot(row, s2.row(j))).max(0.0);
+            out[(i, j)] = outputscale * kind.rho(d2.sqrt());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::randn(n, d, &mut rng)
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let x = data(60, 3, 1);
+        let mut rng = Pcg64::seeded(2);
+        for kind in [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52] {
+            let op = KernelOp::new(&x, kind, 0.7, 1.3, 0.01).with_tile(16);
+            let dense = op.to_dense();
+            let v: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+            let y1 = op.matvec(&v);
+            let y2 = dense.matvec(&v);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-10, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_is_symmetric_psd_diag() {
+        let x = data(40, 2, 3);
+        let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 2.0, 0.1);
+        let k = op.to_dense();
+        for i in 0..40 {
+            assert!((k[(i, i)] - 2.1).abs() < 1e-12);
+            for j in 0..40 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+                assert!(k[(i, j)] <= 2.1 + 1e-12);
+            }
+        }
+        // PSD: Cholesky with tiny jitter succeeds
+        assert!(crate::linalg::Cholesky::with_jitter(&k, 1e-10).is_ok());
+    }
+
+    #[test]
+    fn matmat_matches_matvec_columns() {
+        let x = data(30, 4, 4);
+        let op = KernelOp::new(&x, KernelType::Matern52, 0.5, 1.0, 0.0).with_tile(8);
+        let mut rng = Pcg64::seeded(5);
+        let b = Matrix::randn(30, 5, &mut rng);
+        let y = op.matmat(&b);
+        for j in 0..5 {
+            let yj = op.matvec(&b.col(j));
+            for i in 0..30 {
+                assert!((y[(i, j)] - yj[i]).abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn ard_scaling_consistent() {
+        let x = data(20, 2, 6);
+        // ARD with equal lengthscales == isotropic
+        let a = KernelOp::new_ard(&x, KernelType::Rbf, &[0.5, 0.5], 1.0, 0.0);
+        let b = KernelOp::new(&x, KernelType::Rbf, 0.5, 1.0, 0.0);
+        assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn cross_kernel_matches_square() {
+        let x = data(15, 3, 7);
+        let op = KernelOp::new(&x, KernelType::Matern32, 0.8, 1.5, 0.0);
+        let cross = cross_kernel(&x, &x, KernelType::Matern32, &[0.8, 0.8, 0.8], 1.5);
+        assert!(cross.max_abs_diff(&op.to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn grad_contract_matches_finite_difference() {
+        let x = data(12, 2, 8);
+        let mut rng = Pcg64::seeded(9);
+        let l: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let r: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        for kind in [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52] {
+            let (ell, s2) = (0.8, 1.4);
+            let op = KernelOp::new(&x, kind, ell, s2, 0.0);
+            let (g_ell, g_s2) = op.grad_contract(&l, &r);
+            let f = |ell: f64, s2: f64| -> f64 {
+                let o = KernelOp::new(&x, kind, ell, s2, 0.0);
+                crate::util::dot(&l, &o.matvec(&r))
+            };
+            let h: f64 = 1e-5;
+            // d/d log ell
+            let fd_ell = (f(ell * h.exp(), s2) - f(ell * (-h).exp(), s2)) / (2.0 * h);
+            let fd_s2 = (f(ell, s2 * h.exp()) - f(ell, s2 * (-h).exp())) / (2.0 * h);
+            assert!(
+                (g_ell - fd_ell).abs() < 1e-4 * (1.0 + fd_ell.abs()),
+                "{kind:?} ell grad {g_ell} vs fd {fd_ell}"
+            );
+            assert!(
+                (g_s2 - fd_s2).abs() < 1e-4 * (1.0 + fd_s2.abs()),
+                "{kind:?} s2 grad {g_s2} vs fd {fd_s2}"
+            );
+        }
+    }
+}

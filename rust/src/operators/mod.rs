@@ -1,0 +1,116 @@
+//! Linear operators accessed only through matrix–vector multiplication.
+//!
+//! This is the paper's central abstraction: every Krylov routine in the crate
+//! touches `K` exclusively via [`LinearOp::matvec`] / [`LinearOp::matmat`],
+//! so `K` never needs to be materialized. Kernel operators perform their
+//! MVMs in row blocks (map-reduce style, Sec. 3.2 / refs [11, 79]) giving
+//! `O(N)` memory, and are threaded.
+
+mod dense;
+pub mod kernel;
+pub mod image;
+mod composed;
+
+pub use composed::{DiagOp, LowRankPlusDiagOp, ScaledOp, ShiftedOp, SubtractLowRankOp, SumOp};
+pub use dense::DenseOp;
+pub use kernel::{cross_kernel, KernelOp, KernelType};
+
+use crate::linalg::Matrix;
+
+/// A symmetric linear operator `K ∈ R^{n×n}` accessed through MVMs.
+pub trait LinearOp: Sync {
+    /// Dimension `n`.
+    fn size(&self) -> usize;
+
+    /// `y = K x`.
+    fn matvec(&self, x: &[f64]) -> Vec<f64>;
+
+    /// `Y = K X` for a block of right-hand sides (columns of `x`).
+    ///
+    /// Default implementation loops over columns; structured operators
+    /// override this with a fused blocked implementation (this is where the
+    /// coordinator's RHS batching pays off).
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows(), self.size(), "matmat dim mismatch");
+        let mut out = Matrix::zeros(self.size(), x.cols());
+        for j in 0..x.cols() {
+            let col = x.col(j);
+            let y = self.matvec(&col);
+            for i in 0..self.size() {
+                out[(i, j)] = y[i];
+            }
+        }
+        out
+    }
+
+    /// Diagonal of the operator (needed by pivoted-Cholesky preconditioning
+    /// and Jacobi preconditioners). Default: probe with unit vectors (O(n²));
+    /// structured operators override.
+    fn diagonal(&self) -> Vec<f64> {
+        let n = self.size();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        for (i, di) in d.iter_mut().enumerate() {
+            e[i] = 1.0;
+            *di = self.matvec(&e)[i];
+            e[i] = 0.0;
+        }
+        d
+    }
+
+    /// Column `j` of the operator (pivoted Cholesky needs explicit columns).
+    /// Default: probe with a unit vector.
+    fn column(&self, j: usize) -> Vec<f64> {
+        let n = self.size();
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        self.matvec(&e)
+    }
+
+    /// A guaranteed lower bound on λ_min, when the operator's structure
+    /// provides one (e.g. `K = PSD + σ²I ⇒ λ_min ≥ σ²`). Lanczos *over*-
+    /// estimates λ_min on clustered spectra, which would make the CIQ
+    /// quadrature interval miss the bottom of the spectrum; a structural
+    /// bound is always safe because the quadrature error only degrades
+    /// logarithmically with over-estimated κ (Lemma 1).
+    fn lambda_min_bound(&self) -> Option<f64> {
+        None
+    }
+
+    /// Materialize as a dense matrix (tests / small-N baselines only).
+    fn to_dense(&self) -> Matrix {
+        let n = self.size();
+        let mut m = Matrix::zeros(n, n);
+        for j in 0..n {
+            let col = self.column(j);
+            for i in 0..n {
+                m[(i, j)] = col[i];
+            }
+        }
+        m
+    }
+}
+
+impl<T: LinearOp + ?Sized> LinearOp for &T {
+    fn size(&self) -> usize {
+        (**self).size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        (**self).matvec(x)
+    }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        (**self).matmat(x)
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        (**self).diagonal()
+    }
+    fn column(&self, j: usize) -> Vec<f64> {
+        (**self).column(j)
+    }
+    fn lambda_min_bound(&self) -> Option<f64> {
+        (**self).lambda_min_bound()
+    }
+    fn to_dense(&self) -> Matrix {
+        (**self).to_dense()
+    }
+}

@@ -1,0 +1,176 @@
+//! Hale–Higham–Trefethen contour-integral quadrature for `K^{±1/2}`
+//! (Appx. B of the paper; Alg. 2).
+//!
+//! Given spectral bounds `0 < λ_min ≤ λ_max`, produces `Q` positive weights
+//! `w_q` and shifts `t_q` such that
+//! `K^{-1/2} ≈ Σ_q w_q (t_q I + K)^{-1}` with error decaying like
+//! `O(exp(−2Qπ² / (log κ + 3)))` (Lemma 1) — i.e. only *logarithmically*
+//! dependent on the conditioning, so `Q ≈ 8` suffices even for κ ≈ 10⁴.
+
+use crate::special::{ellipj, ellipk_modulus};
+use crate::{Error, Result};
+
+/// A contour-integral quadrature rule for the inverse square root.
+#[derive(Clone, Debug)]
+pub struct QuadratureRule {
+    /// Positive weights `w_q`.
+    pub weights: Vec<f64>,
+    /// Positive shifts `t_q` (each `t_q I + K` is SPD).
+    pub shifts: Vec<f64>,
+    /// The λ_min used to build the rule.
+    pub lambda_min: f64,
+    /// The λ_max used to build the rule.
+    pub lambda_max: f64,
+}
+
+impl QuadratureRule {
+    /// Scalar evaluation `Σ_q w_q / (t_q + x) ≈ x^{-1/2}` — handy for tests
+    /// and for error diagnostics.
+    pub fn eval_inv_sqrt(&self, x: f64) -> f64 {
+        self.weights
+            .iter()
+            .zip(&self.shifts)
+            .map(|(w, t)| w / (t + x))
+            .sum()
+    }
+
+    /// The Lemma-1 quadrature error bound `O(exp(-2Qπ²/(log κ + 3)))`
+    /// (without the constant).
+    pub fn error_bound(&self) -> f64 {
+        let kappa = self.lambda_max / self.lambda_min;
+        let q = self.weights.len() as f64;
+        (-2.0 * q * std::f64::consts::PI.powi(2) / (kappa.ln() + 3.0)).exp()
+    }
+}
+
+/// Build the `Q`-point quadrature rule of Eq. (S4)/(S5) from spectral bounds.
+///
+/// Implements Alg. 2: elliptic modulus `k² = λ_min/λ_max`, complete elliptic
+/// integral `K'(k) = K(k')`, Jacobi elliptic functions at the midpoint nodes
+/// `u_q = (q − ½)/Q` evaluated through Jacobi's imaginary transformation.
+pub fn ciq_quadrature(q_points: usize, lambda_min: f64, lambda_max: f64) -> Result<QuadratureRule> {
+    if !(lambda_min > 0.0 && lambda_max >= lambda_min) {
+        return Err(Error::Invalid(format!(
+            "need 0 < lambda_min <= lambda_max, got ({lambda_min}, {lambda_max})"
+        )));
+    }
+    if q_points == 0 {
+        return Err(Error::Invalid("need at least one quadrature point".into()));
+    }
+    // guard the degenerate perfectly-conditioned case (k → 1)
+    let lambda_max = if lambda_max / lambda_min < 1.0 + 1e-10 {
+        lambda_min * (1.0 + 1e-6)
+    } else {
+        lambda_max
+    };
+    let k2 = lambda_min / lambda_max; // squared elliptic modulus
+    let kp = (1.0 - k2).sqrt(); // complementary modulus k'
+    let big_kp = ellipk_modulus(kp); // K'(k) = K(k')
+
+    let mut weights = Vec::with_capacity(q_points);
+    let mut shifts = Vec::with_capacity(q_points);
+    for q in 1..=q_points {
+        let u = (q as f64 - 0.5) / q_points as f64;
+        // sn/cn/dn with modulus k' (parameter m = k'²) at u·K'(k)
+        let (sn_b, cn_b, dn_b) = ellipj(u * big_kp, kp * kp);
+        // Jacobi imaginary transformation to modulus k:
+        //   sn(i u K'|k) = i sn̄/cn̄,  cn = 1/cn̄,  dn = dn̄/cn̄
+        // => t_q = −σ_q² = −λ_min·sn² = λ_min·(sn̄/cn̄)² > 0
+        // => w_q = −w̃_q = (2√λ_min)/(πQ)·K'·cn·dn = (2√λ_min K' dn̄)/(πQ cn̄²)
+        let sn_ratio = sn_b / cn_b;
+        let t_q = lambda_min * sn_ratio * sn_ratio;
+        let w_q = 2.0 * lambda_min.sqrt() * big_kp * dn_b
+            / (std::f64::consts::PI * q_points as f64 * cn_b * cn_b);
+        if !(t_q.is_finite() && w_q.is_finite()) {
+            return Err(Error::Numerical(format!(
+                "quadrature node {q} not finite (kappa={})",
+                lambda_max / lambda_min
+            )));
+        }
+        shifts.push(t_q);
+        weights.push(w_q);
+    }
+    Ok(QuadratureRule { weights, shifts, lambda_min, lambda_max })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_inverse_sqrt_converges() {
+        // On [λmin, λmax], the rule should approximate x^{-1/2} to near
+        // machine precision with modest Q.
+        let rule = ciq_quadrature(12, 0.5, 50.0).unwrap();
+        for &x in &[0.5, 1.0, 3.0, 10.0, 50.0] {
+            let approx = rule.eval_inv_sqrt(x);
+            let exact = 1.0 / x.sqrt();
+            assert!(
+                (approx - exact).abs() / exact < 1e-9,
+                "x={x}: {approx} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_decays_exponentially_in_q() {
+        let (lo, hi) = (1e-3f64, 1.0f64); // kappa = 1000
+        let probe = |rule: &QuadratureRule| -> f64 {
+            let mut worst: f64 = 0.0;
+            for i in 0..=50 {
+                // geometric sweep of the spectrum
+                let x = lo * (hi / lo).powf(i as f64 / 50.0);
+                let rel = (rule.eval_inv_sqrt(x) - 1.0 / x.sqrt()).abs() * x.sqrt();
+                worst = worst.max(rel);
+            }
+            worst
+        };
+        let e4 = probe(&ciq_quadrature(4, lo, hi).unwrap());
+        let e8 = probe(&ciq_quadrature(8, lo, hi).unwrap());
+        let e16 = probe(&ciq_quadrature(16, lo, hi).unwrap());
+        assert!(e8 < e4 * 0.1, "e4={e4} e8={e8}");
+        assert!(e16 < e8 * 0.1, "e8={e8} e16={e16}");
+        assert!(e16 < 1e-10, "e16={e16}");
+    }
+
+    #[test]
+    fn q8_reaches_1e4_even_ill_conditioned() {
+        // Paper: Q=8 reaches < 1e-4 relative error for kappa ≈ 1e4.
+        let rule = ciq_quadrature(8, 1e-4, 1.0).unwrap();
+        for i in 0..=40 {
+            let x = 1e-4f64 * (1e4f64).powf(i as f64 / 40.0);
+            let rel = (rule.eval_inv_sqrt(x) - 1.0 / x.sqrt()).abs() * x.sqrt();
+            assert!(rel < 1e-4, "x={x}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn weights_and_shifts_positive() {
+        for &(lo, hi) in &[(0.1, 1.0), (1e-6, 1.0), (2.0, 1e4)] {
+            let rule = ciq_quadrature(8, lo, hi).unwrap();
+            assert!(rule.weights.iter().all(|&w| w > 0.0));
+            assert!(rule.shifts.iter().all(|&t| t > 0.0));
+        }
+    }
+
+    #[test]
+    fn degenerate_kappa_one() {
+        let rule = ciq_quadrature(8, 2.0, 2.0).unwrap();
+        let approx = rule.eval_inv_sqrt(2.0);
+        assert!((approx - 1.0 / 2.0f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(ciq_quadrature(8, -1.0, 1.0).is_err());
+        assert!(ciq_quadrature(8, 2.0, 1.0).is_err());
+        assert!(ciq_quadrature(0, 1.0, 2.0).is_err());
+    }
+
+    #[test]
+    fn error_bound_is_monotone_in_kappa() {
+        let r1 = ciq_quadrature(8, 1.0, 10.0).unwrap();
+        let r2 = ciq_quadrature(8, 1.0, 1e6).unwrap();
+        assert!(r1.error_bound() < r2.error_bound());
+    }
+}

@@ -1,0 +1,220 @@
+//! Pseudo-random number generation and low-discrepancy sequences.
+//!
+//! Everything is implemented from scratch (the image has no `rand` crate):
+//! a PCG64 generator, normal/gamma variates, shuffling, and a Sobol sequence
+//! for Bayesian-optimization candidate sets.
+
+mod sobol;
+pub use sobol::Sobol;
+
+/// PCG-XSL-RR 128/64 pseudo-random generator (O'Neill 2014).
+///
+/// 128-bit LCG state, 64-bit xorshift-rotate output. Fast, statistically
+/// solid, and trivially seedable — all experiments in this crate are
+/// reproducible from a `u64` seed.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream constant fixed).
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (0xda3e_39cb_94b9_5bdb_u128 << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        // warm up
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent child generator (for per-thread streams).
+    pub fn split(&mut self) -> Pcg64 {
+        let s = self.next_u64();
+        Pcg64::seeded(s ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough mapping; bias negligible for our n.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal variate (Box–Muller, cached second value).
+    pub fn normal(&mut self) -> f64 {
+        // Marsaglia polar method, no caching for simplicity and statelessness.
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Vector of iid standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Gamma(shape `alpha`, rate `beta`) variate (Marsaglia–Tsang, with the
+    /// `alpha < 1` boost). Mean is `alpha / beta`.
+    pub fn gamma(&mut self, alpha: f64, beta: f64) -> f64 {
+        assert!(alpha > 0.0 && beta > 0.0, "gamma params must be positive");
+        if alpha < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^{1/a}
+            let u = self.uniform().max(1e-300);
+            return self.gamma(alpha + 1.0, beta) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v / beta;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::seeded(5);
+        for &(a, b) in &[(0.5, 1.0), (2.0, 3.0), (9.0, 0.5)] {
+            let n = 40_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.gamma(a, b)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let expect = a / b;
+            assert!(
+                (mean - expect).abs() / expect < 0.05,
+                "gamma({a},{b}) mean={mean} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seeded(7);
+        let idx = rng.sample_indices(50, 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+}

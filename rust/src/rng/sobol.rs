@@ -1,0 +1,165 @@
+//! Sobol low-discrepancy sequence (Joe–Kuo direction numbers, dims ≤ 16).
+//!
+//! Used for the Bayesian-optimization candidate sets (Sec. 5.2 of the paper
+//! chooses Thompson-sampling candidates with a space-filling design) and for
+//! the Latin-hypercube-like initial designs.
+
+/// Direction-number table: `(degree s, polynomial a, initial m values)` for
+/// dimensions 2..=16 (dimension 1 is the van der Corput sequence in base 2).
+/// From the Joe & Kuo (2008) `new-joe-kuo-6` tables.
+const JOE_KUO: &[(u32, u32, &[u32])] = &[
+    (1, 0, &[1]),
+    (2, 1, &[1, 3]),
+    (3, 1, &[1, 3, 1]),
+    (3, 2, &[1, 1, 1]),
+    (4, 1, &[1, 1, 3, 3]),
+    (4, 4, &[1, 3, 5, 13]),
+    (5, 2, &[1, 1, 5, 5, 17]),
+    (5, 4, &[1, 1, 5, 5, 5]),
+    (5, 7, &[1, 1, 7, 11, 19]),
+    (5, 11, &[1, 1, 5, 1, 1]),
+    (5, 13, &[1, 1, 1, 3, 11]),
+    (5, 14, &[1, 3, 5, 5, 31]),
+    (6, 1, &[1, 3, 3, 9, 7, 49]),
+    (6, 13, &[1, 1, 1, 15, 21, 21]),
+    (6, 16, &[1, 3, 1, 13, 27, 49]),
+];
+
+const BITS: usize = 52; // enough precision for f64 in [0,1)
+
+/// Sobol sequence generator over the unit hypercube `[0,1)^d`, `d ≤ 16`.
+pub struct Sobol {
+    dim: usize,
+    /// direction numbers, `v[d][b]` scaled into the top bits of a u64
+    v: Vec<[u64; BITS]>,
+    /// Gray-code state per dimension
+    x: Vec<u64>,
+    index: u64,
+}
+
+impl Sobol {
+    /// Maximum supported dimension.
+    pub const MAX_DIM: usize = JOE_KUO.len() + 1;
+
+    /// Create a `dim`-dimensional Sobol generator.
+    ///
+    /// # Panics
+    /// If `dim == 0` or `dim > Sobol::MAX_DIM`.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1 && dim <= Self::MAX_DIM, "sobol supports 1..={} dims", Self::MAX_DIM);
+        let mut v = Vec::with_capacity(dim);
+        // dimension 1: van der Corput — m_i = 1 for all i
+        {
+            let mut dir = [0u64; BITS];
+            for (i, d) in dir.iter_mut().enumerate() {
+                *d = 1u64 << (BITS - 1 - i);
+            }
+            v.push(dir);
+        }
+        for d in 1..dim {
+            let (s, a, m_init) = JOE_KUO[d - 1];
+            let s = s as usize;
+            let mut m = vec![0u64; BITS];
+            for i in 0..s.min(BITS) {
+                m[i] = m_init[i] as u64;
+            }
+            for i in s..BITS {
+                // recurrence: m_i = 2 a_1 m_{i-1} ^ 4 a_2 m_{i-2} ^ ... ^ 2^s m_{i-s} ^ m_{i-s}
+                let mut mi = m[i - s] ^ (m[i - s] << s);
+                for k in 1..s {
+                    let ak = (a >> (s - 1 - k)) & 1;
+                    if ak == 1 {
+                        mi ^= m[i - k] << k;
+                    }
+                }
+                m[i] = mi;
+            }
+            let mut dir = [0u64; BITS];
+            for i in 0..BITS {
+                dir[i] = m[i] << (BITS - 1 - i);
+            }
+            v.push(dir);
+        }
+        Sobol { dim, v, x: vec![0; dim], index: 0 }
+    }
+
+    /// Next point in `[0,1)^dim` (Gray-code order; the first point is 0).
+    pub fn next_point(&mut self) -> Vec<f64> {
+        let out: Vec<f64> = self
+            .x
+            .iter()
+            .map(|&xi| xi as f64 / (1u64 << BITS) as f64)
+            .collect();
+        // advance Gray-code state
+        let c = (!self.index).trailing_zeros() as usize;
+        let c = c.min(BITS - 1);
+        for d in 0..self.dim {
+            self.x[d] ^= self.v[d][c];
+        }
+        self.index += 1;
+        out
+    }
+
+    /// Generate `n` points, skipping the initial all-zeros point.
+    pub fn sample(&mut self, n: usize) -> Vec<Vec<f64>> {
+        self.next_point(); // drop 0
+        (0..n).map(|_| self.next_point()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_unit_cube() {
+        let mut s = Sobol::new(6);
+        for p in s.sample(1000) {
+            assert_eq!(p.len(), 6);
+            for &x in &p {
+                assert!((0.0..1.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn first_points_dim1_are_van_der_corput() {
+        let mut s = Sobol::new(1);
+        s.next_point(); // 0
+        let pts: Vec<f64> = (0..7).map(|_| s.next_point()[0]).collect();
+        // Gray-code ordering of van der Corput: 1/2, 3/4, 1/4, 3/8, 7/8, 5/8, 1/8
+        let expect = [0.5, 0.75, 0.25, 0.375, 0.875, 0.625, 0.125];
+        for (a, b) in pts.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn better_than_random_discrepancy_proxy() {
+        // Star-discrepancy proxy: max deviation of the empirical CDF of the
+        // first coordinate pair from the product measure on a grid.
+        let n = 512;
+        let mut s = Sobol::new(2);
+        let pts = s.sample(n);
+        let mut max_dev: f64 = 0.0;
+        for gi in 1..8 {
+            for gj in 1..8 {
+                let (a, b) = (gi as f64 / 8.0, gj as f64 / 8.0);
+                let count = pts.iter().filter(|p| p[0] < a && p[1] < b).count();
+                let dev = (count as f64 / n as f64 - a * b).abs();
+                max_dev = max_dev.max(dev);
+            }
+        }
+        assert!(max_dev < 0.02, "discrepancy proxy too high: {max_dev}");
+    }
+
+    #[test]
+    fn dims_are_not_identical() {
+        let mut s = Sobol::new(8);
+        let pts = s.sample(64);
+        for d in 1..8 {
+            let same = pts.iter().filter(|p| (p[0] - p[d]).abs() < 1e-15).count();
+            assert!(same < 8, "dim {d} looks identical to dim 0");
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the Rust request path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes `HloModuleProto` with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Artifacts are
+//! discovered by filename convention:
+//!
+//! * `kernel_mvm_n{n}_d{d}_r{r}_{kernel}.hlo.txt` — batched kernel MVM
+//! * `ciq_sqrt_n{n}_d{d}_q{q}_j{j}_{kernel}.hlo.txt` — full CIQ pipeline
+//!
+//! Everything here is f32 (the artifacts' dtype); the f64 library API
+//! converts at the boundary.
+
+use crate::linalg::Matrix;
+use crate::operators::LinearOp;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Parsed artifact descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// `kernel_mvm` or `ciq_sqrt`.
+    pub kind: String,
+    /// kernel family name (`rbf`, `matern52`, …).
+    pub kernel: String,
+    /// data size `n`.
+    pub n: usize,
+    /// data dimension `d`.
+    pub d: usize,
+    /// RHS batch (kernel_mvm) — 0 if absent.
+    pub r: usize,
+    /// quadrature points (ciq_sqrt) — 0 if absent.
+    pub q: usize,
+    /// msMINRES iterations (ciq_sqrt) — 0 if absent.
+    pub j: usize,
+    /// file path.
+    pub path: PathBuf,
+}
+
+/// Parse an artifact filename like `kernel_mvm_n256_d2_r8_rbf.hlo.txt`.
+pub fn parse_artifact_name(path: &Path) -> Option<ArtifactMeta> {
+    let stem = path.file_name()?.to_str()?.strip_suffix(".hlo.txt")?;
+    let parts: Vec<&str> = stem.split('_').collect();
+    // kind has one underscore (kernel_mvm / ciq_sqrt)
+    if parts.len() < 4 {
+        return None;
+    }
+    let kind = format!("{}_{}", parts[0], parts[1]);
+    if kind != "kernel_mvm" && kind != "ciq_sqrt" {
+        return None;
+    }
+    let mut meta = ArtifactMeta {
+        kind,
+        kernel: String::new(),
+        n: 0,
+        d: 0,
+        r: 0,
+        q: 0,
+        j: 0,
+        path: path.to_path_buf(),
+    };
+    for tok in &parts[2..] {
+        if let Some(v) = tok.strip_prefix('n').and_then(|s| s.parse::<usize>().ok()) {
+            meta.n = v;
+        } else if let Some(v) = tok.strip_prefix('d').and_then(|s| s.parse::<usize>().ok()) {
+            meta.d = v;
+        } else if let Some(v) = tok.strip_prefix('r').and_then(|s| s.parse::<usize>().ok()) {
+            meta.r = v;
+        } else if let Some(v) = tok.strip_prefix('q').and_then(|s| s.parse::<usize>().ok()) {
+            meta.q = v;
+        } else if let Some(v) = tok.strip_prefix('j').and_then(|s| s.parse::<usize>().ok()) {
+            meta.j = v;
+        } else {
+            meta.kernel = tok.to_string();
+        }
+    }
+    Some(meta)
+}
+
+/// Scan a directory for artifacts.
+pub fn discover_artifacts(dir: &Path) -> Vec<ArtifactMeta> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            if let Some(meta) = parse_artifact_name(&e.path()) {
+                out.push(meta);
+            }
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    out
+}
+
+/// A compiled PJRT executable plus its metadata.
+///
+/// Safety: the PJRT CPU client is internally synchronized for execution; we
+/// additionally serialize all calls through a `Mutex`, so sharing across
+/// threads is sound even though the FFI handle is a raw pointer.
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    /// artifact descriptor
+    pub meta: ArtifactMeta,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// PJRT runtime holding a CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// Same argument as for `Executable`: access is serialized by our wrappers.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a PJRT CPU runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", meta.path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", meta.path.display())))?;
+        Ok(Executable { exe: Mutex::new(exe), meta: meta.clone() })
+    }
+
+    /// Execute with literal inputs; returns the flattened f32 output of the
+    /// single-tuple result.
+    pub fn execute(&self, exe: &Executable, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let guard = exe.exe.lock().unwrap();
+        let result = guard
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+        out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+}
+
+fn literal_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+}
+
+/// A kernel-MVM artifact exposed as a [`LinearOp`] — the kernel matrix is
+/// computed tile-by-tile by the Pallas kernel inside the artifact.
+pub struct XlaKernelMvm<'r> {
+    rt: &'r Runtime,
+    exe: Executable,
+    /// lengthscale-scaled data, f32, row-major `n × d`
+    xs: Vec<f32>,
+    s2: f32,
+    noise: f32,
+}
+
+impl<'r> XlaKernelMvm<'r> {
+    /// Bind data + hyperparameters to a `kernel_mvm` artifact. `x` is the
+    /// *unscaled* data; scaling by `1/lengthscale` happens here.
+    pub fn new(
+        rt: &'r Runtime,
+        exe: Executable,
+        x: &Matrix,
+        lengthscale: f64,
+        outputscale: f64,
+        noise: f64,
+    ) -> Result<XlaKernelMvm<'r>> {
+        if exe.meta.kind != "kernel_mvm" {
+            return Err(Error::Invalid(format!("artifact kind {} != kernel_mvm", exe.meta.kind)));
+        }
+        if x.rows() != exe.meta.n || x.cols() != exe.meta.d {
+            return Err(Error::Shape(format!(
+                "data {}x{} vs artifact {}x{}",
+                x.rows(),
+                x.cols(),
+                exe.meta.n,
+                exe.meta.d
+            )));
+        }
+        let xs: Vec<f32> = x.as_slice().iter().map(|&v| (v / lengthscale) as f32).collect();
+        Ok(XlaKernelMvm { rt, exe, xs, s2: outputscale as f32, noise: noise as f32 })
+    }
+
+    /// The artifact's fixed RHS batch width.
+    pub fn batch_width(&self) -> usize {
+        self.exe.meta.r
+    }
+
+    fn run_batch(&self, b: &[f32]) -> Result<Vec<f32>> {
+        let (n, d, r) = (self.exe.meta.n, self.exe.meta.d, self.exe.meta.r);
+        let inputs = [
+            literal_matrix(&self.xs, n, d)?,
+            literal_matrix(b, n, r)?,
+            xla::Literal::scalar(self.s2),
+            xla::Literal::scalar(self.noise),
+        ];
+        self.rt.execute(&self.exe, &inputs)
+    }
+}
+
+impl LinearOp for XlaKernelMvm<'_> {
+    fn size(&self) -> usize {
+        self.exe.meta.n
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        let out = self.matmat(&m);
+        out.as_slice().to_vec()
+    }
+
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let (n, r) = (self.exe.meta.n, self.exe.meta.r);
+        assert_eq!(x.rows(), n);
+        let cols = x.cols();
+        let mut out = Matrix::zeros(n, cols);
+        // process `r` columns at a time, zero-padding the final batch
+        let mut j0 = 0;
+        while j0 < cols {
+            let take = r.min(cols - j0);
+            let mut batch = vec![0.0f32; n * r];
+            for i in 0..n {
+                for jj in 0..take {
+                    batch[i * r + jj] = x[(i, j0 + jj)] as f32;
+                }
+            }
+            let res = self.run_batch(&batch).expect("xla kernel mvm failed");
+            for i in 0..n {
+                for jj in 0..take {
+                    out[(i, j0 + jj)] = res[i * r + jj] as f64;
+                }
+            }
+            j0 += take;
+        }
+        out
+    }
+}
+
+/// The full CIQ pipeline artifact: one PJRT call computes `K^{1/2}b`,
+/// `K^{-1/2}b` and the msMINRES residual.
+pub struct XlaCiq<'r> {
+    rt: &'r Runtime,
+    exe: Executable,
+}
+
+/// Output of [`XlaCiq::run`].
+pub struct XlaCiqOutput {
+    /// `K^{1/2} b`.
+    pub sqrt: Vec<f64>,
+    /// `K^{-1/2} b`.
+    pub inv_sqrt: Vec<f64>,
+    /// max relative msMINRES residual.
+    pub residual: f64,
+}
+
+impl<'r> XlaCiq<'r> {
+    /// Wrap a `ciq_sqrt` artifact.
+    pub fn new(rt: &'r Runtime, exe: Executable) -> Result<XlaCiq<'r>> {
+        if exe.meta.kind != "ciq_sqrt" {
+            return Err(Error::Invalid(format!("artifact kind {} != ciq_sqrt", exe.meta.kind)));
+        }
+        Ok(XlaCiq { rt, exe })
+    }
+
+    /// Number of quadrature points the artifact was lowered with.
+    pub fn q(&self) -> usize {
+        self.exe.meta.q
+    }
+
+    /// Data size.
+    pub fn n(&self) -> usize {
+        self.exe.meta.n
+    }
+
+    /// Execute the pipeline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        x: &Matrix,
+        lengthscale: f64,
+        outputscale: f64,
+        noise: f64,
+        b: &[f64],
+        shifts: &[f64],
+        weights: &[f64],
+    ) -> Result<XlaCiqOutput> {
+        let (n, d, q) = (self.exe.meta.n, self.exe.meta.d, self.exe.meta.q);
+        if x.rows() != n || x.cols() != d || b.len() != n || shifts.len() != q || weights.len() != q {
+            return Err(Error::Shape("ciq artifact input shape mismatch".into()));
+        }
+        let xs: Vec<f32> = x.as_slice().iter().map(|&v| (v / lengthscale) as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let sf: Vec<f32> = shifts.iter().map(|&v| v as f32).collect();
+        let wf: Vec<f32> = weights.iter().map(|&v| v as f32).collect();
+        let inputs = [
+            literal_matrix(&xs, n, d)?,
+            xla::Literal::vec1(&bf),
+            xla::Literal::vec1(&sf),
+            xla::Literal::vec1(&wf),
+            xla::Literal::scalar(outputscale as f32),
+            xla::Literal::scalar(noise as f32),
+        ];
+        let out = self.rt.execute(&self.exe, &inputs)?;
+        if out.len() != 2 * n + 1 {
+            return Err(Error::Runtime(format!("ciq output len {} != {}", out.len(), 2 * n + 1)));
+        }
+        Ok(XlaCiqOutput {
+            sqrt: out[..n].iter().map(|&v| v as f64).collect(),
+            inv_sqrt: out[n..2 * n].iter().map(|&v| v as f64).collect(),
+            residual: out[2 * n] as f64,
+        })
+    }
+}
+
+/// Default artifacts directory (`$CIQ_ARTIFACTS` or `./artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CIQ_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_names() {
+        let m = parse_artifact_name(Path::new("kernel_mvm_n256_d2_r8_rbf.hlo.txt")).unwrap();
+        assert_eq!(m.kind, "kernel_mvm");
+        assert_eq!((m.n, m.d, m.r), (256, 2, 8));
+        assert_eq!(m.kernel, "rbf");
+        let c = parse_artifact_name(Path::new("ciq_sqrt_n256_d2_q8_j64_matern52.hlo.txt")).unwrap();
+        assert_eq!(c.kind, "ciq_sqrt");
+        assert_eq!((c.n, c.q, c.j), (256, 8, 64));
+        assert_eq!(c.kernel, "matern52");
+        assert!(parse_artifact_name(Path::new("whatever.txt")).is_none());
+        assert!(parse_artifact_name(Path::new("other_thing_n2.hlo.txt")).is_none());
+    }
+}

@@ -1,0 +1,324 @@
+//! Special functions implemented from scratch: complete elliptic integrals
+//! (AGM), Jacobi elliptic functions (descending Landen / Gauss
+//! transformation), `erf`, and `ln Γ`.
+//!
+//! These drive the Hale–Higham–Trefethen quadrature rule (Appx. B of the
+//! paper): the quadrature nodes/weights are built from `K'(k)` and
+//! `sn/cn/dn(u K'(k) | k')`.
+
+/// Complete elliptic integral of the first kind `K(k)` as a function of the
+/// **modulus** `k` (not the parameter `m = k²`), via the arithmetic–geometric
+/// mean: `K(k) = π / (2 AGM(1, k'))` with `k' = sqrt(1 − k²)`.
+pub fn ellipk_modulus(k: f64) -> f64 {
+    assert!((0.0..1.0).contains(&k), "ellipk needs 0 <= k < 1, got {k}");
+    let kp = (1.0 - k * k).sqrt();
+    std::f64::consts::PI / (2.0 * agm(1.0, kp))
+}
+
+/// Complete elliptic integral of the first kind as a function of the
+/// **parameter** `m = k²` (SciPy's `ellipk` convention).
+pub fn ellipk(m: f64) -> f64 {
+    assert!((0.0..1.0).contains(&m), "ellipk needs 0 <= m < 1, got {m}");
+    std::f64::consts::PI / (2.0 * agm(1.0, (1.0 - m).sqrt()))
+}
+
+/// Arithmetic–geometric mean of `a ≥ b > 0`.
+pub fn agm(mut a: f64, mut b: f64) -> f64 {
+    assert!(a > 0.0 && b >= 0.0);
+    if b == 0.0 {
+        // AGM(a, 0) = 0 → K diverges; callers guard against k = 1.
+        return 0.0;
+    }
+    for _ in 0..64 {
+        let an = 0.5 * (a + b);
+        let bn = (a * b).sqrt();
+        if (a - b).abs() <= 1e-16 * a.abs() {
+            break;
+        }
+        a = an;
+        b = bn;
+    }
+    0.5 * (a + b)
+}
+
+/// Jacobi elliptic functions `(sn, cn, dn)` of real argument `u` with
+/// **parameter** `m = k²` (SciPy `ellipj` convention).
+///
+/// Implemented with the descending Gauss/Landen AGM scheme (Abramowitz &
+/// Stegun 16.4 / Numerical Recipes `sncndn`).
+pub fn ellipj(u: f64, m: f64) -> (f64, f64, f64) {
+    assert!((0.0..=1.0).contains(&m), "ellipj needs 0 <= m <= 1, got {m}");
+    const CA: f64 = 1e-14;
+    let mc = 1.0 - m;
+    if mc.abs() < CA {
+        // m → 1: sn = tanh u, cn = dn = sech u
+        let c = 1.0 / u.cosh();
+        return (u.tanh(), c, c);
+    }
+    if m.abs() < CA {
+        // m → 0: circular limit
+        return (u.sin(), u.cos(), 1.0);
+    }
+    // AGM scheme (Abramowitz & Stegun 16.4): build a_i, c_i ladders until
+    // c_N is negligible, set φ_N = 2^N a_N u, then descend
+    // φ_{n-1} = (φ_n + arcsin((c_n/a_n) sin φ_n)) / 2.
+    let mut a_lad = [0.0f64; 64];
+    let mut c_lad = [0.0f64; 64];
+    let (mut a, mut b) = (1.0f64, mc.sqrt());
+    a_lad[0] = a;
+    c_lad[0] = (1.0 - mc).sqrt(); // c_0 = k
+    let mut n = 0usize;
+    while n < 62 {
+        let c_next = 0.5 * (a - b);
+        let a_next = 0.5 * (a + b);
+        let b_next = (a * b).sqrt();
+        n += 1;
+        a_lad[n] = a_next;
+        c_lad[n] = c_next;
+        a = a_next;
+        b = b_next;
+        if (c_next / a_next).abs() <= CA {
+            break;
+        }
+    }
+    let mut phi = (1u64 << n) as f64 * a_lad[n] * u;
+    for i in (1..=n).rev() {
+        let t = (c_lad[i] / a_lad[i]) * phi.sin();
+        phi = 0.5 * (phi + t.asin());
+    }
+    let sn = phi.sin();
+    let cn = phi.cos();
+    // dn is pinned by the identity dn² = 1 − m sn² and dn > 0 on the real axis.
+    let dn = (1.0 - m * sn * sn).max(0.0).sqrt();
+    (sn, cn, dn)
+}
+
+/// Error function `erf(x)` (Abramowitz & Stegun 7.1.26-style rational
+/// approximation refined with one continued-fraction correction; |err| < 1.2e-7
+/// from the base formula, adequate for likelihood computations; we instead use
+/// the higher-precision W. J. Cody rational approximation below, |err| < 1e-15).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (Cody-style, double precision).
+pub fn erfc(x: f64) -> f64 {
+    // Numerical-Recipes erfc via incomplete gamma–like Chebyshev fit.
+    let z = x.abs();
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0f64;
+    let mut dd = 0.0f64;
+    for &c in COF.iter().rev().take(COF.len() - 1) {
+        let tmp = d;
+        d = ty * d - dd + c;
+        dd = tmp;
+    }
+    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Standard normal log-pdf.
+pub fn norm_logpdf(x: f64) -> f64 {
+    -0.5 * x * x - 0.5 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// `ln Γ(x)` for `x > 0` (Lanczos approximation, g = 7, n = 9).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma needs x > 0");
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Gauss–Hermite quadrature nodes/weights (physicists' convention,
+/// `∫ e^{-x²} f(x) dx ≈ Σ w_i f(x_i)`), computed by Newton iteration on the
+/// Hermite recurrence. Used for SVGP expected log-likelihoods.
+pub fn gauss_hermite(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = n.div_ceil(2);
+    let mut z = 0.0f64;
+    for i in 0..m {
+        // initial guesses (Numerical Recipes gauher)
+        z = match i {
+            0 => (2.0 * n as f64 + 1.0).sqrt() - 1.85575 * (2.0 * n as f64 + 1.0).powf(-1.0 / 6.0),
+            1 => z - 1.14 * (n as f64).powf(0.426) / z,
+            2 => 1.86 * z - 0.86 * nodes[0],
+            3 => 1.91 * z - 0.91 * nodes[1],
+            _ => 2.0 * z - nodes[i - 2],
+        };
+        let mut pp = 0.0;
+        for _ in 0..100 {
+            // evaluate H_n via recurrence (orthonormal scaling)
+            let mut p1 = std::f64::consts::PI.powf(-0.25);
+            let mut p2 = 0.0;
+            for j in 0..n {
+                let p3 = p2;
+                p2 = p1;
+                p1 = z * (2.0 / (j as f64 + 1.0)).sqrt() * p2
+                    - ((j as f64) / (j as f64 + 1.0)).sqrt() * p3;
+            }
+            pp = (2.0 * n as f64).sqrt() * p2;
+            let z1 = z;
+            z = z1 - p1 / pp;
+            if (z - z1).abs() < 1e-14 {
+                break;
+            }
+        }
+        nodes[i] = z;
+        nodes[n - 1 - i] = -z;
+        weights[i] = 2.0 / (pp * pp);
+        weights[n - 1 - i] = weights[i];
+    }
+    // ascending nodes
+    nodes.reverse();
+    weights.reverse();
+    (nodes, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ellipk_known_values() {
+        // K(m=0) = pi/2
+        assert!((ellipk(0.0) - std::f64::consts::FRAC_PI_2).abs() < 1e-14);
+        // K(m=0.5) = 1.85407467730137 (Abramowitz & Stegun)
+        assert!((ellipk(0.5) - 1.854_074_677_301_372).abs() < 1e-12);
+        // K(m=0.81): reference from scipy.special.ellipk(0.81) = 2.2805491384227703
+        assert!((ellipk(0.81) - 2.280_549_138_422_770).abs() < 1e-11);
+    }
+
+    #[test]
+    fn ellipj_reduces_to_trig_and_hyperbolic() {
+        for &u in &[0.1, 0.5, 1.2, 2.0] {
+            let (sn, cn, dn) = ellipj(u, 0.0);
+            assert!((sn - u.sin()).abs() < 1e-12);
+            assert!((cn - u.cos()).abs() < 1e-12);
+            assert!((dn - 1.0).abs() < 1e-12);
+            let (sn1, cn1, dn1) = ellipj(u, 1.0 - 1e-16);
+            assert!((sn1 - u.tanh()).abs() < 1e-7);
+            assert!((cn1 - 1.0 / u.cosh()).abs() < 1e-7);
+            assert!((dn1 - 1.0 / u.cosh()).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn ellipj_identities() {
+        // sn² + cn² = 1 and dn² + m sn² = 1 for all u, m
+        for &m in &[0.1, 0.3, 0.7, 0.95] {
+            for &u in &[0.2, 0.9, 1.7, 3.1] {
+                let (sn, cn, dn) = ellipj(u, m);
+                assert!((sn * sn + cn * cn - 1.0).abs() < 1e-10, "m={m} u={u}");
+                assert!((dn * dn + m * sn * sn - 1.0).abs() < 1e-10, "m={m} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn ellipj_quarter_period() {
+        // sn(K(m), m) = 1, cn(K(m), m) = 0, dn(K(m), m) = sqrt(1-m)
+        for &m in &[0.2, 0.5, 0.9] {
+            let kk = ellipk(m);
+            let (sn, cn, dn) = ellipj(kk, m);
+            assert!((sn - 1.0).abs() < 1e-9, "m={m} sn={sn}");
+            assert!(cn.abs() < 1e-7, "m={m} cn={cn}");
+            assert!((dn - (1.0 - m).sqrt()).abs() < 1e-9, "m={m}");
+        }
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!(erf(0.0).abs() < 1e-15);
+        assert!((erf(1.0) - 0.842_700_792_949_715).abs() < 1e-9);
+        assert!((erf(-1.0) + 0.842_700_792_949_715).abs() < 1e-9);
+        assert!((erf(2.0) - 0.995_322_265_018_953).abs() < 1e-9);
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((norm_cdf(1.96) - 0.975_002_104_851_780).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gauss_hermite_integrates_polynomials() {
+        let (x, w) = gauss_hermite(10);
+        // ∫ e^{-x²} dx = sqrt(pi)
+        let s0: f64 = w.iter().sum();
+        assert!((s0 - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        // ∫ x² e^{-x²} dx = sqrt(pi)/2
+        let s2: f64 = x.iter().zip(&w).map(|(xi, wi)| wi * xi * xi).sum();
+        assert!((s2 - std::f64::consts::PI.sqrt() / 2.0).abs() < 1e-10);
+        // ∫ x⁴ e^{-x²} dx = 3 sqrt(pi)/4
+        let s4: f64 = x.iter().zip(&w).map(|(xi, wi)| wi * xi.powi(4)).sum();
+        assert!((s4 - 0.75 * std::f64::consts::PI.sqrt()).abs() < 1e-9);
+    }
+}

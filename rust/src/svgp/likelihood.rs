@@ -1,0 +1,159 @@
+//! Observation likelihoods for SVGP: Gaussian (3droad), Student-T
+//! (precipitation) and Bernoulli-logistic (covtype) — Sec. 5.1.
+
+use crate::special::ln_gamma;
+
+/// A factorized observation likelihood `p(y | f)`.
+pub trait Likelihood: Sync + Send {
+    /// `log p(y | f)`.
+    fn log_prob(&self, y: f64, f: f64) -> f64;
+    /// `∂ log p / ∂f`.
+    fn dlogp_df(&self, y: f64, f: f64) -> f64;
+    /// Mutable likelihood parameters as log-values (for hyper learning).
+    fn log_params(&self) -> Vec<f64>;
+    /// Set parameters from log-values.
+    fn set_log_params(&mut self, p: &[f64]);
+    /// Name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Gaussian: `y = f + ε`, `ε ~ N(0, σ²)`.
+#[derive(Clone, Debug)]
+pub struct Gaussian {
+    /// observation variance σ²
+    pub noise: f64,
+}
+
+impl Likelihood for Gaussian {
+    fn log_prob(&self, y: f64, f: f64) -> f64 {
+        let d = y - f;
+        -0.5 * d * d / self.noise - 0.5 * (2.0 * std::f64::consts::PI * self.noise).ln()
+    }
+    fn dlogp_df(&self, y: f64, f: f64) -> f64 {
+        (y - f) / self.noise
+    }
+    fn log_params(&self) -> Vec<f64> {
+        vec![self.noise.ln()]
+    }
+    fn set_log_params(&mut self, p: &[f64]) {
+        self.noise = p[0].exp().clamp(1e-6, 1e2);
+    }
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+/// Student-T with `ν` degrees of freedom and scale `s` (heavy-tailed noise).
+#[derive(Clone, Debug)]
+pub struct StudentT {
+    /// degrees of freedom ν (> 2 keeps variance finite)
+    pub nu: f64,
+    /// scale s²
+    pub scale2: f64,
+}
+
+impl Likelihood for StudentT {
+    fn log_prob(&self, y: f64, f: f64) -> f64 {
+        let d2 = (y - f) * (y - f);
+        ln_gamma((self.nu + 1.0) / 2.0)
+            - ln_gamma(self.nu / 2.0)
+            - 0.5 * (self.nu * std::f64::consts::PI * self.scale2).ln()
+            - 0.5 * (self.nu + 1.0) * (1.0 + d2 / (self.nu * self.scale2)).ln()
+    }
+    fn dlogp_df(&self, y: f64, f: f64) -> f64 {
+        let d = y - f;
+        (self.nu + 1.0) * d / (self.nu * self.scale2 + d * d)
+    }
+    fn log_params(&self) -> Vec<f64> {
+        vec![self.nu.ln(), self.scale2.ln()]
+    }
+    fn set_log_params(&mut self, p: &[f64]) {
+        self.nu = p[0].exp().clamp(2.1, 100.0);
+        self.scale2 = p[1].exp().clamp(1e-6, 1e2);
+    }
+    fn name(&self) -> &'static str {
+        "student_t"
+    }
+}
+
+/// Bernoulli with logistic link; labels `y ∈ {−1, +1}`.
+#[derive(Clone, Debug)]
+pub struct Bernoulli;
+
+impl Likelihood for Bernoulli {
+    fn log_prob(&self, y: f64, f: f64) -> f64 {
+        // log σ(y f) = −log(1 + e^{−y f}), numerically stable
+        let z = y * f;
+        if z > 0.0 {
+            -((-z).exp().ln_1p())
+        } else {
+            z - (z.exp().ln_1p())
+        }
+    }
+    fn dlogp_df(&self, y: f64, f: f64) -> f64 {
+        // y σ(−y f)
+        let z = y * f;
+        y / (1.0 + z.exp())
+    }
+    fn log_params(&self) -> Vec<f64> {
+        vec![]
+    }
+    fn set_log_params(&mut self, _p: &[f64]) {}
+    fn name(&self) -> &'static str {
+        "bernoulli"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_grad(lik: &dyn Likelihood, y: f64, f: f64) {
+        let h = 1e-6;
+        let fd = (lik.log_prob(y, f + h) - lik.log_prob(y, f - h)) / (2.0 * h);
+        let an = lik.dlogp_df(y, f);
+        assert!((fd - an).abs() < 1e-5, "{}: fd {fd} vs {an}", lik.name());
+    }
+
+    #[test]
+    fn gradients_match_fd() {
+        for &(y, f) in &[(0.5, 0.2), (-1.3, 0.9), (2.0, -2.0)] {
+            check_grad(&Gaussian { noise: 0.3 }, y, f);
+            check_grad(&StudentT { nu: 4.0, scale2: 0.5 }, y, f);
+        }
+        for &(y, f) in &[(1.0, 0.7), (-1.0, 0.7), (1.0, -3.0)] {
+            check_grad(&Bernoulli, y, f);
+        }
+    }
+
+    #[test]
+    fn gaussian_normalizes() {
+        // ∫ p(y|f) dy = 1 via simple quadrature
+        let lik = Gaussian { noise: 0.4 };
+        let mut acc = 0.0;
+        let h = 0.01;
+        let mut y = -8.0;
+        while y < 8.0 {
+            acc += lik.log_prob(y, 0.3).exp() * h;
+            y += h;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "integral {acc}");
+    }
+
+    #[test]
+    fn student_t_heavier_tail_than_gaussian() {
+        let g = Gaussian { noise: 1.0 };
+        let t = StudentT { nu: 3.0, scale2: 1.0 };
+        assert!(t.log_prob(6.0, 0.0) > g.log_prob(6.0, 0.0));
+    }
+
+    #[test]
+    fn bernoulli_symmetry_and_range() {
+        let b = Bernoulli;
+        for &f in &[-2.0, 0.0, 1.5] {
+            let lp = b.log_prob(1.0, f);
+            let lm = b.log_prob(-1.0, f);
+            assert!(((lp.exp() + lm.exp()) - 1.0).abs() < 1e-12);
+        }
+    }
+}

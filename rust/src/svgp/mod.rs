@@ -1,0 +1,610 @@
+//! Whitened Stochastic Variational Gaussian Processes (Sec. 5.1).
+//!
+//! The variational posterior is `q(u') = N(m', S')` over *whitened* inducing
+//! values `u' = K_ZZ^{-1/2} u`. The model holds the **natural parameters**
+//! `θ = S'^{-1} m'` and `Θ = −½ S'^{-1}` and trains them with the `O(M²)`
+//! natural-gradient update of Appx. E: every quantity the gradient needs is
+//! reachable through
+//!
+//! * `a_i = K_ZZ^{-1/2} k_{Z,x_i}` — the paper's headline whitening
+//!   operation, computed by msMINRES-CIQ (or Cholesky for the baseline), and
+//! * solves with `(−2Θ)` — preconditioned CG (Jacobi), never an `O(M³)`
+//!   inversion.
+//!
+//! Kernel/likelihood hyperparameters are trained with Adam on the minibatch
+//! expected log-likelihood (the whitened KL is hyperparameter-free); the
+//! gradients use central finite differences over the ≤4 scalar
+//! hyperparameters — see DESIGN.md (the CIQ *backward pass*, Eq. 3, is
+//! implemented and validated in [`crate::ciq`]; FD here trades a constant
+//! factor for robustness).
+
+pub mod likelihood;
+
+pub use likelihood::{Bernoulli, Gaussian, Likelihood, StudentT};
+
+use crate::ciq::{Ciq, CiqOptions};
+use crate::krylov::cg::{pcg, CgOptions};
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::kernel::cross_kernel;
+use crate::operators::{DenseOp, KernelOp, KernelType, LinearOp};
+use crate::rng::Pcg64;
+use crate::special::gauss_hermite;
+use crate::{Error, Result};
+
+/// Which backend computes `K_ZZ^{-1/2} k_Zx`.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// dense Cholesky (`O(M³)` factor + `O(M²)` per vector) — baseline
+    Cholesky,
+    /// msMINRES-CIQ (`O(J M²)` total, `O(M)` extra memory) — this paper
+    Ciq(CiqOptions),
+}
+
+/// SVGP kernel hyperparameters (isotropic).
+#[derive(Clone, Copy, Debug)]
+pub struct SvgpHyper {
+    /// lengthscale ℓ
+    pub lengthscale: f64,
+    /// outputscale s²
+    pub outputscale: f64,
+    /// jitter added to K_ZZ for SPD safety
+    pub jitter: f64,
+}
+
+impl Default for SvgpHyper {
+    fn default() -> Self {
+        SvgpHyper { lengthscale: 0.2, outputscale: 1.0, jitter: 1e-4 }
+    }
+}
+
+/// Whitened SVGP model.
+pub struct Svgp {
+    /// inducing locations `M × d`
+    pub z: Matrix,
+    /// kernel family
+    pub kind: KernelType,
+    /// kernel hyperparameters
+    pub hyper: SvgpHyper,
+    /// observation likelihood
+    pub lik: Box<dyn Likelihood>,
+    /// backend for the whitening solves
+    pub backend: Backend,
+    /// natural parameter θ = S'⁻¹ m'
+    theta: Vec<f64>,
+    /// natural parameter Θ = −½ S'⁻¹ (dense `M × M`)
+    big_theta: Matrix,
+    /// Gauss–Hermite nodes/weights
+    gh: (Vec<f64>, Vec<f64>),
+    /// msMINRES iteration telemetry (Fig. S7)
+    pub iteration_log: Vec<usize>,
+}
+
+/// Per-point variational predictive `q(f(x)) = N(mu, var)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Predictive {
+    /// mean
+    pub mu: f64,
+    /// variance (≥ tiny)
+    pub var: f64,
+}
+
+impl Svgp {
+    /// Create with `q(u') = N(0, I)` (the whitened prior).
+    pub fn new(z: Matrix, kind: KernelType, hyper: SvgpHyper, lik: Box<dyn Likelihood>, backend: Backend) -> Svgp {
+        let m = z.rows();
+        let mut big_theta = Matrix::zeros(m, m);
+        for i in 0..m {
+            big_theta[(i, i)] = -0.5;
+        }
+        Svgp {
+            z,
+            kind,
+            hyper,
+            lik,
+            backend,
+            theta: vec![0.0; m],
+            big_theta,
+            gh: gauss_hermite(20),
+            iteration_log: Vec::new(),
+        }
+    }
+
+    /// Number of inducing points.
+    pub fn m(&self) -> usize {
+        self.z.rows()
+    }
+
+    fn kzz_op(&self) -> KernelOp {
+        KernelOp::new(&self.z, self.kind, self.hyper.lengthscale, self.hyper.outputscale, self.hyper.jitter)
+    }
+
+    /// `A = K_ZZ^{-1/2} K_Zx` for a batch of points (columns of the result).
+    /// This is *the* whitening operation the paper accelerates.
+    fn whiten_cross(&mut self, x_batch: &Matrix, hyper: SvgpHyper) -> Result<Matrix> {
+        let ell = vec![hyper.lengthscale; self.z.cols()];
+        let kzx = cross_kernel(&self.z, x_batch, self.kind, &ell, hyper.outputscale); // M × B
+        let kzz = KernelOp::new(&self.z, self.kind, hyper.lengthscale, hyper.outputscale, hyper.jitter);
+        match &self.backend {
+            Backend::Cholesky => {
+                let k = kzz.to_dense();
+                let chol = Cholesky::with_jitter(&k, 0.0)?;
+                let mut a = Matrix::zeros(self.m(), x_batch.rows());
+                for j in 0..x_batch.rows() {
+                    let col = kzx.col(j);
+                    let w = chol.solve_l(&col);
+                    for i in 0..self.m() {
+                        a[(i, j)] = w[i];
+                    }
+                }
+                Ok(a)
+            }
+            Backend::Ciq(opts) => {
+                let solver = Ciq::new(opts.clone());
+                let (a, iters) = solver.invsqrt_mvm_block(&kzz, &kzx)?;
+                self.iteration_log.extend(iters);
+                Ok(a)
+            }
+        }
+    }
+
+    /// Solve `(−2Θ) X = B` column-wise with Jacobi-preconditioned CG
+    /// (`O(M²)` per solve; Appx. E footnote).
+    fn s_prime_solve(&self, b: &Matrix) -> Matrix {
+        let m = self.m();
+        let mut neg2 = self.big_theta.clone();
+        neg2.scale(-2.0);
+        let op = DenseOp::new(neg2);
+        let diag = op.diagonal();
+        let pre = move |r: &[f64]| -> Vec<f64> {
+            r.iter().zip(&diag).map(|(ri, di)| ri / di.max(1e-12)).collect()
+        };
+        let opts = CgOptions { max_iters: 4 * m, tol: 1e-8 };
+        let mut out = Matrix::zeros(m, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let (x, _res, _it) = pcg(&op, &col, Some(&pre), &opts);
+            for i in 0..m {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// Current `m' = S' θ`.
+    pub fn m_prime(&self) -> Vec<f64> {
+        let b = Matrix::from_vec(self.m(), 1, self.theta.clone());
+        self.s_prime_solve(&b).col(0)
+    }
+
+    /// Predictive `q(f)` for a batch given precomputed whitened cross `A`.
+    fn predictive_from_a(&self, a: &Matrix, hyper: SvgpHyper) -> Vec<Predictive> {
+        let b = a.cols();
+        let m_prime = self.m_prime();
+        let u = self.s_prime_solve(a); // S' a_i per column
+        let kxx = hyper.outputscale + hyper.jitter;
+        let mut out = Vec::with_capacity(b);
+        for j in 0..b {
+            let aj = a.col(j);
+            let mu = crate::util::dot(&aj, &m_prime);
+            let ata = crate::util::dot(&aj, &aj);
+            let asa = crate::util::dot(&aj, &u.col(j));
+            let var = (kxx - ata + asa).max(1e-9);
+            out.push(Predictive { mu, var });
+        }
+        out
+    }
+
+    /// Predict `q(f)` at arbitrary points.
+    pub fn predict(&mut self, x: &Matrix) -> Result<Vec<Predictive>> {
+        let hyper = self.hyper;
+        let a = self.whiten_cross(x, hyper)?;
+        Ok(self.predictive_from_a(&a, hyper))
+    }
+
+    /// Expected log-likelihood of one point under `q(f) = N(mu, var)`
+    /// (Gauss–Hermite).
+    fn expected_ll(&self, y: f64, p: Predictive) -> f64 {
+        let (nodes, weights) = (&self.gh.0, &self.gh.1);
+        let c = (2.0 * p.var).sqrt();
+        let norm = std::f64::consts::PI.sqrt();
+        nodes
+            .iter()
+            .zip(weights)
+            .map(|(x, w)| w / norm * self.lik.log_prob(y, p.mu + c * x))
+            .sum()
+    }
+
+    /// `(E[log p], dE/dmu, dE/dvar)` for one point.
+    fn expected_ll_grads(&self, y: f64, p: Predictive) -> (f64, f64, f64) {
+        let (nodes, weights) = (&self.gh.0, &self.gh.1);
+        let c = (2.0 * p.var).sqrt();
+        let norm = std::f64::consts::PI.sqrt();
+        let mut e = 0.0;
+        let mut dmu = 0.0;
+        let mut dvar = 0.0;
+        for (x, w) in nodes.iter().zip(weights) {
+            let f = p.mu + c * x;
+            let lw = w / norm;
+            e += lw * self.lik.log_prob(y, f);
+            let g = self.lik.dlogp_df(y, f);
+            dmu += lw * g;
+            dvar += lw * g * x / c.max(1e-12);
+        }
+        (e, dmu, dvar)
+    }
+
+    /// KL[q(u')‖p(u')] (Eq. S22) — `O(M³)` diagnostics only, not used by NGD.
+    pub fn kl(&self) -> Result<f64> {
+        let m = self.m();
+        let mut neg2 = self.big_theta.clone();
+        neg2.scale(-2.0);
+        let chol = Cholesky::with_jitter(&neg2, 0.0)
+            .map_err(|_| Error::Numerical("Θ lost negative-definiteness".into()))?;
+        // S' = (−2Θ)^{-1}: Tr(S') via solves, log|S'| = −log|−2Θ|
+        let mut tr = 0.0;
+        for i in 0..m {
+            let mut e = vec![0.0; m];
+            e[i] = 1.0;
+            tr += chol.solve(&e)[i];
+        }
+        let mp = self.m_prime();
+        let mtm = crate::util::dot(&mp, &mp);
+        Ok(0.5 * (mtm + tr + chol.logdet() - m as f64))
+    }
+
+    /// `O(M²)` stochastic KL (Appx. E): Hutchinson trace estimation for
+    /// `Tr(S')` and stochastic Lanczos quadrature for `log|S'|`, both
+    /// through MVMs with `(−2Θ)` only — the forward-pass costing the paper
+    /// prescribes when `M` is too large for dense factorization.
+    pub fn kl_stochastic(&self, probes: usize, seed: u64) -> Result<f64> {
+        let m = self.m();
+        let mut neg2 = self.big_theta.clone();
+        neg2.scale(-2.0);
+        let op = DenseOp::new(neg2);
+        let opts = crate::krylov::slq::SlqOptions {
+            probes,
+            lanczos_iters: 30.min(m),
+            seed,
+        };
+        // Tr(S') = tr((−2Θ)^{-1}); log|S'| = −log|−2Θ|
+        let tr_s = crate::krylov::slq::trace_inverse(&op, &opts)?;
+        let logdet_neg2 = crate::krylov::slq::logdet(&op, &opts)?;
+        let mp = self.m_prime();
+        let mtm = crate::util::dot(&mp, &mp);
+        Ok(0.5 * (mtm + tr_s + logdet_neg2 - m as f64))
+    }
+
+    /// Minibatch ELBO estimate (diagnostics; Appx. E notes NGD needs only
+    /// gradients, so the training loop never calls this).
+    pub fn elbo(&mut self, x: &Matrix, y: &[f64], n_total: usize) -> Result<f64> {
+        let preds = self.predict(x)?;
+        let scale = n_total as f64 / x.rows() as f64;
+        let ll: f64 = preds.iter().zip(y).map(|(p, &yy)| self.expected_ll(yy, *p)).sum();
+        Ok(scale * ll - self.kl()?)
+    }
+
+    /// One natural-gradient step on `(θ, Θ)` (Appx. E) for a minibatch.
+    /// Returns the minibatch expected log-likelihood (pre-update).
+    pub fn ngd_step(&mut self, x: &Matrix, y: &[f64], n_total: usize, lr: f64) -> Result<f64> {
+        let hyper = self.hyper;
+        let a = self.whiten_cross(x, hyper)?; // M × B
+        let preds = self.predictive_from_a(&a, hyper);
+        let scale = n_total as f64 / x.rows() as f64;
+        let m = self.m();
+        let b = x.rows();
+
+        // gradient wrt expectation params (η, H)
+        let mut g_eta = vec![0.0; m];
+        let mut g_h = Matrix::zeros(m, m);
+        let mut ll_acc = 0.0;
+        for j in 0..b {
+            let (e, dmu, dvar) = self.expected_ll_grads(y[j], preds[j]);
+            ll_acc += e;
+            let aj = a.col(j);
+            let coef_eta = scale * (dmu - 2.0 * dvar * preds[j].mu);
+            for i in 0..m {
+                g_eta[i] += coef_eta * aj[i];
+            }
+            let ch = scale * dvar;
+            // g_h += ch * a_j a_jᵀ
+            for i in 0..m {
+                let ai = ch * aj[i];
+                if ai != 0.0 {
+                    let row = g_h.row_mut(i);
+                    for (rk, ak) in row.iter_mut().zip(&aj) {
+                        *rk += ai * ak;
+                    }
+                }
+            }
+        }
+        // KL gradients: dKL/dη = θ, dKL/dH = ½I + Θ
+        for i in 0..m {
+            g_eta[i] -= self.theta[i];
+        }
+        for i in 0..m {
+            for j2 in 0..m {
+                let kl_term = if i == j2 { 0.5 } else { 0.0 } + self.big_theta[(i, j2)];
+                g_h[(i, j2)] -= kl_term;
+            }
+        }
+        // natural-gradient ascent: natural params += lr * expectation-grads
+        for i in 0..m {
+            self.theta[i] += lr * g_eta[i];
+        }
+        for i in 0..m {
+            for j2 in 0..m {
+                self.big_theta[(i, j2)] += lr * g_h[(i, j2)];
+            }
+        }
+        Ok(ll_acc / b as f64)
+    }
+
+    /// Minibatch expected log-likelihood under given hypers (for FD hyper
+    /// gradients; the whitened KL does not depend on the hypers).
+    fn batch_ll(&mut self, x: &Matrix, y: &[f64], hyper: SvgpHyper) -> Result<f64> {
+        let a = self.whiten_cross(x, hyper)?;
+        let preds = self.predictive_from_a(&a, hyper);
+        Ok(preds.iter().zip(y).map(|(p, &yy)| self.expected_ll(yy, *p)).sum::<f64>() / x.rows() as f64)
+    }
+
+    /// Adam state for hyperparameters.
+    fn hyper_logs(&self) -> Vec<f64> {
+        let mut v = vec![self.hyper.lengthscale.ln(), self.hyper.outputscale.ln()];
+        v.extend(self.lik.log_params());
+        v
+    }
+
+    fn set_hyper_logs(&mut self, logs: &[f64]) {
+        self.hyper.lengthscale = logs[0].exp().clamp(1e-3, 10.0);
+        self.hyper.outputscale = logs[1].exp().clamp(1e-3, 100.0);
+        self.lik.set_log_params(&logs[2..]);
+    }
+
+    /// One Adam step on kernel + likelihood hyperparameters via central
+    /// finite differences of the minibatch expected log-likelihood.
+    pub fn hyper_step(&mut self, x: &Matrix, y: &[f64], state: &mut AdamState, lr: f64) -> Result<()> {
+        let logs = self.hyper_logs();
+        let mut grad = vec![0.0; logs.len()];
+        let h = 1e-3;
+        for p in 0..logs.len() {
+            let mut lp = logs.clone();
+            lp[p] += h;
+            self.set_hyper_logs(&lp);
+            let hyper_p = self.hyper;
+            let up = self.batch_ll(x, y, hyper_p)?;
+            lp[p] -= 2.0 * h;
+            self.set_hyper_logs(&lp);
+            let hyper_m = self.hyper;
+            let um = self.batch_ll(x, y, hyper_m)?;
+            grad[p] = (up - um) / (2.0 * h);
+            self.set_hyper_logs(&logs);
+        }
+        let new_logs = state.step(&logs, &grad, lr);
+        self.set_hyper_logs(&new_logs);
+        Ok(())
+    }
+}
+
+/// Minimal Adam optimizer state (ascent).
+pub struct AdamState {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: i32,
+}
+
+impl AdamState {
+    /// For `n` parameters.
+    pub fn new(n: usize) -> AdamState {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// One ascent step; returns updated parameters.
+    pub fn step(&mut self, params: &[f64], grad: &[f64], lr: f64) -> Vec<f64> {
+        let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+        self.t += 1;
+        let mut out = params.to_vec();
+        for i in 0..params.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let mh = self.m[i] / (1.0 - b1.powi(self.t));
+            let vh = self.v[i] / (1.0 - b2.powi(self.t));
+            out[i] += lr * mh / (vh.sqrt() + eps);
+        }
+        out
+    }
+}
+
+/// Training statistics.
+pub struct TrainStats {
+    /// per-step minibatch mean expected log-likelihood
+    pub ll_trace: Vec<f64>,
+    /// wall-clock seconds
+    pub seconds: f64,
+}
+
+/// Train an SVGP with alternating NGD (variational) and Adam (hypers).
+pub fn train(
+    model: &mut Svgp,
+    data: &crate::data::Dataset,
+    steps: usize,
+    batch: usize,
+    lr_ngd: f64,
+    lr_hyper: f64,
+    rng: &mut Pcg64,
+) -> Result<TrainStats> {
+    let mut adam = AdamState::new(model.hyper_logs().len());
+    let n = data.len();
+    let mut ll_trace = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let idx = data.minibatch(batch, rng);
+        let mut xb = Matrix::zeros(idx.len(), data.x.cols());
+        let mut yb = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            for c in 0..data.x.cols() {
+                xb[(r, c)] = data.x[(i, c)];
+            }
+            yb.push(data.y[i]);
+        }
+        let ll = model.ngd_step(&xb, &yb, n, lr_ngd)?;
+        ll_trace.push(ll);
+        if lr_hyper > 0.0 && step % 2 == 1 {
+            model.hyper_step(&xb, &yb, &mut adam, lr_hyper)?;
+        }
+    }
+    Ok(TrainStats { ll_trace, seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// Test metrics.
+pub struct TestMetrics {
+    /// mean negative predictive log-likelihood
+    pub nll: f64,
+    /// RMSE of the predictive mean (regression) / 0-1 error (classification)
+    pub error: f64,
+}
+
+/// Evaluate predictive NLL and error on held-out data.
+pub fn evaluate(model: &mut Svgp, data: &crate::data::Dataset) -> Result<TestMetrics> {
+    let preds = model.predict(&data.x)?;
+    let (nodes, weights) = gauss_hermite(20);
+    let norm = std::f64::consts::PI.sqrt();
+    let mut nll = 0.0;
+    let mut err = 0.0;
+    let classification = model.lik.name() == "bernoulli";
+    for (p, &y) in preds.iter().zip(&data.y) {
+        // log E_q[p(y|f)] via GH (log-sum-exp for stability)
+        let c = (2.0 * p.var).sqrt();
+        let mut max_lp = f64::NEG_INFINITY;
+        let lps: Vec<f64> = nodes
+            .iter()
+            .map(|x| {
+                let lp = model.lik.log_prob(y, p.mu + c * x);
+                max_lp = max_lp.max(lp);
+                lp
+            })
+            .collect();
+        let s: f64 = lps.iter().zip(&weights).map(|(lp, w)| w / norm * (lp - max_lp).exp()).sum();
+        nll -= max_lp + s.max(1e-300).ln();
+        if classification {
+            err += if (p.mu >= 0.0) != (y >= 0.0) { 1.0 } else { 0.0 };
+        } else {
+            err += (p.mu - y) * (p.mu - y);
+        }
+    }
+    let n = data.len() as f64;
+    Ok(TestMetrics {
+        nll: nll / n,
+        error: if classification { err / n } else { (err / n).sqrt() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_regression;
+
+    fn small_model(backend: Backend, m: usize, data: &crate::data::Dataset, rng: &mut Pcg64) -> Svgp {
+        let z = data.kmeans_centers(m, 4, rng);
+        Svgp::new(
+            z,
+            KernelType::Rbf,
+            SvgpHyper { lengthscale: 0.15, outputscale: 1.0, jitter: 1e-4 },
+            Box::new(Gaussian { noise: 0.05 }),
+            backend,
+        )
+    }
+
+    #[test]
+    fn ngd_increases_data_fit() {
+        let data = gaussian_regression(300, 2, 0.1, 1);
+        let mut rng = Pcg64::seeded(2);
+        let mut model = small_model(Backend::Cholesky, 24, &data, &mut rng);
+        let stats = train(&mut model, &data, 25, 64, 0.5, 0.0, &mut rng).unwrap();
+        let first = crate::util::mean(&stats.ll_trace[..5]);
+        let last = crate::util::mean(&stats.ll_trace[stats.ll_trace.len() - 5..]);
+        assert!(last > first, "expected LL to improve: {first} -> {last}");
+    }
+
+    #[test]
+    fn ciq_and_cholesky_reach_similar_fits() {
+        let data = gaussian_regression(250, 2, 0.1, 3);
+        let mut rng = Pcg64::seeded(4);
+        let mut chol = small_model(Backend::Cholesky, 20, &data, &mut rng);
+        let mut rng2 = Pcg64::seeded(4);
+        let mut ciq = small_model(
+            Backend::Ciq(CiqOptions { tol: 1e-5, max_iters: 200, ..Default::default() }),
+            20,
+            &data,
+            &mut rng2,
+        );
+        let mut rng_a = Pcg64::seeded(5);
+        let mut rng_b = Pcg64::seeded(5);
+        train(&mut chol, &data, 30, 64, 0.5, 0.0, &mut rng_a).unwrap();
+        train(&mut ciq, &data, 30, 64, 0.5, 0.0, &mut rng_b).unwrap();
+        let m_chol = evaluate(&mut chol, &data).unwrap();
+        let m_ciq = evaluate(&mut ciq, &data).unwrap();
+        // whitening differs by an orthogonal rotation; fits should agree
+        assert!(
+            (m_chol.nll - m_ciq.nll).abs() < 0.25,
+            "NLL chol {} vs ciq {}",
+            m_chol.nll,
+            m_ciq.nll
+        );
+        assert!(!ciq.iteration_log.is_empty(), "CIQ should log msMINRES iterations");
+    }
+
+    #[test]
+    fn gaussian_fit_beats_constant_predictor() {
+        let data = gaussian_regression(400, 2, 0.15, 6);
+        let mut rng = Pcg64::seeded(7);
+        let (train_set, test_set) = data.split(0.8, &mut rng);
+        let mut model = small_model(Backend::Cholesky, 32, &train_set, &mut rng);
+        train(&mut model, &train_set, 40, 64, 0.5, 0.02, &mut rng).unwrap();
+        let m = evaluate(&mut model, &test_set).unwrap();
+        // y is standardized, so a constant predictor has RMSE ≈ 1
+        assert!(m.error < 0.8, "SVGP RMSE {} should beat constant 1.0", m.error);
+    }
+
+    #[test]
+    fn bernoulli_classification_learns() {
+        let data = crate::data::binary_classification(400, 2, 0.05, 8);
+        let mut rng = Pcg64::seeded(9);
+        let z = data.kmeans_centers(24, 4, &mut rng);
+        let mut model = Svgp::new(
+            z,
+            KernelType::Rbf,
+            SvgpHyper { lengthscale: 0.2, outputscale: 1.5, jitter: 1e-4 },
+            Box::new(Bernoulli),
+            Backend::Cholesky,
+        );
+        train(&mut model, &data, 40, 64, 0.4, 0.0, &mut rng).unwrap();
+        let m = evaluate(&mut model, &data).unwrap();
+        assert!(m.error < 0.35, "0/1 error {} should beat chance", m.error);
+    }
+
+    #[test]
+    fn stochastic_kl_matches_exact() {
+        let data = gaussian_regression(200, 2, 0.1, 12);
+        let mut rng = Pcg64::seeded(13);
+        let mut model = small_model(Backend::Cholesky, 16, &data, &mut rng);
+        train(&mut model, &data, 15, 64, 0.5, 0.0, &mut rng).unwrap();
+        let exact = model.kl().unwrap();
+        let est = model.kl_stochastic(60, 14).unwrap();
+        assert!(
+            (est - exact).abs() < 0.15 * exact.abs().max(1.0),
+            "stochastic KL {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn kl_zero_at_init_and_positive_after() {
+        let data = gaussian_regression(100, 2, 0.1, 10);
+        let mut rng = Pcg64::seeded(11);
+        let mut model = small_model(Backend::Cholesky, 12, &data, &mut rng);
+        let kl0 = model.kl().unwrap();
+        assert!(kl0.abs() < 1e-8, "KL at init {kl0}");
+        train(&mut model, &data, 10, 32, 0.5, 0.0, &mut rng).unwrap();
+        let kl1 = model.kl().unwrap();
+        assert!(kl1 > 0.0, "KL after training {kl1}");
+    }
+}

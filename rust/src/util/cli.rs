@@ -1,0 +1,120 @@
+//! Minimal command-line flag parser (no `clap` available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Used by the `ciq` binary, the examples, and the bench drivers.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// Flag map (keys without leading dashes).
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]; also skips the
+    /// `--bench` token cargo passes to bench binaries).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"))
+    }
+
+    /// Get a flag as a string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Boolean flag (present and not "false").
+    pub fn has(&self, key: &str) -> bool {
+        matches!(self.flags.get(key), Some(v) if v != "false")
+    }
+
+    /// Comma-separated list of typed values, with default.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.flags.get(key) {
+            Some(s) => s
+                .split(',')
+                .filter_map(|tok| tok.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = parse(&["run", "--n", "100", "--q=8", "--fast", "--name", "x"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_or("n", 0usize), 100);
+        assert_eq!(a.get_or("q", 0usize), 8);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("n", 7usize), 7);
+        assert_eq!(a.get_or("tol", 0.5f64), 0.5);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--sizes", "10, 20,30"]);
+        assert_eq!(a.get_list("sizes", &[1usize]), vec![10, 20, 30]);
+        assert_eq!(a.get_list("other", &[1usize, 2]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable
+//! offline). Runs a property over many seeded random cases and reports the
+//! first failing seed so failures are reproducible.
+
+use crate::rng::Pcg64;
+
+/// Configuration for [`check`].
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 32, seed: 0xC1A0 }
+    }
+}
+
+/// Run `prop(rng, case_index)` for `cfg.cases` seeded cases; panic with the
+/// failing seed on the first `Err`.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.seed + i as u64;
+        let mut rng = Pcg64::seeded(seed);
+        if let Err(msg) = prop(&mut rng, i) {
+            panic!("property '{name}' failed at case {i} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    check(Config::default(), name, prop);
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        check(Config { cases: 10, seed: 1 }, "count", |_rng, _i| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+        check_default("uniform in range", |rng, _| {
+            let u = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&u), "u={u}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check(Config { cases: 3, seed: 9 }, "always fails", |_, _| {
+            Err("nope".to_string())
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Scoped data parallelism over index ranges (no rayon offline — built on
+//! `std::thread::scope` with an atomic work queue).
+//!
+//! The kernel-matrix MVMs (the hot path of the whole system) split their row
+//! range into chunks and let a fixed set of worker threads steal chunks from
+//! a shared counter. Results are written into disjoint slices of the output,
+//! so no locking is needed on the data itself.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cached; `CIQ_THREADS` env overrides).
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("CIQ_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Run `body(start, end)` over chunked sub-ranges of `0..n` in parallel.
+///
+/// `body` must be safe to call concurrently on disjoint ranges. Chunks are
+/// `chunk`-sized except possibly the last. Falls back to a serial loop when
+/// the range is small or only one thread is available.
+pub fn parallel_for_chunks<F>(n: usize, chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let chunk = chunk.max(1);
+    let nthreads = num_threads();
+    let nchunks = n.div_ceil(chunk);
+    if nthreads == 1 || nchunks <= 1 {
+        let mut s = 0;
+        while s < n {
+            let e = (s + chunk).min(n);
+            body(s, e);
+            s = e;
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let workers = nthreads.min(nchunks);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let c = counter.fetch_add(1, Ordering::Relaxed);
+                if c >= nchunks {
+                    break;
+                }
+                let s = c * chunk;
+                let e = (s + chunk).min(n);
+                body(s, e);
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n`, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for_chunks(n, 1, |s, e| {
+            for i in s..e {
+                **slots[i].lock().unwrap() = f(i);
+            }
+        });
+    }
+    out
+}
+
+/// Write-disjoint parallel fill: partitions `out` into `chunk`-row blocks and
+/// calls `body(block_start, block_slice)` concurrently.
+pub fn parallel_fill<T, F>(out: &mut [T], chunk: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let chunk = chunk.max(1);
+    let nthreads = num_threads();
+    if nthreads == 1 || n <= chunk {
+        for (ci, block) in out.chunks_mut(chunk).enumerate() {
+            body(ci * chunk, block);
+        }
+        return;
+    }
+    let blocks: Vec<(usize, &mut [T])> = {
+        let mut v = Vec::new();
+        let mut rest = out;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            v.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        v
+    };
+    let counter = AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        blocks.into_iter().map(|b| std::sync::Mutex::new(Some(b))).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads.min(slots.len()) {
+            scope.spawn(|| loop {
+                let c = counter.fetch_add(1, Ordering::Relaxed);
+                if c >= slots.len() {
+                    break;
+                }
+                if let Some((start, block)) = slots[c].lock().unwrap().take() {
+                    body(start, block);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let n = 1003;
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(n, 64, |s, e| {
+            let local: u64 = (s..e).map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        let expect: u64 = (0..n as u64).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn parallel_fill_writes_all() {
+        let mut v = vec![0usize; 777];
+        parallel_fill(&mut v, 50, |start, block| {
+            for (k, x) in block.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_in_order() {
+        let v = parallel_map(100, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_for_chunks(0, 8, |_, _| panic!("must not be called"));
+        let mut v: Vec<u8> = vec![];
+        parallel_fill(&mut v, 8, |_, _| panic!("must not be called"));
+    }
+}

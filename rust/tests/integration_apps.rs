@@ -1,0 +1,134 @@
+//! Application-level smoke + correctness integration: SVGP, BO, Gibbs —
+//! the three systems of Sec. 5 running on their real (synthetic) workloads.
+
+use ciq::bo::testfns::Branin2;
+use ciq::bo::{run_bo, BoConfig, Sampler};
+use ciq::ciq::CiqOptions;
+use ciq::data;
+use ciq::gibbs::{reconstruct, GibbsConfig};
+use ciq::operators::KernelType;
+use ciq::rng::Pcg64;
+use ciq::svgp::{evaluate, train, Backend, Bernoulli, Gaussian, StudentT, Svgp, SvgpHyper};
+
+#[test]
+fn svgp_all_three_likelihoods_train() {
+    let mut rng = Pcg64::seeded(1);
+    // (dataset, likelihood) triples mirroring Fig. 3
+    let cases: Vec<(data::Dataset, Box<dyn ciq::svgp::Likelihood>)> = vec![
+        (data::gaussian_regression(250, 2, 0.1, 1), Box::new(Gaussian { noise: 0.05 })),
+        (data::student_t_regression(250, 2, 0.2, 4.0, 2), Box::new(StudentT { nu: 4.0, scale2: 0.05 })),
+        (data::binary_classification(250, 2, 0.05, 3), Box::new(Bernoulli)),
+    ];
+    for (ds, lik) in cases {
+        let z = ds.kmeans_centers(16, 4, &mut rng);
+        let mut model = Svgp::new(
+            z,
+            KernelType::Rbf,
+            SvgpHyper { lengthscale: 0.2, outputscale: 1.0, jitter: 1e-4 },
+            lik,
+            Backend::Ciq(CiqOptions { tol: 1e-4, max_iters: 150, ..Default::default() }),
+        );
+        let stats = train(&mut model, &ds, 20, 64, 0.4, 0.0, &mut rng).unwrap();
+        let first = stats.ll_trace[0];
+        let last = *stats.ll_trace.last().unwrap();
+        assert!(
+            last > first,
+            "{}: LL should improve ({first} -> {last})",
+            model.lik.name()
+        );
+        let m = evaluate(&mut model, &ds).unwrap();
+        assert!(m.nll.is_finite(), "{} NLL not finite", model.lik.name());
+    }
+}
+
+#[test]
+fn svgp_more_inducing_points_fit_no_worse() {
+    // Fig. 3's qualitative claim: NLL improves (or at least does not
+    // degrade) with larger M.
+    let ds = data::gaussian_regression(500, 2, 0.1, 5);
+    let mut nlls = Vec::new();
+    for m in [8usize, 48] {
+        let mut rng = Pcg64::seeded(6);
+        let z = ds.kmeans_centers(m, 5, &mut rng);
+        let mut model = Svgp::new(
+            z,
+            KernelType::Rbf,
+            SvgpHyper { lengthscale: 0.15, outputscale: 1.0, jitter: 1e-4 },
+            Box::new(Gaussian { noise: 0.05 }),
+            Backend::Cholesky,
+        );
+        train(&mut model, &ds, 40, 64, 0.5, 0.0, &mut rng).unwrap();
+        nlls.push(evaluate(&mut model, &ds).unwrap().nll);
+    }
+    assert!(
+        nlls[1] < nlls[0] + 0.05,
+        "M=48 NLL {} should be <= M=8 NLL {}",
+        nlls[1],
+        nlls[0]
+    );
+}
+
+#[test]
+fn bo_larger_candidate_sets_no_worse() {
+    // Fig. 4's qualitative claim over a few replications on Branin.
+    let problem = Branin2;
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    for rep in 0..2u64 {
+        for (t, out) in [(32usize, &mut small), (384, &mut large)] {
+            let cfg = BoConfig {
+                candidates: t,
+                evaluations: 20,
+                init: 6,
+                batch: 3,
+                sampler: Sampler::Ciq,
+                fit_steps: 6,
+                ciq: ciq::ciq::CiqOptions { tol: 1e-3, max_iters: 120, ..Default::default() },
+                ..Default::default()
+            };
+            out.push(run_bo(&problem, &cfg, 40 + rep).unwrap().best());
+        }
+    }
+    let (ms, ml) = (ciq::util::mean(&small), ciq::util::mean(&large));
+    assert!(ml <= ms + 0.5, "T=512 ({ml}) should be ≈≤ T=32 ({ms})");
+}
+
+#[test]
+fn gibbs_posterior_mean_stable_across_seeds() {
+    let cfg = GibbsConfig { n: 20, samples: 20, burn_in: 8, ..Default::default() };
+    let r1 = reconstruct(&cfg, 1).unwrap();
+    let r2 = reconstruct(&cfg, 2).unwrap();
+    // different chains, same posterior: reconstructions should agree broadly
+    let diff = ciq::util::rel_err(&r1.reconstruction, &r2.reconstruction);
+    assert!(diff < 0.15, "chains disagree: {diff}");
+    assert!(r1.mean_ciq_iters > 0.0);
+}
+
+#[test]
+fn exact_gp_surrogate_pipeline() {
+    // end-to-end surrogate: fit on Branin evals, posterior sampling sane
+    use ciq::gp::{ExactGp, GpHyper};
+    use ciq::linalg::Matrix;
+    let problem = Branin2;
+    let mut rng = Pcg64::seeded(8);
+    let n = 25;
+    let mut x = Matrix::zeros(n, 2);
+    let mut y = Vec::new();
+    for i in 0..n {
+        let p = [rng.uniform(), rng.uniform()];
+        x[(i, 0)] = p[0];
+        x[(i, 1)] = p[1];
+        y.push(ciq::bo::Problem::eval(&problem, &p));
+    }
+    let ym = ciq::util::mean(&y);
+    let ys = ciq::util::std_dev(&y).max(1e-9);
+    let y_std: Vec<f64> = y.iter().map(|v| (v - ym) / ys).collect();
+    let mut gp = ExactGp::new(x, y_std, KernelType::Matern52, GpHyper::default());
+    gp.fit_hypers(15, 0.1).unwrap();
+    let cands = Matrix::randn(200, 2, &mut rng);
+    let s = gp
+        .sample_posterior_ciq(&cands, &CiqOptions { tol: 1e-5, ..Default::default() }, &mut rng)
+        .unwrap();
+    assert_eq!(s.len(), 200);
+    assert!(s.iter().all(|v| v.is_finite()));
+}

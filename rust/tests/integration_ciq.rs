@@ -1,0 +1,182 @@
+//! Integration tests for the full CIQ pipeline: statistical correctness of
+//! sampling/whitening, preconditioning, and the backward pass — on kernel
+//! operators (never materialized) rather than toy dense matrices.
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::linalg::eigen::{spd_inv_sqrt, spd_sqrt};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::precond::PivotedCholesky;
+use ciq::prop_assert;
+use ciq::rng::Pcg64;
+use ciq::util::proptest::{check, Config};
+use ciq::util::rel_err;
+
+#[test]
+fn property_ciq_matches_eigen_oracle_on_kernels() {
+    check(Config { cases: 8, seed: 1 }, "CIQ vs eigendecomposition", |rng, case| {
+        let n = 40 + rng.below(30);
+        let d = 1 + case % 3;
+        let x = Matrix::randn(n, d, rng);
+        let kinds = [KernelType::Rbf, KernelType::Matern32, KernelType::Matern52];
+        let op = KernelOp::new(&x, kinds[case % 3], 0.8, 1.2, 0.3);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, q_points: 10, ..Default::default() });
+        let dense = op.to_dense();
+        let sq = solver.sqrt_mvm(&op, &b).unwrap();
+        let exact = spd_sqrt(&dense).unwrap().matvec(&b);
+        let e1 = rel_err(&sq.solution, &exact);
+        prop_assert!(e1 < 1e-4, "sqrt err {e1}");
+        let inv = solver.invsqrt_mvm(&op, &b).unwrap();
+        let exact_i = spd_inv_sqrt(&dense).unwrap().matvec(&b);
+        let e2 = rel_err(&inv.solution, &exact_i);
+        prop_assert!(e2 < 1e-4, "invsqrt err {e2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn sample_covariance_converges_to_k() {
+    // Empirical covariance of CIQ samples ≈ K (the Fig. S4 statistic).
+    let mut rng = Pcg64::seeded(2);
+    let n = 32;
+    let x = Matrix::randn(n, 2, &mut rng);
+    let op = KernelOp::new(&x, KernelType::Rbf, 0.8, 1.0, 0.1);
+    let k = op.to_dense();
+    let solver = Ciq::new(CiqOptions { tol: 1e-6, ..Default::default() });
+    let bounds = solver.bounds(&op).unwrap();
+    let reps = 600;
+    let mut acc = Matrix::zeros(n, n);
+    for _ in 0..reps {
+        let eps: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let s = solver.sqrt_with_bounds(&op, &eps, Some(bounds)).unwrap().solution;
+        for i in 0..n {
+            for j in 0..n {
+                acc[(i, j)] += s[i] * s[j] / reps as f64;
+            }
+        }
+    }
+    let err = (&acc - &k).fro_norm() / k.fro_norm();
+    assert!(err < 0.25, "empirical covariance rel err {err}");
+}
+
+#[test]
+fn whitened_vectors_are_white() {
+    // Cov(K^{-1/2} eps) = K^{-1} ... instead check: whiten(K^{1/2} eps) has
+    // identity covariance.
+    let mut rng = Pcg64::seeded(3);
+    let n = 24;
+    let x = Matrix::randn(n, 2, &mut rng);
+    let op = KernelOp::new(&x, KernelType::Matern52, 0.7, 1.0, 0.2);
+    let solver = Ciq::new(CiqOptions { tol: 1e-7, ..Default::default() });
+    let bounds = solver.bounds(&op).unwrap();
+    let reps = 600;
+    let mut acc = Matrix::zeros(n, n);
+    for _ in 0..reps {
+        let eps: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let s = solver.sqrt_with_bounds(&op, &eps, Some(bounds)).unwrap().solution;
+        let w = solver.invsqrt_with_bounds(&op, &s, Some(bounds)).unwrap().solution;
+        for i in 0..n {
+            for j in 0..n {
+                acc[(i, j)] += w[i] * w[j] / reps as f64;
+            }
+        }
+    }
+    let err = (&acc - &Matrix::eye(n)).fro_norm() / (n as f64).sqrt();
+    assert!(err < 0.25, "whitened covariance deviates from I: {err}");
+}
+
+#[test]
+fn preconditioned_ciq_cuts_iterations_on_ill_conditioned_kernel() {
+    let mut rng = Pcg64::seeded(4);
+    let n = 300;
+    let x = Matrix::randn(n, 1, &mut rng);
+    let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-5);
+    let solver = Ciq::new(CiqOptions { tol: 1e-4, max_iters: 2000, ..Default::default() });
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let plain = solver.invsqrt_mvm(&op, &b).unwrap();
+    for rank in [25, 100] {
+        let pc = PivotedCholesky::new(&op, rank, 1e-5, 1e-14).unwrap();
+        let pre = solver.invsqrt_mvm_preconditioned(&op, &pc, &b).unwrap();
+        assert!(
+            pre.iterations <= plain.iterations,
+            "rank {rank}: precond {} vs plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+    // higher rank should not be slower than lower rank (allow slack of 1.2x)
+    let lo = solver
+        .invsqrt_mvm_preconditioned(&op, &PivotedCholesky::new(&op, 25, 1e-5, 1e-14).unwrap(), &b)
+        .unwrap();
+    let hi = solver
+        .invsqrt_mvm_preconditioned(&op, &PivotedCholesky::new(&op, 100, 1e-5, 1e-14).unwrap(), &b)
+        .unwrap();
+    assert!(
+        (hi.iterations as f64) <= 1.2 * lo.iterations as f64 + 5.0,
+        "rank-100 ({}) should beat rank-25 ({})",
+        hi.iterations,
+        lo.iterations
+    );
+}
+
+#[test]
+fn backward_pass_kernel_hyper_gradient_matches_fd() {
+    // The paper's Eq. 3 gradient contracted against dK/d(log ell) must match
+    // finite differences of f = vᵀ K^{-1/2} b through the exact map.
+    let mut rng = Pcg64::seeded(5);
+    let n = 16;
+    let x = Matrix::randn(n, 2, &mut rng);
+    let (ell, s2, noise) = (0.9, 1.1, 0.4);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let solver = Ciq::new(CiqOptions { tol: 1e-11, q_points: 14, ..Default::default() });
+
+    let op = KernelOp::new(&x, KernelType::Rbf, ell, s2, noise);
+    let fwd = solver.invsqrt_mvm(&op, &b).unwrap();
+    let bwd = solver.backward(&op, &fwd, &v).unwrap();
+    // analytic: sum_q -w_q l_qᵀ (dK/dlogell) r_q via the fused contraction
+    let mut analytic = 0.0;
+    for (w, l, r) in &bwd.terms {
+        let noise_free = KernelOp::new(&x, KernelType::Rbf, ell, s2, 0.0);
+        let (g_ell, _g_s2) = noise_free.grad_contract(l, r);
+        analytic += -w * g_ell;
+    }
+    // FD through exact eigendecomposition
+    let f = |ell: f64| -> f64 {
+        let o = KernelOp::new(&x, KernelType::Rbf, ell, s2, noise);
+        let m = spd_inv_sqrt(&o.to_dense()).unwrap();
+        ciq::util::dot(&v, &m.matvec(&b))
+    };
+    let h: f64 = 1e-4;
+    let fd = (f(ell * h.exp()) - f(ell * (-h).exp())) / (2.0 * h);
+    assert!(
+        (analytic - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+        "hyper gradient: analytic {analytic} vs fd {fd}"
+    );
+}
+
+#[test]
+fn q_sweep_error_profile_matches_fig1() {
+    // Fig. 1's qualitative claim: error decays with Q and plateaus at the
+    // msMINRES tolerance; Q=8 reaches <1e-4 with tol 1e-5.
+    let mut rng = Pcg64::seeded(6);
+    let n = 80;
+    let x = Matrix::randn(n, 1, &mut rng);
+    let op = KernelOp::new(&x, KernelType::Matern52, 0.6, 1.0, 0.1);
+    let dense = op.to_dense();
+    let exact_map = spd_sqrt(&dense).unwrap();
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = exact_map.matvec(&b);
+    let mut prev = f64::INFINITY;
+    for q in [2usize, 4, 6, 8] {
+        let solver = Ciq::new(CiqOptions { q_points: q, tol: 1e-6, max_iters: 1000, ..Default::default() });
+        let approx = solver.sqrt_mvm(&op, &b).unwrap();
+        let err = rel_err(&approx.solution, &exact);
+        assert!(err <= prev * 1.5 + 1e-12, "error not decaying at Q={q}: {err} (prev {prev})");
+        if q == 8 {
+            assert!(err < 1e-4, "Q=8 error {err} (paper: <1e-4)");
+        }
+        prev = prev.min(err);
+    }
+}

@@ -1,0 +1,146 @@
+//! Coordinator invariants under concurrency (property-style): every request
+//! answered exactly once, batched results identical to solo solves, routing
+//! by operator name, metrics accounting.
+
+use ciq::ciq::CiqOptions;
+use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::linalg::eigen::spd_inv_sqrt;
+use ciq::linalg::Matrix;
+use ciq::operators::DenseOp;
+use ciq::rng::Pcg64;
+use ciq::util::rel_err;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seeded(seed);
+    let a = Matrix::randn(n, n, &mut rng);
+    let mut k = a.matmul(&a.transpose());
+    for i in 0..n {
+        k[(i, i)] += n as f64 * 0.5;
+    }
+    k
+}
+
+fn service(ops: Vec<(&str, Matrix)>, max_batch: usize) -> SamplingService {
+    let mut map: HashMap<String, SharedOp> = HashMap::new();
+    for (name, k) in ops {
+        map.insert(name.to_string(), Arc::new(DenseOp::new(k)));
+    }
+    SamplingService::start(
+        ServiceConfig {
+            max_batch,
+            max_wait: Duration::from_millis(3),
+            workers: 3,
+            ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+        },
+        map,
+    )
+}
+
+#[test]
+fn property_batched_equals_solo_across_random_traffic() {
+    let n = 18;
+    let k1 = spd(n, 1);
+    let k2 = spd(n, 2);
+    let inv1 = spd_inv_sqrt(&k1).unwrap();
+    let inv2 = spd_inv_sqrt(&k2).unwrap();
+    let svc = service(vec![("a", k1.clone()), ("b", k2.clone())], 8);
+
+    // random interleaved traffic targeting both operators
+    let mut rng = Pcg64::seeded(3);
+    let mut expected = Vec::new();
+    let mut tickets = Vec::new();
+    for i in 0..40 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (name, inv) = if i % 3 == 0 { ("b", &inv2) } else { ("a", &inv1) };
+        expected.push(inv.matvec(&b));
+        tickets.push(svc.submit(name, ReqKind::Whiten, b));
+    }
+    for (t, e) in tickets.into_iter().zip(&expected) {
+        let got = t.wait().unwrap();
+        assert!(rel_err(&got, e) < 1e-5, "batched result differs from solo");
+    }
+    // accounting: all submitted requests completed, none failed
+    let m = svc.metrics();
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 40);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 40);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn batches_never_exceed_max_batch() {
+    let n = 12;
+    let svc = service(vec![("a", spd(n, 4))], 4);
+    let mut rng = Pcg64::seeded(5);
+    let tickets: Vec<_> = (0..30)
+        .map(|_| {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            svc.submit("a", ReqKind::Sample, b)
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert!(svc.metrics().max_batch_size() <= 4, "batch cap violated");
+    svc.shutdown();
+}
+
+#[test]
+fn sample_and_whiten_are_kept_in_separate_batches() {
+    // A whiten result must never be a sample result: roundtrip consistency
+    // under mixed traffic proves no cross-contamination.
+    let n = 14;
+    let k = spd(n, 6);
+    let svc = service(vec![("a", k.clone())], 16);
+    let mut rng = Pcg64::seeded(7);
+    for _ in 0..10 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let w = svc.submit("a", ReqKind::Whiten, b.clone());
+        let s = svc.submit("a", ReqKind::Sample, b.clone());
+        let w = w.wait().unwrap();
+        let s = s.wait().unwrap();
+        // K^{1/2}w == b and K^{-1/2}s == b
+        let round_w = svc.submit("a", ReqKind::Sample, w).wait().unwrap();
+        let round_s = svc.submit("a", ReqKind::Whiten, s).wait().unwrap();
+        assert!(rel_err(&round_w, &b) < 1e-4);
+        assert!(rel_err(&round_s, &b) < 1e-4);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_inflight() {
+    let n = 16;
+    let svc = service(vec![("a", spd(n, 8))], 32);
+    let mut rng = Pcg64::seeded(9);
+    let tickets: Vec<_> = (0..12)
+        .map(|_| {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            svc.submit("a", ReqKind::Whiten, b)
+        })
+        .collect();
+    svc.shutdown(); // must flush the pending queue before exiting
+    for t in tickets {
+        assert!(t.wait().is_ok(), "in-flight request dropped on shutdown");
+    }
+}
+
+#[test]
+fn latency_metrics_populated() {
+    let n = 10;
+    let svc = service(vec![("a", spd(n, 10))], 4);
+    let mut rng = Pcg64::seeded(11);
+    for _ in 0..8 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("a", ReqKind::Sample, b).wait().unwrap();
+    }
+    assert!(svc.metrics().latency_percentile_us(50.0) > 0);
+    assert!(
+        svc.metrics().latency_percentile_us(99.0) >= svc.metrics().latency_percentile_us(50.0)
+    );
+    svc.shutdown();
+}

@@ -1,0 +1,149 @@
+//! Cross-module Krylov invariants, incl. property tests on the msMINRES
+//! recurrence and Lanczos shift invariance (Obs. 1 of the paper).
+
+use ciq::krylov::lanczos::lanczos_tridiag;
+use ciq::krylov::msminres::{msminres, MsMinresOptions};
+use ciq::krylov::{minres, pcg, CgOptions};
+use ciq::linalg::{Cholesky, Matrix};
+use ciq::operators::{DenseOp, KernelOp, KernelType, LinearOp, ShiftedOp};
+use ciq::prop_assert;
+use ciq::rng::Pcg64;
+use ciq::util::proptest::{check, Config};
+use ciq::util::rel_err;
+
+fn random_spd(n: usize, ridge: f64, rng: &mut Pcg64) -> Matrix {
+    let a = Matrix::randn(n, n, rng);
+    let mut k = a.matmul(&a.transpose());
+    for i in 0..n {
+        k[(i, i)] += ridge;
+    }
+    k
+}
+
+#[test]
+fn property_shift_invariance_of_lanczos() {
+    // Obs. 1: Lanczos on K+tI yields the same basis, T shifted by tI.
+    check(Config { cases: 16, seed: 10 }, "lanczos shift invariance", |rng, _| {
+        let n = 15 + rng.below(10);
+        let k = random_spd(n, n as f64, rng);
+        let t = 1.0 + rng.uniform() * 10.0;
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let op = DenseOp::new(k.clone());
+        let shifted = ShiftedOp::new(&op, t);
+        let (a1, b1) = lanczos_tridiag(&op, &b, 8, true);
+        let (a2, b2) = lanczos_tridiag(&shifted, &b, 8, true);
+        for (x, y) in a1.iter().zip(&a2) {
+            prop_assert!((x + t - y).abs() < 1e-8, "alpha mismatch {x}+{t} vs {y}");
+        }
+        for (x, y) in b1.iter().zip(&b2) {
+            prop_assert!((x - y).abs() < 1e-8, "beta mismatch {x} vs {y}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_residual_monotone_nonincreasing_iterations() {
+    // More iterations never increase the tracked msMINRES residual.
+    check(Config { cases: 12, seed: 20 }, "residual monotonicity", |rng, _| {
+        let n = 25;
+        let k = random_spd(n, 2.0, rng);
+        let op = DenseOp::new(k);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shifts = [0.1, 5.0];
+        let mut prev = f64::INFINITY;
+        for iters in [3, 6, 12, 24] {
+            let res = msminres(
+                &op,
+                &b,
+                &shifts,
+                &MsMinresOptions { max_iters: iters, tol: 1e-30, weights: None },
+            );
+            let r = res.residuals[0];
+            prop_assert!(r <= prev + 1e-9, "residual grew: {prev} -> {r} at {iters}");
+            prev = r;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_solutions_live_in_krylov_space() {
+    // After J iterations the solution must be expressible in the span of
+    // {b, Kb, ..., K^{J-1}b}; verify via orthogonal projection.
+    check(Config { cases: 8, seed: 30 }, "solution in Krylov space", |rng, _| {
+        let n = 20;
+        let j = 6;
+        let k = random_spd(n, n as f64, rng);
+        let op = DenseOp::new(k.clone());
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let res = msminres(
+            &op,
+            &b,
+            &[0.7],
+            &MsMinresOptions { max_iters: j, tol: 1e-30, weights: None },
+        );
+        // build Krylov basis (orthonormalized)
+        let mut basis: Vec<Vec<f64>> = Vec::new();
+        let mut v = b.clone();
+        for _ in 0..j {
+            let mut w = v.clone();
+            for q in &basis {
+                let c = ciq::util::dot(q, &w);
+                ciq::util::axpy(-c, q, &mut w);
+            }
+            let nw = ciq::util::norm2(&w);
+            if nw < 1e-12 {
+                break;
+            }
+            basis.push(w.iter().map(|x| x / nw).collect());
+            v = k.matvec(&v);
+        }
+        // project solution onto basis; projection must reproduce it
+        let x = &res.solutions[0];
+        let mut proj = vec![0.0; n];
+        for q in &basis {
+            let c = ciq::util::dot(q, x);
+            ciq::util::axpy(c, q, &mut proj);
+        }
+        let err = rel_err(&proj, x);
+        prop_assert!(err < 1e-6, "solution leaves Krylov space: {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn minres_cg_msminres_agree_on_spd() {
+    let mut rng = Pcg64::seeded(40);
+    let n = 60;
+    let x = Matrix::randn(n, 2, &mut rng);
+    let op = KernelOp::new(&x, KernelType::Matern32, 0.7, 1.0, 0.5);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let (x1, _, _) = minres(&op, &b, 400, 1e-10);
+    let (x2, _, _) = pcg(&op, &b, None, &CgOptions { max_iters: 400, tol: 1e-12 });
+    let ms = msminres(&op, &b, &[0.0], &MsMinresOptions { max_iters: 400, tol: 1e-10, weights: None });
+    let exact = Cholesky::with_jitter(&op.to_dense(), 0.0).unwrap().solve(&b);
+    assert!(rel_err(&x1, &exact) < 1e-6);
+    assert!(rel_err(&x2, &exact) < 1e-6);
+    assert!(rel_err(&ms.solutions[0], &exact) < 1e-6);
+}
+
+#[test]
+fn iteration_count_scales_with_condition_number() {
+    // well-conditioned (big noise) converges much faster than ill-conditioned
+    let mut rng = Pcg64::seeded(50);
+    let n = 200;
+    let x = Matrix::randn(n, 1, &mut rng);
+    let well = KernelOp::new(&x, KernelType::Rbf, 0.5, 1.0, 1.0);
+    let ill = KernelOp::new(&x, KernelType::Rbf, 0.5, 1.0, 1e-4);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let opts = MsMinresOptions { max_iters: 1000, tol: 1e-6, weights: None };
+    let r_well = msminres(&well, &b, &[0.0], &opts);
+    let r_ill = msminres(&ill, &b, &[0.0], &opts);
+    assert!(
+        r_well.iterations < r_ill.iterations,
+        "well {} vs ill {}",
+        r_well.iterations,
+        r_ill.iterations
+    );
+}

@@ -1,0 +1,140 @@
+//! Operator-algebra integration: composed operators used by the
+//! applications behave like their dense counterparts, and partitioned MVMs
+//! are exact.
+
+use ciq::linalg::{Cholesky, Matrix};
+use ciq::operators::image::{Conv2d, Downsample, PrecisionOp};
+use ciq::operators::{
+    cross_kernel, DenseOp, DiagOp, KernelOp, KernelType, LinearOp, LowRankPlusDiagOp, ScaledOp,
+    ShiftedOp, SubtractLowRankOp, SumOp,
+};
+use ciq::prop_assert;
+use ciq::rng::Pcg64;
+use ciq::util::proptest::{check, Config};
+use ciq::util::{dot, rel_err};
+
+#[test]
+fn property_kernel_mvm_invariant_to_tile_size() {
+    check(Config { cases: 10, seed: 1 }, "tile invariance", |rng, case| {
+        let n = 30 + rng.below(50);
+        let x = Matrix::randn(n, 1 + case % 4, rng);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let base = KernelOp::new(&x, KernelType::Rbf, 0.7, 1.0, 0.05).with_tile(8);
+        let y0 = base.matvec(&v);
+        for tile in [16, 64, 1024] {
+            let op = KernelOp::new(&x, KernelType::Rbf, 0.7, 1.0, 0.05).with_tile(tile);
+            let y = op.matvec(&v);
+            let e = rel_err(&y, &y0);
+            prop_assert!(e < 1e-12, "tile {tile}: {e}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_composed_operators_match_dense_algebra() {
+    check(Config { cases: 10, seed: 2 }, "composed ops", |rng, _| {
+        let n = 12 + rng.below(10);
+        let mut a = Matrix::randn(n, n, rng);
+        a.symmetrize();
+        let mut b = Matrix::randn(n, n, rng);
+        b.symmetrize();
+        let w = Matrix::randn(n, 3, rng);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (oa, ob) = (DenseOp::new(a.clone()), DenseOp::new(b.clone()));
+        let t = rng.uniform() * 5.0;
+
+        // ((2A + 3B) + tI) v scaled by -1, minus WWᵀ v
+        let sum = SumOp::new(&oa, 2.0, &ob, 3.0);
+        let shifted = ShiftedOp::new(&sum, t);
+        let scaled = ScaledOp::new(&shifted, -1.0);
+        let final_op = SubtractLowRankOp::new(&scaled, w.clone());
+
+        let dense = {
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m[(i, j)] = -(2.0 * a[(i, j)] + 3.0 * b[(i, j)] + if i == j { t } else { 0.0 });
+                }
+            }
+            &m - &w.matmul(&w.transpose())
+        };
+        let e = rel_err(&final_op.matvec(&v), &dense.matvec(&v));
+        prop_assert!(e < 1e-10, "composed mvm err {e}");
+        // diagonal consistency
+        let d_op = final_op.diagonal();
+        for i in 0..n {
+            prop_assert!((d_op[i] - dense[(i, i)]).abs() < 1e-10, "diag {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gp_posterior_covariance_operator_equals_dense_formula() {
+    // Cov = K** − K*n (Knn+σ²I)^{-1} Kn* (via the W = K*n L^{-T} factor)
+    let mut rng = Pcg64::seeded(3);
+    let (n, t, d) = (30, 20, 2);
+    let xn = Matrix::randn(n, d, &mut rng);
+    let xt = Matrix::randn(t, d, &mut rng);
+    let (ell, s2, noise) = (0.8, 1.0, 0.1);
+    let ells = vec![ell; d];
+    let knn = KernelOp::new(&xn, KernelType::Rbf, ell, s2, noise).to_dense();
+    let chol = Cholesky::with_jitter(&knn, 0.0).unwrap();
+    let ktn = cross_kernel(&xt, &xn, KernelType::Rbf, &ells, s2);
+    let mut w = Matrix::zeros(t, n);
+    for i in 0..t {
+        let sol = chol.solve_l(&ktn.row(i).to_vec());
+        for j in 0..n {
+            w[(i, j)] = sol[j];
+        }
+    }
+    let ktt = KernelOp::new(&xt, KernelType::Rbf, ell, s2, 0.0);
+    let cov_op = SubtractLowRankOp::new(&ktt, w);
+    // dense formula
+    let kinv_knt = chol.solve_mat(&ktn.transpose());
+    let dense_cov = &ktt.to_dense() - &ktn.matmul(&kinv_knt);
+    assert!(cov_op.to_dense().max_abs_diff(&dense_cov) < 1e-8);
+}
+
+#[test]
+fn image_forward_model_composes() {
+    // A = D∘B: adjoint identity on the composition, PSD of Λ, and the
+    // precision quadratic form equals γobs·R‖Ax‖² + γprior‖Lx‖².
+    let n = 12;
+    let prec = PrecisionOp::new(n, 2, 3, 2.0, 0.7);
+    let mut rng = Pcg64::seeded(4);
+    let x: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    let ax = prec.forward(&x);
+    let lap = Conv2d::laplacian(n);
+    let lx = lap.apply(&x);
+    let quad_direct = 2.0 * 3.0 * dot(&ax, &ax) + 0.7 * dot(&lx, &lx);
+    let quad_op = dot(&x, &prec.matvec(&x));
+    assert!(
+        (quad_direct - quad_op).abs() < 1e-8 * quad_direct.abs().max(1.0),
+        "{quad_direct} vs {quad_op}"
+    );
+    // downsample of constant image is constant
+    let ds = Downsample::new(n, 2);
+    let c = vec![3.5; n * n];
+    assert!(ds.apply(&c).iter().all(|&v| (v - 3.5).abs() < 1e-12));
+}
+
+#[test]
+fn lowrank_and_diag_ops_in_krylov_context() {
+    // LowRankPlusDiagOp should be solvable by msMINRES and match Woodbury.
+    let mut rng = Pcg64::seeded(5);
+    let n = 40;
+    let l = Matrix::randn(n, 4, &mut rng);
+    let op = LowRankPlusDiagOp::new(l.clone(), 0.9);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let (x, _, _) = ciq::krylov::minres(&op, &b, 300, 1e-12);
+    let dense = op.to_dense();
+    let exact = Cholesky::with_jitter(&dense, 0.0).unwrap().solve(&b);
+    assert!(rel_err(&x, &exact) < 1e-7);
+    // minres on a pure diagonal is exact in 1 iteration for scaled identity
+    let dop = DiagOp::new(vec![2.0; 10]);
+    let (y, _, iters) = ciq::krylov::minres(&dop, &vec![1.0; 10], 10, 1e-12);
+    assert!(iters <= 2);
+    assert!(y.iter().all(|&v| (v - 0.5).abs() < 1e-10));
+}

@@ -1,0 +1,94 @@
+//! Integration: PJRT runtime executes the AOT artifacts and matches the
+//! native Rust implementations. Skips (with a notice) if `make artifacts`
+//! has not been run.
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::rng::Pcg64;
+use ciq::runtime::{artifacts_dir, discover_artifacts, Runtime, XlaCiq, XlaKernelMvm};
+use ciq::util::rel_err;
+
+fn artifacts_available() -> bool {
+    !discover_artifacts(&artifacts_dir()).is_empty()
+}
+
+#[test]
+fn xla_kernel_mvm_matches_native() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let metas = discover_artifacts(&artifacts_dir());
+    let meta = metas
+        .iter()
+        .find(|m| m.kind == "kernel_mvm" && m.kernel == "rbf")
+        .expect("rbf kernel_mvm artifact");
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(meta).unwrap();
+
+    let mut rng = Pcg64::seeded(1);
+    let x = Matrix::randn(meta.n, meta.d, &mut rng);
+    let (ell, s2, noise) = (0.8, 1.3, 0.05);
+    let xla_op = XlaKernelMvm::new(&rt, exe, &x, ell, s2, noise).unwrap();
+    let native = KernelOp::new(&x, KernelType::Rbf, ell, s2, noise);
+
+    // single vector
+    let v: Vec<f64> = (0..meta.n).map(|_| rng.normal()).collect();
+    let y_xla = xla_op.matvec(&v);
+    let y_native = native.matvec(&v);
+    let err = rel_err(&y_xla, &y_native);
+    assert!(err < 1e-4, "xla vs native MVM rel err {err}");
+
+    // batch wider than the artifact's r (exercises padding & chunking)
+    let b = Matrix::randn(meta.n, meta.r + 3, &mut rng);
+    let y_xla = xla_op.matmat(&b);
+    let y_native = native.matmat(&b);
+    let mut max_err = 0.0f64;
+    for j in 0..b.cols() {
+        max_err = max_err.max(rel_err(&y_xla.col(j), &y_native.col(j)));
+    }
+    assert!(max_err < 1e-4, "batched rel err {max_err}");
+}
+
+#[test]
+fn xla_ciq_pipeline_matches_native_ciq() {
+    if !artifacts_available() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let metas = discover_artifacts(&artifacts_dir());
+    let meta = metas.iter().find(|m| m.kind == "ciq_sqrt").expect("ciq artifact");
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(meta).unwrap();
+    let xla_ciq = XlaCiq::new(&rt, exe).unwrap();
+
+    let mut rng = Pcg64::seeded(2);
+    let x = Matrix::randn(meta.n, meta.d, &mut rng);
+    let (ell, s2, noise) = (0.8, 1.0, 0.5);
+    let native = KernelOp::new(&x, KernelType::Rbf, ell, s2, noise);
+    let b: Vec<f64> = (0..meta.n).map(|_| rng.normal()).collect();
+
+    // quadrature from the Rust side (Lanczos + elliptic functions)
+    let solver = Ciq::new(CiqOptions { q_points: meta.q, tol: 1e-7, ..Default::default() });
+    let (rule, _bounds) = solver.rule(&native, None).unwrap();
+
+    let out = xla_ciq
+        .run(&x, ell, s2, noise, &b, &rule.shifts, &rule.weights)
+        .unwrap();
+
+    let native_sqrt = solver.sqrt_mvm(&native, &b).unwrap().solution;
+    let native_inv = solver.invsqrt_mvm(&native, &b).unwrap().solution;
+    let es = rel_err(&out.sqrt, &native_sqrt);
+    let ei = rel_err(&out.inv_sqrt, &native_inv);
+    assert!(es < 5e-3, "sqrt: xla vs native rel err {es}");
+    assert!(ei < 5e-3, "invsqrt: xla vs native rel err {ei}");
+    assert!(out.residual < 1e-2, "xla residual {}", out.residual);
+}
+
+#[test]
+fn runtime_reports_platform() {
+    let rt = Runtime::cpu().unwrap();
+    let p = rt.platform().to_lowercase();
+    assert!(p.contains("cpu") || p.contains("host"), "platform={p}");
+}

@@ -1,0 +1,129 @@
+//! Empirical verification of the paper's theory: Lemma 1 (quadrature error)
+//! and Theorem 1 (total msMINRES-CIQ error bound).
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::linalg::eigen::spd_sqrt;
+use ciq::linalg::Matrix;
+use ciq::operators::DenseOp;
+use ciq::prop_assert;
+use ciq::quadrature::ciq_quadrature;
+use ciq::rng::Pcg64;
+use ciq::util::proptest::{check, Config};
+use ciq::util::{norm2, rel_err};
+
+/// Random SPD matrix with a prescribed spectrum (orthogonal conjugation).
+fn spd_with_spectrum(evals: &[f64], rng: &mut Pcg64) -> Matrix {
+    let n = evals.len();
+    let a = Matrix::randn(n, n, rng);
+    let q = ciq::baselines::rsvd::orthonormalize(&a);
+    let mut scaled = q.clone();
+    for j in 0..n {
+        for i in 0..n {
+            scaled[(i, j)] *= evals[j];
+        }
+    }
+    scaled.matmul(&q.transpose())
+}
+
+#[test]
+fn lemma1_quadrature_error_bound_holds_scalarwise() {
+    // For scalars x ∈ [λmin, λmax]: |x Σ w/(t+x) − √x| ≤ C·exp(−2Qπ²/(log κ + 3))
+    // with a modest constant C. Check C ≤ 10 over a sweep of κ and Q.
+    for &kappa in &[10.0, 1e3, 1e6] {
+        let (lo, hi) = (1.0 / kappa, 1.0);
+        for q in [3usize, 5, 8, 12] {
+            let rule = ciq_quadrature(q, lo, hi).unwrap();
+            let bound = (-2.0 * q as f64 * std::f64::consts::PI.powi(2) / (kappa.ln() + 3.0)).exp();
+            let mut worst: f64 = 0.0;
+            for i in 0..=60 {
+                let x = lo * (hi / lo as f64).powf(i as f64 / 60.0);
+                let approx = x * rule.eval_inv_sqrt(x);
+                worst = worst.max((approx - x.sqrt()).abs());
+            }
+            assert!(
+                worst <= 10.0 * bound + 1e-14,
+                "kappa={kappa} Q={q}: err {worst} vs bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn theorem1_total_error_bounded() {
+    // ‖a_J − K^{1/2}b‖ ≤ quadrature term + msMINRES term (Thm. 1).
+    check(Config { cases: 6, seed: 42 }, "theorem 1", |rng, case| {
+        let n = 30;
+        // spectra of varying decay (the Fig. 1 families)
+        let evals: Vec<f64> = match case % 3 {
+            0 => (1..=n).map(|t| 1.0 / (t as f64).sqrt()).collect(),
+            1 => (1..=n).map(|t| 1.0 / (t as f64).powi(2)).collect(),
+            _ => (1..=n).map(|t| (-(t as f64) / 6.0).exp()).collect(),
+        };
+        let k = spd_with_spectrum(&evals, rng);
+        let lam_max: f64 = evals[0];
+        let lam_min: f64 = *evals.last().unwrap();
+        let kappa = lam_max / lam_min;
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let op = DenseOp::new(k.clone());
+        let exact = spd_sqrt(&k).unwrap().matvec(&b);
+
+        for j in [5usize, 15, 40] {
+            let q = 8;
+            let solver = Ciq::new(CiqOptions {
+                q_points: q,
+                max_iters: j,
+                tol: 1e-30,
+                ..Default::default()
+            });
+            let approx = solver.sqrt_mvm(&op, &b).unwrap();
+            let err = norm2(
+                &approx
+                    .solution
+                    .iter()
+                    .zip(&exact)
+                    .map(|(a, e)| a - e)
+                    .collect::<Vec<_>>(),
+            );
+            // Theorem 1 terms (constants included generously)
+            let quad_term = (-2.0 * q as f64 * std::f64::consts::PI.powi(2) / (kappa.ln() + 3.0)).exp();
+            let rho = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+            let minres_term = 2.0 * q as f64 * (5.0 * kappa.sqrt()).ln() * kappa * lam_min.sqrt()
+                / std::f64::consts::PI
+                * rho.powi(j as i32 - 1)
+                * norm2(&b);
+            let bound = 10.0 * (quad_term + minres_term) + 1e-9;
+            prop_assert!(
+                err <= bound,
+                "J={j} kappa={kappa:.1}: err {err:.3e} > bound {bound:.3e}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn error_decreases_exponentially_in_j() {
+    // The msMINRES term dominates: error should drop geometrically with J.
+    let mut rng = Pcg64::seeded(7);
+    let n = 40;
+    let evals: Vec<f64> = (1..=n).map(|t| 1.0 / t as f64).collect();
+    let k = spd_with_spectrum(&evals, &mut rng);
+    let op = DenseOp::new(k.clone());
+    let exact_map = spd_sqrt(&k).unwrap();
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = exact_map.matvec(&b);
+    let errs: Vec<f64> = [4usize, 8, 16, 32]
+        .iter()
+        .map(|&j| {
+            let solver = Ciq::new(CiqOptions {
+                q_points: 10,
+                max_iters: j,
+                tol: 1e-30,
+                ..Default::default()
+            });
+            rel_err(&solver.sqrt_mvm(&op, &b).unwrap().solution, &exact)
+        })
+        .collect();
+    assert!(errs[1] < errs[0] && errs[2] < errs[1] && errs[3] < errs[2], "errors: {errs:?}");
+    assert!(errs[3] < 1e-6, "final error {}", errs[3]);
+}
