@@ -10,6 +10,7 @@ use ciq::operators::{KernelOp, KernelType};
 use ciq::rng::Pcg64;
 use ciq::util::cli::Args;
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 fn main() {
@@ -57,6 +58,21 @@ fn main() {
         svc.metrics().mean_batch_size(),
         svc.metrics().max_batch_size()
     );
+    println!(
+        "spectral cache: hits={} misses={} saved_mvms={}",
+        svc.metrics().cache_hits.load(Ordering::Relaxed),
+        svc.metrics().cache_misses.load(Ordering::Relaxed),
+        svc.metrics().saved_mvms.load(Ordering::Relaxed),
+    );
+    println!(
+        "compaction: {} matmat columns paid, {} saved vs uncompacted",
+        svc.metrics().column_work.load(Ordering::Relaxed),
+        svc.metrics().saved_column_work(),
+    );
+    println!("shard queue depths (current/max):");
+    for (shard, cur, max) in svc.metrics().shard_depths() {
+        println!("  {shard:<16} {cur}/{max}");
+    }
     println!("msMINRES iteration histogram (Fig. S7 from live traffic):");
     for (bucket, count) in svc.metrics().iteration_histogram(10) {
         println!("  {:>4}-{:<4} {}", bucket, bucket + 9, "#".repeat(count.min(60)));

@@ -42,11 +42,15 @@ fn main() {
                     let _ = chol.solve_lt(&w); // backward-pass triangular solve
                 }
             });
-            // --- CIQ: blocked forward + backward (second msMINRES call)
+            // --- CIQ: blocked forward + backward (second msMINRES call);
+            // the backward pass reuses the forward pass's spectral cache, as
+            // the coordinator does in production
             let solver = Ciq::new(CiqOptions { q_points: 8, tol: 1e-4, max_iters: 300, ..Default::default() });
             let t_ciq = common::bench_median(3, || {
-                let (_fwd, _iters) = solver.invsqrt_mvm_block(&op, &b).expect("ciq fwd");
-                let (_bwd, _) = solver.invsqrt_mvm_block(&op, &b).expect("ciq bwd");
+                let fwd = solver.invsqrt_mvm_block_with_bounds(&op, &b, None).expect("ciq fwd");
+                let _bwd = solver
+                    .invsqrt_mvm_block_with_bounds(&op, &b, fwd.cache.as_ref())
+                    .expect("ciq bwd");
             });
             let speedup = t_chol / t_ciq;
             println!("{n}\t{r}\t{t_chol:.3}\t{t_ciq:.3}\t{speedup:.2}");

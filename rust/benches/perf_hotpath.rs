@@ -56,17 +56,28 @@ fn main() {
     let r = 4;
     let b = Matrix::randn(n, r, &mut rng);
     let solver = Ciq::new(CiqOptions { q_points: 8, tol: 1e-4, max_iters: 200, ..Default::default() });
+    let cache = solver.solver_cache(&op).expect("spectral cache");
     let t_block = common::bench_median(3, || {
-        let _ = solver.invsqrt_mvm_block(&op, &b).expect("block");
+        let _ = solver.invsqrt_mvm_block_with_bounds(&op, &b, Some(&cache)).expect("block");
     });
+    // the per-vector baseline gets the cache too, so perf 3 isolates RHS
+    // batching and perf 4 isolates cache reuse
     let t_loop = common::bench_median(3, || {
         for jcol in 0..r {
-            let _ = solver.invsqrt_mvm(&op, &b.col(jcol)).expect("solo");
+            let _ = solver.invsqrt_with_bounds(&op, &b.col(jcol), Some(cache.bounds)).expect("solo");
         }
     });
     println!("block\t{:.1} ms", t_block * 1e3);
     println!("loop\t{:.1} ms", t_loop * 1e3);
     println!("batching_speedup\t{:.2}x", t_loop / t_block);
+
+    println!("# perf 4: spectral-cache reuse (cold Lanczos estimate vs cached bounds)");
+    let t_cold = common::bench_median(3, || {
+        let _ = solver.invsqrt_mvm_block_with_bounds(&op, &b, None).expect("cold");
+    });
+    println!("cold\t{:.1} ms", t_cold * 1e3);
+    println!("warm\t{:.1} ms", t_block * 1e3);
+    println!("cache_speedup\t{:.2}x", t_cold / t_block);
 
     common::shape_check("MVM under 1 GF/s would signal a regression", flops / (best_ms / 1e3) / 1e9 > 0.5);
 }

@@ -9,6 +9,21 @@
 //! Total cost `O((J + J_eig + 1) · ξ(K))` time and `O(QN)` memory
 //! (Property 1); backward pass via Eq. (3) costs one more msMINRES call
 //! ([`Ciq::backward`]).
+//!
+//! ## Spectral caching
+//!
+//! The `J_eig` Lanczos MVMs exist only to bracket the spectrum, and the
+//! spectrum belongs to the *operator*, not the right-hand side. When many
+//! solves target one operator (the sampling-service case —
+//! [`crate::coordinator`]), estimate once via [`Ciq::solver_cache`] and pass
+//! the resulting [`SolverCache`] (bounds + derived quadrature rule) to the
+//! `*_with_bounds` entry points; every subsequent solve then costs `J` MVMs
+//! flat, with zero re-estimation. The blocked entry points
+//! ([`Ciq::invsqrt_mvm_block_with_bounds`] /
+//! [`Ciq::sqrt_mvm_block_with_bounds`]) hand back the freshly built cache on
+//! a cold call, so the first call doubles as cache population, and report the
+//! matmat `column_work` actually performed by the compacted block solver
+//! ([`crate::krylov::msminres::msminres_block`]).
 
 pub mod precond;
 
@@ -67,6 +82,36 @@ pub struct CiqResult {
     pub rule: QuadratureRule,
 }
 
+/// Per-operator spectral data computed once and reused across solves:
+/// Lanczos bounds plus the quadrature rule derived from them. Costs
+/// `lanczos_iters` MVMs to build; reusing it makes every later solve on the
+/// same operator free of eigenvalue estimation.
+#[derive(Clone, Debug)]
+pub struct SolverCache {
+    /// Lanczos spectral bounds of the operator.
+    pub bounds: EigenBounds,
+    /// Quadrature rule derived from the bounds (`Q` weights/shifts).
+    pub rule: QuadratureRule,
+}
+
+/// Result of a blocked CIQ solve.
+#[derive(Clone, Debug)]
+pub struct CiqBlockResult {
+    /// `≈ K^{±1/2} B` (one column per right-hand side).
+    pub solution: Matrix,
+    /// msMINRES iterations per column.
+    pub col_iterations: Vec<usize>,
+    /// Per-shift relative residuals at exit (max over columns).
+    pub residuals: Vec<f64>,
+    /// Matmat column-work performed by the compacted block solver
+    /// (Σ active width per iteration; ≤ `max(col_iterations) × columns`).
+    pub column_work: usize,
+    /// Freshly estimated spectral cache when the caller passed `None` (a
+    /// cold call doubles as cache population); `None` on warm calls, which
+    /// keeps the hot path free of rule clones.
+    pub cache: Option<SolverCache>,
+}
+
 /// Backward-pass payload: the vector–Jacobian product of Eq. (3) in factored
 /// form, `∂/∂K ≈ -(1/2) Σ_q w_q (l_q r_qᵀ + r_q l_qᵀ)`.
 pub struct CiqBackward {
@@ -122,6 +167,11 @@ impl Ciq {
 
     /// Build the quadrature rule for `op` (estimating bounds if not given).
     pub fn rule(&self, op: &dyn LinearOp, bounds: Option<EigenBounds>) -> Result<(QuadratureRule, EigenBounds)> {
+        // reject an impossible quadrature config before spending the Lanczos
+        // MVMs — a deterministic failure should not cost estimation per call
+        if self.opts.q_points == 0 {
+            return Err(crate::Error::Invalid("need at least one quadrature point".into()));
+        }
         let b = match bounds {
             Some(b) => b,
             None => self.bounds(op)?,
@@ -185,28 +235,72 @@ impl Ciq {
         Ok(res)
     }
 
+    /// Estimate bounds and derive the quadrature rule once, for reuse across
+    /// many solves on the same operator (the `*_with_bounds` entry points).
+    pub fn solver_cache(&self, op: &dyn LinearOp) -> Result<SolverCache> {
+        let (rule, bounds) = self.rule(op, None)?;
+        Ok(SolverCache { bounds, rule })
+    }
+
     /// Blocked whitening for `r` right-hand sides (columns of `b`): shares
     /// every iteration's MVMs as one `matmat`. Returns `(solutions, per-column
     /// iterations)`.
     pub fn invsqrt_mvm_block(&self, op: &dyn LinearOp, b: &Matrix) -> Result<(Matrix, Vec<usize>)> {
-        let (rule, _) = self.rule(op, None)?;
-        let (sols, iters, _res) = msminres_block(op, b, &rule.shifts, &self.ms_opts(&rule));
+        let res = self.invsqrt_mvm_block_with_bounds(op, b, None)?;
+        Ok((res.solution, res.col_iterations))
+    }
+
+    /// Blocked whitening with a caller-supplied spectral cache: when `cache`
+    /// is `Some`, the solve performs **zero** eigenvalue-estimation MVMs.
+    /// Pass `None` on first contact with an operator and keep the returned
+    /// [`CiqBlockResult::cache`] for every solve after that.
+    pub fn invsqrt_mvm_block_with_bounds(
+        &self,
+        op: &dyn LinearOp,
+        b: &Matrix,
+        cache: Option<&SolverCache>,
+    ) -> Result<CiqBlockResult> {
+        let fresh = match cache {
+            Some(_) => None,
+            None => Some(self.solver_cache(op)?),
+        };
+        let used: &SolverCache = cache.unwrap_or_else(|| fresh.as_ref().unwrap());
+        let blk = msminres_block(op, b, &used.rule.shifts, &self.ms_opts(&used.rule));
         let n = op.size();
         let mut out = Matrix::zeros(n, b.cols());
-        for (w, c) in rule.weights.iter().zip(&sols) {
+        for (w, c) in used.rule.weights.iter().zip(&blk.solutions) {
             for i in 0..n {
                 for j in 0..b.cols() {
                     out[(i, j)] += w * c[(i, j)];
                 }
             }
         }
-        Ok((out, iters))
+        Ok(CiqBlockResult {
+            solution: out,
+            col_iterations: blk.col_iterations,
+            residuals: blk.residuals,
+            column_work: blk.column_work,
+            cache: fresh,
+        })
     }
 
     /// Blocked sampling: `K^{1/2} B`.
     pub fn sqrt_mvm_block(&self, op: &dyn LinearOp, b: &Matrix) -> Result<(Matrix, Vec<usize>)> {
-        let (inv, iters) = self.invsqrt_mvm_block(op, b)?;
-        Ok((op.matmat(&inv), iters))
+        let res = self.sqrt_mvm_block_with_bounds(op, b, None)?;
+        Ok((res.solution, res.col_iterations))
+    }
+
+    /// Blocked sampling with a caller-supplied spectral cache (see
+    /// [`Ciq::invsqrt_mvm_block_with_bounds`]).
+    pub fn sqrt_mvm_block_with_bounds(
+        &self,
+        op: &dyn LinearOp,
+        b: &Matrix,
+        cache: Option<&SolverCache>,
+    ) -> Result<CiqBlockResult> {
+        let mut res = self.invsqrt_mvm_block_with_bounds(op, b, cache)?;
+        res.solution = op.matmat(&res.solution);
+        Ok(res)
     }
 
     /// Backward pass (Eq. 3): given the forward result for `K^{-1/2} b` and a
@@ -363,6 +457,25 @@ mod tests {
         }
         let got = bwd.contract(&d);
         assert!((got - expect).abs() < 1e-8 * (1.0 + expect.abs()));
+    }
+
+    #[test]
+    fn cached_bounds_skip_lanczos_and_match() {
+        use crate::operators::CountingOp;
+        let n = 30;
+        let k = random_spd(n, 15, n as f64 * 0.5);
+        let op = CountingOp::new(DenseOp::new(k));
+        let mut rng = Pcg64::seeded(16);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+        let cold = solver.invsqrt_mvm_block_with_bounds(&op, &b, None).unwrap();
+        let mv_cold = op.matvec_count();
+        assert!(mv_cold > 0, "cold solve must estimate the spectrum");
+        assert!(cold.cache.is_some(), "cold solve must hand back the cache it built");
+        let warm = solver.invsqrt_mvm_block_with_bounds(&op, &b, cold.cache.as_ref()).unwrap();
+        assert_eq!(op.matvec_count(), mv_cold, "warm solve must skip Lanczos estimation");
+        assert!(warm.cache.is_none(), "warm solve should not clone the cache back");
+        assert!(warm.solution.max_abs_diff(&cold.solution) < 1e-12, "cached-bounds solve diverged");
     }
 
     #[test]

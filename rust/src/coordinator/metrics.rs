@@ -1,6 +1,10 @@
 //! Service metrics: counters, latency histogram, batch sizes, msMINRES
-//! iteration telemetry (the data behind Fig. S7).
+//! iteration telemetry (the data behind Fig. S7), plus the cache-aware
+//! execution engine's economics: per-shard queue depths, spectral-cache
+//! hit/miss counts, MVMs saved by cache reuse, and matmat column-work saved
+//! by active-column compaction.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -14,9 +18,22 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Requests failed.
     pub failed: AtomicU64,
+    /// Batches that reused a cached spectral estimate (zero Lanczos MVMs).
+    pub cache_hits: AtomicU64,
+    /// Batches that had to run Lanczos eigenvalue estimation.
+    pub cache_misses: AtomicU64,
+    /// Eigenvalue-estimation MVMs avoided by cache hits.
+    pub saved_mvms: AtomicU64,
+    /// Matmat column-work actually performed by compacted block solves.
+    pub column_work: AtomicU64,
+    /// Column-work an uncompacted solver would have performed
+    /// (`iterations × columns` per batch).
+    pub column_work_full: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     batch_sizes: Mutex<Vec<usize>>,
     iter_counts: Mutex<Vec<usize>>,
+    /// Per-shard `(current depth, max depth)` keyed by `"op/Kind"`.
+    shard_depths: Mutex<HashMap<String, (usize, usize)>>,
 }
 
 impl Metrics {
@@ -33,6 +50,62 @@ impl Metrics {
     /// Record msMINRES iteration counts (per RHS).
     pub fn record_iters(&self, iters: &[usize]) {
         self.iter_counts.lock().unwrap().extend_from_slice(iters);
+    }
+
+    /// Record a spectral-cache hit and the estimation MVMs it avoided.
+    pub fn record_cache_hit(&self, saved_mvms: u64) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.saved_mvms.fetch_add(saved_mvms, Ordering::Relaxed);
+    }
+
+    /// Record a spectral-cache miss (Lanczos estimation ran).
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one batch's matmat column-work: `done` as performed by the
+    /// compacted solver, `full` as an uncompacted solver would have paid.
+    pub fn record_column_work(&self, done: u64, full: u64) {
+        self.column_work.fetch_add(done, Ordering::Relaxed);
+        self.column_work_full.fetch_add(full, Ordering::Relaxed);
+    }
+
+    /// Matmat columns saved by active-column compaction so far.
+    pub fn saved_column_work(&self) -> u64 {
+        let full = self.column_work_full.load(Ordering::Relaxed);
+        full.saturating_sub(self.column_work.load(Ordering::Relaxed))
+    }
+
+    /// Record a shard's current queue depth (also tracks its max). Fast path
+    /// avoids the key allocation once the shard has been seen.
+    pub fn record_shard_depth(&self, shard: &str, depth: usize) {
+        let mut m = self.shard_depths.lock().unwrap();
+        if let Some(entry) = m.get_mut(shard) {
+            entry.0 = depth;
+            entry.1 = entry.1.max(depth);
+        } else {
+            m.insert(shard.to_string(), (depth, depth));
+        }
+    }
+
+    /// A shard's current queue depth (0 if never seen).
+    pub fn shard_depth(&self, shard: &str) -> usize {
+        self.shard_depths.lock().unwrap().get(shard).map(|e| e.0).unwrap_or(0)
+    }
+
+    /// A shard's maximum observed queue depth (0 if never seen).
+    pub fn max_shard_depth(&self, shard: &str) -> usize {
+        self.shard_depths.lock().unwrap().get(shard).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Snapshot of all shards as `(name, current depth, max depth)`, sorted
+    /// by name for stable output.
+    pub fn shard_depths(&self) -> Vec<(String, usize, usize)> {
+        let m = self.shard_depths.lock().unwrap();
+        let mut v: Vec<(String, usize, usize)> =
+            m.iter().map(|(k, &(cur, max))| (k.clone(), cur, max)).collect();
+        v.sort();
+        v
     }
 
     /// Latency percentile in microseconds (p in [0,100]).
@@ -74,13 +147,18 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1}",
+            "submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
+             cache_hit={} cache_miss={} saved_mvms={} saved_colwork={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
             self.mean_batch_size(),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.saved_mvms.load(Ordering::Relaxed),
+            self.saved_column_work(),
         )
     }
 }
@@ -106,5 +184,33 @@ mod tests {
         assert_eq!(m.max_batch_size(), 7);
         assert!((m.mean_batch_size() - 5.0).abs() < 1e-12);
         assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn cache_and_shard_telemetry() {
+        let m = Metrics::default();
+        m.record_cache_miss();
+        m.record_cache_hit(15);
+        m.record_cache_hit(15);
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.saved_mvms.load(Ordering::Relaxed), 30);
+
+        m.record_shard_depth("a/Sample", 3);
+        m.record_shard_depth("a/Sample", 1);
+        m.record_shard_depth("b/Whiten", 2);
+        assert_eq!(m.shard_depth("a/Sample"), 1);
+        assert_eq!(m.max_shard_depth("a/Sample"), 3);
+        assert_eq!(m.shard_depth("b/Whiten"), 2);
+        assert_eq!(m.shard_depth("never-seen"), 0);
+        let depths = m.shard_depths();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths[0].0, "a/Sample");
+
+        m.record_column_work(30, 60);
+        m.record_column_work(10, 10);
+        assert_eq!(m.column_work.load(Ordering::Relaxed), 40);
+        assert_eq!(m.saved_column_work(), 30);
+        assert!(m.summary().contains("cache_hit=2"));
     }
 }

@@ -1,4 +1,5 @@
-//! The L3 coordinator: a batching **GP sampling service**.
+//! The L3 coordinator: a **cache-aware, sharded** batching GP sampling
+//! service.
 //!
 //! A production deployment of this paper looks like a service that answers
 //! `K^{1/2} b` (sampling) and `K^{-1/2} b` (whitening) requests against a set
@@ -6,26 +7,52 @@
 //!
 //! * accepts requests over an MPSC channel (each carries its own one-shot
 //!   response channel),
-//! * **dynamically batches** requests that target the same `(operator, kind)`
-//!   pair — up to `max_batch` RHS or `max_wait` of queueing delay — because
-//!   msMINRES shares its per-iteration MVMs across a whole batch
+//! * routes each request to a **shard** keyed by `(operator, kind)` and
+//!   **dynamically batches** within the shard — up to `max_batch` RHS or
+//!   `max_wait` of queueing delay — because msMINRES shares its per-iteration
+//!   MVMs across a whole batch
 //!   ([`crate::krylov::msminres::msminres_block`]), the marginal cost of an
 //!   extra RHS is far below a solo solve (this is the knob Fig. 2 mid/right
 //!   sweeps),
 //! * executes batches on a worker pool sized to the machine,
-//! * records per-request latency and batch-size metrics.
+//! * records per-request latency, batch-size, per-shard queue-depth, and
+//!   cache-economics metrics.
+//!
+//! ## Shard flushing is deadline-driven
+//!
+//! The dispatcher's `recv` timeout is computed from the **oldest pending
+//! request's flush deadline** across all shards (not a fixed `max_wait` after
+//! the most recent arrival), and expired shards are flushed after *every*
+//! received request. This matters under steady load: a trickle of requests
+//! arriving faster than `max_wait` used to keep the receive loop on its `Ok`
+//! path forever, so a sub-`max_batch` queue was never flushed until the
+//! trickle stopped (flush starvation). Now a request waits at most
+//! `max_wait` (plus solve time) regardless of arrival pattern.
+//!
+//! ## Per-operator spectral caches
+//!
+//! Registered operators are immutable for the life of the service, so their
+//! spectral bounds — and the CIQ quadrature rule derived from them — are
+//! computed by Lanczos **once**, on the first batch that touches the
+//! operator, and reused by every batch after that
+//! ([`crate::ciq::SolverCache`]). Each cache hit is credited with the
+//! estimation MVMs the cold batch actually spent (measured, not assumed);
+//! [`Metrics::saved_mvms`] totals the savings from live traffic. The cache is guarded by a per-operator mutex so
+//! concurrent first batches on one operator never duplicate the estimation.
+//! (Re-registering a changed operator under the same name would need cache
+//! invalidation — operators are currently fixed at startup, see ROADMAP.)
 
 pub mod metrics;
 
 pub use metrics::Metrics;
 
-use crate::ciq::{Ciq, CiqOptions};
+use crate::ciq::{Ciq, CiqOptions, SolverCache};
 use crate::linalg::Matrix;
 use crate::operators::LinearOp;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// What the client wants computed.
@@ -39,6 +66,26 @@ pub enum ReqKind {
 
 /// A shared covariance operator registered with the service.
 pub type SharedOp = Arc<dyn LinearOp + Send + Sync>;
+
+/// A registered operator plus its lazily-filled spectral cache.
+///
+/// The cache is a `Mutex<Option<…>>` rather than a `OnceLock` deliberately:
+/// holding the lock across the Lanczos estimation makes a concurrent second
+/// batch on the same cold operator *wait* for the first estimation instead of
+/// redundantly re-running it.
+struct OpEntry {
+    op: SharedOp,
+    /// `(cache, MVMs the one-time estimation actually spent)` — hits credit
+    /// exactly what the miss paid, even when Lanczos broke out early.
+    spectral: Mutex<Option<(Arc<SolverCache>, u64)>>,
+}
+
+/// Shard key: requests are queued and batched per `(operator, kind)`.
+type ShardKey = (String, ReqKind);
+
+fn shard_label(op_name: &str, kind: ReqKind) -> String {
+    format!("{op_name}/{kind:?}")
+}
 
 /// One request.
 struct Request {
@@ -103,10 +150,14 @@ struct Batch {
 impl SamplingService {
     /// Start the service with a set of named operators.
     pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
+        let entries: HashMap<String, Arc<OpEntry>> = ops
+            .into_iter()
+            .map(|(name, op)| (name, Arc::new(OpEntry { op, spectral: Mutex::new(None) })))
+            .collect();
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
-        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, ops, rx, m2));
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, entries, rx, m2));
         SamplingService { tx: Some(tx), dispatcher: Some(dispatcher), metrics }
     }
 
@@ -149,15 +200,60 @@ impl Drop for SamplingService {
     }
 }
 
+/// Dispatcher-side shard: pending requests plus the precomputed metrics
+/// label (built once per shard, not once per arrival).
+struct Shard {
+    label: String,
+    requests: Vec<Request>,
+}
+
+/// Send one shard's queue off as a batch.
+fn flush_shard(
+    key: &ShardKey,
+    shards: &mut HashMap<ShardKey, Shard>,
+    btx: &Sender<Batch>,
+    metrics: &Metrics,
+) {
+    if let Some(shard) = shards.remove(key) {
+        if shard.requests.is_empty() {
+            return;
+        }
+        metrics.record_batch(shard.requests.len());
+        metrics.record_shard_depth(&shard.label, 0);
+        let _ = btx.send(Batch { op_name: key.0.clone(), kind: key.1, requests: shard.requests });
+    }
+}
+
+/// Flush every shard whose oldest request has waited at least `max_wait`,
+/// and return the earliest flush deadline still pending — the single source
+/// of truth for the dispatcher's next recv timeout.
+fn flush_expired(
+    shards: &mut HashMap<ShardKey, Shard>,
+    max_wait: Duration,
+    btx: &Sender<Batch>,
+    metrics: &Metrics,
+) -> Option<Instant> {
+    let now = Instant::now();
+    let expired: Vec<ShardKey> = shards
+        .iter()
+        .filter(|(_, s)| s.requests.first().map(|r| r.enqueued + max_wait <= now).unwrap_or(false))
+        .map(|(k, _)| k.clone())
+        .collect();
+    for key in expired {
+        flush_shard(&key, shards, btx, metrics);
+    }
+    shards.values().filter_map(|s| s.requests.first().map(|r| r.enqueued + max_wait)).min()
+}
+
 fn dispatcher_loop(
     config: ServiceConfig,
-    ops: HashMap<String, SharedOp>,
+    ops: HashMap<String, Arc<OpEntry>>,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
     // worker pool
     let (btx, brx) = mpsc::channel::<Batch>();
-    let brx = Arc::new(std::sync::Mutex::new(brx));
+    let brx = Arc::new(Mutex::new(brx));
     let ops = Arc::new(ops);
     let stop = Arc::new(AtomicBool::new(false));
     let mut workers = Vec::new();
@@ -185,45 +281,63 @@ fn dispatcher_loop(
         }));
     }
 
-    // batching loop
-    let mut pending: HashMap<(String, ReqKind), Vec<Request>> = HashMap::new();
+    // sharded batching loop: one queue per (operator, kind)
+    let idle_poll = Duration::from_millis(50);
+    let mut shards: HashMap<ShardKey, Shard> = HashMap::new();
+    // Deadline-aware receive: wake when the *oldest pending* request's flush
+    // deadline expires, never a fixed max_wait after the most recent arrival.
+    let mut next_deadline: Option<Instant> = None;
     loop {
-        let timeout = if pending.is_empty() { Duration::from_millis(50) } else { config.max_wait };
+        let timeout = next_deadline
+            .map(|deadline| deadline.saturating_duration_since(Instant::now()))
+            .unwrap_or(idle_poll);
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                let key = (req.op_name.clone(), req.kind);
-                let queue = pending.entry(key.clone()).or_default();
-                queue.push(req);
-                if queue.len() >= config.max_batch {
-                    let requests = pending.remove(&key).unwrap();
-                    metrics.record_batch(requests.len());
-                    let _ = btx.send(Batch { op_name: key.0, kind: key.1, requests });
+                if !ops.contains_key(&req.op_name) {
+                    // Rejected up front: no shard is created, so
+                    // client-controlled names cannot grow the shard map or
+                    // its metrics without bound.
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Err(crate::Error::Invalid(format!(
+                        "unknown operator '{}'",
+                        req.op_name
+                    ))));
+                } else {
+                    let key = (req.op_name.clone(), req.kind);
+                    let shard = shards.entry(key.clone()).or_insert_with(|| Shard {
+                        label: shard_label(&key.0, key.1),
+                        requests: Vec::new(),
+                    });
+                    shard.requests.push(req);
+                    let depth = shard.requests.len();
+                    metrics.record_shard_depth(&shard.label, depth);
+                    if depth >= config.max_batch {
+                        flush_shard(&key, &mut shards, &btx, &metrics);
+                    }
                 }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                // flush everything that waited long enough (or anything, on idle)
-                let keys: Vec<_> = pending.keys().cloned().collect();
-                for key in keys {
-                    let flush = pending
-                        .get(&key)
-                        .map(|q| {
-                            q.first()
-                                .map(|r| r.enqueued.elapsed() >= config.max_wait)
-                                .unwrap_or(false)
-                        })
-                        .unwrap_or(false);
-                    if flush {
-                        let requests = pending.remove(&key).unwrap();
-                        metrics.record_batch(requests.len());
-                        let _ = btx.send(Batch { op_name: key.0, kind: key.1, requests });
+                // Deadlines are re-checked after *every* arrival — a steady
+                // trickle faster than max_wait can no longer starve a
+                // sub-max_batch shard of its flush — but the O(shards) scan
+                // only runs once the known earliest deadline has passed (a
+                // new arrival's own deadline, now + max_wait, is never the
+                // one expiring; a stale-early deadline from a max_batch flush
+                // just wakes the loop once ahead of time and self-corrects).
+                match next_deadline {
+                    Some(deadline) if deadline > Instant::now() => {}
+                    _ => {
+                        next_deadline =
+                            flush_expired(&mut shards, config.max_wait, &btx, &metrics);
                     }
                 }
             }
+            Err(RecvTimeoutError::Timeout) => {
+                next_deadline = flush_expired(&mut shards, config.max_wait, &btx, &metrics);
+            }
             Err(RecvTimeoutError::Disconnected) => {
                 // drain remaining
-                for ((op_name, kind), requests) in pending.drain() {
-                    metrics.record_batch(requests.len());
-                    let _ = btx.send(Batch { op_name, kind, requests });
+                let keys: Vec<ShardKey> = shards.keys().cloned().collect();
+                for key in keys {
+                    flush_shard(&key, &mut shards, &btx, &metrics);
                 }
                 break;
             }
@@ -236,16 +350,42 @@ fn dispatcher_loop(
     }
 }
 
+/// Fetch (or compute-and-fill, on first contact) an operator's spectral
+/// cache. Holding the per-operator lock across the estimation means
+/// concurrent cold batches wait instead of duplicating the Lanczos MVMs.
+fn cached_spectral(
+    entry: &OpEntry,
+    solver: &Ciq,
+    metrics: &Metrics,
+) -> crate::Result<Arc<SolverCache>> {
+    let mut guard = entry.spectral.lock().unwrap();
+    if let Some((cache, estimation_mvms)) = guard.as_ref() {
+        metrics.record_cache_hit(*estimation_mvms);
+        return Ok(cache.clone());
+    }
+    // A miss means "estimation ran", so record it before the fallible build —
+    // repeated estimation on a failing operator stays visible in telemetry.
+    metrics.record_cache_miss();
+    // count what the estimation actually spends (Lanczos may break out early
+    // on an invariant subspace) so hits credit the true savings
+    let counting = crate::operators::CountingOp::new(entry.op.as_ref());
+    let cache = Arc::new(solver.solver_cache(&counting)?);
+    let estimation_mvms = counting.matvec_count();
+    *guard = Some((cache.clone(), estimation_mvms));
+    Ok(cache)
+}
+
 fn execute_batch(
-    ops: &HashMap<String, SharedOp>,
+    ops: &HashMap<String, Arc<OpEntry>>,
     ciq_opts: &CiqOptions,
     batch: Batch,
     metrics: &Metrics,
 ) {
-    let op = match ops.get(&batch.op_name) {
-        Some(op) => op.clone(),
+    let entry = match ops.get(&batch.op_name) {
+        Some(entry) => entry.clone(),
         None => {
             for req in batch.requests {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req
                     .respond
                     .send(Err(crate::Error::Invalid(format!("unknown operator '{}'", batch.op_name))));
@@ -253,11 +393,13 @@ fn execute_batch(
             return;
         }
     };
+    let op = entry.op.clone();
     let n = op.size();
     // validate sizes
     let mut valid = Vec::new();
     for req in batch.requests {
         if req.rhs.len() != n {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
             let _ = req.respond.send(Err(crate::Error::Shape(format!(
                 "rhs len {} != operator size {n}",
                 req.rhs.len()
@@ -277,25 +419,29 @@ fn execute_batch(
         }
     }
     let solver = Ciq::new(ciq_opts.clone());
-    let result = match batch.kind {
-        ReqKind::Sample => solver.sqrt_mvm_block(op.as_ref(), &b),
-        ReqKind::Whiten => solver.invsqrt_mvm_block(op.as_ref(), &b),
-    };
+    let result = cached_spectral(&entry, &solver, metrics).and_then(|cache| match batch.kind {
+        ReqKind::Sample => solver.sqrt_mvm_block_with_bounds(op.as_ref(), &b, Some(&*cache)),
+        ReqKind::Whiten => solver.invsqrt_mvm_block_with_bounds(op.as_ref(), &b, Some(&*cache)),
+    });
     match result {
-        Ok((out, iters)) => {
-            metrics.record_iters(&iters);
+        Ok(res) => {
+            metrics.record_iters(&res.col_iterations);
+            // compaction telemetry: matmat columns paid vs the uncompacted
+            // `iterations × columns` cost
+            let full = res.col_iterations.iter().copied().max().unwrap_or(0) * r;
+            metrics.record_column_work(res.column_work as u64, full as u64);
             for (j, req) in valid.into_iter().enumerate() {
-                let col = out.col(j);
+                let col = res.solution.col(j);
                 metrics.record_latency(req.enqueued.elapsed());
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(Ok(col));
             }
         }
         Err(e) => {
-            let msg = format!("batch solve failed: {e}");
+            // propagate the underlying error kind per request (no rewrap)
             for req in valid {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = req.respond.send(Err(crate::Error::Numerical(msg.clone())));
+                let _ = req.respond.send(Err(e.clone()));
             }
         }
     }
@@ -347,6 +493,77 @@ mod tests {
         assert!(r.is_err());
         let r2 = svc.submit("k", ReqKind::Sample, vec![0.0; 3]).wait();
         assert!(r2.is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cached_operator_performs_zero_estimation_mvms_after_first_batch() {
+        use crate::operators::CountingOp;
+        let n = 16;
+        let mut rng = Pcg64::seeded(40);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut kmat = a.matmul(&a.transpose());
+        for i in 0..n {
+            kmat[(i, i)] += n as f64 * 0.5;
+        }
+        let counter = Arc::new(CountingOp::new(DenseOp::new(kmat)));
+        let shared: SharedOp = counter.clone();
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), shared);
+        let cfg = ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let send_round = |rng: &mut Pcg64| {
+            let tickets: Vec<Ticket> = (0..4)
+                .map(|_| {
+                    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    svc.submit("k", ReqKind::Whiten, b)
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+        };
+        send_round(&mut rng);
+        let after_first = counter.matvec_count();
+        assert!(after_first > 0, "first batch must run Lanczos estimation");
+        send_round(&mut rng);
+        send_round(&mut rng);
+        assert_eq!(
+            counter.matvec_count(),
+            after_first,
+            "batches against a cached operator must perform zero estimation MVMs"
+        );
+        let m = svc.metrics();
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert!(m.cache_hits.load(Ordering::Relaxed) >= 2);
+        assert!(m.saved_mvms.load(Ordering::Relaxed) > 0);
+        assert!(m.column_work.load(Ordering::Relaxed) > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn solve_errors_propagate_original_kind() {
+        // q_points = 0 makes quadrature construction fail with Invalid; the
+        // old path rewrapped every solve failure as Numerical.
+        let (op, _) = make_op(8, 13);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            ciq: CiqOptions { q_points: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let r = svc.submit("k", ReqKind::Whiten, vec![1.0; 8]).wait();
+        match r {
+            Err(crate::Error::Invalid(_)) => {}
+            other => panic!("expected the original Invalid error to propagate, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().failed.load(Ordering::Relaxed), 1);
         svc.shutdown();
     }
 

@@ -10,5 +10,5 @@ pub mod slq;
 
 pub use lanczos::{estimate_extreme_eigenvalues, lanczos_tridiag, EigenBounds};
 pub use minres::minres;
-pub use msminres::{msminres, msminres_block, MsMinresOptions, MsMinresResult};
+pub use msminres::{msminres, msminres_block, MsMinresBlockResult, MsMinresOptions, MsMinresResult};
 pub use cg::{pcg, CgOptions};

@@ -110,6 +110,19 @@ impl ShiftState {
     }
 }
 
+/// Weighted CIQ stopping rule shared by [`msminres`] and [`msminres_block`]:
+/// stop when the `|w|`-weighted average relative residual falls below `tol`.
+fn weighted_converged(states: &[ShiftState], ws: &[f64], beta1: f64, tol: f64) -> bool {
+    let wsum: f64 = ws.iter().map(|w| w.abs()).sum();
+    let wres: f64 = states
+        .iter()
+        .zip(ws)
+        .map(|(st, w)| w.abs() * (st.phi_bar.abs() / beta1))
+        .sum::<f64>()
+        / wsum.max(1e-300);
+    wres < tol
+}
+
 /// Run msMINRES: returns `c_q ≈ (K + t_q I)^{-1} b` for every shift `t_q`.
 ///
 /// `shifts` must be ≥ 0 (SPD + nonnegative shifts keeps every system SPD,
@@ -169,16 +182,7 @@ pub fn msminres(
 
         // stopping criterion
         let stop = match &opts.weights {
-            Some(ws) => {
-                let wsum: f64 = ws.iter().map(|w| w.abs()).sum();
-                let r: f64 = states
-                    .iter()
-                    .zip(ws)
-                    .map(|(st, w)| w.abs() * (st.phi_bar.abs() / beta1))
-                    .sum::<f64>()
-                    / wsum.max(1e-300);
-                r < opts.tol
-            }
+            Some(ws) => weighted_converged(&states, ws, beta1, opts.tol),
             None => states.iter().all(|st| st.done),
         };
         if stop {
@@ -209,116 +213,176 @@ pub fn msminres(
     }
 }
 
+/// Result of a blocked msMINRES run ([`msminres_block`]).
+#[derive(Clone, Debug)]
+pub struct MsMinresBlockResult {
+    /// One `n × r` matrix per shift: column `j` is `c_q ≈ (K + t_q I)^{-1} b_j`.
+    pub solutions: Vec<Matrix>,
+    /// Iterations executed per column (== block MVMs that column rode).
+    pub col_iterations: Vec<usize>,
+    /// Per-shift relative residuals at exit (max over columns), consistent
+    /// with [`msminres`]'s `residuals`.
+    pub residuals: Vec<f64>,
+    /// Total matmat column-work: Σ over iterations of the active (unconverged)
+    /// width. Without active-column compaction this would be
+    /// `max(col_iterations) × r`.
+    pub column_work: usize,
+}
+
+/// All per-column state of one right-hand side in the blocked solve, so a
+/// converged column can be retired from the matmat in one move.
+struct BlockColumn {
+    /// Original column index in `b_mat`.
+    index: usize,
+    beta1: f64,
+    v: Vec<f64>,
+    v_prev: Vec<f64>,
+    beta_k: f64,
+    iters: usize,
+    /// One recurrence per shift.
+    states: Vec<ShiftState>,
+    done: bool,
+}
+
 /// Block msMINRES: independent recurrences for each column of `b_mat`,
 /// sharing each iteration's MVMs as a single `matmat` (the batching the
 /// coordinator exploits — Fig. 2 mid/right varies this RHS count).
 ///
-/// Returns `solutions[q]` as an `n × r` matrix of per-column solves, plus
-/// per-column iteration counts.
+/// **Active-column compaction:** once every shift of a column converges, the
+/// column is retired and the next iteration's matmat runs only over the
+/// remaining unconverged columns, so per-iteration work shrinks with
+/// convergence instead of staying at full width. `column_work` records the
+/// matmat columns actually paid for.
 pub fn msminres_block(
     op: &dyn LinearOp,
     b_mat: &Matrix,
     shifts: &[f64],
     opts: &MsMinresOptions,
-) -> (Vec<Matrix>, Vec<usize>, Vec<f64>) {
+) -> MsMinresBlockResult {
     let n = op.size();
     let r = b_mat.cols();
     assert_eq!(b_mat.rows(), n);
-    // per-column Lanczos state
-    let mut beta1 = vec![0.0; r];
-    let mut v = Matrix::zeros(n, r);
-    let mut v_prev = Matrix::zeros(n, r);
-    let mut beta_k = vec![0.0; r];
-    let mut col_done = vec![false; r];
-    let mut col_iters = vec![0usize; r];
+    assert!(!shifts.is_empty());
+
+    let mut active: Vec<BlockColumn> = Vec::with_capacity(r);
+    let mut finished: Vec<BlockColumn> = Vec::new();
     for j in 0..r {
         let col = b_mat.col(j);
-        beta1[j] = norm2(&col);
-        if beta1[j] == 0.0 {
-            col_done[j] = true;
-            continue;
-        }
-        for i in 0..n {
-            v[(i, j)] = col[i] / beta1[j];
+        let beta1 = norm2(&col);
+        let mut bc = BlockColumn {
+            index: j,
+            beta1,
+            v: vec![0.0; n],
+            v_prev: vec![0.0; n],
+            beta_k: 0.0,
+            iters: 0,
+            states: shifts.iter().map(|_| ShiftState::new(n, beta1)).collect(),
+            done: beta1 == 0.0,
+        };
+        if bc.done {
+            finished.push(bc);
+        } else {
+            for i in 0..n {
+                bc.v[i] = col[i] / beta1;
+            }
+            active.push(bc);
         }
     }
-    let mut states: Vec<Vec<ShiftState>> = (0..shifts.len())
-        .map(|_| (0..r).map(|j| ShiftState::new(n, beta1[j])).collect())
-        .collect();
 
-    let mut scratch_v = vec![0.0; n];
+    let mut column_work = 0usize;
+    let mut wcol = vec![0.0; n];
+    // reused across iterations; re-allocated only when compaction shrinks it
+    let mut vmat = Matrix::zeros(n, active.len().max(1));
     for _k in 1..=opts.max_iters {
-        if col_done.iter().all(|&d| d) {
+        if active.is_empty() {
             break;
         }
-        let mut w = op.matmat(&v);
-        for j in 0..r {
-            if col_done[j] {
-                continue;
+        // compacted matmat: only unconverged columns ride the block MVM
+        let width = active.len();
+        if vmat.cols() != width {
+            vmat = Matrix::zeros(n, width);
+        }
+        for (c, col) in active.iter().enumerate() {
+            for i in 0..n {
+                vmat[(i, c)] = col.v[i];
             }
-            col_iters[j] += 1;
+        }
+        let w = op.matmat(&vmat);
+        column_work += width;
+
+        for (c, col) in active.iter_mut().enumerate() {
+            col.iters += 1;
             // per-column Lanczos update
             let mut alpha = 0.0;
             for i in 0..n {
-                let wij = w[(i, j)] - beta_k[j] * v_prev[(i, j)];
-                w[(i, j)] = wij;
-                alpha += v[(i, j)] * wij;
+                let wi = w[(i, c)] - col.beta_k * col.v_prev[i];
+                wcol[i] = wi;
+                alpha += col.v[i] * wi;
             }
             let mut bn2 = 0.0;
             for i in 0..n {
-                let wij = w[(i, j)] - alpha * v[(i, j)];
-                w[(i, j)] = wij;
-                bn2 += wij * wij;
+                let wi = wcol[i] - alpha * col.v[i];
+                wcol[i] = wi;
+                bn2 += wi * wi;
             }
             let beta_next = bn2.sqrt();
-            for i in 0..n {
-                scratch_v[i] = v[(i, j)];
-            }
             let mut all_done = true;
-            for (q, per_shift) in states.iter_mut().enumerate() {
-                let st = &mut per_shift[j];
+            for (q, st) in col.states.iter_mut().enumerate() {
                 if !st.done {
-                    st.step(shifts[q], alpha, beta_k[j], beta_next, &scratch_v);
-                    if (st.phi_bar.abs() / beta1[j]) < opts.tol {
+                    st.step(shifts[q], alpha, col.beta_k, beta_next, &col.v);
+                    if (st.phi_bar.abs() / col.beta1) < opts.tol {
                         st.done = true;
                     }
                 }
                 all_done &= st.done;
             }
-            if all_done || beta_next < 1e-13 * alpha.abs().max(1.0) {
-                col_done[j] = true;
+            // same stopping criterion as `msminres`: weighted residual when
+            // CIQ weights are supplied, all-shifts-done otherwise
+            let stop = match &opts.weights {
+                Some(ws) => weighted_converged(&col.states, ws, col.beta1, opts.tol),
+                None => all_done,
+            };
+            if stop || beta_next < 1e-13 * alpha.abs().max(1.0) {
+                col.done = true;
                 continue;
             }
             for i in 0..n {
-                v_prev[(i, j)] = v[(i, j)];
-                v[(i, j)] = w[(i, j)] / beta_next;
+                col.v_prev[i] = col.v[i];
+                col.v[i] = wcol[i] / beta_next;
             }
-            beta_k[j] = beta_next;
+            col.beta_k = beta_next;
         }
-    }
 
-    let mut max_res = 0.0f64;
-    for per_shift in &states {
-        for (j, st) in per_shift.iter().enumerate() {
-            if beta1[j] > 0.0 {
-                max_res = max_res.max(st.phi_bar.abs() / beta1[j]);
-            }
-        }
-    }
-    let residuals = vec![max_res; shifts.len()];
-    let solutions: Vec<Matrix> = states
-        .into_iter()
-        .map(|per_shift| {
-            let mut m = Matrix::zeros(n, r);
-            for (j, st) in per_shift.into_iter().enumerate() {
-                for i in 0..n {
-                    m[(i, j)] = st.x[i];
+        // retire converged columns so the next matmat shrinks
+        if active.iter().any(|c| c.done) {
+            let mut still = Vec::with_capacity(active.len());
+            for col in active {
+                if col.done {
+                    finished.push(col);
+                } else {
+                    still.push(col);
                 }
             }
-            m
-        })
-        .collect();
-    (solutions, col_iters, residuals)
+            active = still;
+        }
+    }
+    finished.append(&mut active);
+
+    let mut solutions: Vec<Matrix> = (0..shifts.len()).map(|_| Matrix::zeros(n, r)).collect();
+    let mut residuals = vec![0.0f64; shifts.len()];
+    let mut col_iterations = vec![0usize; r];
+    for col in &finished {
+        col_iterations[col.index] = col.iters;
+        for (q, st) in col.states.iter().enumerate() {
+            for i in 0..n {
+                solutions[q][(i, col.index)] = st.x[i];
+            }
+            if col.beta1 > 0.0 {
+                residuals[q] = residuals[q].max(st.phi_bar.abs() / col.beta1);
+            }
+        }
+    }
+    MsMinresBlockResult { solutions, col_iterations, residuals, column_work }
 }
 
 #[cfg(test)]
@@ -428,17 +492,162 @@ mod tests {
         let b = Matrix::randn(n, 3, &mut rng);
         let shifts = [0.1, 2.0];
         let opts = MsMinresOptions { max_iters: 150, tol: 1e-10, weights: None };
-        let (sols, iters, _res) = msminres_block(&op, &b, &shifts, &opts);
+        let res = msminres_block(&op, &b, &shifts, &opts);
         for j in 0..3 {
             let col = b.col(j);
             let single = msminres(&op, &col, &shifts, &opts);
             for q in 0..2 {
-                let blocked = sols[q].col(j);
+                let blocked = res.solutions[q].col(j);
                 let err = rel_err(&blocked, &single.solutions[q]);
                 assert!(err < 1e-8, "col {j} shift {q}: {err}");
             }
         }
-        assert!(iters.iter().all(|&it| it > 0));
+        assert!(res.col_iterations.iter().all(|&it| it > 0));
+    }
+
+    #[test]
+    fn block_residuals_are_per_shift() {
+        // Regression: the block solver used to collapse residuals to a single
+        // max over all shifts; they must be per-shift (max over columns),
+        // consistent with `msminres`.
+        let n = 50;
+        let k = random_spd(n, 21);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(22);
+        let b = Matrix::randn(n, 2, &mut rng);
+        let shifts = [0.0, 50.0];
+        // stop well before convergence so residuals are distinguishable
+        let opts = MsMinresOptions { max_iters: 8, tol: 1e-30, weights: None };
+        let res = msminres_block(&op, &b, &shifts, &opts);
+        let mut expect = vec![0.0f64; shifts.len()];
+        for j in 0..2 {
+            let single = msminres(&op, &b.col(j), &shifts, &opts);
+            for q in 0..shifts.len() {
+                expect[q] = expect[q].max(single.residuals[q]);
+            }
+        }
+        for q in 0..shifts.len() {
+            let d = (res.residuals[q] - expect[q]).abs();
+            assert!(d < 1e-6 * (1.0 + expect[q]), "shift {q}: block {} vs single {}", res.residuals[q], expect[q]);
+        }
+        assert!(
+            res.residuals[1] < res.residuals[0],
+            "heavily shifted system must show the smaller residual ({} vs {}) — collapsed max?",
+            res.residuals[1],
+            res.residuals[0]
+        );
+    }
+
+    #[test]
+    fn compaction_shrinks_column_work_on_heterogeneous_batch() {
+        // Column 0 is an eigenvector (its Krylov space is 1-dimensional, so it
+        // converges on the first iteration); columns 1–3 are random and need
+        // tens of iterations. Compaction must retire column 0 from the matmat
+        // immediately, keeping total column-work strictly below
+        // `max_iterations × columns`.
+        let n = 40;
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            k[(i, i)] = 1.0 + i as f64;
+        }
+        // assert on the matmat columns the operator *actually served*, not
+        // the solver's own (derivable) counter
+        let op = crate::operators::CountingOp::new(DenseOp::new(k));
+        let mut rng = Pcg64::seeded(11);
+        let mut b = Matrix::zeros(n, 4);
+        b[(0, 0)] = 1.0;
+        for j in 1..4 {
+            for i in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let opts = MsMinresOptions { max_iters: 200, tol: 1e-10, weights: None };
+        let res = msminres_block(&op, &b, &[0.1, 1.0], &opts);
+        let max_iters = *res.col_iterations.iter().max().unwrap();
+        assert_eq!(res.col_iterations[0], 1, "eigenvector column should converge immediately");
+        assert!(max_iters > 1, "random columns should need several iterations");
+        let served = op.matmat_col_count() as usize;
+        assert!(
+            served < max_iters * 4,
+            "matmat width never shrank: operator served {served} columns vs uncompacted {}",
+            max_iters * 4
+        );
+        assert_eq!(served, res.column_work, "column_work must report the served matmat columns");
+    }
+
+    #[test]
+    fn property_block_compacted_matches_single_columns() {
+        crate::util::proptest::check_default("block msminres == per-column msminres", |rng, _| {
+            let n = 10 + rng.below(12);
+            let r = 1 + rng.below(4);
+            let a = Matrix::randn(n, n, rng);
+            let mut k = a.matmul(&a.transpose());
+            for i in 0..n {
+                k[(i, i)] += n as f64;
+            }
+            let op = DenseOp::new(k);
+            let b = Matrix::randn(n, r, rng);
+            let shifts = [0.05 + rng.uniform(), 5.0 + rng.uniform() * 20.0];
+            let opts = MsMinresOptions { max_iters: 300, tol: 1e-11, weights: None };
+            let blk = msminres_block(&op, &b, &shifts, &opts);
+            for j in 0..r {
+                let single = msminres(&op, &b.col(j), &shifts, &opts);
+                for q in 0..shifts.len() {
+                    let err = rel_err(&blk.solutions[q].col(j), &single.solutions[q]);
+                    crate::prop_assert!(err < 1e-6, "col {j} shift {q}: err {err}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_weighted_stop_terminates_no_later_than_per_shift() {
+        // With CIQ weights the block solver must use the same weighted-average
+        // stopping rule as `msminres`, which fires no later than (and usually
+        // before) the all-shifts-done rule when shifts converge at different
+        // rates.
+        let n = 50;
+        let k = random_spd(n, 25);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(26);
+        let b = Matrix::randn(n, 2, &mut rng);
+        let shifts = [0.01, 100.0];
+        let opts_w = MsMinresOptions { max_iters: 400, tol: 1e-8, weights: Some(vec![1.0, 1.0]) };
+        let opts_u = MsMinresOptions { max_iters: 400, tol: 1e-8, weights: None };
+        let rw = msminres_block(&op, &b, &shifts, &opts_w);
+        let ru = msminres_block(&op, &b, &shifts, &opts_u);
+        for j in 0..2 {
+            assert!(
+                rw.col_iterations[j] <= ru.col_iterations[j],
+                "col {j}: weighted {} > unweighted {}",
+                rw.col_iterations[j],
+                ru.col_iterations[j]
+            );
+        }
+        assert!(
+            rw.col_iterations.iter().zip(&ru.col_iterations).any(|(a, b)| a < b),
+            "weighted stop never engaged: {:?} vs {:?}",
+            rw.col_iterations,
+            ru.col_iterations
+        );
+    }
+
+    #[test]
+    fn block_zero_column_short_circuits() {
+        let n = 20;
+        let k = random_spd(n, 30);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(31);
+        let mut b = Matrix::zeros(n, 2);
+        for i in 0..n {
+            b[(i, 1)] = rng.normal();
+        }
+        let opts = MsMinresOptions { max_iters: 100, tol: 1e-9, weights: None };
+        let res = msminres_block(&op, &b, &[0.0, 1.0], &opts);
+        assert_eq!(res.col_iterations[0], 0);
+        assert!(res.col_iterations[1] > 0);
+        assert!(res.solutions[0].col(0).iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -75,21 +75,34 @@ pub mod runtime;
 pub mod coordinator;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Clone` matters operationally: a failed batch in the coordinator fans the
+/// *same* error out to every request in the batch, preserving the original
+/// error kind per request.
+#[derive(Clone, Debug)]
 pub enum Error {
     /// Shape/size mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// A numerical routine failed to converge or hit an invalid state.
-    #[error("numerical failure: {0}")]
     Numerical(String),
     /// Invalid argument.
-    #[error("invalid argument: {0}")]
     Invalid(String),
     /// Runtime (PJRT / artifact) failure.
-    #[error("runtime failure: {0}")]
     Runtime(String),
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Runtime(m) => write!(f, "runtime failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,150 @@
+//! A counting wrapper around any [`LinearOp`]: tallies `matvec` calls and
+//! `matmat` column-work. This is how the service's cache economics (zero
+//! Lanczos MVMs after the first batch on an operator) and the block solver's
+//! active-column compaction (column-work strictly below
+//! `iterations × columns`) are *proved* in tests rather than asserted in
+//! prose.
+
+use super::LinearOp;
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wraps a [`LinearOp`] and counts the work flowing through it.
+///
+/// `matvec` and `matmat` are the two paid entry points: eigenvalue estimation
+/// (Lanczos) spends `matvec`s, blocked msMINRES spends `matmat` columns.
+/// Probe-style accessors (`diagonal`, `column`, `to_dense`) delegate without
+/// counting — they are test/setup conveniences, not hot-path work.
+pub struct CountingOp<T> {
+    inner: T,
+    matvecs: AtomicU64,
+    matmats: AtomicU64,
+    matmat_cols: AtomicU64,
+}
+
+impl<T: LinearOp> CountingOp<T> {
+    /// Wrap an operator with fresh counters.
+    pub fn new(inner: T) -> CountingOp<T> {
+        CountingOp {
+            inner,
+            matvecs: AtomicU64::new(0),
+            matmats: AtomicU64::new(0),
+            matmat_cols: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of `matvec` calls so far (Lanczos estimation spends these).
+    pub fn matvec_count(&self) -> u64 {
+        self.matvecs.load(Ordering::Relaxed)
+    }
+
+    /// Number of `matmat` calls so far (one per block-solver iteration).
+    pub fn matmat_count(&self) -> u64 {
+        self.matmats.load(Ordering::Relaxed)
+    }
+
+    /// Total columns across all `matmat` calls — the block solver's true
+    /// column-work.
+    pub fn matmat_col_count(&self) -> u64 {
+        self.matmat_cols.load(Ordering::Relaxed)
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        self.matvecs.store(0, Ordering::Relaxed);
+        self.matmats.store(0, Ordering::Relaxed);
+        self.matmat_cols.store(0, Ordering::Relaxed);
+    }
+
+    /// The wrapped operator.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: LinearOp> LinearOp for CountingOp<T> {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvecs.fetch_add(1, Ordering::Relaxed);
+        self.inner.matvec(x)
+    }
+
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        self.matmats.fetch_add(1, Ordering::Relaxed);
+        self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
+        self.inner.matmat(x)
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        self.inner.diagonal()
+    }
+
+    fn column(&self, j: usize) -> Vec<f64> {
+        self.inner.column(j)
+    }
+
+    fn lambda_min_bound(&self) -> Option<f64> {
+        self.inner.lambda_min_bound()
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.inner.to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::krylov::msminres::{msminres_block, MsMinresOptions};
+    use crate::operators::DenseOp;
+    use crate::rng::Pcg64;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64 * 0.5;
+        }
+        k
+    }
+
+    #[test]
+    fn counts_matvecs_and_matmat_columns() {
+        let op = CountingOp::new(DenseOp::new(spd(6, 1)));
+        let x = vec![1.0; 6];
+        let _ = op.matvec(&x);
+        let _ = op.matvec(&x);
+        let mut rng = Pcg64::seeded(2);
+        let b = Matrix::randn(6, 3, &mut rng);
+        let _ = op.matmat(&b);
+        assert_eq!(op.matvec_count(), 2);
+        assert_eq!(op.matmat_count(), 1);
+        assert_eq!(op.matmat_col_count(), 3);
+        // probes are not counted as hot-path work
+        let _ = op.diagonal();
+        let _ = op.column(0);
+        assert_eq!(op.matvec_count(), 2);
+        op.reset();
+        assert_eq!(op.matvec_count(), 0);
+        assert_eq!(op.matmat_col_count(), 0);
+        assert_eq!(op.inner().size(), 6);
+    }
+
+    #[test]
+    fn block_solver_column_work_matches_operator_counter() {
+        // The compaction counter reported by msminres_block must equal the
+        // matmat columns the operator actually served.
+        let n = 30;
+        let op = CountingOp::new(DenseOp::new(spd(n, 3)));
+        let mut rng = Pcg64::seeded(4);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let opts = MsMinresOptions { max_iters: 200, tol: 1e-9, weights: None };
+        let res = msminres_block(&op, &b, &[0.1, 1.0], &opts);
+        assert_eq!(op.matmat_col_count(), res.column_work as u64);
+        assert_eq!(op.matvec_count(), 0, "block solver must never fall back to matvec");
+    }
+}

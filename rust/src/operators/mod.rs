@@ -6,12 +6,14 @@
 //! MVMs in row blocks (map-reduce style, Sec. 3.2 / refs [11, 79]) giving
 //! `O(N)` memory, and are threaded.
 
+mod counting;
 mod dense;
 pub mod kernel;
 pub mod image;
 mod composed;
 
 pub use composed::{DiagOp, LowRankPlusDiagOp, ScaledOp, ShiftedOp, SubtractLowRankOp, SumOp};
+pub use counting::CountingOp;
 pub use dense::DenseOp;
 pub use kernel::{cross_kernel, KernelOp, KernelType};
 

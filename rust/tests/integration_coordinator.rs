@@ -130,6 +130,83 @@ fn graceful_shutdown_drains_inflight() {
 }
 
 #[test]
+fn starvation_steady_trickle_flushed_within_deadline() {
+    // Regression for the dispatcher flush-starvation bug: deadlines used to be
+    // checked only on the recv_timeout Timeout branch, so a steady trickle of
+    // requests arriving faster than max_wait kept the loop on its Ok path and
+    // a sub-max_batch shard was never flushed until the trickle stopped.
+    //
+    // 30 requests at ~5 ms spacing with max_wait = 15 ms and max_batch = 1000:
+    // the old dispatcher's first flush happened only after the full ~150 ms
+    // trickle (p50 latency ≈ 90 ms, one giant batch); the deadline-aware
+    // dispatcher flushes every ~15 ms regardless of arrivals.
+    let n = 8;
+    let mut map: HashMap<String, SharedOp> = HashMap::new();
+    map.insert("a".to_string(), Arc::new(DenseOp::new(Matrix::eye(n))));
+    let svc = SamplingService::start(
+        ServiceConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(15),
+            workers: 1,
+            ciq: CiqOptions::default(),
+        },
+        map,
+    );
+    let mut rng = Pcg64::seeded(77);
+    let mut tickets = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..30 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        tickets.push(svc.submit("a", ReqKind::Whiten, b));
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let trickle_us = t0.elapsed().as_micros() as u64;
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    // Self-scaling bound so scheduler jitter can't flake the test: the old
+    // dispatcher's p50 is ~half the (measured) trickle duration, the fixed
+    // one's is ~max_wait regardless of it.
+    let bound_us = (trickle_us / 3).max(60_000);
+    let p50 = svc.metrics().latency_percentile_us(50.0);
+    assert!(
+        p50 < bound_us,
+        "p50 latency {p50}us (bound {bound_us}us) — steady trickle starved the shard of flushes"
+    );
+    assert!(
+        svc.metrics().max_batch_size() < 30,
+        "all requests collapsed into one post-trickle flush (batch {})",
+        svc.metrics().max_batch_size()
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn shard_queue_depth_telemetry_tracks_traffic() {
+    let n = 12;
+    let k1 = spd(n, 31);
+    let k2 = spd(n, 32);
+    let svc = service(vec![("a", k1), ("b", k2)], 8);
+    let mut rng = Pcg64::seeded(33);
+    let mut tickets = Vec::new();
+    for i in 0..16 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let name = if i % 2 == 0 { "a" } else { "b" };
+        let kind = if i % 4 < 2 { ReqKind::Sample } else { ReqKind::Whiten };
+        tickets.push(svc.submit(name, kind, b));
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let depths = svc.metrics().shard_depths();
+    assert!(!depths.is_empty(), "shard telemetry never recorded");
+    // every shard drained back to zero, and at least one saw real queueing
+    assert!(depths.iter().all(|&(_, cur, _)| cur == 0), "shard left non-empty: {depths:?}");
+    assert!(depths.iter().any(|&(_, _, max)| max >= 1));
+    svc.shutdown();
+}
+
+#[test]
 fn latency_metrics_populated() {
     let n = 10;
     let svc = service(vec![("a", spd(n, 10))], 4);
