@@ -1,9 +1,15 @@
-//! §Perf microbenchmarks: the three L3 hot paths the optimization pass
-//! iterates on — (1) the partitioned kernel MVM (tile size, threading),
-//! (2) the msMINRES per-iteration recurrence overhead, (3) RHS batching in
-//! the coordinator (block-msMINRES vs per-vector solves).
+//! §Perf microbenchmarks: the L3 hot paths the optimization pass iterates
+//! on — (0) the panel-GEMM kernel-MVM engine vs the pre-panel per-entry
+//! engine (emits `BENCH_kernel_mvm.json`), (1) the partitioned kernel MVM
+//! (tile size, threading), (2) the msMINRES per-iteration recurrence
+//! overhead, (3) RHS batching in the coordinator (block-msMINRES vs
+//! per-vector solves).
 //!
-//! Run: `cargo bench --bench perf_hotpath [-- --n 3000]`
+//! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
+//!
+//! `--fast` shrinks section 0 to N=1024, d=4 (the CI smoke configuration);
+//! the full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
+//! types × {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -14,9 +20,113 @@ use ciq::linalg::Matrix;
 use ciq::operators::{KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
 use ciq::util::cli::Args;
+use ciq::util::threadpool::{num_threads, pool_spawned_threads};
+
+/// One before/after measurement for the JSON report.
+struct MvmEntry {
+    n: usize,
+    d: usize,
+    kernel: &'static str,
+    op: &'static str,
+    before_ms: f64,
+    after_ms: f64,
+    gflops_after: f64,
+}
+
+impl MvmEntry {
+    fn speedup(&self) -> f64 {
+        self.before_ms / self.after_ms.max(1e-12)
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "    {{\"n\": {}, \"d\": {}, \"kernel\": \"{}\", \"op\": \"{}\", \
+             \"before_ms\": {:.4}, \"after_ms\": {:.4}, \"speedup\": {:.3}, \
+             \"gflops_after\": {:.3}}}",
+            self.n, self.d, self.kernel, self.op, self.before_ms, self.after_ms,
+            self.speedup(), self.gflops_after
+        )
+    }
+}
+
+/// §0: panel-GEMM engine vs the pre-panel per-entry engine, before/after in
+/// one run on one machine. Writes `BENCH_kernel_mvm.json` into the CWD.
+fn bench_kernel_mvm(fast: bool, rng: &mut Pcg64) {
+    let ns: &[usize] = if fast { &[1024] } else { &[1024, 4096] };
+    let ds: &[usize] = if fast { &[4] } else { &[4, 16] };
+    let reps = if fast { 3 } else { 5 };
+    let kinds: [(KernelType, &'static str); 4] = [
+        (KernelType::Rbf, "rbf"),
+        (KernelType::Matern12, "matern12"),
+        (KernelType::Matern32, "matern32"),
+        (KernelType::Matern52, "matern52"),
+    ];
+    println!("# perf 0: panel-GEMM kernel MVM engine (before = per-entry naive, after = panel)");
+    println!("n\td\tkernel\top\tbefore_ms\tafter_ms\tspeedup");
+    let mut entries: Vec<MvmEntry> = Vec::new();
+    let mut max_diff = 0.0f64;
+    for &n in ns {
+        for &d in ds {
+            let x = Matrix::randn(n, d, rng);
+            let v = Matrix::randn(n, 1, rng);
+            let b = Matrix::randn(n, 8, rng);
+            // flops for one matmat: distance panel (2nd + 3) + rho (~10) + contract (2r)
+            let gram_flops = |r: usize| {
+                (n as f64) * (n as f64) * (2.0 * d as f64 + 13.0 + 2.0 * r as f64)
+            };
+            for (kind, kname) in kinds {
+                let op = KernelOp::new(&x, kind, 1.0, 1.0, 1e-1);
+                for (opname, rhs, r) in [("matvec", &v, 1usize), ("matmat_r8", &b, 8)] {
+                    let before_s = common::bench_median(reps, || {
+                        let _ = op.matmat_naive(rhs);
+                    });
+                    let after_s = common::bench_median(reps, || {
+                        let _ = op.matmat(rhs);
+                    });
+                    max_diff = max_diff.max(op.matmat(rhs).max_abs_diff(&op.matmat_naive(rhs)));
+                    let e = MvmEntry {
+                        n,
+                        d,
+                        kernel: kname,
+                        op: opname,
+                        before_ms: before_s * 1e3,
+                        after_ms: after_s * 1e3,
+                        gflops_after: gram_flops(r) / after_s / 1e9,
+                    };
+                    println!(
+                        "{}\t{}\t{}\t{}\t{:.2}\t{:.2}\t{:.2}x",
+                        e.n, e.d, e.kernel, e.op, e.before_ms, e.after_ms, e.speedup()
+                    );
+                    entries.push(e);
+                }
+            }
+        }
+    }
+    let body: Vec<String> = entries.iter().map(MvmEntry::to_json).collect();
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.kernel_mvm.v1\",\n  \"config\": {{\"fast\": {}, \
+         \"threads\": {}, \"pool_workers\": {}, \"reps\": {}}},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        fast,
+        num_threads(),
+        pool_spawned_threads(),
+        reps,
+        body.join(",\n")
+    );
+    std::fs::write("BENCH_kernel_mvm.json", json).expect("write BENCH_kernel_mvm.json");
+    println!("wrote BENCH_kernel_mvm.json ({} entries)", entries.len());
+    common::shape_check("panel engine agrees with naive engine (1e-8)", max_diff < 1e-8);
+    let worst = entries
+        .iter()
+        .map(MvmEntry::speedup)
+        .fold(f64::INFINITY, f64::min);
+    // soft floor: regression guard, not the ≥2×/1.5× acceptance numbers
+    // (those are read off the committed JSON for the target machine)
+    common::shape_check("panel engine is never slower than 0.8x naive", worst > 0.8);
+}
 
 fn main() {
     let args = Args::parse();
+    bench_kernel_mvm(args.has("fast"), &mut Pcg64::seeded(0xA11A));
     let n = args.get_or("n", 1500usize);
     let mut rng = Pcg64::seeded(args.get_or("seed", 6u64));
     let x = Matrix::randn(n, 4, &mut rng);

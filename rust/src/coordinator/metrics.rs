@@ -22,6 +22,9 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Batches that had to run Lanczos eigenvalue estimation.
     pub cache_misses: AtomicU64,
+    /// Operators registered or replaced after startup (each drops the old
+    /// entry's spectral cache — the cache-invalidation audit trail).
+    pub operator_replacements: AtomicU64,
     /// Eigenvalue-estimation MVMs avoided by cache hits.
     pub saved_mvms: AtomicU64,
     /// Matmat column-work actually performed by compacted block solves.

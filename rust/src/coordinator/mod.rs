@@ -39,8 +39,16 @@
 //! estimation MVMs the cold batch actually spent (measured, not assumed);
 //! [`Metrics::saved_mvms`] totals the savings from live traffic. The cache is guarded by a per-operator mutex so
 //! concurrent first batches on one operator never duplicate the estimation.
-//! (Re-registering a changed operator under the same name would need cache
-//! invalidation — operators are currently fixed at startup, see ROADMAP.)
+//!
+//! ## Operator replacement versions the cache
+//!
+//! [`SamplingService::replace_operator`] (and
+//! [`SamplingService::register_operator`]) installs a **fresh**
+//! operator entry whose spectral cache starts empty, so a re-registered
+//! operator can never be served stale Lanczos bounds or a stale quadrature
+//! rule. Batches already in flight hold an `Arc` to the *old* entry and
+//! finish against the consistent (old operator, old cache) pair; the old
+//! entry — cache included — is dropped when the last of them completes.
 
 pub mod metrics;
 
@@ -52,7 +60,7 @@ use crate::operators::LinearOp;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// What the client wants computed.
@@ -79,6 +87,17 @@ struct OpEntry {
     /// exactly what the miss paid, even when Lanczos broke out early.
     spectral: Mutex<Option<(Arc<SolverCache>, u64)>>,
 }
+
+impl OpEntry {
+    fn fresh(op: SharedOp) -> Arc<OpEntry> {
+        Arc::new(OpEntry { op, spectral: Mutex::new(None) })
+    }
+}
+
+/// The live operator registry, shared by the service handle, the
+/// dispatcher, and the batch workers. Entries are swapped whole on
+/// replacement, never mutated in place.
+type OpMap = Arc<RwLock<HashMap<String, Arc<OpEntry>>>>;
 
 /// Shard key: requests are queued and batched per `(operator, kind)`.
 type ShardKey = (String, ReqKind);
@@ -125,6 +144,7 @@ pub struct SamplingService {
     tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    ops: OpMap,
 }
 
 /// A pending response.
@@ -150,15 +170,38 @@ struct Batch {
 impl SamplingService {
     /// Start the service with a set of named operators.
     pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
-        let entries: HashMap<String, Arc<OpEntry>> = ops
-            .into_iter()
-            .map(|(name, op)| (name, Arc::new(OpEntry { op, spectral: Mutex::new(None) })))
-            .collect();
+        let entries: HashMap<String, Arc<OpEntry>> =
+            ops.into_iter().map(|(name, op)| (name, OpEntry::fresh(op))).collect();
+        let registry: OpMap = Arc::new(RwLock::new(entries));
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
-        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, entries, rx, m2));
-        SamplingService { tx: Some(tx), dispatcher: Some(dispatcher), metrics }
+        let r2 = registry.clone();
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, r2, rx, m2));
+        SamplingService { tx: Some(tx), dispatcher: Some(dispatcher), metrics, ops: registry }
+    }
+
+    /// Register a new operator under `name`, or atomically **replace** an
+    /// existing one. Replacement installs a fresh entry whose spectral cache
+    /// starts empty — the next batch on `name` re-runs Lanczos estimation,
+    /// so stale bounds/quadrature from the old operator can never serve the
+    /// new one (the versioning contract in the module docs).
+    pub fn replace_operator(&self, name: &str, op: SharedOp) {
+        self.metrics.operator_replacements.fetch_add(1, Ordering::Relaxed);
+        self.ops.write().unwrap().insert(name.to_string(), OpEntry::fresh(op));
+    }
+
+    /// Alias of [`Self::replace_operator`] for first-time registration after
+    /// startup.
+    pub fn register_operator(&self, name: &str, op: SharedOp) {
+        self.replace_operator(name, op);
+    }
+
+    /// Remove an operator (and its spectral cache); in-flight batches
+    /// complete against the entry they already hold. Returns whether the
+    /// name was registered.
+    pub fn deregister_operator(&self, name: &str) -> bool {
+        self.ops.write().unwrap().remove(name).is_some()
     }
 
     /// Submit a request; returns a [`Ticket`] to wait on.
@@ -247,14 +290,13 @@ fn flush_expired(
 
 fn dispatcher_loop(
     config: ServiceConfig,
-    ops: HashMap<String, Arc<OpEntry>>,
+    ops: OpMap,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
     // worker pool
     let (btx, brx) = mpsc::channel::<Batch>();
     let brx = Arc::new(Mutex::new(brx));
-    let ops = Arc::new(ops);
     let stop = Arc::new(AtomicBool::new(false));
     let mut workers = Vec::new();
     for _ in 0..config.workers.max(1) {
@@ -293,7 +335,7 @@ fn dispatcher_loop(
             .unwrap_or(idle_poll);
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                if !ops.contains_key(&req.op_name) {
+                if !ops.read().unwrap().contains_key(&req.op_name) {
                     // Rejected up front: no shard is created, so
                     // client-controlled names cannot grow the shard map or
                     // its metrics without bound.
@@ -375,14 +417,11 @@ fn cached_spectral(
     Ok(cache)
 }
 
-fn execute_batch(
-    ops: &HashMap<String, Arc<OpEntry>>,
-    ciq_opts: &CiqOptions,
-    batch: Batch,
-    metrics: &Metrics,
-) {
-    let entry = match ops.get(&batch.op_name) {
-        Some(entry) => entry.clone(),
+fn execute_batch(ops: &OpMap, ciq_opts: &CiqOptions, batch: Batch, metrics: &Metrics) {
+    // Pin this batch's (operator, cache) pair up front: a concurrent
+    // replace_operator swaps the map entry but cannot mix versions here.
+    let entry = match ops.read().unwrap().get(&batch.op_name).cloned() {
+        Some(entry) => entry,
         None => {
             for req in batch.requests {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -543,6 +582,65 @@ mod tests {
         assert!(m.cache_hits.load(Ordering::Relaxed) >= 2);
         assert!(m.saved_mvms.load(Ordering::Relaxed) > 0);
         assert!(m.column_work.load(Ordering::Relaxed) > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replaced_operator_reestimates_bounds() {
+        use crate::operators::CountingOp;
+        let n = 16;
+        let mut rng = Pcg64::seeded(50);
+        let mk = |scale: f64, rng: &mut Pcg64| {
+            let a = Matrix::randn(n, n, rng);
+            let mut k = a.matmul(&a.transpose());
+            for i in 0..n {
+                k[(i, i)] += n as f64 * scale;
+            }
+            Arc::new(CountingOp::new(DenseOp::new(k)))
+        };
+        let old_op = mk(0.5, &mut rng);
+        let new_op = mk(4.0, &mut rng); // different spectrum → different bounds
+        let mut ops = HashMap::new();
+        let shared_old: SharedOp = old_op.clone();
+        ops.insert("k".to_string(), shared_old);
+        let cfg = ServiceConfig {
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-6, ..Default::default() },
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("k", ReqKind::Whiten, rhs.clone()).wait().unwrap();
+        let old_after_first = old_op.matvec_count();
+        assert!(old_after_first > 0, "first batch must run Lanczos estimation");
+
+        let shared_new: SharedOp = new_op.clone();
+        svc.replace_operator("k", shared_new);
+        svc.submit("k", ReqKind::Whiten, rhs.clone()).wait().unwrap();
+        assert!(
+            new_op.matvec_count() > 0,
+            "replaced operator must re-estimate its spectral bounds (stale cache would mean zero MVMs)"
+        );
+        assert_eq!(
+            old_op.matvec_count(),
+            old_after_first,
+            "old operator must not be touched after replacement"
+        );
+        assert_eq!(svc.metrics().cache_misses.load(Ordering::Relaxed), 2, "one miss per operator version");
+        assert_eq!(svc.metrics().operator_replacements.load(Ordering::Relaxed), 1);
+
+        // replacement is also first-time registration
+        let extra = mk(1.0, &mut rng);
+        let shared_extra: SharedOp = extra.clone();
+        svc.register_operator("k2", shared_extra);
+        svc.submit("k2", ReqKind::Whiten, rhs).wait().unwrap();
+        assert!(extra.matvec_count() > 0);
+
+        // deregistration makes the name unknown again
+        assert!(svc.deregister_operator("k2"));
+        assert!(!svc.deregister_operator("k2"));
+        let r = svc.submit("k2", ReqKind::Whiten, vec![0.0; n]).wait();
+        assert!(r.is_err(), "deregistered operator must reject requests");
         svc.shutdown();
     }
 

@@ -1,0 +1,371 @@
+//! Register-blocked GEMM micro-kernels on contiguous row-major panels.
+//!
+//! This is the single inner-loop engine shared by [`super::Matrix::matmul`],
+//! the kernel operator's panel MVM
+//! ([`crate::operators::KernelOp`]), and the transpose products on the
+//! Lanczos/msMINRES reorthogonalization path. Three layouts cover every
+//! caller:
+//!
+//! * [`gemm_nn`]: `C += A·B` — packed `NR`-column B panels, a 4×8
+//!   register-tile inner kernel whose hot loop is `chunks_exact`-shaped so
+//!   it auto-vectorizes.
+//! * [`gemm_nt`]: `C += A·Bᵀ` — both operands row-major, the reduction runs
+//!   along contiguous rows (the Gram-panel case `X_i · X_jᵀ`).
+//! * [`gemm_tn`]: `C += Aᵀ·B` — 4-way unrolled rank-1 updates with
+//!   contiguous inner loops (the `VᵀW` reorthogonalization case).
+//!
+//! All kernels *accumulate* into `C` (callers zero it when they need a plain
+//! product), are pure serial building blocks (threading lives in the
+//! callers, over disjoint output panels), and carry no `unsafe`: panel
+//! bounds are sliced once per tile, and the compiler hoists the checks.
+
+/// Register-tile rows of the [`gemm_nn`] micro-kernel.
+pub const MR: usize = 4;
+/// Register-tile columns of the [`gemm_nn`] micro-kernel.
+pub const NR: usize = 8;
+
+/// Dot product with a 4-way unrolled, `chunks_exact`-vectorizable loop.
+#[inline]
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let ra = ca.remainder();
+    let rb = cb.remainder();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for (x, y) in ca.zip(cb) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// `C += A · B` with `A: m×k`, `B: k×n`, `C: m×n`, all contiguous
+/// row-major. B is packed one `NR`-column panel at a time so the micro-
+/// kernel streams it from a dense buffer.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    let mut pack = Vec::new();
+    gemm_nn_with_pack(m, k, n, a, b, c, &mut pack);
+}
+
+/// [`gemm_nn`] with a caller-owned pack scratch buffer (resized as needed),
+/// so tight per-tile loops — the kernel operator calls this once per
+/// `(row-block, j-tile)` — don't pay a heap allocation per call.
+pub fn gemm_nn_with_pack(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    pack: &mut Vec<f64>,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nn: A buffer size");
+    assert_eq!(b.len(), k * n, "gemm_nn: B buffer size");
+    assert_eq!(c.len(), m * n, "gemm_nn: C buffer size");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // pack buffer only needed when at least one full NR panel exists
+    if n >= NR && pack.len() < k * NR {
+        pack.resize(k * NR, 0.0);
+    }
+    let bpack: &mut [f64] = pack;
+    let mut j = 0;
+    while j + NR <= n {
+        // pack the B panel: k rows × NR contiguous columns
+        for p in 0..k {
+            bpack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+        }
+        let mut i = 0;
+        while i + MR <= m {
+            kernel_mrxnr(k, n, j, &a[i * k..(i + MR) * k], &bpack, &mut c[i * n..(i + MR) * n]);
+            i += MR;
+        }
+        while i < m {
+            kernel_1xnr(n, j, &a[i * k..(i + 1) * k], &bpack, &mut c[i * n..(i + 1) * n]);
+            i += 1;
+        }
+        j += NR;
+    }
+    if j < n {
+        // column tail: plain rank-1 accumulation over the remaining columns
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for jj in j..n {
+                    crow[jj] += av * brow[jj];
+                }
+            }
+        }
+    }
+}
+
+/// MR×NR register tile: `C[0..MR][j..j+NR] += A-rows · packed-B-panel`.
+#[inline]
+fn kernel_mrxnr(k: usize, n: usize, j: usize, a: &[f64], bpack: &[f64], c: &mut [f64]) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..k {
+        let bp = &bpack[p * NR..(p + 1) * NR];
+        let a0 = a[p];
+        let a1 = a[k + p];
+        let a2 = a[2 * k + p];
+        let a3 = a[3 * k + p];
+        for t in 0..NR {
+            let bv = bp[t];
+            acc[0][t] += a0 * bv;
+            acc[1][t] += a1 * bv;
+            acc[2][t] += a2 * bv;
+            acc[3][t] += a3 * bv;
+        }
+    }
+    for (mi, accrow) in acc.iter().enumerate() {
+        let crow = &mut c[mi * n + j..mi * n + j + NR];
+        for t in 0..NR {
+            crow[t] += accrow[t];
+        }
+    }
+}
+
+/// 1×NR edge tile for the row remainder of [`gemm_nn`].
+#[inline]
+fn kernel_1xnr(n: usize, j: usize, arow: &[f64], bpack: &[f64], crow: &mut [f64]) {
+    let mut acc = [0.0f64; NR];
+    for (p, &av) in arow.iter().enumerate() {
+        let bp = &bpack[p * NR..(p + 1) * NR];
+        for t in 0..NR {
+            acc[t] += av * bp[t];
+        }
+    }
+    let cj = &mut crow[j..j + NR];
+    for t in 0..NR {
+        cj[t] += acc[t];
+    }
+}
+
+/// `C += A · Bᵀ` with `A: m×k`, `B: n×k`, `C: m×n`, all contiguous
+/// row-major — the reduction axis is the contiguous one for both operands
+/// (the Gram-panel layout). 4×4 register tiles of simultaneous dots.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "gemm_nt: A buffer size");
+    assert_eq!(b.len(), n * k, "gemm_nt: B buffer size");
+    assert_eq!(c.len(), m * n, "gemm_nt: C buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        return;
+    }
+    const TB: usize = 4;
+    let mut i = 0;
+    while i + TB <= m {
+        let mut j = 0;
+        while j + TB <= n {
+            let mut acc = [[0.0f64; TB]; TB];
+            for p in 0..k {
+                let ar = [a[i * k + p], a[(i + 1) * k + p], a[(i + 2) * k + p], a[(i + 3) * k + p]];
+                let br = [b[j * k + p], b[(j + 1) * k + p], b[(j + 2) * k + p], b[(j + 3) * k + p]];
+                for (mi, &av) in ar.iter().enumerate() {
+                    for (nj, &bv) in br.iter().enumerate() {
+                        acc[mi][nj] += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate() {
+                let crow = &mut c[(i + mi) * n + j..(i + mi) * n + j + TB];
+                for (nj, &v) in accrow.iter().enumerate() {
+                    crow[nj] += v;
+                }
+            }
+            j += TB;
+        }
+        while j < n {
+            let brow = &b[j * k..(j + 1) * k];
+            for mi in 0..TB {
+                c[(i + mi) * n + j] += dot_unrolled(&a[(i + mi) * k..(i + mi + 1) * k], brow);
+            }
+            j += 1;
+        }
+        i += TB;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] += dot_unrolled(arow, &b[j * k..(j + 1) * k]);
+        }
+        i += 1;
+    }
+}
+
+/// `C += Aᵀ · B` with `A: p×m`, `B: p×n`, `C: m×n`, all contiguous
+/// row-major, computed as 4-way unrolled rank-1 updates whose inner loops
+/// stream contiguous rows of `B` and `C`.
+pub fn gemm_tn(p_rows: usize, m: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), p_rows * m, "gemm_tn: A buffer size");
+    assert_eq!(b.len(), p_rows * n, "gemm_tn: B buffer size");
+    assert_eq!(c.len(), m * n, "gemm_tn: C buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut p = 0;
+    while p + 4 <= p_rows {
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for i in 0..m {
+            let a0 = a[p * m + i];
+            let a1 = a[(p + 1) * m + i];
+            let a2 = a[(p + 2) * m + i];
+            let a3 = a[(p + 3) * m + i];
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        p += 4;
+    }
+    while p < p_rows {
+        let bp = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = a[p * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * bp[j];
+            }
+        }
+        p += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randv(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive_over_shapes() {
+        let mut rng = Pcg64::seeded(11);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (4, 4, 8),
+            (5, 3, 9),
+            (7, 16, 8),
+            (13, 5, 21),
+            (16, 32, 17),
+            (33, 7, 1),
+            (2, 9, 40),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let want = naive_nn(m, k, n, &a, &b);
+            let mut c = randv(m * n, &mut rng); // nonzero: kernels accumulate
+            let base = c.clone();
+            gemm_nn(m, k, n, &a, &b, &mut c);
+            let want_acc: Vec<f64> = want.iter().zip(&base).map(|(w, b0)| w + b0).collect();
+            assert!(max_diff(&c, &want_acc) < 1e-11, "gemm_nn {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive_over_shapes() {
+        let mut rng = Pcg64::seeded(12);
+        for &(m, k, n) in &[(1, 1, 1), (4, 4, 4), (5, 3, 9), (9, 17, 6), (12, 8, 12), (3, 2, 13)] {
+            let a = randv(m * k, &mut rng);
+            let bt = randv(n * k, &mut rng); // B is n×k, used as Bᵀ
+            // naive: c[i][j] = dot(a_row_i, b_row_j)
+            let mut want = vec![0.0; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    for p in 0..k {
+                        want[i * n + j] += a[i * k + p] * bt[j * k + p];
+                    }
+                }
+            }
+            let mut c = vec![0.0; m * n];
+            gemm_nt(m, k, n, &a, &bt, &mut c);
+            assert!(max_diff(&c, &want) < 1e-11, "gemm_nt {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_naive_over_shapes() {
+        let mut rng = Pcg64::seeded(13);
+        for &(p, m, n) in &[(1, 1, 1), (4, 4, 4), (9, 5, 7), (17, 3, 11), (8, 16, 2), (5, 1, 30)] {
+            let a = randv(p * m, &mut rng); // p×m
+            let b = randv(p * n, &mut rng); // p×n
+            let mut want = vec![0.0; m * n];
+            for pp in 0..p {
+                for i in 0..m {
+                    for j in 0..n {
+                        want[i * n + j] += a[pp * m + i] * b[pp * n + j];
+                    }
+                }
+            }
+            let mut c = vec![0.0; m * n];
+            gemm_tn(p, m, n, &a, &b, &mut c);
+            assert!(max_diff(&c, &want) < 1e-11, "gemm_tn {p}x{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = Pcg64::seeded(14);
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 64, 100] {
+            let a = randv(len, &mut rng);
+            let b = randv(len, &mut rng);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_unrolled(&a, &b) - want).abs() < 1e-11, "len={len}");
+        }
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut c = vec![0.0; 0];
+        gemm_nn(0, 3, 0, &[], &[0.0; 0], &mut c);
+        gemm_nt(0, 2, 0, &[], &[], &mut c);
+        gemm_tn(0, 0, 0, &[], &[], &mut c);
+        let mut c2 = vec![1.0; 6];
+        // k = 0: C must be left untouched
+        gemm_nn(2, 0, 3, &[], &[], &mut c2);
+        gemm_nt(2, 0, 3, &[], &[], &mut c2);
+        assert!(c2.iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,7 +1,10 @@
-//! Row-major dense matrix with blocked, threaded matrix multiply.
+//! Row-major dense matrix with blocked, threaded matrix multiply. The
+//! per-panel inner loops live in [`super::gemm`]; this file only decides how
+//! to partition work across the persistent thread pool.
 
+use super::gemm;
 use crate::rng::Pcg64;
-use crate::util::threadpool::parallel_fill;
+use crate::util::threadpool::{num_threads, parallel_fill, parallel_map};
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
 
 /// Dense row-major `f64` matrix.
@@ -107,81 +110,102 @@ impl Matrix {
         let mut out = vec![0.0; self.rows];
         parallel_fill(&mut out, 256, |start, block| {
             for (k, o) in block.iter_mut().enumerate() {
-                let row = self.row(start + k);
-                let mut acc = 0.0;
-                for (a, b) in row.iter().zip(v) {
-                    acc += a * b;
-                }
-                *o = acc;
+                *o = gemm::dot_unrolled(self.row(start + k), v);
             }
         });
         out
     }
 
-    /// `selfᵀ * v`.
+    /// `selfᵀ * v` without forming the transpose: the `n = 1` case of
+    /// [`Self::t_matmul`], routed through the same [`gemm::gemm_tn`]
+    /// micro-kernel with the row reduction split into per-thread stripes —
+    /// this sits on the Lanczos/msMINRES reorthogonalization path.
     pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
-        let mut out = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let vi = v[i];
-            for (o, a) in out.iter_mut().zip(row) {
-                *o += vi * a;
+        let (m, c) = (self.rows, self.cols);
+        let stripes = num_threads().min(m.div_ceil(64).max(1));
+        if stripes <= 1 || m * c < 32_768 {
+            let mut out = vec![0.0; c];
+            gemm::gemm_tn(m, c, 1, &self.data, v, &mut out);
+            return out;
+        }
+        let rows_per = m.div_ceil(stripes);
+        let partials: Vec<Vec<f64>> = parallel_map(stripes, |s| {
+            let r0 = (s * rows_per).min(m);
+            let r1 = ((s + 1) * rows_per).min(m);
+            let mut acc = vec![0.0; c];
+            if r1 > r0 {
+                gemm::gemm_tn(r1 - r0, c, 1, &self.data[r0 * c..r1 * c], &v[r0..r1], &mut acc);
+            }
+            acc
+        });
+        let mut out = vec![0.0; c];
+        for part in partials {
+            for (o, p) in out.iter_mut().zip(&part) {
+                *o += p;
             }
         }
         out
     }
 
-    /// Blocked, threaded GEMM: `self * other`.
+    /// Blocked, threaded GEMM: `self * other`. Each thread owns a contiguous
+    /// panel of output rows and runs the register-blocked
+    /// [`gemm::gemm_nn`] micro-kernel over it.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        // Parallelize over row blocks of the output; inner loops in ikj order
-        // so the innermost loop streams both `other` and `out` rows.
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
         let data_out = out.as_mut_slice();
-        parallel_fill(data_out, 64 * n.max(1), |start_flat, block| {
+        parallel_fill(data_out, 64 * n, |start_flat, block| {
             let row0 = start_flat / n;
             let nrows = block.len() / n;
-            for bi in 0..nrows {
-                let i = row0 + bi;
-                let arow = self.row(i);
-                let orow = &mut block[bi * n..(bi + 1) * n];
-                for p in 0..k {
-                    let a = arow[p];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = other.row(p);
-                    for (o, b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
-                }
-            }
+            gemm::gemm_nn(nrows, k, n, &self.data[row0 * k..(row0 + nrows) * k], &other.data, block);
         });
         out
     }
 
-    /// `selfᵀ * other` without forming the transpose.
+    /// `selfᵀ * other` without forming the transpose. The shared row
+    /// reduction is split into stripes handled by [`gemm::gemm_tn`] on the
+    /// thread pool, with per-stripe partial products summed at the end.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "t_matmul dim mismatch");
-        let (m, n) = (self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        for p in 0..self.rows {
-            let arow = self.row(p);
-            let brow = other.row(p);
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for (o, b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
+        let (p_rows, m, n) = (self.rows, self.cols, other.cols);
+        if p_rows == 0 || m == 0 || n == 0 {
+            return Matrix::zeros(m, n);
+        }
+        let stripes = num_threads().min(p_rows.div_ceil(64).max(1));
+        if stripes <= 1 || p_rows * m * n < 65_536 {
+            let mut out = Matrix::zeros(m, n);
+            gemm::gemm_tn(p_rows, m, n, &self.data, &other.data, out.as_mut_slice());
+            return out;
+        }
+        let rows_per = p_rows.div_ceil(stripes);
+        let partials: Vec<Vec<f64>> = parallel_map(stripes, |s| {
+            let r0 = (s * rows_per).min(p_rows);
+            let r1 = ((s + 1) * rows_per).min(p_rows);
+            let mut acc = vec![0.0; m * n];
+            if r1 > r0 {
+                gemm::gemm_tn(
+                    r1 - r0,
+                    m,
+                    n,
+                    &self.data[r0 * m..r1 * m],
+                    &other.data[r0 * n..r1 * n],
+                    &mut acc,
+                );
+            }
+            acc
+        });
+        let mut flat = vec![0.0; m * n];
+        for part in partials {
+            for (o, p) in flat.iter_mut().zip(&part) {
+                *o += p;
             }
         }
-        out
+        Matrix::from_vec(m, n, flat)
     }
 
     /// Scale in place.
@@ -306,6 +330,44 @@ mod tests {
         let z2 = a.transpose().matvec(&w);
         for j in 0..14 {
             assert!((z[j] - z2[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn striped_transpose_products_match_reference() {
+        // big enough to cross the parallel-stripe thresholds in
+        // matvec_t (m·c ≥ 32768) and t_matmul (p·m·n ≥ 65536)
+        let mut rng = Pcg64::seeded(21);
+        let a = Matrix::randn(601, 60, &mut rng);
+        let w: Vec<f64> = (0..601).map(|_| rng.normal()).collect();
+        let z = a.matvec_t(&w);
+        let z_ref = a.transpose().matvec(&w);
+        for (x, y) in z.iter().zip(&z_ref) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        let b = Matrix::randn(601, 23, &mut rng);
+        let c = a.t_matmul(&b);
+        let c_ref = a.transpose().matmul(&b);
+        assert!(c.max_abs_diff(&c_ref) < 1e-9);
+    }
+
+    #[test]
+    fn matmul_non_divisible_panel_sizes() {
+        // shapes that exercise every micro-kernel tail (rows % 4, cols % 8)
+        let mut rng = Pcg64::seeded(22);
+        for &(m, k, n) in &[(66, 31, 9usize), (3, 70, 15), (129, 2, 8), (5, 5, 5)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for p in 0..k {
+                        s += a[(i, p)] * b[(p, j)];
+                    }
+                    assert!((c[(i, j)] - s).abs() < 1e-10, "({m},{k},{n}) at ({i},{j})");
+                }
+            }
         }
     }
 

@@ -1,15 +1,17 @@
 //! Dense linear algebra, from scratch.
 //!
 //! Provides everything the reproduction needs without external BLAS/LAPACK:
-//! a row-major [`Matrix`] with blocked & threaded GEMM, Cholesky
-//! factorization with triangular solves ([`chol`]), a symmetric
-//! eigendecomposition (Householder tridiagonalization + implicit-QL,
-//! [`eigen`]) used as the *exact* `K^{1/2}` oracle in tests and inside the
-//! randomized-SVD baseline.
+//! a row-major [`Matrix`] with blocked & threaded GEMM built on the
+//! register-blocked panel micro-kernels in [`gemm`] (shared with the kernel
+//! operator's panel MVM), Cholesky factorization with triangular solves
+//! ([`chol`]), a symmetric eigendecomposition (Householder
+//! tridiagonalization + implicit-QL, [`eigen`]) used as the *exact*
+//! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline.
 
 mod matrix;
 pub mod chol;
 pub mod eigen;
+pub mod gemm;
 
 pub use chol::Cholesky;
 pub use matrix::Matrix;

@@ -1,14 +1,26 @@
 //! Kernel-matrix operators with partitioned, O(N)-memory, threaded MVMs.
 //!
 //! `K_ij = s² ρ(‖(x_i − x_j)/ℓ‖) + σ² δ_ij` for RBF / Matérn-ν kernels.
-//! The MVM streams over row/column tiles: each tile of `K` is computed on
-//! the fly from the (lengthscale-scaled) data and immediately contracted
-//! against the right-hand sides, mirroring the paper's map-reduce MVMs
-//! (refs [11, 79]) and the Pallas kernel's HBM↔VMEM schedule at Layer 1.
+//! The MVM streams over row/column tiles, mirroring the paper's map-reduce
+//! MVMs (refs [11, 79]) and the Pallas kernel's HBM↔VMEM schedule at
+//! Layer 1. Each `(i-block, j-tile)` step is a three-stage **panel
+//! pipeline** rather than a per-entry scalar loop:
+//!
+//! 1. the squared-distance tile `d²_ij = ‖x_i‖² + ‖x_j‖² − 2·x_i·x_jᵀ`
+//!    materializes as one Gram panel via the register-blocked
+//!    [`gemm::gemm_nt`] micro-kernel,
+//! 2. `ρ` (or `dρ`) is applied over the contiguous panel in place,
+//! 3. the panel contracts against the right-hand-side block with a second
+//!    small GEMM ([`gemm::gemm_nn`]).
+//!
+//! Blocks run on the persistent thread pool; [`KernelOp::matmat_naive`] and
+//! [`KernelOp::grad_contract_naive`] keep the pre-panel per-entry engine as
+//! the before-side of `BENCH_kernel_mvm.json` and as the oracle for the
+//! panel pipeline's property tests.
 
 use super::LinearOp;
-use crate::linalg::Matrix;
-use crate::util::threadpool::parallel_fill;
+use crate::linalg::{gemm, Matrix};
+use crate::util::threadpool::{num_threads, parallel_fill_scoped, parallel_fill_threads, parallel_map_threads};
 
 /// Kernel family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +95,9 @@ pub struct KernelOp {
     noise: f64,
     /// row-tile size for the partitioned MVM (perf knob)
     tile: usize,
+    /// thread-count override for this operator's panel pipeline
+    /// (`None` = global [`num_threads`]; `Some(1)` = fully serial)
+    threads: Option<usize>,
 }
 
 impl KernelOp {
@@ -108,7 +123,7 @@ impl KernelOp {
         let sq: Vec<f64> = (0..n)
             .map(|i| xs.row(i).iter().map(|v| v * v).sum())
             .collect();
-        KernelOp { xs, sq, kind, outputscale, noise, tile: 128 }
+        KernelOp { xs, sq, kind, outputscale, noise, tile: 128, threads: None }
     }
 
     /// Number of data points.
@@ -119,6 +134,15 @@ impl KernelOp {
     /// Set the row-tile size (performance tuning).
     pub fn with_tile(mut self, tile: usize) -> Self {
         self.tile = tile.max(8);
+        self
+    }
+
+    /// Override the thread count for this operator's MVM/gradient pipeline
+    /// (default: the global [`num_threads`], i.e. `CIQ_THREADS`). `1` forces
+    /// the fully serial path — used by the property tests to cover
+    /// `CIQ_THREADS ∈ {1, many}` inside one process.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
         self
     }
 
@@ -140,7 +164,61 @@ impl KernelOp {
     /// `θ ∈ {log ℓ, log s²}`, computed in one tiled O(N² d) pass.
     /// Returns `(d_log_ell, d_log_s2)`. The noise term is excluded
     /// (its gradient is `Σ_i l_i r_i · σ²` for log-noise, handled by callers).
+    ///
+    /// Like [`LinearOp::matmat`], each distance tile materializes as a Gram
+    /// panel through the micro-kernel, `ρ`/`dρ` run over the contiguous
+    /// panel, and row tiles are distributed over the thread pool with the
+    /// per-tile partial sums reduced at the end.
     pub fn grad_contract(&self, l: &[f64], r: &[f64]) -> (f64, f64) {
+        let n = self.n();
+        assert_eq!(l.len(), n);
+        assert_eq!(r.len(), n);
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let tile = self.tile;
+        let d = self.xs.cols();
+        let xs = self.xs.as_slice();
+        let ntiles = n.div_ceil(tile);
+        let nthreads = self.threads.unwrap_or_else(num_threads);
+        let partials: Vec<(f64, f64)> = parallel_map_threads(ntiles, nthreads, |ti| {
+            let it0 = ti * tile;
+            let it1 = (it0 + tile).min(n);
+            let rows = it1 - it0;
+            let mut panel = vec![0.0f64; rows * tile];
+            let mut d_ell = 0.0;
+            let mut d_s2 = 0.0;
+            for jt in (0..n).step_by(tile) {
+                let j1 = (jt + tile).min(n);
+                let jw = j1 - jt;
+                let pan = &mut panel[..rows * jw];
+                pan.fill(0.0);
+                gemm::gemm_nt(rows, d, jw, &xs[it0 * d..it1 * d], &xs[jt * d..j1 * d], pan);
+                for bi in 0..rows {
+                    let i = it0 + bi;
+                    let li = l[i];
+                    if li == 0.0 {
+                        continue;
+                    }
+                    let sqi = self.sq[i];
+                    let prow = &pan[bi * jw..(bi + 1) * jw];
+                    for (jj, &xx) in prow.iter().enumerate() {
+                        let j = jt + jj;
+                        let rr = (sqi + self.sq[j] - 2.0 * xx).max(0.0).sqrt();
+                        let lr = li * r[j] * self.outputscale;
+                        d_ell += lr * self.kind.drho_dlog_ell(rr);
+                        d_s2 += lr * self.kind.rho(rr);
+                    }
+                }
+            }
+            (d_ell, d_s2)
+        });
+        partials.into_iter().fold((0.0, 0.0), |(a, b), (x, y)| (a + x, b + y))
+    }
+
+    /// Pre-panel reference for [`Self::grad_contract`]: per-entry scalar
+    /// distances, serial. Oracle for the panel property tests.
+    pub fn grad_contract_naive(&self, l: &[f64], r: &[f64]) -> (f64, f64) {
         let n = self.n();
         assert_eq!(l.len(), n);
         assert_eq!(r.len(), n);
@@ -161,37 +239,19 @@ impl KernelOp {
         }
         (d_ell, d_s2)
     }
-}
 
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let mut s = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
-}
-
-impl LinearOp for KernelOp {
-    fn size(&self) -> usize {
-        self.n()
-    }
-
-    fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
-        let out = self.matmat(&m);
-        out.as_slice().to_vec()
-    }
-
-    fn matmat(&self, b: &Matrix) -> Matrix {
+    /// Pre-panel reference engine for [`LinearOp::matmat`]: per-entry scalar
+    /// `dot` distances and spawn-per-call threading
+    /// ([`parallel_fill_scoped`]). Kept as the *before* side of the
+    /// `BENCH_kernel_mvm.json` comparison and as a correctness oracle.
+    pub fn matmat_naive(&self, b: &Matrix) -> Matrix {
         let n = self.n();
         assert_eq!(b.rows(), n, "kernel matmat dim mismatch");
         let r = b.cols();
         let mut out = Matrix::zeros(n, r);
         let tile = self.tile;
         let flat = out.as_mut_slice();
-        // one block = `tile` output rows; blocks are written disjointly
-        parallel_fill(flat, tile * r.max(1), |start_flat, block| {
+        parallel_fill_scoped(flat, tile * r.max(1), |start_flat, block| {
             let i0 = start_flat / r.max(1);
             let rows = block.len() / r.max(1);
             for jt in (0..n).step_by(tile) {
@@ -212,6 +272,71 @@ impl LinearOp for KernelOp {
                         }
                     }
                 }
+            }
+        });
+        out
+    }
+}
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    gemm::dot_unrolled(a, b)
+}
+
+impl LinearOp for KernelOp {
+    fn size(&self) -> usize {
+        self.n()
+    }
+
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        let out = self.matmat(&m);
+        out.as_slice().to_vec()
+    }
+
+    fn matmat(&self, b: &Matrix) -> Matrix {
+        let n = self.n();
+        assert_eq!(b.rows(), n, "kernel matmat dim mismatch");
+        let r = b.cols();
+        let mut out = Matrix::zeros(n, r);
+        if n == 0 || r == 0 {
+            return out;
+        }
+        let tile = self.tile;
+        let d = self.xs.cols();
+        let xs = self.xs.as_slice();
+        let nthreads = self.threads.unwrap_or_else(num_threads);
+        let flat = out.as_mut_slice();
+        // one block = `tile` output rows; blocks are written disjointly
+        parallel_fill_threads(flat, tile * r, nthreads, |start_flat, block| {
+            let i0 = start_flat / r;
+            let rows = block.len() / r;
+            // scratch Gram panel + GEMM pack buffer, reused across every
+            // j-tile of this block (no per-tile heap traffic)
+            let mut panel = vec![0.0f64; rows * tile];
+            let mut pack = Vec::new();
+            for jt in (0..n).step_by(tile) {
+                let j1 = (jt + tile).min(n);
+                let jw = j1 - jt;
+                let pan = &mut panel[..rows * jw];
+                pan.fill(0.0);
+                // stage 1: pan = X(i-block) · X(j-tile)ᵀ (micro-kernel GEMM)
+                gemm::gemm_nt(rows, d, jw, &xs[i0 * d..(i0 + rows) * d], &xs[jt * d..j1 * d], pan);
+                // stage 2: pan ← s²·ρ(√max(‖xi‖²+‖xj‖²−2·pan, 0)) (+σ² diag)
+                for bi in 0..rows {
+                    let i = i0 + bi;
+                    let sqi = self.sq[i];
+                    let prow = &mut pan[bi * jw..(bi + 1) * jw];
+                    for (jj, v) in prow.iter_mut().enumerate() {
+                        let d2 = (sqi + self.sq[jt + jj] - 2.0 * *v).max(0.0);
+                        *v = self.outputscale * self.kind.rho(d2.sqrt());
+                    }
+                    if i >= jt && i < j1 {
+                        prow[i - jt] += self.noise;
+                    }
+                }
+                // stage 3: out-block += pan · B(j-tile) (second small GEMM)
+                gemm::gemm_nn_with_pack(rows, jw, r, pan, &b.as_slice()[jt * r..j1 * r], block, &mut pack);
             }
         });
         out
@@ -342,6 +467,65 @@ mod tests {
         let op = KernelOp::new(&x, KernelType::Matern32, 0.8, 1.5, 0.0);
         let cross = cross_kernel(&x, &x, KernelType::Matern32, &[0.8, 0.8, 0.8], 1.5);
         assert!(cross.max_abs_diff(&op.to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn panel_matmat_matches_naive_reference_property() {
+        use crate::util::proptest::{check, Config};
+        let kinds =
+            [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52];
+        check(Config { cases: 32, seed: 0xBEEF }, "panel matmat == naive", |rng, case| {
+            let kind = kinds[case % 4];
+            let n = 17 + (case * 13) % 80; // non-divisible sizes
+            let d = 1 + case % 5;
+            let r = 1 + case % 6;
+            let tile = [8, 11, 16, 33][(case / 4) % 4];
+            let threads = if case % 2 == 0 { 1 } else { 4 };
+            let x = Matrix::randn(n, d, rng);
+            let b = Matrix::randn(n, r, rng);
+            let op = KernelOp::new(&x, kind, 0.7, 1.3, 0.05)
+                .with_tile(tile)
+                .with_threads(threads);
+            let got = op.matmat(&b);
+            let want = op.matmat_naive(&b);
+            let diff = got.max_abs_diff(&want);
+            crate::prop_assert!(
+                diff < 1e-10,
+                "kind={kind:?} n={n} d={d} r={r} tile={tile} threads={threads} diff={diff:e}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn panel_grad_contract_matches_naive_property() {
+        use crate::util::proptest::{check, Config};
+        let kinds =
+            [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52];
+        check(Config { cases: 16, seed: 0xFACE }, "panel grad == naive", |rng, case| {
+            let kind = kinds[case % 4];
+            let n = 11 + (case * 9) % 60;
+            let d = 1 + case % 4;
+            let tile = [8, 13, 32][case % 3];
+            let threads = if case % 2 == 0 { 1 } else { 4 };
+            let x = Matrix::randn(n, d, rng);
+            let l: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let op = KernelOp::new(&x, kind, 0.8, 1.2, 0.0)
+                .with_tile(tile)
+                .with_threads(threads);
+            let (ge, gs) = op.grad_contract(&l, &r);
+            let (ne, ns) = op.grad_contract_naive(&l, &r);
+            crate::prop_assert!(
+                (ge - ne).abs() < 1e-10 * (1.0 + ne.abs()),
+                "kind={kind:?} n={n} d={d} ell grad {ge} vs {ne}"
+            );
+            crate::prop_assert!(
+                (gs - ns).abs() < 1e-10 * (1.0 + ns.abs()),
+                "kind={kind:?} n={n} d={d} s2 grad {gs} vs {ns}"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,16 +1,43 @@
-//! Scoped data parallelism over index ranges (no rayon offline — built on
-//! `std::thread::scope` with an atomic work queue).
+//! Data parallelism over index ranges on a **persistent worker pool**
+//! (no rayon offline — parked `std::thread` workers plus an atomic work
+//! queue).
 //!
 //! The kernel-matrix MVMs (the hot path of the whole system) split their row
 //! range into chunks and let a fixed set of worker threads steal chunks from
 //! a shared counter. Results are written into disjoint slices of the output,
 //! so no locking is needed on the data itself.
+//!
+//! ## Why a persistent pool
+//!
+//! A CIQ solve performs ~100 sequential MVMs (`J` msMINRES iterations plus
+//! Lanczos estimation), and the original implementation spawned fresh OS
+//! threads via `std::thread::scope` inside *every* MVM — paying thread
+//! creation latency ~100× per solve. The pool here is created lazily on the
+//! first parallel call and parks its workers on a condvar between jobs, so
+//! steady-state dispatch is a mutex + notify instead of `clone(2)`.
+//! [`pool_spawned_threads`] exposes the process-lifetime spawn counter so
+//! tests can *prove* threads are created once, not per call.
+//!
+//! ## Scheduling contract
+//!
+//! One job runs at a time (concurrent submitters serialize on a submit
+//! lock; the pool is shared process-wide). The submitting thread always
+//! participates in its own job, so `CIQ_THREADS=1` — or a pool with zero
+//! workers — degenerates to a fully serial loop on the caller with the pool
+//! never even constructed. Nested parallel calls from inside a parallel
+//! region run serially on the calling worker (no deadlock, no
+//! oversubscription).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// First panic payload captured from a job's body, re-raised verbatim on the
+/// submitting thread once the job completes.
+type PanicSlot = Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>;
 
 /// Number of worker threads to use (cached; `CIQ_THREADS` env overrides).
 pub fn num_threads() -> usize {
-    use std::sync::OnceLock;
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
         if let Ok(s) = std::env::var("CIQ_THREADS") {
@@ -22,6 +49,206 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Total worker threads ever spawned by the persistent pool: `0` until the
+/// first parallel call, then `num_threads() - 1` for the life of the
+/// process. Tests assert this stays constant across thousands of parallel
+/// calls — the "no per-MVM thread spawning" guarantee.
+pub fn pool_spawned_threads() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    // True on pool workers (always) and on a submitter while it executes its
+    // own job; parallel entry points check it to run nested calls serially.
+    static IN_PARALLEL: Cell<bool> = Cell::new(false);
+}
+
+fn in_parallel_region() -> bool {
+    IN_PARALLEL.with(|f| f.get())
+}
+
+/// One job: call `func(s, e)` for chunk ranges popped off `counter` until
+/// `nchunks` is exhausted. The `'static` references are lifetime-erased
+/// borrows of the submitter's stack frame — valid because the submitter
+/// blocks until every registered worker has finished (see [`run_parallel`]).
+#[derive(Clone, Copy)]
+struct Task {
+    func: &'static (dyn Fn(usize, usize) + Sync),
+    counter: &'static AtomicUsize,
+    panicked: &'static PanicSlot,
+    n: usize,
+    chunk: usize,
+    nchunks: usize,
+}
+
+struct PoolState {
+    /// Bumped once per job so sleeping workers can tell a new job from the
+    /// one they already completed.
+    epoch: u64,
+    task: Option<Task>,
+    /// Workers currently registered on the task (registration happens under
+    /// the state lock, so the submitter's `active == 0` check cannot race a
+    /// late take).
+    active: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes whole jobs from concurrent submitters.
+    submit: Mutex<()>,
+    workers: usize,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let workers = num_threads().saturating_sub(1);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(PoolState { epoch: 0, task: None, active: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+            workers,
+        }));
+        for _ in 0..workers {
+            SPAWNED.fetch_add(1, Ordering::SeqCst);
+            std::thread::Builder::new()
+                .name("ciq-pool".into())
+                .spawn(move || worker_loop(pool))
+                .expect("failed to spawn pool worker");
+        }
+        pool
+    })
+}
+
+fn worker_loop(pool: &'static Pool) {
+    IN_PARALLEL.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut guard = pool.state.lock().unwrap();
+            loop {
+                if guard.epoch != seen {
+                    if let Some(task) = guard.task {
+                        seen = guard.epoch;
+                        guard.active += 1;
+                        break task;
+                    }
+                    // Epoch moved but the task is already cleared: we slept
+                    // through that whole job. Remember the epoch so we do not
+                    // spin, and wait for the next one.
+                    seen = guard.epoch;
+                }
+                guard = pool.work_cv.wait(guard).unwrap();
+            }
+        };
+        run_chunks(&task);
+        let mut guard = pool.state.lock().unwrap();
+        guard.active -= 1;
+        if guard.active == 0 {
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+fn run_chunks(task: &Task) {
+    loop {
+        let c = task.counter.fetch_add(1, Ordering::Relaxed);
+        if c >= task.nchunks {
+            break;
+        }
+        let s = c * task.chunk;
+        let e = (s + task.chunk).min(task.n);
+        // A panicking body must not kill a pool worker (the next job would
+        // deadlock waiting on it); capture the first payload and re-raise it
+        // verbatim on the submitter.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (task.func)(s, e)));
+        if let Err(payload) = result {
+            let mut slot = task.panicked.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+// SAFETY (all three): pure lifetime erasure so borrows of the submitter's
+// stack can cross into worker threads. The protocol in `run_parallel`
+// guarantees the borrows outlive every access: workers register on the task
+// under the state lock before touching it, and the submitter clears the task
+// and returns only after observing `active == 0` under that same lock with
+// the chunk counter exhausted.
+unsafe fn erase_body<'a>(
+    f: &'a (dyn Fn(usize, usize) + Sync),
+) -> &'static (dyn Fn(usize, usize) + Sync) {
+    std::mem::transmute(f)
+}
+unsafe fn erase_counter(c: &AtomicUsize) -> &'static AtomicUsize {
+    std::mem::transmute(c)
+}
+unsafe fn erase_slot(s: &PanicSlot) -> &'static PanicSlot {
+    std::mem::transmute(s)
+}
+
+fn run_serial(n: usize, chunk: usize, body: &dyn Fn(usize, usize)) {
+    let mut s = 0;
+    while s < n {
+        let e = (s + chunk).min(n);
+        body(s, e);
+        s = e;
+    }
+}
+
+fn run_parallel(n: usize, chunk: usize, nchunks: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    let pool = pool();
+    if pool.workers == 0 {
+        run_serial(n, chunk, body);
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let panicked: PanicSlot = Mutex::new(None);
+    let task = unsafe {
+        Task {
+            func: erase_body(body),
+            counter: erase_counter(&counter),
+            panicked: erase_slot(&panicked),
+            n,
+            chunk,
+            nchunks,
+        }
+    };
+    // One job at a time; competing submitters queue here.
+    let submit_guard = pool.submit.lock().unwrap();
+    {
+        let mut guard = pool.state.lock().unwrap();
+        guard.epoch = guard.epoch.wrapping_add(1);
+        guard.task = Some(task);
+        pool.work_cv.notify_all();
+    }
+    // The submitting thread works its share too (and is marked in-parallel
+    // so any nested parallel call from the body degrades to serial).
+    IN_PARALLEL.with(|f| f.set(true));
+    run_chunks(&task);
+    IN_PARALLEL.with(|f| f.set(false));
+    // Wait for every registered worker to finish, then retire the task so a
+    // late-waking worker can never touch this (about to die) stack frame.
+    {
+        let mut guard = pool.state.lock().unwrap();
+        while guard.active > 0 {
+            guard = pool.done_cv.wait(guard).unwrap();
+        }
+        guard.task = None;
+    }
+    drop(submit_guard);
+    if let Some(payload) = panicked.into_inner().unwrap() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
 /// Run `body(start, end)` over chunked sub-ranges of `0..n` in parallel.
 ///
 /// `body` must be safe to call concurrently on disjoint ranges. Chunks are
@@ -31,57 +258,110 @@ pub fn parallel_for_chunks<F>(n: usize, chunk: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let chunk = chunk.max(1);
-    let nthreads = num_threads();
-    let nchunks = n.div_ceil(chunk);
-    if nthreads == 1 || nchunks <= 1 {
-        let mut s = 0;
-        while s < n {
-            let e = (s + chunk).min(n);
-            body(s, e);
-            s = e;
-        }
-        return;
-    }
-    let counter = AtomicUsize::new(0);
-    let workers = nthreads.min(nchunks);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let c = counter.fetch_add(1, Ordering::Relaxed);
-                if c >= nchunks {
-                    break;
-                }
-                let s = c * chunk;
-                let e = (s + chunk).min(n);
-                body(s, e);
-            });
-        }
-    });
+    parallel_for_chunks_threads(n, chunk, num_threads(), body);
 }
 
-/// Parallel map over `0..n`, collecting results in order.
+/// [`parallel_for_chunks`] with an explicit thread count: `nthreads <= 1`
+/// runs fully serially on the calling thread (the pool is not even
+/// constructed); larger values enable the shared pool, whose size is fixed
+/// at `num_threads() - 1` workers regardless of the request.
+pub fn parallel_for_chunks_threads<F>(n: usize, chunk: usize, nthreads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let chunk = chunk.max(1);
+    if n == 0 {
+        return;
+    }
+    let nchunks = n.div_ceil(chunk);
+    if nthreads <= 1 || nchunks <= 1 || in_parallel_region() {
+        run_serial(n, chunk, &body);
+        return;
+    }
+    run_parallel(n, chunk, nchunks, &body);
+}
+
+/// Parallel map over `0..n`, collecting results in order. Work is
+/// distributed in contiguous chunks written disjointly — no per-element
+/// locking.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_threads(n, num_threads(), f)
+}
+
+/// [`parallel_map`] with an explicit thread count (see
+/// [`parallel_for_chunks_threads`]).
+pub fn parallel_map_threads<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
     let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_for_chunks(n, 1, |s, e| {
-            for i in s..e {
-                **slots[i].lock().unwrap() = f(i);
-            }
-        });
+    if n == 0 {
+        return out;
     }
+    let chunk = n.div_ceil(4 * nthreads.max(1)).max(1);
+    parallel_fill_threads(&mut out, chunk, nthreads, |start, block| {
+        for (k, slot) in block.iter_mut().enumerate() {
+            *slot = f(start + k);
+        }
+    });
     out
 }
 
-/// Write-disjoint parallel fill: partitions `out` into `chunk`-row blocks and
-/// calls `body(block_start, block_slice)` concurrently.
+/// Write-disjoint parallel fill: partitions `out` into `chunk`-row blocks
+/// and calls `body(block_start, block_slice)` concurrently.
 pub fn parallel_fill<T, F>(out: &mut [T], chunk: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    parallel_fill_threads(out, chunk, num_threads(), body);
+}
+
+/// [`parallel_fill`] with an explicit thread count (see
+/// [`parallel_for_chunks_threads`]).
+pub fn parallel_fill_threads<T, F>(out: &mut [T], chunk: usize, nthreads: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let chunk = chunk.max(1);
+    if n == 0 {
+        return;
+    }
+    if nthreads <= 1 || n <= chunk || in_parallel_region() {
+        for (ci, block) in out.chunks_mut(chunk).enumerate() {
+            body(ci * chunk, block);
+        }
+        return;
+    }
+    let base = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks_threads(n, chunk, nthreads, move |s, e| {
+        // SAFETY: the scheduler hands out disjoint in-bounds ranges, so the
+        // reconstructed `&mut` blocks never alias, and `out` outlives the
+        // call (the job completes before `parallel_for_chunks_threads`
+        // returns).
+        let block = unsafe { std::slice::from_raw_parts_mut(base.0.add(s), e - s) };
+        body(s, block);
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: the pointer is only ever used to carve out disjoint `&mut [T]`
+// blocks across threads, which is sound exactly when `T: Send`.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Pre-pool reference implementation: spawns fresh scoped threads on every
+/// call. Kept (not routed anywhere hot) as the *before* side of the
+/// `BENCH_kernel_mvm.json` comparison and as a correctness oracle in tests.
+pub fn parallel_fill_scoped<T, F>(out: &mut [T], chunk: usize, body: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -109,8 +389,8 @@ where
         v
     };
     let counter = AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
-        blocks.into_iter().map(|b| std::sync::Mutex::new(Some(b))).collect();
+    let slots: Vec<Mutex<Option<(usize, &mut [T])>>> =
+        blocks.into_iter().map(|b| Mutex::new(Some(b))).collect();
     std::thread::scope(|scope| {
         for _ in 0..nthreads.min(slots.len()) {
             scope.spawn(|| loop {
@@ -157,6 +437,23 @@ mod tests {
     }
 
     #[test]
+    fn parallel_fill_scoped_matches_pool() {
+        let mut a = vec![0usize; 513];
+        let mut b = vec![0usize; 513];
+        parallel_fill(&mut a, 32, |start, block| {
+            for (k, x) in block.iter_mut().enumerate() {
+                *x = (start + k) * 3;
+            }
+        });
+        parallel_fill_scoped(&mut b, 32, |start, block| {
+            for (k, x) in block.iter_mut().enumerate() {
+                *x = (start + k) * 3;
+            }
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn parallel_map_in_order() {
         let v = parallel_map(100, |i| i * i);
         for (i, &x) in v.iter().enumerate() {
@@ -169,5 +466,82 @@ mod tests {
         parallel_for_chunks(0, 8, |_, _| panic!("must not be called"));
         let mut v: Vec<u8> = vec![];
         parallel_fill(&mut v, 8, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn pool_threads_spawn_once_per_process() {
+        let fill = |v: &mut [u64]| {
+            parallel_fill_threads(v, 64, 8, |s, block| {
+                for (k, x) in block.iter_mut().enumerate() {
+                    *x = (s + k) as u64;
+                }
+            });
+        };
+        let mut v = vec![0u64; 4096];
+        fill(&mut v);
+        let after_first = pool_spawned_threads();
+        for _ in 0..64 {
+            fill(&mut v);
+            parallel_for_chunks_threads(4096, 64, 8, |_s, _e| {});
+        }
+        assert_eq!(
+            pool_spawned_threads(),
+            after_first,
+            "pool must not respawn threads per call"
+        );
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn one_thread_runs_fully_serial_on_calling_thread() {
+        let me = std::thread::current().id();
+        let ids = Mutex::new(Vec::new());
+        parallel_for_chunks_threads(100, 7, 1, |_s, _e| {
+            ids.lock().unwrap().push(std::thread::current().id());
+        });
+        let mut v = vec![0u8; 100];
+        parallel_fill_threads(&mut v, 7, 1, |_s, block| {
+            ids.lock().unwrap().push(std::thread::current().id());
+            for x in block.iter_mut() {
+                *x = 1;
+            }
+        });
+        let ids = ids.into_inner().unwrap();
+        assert!(!ids.is_empty());
+        assert!(
+            ids.iter().all(|&id| id == me),
+            "nthreads=1 must never leave the calling thread"
+        );
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_serially_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        parallel_for_chunks_threads(8, 1, 4, |_s, _e| {
+            parallel_for_chunks_threads(10, 3, 4, |a, b| {
+                total.fetch_add(b - a, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_safely() {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        let sum = AtomicUsize::new(0);
+                        parallel_for_chunks_threads(1000, 16, 4, |a, b| {
+                            sum.fetch_add(b - a, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), 1000);
+                    }
+                });
+            }
+        });
     }
 }

@@ -1,0 +1,93 @@
+//! Integration tests for the panel-GEMM MVM engine and the persistent
+//! worker pool: the panel pipeline must be bit-for-bit compatible with the
+//! dense oracle through the whole CIQ stack, and the pool must spawn its
+//! threads once per process, never per MVM.
+
+use ciq::ciq::{Ciq, CiqOptions};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::rng::Pcg64;
+use ciq::util::threadpool::{num_threads, pool_spawned_threads};
+use ciq::util::rel_err;
+
+fn data(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seeded(seed);
+    Matrix::randn(n, d, &mut rng)
+}
+
+#[test]
+fn panel_matmat_matches_dense_oracle_all_kernels() {
+    // N deliberately not divisible by any tile size in play
+    let n = 101;
+    let x = data(n, 3, 1);
+    let mut rng = Pcg64::seeded(2);
+    let b = Matrix::randn(n, 7, &mut rng);
+    for kind in
+        [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52]
+    {
+        for tile in [8, 16, 33, 128] {
+            let op = KernelOp::new(&x, kind, 0.6, 1.4, 0.02).with_tile(tile);
+            let dense = op.to_dense();
+            let got = op.matmat(&b);
+            let want = dense.matmul(&b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-10,
+                "{kind:?} tile={tile} diff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn ciq_whiten_sample_roundtrip_on_panel_engine() {
+    let n = 120;
+    let x = data(n, 4, 3);
+    let op = KernelOp::new(&x, KernelType::Matern32, 0.9, 1.0, 0.5);
+    let mut rng = Pcg64::seeded(4);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+    let w = solver.invsqrt_mvm(&op, &b).expect("whiten").solution;
+    let s = solver.sqrt_mvm(&op, &w).expect("sample").solution;
+    assert!(rel_err(&s, &b) < 1e-4, "K^{{1/2}}·K^{{-1/2}}·b must round-trip");
+}
+
+#[test]
+fn pool_spawns_once_across_many_mvms() {
+    let n = 257;
+    let x = data(n, 4, 5);
+    let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 0.1).with_tile(32);
+    let mut rng = Pcg64::seeded(6);
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // warm up: first parallel call may lazily construct the pool
+    let _ = op.matvec(&v);
+    let after_first = pool_spawned_threads();
+    let a = Matrix::randn(n, 40, &mut rng);
+    for _ in 0..50 {
+        let _ = op.matvec(&v);
+        let _ = a.matmul(&a.transpose());
+    }
+    assert_eq!(
+        pool_spawned_threads(),
+        after_first,
+        "~100 MVMs must not spawn a single new thread"
+    );
+    assert!(
+        pool_spawned_threads() <= num_threads().saturating_sub(1),
+        "pool size is bounded by num_threads() - 1 (the submitter participates)"
+    );
+}
+
+#[test]
+fn serial_override_matches_parallel_engine() {
+    let n = 90;
+    let x = data(n, 5, 7);
+    let mut rng = Pcg64::seeded(8);
+    let b = Matrix::randn(n, 4, &mut rng);
+    for kind in [KernelType::Rbf, KernelType::Matern52] {
+        let serial = KernelOp::new(&x, kind, 0.7, 1.1, 0.01).with_threads(1);
+        let threaded = KernelOp::new(&x, kind, 0.7, 1.1, 0.01).with_threads(8);
+        let diff = serial.matmat(&b).max_abs_diff(&threaded.matmat(&b));
+        assert!(diff < 1e-12, "{kind:?}: serial and threaded engines must agree, diff={diff:e}");
+    }
+}
