@@ -1,10 +1,14 @@
 //! The L3 coordinator in action: a batching sampling service multiplexing
 //! concurrent `K^{±1/2} b` requests from many client threads, with latency
-//! and batching metrics.
+//! and batching metrics, policy-driven preconditioning, background context
+//! warming, and adaptive per-shard batch ceilings.
 //!
-//! Run: `cargo run --release --example sampling_service -- [--n 2000] [--clients 8]`
+//! Run: `cargo run --release --example sampling_service -- [--n 2000]
+//!   [--clients 8] [--policy plain|cached|precond] [--rank 48]
+//!   [--adaptive-ms 50]`
 
-use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::ciq::{PrecondConfig, SolverPolicy};
+use ciq::coordinator::{AdaptiveBatchConfig, ReqKind, SamplingService, ServiceConfig, SharedOp};
 use ciq::linalg::Matrix;
 use ciq::operators::{KernelOp, KernelType};
 use ciq::rng::Pcg64;
@@ -12,12 +16,23 @@ use ciq::util::cli::Args;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::parse();
     let n = args.get_or("n", 2000usize);
     let clients = args.get_or("clients", 8usize);
     let per_client = args.get_or("requests", 8usize);
+    let policy = match args.get("policy").unwrap_or("cached") {
+        "plain" => SolverPolicy::Plain,
+        "precond" => SolverPolicy::Preconditioned(PrecondConfig {
+            rank: args.get_or("rank", 48usize),
+            sigma2: Some(1e-2),
+            ..Default::default()
+        }),
+        _ => SolverPolicy::CachedBounds,
+    };
+    let adaptive_ms = args.get_or("adaptive-ms", 0u64);
 
     let mut rng = Pcg64::seeded(0);
     let x = Matrix::randn(n, 2, &mut rng);
@@ -28,7 +43,16 @@ fn main() {
     ops.insert("matern".to_string(), mat);
 
     let svc = Arc::new(SamplingService::start(
-        ServiceConfig { max_batch: 16, workers: 2, ..Default::default() },
+        ServiceConfig {
+            max_batch: 16,
+            workers: 2,
+            policy,
+            adaptive: (adaptive_ms > 0).then(|| AdaptiveBatchConfig {
+                target_flush_latency: Duration::from_millis(adaptive_ms),
+                min_batch: 1,
+            }),
+            ..Default::default()
+        },
         ops,
     ));
 
@@ -59,11 +83,20 @@ fn main() {
         svc.metrics().max_batch_size()
     );
     println!(
-        "spectral cache: hits={} misses={} saved_mvms={}",
+        "spectral cache: hits={} misses={} saved_mvms={} (warmed={} warm_failures={})",
         svc.metrics().cache_hits.load(Ordering::Relaxed),
         svc.metrics().cache_misses.load(Ordering::Relaxed),
         svc.metrics().saved_mvms.load(Ordering::Relaxed),
+        svc.metrics().warmed_operators.load(Ordering::Relaxed),
+        svc.metrics().warm_failures.load(Ordering::Relaxed),
     );
+    let ceilings = svc.metrics().batch_ceilings();
+    if !ceilings.is_empty() {
+        println!("adaptive batch ceilings:");
+        for (shard, c) in ceilings {
+            println!("  {shard:<16} {c}");
+        }
+    }
     println!(
         "compaction: {} matmat columns paid, {} saved vs uncompacted",
         svc.metrics().column_work.load(Ordering::Relaxed),

@@ -3,18 +3,19 @@
 //! engine (emits `BENCH_kernel_mvm.json`), (1) the partitioned kernel MVM
 //! (tile size, threading), (2) the msMINRES per-iteration recurrence
 //! overhead, (3) RHS batching in the coordinator (block-msMINRES vs
-//! per-vector solves).
+//! per-vector solves), (5) preconditioned vs plain CIQ on an
+//! ill-conditioned kernel (emits `BENCH_ciq_precond.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
-//! `--fast` shrinks section 0 to N=1024, d=4 (the CI smoke configuration);
-//! the full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
-//! types × {matvec, matmat r=8}.
+//! `--fast` shrinks section 0 to N=1024, d=4 and section 5 to N=400 (the CI
+//! smoke configuration); the full sweep covers N ∈ {1024, 4096} × d ∈
+//! {4, 16} × all four kernel types × {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use ciq::ciq::{Ciq, CiqOptions};
+use ciq::ciq::{Ciq, CiqOptions, PrecondConfig, SolveKind, SolverPolicy};
 use ciq::krylov::msminres::{msminres, MsMinresOptions};
 use ciq::linalg::Matrix;
 use ciq::operators::{KernelOp, KernelType, LinearOp};
@@ -49,9 +50,15 @@ impl MvmEntry {
     }
 }
 
+/// Deferred PASS/FAIL checks: every section *records* its verdicts and main
+/// evaluates them after all sections ran, so the JSON artifacts are always
+/// written (and uploadable by CI) before any failing check exits the
+/// process.
+type Checks = Vec<(String, bool)>;
+
 /// §0: panel-GEMM engine vs the pre-panel per-entry engine, before/after in
 /// one run on one machine. Writes `BENCH_kernel_mvm.json` into the CWD.
-fn bench_kernel_mvm(fast: bool, rng: &mut Pcg64) {
+fn bench_kernel_mvm(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
     let ns: &[usize] = if fast { &[1024] } else { &[1024, 4096] };
     let ds: &[usize] = if fast { &[4] } else { &[4, 16] };
     let reps = if fast { 3 } else { 5 };
@@ -114,19 +121,20 @@ fn bench_kernel_mvm(fast: bool, rng: &mut Pcg64) {
     );
     std::fs::write("BENCH_kernel_mvm.json", json).expect("write BENCH_kernel_mvm.json");
     println!("wrote BENCH_kernel_mvm.json ({} entries)", entries.len());
-    common::shape_check("panel engine agrees with naive engine (1e-8)", max_diff < 1e-8);
+    checks.push(("panel engine agrees with naive engine (1e-8)".into(), max_diff < 1e-8));
     let worst = entries
         .iter()
         .map(MvmEntry::speedup)
         .fold(f64::INFINITY, f64::min);
     // soft floor: regression guard, not the ≥2×/1.5× acceptance numbers
     // (those are read off the committed JSON for the target machine)
-    common::shape_check("panel engine is never slower than 0.8x naive", worst > 0.8);
+    checks.push(("panel engine is never slower than 0.8x naive".into(), worst > 0.8));
 }
 
 fn main() {
     let args = Args::parse();
-    bench_kernel_mvm(args.has("fast"), &mut Pcg64::seeded(0xA11A));
+    let mut checks: Checks = Vec::new();
+    bench_kernel_mvm(args.has("fast"), &mut Pcg64::seeded(0xA11A), &mut checks);
     let n = args.get_or("n", 1500usize);
     let mut rng = Pcg64::seeded(args.get_or("seed", 6u64));
     let x = Matrix::randn(n, 4, &mut rng);
@@ -189,5 +197,75 @@ fn main() {
     println!("warm\t{:.1} ms", t_block * 1e3);
     println!("cache_speedup\t{:.2}x", t_cold / t_block);
 
-    common::shape_check("MVM under 1 GF/s would signal a regression", flops / (best_ms / 1e3) / 1e9 > 0.5);
+    checks.push((
+        "MVM under 1 GF/s would signal a regression".into(),
+        flops / (best_ms / 1e3) / 1e9 > 0.5,
+    ));
+
+    bench_ciq_precond(args.has("fast"), &mut rng, &mut checks);
+
+    // evaluate every recorded verdict only now — both JSON artifacts exist
+    // on disk whatever happens below
+    for (label, ok) in &checks {
+        common::shape_check(label, *ok);
+    }
+}
+
+/// §5: preconditioned vs plain CIQ on an ill-conditioned RBF kernel — the
+/// serving pipeline's precond-on/off numbers. Writes
+/// `BENCH_ciq_precond.json` into the CWD (uploaded by the CI bench-smoke
+/// job next to `BENCH_kernel_mvm.json`).
+fn bench_ciq_precond(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
+    let n = if fast { 400 } else { 1000 };
+    let rank = if fast { 24 } else { 48 };
+    let reps = if fast { 2 } else { 3 };
+    let noise = 1e-4;
+    let r = 4;
+    println!("# perf 5: preconditioned CIQ (N={n}, rank={rank}, noise={noise:.0e}, r={r})");
+    let x = Matrix::randn(n, 1, rng);
+    let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, noise);
+    let b = Matrix::randn(n, r, rng);
+    let solver =
+        Ciq::new(CiqOptions { tol: 1e-5, max_iters: 4000, ..Default::default() });
+    let ctx_plain = solver.build_context(&op, &SolverPolicy::CachedBounds).expect("plain ctx");
+    let cfg = PrecondConfig { rank, sigma2: Some(noise), build_tol: 1e-14 };
+    let t_build = common::bench_median(reps, || {
+        let _ = solver.build_context(&op, &SolverPolicy::Preconditioned(cfg.clone())).expect("ctx");
+    });
+    let ctx_pre = solver.build_context(&op, &SolverPolicy::Preconditioned(cfg)).expect("pre ctx");
+    let mut iters = (0usize, 0usize); // (plain, precond)
+    let t_plain = common::bench_median(reps, || {
+        let res = solver.solve_block(&op, &b, SolveKind::InvSqrt, &ctx_plain).expect("plain");
+        iters.0 = res.col_iterations.iter().copied().max().unwrap_or(0);
+    });
+    let t_pre = common::bench_median(reps, || {
+        let res = solver.solve_block(&op, &b, SolveKind::InvSqrt, &ctx_pre).expect("precond");
+        iters.1 = res.col_iterations.iter().copied().max().unwrap_or(0);
+    });
+    println!("mode\tms\titers");
+    println!("plain\t{:.1}\t{}", t_plain * 1e3, iters.0);
+    println!("precond\t{:.1}\t{}", t_pre * 1e3, iters.1);
+    println!("precond_build\t{:.1} ms (amortized across every batch on the operator)", t_build * 1e3);
+    println!("precond_speedup\t{:.2}x ({} → {} iters)", t_plain / t_pre.max(1e-12), iters.0, iters.1);
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.ciq_precond.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"n\": {n}, \"rank\": {rank}, \"noise\": {noise}, \"rhs\": {r}, \"tol\": 1e-5, \
+         \"threads\": {}, \"reps\": {reps}}},\n  \"entries\": [\n    \
+         {{\"mode\": \"plain\", \"ms\": {:.4}, \"iters\": {}}},\n    \
+         {{\"mode\": \"precond\", \"ms\": {:.4}, \"iters\": {}, \"build_ms\": {:.4}}}\n  ],\n  \
+         \"speedup\": {:.3}\n}}\n",
+        num_threads(),
+        t_plain * 1e3,
+        iters.0,
+        t_pre * 1e3,
+        iters.1,
+        t_build * 1e3,
+        t_plain / t_pre.max(1e-12),
+    );
+    std::fs::write("BENCH_ciq_precond.json", json).expect("write BENCH_ciq_precond.json");
+    println!("wrote BENCH_ciq_precond.json");
+    checks.push((
+        "preconditioned CIQ uses fewer msMINRES iterations than plain".into(),
+        iters.1 < iters.0,
+    ));
 }

@@ -24,16 +24,35 @@
 //! a cold call, so the first call doubles as cache population, and report the
 //! matmat `column_work` actually performed by the compacted block solver
 //! ([`crate::krylov::msminres::msminres_block`]).
+//!
+//! ## Solver policies
+//!
+//! The `*_with_bounds` family and the preconditioned entry points of
+//! [`precond`] are unified behind a [`SolverPolicy`]: callers pick *how* an
+//! operator should be approached (plain, cached bounds, or preconditioned —
+//! Appx. D) and [`Ciq::build_context`] bakes every derived quantity (Lanczos
+//! bounds, quadrature rule, optional pivoted-Cholesky factor) into a
+//! [`SolverContext`]. [`Ciq::solve`] / [`Ciq::solve_block`] then execute any
+//! [`SolveKind`] against that context with zero per-call estimation, so
+//! callers (the coordinator above all) stop hand-threading caches and
+//! preconditioners through four different entry points. Under
+//! [`SolverPolicy::Preconditioned`] the solves run on the whitened operator
+//! `M = P^{-1/2} K P^{-1/2}` and return the rotation-equivalent maps of
+//! Eqs. S12/S13 (see `rust/DESIGN.md` for why that preserves sampling and
+//! whitening semantics).
 
 pub mod precond;
 
+use self::precond::WhitenedOp;
 use crate::krylov::msminres::{msminres, msminres_block, MsMinresOptions};
 use crate::krylov::{estimate_extreme_eigenvalues, EigenBounds};
 use crate::linalg::Matrix;
 use crate::operators::LinearOp;
+use crate::precond::PivotedCholesky;
 use crate::quadrature::{ciq_quadrature, QuadratureRule};
 use crate::rng::Pcg64;
 use crate::Result;
+use std::sync::Arc;
 
 /// Options for the CIQ solver.
 #[derive(Clone, Debug)]
@@ -92,6 +111,77 @@ pub struct SolverCache {
     pub bounds: EigenBounds,
     /// Quadrature rule derived from the bounds (`Q` weights/shifts).
     pub rule: QuadratureRule,
+}
+
+/// Which square-root map a unified solve computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolveKind {
+    /// `K^{1/2} b` (sampling) — or its rotation `R b` with `R Rᵀ = K` under a
+    /// preconditioned policy.
+    Sqrt,
+    /// `K^{-1/2} b` (whitening) — or its rotation `R' b` with `R'R'ᵀ = K^{-1}`
+    /// under a preconditioned policy.
+    InvSqrt,
+}
+
+/// Configuration of the pivoted-Cholesky preconditioner a
+/// [`SolverPolicy::Preconditioned`] context builds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrecondConfig {
+    /// Rank budget of the partial pivoted Cholesky.
+    pub rank: usize,
+    /// σ² of `P = L̄L̄ᵀ + σ²I`. `None` derives it from the operator: the
+    /// structural `lambda_min_bound` when one exists (kernel matrices:
+    /// σ²_noise), else 1% of the mean diagonal.
+    pub sigma2: Option<f64>,
+    /// Early-stop tolerance on the residual diagonal of the factorization.
+    pub build_tol: f64,
+}
+
+impl Default for PrecondConfig {
+    fn default() -> Self {
+        PrecondConfig { rank: 32, sigma2: None, build_tol: 1e-12 }
+    }
+}
+
+/// How the solve stack approaches an operator. This is the knob the serving
+/// path exposes end-to-end: the coordinator builds one [`SolverContext`] per
+/// registered operator under the service's policy and every batch executes
+/// through [`Ciq::solve_block`] against it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverPolicy {
+    /// Estimate spectral bounds inline on every solve (no reuse). The
+    /// baseline policy — what a context-free caller gets.
+    Plain,
+    /// Estimate bounds once per operator and reuse the cached bounds +
+    /// quadrature rule for every subsequent solve.
+    CachedBounds,
+    /// Run msMINRES-CIQ on the whitened operator `M = P^{-1/2} K P^{-1/2}`
+    /// with a pivoted-Cholesky `P ≈ K` (Appx. D): one preconditioner
+    /// accelerates all `Q` shifted solves at once, at the price of returning
+    /// the rotation-equivalent maps of Eqs. S12/S13 instead of `K^{±1/2}`.
+    Preconditioned(PrecondConfig),
+}
+
+/// Everything a solve needs besides the operator and the right-hand sides:
+/// the spectral cache of the operator the iterations actually run on (`K`
+/// itself, or the whitened `M` under a preconditioned policy) plus the
+/// preconditioner when one is in play. Built once per operator by
+/// [`Ciq::build_context`] — this is the unit the coordinator's background
+/// warmer populates off the request path.
+#[derive(Clone)]
+pub struct SolverContext {
+    /// Bounds + quadrature rule of the solve operator (`K` or `M`).
+    pub cache: SolverCache,
+    /// The pivoted-Cholesky factor when the policy is preconditioned.
+    pub precond: Option<Arc<PivotedCholesky>>,
+}
+
+impl SolverContext {
+    /// Whether solves through this context run on the whitened operator.
+    pub fn is_preconditioned(&self) -> bool {
+        self.precond.is_some()
+    }
 }
 
 /// Result of a blocked CIQ solve.
@@ -202,20 +292,28 @@ impl Ciq {
         bounds: Option<EigenBounds>,
     ) -> Result<CiqResult> {
         let (rule, bnds) = self.rule(op, bounds)?;
-        let ms = msminres(op, b, &rule.shifts, &self.ms_opts(&rule));
+        Ok(self.invsqrt_with_cache(op, b, &SolverCache { bounds: bnds, rule }))
+    }
+
+    /// `K^{-1/2} b` against a prebuilt cache: the cached quadrature rule is
+    /// used outright — no estimation *and* no rule reconstruction. This is
+    /// what [`Ciq::solve`] bottoms out in, mirroring the block path's reuse
+    /// of [`SolverCache::rule`].
+    fn invsqrt_with_cache(&self, op: &dyn LinearOp, b: &[f64], cache: &SolverCache) -> CiqResult {
+        let ms = msminres(op, b, &cache.rule.shifts, &self.ms_opts(&cache.rule));
         let n = op.size();
         let mut sol = vec![0.0; n];
-        for (w, c) in rule.weights.iter().zip(&ms.solutions) {
+        for (w, c) in cache.rule.weights.iter().zip(&ms.solutions) {
             crate::util::axpy(*w, c, &mut sol);
         }
-        Ok(CiqResult {
+        CiqResult {
             solution: sol,
             iterations: ms.iterations,
             residual: ms.residuals.iter().cloned().fold(0.0, f64::max),
-            bounds: bnds,
+            bounds: cache.bounds,
             shifted_solves: ms.solutions,
-            rule,
-        })
+            rule: cache.rule.clone(),
+        }
     }
 
     /// `K^{1/2} b` (sampling): `K · (Σ_q w_q (t_qI+K)^{-1} b)`.
@@ -240,6 +338,92 @@ impl Ciq {
     pub fn solver_cache(&self, op: &dyn LinearOp) -> Result<SolverCache> {
         let (rule, bounds) = self.rule(op, None)?;
         Ok(SolverCache { bounds, rule })
+    }
+
+    /// Build the full [`SolverContext`] for `op` under `policy`: Lanczos
+    /// bounds + quadrature rule (of the whitened operator when the policy is
+    /// preconditioned), plus the pivoted-Cholesky factor itself. This is the
+    /// expensive, per-operator step — everything [`Ciq::solve`] /
+    /// [`Ciq::solve_block`] do afterwards is estimation-free.
+    pub fn build_context(&self, op: &dyn LinearOp, policy: &SolverPolicy) -> Result<SolverContext> {
+        match policy {
+            SolverPolicy::Plain | SolverPolicy::CachedBounds => {
+                Ok(SolverContext { cache: self.solver_cache(op)?, precond: None })
+            }
+            SolverPolicy::Preconditioned(cfg) => {
+                let sigma2 = match cfg.sigma2 {
+                    Some(s) => s,
+                    None => default_precond_sigma2(op),
+                };
+                let pc = Arc::new(PivotedCholesky::new(op, cfg.rank, sigma2, cfg.build_tol)?);
+                let m = WhitenedOp::new(op, pc.as_ref());
+                let cache = self.solver_cache(&m)?;
+                Ok(SolverContext { cache, precond: Some(pc) })
+            }
+        }
+    }
+
+    /// Unified single-vector solve against a prebuilt context. Performs zero
+    /// eigenvalue-estimation MVMs. Under a preconditioned context the result
+    /// is the rotation-equivalent map (`R b` / `R' b` of Eqs. S12/S13) and
+    /// `iterations` counts the msMINRES iterations on the *whitened*
+    /// operator.
+    pub fn solve(
+        &self,
+        op: &dyn LinearOp,
+        b: &[f64],
+        kind: SolveKind,
+        ctx: &SolverContext,
+    ) -> Result<CiqResult> {
+        match &ctx.precond {
+            None => {
+                let mut res = self.invsqrt_with_cache(op, b, &ctx.cache);
+                if kind == SolveKind::Sqrt {
+                    res.solution = op.matvec(&res.solution);
+                }
+                Ok(res)
+            }
+            Some(pc) => {
+                let m = WhitenedOp::new(op, pc.as_ref());
+                let mut res = self.invsqrt_with_cache(&m, b, &ctx.cache);
+                // rotate back out of the whitened space: R' b = P^{-1/2} M^{-1/2} b
+                res.solution = pc.invsqrt_mvm(&res.solution);
+                if kind == SolveKind::Sqrt {
+                    // R b = K R' b, with R Rᵀ = K
+                    res.solution = op.matvec(&res.solution);
+                }
+                Ok(res)
+            }
+        }
+    }
+
+    /// Unified blocked solve against a prebuilt context (the coordinator's
+    /// per-batch entry point). Zero estimation MVMs; the preconditioned path
+    /// keeps the panel-GEMM batch economics because [`WhitenedOp`] forwards
+    /// whole blocks ([`WhitenedOp::matmat`] →
+    /// [`PivotedCholesky::invsqrt_matmat`] + the operator's own `matmat`).
+    pub fn solve_block(
+        &self,
+        op: &dyn LinearOp,
+        b: &Matrix,
+        kind: SolveKind,
+        ctx: &SolverContext,
+    ) -> Result<CiqBlockResult> {
+        match &ctx.precond {
+            None => match kind {
+                SolveKind::InvSqrt => self.invsqrt_mvm_block_with_bounds(op, b, Some(&ctx.cache)),
+                SolveKind::Sqrt => self.sqrt_mvm_block_with_bounds(op, b, Some(&ctx.cache)),
+            },
+            Some(pc) => {
+                let m = WhitenedOp::new(op, pc.as_ref());
+                let mut res = self.invsqrt_mvm_block_with_bounds(&m, b, Some(&ctx.cache))?;
+                res.solution = pc.invsqrt_matmat(&res.solution);
+                if kind == SolveKind::Sqrt {
+                    res.solution = op.matmat(&res.solution);
+                }
+                Ok(res)
+            }
+        }
     }
 
     /// Blocked whitening for `r` right-hand sides (columns of `b`): shares
@@ -318,6 +502,21 @@ impl Ciq {
             .collect();
         Ok(CiqBackward { terms })
     }
+}
+
+/// σ² used for a preconditioner when the caller does not pin one: the
+/// operator's structural λ_min bound when available (kernel matrices expose
+/// their noise term), else 1% of the mean diagonal — small enough that
+/// `P ≈ K` stays tight, large enough that `P^{-1/2}` is well-posed.
+fn default_precond_sigma2(op: &dyn LinearOp) -> f64 {
+    if let Some(b) = op.lambda_min_bound() {
+        if b > 0.0 {
+            return b;
+        }
+    }
+    let d = op.diagonal();
+    let mean = d.iter().sum::<f64>() / (d.len().max(1) as f64);
+    (mean.abs() * 1e-2).max(1e-12)
 }
 
 #[cfg(test)]
@@ -476,6 +675,73 @@ mod tests {
         assert_eq!(op.matvec_count(), mv_cold, "warm solve must skip Lanczos estimation");
         assert!(warm.cache.is_none(), "warm solve should not clone the cache back");
         assert!(warm.solution.max_abs_diff(&cold.solution) < 1e-12, "cached-bounds solve diverged");
+    }
+
+    #[test]
+    fn policy_contexts_match_legacy_entry_points() {
+        let n = 28;
+        let k = random_spd(n, 21, n as f64 * 0.5);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(22);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let solver = Ciq::new(CiqOptions { tol: 1e-9, ..Default::default() });
+        // CachedBounds context must reproduce the *_with_bounds path exactly
+        let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+        assert!(!ctx.is_preconditioned());
+        let unified = solver.solve_block(&op, &b, SolveKind::InvSqrt, &ctx).unwrap();
+        let legacy = solver.invsqrt_mvm_block_with_bounds(&op, &b, Some(&ctx.cache)).unwrap();
+        assert!(unified.solution.max_abs_diff(&legacy.solution) < 1e-14);
+        // single-vector agrees with the blocked column
+        let single = solver.solve(&op, &b.col(0), SolveKind::InvSqrt, &ctx).unwrap();
+        assert!(rel_err(&single.solution, &unified.solution.col(0)) < 1e-7);
+        // sqrt kind matches too
+        let us = solver.solve_block(&op, &b, SolveKind::Sqrt, &ctx).unwrap();
+        let ls = solver.sqrt_mvm_block_with_bounds(&op, &b, Some(&ctx.cache)).unwrap();
+        assert!(us.solution.max_abs_diff(&ls.solution) < 1e-14);
+    }
+
+    #[test]
+    fn preconditioned_context_sample_map_squares_to_k() {
+        // R Rᵀ = K for the blocked preconditioned sample map, by building R
+        // from unit vectors through solve_block.
+        let n = 22;
+        let k = random_spd(n, 23, n as f64 * 0.4);
+        let op = DenseOp::new(k.clone());
+        let solver = Ciq::new(CiqOptions { tol: 1e-10, q_points: 12, ..Default::default() });
+        let cfg = PrecondConfig { rank: 8, sigma2: Some(1.0), build_tol: 1e-14 };
+        let ctx = solver.build_context(&op, &SolverPolicy::Preconditioned(cfg)).unwrap();
+        assert!(ctx.is_preconditioned());
+        let r_mat = solver.solve_block(&op, &Matrix::eye(n), SolveKind::Sqrt, &ctx).unwrap();
+        let rrt = r_mat.solution.matmul(&r_mat.solution.transpose());
+        let err = rrt.max_abs_diff(&k);
+        assert!(err < 1e-4, "R Rᵀ vs K max diff {err}");
+    }
+
+    #[test]
+    fn default_precond_sigma2_prefers_structural_bound() {
+        let n = 12;
+        let k = random_spd(n, 25, 0.0);
+        let base = DenseOp::new(k);
+        // the dense op exposes no structural bound, so sigma2 falls back to
+        // 1% of the mean diagonal
+        let d = base.diagonal();
+        let mean = d.iter().sum::<f64>() / n as f64;
+        let got = default_precond_sigma2(&base);
+        assert!((got - mean * 1e-2).abs() < 1e-12 * (1.0 + mean));
+        // a wrapper with a structural bound wins
+        struct Bounded<'a>(&'a DenseOp);
+        impl LinearOp for Bounded<'_> {
+            fn size(&self) -> usize {
+                self.0.size()
+            }
+            fn matvec(&self, x: &[f64]) -> Vec<f64> {
+                self.0.matvec(x)
+            }
+            fn lambda_min_bound(&self) -> Option<f64> {
+                Some(0.125)
+            }
+        }
+        assert_eq!(default_precond_sigma2(&Bounded(&base)), 0.125);
     }
 
     #[test]

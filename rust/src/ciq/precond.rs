@@ -12,9 +12,12 @@
 //! `O(nr)` `P^{±1/2}` MVMs, so `M` is available directly as a composed
 //! operator. (The paper reaches the same systems through a generalized
 //! Lanczos recurrence that only needs `P^{-1}`; with exact `P^{-1/2}` the
-//! two are algebraically identical — see DESIGN.md.)
+//! two are algebraically identical — see `rust/DESIGN.md` for the argument,
+//! and for how [`crate::ciq::SolverPolicy`] layers this under the serving
+//! path.)
 
 use super::{Ciq, CiqResult};
+use crate::linalg::Matrix;
 use crate::operators::LinearOp;
 use crate::precond::PivotedCholesky;
 use crate::Result;
@@ -41,6 +44,15 @@ impl LinearOp for WhitenedOp<'_> {
         let a = self.p.invsqrt_mvm(x);
         let b = self.k.matvec(&a);
         self.p.invsqrt_mvm(&b)
+    }
+    /// Whole-block whitened MVM: both `P^{-1/2}` applications run blocked
+    /// ([`PivotedCholesky::invsqrt_matmat`]) and the inner operator sees one
+    /// `matmat`, so preconditioned block solves keep the panel-GEMM batch
+    /// economics instead of degrading to per-column matvecs.
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let a = self.p.invsqrt_matmat(x);
+        let b = self.k.matmat(&a);
+        self.p.invsqrt_matmat(&b)
     }
 }
 
@@ -134,6 +146,44 @@ mod tests {
         let prod = k.matmul(&rp.matmul(&rp.transpose()));
         let err = prod.max_abs_diff(&Matrix::eye(n));
         assert!(err < 1e-4, "K R'R'ᵀ vs I max diff {err}");
+    }
+
+    #[test]
+    fn whitened_matmat_matches_per_column_matvec() {
+        let mut rng = Pcg64::seeded(10);
+        let n = 26;
+        let x = Matrix::randn(n, 2, &mut rng);
+        let op = KernelOp::new(&x, KernelType::Matern32, 0.8, 1.0, 1e-2);
+        let pc = PivotedCholesky::new(&op, 6, 1e-2, 1e-12).unwrap();
+        let m = WhitenedOp::new(&op, &pc);
+        let b = Matrix::randn(n, 5, &mut rng);
+        let blocked = m.matmat(&b);
+        for j in 0..b.cols() {
+            let single = m.matvec(&b.col(j));
+            let err = crate::util::rel_err(&blocked.col(j), &single);
+            assert!(err < 1e-10, "col {j}: {err}");
+        }
+    }
+
+    #[test]
+    fn blocked_preconditioned_solve_matches_single_vector() {
+        use crate::ciq::{PrecondConfig, SolveKind, SolverPolicy};
+        let mut rng = Pcg64::seeded(11);
+        let n = 24;
+        let x = Matrix::randn(n, 1, &mut rng);
+        let op = KernelOp::new(&x, KernelType::Rbf, 0.7, 1.0, 1e-2);
+        let solver = Ciq::new(CiqOptions { tol: 1e-10, q_points: 12, ..Default::default() });
+        let cfg = PrecondConfig { rank: 8, sigma2: Some(1e-2), build_tol: 1e-14 };
+        let ctx = solver.build_context(&op, &SolverPolicy::Preconditioned(cfg)).unwrap();
+        let b = Matrix::randn(n, 4, &mut rng);
+        for kind in [SolveKind::Sqrt, SolveKind::InvSqrt] {
+            let blk = solver.solve_block(&op, &b, kind, &ctx).unwrap();
+            for j in 0..b.cols() {
+                let single = solver.solve(&op, &b.col(j), kind, &ctx).unwrap();
+                let err = crate::util::rel_err(&blk.solution.col(j), &single.solution);
+                assert!(err < 1e-6, "{kind:?} col {j}: {err}");
+            }
+        }
     }
 
     #[test]

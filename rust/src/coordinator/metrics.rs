@@ -1,8 +1,10 @@
 //! Service metrics: counters, latency histogram, batch sizes, msMINRES
 //! iteration telemetry (the data behind Fig. S7), plus the cache-aware
 //! execution engine's economics: per-shard queue depths, spectral-cache
-//! hit/miss counts, MVMs saved by cache reuse, and matmat column-work saved
-//! by active-column compaction.
+//! hit/miss counts, MVMs saved by cache reuse, matmat column-work saved
+//! by active-column compaction, background-warmer progress, and the adaptive
+//! batch controller's per-shard ceilings (the AIMD state itself lives here so
+//! it is observable for free).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +27,12 @@ pub struct Metrics {
     /// Operators registered or replaced after startup (each drops the old
     /// entry's spectral cache — the cache-invalidation audit trail).
     pub operator_replacements: AtomicU64,
+    /// Warm jobs the background warmer completed (context present when the
+    /// job finished, whether the warmer built it or a racing batch did).
+    pub warmed_operators: AtomicU64,
+    /// Warm jobs that failed to build a context (the batch path will retry
+    /// inline and surface the error to clients).
+    pub warm_failures: AtomicU64,
     /// Eigenvalue-estimation MVMs avoided by cache hits.
     pub saved_mvms: AtomicU64,
     /// Matmat column-work actually performed by compacted block solves.
@@ -32,11 +40,17 @@ pub struct Metrics {
     /// Column-work an uncompacted solver would have performed
     /// (`iterations × columns` per batch).
     pub column_work_full: AtomicU64,
+    /// The service's solver policy, for observability (`Debug` rendering of
+    /// [`crate::ciq::SolverPolicy`]); set once at startup.
+    policy: Mutex<String>,
     latencies_us: Mutex<Vec<u64>>,
     batch_sizes: Mutex<Vec<usize>>,
     iter_counts: Mutex<Vec<usize>>,
     /// Per-shard `(current depth, max depth)` keyed by `"op/Kind"`.
     shard_depths: Mutex<HashMap<String, (usize, usize)>>,
+    /// Per-shard adaptive batch ceiling (AIMD state), keyed by `"op/Kind"`.
+    /// Absent ⇒ the shard still runs at the static `max_batch`.
+    batch_ceilings: Mutex<HashMap<String, usize>>,
 }
 
 impl Metrics {
@@ -79,6 +93,55 @@ impl Metrics {
         full.saturating_sub(self.column_work.load(Ordering::Relaxed))
     }
 
+    /// Record the service's solver policy (startup, once).
+    pub fn set_policy(&self, policy: &str) {
+        *self.policy.lock().unwrap() = policy.to_string();
+    }
+
+    /// The service's solver policy as recorded at startup.
+    pub fn policy(&self) -> String {
+        self.policy.lock().unwrap().clone()
+    }
+
+    /// A shard's current adaptive batch ceiling, if the controller has ever
+    /// touched it.
+    pub fn batch_ceiling(&self, shard: &str) -> Option<usize> {
+        self.batch_ceilings.lock().unwrap().get(shard).copied()
+    }
+
+    /// Snapshot of all adaptive batch ceilings as `(shard, ceiling)`, sorted.
+    pub fn batch_ceilings(&self) -> Vec<(String, usize)> {
+        let m = self.batch_ceilings.lock().unwrap();
+        let mut v: Vec<(String, usize)> = m.iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort();
+        v
+    }
+
+    /// One clamped-AIMD step of a shard's batch ceiling, driven by whether
+    /// the observed flush latency overshot the service target: multiplicative
+    /// decrease (halve) on overshoot, additive increase (+1) otherwise, with
+    /// the result clamped to `[min, max]`. A shard starts at `max` (be
+    /// greedy until latency says otherwise). Returns the new ceiling.
+    pub fn tune_batch_ceiling(&self, shard: &str, over_target: bool, min: usize, max: usize) -> usize {
+        let min = min.max(1);
+        let max = max.max(min); // a misconfigured floor above the cap degrades to floor == cap
+        let mut m = self.batch_ceilings.lock().unwrap();
+        let cur = *m.get(shard).unwrap_or(&max);
+        let next = if over_target { (cur / 2).max(min) } else { (cur + 1).min(max) }.clamp(min, max);
+        m.insert(shard.to_string(), next);
+        next
+    }
+
+    /// Drop all per-shard state (queue-depth entries and adaptive batch
+    /// ceilings) belonging to operator `op_name` — shard labels are
+    /// `"op/Kind"`. Called on operator deregistration so client-visible maps
+    /// cannot grow without bound across operator churn.
+    pub fn prune_shard(&self, op_name: &str) {
+        let prefix = format!("{op_name}/");
+        self.shard_depths.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
+        self.batch_ceilings.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
+    }
+
     /// Record a shard's current queue depth (also tracks its max). Fast path
     /// avoids the key allocation once the shard has been seen.
     pub fn record_shard_depth(&self, shard: &str, depth: usize) {
@@ -88,6 +151,15 @@ impl Metrics {
             entry.1 = entry.1.max(depth);
         } else {
             m.insert(shard.to_string(), (depth, depth));
+        }
+    }
+
+    /// Mark a shard's queue as drained (current depth 0) **without creating
+    /// the entry when absent** — a flush racing a deregistration's
+    /// [`Metrics::prune_shard`] must not resurrect the pruned telemetry.
+    pub fn record_shard_drained(&self, shard: &str) {
+        if let Some(entry) = self.shard_depths.lock().unwrap().get_mut(shard) {
+            entry.0 = 0;
         }
     }
 
@@ -136,6 +208,16 @@ impl Metrics {
         v.iter().sum::<usize>() as f64 / v.len() as f64
     }
 
+    /// Mean msMINRES iterations per served RHS (0 if none recorded) — the
+    /// number the preconditioned policy is judged on.
+    pub fn mean_iterations(&self) -> f64 {
+        let v = self.iter_counts.lock().unwrap();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<usize>() as f64 / v.len() as f64
+    }
+
     /// Histogram of msMINRES iteration counts with the given bucket width —
     /// regenerates Fig. S7 from live service traffic.
     pub fn iteration_histogram(&self, bucket: usize) -> Vec<(usize, usize)> {
@@ -150,16 +232,19 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
-             cache_hit={} cache_miss={} saved_mvms={} saved_colwork={}",
+            "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
+             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} saved_mvms={} saved_colwork={}",
+            self.policy(),
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
             self.mean_batch_size(),
+            self.mean_iterations(),
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
+            self.warmed_operators.load(Ordering::Relaxed),
             self.saved_mvms.load(Ordering::Relaxed),
             self.saved_column_work(),
         )
@@ -215,5 +300,52 @@ mod tests {
         assert_eq!(m.column_work.load(Ordering::Relaxed), 40);
         assert_eq!(m.saved_column_work(), 30);
         assert!(m.summary().contains("cache_hit=2"));
+    }
+
+    #[test]
+    fn prune_shard_drops_only_that_operators_entries() {
+        // Regression: record_shard_depth's map grew unboundedly across
+        // operator churn — deregistration must prune the operator's shards.
+        let m = Metrics::default();
+        m.record_shard_depth("a/Sample", 3);
+        m.record_shard_depth("a/Whiten", 1);
+        m.record_shard_depth("ab/Sample", 2); // prefix-adjacent name must survive
+        m.tune_batch_ceiling("a/Sample", false, 1, 16);
+        m.tune_batch_ceiling("ab/Sample", true, 1, 16);
+        m.prune_shard("a");
+        assert_eq!(m.shard_depth("a/Sample"), 0);
+        assert_eq!(m.max_shard_depth("a/Whiten"), 0);
+        assert_eq!(m.shard_depth("ab/Sample"), 2, "unrelated operator pruned");
+        assert!(m.batch_ceiling("a/Sample").is_none());
+        assert!(m.batch_ceiling("ab/Sample").is_some());
+        assert_eq!(m.shard_depths().len(), 1);
+        // a flush racing the prune must not resurrect the entry…
+        m.record_shard_drained("a/Sample");
+        assert_eq!(m.shard_depths().len(), 1, "drain resurrected a pruned shard");
+        // …while a live shard's drain still zeroes its current depth
+        m.record_shard_drained("ab/Sample");
+        assert_eq!(m.shard_depth("ab/Sample"), 0);
+        assert_eq!(m.max_shard_depth("ab/Sample"), 2);
+    }
+
+    #[test]
+    fn aimd_batch_ceiling_clamps_and_converges() {
+        let m = Metrics::default();
+        // starts at max, additive increase is capped at max
+        assert_eq!(m.tune_batch_ceiling("s", false, 2, 16), 16);
+        // overshoot halves...
+        assert_eq!(m.tune_batch_ceiling("s", true, 2, 16), 8);
+        assert_eq!(m.tune_batch_ceiling("s", true, 2, 16), 4);
+        // ...down to the floor, never below
+        assert_eq!(m.tune_batch_ceiling("s", true, 2, 16), 2);
+        assert_eq!(m.tune_batch_ceiling("s", true, 2, 16), 2);
+        // recovery is additive
+        assert_eq!(m.tune_batch_ceiling("s", false, 2, 16), 3);
+        assert_eq!(m.batch_ceiling("s"), Some(3));
+        assert_eq!(m.batch_ceilings(), vec![("s".to_string(), 3)]);
+        // policy string round-trips
+        m.set_policy("CachedBounds");
+        assert_eq!(m.policy(), "CachedBounds");
+        assert!(m.summary().contains("policy=CachedBounds"));
     }
 }

@@ -29,32 +29,69 @@
 //! trickle stopped (flush starvation). Now a request waits at most
 //! `max_wait` (plus solve time) regardless of arrival pattern.
 //!
-//! ## Per-operator spectral caches
+//! ## Solver policies and per-operator solver contexts
 //!
-//! Registered operators are immutable for the life of the service, so their
-//! spectral bounds — and the CIQ quadrature rule derived from them — are
-//! computed by Lanczos **once**, on the first batch that touches the
-//! operator, and reused by every batch after that
-//! ([`crate::ciq::SolverCache`]). Each cache hit is credited with the
-//! estimation MVMs the cold batch actually spent (measured, not assumed);
-//! [`Metrics::saved_mvms`] totals the savings from live traffic. The cache is guarded by a per-operator mutex so
-//! concurrent first batches on one operator never duplicate the estimation.
+//! The service is configured with a [`SolverPolicy`]
+//! ([`ServiceConfig::policy`]) that decides how every batch approaches its
+//! operator: `Plain` (inline estimation each batch — the baseline),
+//! `CachedBounds` (the default: Lanczos bounds + quadrature rule computed
+//! once per operator and reused), or `Preconditioned` (batches run
+//! msMINRES-CIQ on the pivoted-Cholesky–whitened operator, Appx. D, and
+//! return the rotation-equivalent maps of Eqs. S12/S13 — fewer iterations on
+//! ill-conditioned operators at identical sampling semantics). Everything an
+//! operator's solves need — bounds, rule, optional preconditioner — lives in
+//! one per-operator [`SolverContext`] built by [`Ciq::build_context`] and
+//! guarded by a per-operator mutex, so concurrent cold batches wait for one
+//! estimation instead of duplicating it. Each context hit is credited with
+//! the estimation MVMs the build actually spent (measured, not assumed);
+//! [`Metrics::saved_mvms`] totals the savings from live traffic.
+//!
+//! ## Background spectral warmer
+//!
+//! With [`ServiceConfig::warm_on_register`] (the default), a dedicated
+//! warmer thread populates each operator's [`SolverContext`] **off the
+//! request path**: `start`, [`SamplingService::register_operator`] and
+//! [`SamplingService::replace_operator`] enqueue the fresh entry to the
+//! warmer, which builds the context (Lanczos bounds + optional
+//! pivoted-Cholesky factorization) while the service keeps serving. The
+//! per-operator mutex makes the warmer and a racing first batch serialize:
+//! whichever gets there first pays the estimation, the other reuses it — a
+//! warmed operator's first batch therefore performs **zero** inline
+//! estimation MVMs and records a cache hit. Warm completions and failures
+//! are visible as [`Metrics::warmed_operators`] / [`Metrics::warm_failures`]
+//! (a failed warm is retried inline by the next batch, which surfaces the
+//! error to clients). The warmer drains and exits on shutdown, after the
+//! dispatcher.
+//!
+//! ## Adaptive per-shard batch ceilings (clamped AIMD)
+//!
+//! With [`ServiceConfig::adaptive`] set, each shard's effective `max_batch`
+//! is steered by the flush latency the workers actually observe: a batch
+//! whose solve exceeds [`AdaptiveBatchConfig::target_flush_latency`] halves
+//! the shard's ceiling (multiplicative decrease), a batch under target adds
+//! one (additive increase), clamped to
+//! `[AdaptiveBatchConfig::min_batch, ServiceConfig::max_batch]`. Shards
+//! start greedy (at `max_batch`) and converge to the largest batch the
+//! latency budget tolerates; the live ceilings are visible via
+//! [`Metrics::batch_ceilings`]. Deregistering an operator prunes its shards
+//! from both the depth and ceiling maps.
 //!
 //! ## Operator replacement versions the cache
 //!
 //! [`SamplingService::replace_operator`] (and
 //! [`SamplingService::register_operator`]) installs a **fresh**
-//! operator entry whose spectral cache starts empty, so a re-registered
-//! operator can never be served stale Lanczos bounds or a stale quadrature
-//! rule. Batches already in flight hold an `Arc` to the *old* entry and
-//! finish against the consistent (old operator, old cache) pair; the old
-//! entry — cache included — is dropped when the last of them completes.
+//! operator entry whose solver context starts empty, so a re-registered
+//! operator can never be served stale Lanczos bounds, a stale quadrature
+//! rule, or a stale preconditioner. Batches already in flight hold an `Arc`
+//! to the *old* entry and finish against the consistent (old operator, old
+//! context) pair; the old entry — context included — is dropped when the
+//! last of them completes.
 
 pub mod metrics;
 
 pub use metrics::Metrics;
 
-use crate::ciq::{Ciq, CiqOptions, SolverCache};
+use crate::ciq::{Ciq, CiqOptions, SolveKind, SolverContext, SolverPolicy};
 use crate::linalg::Matrix;
 use crate::operators::LinearOp;
 use std::collections::HashMap;
@@ -75,22 +112,22 @@ pub enum ReqKind {
 /// A shared covariance operator registered with the service.
 pub type SharedOp = Arc<dyn LinearOp + Send + Sync>;
 
-/// A registered operator plus its lazily-filled spectral cache.
+/// A registered operator plus its lazily-filled solver context.
 ///
-/// The cache is a `Mutex<Option<…>>` rather than a `OnceLock` deliberately:
-/// holding the lock across the Lanczos estimation makes a concurrent second
-/// batch on the same cold operator *wait* for the first estimation instead of
-/// redundantly re-running it.
+/// The context is a `Mutex<Option<…>>` rather than a `OnceLock` deliberately:
+/// holding the lock across the estimation makes the background warmer and a
+/// concurrent cold batch on the same operator *serialize* — whoever arrives
+/// second waits for the first build instead of redundantly re-running it.
 struct OpEntry {
     op: SharedOp,
-    /// `(cache, MVMs the one-time estimation actually spent)` — hits credit
-    /// exactly what the miss paid, even when Lanczos broke out early.
-    spectral: Mutex<Option<(Arc<SolverCache>, u64)>>,
+    /// `(context, MVMs the one-time build actually spent)` — hits credit
+    /// exactly what the build paid, even when Lanczos broke out early.
+    context: Mutex<Option<(Arc<SolverContext>, u64)>>,
 }
 
 impl OpEntry {
     fn fresh(op: SharedOp) -> Arc<OpEntry> {
-        Arc::new(OpEntry { op, spectral: Mutex::new(None) })
+        Arc::new(OpEntry { op, context: Mutex::new(None) })
     }
 }
 
@@ -115,10 +152,28 @@ struct Request {
     respond: Sender<crate::Result<Vec<f64>>>,
 }
 
+/// Configuration of the clamped-AIMD per-shard batch controller.
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatchConfig {
+    /// Flush latency the controller steers every shard toward: a batch solve
+    /// slower than this halves the shard's ceiling, a faster one adds 1.
+    pub target_flush_latency: Duration,
+    /// Floor the ceiling can never drop below (the cap is the service's
+    /// static `max_batch`).
+    pub min_batch: usize,
+}
+
+impl Default for AdaptiveBatchConfig {
+    fn default() -> Self {
+        AdaptiveBatchConfig { target_flush_latency: Duration::from_millis(50), min_batch: 1 }
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Max RHS per batch.
+    /// Max RHS per batch (the hard cap; also the adaptive controller's
+    /// starting ceiling).
     pub max_batch: usize,
     /// Max time a request may wait for batch-mates.
     pub max_wait: Duration,
@@ -126,6 +181,15 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// CIQ solver options.
     pub ciq: CiqOptions,
+    /// How batches approach their operators (see the module docs).
+    pub policy: SolverPolicy,
+    /// Build solver contexts on a background warmer thread at
+    /// registration/replacement time instead of inline on the first batch.
+    /// Ignored under `SolverPolicy::Plain` (nothing to warm).
+    pub warm_on_register: bool,
+    /// Per-shard adaptive batch ceilings; `None` keeps the static
+    /// `max_batch` everywhere.
+    pub adaptive: Option<AdaptiveBatchConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -135,6 +199,9 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(2),
             workers: 2,
             ciq: CiqOptions::default(),
+            policy: SolverPolicy::CachedBounds,
+            warm_on_register: true,
+            adaptive: None,
         }
     }
 }
@@ -145,6 +212,10 @@ pub struct SamplingService {
     dispatcher: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     ops: OpMap,
+    /// Feed of fresh `(name, entry)` pairs to the background warmer (`None`
+    /// when warming is disabled or the policy is `Plain`).
+    warmer_tx: Option<Sender<(String, Arc<OpEntry>)>>,
+    warmer: Option<std::thread::JoinHandle<()>>,
 }
 
 /// A pending response.
@@ -168,27 +239,60 @@ struct Batch {
 }
 
 impl SamplingService {
-    /// Start the service with a set of named operators.
+    /// Start the service with a set of named operators. When warming is
+    /// enabled (default), every initial operator is queued to the background
+    /// warmer immediately.
     pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
         let entries: HashMap<String, Arc<OpEntry>> =
             ops.into_iter().map(|(name, op)| (name, OpEntry::fresh(op))).collect();
         let registry: OpMap = Arc::new(RwLock::new(entries));
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::default());
+        metrics.set_policy(&format!("{:?}", config.policy));
+
+        // background warmer: builds solver contexts off the request path
+        let warm = config.warm_on_register && config.policy != SolverPolicy::Plain;
+        let (warmer_tx, warmer) = if warm {
+            let (wtx, wrx) = mpsc::channel::<(String, Arc<OpEntry>)>();
+            let r = registry.clone();
+            let ciq_opts = config.ciq.clone();
+            let policy = config.policy.clone();
+            let m = metrics.clone();
+            let handle = std::thread::spawn(move || warmer_loop(wrx, r, ciq_opts, policy, m));
+            for (name, entry) in registry.read().unwrap().iter() {
+                let _ = wtx.send((name.clone(), entry.clone()));
+            }
+            (Some(wtx), Some(handle))
+        } else {
+            (None, None)
+        };
+
         let m2 = metrics.clone();
         let r2 = registry.clone();
         let dispatcher = std::thread::spawn(move || dispatcher_loop(config, r2, rx, m2));
-        SamplingService { tx: Some(tx), dispatcher: Some(dispatcher), metrics, ops: registry }
+        SamplingService {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            metrics,
+            ops: registry,
+            warmer_tx,
+            warmer,
+        }
     }
 
     /// Register a new operator under `name`, or atomically **replace** an
-    /// existing one. Replacement installs a fresh entry whose spectral cache
-    /// starts empty — the next batch on `name` re-runs Lanczos estimation,
-    /// so stale bounds/quadrature from the old operator can never serve the
-    /// new one (the versioning contract in the module docs).
+    /// existing one. Replacement installs a fresh entry whose solver context
+    /// starts empty — stale bounds/quadrature/preconditioner from the old
+    /// operator can never serve the new one (the versioning contract in the
+    /// module docs) — and hands the fresh entry to the background warmer so
+    /// the rebuild happens off the request path.
     pub fn replace_operator(&self, name: &str, op: SharedOp) {
         self.metrics.operator_replacements.fetch_add(1, Ordering::Relaxed);
-        self.ops.write().unwrap().insert(name.to_string(), OpEntry::fresh(op));
+        let entry = OpEntry::fresh(op);
+        self.ops.write().unwrap().insert(name.to_string(), entry.clone());
+        if let Some(wtx) = &self.warmer_tx {
+            let _ = wtx.send((name.to_string(), entry));
+        }
     }
 
     /// Alias of [`Self::replace_operator`] for first-time registration after
@@ -197,11 +301,17 @@ impl SamplingService {
         self.replace_operator(name, op);
     }
 
-    /// Remove an operator (and its spectral cache); in-flight batches
-    /// complete against the entry they already hold. Returns whether the
-    /// name was registered.
+    /// Remove an operator (and its solver context); in-flight batches
+    /// complete against the entry they already hold. The operator's shards
+    /// are pruned from the depth/ceiling telemetry so those maps cannot grow
+    /// without bound across operator churn. Returns whether the name was
+    /// registered.
     pub fn deregister_operator(&self, name: &str) -> bool {
-        self.ops.write().unwrap().remove(name).is_some()
+        let removed = self.ops.write().unwrap().remove(name).is_some();
+        if removed {
+            self.metrics.prune_shard(name);
+        }
+        removed
     }
 
     /// Submit a request; returns a [`Ticket`] to wait on.
@@ -225,10 +335,19 @@ impl SamplingService {
         &self.metrics
     }
 
-    /// Graceful shutdown: drains in-flight requests.
+    /// Graceful shutdown: drains in-flight requests, then retires the
+    /// warmer (it finishes any build already in progress first).
     pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
         drop(self.tx.take());
         if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        drop(self.warmer_tx.take());
+        if let Some(h) = self.warmer.take() {
             let _ = h.join();
         }
     }
@@ -236,10 +355,7 @@ impl SamplingService {
 
 impl Drop for SamplingService {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.dispatcher.take() {
-            let _ = h.join();
-        }
+        self.stop_threads();
     }
 }
 
@@ -262,7 +378,9 @@ fn flush_shard(
             return;
         }
         metrics.record_batch(shard.requests.len());
-        metrics.record_shard_depth(&shard.label, 0);
+        // update-only: flushing a queue that raced a deregistration's
+        // prune_shard must not resurrect the pruned depth entry
+        metrics.record_shard_drained(&shard.label);
         let _ = btx.send(Batch { op_name: key.0.clone(), kind: key.1, requests: shard.requests });
     }
 }
@@ -303,7 +421,7 @@ fn dispatcher_loop(
         let brx = brx.clone();
         let ops = ops.clone();
         let metrics = metrics.clone();
-        let ciq_opts = config.ciq.clone();
+        let cfg = config.clone();
         let stop = stop.clone();
         workers.push(std::thread::spawn(move || loop {
             let batch = {
@@ -319,7 +437,7 @@ fn dispatcher_loop(
                     Err(RecvTimeoutError::Disconnected) => return,
                 }
             };
-            execute_batch(&ops, &ciq_opts, batch, &metrics);
+            execute_batch(&ops, &cfg, batch, &metrics);
         }));
     }
 
@@ -335,26 +453,44 @@ fn dispatcher_loop(
             .unwrap_or(idle_poll);
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                if !ops.read().unwrap().contains_key(&req.op_name) {
-                    // Rejected up front: no shard is created, so
-                    // client-controlled names cannot grow the shard map or
-                    // its metrics without bound.
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = req.respond.send(Err(crate::Error::Invalid(format!(
-                        "unknown operator '{}'",
-                        req.op_name
-                    ))));
-                } else {
-                    let key = (req.op_name.clone(), req.kind);
-                    let shard = shards.entry(key.clone()).or_insert_with(|| Shard {
-                        label: shard_label(&key.0, key.1),
-                        requests: Vec::new(),
-                    });
-                    shard.requests.push(req);
-                    let depth = shard.requests.len();
-                    metrics.record_shard_depth(&shard.label, depth);
-                    if depth >= config.max_batch {
-                        flush_shard(&key, &mut shards, &btx, &metrics);
+                {
+                    // The registry guard spans the membership check *and* the
+                    // shard/telemetry writes: deregistration removes the map
+                    // entry under the write lock and prunes telemetry strictly
+                    // afterwards, so anything recorded here for a present
+                    // operator happens-before that prune and cannot be
+                    // resurrected state.
+                    let registry = ops.read().unwrap();
+                    if !registry.contains_key(&req.op_name) {
+                        // Rejected up front: no shard is created, so
+                        // client-controlled names cannot grow the shard map or
+                        // its metrics without bound.
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(Err(crate::Error::Invalid(format!(
+                            "unknown operator '{}'",
+                            req.op_name
+                        ))));
+                    } else {
+                        let key = (req.op_name.clone(), req.kind);
+                        let shard = shards.entry(key.clone()).or_insert_with(|| Shard {
+                            label: shard_label(&key.0, key.1),
+                            requests: Vec::new(),
+                        });
+                        shard.requests.push(req);
+                        let depth = shard.requests.len();
+                        metrics.record_shard_depth(&shard.label, depth);
+                        // Effective flush threshold: the AIMD controller's
+                        // per-shard ceiling when adaptive batching is on (the
+                        // workers update it from observed flush latency), else
+                        // the static max_batch.
+                        let ceiling = if config.adaptive.is_some() {
+                            metrics.batch_ceiling(&shard.label).unwrap_or(config.max_batch).min(config.max_batch)
+                        } else {
+                            config.max_batch
+                        };
+                        if depth >= ceiling {
+                            flush_shard(&key, &mut shards, &btx, &metrics);
+                        }
                     }
                 }
                 // Deadlines are re-checked after *every* arrival — a steady
@@ -392,32 +528,87 @@ fn dispatcher_loop(
     }
 }
 
-/// Fetch (or compute-and-fill, on first contact) an operator's spectral
-/// cache. Holding the per-operator lock across the estimation means
-/// concurrent cold batches wait instead of duplicating the Lanczos MVMs.
-fn cached_spectral(
+/// Fill `entry`'s context if still empty, returning `(context, estimation
+/// MVMs the build spent, whether this call built it)`. The single shared
+/// fill path for the batch workers and the background warmer: holding the
+/// per-operator lock across the estimation means whoever arrives second
+/// waits instead of duplicating the build. `on_build` fires just before a
+/// fallible build starts (the batch path records its cache miss there, so
+/// repeated estimation on a failing operator stays visible in telemetry).
+fn ensure_context(
     entry: &OpEntry,
     solver: &Ciq,
-    metrics: &Metrics,
-) -> crate::Result<Arc<SolverCache>> {
-    let mut guard = entry.spectral.lock().unwrap();
-    if let Some((cache, estimation_mvms)) = guard.as_ref() {
-        metrics.record_cache_hit(*estimation_mvms);
-        return Ok(cache.clone());
+    policy: &SolverPolicy,
+    on_build: impl FnOnce(),
+) -> crate::Result<(Arc<SolverContext>, u64, bool)> {
+    let mut guard = entry.context.lock().unwrap();
+    if let Some((ctx, estimation_mvms)) = guard.as_ref() {
+        return Ok((ctx.clone(), *estimation_mvms, false));
     }
-    // A miss means "estimation ran", so record it before the fallible build —
-    // repeated estimation on a failing operator stays visible in telemetry.
-    metrics.record_cache_miss();
-    // count what the estimation actually spends (Lanczos may break out early
-    // on an invariant subspace) so hits credit the true savings
+    on_build();
+    // count what the build actually spends (Lanczos may break out early on
+    // an invariant subspace) so hits credit the true savings
     let counting = crate::operators::CountingOp::new(entry.op.as_ref());
-    let cache = Arc::new(solver.solver_cache(&counting)?);
+    let ctx = Arc::new(solver.build_context(&counting, policy)?);
     let estimation_mvms = counting.matvec_count();
-    *guard = Some((cache.clone(), estimation_mvms));
-    Ok(cache)
+    *guard = Some((ctx.clone(), estimation_mvms));
+    Ok((ctx, estimation_mvms, true))
 }
 
-fn execute_batch(ops: &OpMap, ciq_opts: &CiqOptions, batch: Batch, metrics: &Metrics) {
+/// Batch-path wrapper around [`ensure_context`]: records cache hit/miss
+/// telemetry (those count *batch* economics — the warmer never touches
+/// them).
+fn cached_context(
+    entry: &OpEntry,
+    solver: &Ciq,
+    policy: &SolverPolicy,
+    metrics: &Metrics,
+) -> crate::Result<Arc<SolverContext>> {
+    let (ctx, estimation_mvms, built) =
+        ensure_context(entry, solver, policy, || metrics.record_cache_miss())?;
+    if !built {
+        metrics.record_cache_hit(estimation_mvms);
+    }
+    Ok(ctx)
+}
+
+/// The background warmer: drains registration events and builds each fresh
+/// entry's solver context off the request path. An entry that has already
+/// been replaced or deregistered by the time its job is popped is skipped —
+/// a burst of `replace_operator` calls must not make the warmer burn full
+/// builds on orphaned operator versions while the live one waits. Exits
+/// when the service handle drops its sender.
+fn warmer_loop(
+    rx: Receiver<(String, Arc<OpEntry>)>,
+    ops: OpMap,
+    ciq_opts: CiqOptions,
+    policy: SolverPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let solver = Ciq::new(ciq_opts);
+    while let Ok((name, entry)) = rx.recv() {
+        let live = ops
+            .read()
+            .unwrap()
+            .get(&name)
+            .map(|current| Arc::ptr_eq(current, &entry))
+            .unwrap_or(false);
+        if !live {
+            continue;
+        }
+        match ensure_context(&entry, &solver, &policy, || {}) {
+            Ok(_) => {
+                metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // the next batch retries inline and surfaces the error
+                metrics.warm_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Metrics) {
     // Pin this batch's (operator, cache) pair up front: a concurrent
     // replace_operator swaps the map entry but cannot mix versions here.
     let entry = match ops.read().unwrap().get(&batch.op_name).cloned() {
@@ -457,13 +648,38 @@ fn execute_batch(ops: &OpMap, ciq_opts: &CiqOptions, batch: Batch, metrics: &Met
             b[(i, j)] = req.rhs[i];
         }
     }
-    let solver = Ciq::new(ciq_opts.clone());
-    let result = cached_spectral(&entry, &solver, metrics).and_then(|cache| match batch.kind {
-        ReqKind::Sample => solver.sqrt_mvm_block_with_bounds(op.as_ref(), &b, Some(&*cache)),
-        ReqKind::Whiten => solver.invsqrt_mvm_block_with_bounds(op.as_ref(), &b, Some(&*cache)),
-    });
+    let solver = Ciq::new(config.ciq.clone());
+    let kind = match batch.kind {
+        ReqKind::Sample => SolveKind::Sqrt,
+        ReqKind::Whiten => SolveKind::InvSqrt,
+    };
+    let ctx_res = match &config.policy {
+        // Plain: inline estimation every batch, nothing cached or credited
+        SolverPolicy::Plain => solver.build_context(op.as_ref(), &SolverPolicy::Plain).map(Arc::new),
+        policy => cached_context(&entry, &solver, policy, metrics),
+    };
+    // The AIMD clock starts *after* the context is in hand: one-time build
+    // cost (or time blocked behind the warmer's per-operator mutex) is not
+    // flush latency and must not halve the shard's ceiling.
+    let flush_started = Instant::now();
+    let result = ctx_res.and_then(|ctx| solver.solve_block(op.as_ref(), &b, kind, &ctx));
     match result {
         Ok(res) => {
+            // clamped-AIMD feedback: the observed flush latency steers this
+            // shard's batch ceiling toward the service target. The registry
+            // read lock is held across check *and* insert: deregistration
+            // removes the entry under the write lock and prunes telemetry
+            // strictly afterwards, so any tune that observed the key
+            // happens-before the prune — a batch racing a deregistration can
+            // never resurrect the pruned ceiling entry.
+            if let Some(ad) = &config.adaptive {
+                let registry = ops.read().unwrap();
+                if registry.contains_key(&batch.op_name) {
+                    let label = shard_label(&batch.op_name, batch.kind);
+                    let over = flush_started.elapsed() > ad.target_flush_latency;
+                    metrics.tune_batch_ceiling(&label, over, ad.min_batch, config.max_batch);
+                }
+            }
             metrics.record_iters(&res.col_iterations);
             // compaction telemetry: matmat columns paid vs the uncompacted
             // `iterations × columns` cost
@@ -554,6 +770,10 @@ mod tests {
             max_wait: Duration::from_millis(2),
             workers: 1,
             ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+            // this test pins the *inline* first-batch estimation semantics,
+            // so keep the background warmer out of the race
+            warm_on_register: false,
+            ..Default::default()
         };
         let svc = SamplingService::start(cfg, ops);
         let send_round = |rng: &mut Pcg64| {
@@ -606,6 +826,8 @@ mod tests {
         let cfg = ServiceConfig {
             workers: 1,
             ciq: CiqOptions { tol: 1e-6, ..Default::default() },
+            // deterministic miss accounting: estimation must happen inline
+            warm_on_register: false,
             ..Default::default()
         };
         let svc = SamplingService::start(cfg, ops);
@@ -645,6 +867,86 @@ mod tests {
     }
 
     #[test]
+    fn warmed_operator_first_batch_performs_zero_inline_estimation_mvms() {
+        use crate::operators::CountingOp;
+        let n = 16;
+        let mut rng = Pcg64::seeded(60);
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut kmat = a.matmul(&a.transpose());
+        for i in 0..n {
+            kmat[(i, i)] += n as f64 * 0.5;
+        }
+        let counter = Arc::new(CountingOp::new(DenseOp::new(kmat)));
+        let shared: SharedOp = counter.clone();
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), shared);
+        let cfg = ServiceConfig {
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+            ..Default::default() // warm_on_register: true
+        };
+        let svc = SamplingService::start(cfg, ops);
+        // wait on the warmer's completion signal, not on a sleep guess
+        let t0 = Instant::now();
+        while svc.metrics().warmed_operators.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "warmer never completed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let warm_cost = counter.matvec_count();
+        assert!(warm_cost > 0, "warming must run the Lanczos estimation");
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
+        assert_eq!(
+            counter.matvec_count(),
+            warm_cost,
+            "a warmed operator's first batch must perform zero inline estimation MVMs"
+        );
+        let m = svc.metrics();
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 0, "first batch recorded a miss");
+        assert!(m.cache_hits.load(Ordering::Relaxed) >= 1);
+        assert!(m.saved_mvms.load(Ordering::Relaxed) >= warm_cost);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn adaptive_ceiling_backs_off_under_slow_flushes_and_prunes_on_deregister() {
+        let n = 16;
+        let (op, _) = make_op(n, 61);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-10, ..Default::default() },
+            // an impossible target: every flush overshoots, so the ceiling
+            // must walk 8 → 4 → 2 and clamp at the floor
+            adaptive: Some(AdaptiveBatchConfig {
+                target_flush_latency: Duration::from_nanos(1),
+                min_batch: 2,
+            }),
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(62);
+        for _ in 0..4 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
+        }
+        assert_eq!(
+            svc.metrics().batch_ceiling("k/Whiten"),
+            Some(2),
+            "AIMD ceiling did not clamp to the floor under sustained overshoot"
+        );
+        assert_eq!(svc.metrics().batch_ceilings().len(), 1);
+        // deregistration prunes the shard's telemetry (depths + ceilings)
+        assert!(svc.deregister_operator("k"));
+        assert!(svc.metrics().batch_ceiling("k/Whiten").is_none());
+        assert!(svc.metrics().shard_depths().is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
     fn solve_errors_propagate_original_kind() {
         // q_points = 0 makes quadrature construction fail with Invalid; the
         // old path rewrapped every solve failure as Numerical.
@@ -676,6 +978,7 @@ mod tests {
             max_wait: Duration::from_millis(5),
             workers: 2,
             ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+            ..Default::default()
         };
         let svc = SamplingService::start(cfg, ops);
         let mut rng = Pcg64::seeded(5);

@@ -42,6 +42,11 @@ pub struct MsMinresResult {
     pub converged: bool,
     /// Max-over-shifts relative residual after each iteration (Fig. 2 left).
     pub residual_history: Vec<f64>,
+    /// Σ over iterations of the *active* (unconverged) shift count — the
+    /// per-shift recurrence work actually performed. Without freezing this
+    /// would be `iterations × Q`; the single-vector analogue of the block
+    /// solver's `column_work`.
+    pub shift_work: usize,
 }
 
 /// Per-shift recurrence state.
@@ -108,6 +113,17 @@ impl ShiftState {
         self.c1 = c;
         self.s1 = s;
     }
+
+    /// Retire a converged shift: mark it done and release its two `O(N)`
+    /// search-direction buffers. `x` (the answer) and `phi_bar` (the frozen
+    /// residual) survive; the recurrence never advances again — the
+    /// single-vector analogue of the block solver retiring a column from the
+    /// matmat.
+    fn freeze(&mut self) {
+        self.done = true;
+        self.d_prev = Vec::new();
+        self.d_prev2 = Vec::new();
+    }
 }
 
 /// Weighted CIQ stopping rule shared by [`msminres`] and [`msminres_block`]:
@@ -144,6 +160,7 @@ pub fn msminres(
             iterations: 0,
             converged: true,
             residual_history: vec![],
+            shift_work: 0,
         };
     }
     let mut states: Vec<ShiftState> = shifts.iter().map(|_| ShiftState::new(n, beta1)).collect();
@@ -155,6 +172,7 @@ pub fn msminres(
     let mut iters = 0;
     let mut converged = false;
     let mut residual_history = Vec::new();
+    let mut shift_work = 0usize;
 
     for _k in 1..=opts.max_iters {
         iters += 1;
@@ -167,12 +185,14 @@ pub fn msminres(
         axpy(-alpha, &v, &mut w);
         let beta_next = norm2(&w);
 
-        // advance every (unconverged) shift
+        // advance only the active shifts; a converged shift is frozen —
+        // buffers released, recurrence never touched again
         for (q, st) in states.iter_mut().enumerate() {
             if !st.done {
+                shift_work += 1;
                 st.step(shifts[q], alpha, beta_k, beta_next, &v);
                 if (st.phi_bar.abs() / beta1) < opts.tol {
-                    st.done = true;
+                    st.freeze();
                 }
             }
         }
@@ -210,6 +230,7 @@ pub fn msminres(
         iterations: iters,
         converged,
         residual_history,
+        shift_work,
     }
 }
 
@@ -331,7 +352,9 @@ pub fn msminres_block(
                 if !st.done {
                     st.step(shifts[q], alpha, col.beta_k, beta_next, &col.v);
                     if (st.phi_bar.abs() / col.beta1) < opts.tol {
-                        st.done = true;
+                        // same freeze as the single-vector path: drop the
+                        // shift's direction buffers the moment it converges
+                        st.freeze();
                     }
                 }
                 all_done &= st.done;
@@ -456,6 +479,44 @@ mod tests {
             res.residuals[1],
             res.residuals[0]
         );
+    }
+
+    #[test]
+    fn converged_shifts_freeze_without_extra_mvms() {
+        // Heavily-shifted systems converge in a handful of iterations while
+        // the unshifted one grinds on; freezing must (a) keep the MVM count
+        // at exactly one per iteration (CountingOp), (b) spend strictly less
+        // per-shift recurrence work than iterations × Q, and (c) leave every
+        // solution as accurate as the Cholesky oracle.
+        let n = 60;
+        let k = random_spd(n, 40);
+        let op = crate::operators::CountingOp::new(DenseOp::new(k.clone()));
+        let mut rng = Pcg64::seeded(41);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shifts = [0.0, 1e3, 1e5];
+        let opts = MsMinresOptions { max_iters: 300, tol: 1e-10, weights: None };
+        let res = msminres(&op, &b, &shifts, &opts);
+        assert!(res.converged);
+        assert_eq!(
+            op.matvec_count(),
+            res.iterations as u64,
+            "freezing must not change the one-MVM-per-iteration property"
+        );
+        assert!(
+            res.shift_work < res.iterations * shifts.len(),
+            "no shift was ever frozen: shift_work {} vs full {}",
+            res.shift_work,
+            res.iterations * shifts.len()
+        );
+        for (q, &t) in shifts.iter().enumerate() {
+            let mut kt = k.clone();
+            for i in 0..n {
+                kt[(i, i)] += t;
+            }
+            let exact = Cholesky::new(&kt).unwrap().solve(&b);
+            let err = rel_err(&res.solutions[q], &exact);
+            assert!(err < 1e-7, "shift {t}: frozen solution drifted, rel err {err}");
+        }
     }
 
     #[test]

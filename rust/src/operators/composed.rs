@@ -27,6 +27,15 @@ impl<T: LinearOp + ?Sized> LinearOp for ShiftedOp<'_, T> {
         }
         y
     }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        // forward the whole block to the inner operator so a structured inner
+        // (e.g. the panel-GEMM kernel engine) keeps its batched economics
+        let mut y = self.inner.matmat(x);
+        for (yi, xi) in y.as_mut_slice().iter_mut().zip(x.as_slice()) {
+            *yi += self.shift * xi;
+        }
+        y
+    }
     fn diagonal(&self) -> Vec<f64> {
         let mut d = self.inner.diagonal();
         for di in &mut d {
@@ -63,6 +72,11 @@ impl<T: LinearOp + ?Sized> LinearOp for ScaledOp<'_, T> {
         }
         y
     }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let mut y = self.inner.matmat(x);
+        y.scale(self.scale);
+        y
+    }
     fn diagonal(&self) -> Vec<f64> {
         self.inner.diagonal().into_iter().map(|d| d * self.scale).collect()
     }
@@ -93,6 +107,14 @@ impl LinearOp for SumOp<'_> {
         let yb = self.b.matvec(x);
         ya.iter().zip(&yb).map(|(p, q)| self.wa * p + self.wb * q).collect()
     }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let mut ya = self.a.matmat(x);
+        let yb = self.b.matmat(x);
+        for (p, q) in ya.as_mut_slice().iter_mut().zip(yb.as_slice()) {
+            *p = self.wa * *p + self.wb * q;
+        }
+        ya
+    }
     fn diagonal(&self) -> Vec<f64> {
         let da = self.a.diagonal();
         let db = self.b.diagonal();
@@ -118,6 +140,16 @@ impl LinearOp for DiagOp {
     }
     fn matvec(&self, x: &[f64]) -> Vec<f64> {
         self.d.iter().zip(x).map(|(d, x)| d * x).collect()
+    }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows(), self.size(), "matmat dim mismatch");
+        let mut y = x.clone();
+        for (i, &d) in self.d.iter().enumerate() {
+            for v in y.row_mut(i) {
+                *v *= d;
+            }
+        }
+        y
     }
     fn diagonal(&self) -> Vec<f64> {
         self.d.clone()
@@ -157,6 +189,14 @@ impl LinearOp for LowRankPlusDiagOp {
         let lt_x = self.l.matvec_t(x);
         let mut y = self.l.matvec(&lt_x);
         for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.sigma2 * xi;
+        }
+        y
+    }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let lt_x = self.l.t_matmul(x);
+        let mut y = self.l.matmul(&lt_x);
+        for (yi, xi) in y.as_mut_slice().iter_mut().zip(x.as_slice()) {
             *yi += self.sigma2 * xi;
         }
         y
@@ -202,6 +242,15 @@ impl LinearOp for SubtractLowRankOp<'_> {
         let wt_x = self.w.matvec_t(x);
         let wwt_x = self.w.matvec(&wt_x);
         for (yi, wi) in y.iter_mut().zip(&wwt_x) {
+            *yi -= wi;
+        }
+        y
+    }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        let mut y = self.a.matmat(x);
+        let wt_x = self.w.t_matmul(x);
+        let wwt_x = self.w.matmul(&wt_x);
+        for (yi, wi) in y.as_mut_slice().iter_mut().zip(wwt_x.as_slice()) {
             *yi -= wi;
         }
         y
@@ -289,6 +338,44 @@ mod tests {
         for i in 0..12 {
             assert!((d[i] - dense[(i, i)]).abs() < 1e-12);
         }
+    }
+
+    /// Oracle: the trait's default per-column matmat (what the combinators
+    /// used before gaining fused blocked overrides).
+    fn matmat_by_columns(op: &dyn LinearOp, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(op.size(), x.cols());
+        for j in 0..x.cols() {
+            let y = op.matvec(&x.col(j));
+            for i in 0..op.size() {
+                out[(i, j)] = y[i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn combinator_matmat_overrides_match_per_column() {
+        let mut rng = Pcg64::seeded(9);
+        let base = sym(14, 10);
+        let other = sym(14, 11);
+        let op_a = DenseOp::new(base);
+        let op_b = DenseOp::new(other);
+        let x = Matrix::randn(14, 5, &mut rng);
+        let w = Matrix::randn(14, 3, &mut rng);
+        let l = Matrix::randn(14, 4, &mut rng);
+
+        let shifted = ShiftedOp::new(&op_a, 1.7);
+        assert!(shifted.matmat(&x).max_abs_diff(&matmat_by_columns(&shifted, &x)) < 1e-12);
+        let scaled = ScaledOp::new(&op_a, -0.3);
+        assert!(scaled.matmat(&x).max_abs_diff(&matmat_by_columns(&scaled, &x)) < 1e-12);
+        let sum = SumOp::new(&op_a, 0.5, &op_b, 2.0);
+        assert!(sum.matmat(&x).max_abs_diff(&matmat_by_columns(&sum, &x)) < 1e-12);
+        let diag = DiagOp::new((0..14).map(|i| 0.5 + i as f64).collect());
+        assert!(diag.matmat(&x).max_abs_diff(&matmat_by_columns(&diag, &x)) < 1e-12);
+        let lr = LowRankPlusDiagOp::new(l, 0.9);
+        assert!(lr.matmat(&x).max_abs_diff(&matmat_by_columns(&lr, &x)) < 1e-12);
+        let sub = SubtractLowRankOp::new(&op_a, w);
+        assert!(sub.matmat(&x).max_abs_diff(&matmat_by_columns(&sub, &x)) < 1e-12);
     }
 
     #[test]

@@ -144,6 +144,29 @@ impl PivotedCholesky {
         y
     }
 
+    /// Blocked analogue of [`Self::spectral_apply`]: `f(P) X` for all columns
+    /// of `X` at once through the panel-GEMM engine (`UᵀX` → row scaling →
+    /// `U·` → `+ f(σ²) X`). This is what lets the whitened operator's
+    /// `matmat` keep the block solver's batch economics — the per-column
+    /// route would fall back to `2·cols` skinny GEMVs.
+    fn spectral_apply_block(&self, x: &Matrix, f: impl Fn(f64) -> f64) -> Matrix {
+        let f0 = f(self.sigma2);
+        let mut utx = self.u.t_matmul(x);
+        for (i, &s2) in self.s2.iter().enumerate() {
+            let g = f(s2 + self.sigma2) - f0;
+            for j in 0..utx.cols() {
+                utx[(i, j)] *= g;
+            }
+        }
+        let mut y = self.u.matmul(&utx);
+        for i in 0..y.rows() {
+            for j in 0..y.cols() {
+                y[(i, j)] += f0 * x[(i, j)];
+            }
+        }
+        y
+    }
+
     /// `P^{-1} x` — exact Woodbury-equivalent solve, `O(nr)`.
     pub fn solve(&self, x: &[f64]) -> Vec<f64> {
         self.spectral_apply(x, |e| 1.0 / e)
@@ -157,6 +180,21 @@ impl PivotedCholesky {
     /// `P^{-1/2} x` — exact, `O(nr)`.
     pub fn invsqrt_mvm(&self, x: &[f64]) -> Vec<f64> {
         self.spectral_apply(x, |e| 1.0 / e.sqrt())
+    }
+
+    /// `P^{-1} X` for a block of columns — exact, `O(nr·cols)`.
+    pub fn solve_matmat(&self, x: &Matrix) -> Matrix {
+        self.spectral_apply_block(x, |e| 1.0 / e)
+    }
+
+    /// `P^{1/2} X` for a block of columns — exact, `O(nr·cols)`.
+    pub fn sqrt_matmat(&self, x: &Matrix) -> Matrix {
+        self.spectral_apply_block(x, |e| e.sqrt())
+    }
+
+    /// `P^{-1/2} X` for a block of columns — exact, `O(nr·cols)`.
+    pub fn invsqrt_matmat(&self, x: &Matrix) -> Matrix {
+        self.spectral_apply_block(x, |e| 1.0 / e.sqrt())
     }
 }
 
@@ -266,6 +304,23 @@ mod tests {
         let mut rng = Pcg64::seeded(7);
         let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         assert!(rel_err(&pc.matvec(&v), &k.matvec(&v)) < 0.05);
+    }
+
+    #[test]
+    fn blocked_spectral_apply_matches_per_column() {
+        let mut rng = Pcg64::seeded(8);
+        let l = Matrix::randn(22, 5, &mut rng);
+        let pc = PivotedCholesky::from_factor(l, 0.4).unwrap();
+        let x = Matrix::randn(22, 6, &mut rng);
+        let inv = pc.invsqrt_matmat(&x);
+        let sq = pc.sqrt_matmat(&x);
+        let sol = pc.solve_matmat(&x);
+        for j in 0..x.cols() {
+            let col = x.col(j);
+            assert!(rel_err(&inv.col(j), &pc.invsqrt_mvm(&col)) < 1e-12, "invsqrt col {j}");
+            assert!(rel_err(&sq.col(j), &pc.sqrt_mvm(&col)) < 1e-12, "sqrt col {j}");
+            assert!(rel_err(&sol.col(j), &pc.solve(&col)) < 1e-12, "solve col {j}");
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Integration tests for the full CIQ pipeline: statistical correctness of
-//! sampling/whitening, preconditioning, and the backward pass — on kernel
+//! sampling/whitening, preconditioning (including the unified
+//! `SolverPolicy`/`SolverContext` path), and the backward pass — on kernel
 //! operators (never materialized) rather than toy dense matrices.
 
-use ciq::ciq::{Ciq, CiqOptions};
+use ciq::ciq::precond::WhitenedOp;
+use ciq::ciq::{Ciq, CiqOptions, PrecondConfig, SolveKind, SolverPolicy};
 use ciq::linalg::eigen::{spd_inv_sqrt, spd_sqrt};
-use ciq::linalg::Matrix;
+use ciq::linalg::{Cholesky, Matrix};
 use ciq::operators::{KernelOp, KernelType, LinearOp};
 use ciq::precond::PivotedCholesky;
 use ciq::prop_assert;
@@ -84,6 +86,55 @@ fn whitened_vectors_are_white() {
     }
     let err = (&acc - &Matrix::eye(n)).fro_norm() / (n as f64).sqrt();
     assert!(err < 0.25, "whitened covariance deviates from I: {err}");
+}
+
+#[test]
+fn property_preconditioned_and_plain_ciq_agree_in_distribution() {
+    // The preconditioned maps are rotations of the plain ones (Eqs. S12/S13):
+    // R = K P^{-1/2} M^{-1/2} satisfies R Rᵀ = K and R' = P^{-1/2} M^{-1/2}
+    // satisfies R' R'ᵀ = K^{-1}, which is exactly "agrees in distribution"
+    // for Gaussian sampling/whitening. Rather than materialize R, probe the
+    // identities: every factor is symmetric, so Rᵀ x = M^{-1/2} P^{-1/2} K x
+    // and R'ᵀ x = M^{-1/2} P^{-1/2} x are one whitened CIQ solve each, and
+    // the outer R·/R'· application is the unified preconditioned solve.
+    check(Config { cases: 6, seed: 31 }, "precond RRᵀx == Kx across kernels/ranks", |rng, case| {
+        let n = 22 + rng.below(14);
+        let kinds = [KernelType::Rbf, KernelType::Matern32, KernelType::Matern52];
+        let noise = 1e-2;
+        let x = Matrix::randn(n, 1 + case % 2, rng);
+        let op = KernelOp::new(&x, kinds[case % 3], 0.8, 1.0, noise);
+        let rank = 4 + 4 * (case % 3); // sweep preconditioner ranks 4/8/12
+        let solver = Ciq::new(CiqOptions { tol: 1e-10, q_points: 12, ..Default::default() });
+        let cfg = PrecondConfig { rank, sigma2: Some(noise), build_tol: 1e-14 };
+        let err_str = |e: ciq::Error| format!("{e}");
+        let ctx = solver
+            .build_context(&op, &SolverPolicy::Preconditioned(cfg))
+            .map_err(err_str)?;
+        let pc = ctx.precond.as_ref().expect("preconditioned context").clone();
+        let probe: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        // sampling: R Rᵀ x must equal K x
+        let kx = op.matvec(&probe);
+        let m = WhitenedOp::new(&op, pc.as_ref());
+        let rt_x = {
+            let p_kx = pc.invsqrt_mvm(&kx);
+            solver.invsqrt_with_bounds(&m, &p_kx, Some(ctx.cache.bounds)).map_err(err_str)?.solution
+        };
+        let rrt_x = solver.solve(&op, &rt_x, SolveKind::Sqrt, &ctx).map_err(err_str)?.solution;
+        let e_sample = rel_err(&rrt_x, &kx);
+        prop_assert!(e_sample < 5e-3, "R Rᵀx vs Kx rel err {e_sample} (rank {rank})");
+
+        // whitening: R' R'ᵀ x must equal K^{-1} x
+        let kinv_x = Cholesky::new(&op.to_dense()).map_err(err_str)?.solve(&probe);
+        let rpt_x = {
+            let p_x = pc.invsqrt_mvm(&probe);
+            solver.invsqrt_with_bounds(&m, &p_x, Some(ctx.cache.bounds)).map_err(err_str)?.solution
+        };
+        let rprpt_x = solver.solve(&op, &rpt_x, SolveKind::InvSqrt, &ctx).map_err(err_str)?.solution;
+        let e_whiten = rel_err(&rprpt_x, &kinv_x);
+        prop_assert!(e_whiten < 5e-3, "R'R'ᵀx vs K⁻¹x rel err {e_whiten} (rank {rank})");
+        Ok(())
+    });
 }
 
 #[test]
