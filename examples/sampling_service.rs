@@ -5,10 +5,13 @@
 //!
 //! Run: `cargo run --release --example sampling_service -- [--n 2000]
 //!   [--clients 8] [--policy plain|cached|precond] [--rank 48]
-//!   [--adaptive-ms 50]`
+//!   [--adaptive-ms 50] [--backend async|threaded] [--adaptive-wait-us 200]`
 
 use ciq::ciq::{PrecondConfig, SolverPolicy};
-use ciq::coordinator::{AdaptiveBatchConfig, ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::coordinator::{
+    AdaptiveBatchConfig, AdaptiveWaitConfig, DispatchBackend, ReqKind, SamplingService,
+    ServiceConfig, SharedOp,
+};
 use ciq::linalg::Matrix;
 use ciq::operators::{KernelOp, KernelType};
 use ciq::rng::Pcg64;
@@ -33,6 +36,11 @@ fn main() {
         _ => SolverPolicy::CachedBounds,
     };
     let adaptive_ms = args.get_or("adaptive-ms", 0u64);
+    let adaptive_wait_us = args.get_or("adaptive-wait-us", 0u64);
+    let backend = match args.get("backend").unwrap_or("async") {
+        "threaded" => DispatchBackend::Threaded,
+        _ => DispatchBackend::Async,
+    };
 
     let mut rng = Pcg64::seeded(0);
     let x = Matrix::randn(n, 2, &mut rng);
@@ -51,12 +59,19 @@ fn main() {
                 target_flush_latency: Duration::from_millis(adaptive_ms),
                 min_batch: 1,
             }),
+            adaptive_wait: (adaptive_wait_us > 0).then(|| AdaptiveWaitConfig {
+                min_wait: Duration::from_micros(adaptive_wait_us),
+            }),
+            backend,
             ..Default::default()
         },
         ops,
     ));
 
-    println!("== sampling service: {clients} clients × {per_client} requests, N = {n} ==");
+    println!(
+        "== sampling service ({backend:?} dispatcher): {clients} clients × {per_client} \
+         requests, N = {n} =="
+    );
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
@@ -90,11 +105,23 @@ fn main() {
         svc.metrics().warmed_operators.load(Ordering::Relaxed),
         svc.metrics().warm_failures.load(Ordering::Relaxed),
     );
+    println!(
+        "dispatcher: wakeups={} timer_fires={} (event/deadline-driven only — zero at idle)",
+        svc.metrics().dispatcher_wakeups.load(Ordering::Relaxed),
+        svc.metrics().timer_fires.load(Ordering::Relaxed),
+    );
     let ceilings = svc.metrics().batch_ceilings();
     if !ceilings.is_empty() {
         println!("adaptive batch ceilings:");
         for (shard, c) in ceilings {
             println!("  {shard:<16} {c}");
+        }
+    }
+    let waits = svc.metrics().shard_waits();
+    if !waits.is_empty() {
+        println!("adaptive flush waits (us):");
+        for (shard, us) in waits {
+            println!("  {shard:<16} {us}");
         }
     }
     println!(

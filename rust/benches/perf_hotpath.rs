@@ -4,13 +4,16 @@
 //! (tile size, threading), (2) the msMINRES per-iteration recurrence
 //! overhead, (3) RHS batching in the coordinator (block-msMINRES vs
 //! per-vector solves), (5) preconditioned vs plain CIQ on an
-//! ill-conditioned kernel (emits `BENCH_ciq_precond.json`).
+//! ill-conditioned kernel (emits `BENCH_ciq_precond.json`), (6) the
+//! coordinator's dispatcher backends — threaded vs async enqueue→flush
+//! latency at 1/8/64 shards (emits `BENCH_dispatch.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
-//! `--fast` shrinks section 0 to N=1024, d=4 and section 5 to N=400 (the CI
-//! smoke configuration); the full sweep covers N ∈ {1024, 4096} × d ∈
-//! {4, 16} × all four kernel types × {matvec, matmat r=8}.
+//! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, and
+//! section 6 to 1/8 shards (the CI smoke configuration); the full sweep
+//! covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel types ×
+//! {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -204,11 +207,105 @@ fn main() {
 
     bench_ciq_precond(args.has("fast"), &mut rng, &mut checks);
 
-    // evaluate every recorded verdict only now — both JSON artifacts exist
-    // on disk whatever happens below
+    bench_dispatch(args.has("fast"), &mut checks);
+
+    // evaluate every recorded verdict only now — all three JSON artifacts
+    // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
     }
+}
+
+/// §6: dispatcher backends head-to-head — threaded vs async enqueue→flush
+/// latency on the deadline path, at 1/8/64 shards. Every wave submits one
+/// sub-ceiling request per shard, so each must wait out its armed flush
+/// deadline: the measured latency is `max_wait` plus pure dispatcher
+/// overhead (the threaded backend pays an O(shards) deadline scan per
+/// event; the async one a timer-wheel fire per shard). Writes
+/// `BENCH_dispatch.json` into the CWD (uploaded by the CI bench-smoke job
+/// next to the other two JSONs).
+fn bench_dispatch(fast: bool, checks: &mut Checks) {
+    use ciq::coordinator::{DispatchBackend, ReqKind, SamplingService, ServiceConfig, SharedOp};
+    use ciq::operators::DenseOp;
+    use std::collections::HashMap;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let n = 8;
+    let shard_counts: &[usize] = if fast { &[1, 8] } else { &[1, 8, 64] };
+    let waves = if fast { 20 } else { 50 };
+    let max_wait = Duration::from_millis(2);
+    println!("# perf 6: dispatcher backends (deadline path, {waves} waves, max_wait 2 ms)");
+    println!("backend\tshards\tp50_us\tp99_us\twakeups\ttimer_fires");
+    let mut entries: Vec<String> = Vec::new();
+    let mut async_event_driven = true;
+    for backend in [DispatchBackend::Threaded, DispatchBackend::Async] {
+        for &shards in shard_counts {
+            // identity operators: the solve is trivial, so latency beyond
+            // max_wait is dispatcher overhead
+            let mut map: HashMap<String, SharedOp> = HashMap::new();
+            for s in 0..shards {
+                map.insert(format!("op{s}"), Arc::new(DenseOp::new(Matrix::eye(n))));
+            }
+            let svc = SamplingService::start(
+                ServiceConfig {
+                    max_batch: 1024,
+                    max_wait,
+                    workers: 2,
+                    ciq: CiqOptions::default(),
+                    warm_on_register: false,
+                    backend,
+                    ..Default::default()
+                },
+                map,
+            );
+            for _ in 0..waves {
+                let tickets: Vec<_> = (0..shards)
+                    .map(|s| svc.submit(&format!("op{s}"), ReqKind::Whiten, vec![1.0; n]))
+                    .collect();
+                for t in tickets {
+                    t.wait().expect("dispatch bench request failed");
+                }
+            }
+            let m = svc.metrics();
+            let (p50, p99) =
+                (m.latency_percentile_us(50.0), m.latency_percentile_us(99.0));
+            let wakeups = m.dispatcher_wakeups.load(Ordering::Relaxed);
+            let fires = m.timer_fires.load(Ordering::Relaxed);
+            println!("{backend:?}\t{shards}\t{p50}\t{p99}\t{wakeups}\t{fires}");
+            entries.push(format!(
+                "    {{\"backend\": \"{backend:?}\", \"shards\": {shards}, \"p50_us\": {p50}, \
+                 \"p99_us\": {p99}, \"wakeups\": {wakeups}, \"timer_fires\": {fires}}}"
+            ));
+            if backend == DispatchBackend::Async {
+                // Strictly event/deadline-driven, checked behaviorally (not
+                // just by re-counting submissions): every wakeup is an
+                // arrival, and every wave's per-shard batch flushed via its
+                // own armed deadline — a reintroduced poll loop that flushed
+                // shards early would starve the deadline tasks of fires, a
+                // double-fire would overshoot. (The idle-window guarantee
+                // itself is pinned by the integration test on ExecStats.)
+                let expected = (waves * shards) as u64;
+                async_event_driven &= wakeups == expected && fires == expected;
+            }
+            svc.shutdown();
+        }
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.dispatch.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"waves\": {waves}, \"n\": {n}, \"max_wait_ms\": 2, \"workers\": 2, \
+         \"threads\": {}}},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        num_threads(),
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_dispatch.json", json).expect("write BENCH_dispatch.json");
+    println!("wrote BENCH_dispatch.json ({} entries)", entries.len());
+    checks.push((
+        "async dispatcher: wakeups == arrivals and every wave flushed by its armed deadline"
+            .into(),
+        async_event_driven,
+    ));
 }
 
 /// §5: preconditioned vs plain CIQ on an ill-conditioned RBF kernel — the

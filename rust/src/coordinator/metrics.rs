@@ -2,13 +2,20 @@
 //! iteration telemetry (the data behind Fig. S7), plus the cache-aware
 //! execution engine's economics: per-shard queue depths, spectral-cache
 //! hit/miss counts, MVMs saved by cache reuse, matmat column-work saved
-//! by active-column compaction, background-warmer progress, and the adaptive
-//! batch controller's per-shard ceilings (the AIMD state itself lives here so
-//! it is observable for free).
+//! by active-column compaction, background-warmer progress, the adaptive
+//! batch controller's per-shard ceilings, and the adaptive wait
+//! controller's per-shard flush windows (controller state itself lives here
+//! so it is observable for free).
+//!
+//! The dispatcher's *liveness* is observable too: [`Metrics::dispatcher_wakeups`]
+//! counts event-driven wakeups (one per received request) and
+//! [`Metrics::timer_fires`] counts flush-deadline expirations. On the async
+//! backend both stand perfectly still while the service is idle — the
+//! regression test for "zero idle polls".
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Shared metrics for the sampling service.
@@ -40,6 +47,14 @@ pub struct Metrics {
     /// Column-work an uncompacted solver would have performed
     /// (`iterations × columns` per batch).
     pub column_work_full: AtomicU64,
+    /// Dispatcher wakeups that handled a request arrival. Strictly
+    /// event-driven on both backends: an idle service adds zero.
+    pub dispatcher_wakeups: AtomicU64,
+    /// Flush-deadline expirations (timer-wheel fires on the async backend,
+    /// deadline `recv_timeout` expirations on the threaded one). A deadline
+    /// only exists while some shard holds a pending request, so an idle
+    /// service adds zero.
+    pub timer_fires: AtomicU64,
     /// The service's solver policy, for observability (`Debug` rendering of
     /// [`crate::ciq::SolverPolicy`]); set once at startup.
     policy: Mutex<String>,
@@ -51,6 +66,14 @@ pub struct Metrics {
     /// Per-shard adaptive batch ceiling (AIMD state), keyed by `"op/Kind"`.
     /// Absent ⇒ the shard still runs at the static `max_batch`.
     batch_ceilings: Mutex<HashMap<String, usize>>,
+    /// Per-shard adaptive flush wait in µs (wait-controller state), keyed by
+    /// `"op/Kind"`. Absent ⇒ the shard still runs at the static `max_wait`.
+    shard_waits: Mutex<HashMap<String, u64>>,
+    /// Executor-layer telemetry (parks / wakeups / task polls / wheel
+    /// fires) when the async backend runs; `None` on the threaded backend.
+    /// The idle-service test asserts on these *below* the coordinator's own
+    /// counters: task polls must not advance while the service is idle.
+    exec_stats: Mutex<Option<Arc<crate::exec::ExecStats>>>,
 }
 
 impl Metrics {
@@ -93,6 +116,16 @@ impl Metrics {
         full.saturating_sub(self.column_work.load(Ordering::Relaxed))
     }
 
+    /// Install the async dispatcher's executor stats (startup, once).
+    pub fn set_exec_stats(&self, stats: Arc<crate::exec::ExecStats>) {
+        *self.exec_stats.lock().unwrap() = Some(stats);
+    }
+
+    /// The async dispatcher's executor-layer stats, when that backend runs.
+    pub fn exec_stats(&self) -> Option<Arc<crate::exec::ExecStats>> {
+        self.exec_stats.lock().unwrap().clone()
+    }
+
     /// Record the service's solver policy (startup, once).
     pub fn set_policy(&self, policy: &str) {
         *self.policy.lock().unwrap() = policy.to_string();
@@ -132,14 +165,54 @@ impl Metrics {
         next
     }
 
-    /// Drop all per-shard state (queue-depth entries and adaptive batch
-    /// ceilings) belonging to operator `op_name` — shard labels are
-    /// `"op/Kind"`. Called on operator deregistration so client-visible maps
-    /// cannot grow without bound across operator churn.
+    /// A shard's current adaptive flush wait, if the wait controller has
+    /// ever touched it.
+    pub fn shard_wait(&self, shard: &str) -> Option<Duration> {
+        self.shard_waits.lock().unwrap().get(shard).map(|&us| Duration::from_micros(us))
+    }
+
+    /// Snapshot of all adaptive flush waits as `(shard, wait µs)`, sorted.
+    pub fn shard_waits(&self) -> Vec<(String, u64)> {
+        let m = self.shard_waits.lock().unwrap();
+        let mut v: Vec<(String, u64)> = m.iter().map(|(k, &us)| (k.clone(), us)).collect();
+        v.sort();
+        v
+    }
+
+    /// One wait-controller step for a shard's flush window, driven by how
+    /// the batch ended: a **full** flush (the ceiling was hit before the
+    /// deadline) shrinks the wait ×3/4 — demand is high, waiting longer only
+    /// adds latency; a **short** deadline flush stretches it ×5/4 (+1 µs so
+    /// it cannot stick at a rounded-down fixpoint) — the window was too
+    /// small to realize batching economics. Clamped to `[floor, cap]`; a
+    /// shard starts at `cap` (the static `max_wait` is the latency
+    /// ceiling). Returns the new wait.
+    pub fn tune_max_wait(
+        &self,
+        shard: &str,
+        full_flush: bool,
+        floor: Duration,
+        cap: Duration,
+    ) -> Duration {
+        let floor_us = (floor.as_micros() as u64).max(1);
+        // a misconfigured floor above the cap degrades to floor == cap
+        let cap_us = (cap.as_micros() as u64).max(floor_us);
+        let mut m = self.shard_waits.lock().unwrap();
+        let cur = *m.get(shard).unwrap_or(&cap_us);
+        let next = if full_flush { (cur * 3) / 4 } else { (cur * 5) / 4 + 1 }.clamp(floor_us, cap_us);
+        m.insert(shard.to_string(), next);
+        Duration::from_micros(next)
+    }
+
+    /// Drop all per-shard state (queue-depth entries, adaptive batch
+    /// ceilings, and adaptive flush waits) belonging to operator `op_name` —
+    /// shard labels are `"op/Kind"`. Called on operator deregistration so
+    /// client-visible maps cannot grow without bound across operator churn.
     pub fn prune_shard(&self, op_name: &str) {
         let prefix = format!("{op_name}/");
         self.shard_depths.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
         self.batch_ceilings.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
+        self.shard_waits.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
     }
 
     /// Record a shard's current queue depth (also tracks its max). Fast path
@@ -233,7 +306,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
-             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} saved_mvms={} saved_colwork={}",
+             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} saved_mvms={} saved_colwork={} \
+             wakeups={} timer_fires={}",
             self.policy(),
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -247,6 +321,8 @@ impl Metrics {
             self.warmed_operators.load(Ordering::Relaxed),
             self.saved_mvms.load(Ordering::Relaxed),
             self.saved_column_work(),
+            self.dispatcher_wakeups.load(Ordering::Relaxed),
+            self.timer_fires.load(Ordering::Relaxed),
         )
     }
 }
@@ -312,12 +388,16 @@ mod tests {
         m.record_shard_depth("ab/Sample", 2); // prefix-adjacent name must survive
         m.tune_batch_ceiling("a/Sample", false, 1, 16);
         m.tune_batch_ceiling("ab/Sample", true, 1, 16);
+        m.tune_max_wait("a/Sample", true, Duration::from_micros(100), Duration::from_millis(2));
+        m.tune_max_wait("ab/Sample", true, Duration::from_micros(100), Duration::from_millis(2));
         m.prune_shard("a");
         assert_eq!(m.shard_depth("a/Sample"), 0);
         assert_eq!(m.max_shard_depth("a/Whiten"), 0);
         assert_eq!(m.shard_depth("ab/Sample"), 2, "unrelated operator pruned");
         assert!(m.batch_ceiling("a/Sample").is_none());
         assert!(m.batch_ceiling("ab/Sample").is_some());
+        assert!(m.shard_wait("a/Sample").is_none(), "prune must drop the wait entry");
+        assert!(m.shard_wait("ab/Sample").is_some());
         assert_eq!(m.shard_depths().len(), 1);
         // a flush racing the prune must not resurrect the entry…
         m.record_shard_drained("a/Sample");
@@ -347,5 +427,36 @@ mod tests {
         m.set_policy("CachedBounds");
         assert_eq!(m.policy(), "CachedBounds");
         assert!(m.summary().contains("policy=CachedBounds"));
+    }
+
+    #[test]
+    fn wait_controller_shrinks_stretches_and_clamps() {
+        let m = Metrics::default();
+        let floor = Duration::from_micros(100);
+        let cap = Duration::from_micros(4000);
+        // starts at the cap; full flushes walk it down multiplicatively
+        assert_eq!(m.tune_max_wait("s", true, floor, cap), Duration::from_micros(3000));
+        assert_eq!(m.tune_max_wait("s", true, floor, cap), Duration::from_micros(2250));
+        // sustained full flushes clamp at the floor, never below
+        for _ in 0..20 {
+            m.tune_max_wait("s", true, floor, cap);
+        }
+        assert_eq!(m.shard_wait("s"), Some(floor));
+        // short deadline flushes stretch it back up (×5/4 + 1)
+        assert_eq!(m.tune_max_wait("s", false, floor, cap), Duration::from_micros(126));
+        for _ in 0..40 {
+            m.tune_max_wait("s", false, floor, cap);
+        }
+        // ...and clamp at the cap
+        assert_eq!(m.shard_wait("s"), Some(cap));
+        assert_eq!(m.shard_waits(), vec![("s".to_string(), 4000)]);
+        // a floor above the cap degrades to floor == cap
+        let d = m.tune_max_wait("t", true, Duration::from_millis(10), Duration::from_millis(1));
+        assert_eq!(d, Duration::from_millis(10));
+        // the idle-liveness counters exist and render in the summary
+        m.dispatcher_wakeups.fetch_add(3, Ordering::Relaxed);
+        m.timer_fires.fetch_add(2, Ordering::Relaxed);
+        assert!(m.summary().contains("wakeups=3"));
+        assert!(m.summary().contains("timer_fires=2"));
     }
 }

@@ -18,16 +18,32 @@
 //! * records per-request latency, batch-size, per-shard queue-depth, and
 //!   cache-economics metrics.
 //!
-//! ## Shard flushing is deadline-driven
+//! ## Two dispatcher backends; both are purely event/deadline driven
 //!
-//! The dispatcher's `recv` timeout is computed from the **oldest pending
-//! request's flush deadline** across all shards (not a fixed `max_wait` after
-//! the most recent arrival), and expired shards are flushed after *every*
-//! received request. This matters under steady load: a trickle of requests
-//! arriving faster than `max_wait` used to keep the receive loop on its `Ok`
-//! path forever, so a sub-`max_batch` queue was never flushed until the
-//! trickle stopped (flush starvation). Now a request waits at most
-//! `max_wait` (plus solve time) regardless of arrival pattern.
+//! [`ServiceConfig::backend`] selects the dispatcher:
+//!
+//! * [`DispatchBackend::Async`] (the default): **one** thread runs a
+//!   [`crate::exec`] executor. Channel arrivals are an intake *task* (the
+//!   mpsc sender unparks the executor — no receive timeout exists at all),
+//!   and every shard arms its own flush deadline in the executor's timer
+//!   wheel on first enqueue, firing exactly at `oldest.enqueued +
+//!   max_wait`. A full batch cancels the armed timer in O(1). An idle
+//!   service performs **zero** wakeups — [`Metrics::dispatcher_wakeups`]
+//!   and [`Metrics::timer_fires`] stand still, which a regression test
+//!   asserts.
+//! * [`DispatchBackend::Threaded`]: the pre-`exec` single-loop dispatcher,
+//!   kept for one release as the equivalence baseline. Its `recv` timeout
+//!   is computed from the **oldest pending flush deadline** across shards
+//!   (never a fixed poll interval — with no deadline pending it blocks in
+//!   plain `recv`), and expired shards are flushed after every received
+//!   request, so a steady sub-`max_wait` trickle can never starve a
+//!   sub-`max_batch` shard of its flush (the PR 1 guarantee; both backends
+//!   carry the regression test).
+//!
+//! In both backends the dispatcher owns only the *waiting*: batches execute
+//! on a FIFO [`TaskPool`] whose workers park on a condvar (the old
+//! `recv_timeout(20ms)` worker poll is gone), and the actual solve compute
+//! still fans out through the persistent panel-GEMM chunk pool.
 //!
 //! ## Solver policies and per-operator solver contexts
 //!
@@ -46,22 +62,26 @@
 //! the estimation MVMs the build actually spent (measured, not assumed);
 //! [`Metrics::saved_mvms`] totals the savings from live traffic.
 //!
-//! ## Background spectral warmer
+//! ## Background warming on a bounded, newest-first pool
 //!
-//! With [`ServiceConfig::warm_on_register`] (the default), a dedicated
-//! warmer thread populates each operator's [`SolverContext`] **off the
-//! request path**: `start`, [`SamplingService::register_operator`] and
-//! [`SamplingService::replace_operator`] enqueue the fresh entry to the
-//! warmer, which builds the context (Lanczos bounds + optional
-//! pivoted-Cholesky factorization) while the service keeps serving. The
-//! per-operator mutex makes the warmer and a racing first batch serialize:
-//! whichever gets there first pays the estimation, the other reuses it — a
-//! warmed operator's first batch therefore performs **zero** inline
-//! estimation MVMs and records a cache hit. Warm completions and failures
-//! are visible as [`Metrics::warmed_operators`] / [`Metrics::warm_failures`]
-//! (a failed warm is retried inline by the next batch, which surfaces the
-//! error to clients). The warmer drains and exits on shutdown, after the
-//! dispatcher.
+//! With [`ServiceConfig::warm_on_register`] (the default), operator
+//! contexts are built **off the request path** on a LIFO [`TaskPool`] of
+//! [`ServiceConfig::warm_concurrency`] workers: `start`,
+//! [`SamplingService::register_operator`] and
+//! [`SamplingService::replace_operator`] enqueue the fresh entry, and a
+//! burst of registrations warms concurrently (bounded) instead of
+//! serializing behind one pivoted-Cholesky build — newest first, because in
+//! a replacement burst the newest version is the live one and older queued
+//! jobs are skipped as stale. Under the async backend the registration
+//! events flow through an executor task (the same arrival-wake machinery as
+//! requests) that feeds the pool. The per-operator mutex still serializes a
+//! warm build against a racing first batch: whichever gets there first pays
+//! the estimation, the other reuses it — a warmed operator's first batch
+//! performs **zero** inline estimation MVMs and records a cache hit. Warm
+//! completions and failures are visible as [`Metrics::warmed_operators`] /
+//! [`Metrics::warm_failures`] (a failed warm is retried inline by the next
+//! batch, which surfaces the error to clients). The pool drains on
+//! shutdown, after the dispatcher.
 //!
 //! ## Adaptive per-shard batch ceilings (clamped AIMD)
 //!
@@ -74,7 +94,20 @@
 //! start greedy (at `max_batch`) and converge to the largest batch the
 //! latency budget tolerates; the live ceilings are visible via
 //! [`Metrics::batch_ceilings`]. Deregistering an operator prunes its shards
-//! from both the depth and ceiling maps.
+//! from the depth, ceiling, and wait maps.
+//!
+//! ## Adaptive per-shard `max_wait`
+//!
+//! With [`ServiceConfig::adaptive_wait`] set, the flush deadline itself
+//! becomes a controlled variable, steered by how batches end: a **full**
+//! flush (depth hit the ceiling before the deadline) means demand is high
+//! enough that waiting longer only adds latency — the shard's wait shrinks
+//! (×3/4); a **deadline** flush that came up short of the ceiling means the
+//! window is too small to realize batching economics — the wait stretches
+//! (×5/4), never past the configured `max_wait` (the static value is the
+//! latency ceiling, [`AdaptiveWaitConfig::min_wait`] the floor). State
+//! lives in [`Metrics::shard_waits`], pruned on deregistration like the
+//! batch ceilings.
 //!
 //! ## Operator replacement versions the cache
 //!
@@ -92,10 +125,14 @@ pub mod metrics;
 pub use metrics::Metrics;
 
 use crate::ciq::{Ciq, CiqOptions, SolveKind, SolverContext, SolverPolicy};
+use crate::exec;
 use crate::linalg::Matrix;
 use crate::operators::LinearOp;
+use crate::util::threadpool::{TaskOrder, TaskPool};
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -139,6 +176,9 @@ type OpMap = Arc<RwLock<HashMap<String, Arc<OpEntry>>>>;
 /// Shard key: requests are queued and batched per `(operator, kind)`.
 type ShardKey = (String, ReqKind);
 
+/// A warm job: the fresh entry registered under `name`.
+type WarmJob = (String, Arc<OpEntry>);
+
 fn shard_label(op_name: &str, kind: ReqKind) -> String {
     format!("{op_name}/{kind:?}")
 }
@@ -150,6 +190,17 @@ struct Request {
     rhs: Vec<f64>,
     enqueued: Instant,
     respond: Sender<crate::Result<Vec<f64>>>,
+}
+
+/// Which dispatcher runs the service (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchBackend {
+    /// Single-loop thread + mpsc dispatcher (pre-`exec` baseline, kept for
+    /// one release behind this switch).
+    Threaded,
+    /// One [`crate::exec`] executor thread: per-shard deadline tasks on a
+    /// timer wheel, channel arrivals as task wakes, zero idle wakeups.
+    Async,
 }
 
 /// Configuration of the clamped-AIMD per-shard batch controller.
@@ -169,13 +220,30 @@ impl Default for AdaptiveBatchConfig {
     }
 }
 
+/// Configuration of the queueing-delay-aware per-shard `max_wait`
+/// controller (see the module docs: full flushes shrink the wait,
+/// short deadline flushes stretch it, within
+/// `[min_wait, ServiceConfig::max_wait]`).
+#[derive(Clone, Debug)]
+pub struct AdaptiveWaitConfig {
+    /// Floor the per-shard wait can never shrink below.
+    pub min_wait: Duration,
+}
+
+impl Default for AdaptiveWaitConfig {
+    fn default() -> Self {
+        AdaptiveWaitConfig { min_wait: Duration::from_micros(200) }
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Max RHS per batch (the hard cap; also the adaptive controller's
     /// starting ceiling).
     pub max_batch: usize,
-    /// Max time a request may wait for batch-mates.
+    /// Max time a request may wait for batch-mates (the cap when
+    /// `adaptive_wait` is on).
     pub max_wait: Duration,
     /// Worker threads executing batches.
     pub workers: usize,
@@ -183,13 +251,21 @@ pub struct ServiceConfig {
     pub ciq: CiqOptions,
     /// How batches approach their operators (see the module docs).
     pub policy: SolverPolicy,
-    /// Build solver contexts on a background warmer thread at
+    /// Build solver contexts on the background warm pool at
     /// registration/replacement time instead of inline on the first batch.
     /// Ignored under `SolverPolicy::Plain` (nothing to warm).
     pub warm_on_register: bool,
+    /// Warm pool workers: how many operator contexts may build
+    /// concurrently after a burst of registrations.
+    pub warm_concurrency: usize,
     /// Per-shard adaptive batch ceilings; `None` keeps the static
     /// `max_batch` everywhere.
     pub adaptive: Option<AdaptiveBatchConfig>,
+    /// Per-shard adaptive flush deadlines; `None` keeps the static
+    /// `max_wait` everywhere.
+    pub adaptive_wait: Option<AdaptiveWaitConfig>,
+    /// Which dispatcher runs the service.
+    pub backend: DispatchBackend,
 }
 
 impl Default for ServiceConfig {
@@ -201,21 +277,47 @@ impl Default for ServiceConfig {
             ciq: CiqOptions::default(),
             policy: SolverPolicy::CachedBounds,
             warm_on_register: true,
+            warm_concurrency: 2,
             adaptive: None,
+            adaptive_wait: None,
+            backend: DispatchBackend::Async,
+        }
+    }
+}
+
+/// The request sender half, one variant per backend.
+enum ReqTx {
+    Std(Sender<Request>),
+    Exec(exec::channel::Sender<Request>),
+}
+
+impl ReqTx {
+    fn send(&self, req: Request) {
+        // if the dispatcher is gone the Ticket will report the failure
+        match self {
+            ReqTx::Std(tx) => {
+                let _ = tx.send(req);
+            }
+            ReqTx::Exec(tx) => {
+                let _ = tx.send(req);
+            }
         }
     }
 }
 
 /// Handle to a running sampling service.
 pub struct SamplingService {
-    tx: Option<Sender<Request>>,
+    tx: Option<ReqTx>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     ops: OpMap,
-    /// Feed of fresh `(name, entry)` pairs to the background warmer (`None`
-    /// when warming is disabled or the policy is `Plain`).
-    warmer_tx: Option<Sender<(String, Arc<OpEntry>)>>,
-    warmer: Option<std::thread::JoinHandle<()>>,
+    config: Arc<ServiceConfig>,
+    /// Async backend: registration events routed through the executor's
+    /// warm-router task (`None` otherwise).
+    warm_tx: Option<exec::channel::Sender<WarmJob>>,
+    /// Bounded newest-first warm pool (`None` when warming is disabled or
+    /// the policy is `Plain`).
+    warm_pool: Option<Arc<TaskPool>>,
 }
 
 /// A pending response.
@@ -240,43 +342,86 @@ struct Batch {
 
 impl SamplingService {
     /// Start the service with a set of named operators. When warming is
-    /// enabled (default), every initial operator is queued to the background
-    /// warmer immediately.
+    /// enabled (default), every initial operator is queued to the warm pool
+    /// immediately.
     pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
         let entries: HashMap<String, Arc<OpEntry>> =
             ops.into_iter().map(|(name, op)| (name, OpEntry::fresh(op))).collect();
         let registry: OpMap = Arc::new(RwLock::new(entries));
-        let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         metrics.set_policy(&format!("{:?}", config.policy));
+        let config = Arc::new(config);
 
-        // background warmer: builds solver contexts off the request path
+        // bounded newest-first warm pool: builds solver contexts off the
+        // request path, several at a time under registration bursts
         let warm = config.warm_on_register && config.policy != SolverPolicy::Plain;
-        let (warmer_tx, warmer) = if warm {
-            let (wtx, wrx) = mpsc::channel::<(String, Arc<OpEntry>)>();
-            let r = registry.clone();
-            let ciq_opts = config.ciq.clone();
-            let policy = config.policy.clone();
-            let m = metrics.clone();
-            let handle = std::thread::spawn(move || warmer_loop(wrx, r, ciq_opts, policy, m));
-            for (name, entry) in registry.read().unwrap().iter() {
-                let _ = wtx.send((name.clone(), entry.clone()));
-            }
-            (Some(wtx), Some(handle))
+        let warm_pool = if warm {
+            Some(Arc::new(TaskPool::new(
+                "ciq-warm",
+                config.warm_concurrency.max(1),
+                TaskOrder::Lifo,
+            )))
         } else {
-            (None, None)
+            None
         };
 
-        let m2 = metrics.clone();
-        let r2 = registry.clone();
-        let dispatcher = std::thread::spawn(move || dispatcher_loop(config, r2, rx, m2));
-        SamplingService {
+        let (tx, dispatcher, warm_tx) = match config.backend {
+            DispatchBackend::Threaded => {
+                let (tx, rx) = mpsc::channel::<Request>();
+                let (c, r, m) = (config.clone(), registry.clone(), metrics.clone());
+                let handle = std::thread::spawn(move || dispatcher_threaded(c, r, rx, m));
+                (ReqTx::Std(tx), handle, None)
+            }
+            DispatchBackend::Async => {
+                let (tx, rx) = exec::channel::channel::<Request>();
+                let (warm_tx, warm_rx) = if warm_pool.is_some() {
+                    let (a, b) = exec::channel::channel::<WarmJob>();
+                    (Some(a), Some(b))
+                } else {
+                    (None, None)
+                };
+                let (c, r, m) = (config.clone(), registry.clone(), metrics.clone());
+                let wp = warm_pool.clone();
+                let handle =
+                    std::thread::spawn(move || dispatcher_async(c, r, rx, warm_rx, wp, m));
+                (ReqTx::Exec(tx), handle, warm_tx)
+            }
+        };
+
+        let svc = SamplingService {
             tx: Some(tx),
             dispatcher: Some(dispatcher),
             metrics,
             ops: registry,
-            warmer_tx,
-            warmer,
+            config,
+            warm_tx,
+            warm_pool,
+        };
+        if warm {
+            let initial: Vec<WarmJob> = svc
+                .ops
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(name, entry)| (name.clone(), entry.clone()))
+                .collect();
+            for (name, entry) in initial {
+                svc.enqueue_warm(name, entry);
+            }
+        }
+        svc
+    }
+
+    /// Hand a fresh entry to the warm machinery: through the executor's
+    /// warm-router task on the async backend, straight onto the pool on the
+    /// threaded one. No-op when warming is off.
+    fn enqueue_warm(&self, name: String, entry: Arc<OpEntry>) {
+        if let Some(wtx) = &self.warm_tx {
+            let _ = wtx.send((name, entry));
+        } else if let Some(pool) = &self.warm_pool {
+            let (ops, config, metrics) =
+                (self.ops.clone(), self.config.clone(), self.metrics.clone());
+            pool.submit(move || warm_entry(&name, &entry, &ops, &config, &metrics));
         }
     }
 
@@ -284,15 +429,13 @@ impl SamplingService {
     /// existing one. Replacement installs a fresh entry whose solver context
     /// starts empty — stale bounds/quadrature/preconditioner from the old
     /// operator can never serve the new one (the versioning contract in the
-    /// module docs) — and hands the fresh entry to the background warmer so
-    /// the rebuild happens off the request path.
+    /// module docs) — and hands the fresh entry to the warm pool so the
+    /// rebuild happens off the request path.
     pub fn replace_operator(&self, name: &str, op: SharedOp) {
         self.metrics.operator_replacements.fetch_add(1, Ordering::Relaxed);
         let entry = OpEntry::fresh(op);
         self.ops.write().unwrap().insert(name.to_string(), entry.clone());
-        if let Some(wtx) = &self.warmer_tx {
-            let _ = wtx.send((name.to_string(), entry));
-        }
+        self.enqueue_warm(name.to_string(), entry);
     }
 
     /// Alias of [`Self::replace_operator`] for first-time registration after
@@ -303,9 +446,9 @@ impl SamplingService {
 
     /// Remove an operator (and its solver context); in-flight batches
     /// complete against the entry they already hold. The operator's shards
-    /// are pruned from the depth/ceiling telemetry so those maps cannot grow
-    /// without bound across operator churn. Returns whether the name was
-    /// registered.
+    /// are pruned from the depth/ceiling/wait telemetry so those maps cannot
+    /// grow without bound across operator churn. Returns whether the name
+    /// was registered.
     pub fn deregister_operator(&self, name: &str) -> bool {
         let removed = self.ops.write().unwrap().remove(name).is_some();
         if removed {
@@ -325,8 +468,7 @@ impl SamplingService {
             respond: rtx,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        // if the dispatcher is gone the Ticket will report the failure
-        let _ = self.tx.as_ref().unwrap().send(req);
+        self.tx.as_ref().unwrap().send(req);
         Ticket { rx: rrx }
     }
 
@@ -335,21 +477,22 @@ impl SamplingService {
         &self.metrics
     }
 
-    /// Graceful shutdown: drains in-flight requests, then retires the
-    /// warmer (it finishes any build already in progress first).
+    /// Graceful shutdown: drains in-flight requests, then the warm pool
+    /// (which finishes any builds already in progress first).
     pub fn shutdown(mut self) {
         self.stop_threads();
     }
 
     fn stop_threads(&mut self) {
+        // order matters: close both event channels first (the async
+        // executor exits only when its intake *and* warm-router tasks see
+        // the close), then join the dispatcher, then drain the warm pool.
         drop(self.tx.take());
+        drop(self.warm_tx.take());
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
-        drop(self.warmer_tx.take());
-        if let Some(h) = self.warmer.take() {
-            let _ = h.join();
-        }
+        drop(self.warm_pool.take());
     }
 }
 
@@ -359,6 +502,40 @@ impl Drop for SamplingService {
     }
 }
 
+/// A shard's effective flush threshold: the AIMD controller's per-shard
+/// ceiling when adaptive batching is on (the workers update it from
+/// observed flush latency), else the static `max_batch`.
+fn effective_ceiling(config: &ServiceConfig, metrics: &Metrics, label: &str) -> usize {
+    if config.adaptive.is_some() {
+        metrics.batch_ceiling(label).unwrap_or(config.max_batch).min(config.max_batch)
+    } else {
+        config.max_batch
+    }
+}
+
+/// A shard's effective flush deadline window: the wait controller's
+/// per-shard value when adaptive waits are on, else the static `max_wait`.
+fn effective_wait(config: &ServiceConfig, metrics: &Metrics, label: &str) -> Duration {
+    if config.adaptive_wait.is_some() {
+        metrics.shard_wait(label).unwrap_or(config.max_wait).min(config.max_wait)
+    } else {
+        config.max_wait
+    }
+}
+
+/// One wait-controller step, gated on the config knob. `full_flush` means
+/// the batch hit its ceiling before the deadline (shrink the wait); a short
+/// deadline flush stretches it.
+fn tune_wait(config: &ServiceConfig, metrics: &Metrics, label: &str, full_flush: bool) {
+    if let Some(aw) = &config.adaptive_wait {
+        metrics.tune_max_wait(label, full_flush, aw.min_wait, config.max_wait);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded backend (pre-`exec` baseline, behind `DispatchBackend::Threaded`)
+// ---------------------------------------------------------------------------
+
 /// Dispatcher-side shard: pending requests plus the precomputed metrics
 /// label (built once per shard, not once per arrival).
 struct Shard {
@@ -366,12 +543,14 @@ struct Shard {
     requests: Vec<Request>,
 }
 
-/// Send one shard's queue off as a batch.
+/// Send one shard's queue off as a batch on the worker pool.
 fn flush_shard(
     key: &ShardKey,
     shards: &mut HashMap<ShardKey, Shard>,
-    btx: &Sender<Batch>,
-    metrics: &Metrics,
+    config: &Arc<ServiceConfig>,
+    ops: &OpMap,
+    pool: &TaskPool,
+    metrics: &Arc<Metrics>,
 ) {
     if let Some(shard) = shards.remove(key) {
         if shard.requests.is_empty() {
@@ -381,78 +560,83 @@ fn flush_shard(
         // update-only: flushing a queue that raced a deregistration's
         // prune_shard must not resurrect the pruned depth entry
         metrics.record_shard_drained(&shard.label);
-        let _ = btx.send(Batch { op_name: key.0.clone(), kind: key.1, requests: shard.requests });
+        let batch = Batch { op_name: key.0.clone(), kind: key.1, requests: shard.requests };
+        let (o, c, m) = (ops.clone(), config.clone(), metrics.clone());
+        pool.submit(move || execute_batch(&o, &c, batch, &m));
     }
 }
 
-/// Flush every shard whose oldest request has waited at least `max_wait`,
-/// and return the earliest flush deadline still pending — the single source
-/// of truth for the dispatcher's next recv timeout.
+/// Flush every shard whose oldest request has waited at least its effective
+/// wait, and return the earliest flush deadline still pending — the single
+/// source of truth for the dispatcher's next recv timeout.
 fn flush_expired(
     shards: &mut HashMap<ShardKey, Shard>,
-    max_wait: Duration,
-    btx: &Sender<Batch>,
-    metrics: &Metrics,
+    config: &Arc<ServiceConfig>,
+    ops: &OpMap,
+    pool: &TaskPool,
+    metrics: &Arc<Metrics>,
 ) -> Option<Instant> {
     let now = Instant::now();
     let expired: Vec<ShardKey> = shards
         .iter()
-        .filter(|(_, s)| s.requests.first().map(|r| r.enqueued + max_wait <= now).unwrap_or(false))
+        .filter(|(_, s)| {
+            s.requests
+                .first()
+                .map(|r| r.enqueued + effective_wait(config, metrics, &s.label) <= now)
+                .unwrap_or(false)
+        })
         .map(|(k, _)| k.clone())
         .collect();
     for key in expired {
-        flush_shard(&key, shards, btx, metrics);
+        // a deadline flush by definition came up short of its ceiling:
+        // stretch the shard's wait (guarded against resurrecting a pruned
+        // entry, same contract as the AIMD tune in execute_batch)
+        if config.adaptive_wait.is_some() {
+            if let Some(s) = shards.get(&key) {
+                let registry = ops.read().unwrap();
+                if registry.contains_key(&key.0) {
+                    tune_wait(config, metrics, &s.label, false);
+                }
+            }
+        }
+        flush_shard(&key, shards, config, ops, pool, metrics);
     }
-    shards.values().filter_map(|s| s.requests.first().map(|r| r.enqueued + max_wait)).min()
+    shards
+        .values()
+        .filter_map(|s| {
+            s.requests.first().map(|r| r.enqueued + effective_wait(config, metrics, &s.label))
+        })
+        .min()
 }
 
-fn dispatcher_loop(
-    config: ServiceConfig,
+fn dispatcher_threaded(
+    config: Arc<ServiceConfig>,
     ops: OpMap,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
-    // worker pool
-    let (btx, brx) = mpsc::channel::<Batch>();
-    let brx = Arc::new(Mutex::new(brx));
-    let stop = Arc::new(AtomicBool::new(false));
-    let mut workers = Vec::new();
-    for _ in 0..config.workers.max(1) {
-        let brx = brx.clone();
-        let ops = ops.clone();
-        let metrics = metrics.clone();
-        let cfg = config.clone();
-        let stop = stop.clone();
-        workers.push(std::thread::spawn(move || loop {
-            let batch = {
-                let guard = brx.lock().unwrap();
-                match guard.recv_timeout(Duration::from_millis(20)) {
-                    Ok(b) => b,
-                    Err(RecvTimeoutError::Timeout) => {
-                        if stop.load(Ordering::Acquire) {
-                            return;
-                        }
-                        continue;
-                    }
-                    Err(RecvTimeoutError::Disconnected) => return,
-                }
-            };
-            execute_batch(&ops, &cfg, batch, &metrics);
-        }));
-    }
+    // FIFO worker pool: workers park between batches (no poll interval; the
+    // pool drains on drop, which is what flushes in-flight work at shutdown)
+    let pool = TaskPool::new("ciq-batch", config.workers.max(1), TaskOrder::Fifo);
 
     // sharded batching loop: one queue per (operator, kind)
-    let idle_poll = Duration::from_millis(50);
     let mut shards: HashMap<ShardKey, Shard> = HashMap::new();
     // Deadline-aware receive: wake when the *oldest pending* request's flush
-    // deadline expires, never a fixed max_wait after the most recent arrival.
+    // deadline expires; with nothing pending, block outright (no idle poll).
     let mut next_deadline: Option<Instant> = None;
     loop {
-        let timeout = next_deadline
-            .map(|deadline| deadline.saturating_duration_since(Instant::now()))
-            .unwrap_or(idle_poll);
-        match rx.recv_timeout(timeout) {
+        let received = match next_deadline {
+            Some(deadline) => {
+                rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
+            }
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+        match received {
             Ok(req) => {
+                metrics.dispatcher_wakeups.fetch_add(1, Ordering::Relaxed);
+                // the flush deadline a newly-nonempty shard just acquired
+                // (its oldest request's arrival + its effective wait)
+                let mut new_first_deadline: Option<Instant> = None;
                 {
                     // The registry guard spans the membership check *and* the
                     // shard/telemetry writes: deregistration removes the map
@@ -479,59 +663,271 @@ fn dispatcher_loop(
                         shard.requests.push(req);
                         let depth = shard.requests.len();
                         metrics.record_shard_depth(&shard.label, depth);
-                        // Effective flush threshold: the AIMD controller's
-                        // per-shard ceiling when adaptive batching is on (the
-                        // workers update it from observed flush latency), else
-                        // the static max_batch.
-                        let ceiling = if config.adaptive.is_some() {
-                            metrics.batch_ceiling(&shard.label).unwrap_or(config.max_batch).min(config.max_batch)
-                        } else {
-                            config.max_batch
-                        };
+                        let ceiling = effective_ceiling(&config, &metrics, &shard.label);
                         if depth >= ceiling {
-                            flush_shard(&key, &mut shards, &btx, &metrics);
+                            // full flush: demand filled the batch before the
+                            // deadline — shrink the shard's wait
+                            tune_wait(&config, &metrics, &shard.label, true);
+                            flush_shard(&key, &mut shards, &config, &ops, &pool, &metrics);
+                        } else if depth == 1 {
+                            // first enqueue: this shard's own deadline may be
+                            // *earlier* than the one currently armed (per-shard
+                            // adaptive waits can differ), so fold it in below
+                            // instead of assuming the newest arrival always
+                            // expires last.
+                            let wait = effective_wait(&config, &metrics, &shard.label);
+                            new_first_deadline = Some(shard.requests[0].enqueued + wait);
                         }
                     }
+                }
+                if let Some(d) = new_first_deadline {
+                    next_deadline = Some(next_deadline.map_or(d, |nd| nd.min(d)));
                 }
                 // Deadlines are re-checked after *every* arrival — a steady
                 // trickle faster than max_wait can no longer starve a
                 // sub-max_batch shard of its flush — but the O(shards) scan
-                // only runs once the known earliest deadline has passed (a
-                // new arrival's own deadline, now + max_wait, is never the
-                // one expiring; a stale-early deadline from a max_batch flush
-                // just wakes the loop once ahead of time and self-corrects).
+                // only runs once the known earliest deadline has passed (an
+                // arrival into an already-nonempty shard never moves the
+                // earliest deadline up, a newly-nonempty shard's deadline was
+                // just folded in above, and a stale-early deadline from a
+                // max_batch flush just wakes the loop once ahead of time and
+                // self-corrects).
                 match next_deadline {
                     Some(deadline) if deadline > Instant::now() => {}
                     _ => {
                         next_deadline =
-                            flush_expired(&mut shards, config.max_wait, &btx, &metrics);
+                            flush_expired(&mut shards, &config, &ops, &pool, &metrics);
                     }
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                next_deadline = flush_expired(&mut shards, config.max_wait, &btx, &metrics);
+                // a flush deadline expired. A stale deadline (its shard
+                // already full-flushed) can land here with nothing pending:
+                // count a fire only when some shard still holds requests, so
+                // the metric keeps its "idle adds zero" contract — and
+                // `dispatcher_wakeups` stays arrivals-only on both backends.
+                if !shards.is_empty() {
+                    metrics.timer_fires.fetch_add(1, Ordering::Relaxed);
+                }
+                next_deadline = flush_expired(&mut shards, &config, &ops, &pool, &metrics);
             }
             Err(RecvTimeoutError::Disconnected) => {
                 // drain remaining
                 let keys: Vec<ShardKey> = shards.keys().cloned().collect();
                 for key in keys {
-                    flush_shard(&key, &mut shards, &btx, &metrics);
+                    flush_shard(&key, &mut shards, &config, &ops, &pool, &metrics);
                 }
                 break;
             }
         }
     }
-    drop(btx);
-    stop.store(true, Ordering::Release);
-    for w in workers {
-        let _ = w.join();
+    // pool drop: drains queued batches, then joins the workers
+}
+
+// ---------------------------------------------------------------------------
+// Async backend (the default): one exec thread multiplexing all shards
+// ---------------------------------------------------------------------------
+
+/// Everything the async dispatcher's tasks and closures share.
+struct DispatchCtx {
+    config: Arc<ServiceConfig>,
+    ops: OpMap,
+    metrics: Arc<Metrics>,
+    pool: Arc<TaskPool>,
+    /// Monotonic shard-incarnation counter (executor thread only). A
+    /// deadline task only flushes the incarnation it was armed for: a timer
+    /// that fired but was polled *after* a full flush re-created its shard
+    /// must not steal the successor's fresh queue.
+    shard_gen: Cell<u64>,
+}
+
+/// Dispatcher-side shard state for the async backend: the queue plus the
+/// cancel handle of the armed flush deadline (armed on first enqueue,
+/// cancelled in O(1) by a full flush) and the incarnation tag its deadline
+/// task checks before flushing.
+struct AShard {
+    label: String,
+    requests: Vec<Request>,
+    timer: Option<exec::TimerCancel>,
+    gen: u64,
+}
+
+type AsyncShards = Rc<RefCell<HashMap<ShardKey, AShard>>>;
+
+/// Hand a flushed queue to the worker pool.
+fn dispatch_batch(ctx: &DispatchCtx, key: &ShardKey, label: &str, requests: Vec<Request>) {
+    if requests.is_empty() {
+        return;
+    }
+    ctx.metrics.record_batch(requests.len());
+    // update-only: must not resurrect a pruned depth entry (see threaded)
+    ctx.metrics.record_shard_drained(label);
+    let batch = Batch { op_name: key.0.clone(), kind: key.1, requests };
+    let (o, c, m) = (ctx.ops.clone(), ctx.config.clone(), ctx.metrics.clone());
+    ctx.pool.submit(move || execute_batch(&o, &c, batch, &m));
+}
+
+/// Route one arrival: reject unknown operators, enqueue into the shard,
+/// full-flush at the ceiling (cancelling the armed deadline), or arm the
+/// shard's flush deadline on first enqueue.
+fn route_async(
+    handle: &exec::Handle,
+    ctx: &Rc<DispatchCtx>,
+    shards: &AsyncShards,
+    req: Request,
+) {
+    // Same prune-ordering contract as the threaded backend: the registry
+    // guard spans the membership check and every shard/telemetry write.
+    let registry = ctx.ops.read().unwrap();
+    if !registry.contains_key(&req.op_name) {
+        ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(Err(crate::Error::Invalid(format!(
+            "unknown operator '{}'",
+            req.op_name
+        ))));
+        return;
+    }
+    let key = (req.op_name.clone(), req.kind);
+    let mut st = shards.borrow_mut();
+    let shard = st.entry(key.clone()).or_insert_with(|| {
+        let gen = ctx.shard_gen.get();
+        ctx.shard_gen.set(gen + 1);
+        AShard { label: shard_label(&key.0, key.1), requests: Vec::new(), timer: None, gen }
+    });
+    shard.requests.push(req);
+    let depth = shard.requests.len();
+    ctx.metrics.record_shard_depth(&shard.label, depth);
+    let ceiling = effective_ceiling(&ctx.config, &ctx.metrics, &shard.label);
+    if depth >= ceiling {
+        // full flush: cancel the armed deadline (O(1) in the wheel) and
+        // shrink the shard's wait — demand beat the clock
+        let mut shard = st.remove(&key).unwrap();
+        drop(st);
+        if let Some(t) = shard.timer.take() {
+            t.cancel();
+        }
+        tune_wait(&ctx.config, &ctx.metrics, &shard.label, true);
+        dispatch_batch(ctx, &key, &shard.label, shard.requests);
+    } else if depth == 1 {
+        // first enqueue: this shard arms its own flush deadline, exactly
+        // `effective_wait` after the oldest request's arrival
+        let shard = st.get_mut(&key).unwrap();
+        let wait = effective_wait(&ctx.config, &ctx.metrics, &shard.label);
+        let deadline = shard.requests[0].enqueued + wait;
+        let (sleep, cancel) = handle.timer_at(deadline);
+        shard.timer = Some(cancel);
+        let fgen = shard.gen;
+        drop(st);
+        let (fctx, fshards, fkey) = (ctx.clone(), shards.clone(), key.clone());
+        handle.spawn(async move {
+            if !sleep.await {
+                return; // cancelled: a full flush (or shutdown) beat the clock
+            }
+            let flushed = {
+                let mut st = fshards.borrow_mut();
+                // only flush the incarnation this timer was armed for: if
+                // the timer fired but a full flush (whose cancel arrived
+                // too late) re-created the shard before this task polled,
+                // the successor owns its own fresh deadline
+                if st.get(&fkey).map(|s| s.gen) == Some(fgen) {
+                    st.remove(&fkey).map(|mut s| {
+                        s.timer = None;
+                        s
+                    })
+                } else {
+                    None
+                }
+            };
+            let Some(shard) = flushed else {
+                return; // raced a full flush that already emptied the shard
+            };
+            if shard.requests.is_empty() {
+                return;
+            }
+            fctx.metrics.timer_fires.fetch_add(1, Ordering::Relaxed);
+            // a deadline flush came up short of its ceiling: stretch the
+            // wait (guarded against resurrecting pruned telemetry)
+            if fctx.config.adaptive_wait.is_some() {
+                let registry = fctx.ops.read().unwrap();
+                if registry.contains_key(&fkey.0) {
+                    tune_wait(&fctx.config, &fctx.metrics, &shard.label, false);
+                }
+            }
+            dispatch_batch(&fctx, &fkey, &shard.label, shard.requests);
+        });
     }
 }
 
+fn dispatcher_async(
+    config: Arc<ServiceConfig>,
+    ops: OpMap,
+    mut rx: exec::channel::Receiver<Request>,
+    warm_rx: Option<exec::channel::Receiver<WarmJob>>,
+    warm_pool: Option<Arc<TaskPool>>,
+    metrics: Arc<Metrics>,
+) {
+    let executor = exec::Executor::new();
+    let handle = executor.handle();
+    // expose executor-layer liveness (parks/wakeups/polls) so tests can pin
+    // the zero-idle-work property below the coordinator's own counters
+    metrics.set_exec_stats(executor.stats());
+    let pool = Arc::new(TaskPool::new("ciq-batch", config.workers.max(1), TaskOrder::Fifo));
+    let ctx = Rc::new(DispatchCtx {
+        config: config.clone(),
+        ops: ops.clone(),
+        metrics: metrics.clone(),
+        pool,
+        shard_gen: Cell::new(0),
+    });
+    let shards: AsyncShards = Rc::new(RefCell::new(HashMap::new()));
+
+    // Warm router: registration events arrive like requests (a channel wake,
+    // not a poll) and feed the bounded newest-first warm pool. Deliberately
+    // routed through the executor rather than submitted straight to the pool
+    // (which the threaded backend does): the warmer is an executor task
+    // feeding a work pool, so registrations share the dispatcher's single
+    // event source and ordering with request traffic.
+    if let (Some(mut wrx), Some(wpool)) = (warm_rx, warm_pool) {
+        let (wops, wcfg, wmet) = (ops, config, metrics);
+        handle.spawn(async move {
+            while let Some((name, entry)) = wrx.recv().await {
+                let (o, c, m) = (wops.clone(), wcfg.clone(), wmet.clone());
+                wpool.submit(move || warm_entry(&name, &entry, &o, &c, &m));
+            }
+        });
+    }
+
+    // intake: one task multiplexing every shard's arrivals
+    let (ictx, ishards, ihandle) = (ctx.clone(), shards.clone(), handle.clone());
+    handle.spawn(async move {
+        while let Some(req) = rx.recv().await {
+            ictx.metrics.dispatcher_wakeups.fetch_add(1, Ordering::Relaxed);
+            route_async(&ihandle, &ictx, &ishards, req);
+        }
+        // service handle dropped: flush whatever is still queued and cancel
+        // the armed deadlines so their tasks retire
+        let drained: Vec<(ShardKey, AShard)> = ishards.borrow_mut().drain().collect();
+        for (key, mut shard) in drained {
+            if let Some(t) = shard.timer.take() {
+                t.cancel();
+            }
+            dispatch_batch(&ictx, &key, &shard.label, shard.requests);
+        }
+    });
+
+    // runs until intake, warm router, and every deadline task have retired
+    executor.run();
+    // ctx (and with it the batch pool) drops here: queued batches drain
+}
+
+// ---------------------------------------------------------------------------
+// Shared solve/warm machinery
+// ---------------------------------------------------------------------------
+
 /// Fill `entry`'s context if still empty, returning `(context, estimation
 /// MVMs the build spent, whether this call built it)`. The single shared
-/// fill path for the batch workers and the background warmer: holding the
-/// per-operator lock across the estimation means whoever arrives second
+/// fill path for the batch workers and the background warm pool: holding
+/// the per-operator lock across the estimation means whoever arrives second
 /// waits instead of duplicating the build. `on_build` fires just before a
 /// fallible build starts (the batch path records its cache miss there, so
 /// repeated estimation on a failing operator stays visible in telemetry).
@@ -556,7 +952,7 @@ fn ensure_context(
 }
 
 /// Batch-path wrapper around [`ensure_context`]: records cache hit/miss
-/// telemetry (those count *batch* economics — the warmer never touches
+/// telemetry (those count *batch* economics — the warm pool never touches
 /// them).
 fn cached_context(
     entry: &OpEntry,
@@ -572,38 +968,35 @@ fn cached_context(
     Ok(ctx)
 }
 
-/// The background warmer: drains registration events and builds each fresh
-/// entry's solver context off the request path. An entry that has already
-/// been replaced or deregistered by the time its job is popped is skipped —
-/// a burst of `replace_operator` calls must not make the warmer burn full
-/// builds on orphaned operator versions while the live one waits. Exits
-/// when the service handle drops its sender.
-fn warmer_loop(
-    rx: Receiver<(String, Arc<OpEntry>)>,
-    ops: OpMap,
-    ciq_opts: CiqOptions,
-    policy: SolverPolicy,
-    metrics: Arc<Metrics>,
+/// One warm job: build `entry`'s solver context off the request path. An
+/// entry that has already been replaced or deregistered by the time the job
+/// runs is skipped — a burst of `replace_operator` calls must not burn full
+/// builds on orphaned operator versions while the live one waits (the LIFO
+/// pool pops the newest registration first for the same reason).
+fn warm_entry(
+    name: &str,
+    entry: &Arc<OpEntry>,
+    ops: &OpMap,
+    config: &ServiceConfig,
+    metrics: &Metrics,
 ) {
-    let solver = Ciq::new(ciq_opts);
-    while let Ok((name, entry)) = rx.recv() {
-        let live = ops
-            .read()
-            .unwrap()
-            .get(&name)
-            .map(|current| Arc::ptr_eq(current, &entry))
-            .unwrap_or(false);
-        if !live {
-            continue;
+    let live = ops
+        .read()
+        .unwrap()
+        .get(name)
+        .map(|current| Arc::ptr_eq(current, entry))
+        .unwrap_or(false);
+    if !live {
+        return;
+    }
+    let solver = Ciq::new(config.ciq.clone());
+    match ensure_context(entry, &solver, &config.policy, || {}) {
+        Ok(_) => {
+            metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
         }
-        match ensure_context(&entry, &solver, &policy, || {}) {
-            Ok(_) => {
-                metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(_) => {
-                // the next batch retries inline and surfaces the error
-                metrics.warm_failures.fetch_add(1, Ordering::Relaxed);
-            }
+        Err(_) => {
+            // the next batch retries inline and surfaces the error
+            metrics.warm_failures.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -659,8 +1052,8 @@ fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Me
         policy => cached_context(&entry, &solver, policy, metrics),
     };
     // The AIMD clock starts *after* the context is in hand: one-time build
-    // cost (or time blocked behind the warmer's per-operator mutex) is not
-    // flush latency and must not halve the shard's ceiling.
+    // cost (or time blocked behind the warm pool's per-operator mutex) is
+    // not flush latency and must not halve the shard's ceiling.
     let flush_started = Instant::now();
     let result = ctx_res.and_then(|ctx| solver.solve_block(op.as_ref(), &b, kind, &ctx));
     match result {
@@ -771,7 +1164,7 @@ mod tests {
             workers: 1,
             ciq: CiqOptions { tol: 1e-8, ..Default::default() },
             // this test pins the *inline* first-batch estimation semantics,
-            // so keep the background warmer out of the race
+            // so keep the background warm pool out of the race
             warm_on_register: false,
             ..Default::default()
         };
@@ -886,10 +1279,10 @@ mod tests {
             ..Default::default() // warm_on_register: true
         };
         let svc = SamplingService::start(cfg, ops);
-        // wait on the warmer's completion signal, not on a sleep guess
+        // wait on the warm pool's completion signal, not on a sleep guess
         let t0 = Instant::now();
         while svc.metrics().warmed_operators.load(Ordering::Relaxed) == 0 {
-            assert!(t0.elapsed() < Duration::from_secs(10), "warmer never completed");
+            assert!(t0.elapsed() < Duration::from_secs(10), "warm pool never completed");
             std::thread::sleep(Duration::from_millis(2));
         }
         let warm_cost = counter.matvec_count();
@@ -944,6 +1337,64 @@ mod tests {
         assert!(svc.metrics().batch_ceiling("k/Whiten").is_none());
         assert!(svc.metrics().shard_depths().is_empty());
         svc.shutdown();
+    }
+
+    #[test]
+    fn adaptive_wait_shrinks_on_full_flushes_and_stretches_when_short() {
+        // Full flushes (instant bursts of max_batch) must walk the shard's
+        // wait down toward the floor; short deadline flushes walk it back up
+        // toward the static cap. Runs on both backends.
+        for backend in [DispatchBackend::Async, DispatchBackend::Threaded] {
+            let n = 12;
+            let (op, _) = make_op(n, 71);
+            let mut ops = HashMap::new();
+            ops.insert("k".to_string(), op);
+            let max_wait = Duration::from_millis(4);
+            let cfg = ServiceConfig {
+                max_batch: 4,
+                max_wait,
+                workers: 1,
+                ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+                adaptive_wait: Some(AdaptiveWaitConfig { min_wait: Duration::from_micros(100) }),
+                backend,
+                ..Default::default()
+            };
+            let svc = SamplingService::start(cfg, ops);
+            let mut rng = Pcg64::seeded(72);
+            // bursts of exactly max_batch: every flush is full
+            for _ in 0..3 {
+                let tickets: Vec<Ticket> = (0..4)
+                    .map(|_| {
+                        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                        svc.submit("k", ReqKind::Whiten, b)
+                    })
+                    .collect();
+                for t in tickets {
+                    t.wait().unwrap();
+                }
+            }
+            let after_full = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
+            assert!(
+                after_full < max_wait,
+                "[{backend:?}] full flushes must shrink the wait: {after_full:?}"
+            );
+            // singletons: every flush is a short deadline flush
+            for _ in 0..8 {
+                let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
+            }
+            let after_short = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
+            assert!(
+                after_short > after_full,
+                "[{backend:?}] short deadline flushes must stretch the wait: \
+                 {after_full:?} → {after_short:?}"
+            );
+            assert!(after_short <= max_wait, "[{backend:?}] wait exceeded the static cap");
+            // deregistration prunes the wait telemetry too
+            assert!(svc.deregister_operator("k"));
+            assert!(svc.metrics().shard_wait("k/Whiten").is_none());
+            svc.shutdown();
+        }
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! An MPSC channel whose receive side is a `Future`: the executor's event
+//! source.
+//!
+//! `Sender::send` (callable from any thread) pushes the value and wakes the
+//! waker the receiver registered on its last pending poll — which, for a
+//! task on [`crate::exec::Executor`], unparks the executor thread. This is
+//! what lets the coordinator's intake task *sleep* between arrivals instead
+//! of bounding a `recv_timeout` poll loop: an idle channel generates zero
+//! wakeups.
+//!
+//! Single consumer: one waker slot, owned by whichever `recv` future polled
+//! last. Dropping the last `Sender` closes the channel; `recv` then drains
+//! the queue and resolves `None`. Dropping the `Receiver` makes every
+//! subsequent `send` return the value to the caller as an error.
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+struct ChanState<T> {
+    queue: VecDeque<T>,
+    waker: Option<Waker>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<ChanState<T>>,
+}
+
+/// Create a channel. The `Sender` is cloneable and `Send`; the `Receiver`
+/// is single-consumer.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(ChanState {
+            queue: VecDeque::new(),
+            waker: None,
+            senders: 1,
+            rx_alive: true,
+        }),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+/// Producer half. Cloneable; usable from any thread.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Sender<T> {
+    /// Push a value and wake the receiver. Returns the value back if the
+    /// receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), T> {
+        let waker = {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.rx_alive {
+                return Err(value);
+            }
+            st.queue.push_back(value);
+            st.waker.take()
+        };
+        // wake outside the lock: the waker may grab the executor's own locks
+        if let Some(w) = waker {
+            w.wake();
+        }
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let waker = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.senders -= 1;
+            if st.senders == 0 {
+                // closed: wake the receiver so a pending recv resolves None
+                st.waker.take()
+            } else {
+                None
+            }
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+/// Consumer half.
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Receiver<T> {
+    /// A future resolving to the next value, or `None` once every sender
+    /// has dropped and the queue is drained.
+    pub fn recv(&mut self) -> Recv<'_, T> {
+        Recv { rx: self }
+    }
+
+    /// Non-blocking pop (used by drains and tests).
+    pub fn try_recv(&mut self) -> Option<T> {
+        self.shared.state.lock().unwrap().queue.pop_front()
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().rx_alive = false;
+    }
+}
+
+/// Future returned by [`Receiver::recv`].
+pub struct Recv<'a, T> {
+    rx: &'a mut Receiver<T>,
+}
+
+impl<T> Future for Recv<'_, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        let mut st = this.rx.shared.state.lock().unwrap();
+        if let Some(v) = st.queue.pop_front() {
+            return Poll::Ready(Some(v));
+        }
+        if st.senders == 0 {
+            return Poll::Ready(None);
+        }
+        st.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn send_recv_in_order_and_close_resolves_none() {
+        let (tx, mut rx) = channel::<u32>();
+        let exec = Executor::new();
+        let got: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(Vec::new()));
+        let got2 = got.clone();
+        exec.handle().spawn(async move {
+            while let Some(v) = rx.recv().await {
+                got2.borrow_mut().push(v);
+            }
+        });
+        for v in [1u32, 2, 3] {
+            tx.send(v).unwrap();
+        }
+        drop(tx);
+        exec.run();
+        assert_eq!(*got.borrow(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cross_thread_send_wakes_parked_executor() {
+        let (tx, mut rx) = channel::<u64>();
+        let exec = Executor::new();
+        let got: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        let got2 = got.clone();
+        exec.handle().spawn(async move {
+            while let Some(v) = rx.recv().await {
+                got2.borrow_mut().push(v);
+            }
+        });
+        // sender thread fires after the executor has certainly parked
+        let sender = std::thread::spawn(move || {
+            for v in 0..8u64 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                tx.send(v).unwrap();
+            }
+            // tx drops here: executor run loop terminates
+        });
+        exec.run();
+        sender.join().unwrap();
+        assert_eq!(*got.borrow(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn send_after_receiver_drop_errors_with_value() {
+        let (tx, rx) = channel::<String>();
+        drop(rx);
+        match tx.send("orphan".to_string()) {
+            Err(v) => assert_eq!(v, "orphan"),
+            Ok(()) => panic!("send to a dropped receiver must fail"),
+        }
+    }
+}

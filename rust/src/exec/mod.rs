@@ -1,0 +1,440 @@
+//! `exec` — a dependency-free, single-threaded async executor with a
+//! hierarchical timer wheel.
+//!
+//! The serving layer's problem is *waiting*, not computing: the coordinator
+//! multiplexes many shard deadlines and channel arrivals, and a thread+mpsc
+//! dispatcher pays a wakeup per `recv_timeout` tick and an O(shards)
+//! deadline scan per event. This module gives one thread the machinery to
+//! wait on all of it at once:
+//!
+//! * **Tasks** are plain `Future<Output = ()>`s (no `Send` bound — the
+//!   executor is single-threaded by design), stored as `Pin<Box<dyn
+//!   Future>>` and polled through std's `Waker` protocol via
+//!   [`std::task::Wake`].
+//! * **Wakes are cross-thread**: a waker pushes the task id onto a shared
+//!   ready queue and notifies the executor's condvar, so mpsc senders on
+//!   other threads ([`channel`]) unpark the executor directly. A per-task
+//!   `queued` flag dedupes redundant wakes.
+//! * **Deadlines** live in a [`timer::TimerWheel`] (O(1) arm/cancel). The
+//!   run loop parks *exactly* until the earliest pending deadline — or
+//!   indefinitely when none is armed. An idle executor therefore performs
+//!   **zero** wakeups: no tick thread, no poll interval.
+//!
+//! Compute does not belong here: CPU-bound work (batch solves, context
+//! builds) goes to a worker pool ([`crate::util::threadpool::TaskPool`]);
+//! the executor owns the waiting. See `rust/DESIGN.md` §3.
+
+pub mod channel;
+pub mod timer;
+
+pub use timer::{TimerId, TimerWheel};
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+use std::time::{Duration, Instant};
+
+/// Executor telemetry (process-lifetime atomics, readable from any thread).
+#[derive(Default)]
+pub struct ExecStats {
+    /// Times the run loop parked with nothing ready.
+    pub parks: AtomicU64,
+    /// Times a parked run loop resumed (timer deadline or external wake).
+    pub wakeups: AtomicU64,
+    /// Task polls performed.
+    pub polls: AtomicU64,
+    /// Timers fired by the wheel.
+    pub timer_fires: AtomicU64,
+}
+
+/// Cross-thread wake state: the ready queue plus the condvar the executor
+/// thread parks on.
+struct ExecShared {
+    ready: Mutex<VecDeque<u64>>,
+    cv: Condvar,
+    stats: Arc<ExecStats>,
+}
+
+/// One task's waker: pushes the task id onto the ready queue (deduped by
+/// `queued`) and unparks the executor.
+struct TaskWaker {
+    id: u64,
+    queued: AtomicBool,
+    shared: Arc<ExecShared>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            self.shared.ready.lock().unwrap().push_back(self.id);
+            self.shared.cv.notify_one();
+        }
+    }
+}
+
+struct Task {
+    fut: Pin<Box<dyn Future<Output = ()>>>,
+    waker: Arc<TaskWaker>,
+}
+
+struct Inner {
+    shared: Arc<ExecShared>,
+    tasks: RefCell<HashMap<u64, Task>>,
+    next_task: Cell<u64>,
+    wheel: RefCell<TimerWheel>,
+}
+
+/// The executor. Create on the thread that will run it; hand [`Handle`]s
+/// to the futures it drives.
+pub struct Executor {
+    inner: Rc<Inner>,
+}
+
+/// Cloneable, non-`Send` handle for spawning tasks and arming timers from
+/// inside tasks.
+#[derive(Clone)]
+pub struct Handle {
+    inner: Rc<Inner>,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::new()
+    }
+}
+
+impl Executor {
+    /// An executor with the default 100 µs timer tick (deadline error is at
+    /// most one tick; the wheel only walks ticks while deadlines are
+    /// pending, so a fine tick costs nothing at idle).
+    pub fn new() -> Executor {
+        Executor::with_tick(Duration::from_micros(100))
+    }
+
+    /// An executor with an explicit timer-wheel tick.
+    pub fn with_tick(tick: Duration) -> Executor {
+        Executor {
+            inner: Rc::new(Inner {
+                shared: Arc::new(ExecShared {
+                    ready: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    stats: Arc::new(ExecStats::default()),
+                }),
+                tasks: RefCell::new(HashMap::new()),
+                next_task: Cell::new(0),
+                wheel: RefCell::new(TimerWheel::new(tick)),
+            }),
+        }
+    }
+
+    pub fn handle(&self) -> Handle {
+        Handle { inner: self.inner.clone() }
+    }
+
+    /// Executor telemetry; the `Arc` may outlive the executor.
+    pub fn stats(&self) -> Arc<ExecStats> {
+        self.inner.shared.stats.clone()
+    }
+
+    /// Run until every spawned task has completed.
+    ///
+    /// The loop: drain the ready queue (polling each task once), fire due
+    /// timers, and — only when nothing is ready and nothing fired — park
+    /// until the wheel's next deadline or an external wake. No deadline and
+    /// nothing ready means an *indefinite* park: zero idle wakeups.
+    pub fn run(&self) {
+        let inner = &self.inner;
+        loop {
+            // 1. drain ready tasks
+            loop {
+                let id = inner.shared.ready.lock().unwrap().pop_front();
+                let Some(id) = id else { break };
+                // remove before polling: a task that spawns (or is woken)
+                // mid-poll must not alias the tasks map borrow
+                let Some(mut task) = inner.tasks.borrow_mut().remove(&id) else {
+                    continue; // completed earlier; stale wake
+                };
+                // clear before the poll so a wake *during* the poll re-queues
+                task.waker.queued.store(false, Ordering::Release);
+                let waker = Waker::from(task.waker.clone());
+                let mut cx = Context::from_waker(&waker);
+                inner.shared.stats.polls.fetch_add(1, Ordering::Relaxed);
+                match task.fut.as_mut().poll(&mut cx) {
+                    Poll::Ready(()) => {}
+                    Poll::Pending => {
+                        inner.tasks.borrow_mut().insert(id, task);
+                    }
+                }
+            }
+            // 2. fire due timers (their wakes land on the ready queue)
+            let fired = inner.wheel.borrow_mut().advance(Instant::now());
+            if !fired.is_empty() {
+                inner.shared.stats.timer_fires.fetch_add(fired.len() as u64, Ordering::Relaxed);
+                continue;
+            }
+            if inner.tasks.borrow().is_empty() {
+                return;
+            }
+            // 3. park until the earliest deadline or an external wake
+            let deadline = inner.wheel.borrow_mut().next_deadline();
+            let ready = inner.shared.ready.lock().unwrap();
+            if !ready.is_empty() {
+                continue; // a wake slipped in between drain and park
+            }
+            inner.shared.stats.parks.fetch_add(1, Ordering::Relaxed);
+            match deadline {
+                Some(d) => {
+                    let timeout = d.saturating_duration_since(Instant::now());
+                    let (guard, _) = inner.shared.cv.wait_timeout(ready, timeout).unwrap();
+                    drop(guard);
+                }
+                None => {
+                    let guard = inner.shared.cv.wait(ready).unwrap();
+                    drop(guard);
+                }
+            }
+            inner.shared.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spawn `fut`, run the executor to quiescence, and return `fut`'s
+    /// output (tests / simple drivers).
+    pub fn block_on<T: 'static>(&self, fut: impl Future<Output = T> + 'static) -> T {
+        let out: Rc<RefCell<Option<T>>> = Rc::new(RefCell::new(None));
+        let out2 = out.clone();
+        self.handle().spawn(async move {
+            *out2.borrow_mut() = Some(fut.await);
+        });
+        self.run();
+        let v = out.borrow_mut().take();
+        v.expect("block_on future did not complete")
+    }
+}
+
+impl Handle {
+    /// Spawn a task. No `Send` bound: the executor is single-threaded.
+    pub fn spawn(&self, fut: impl Future<Output = ()> + 'static) {
+        let id = self.inner.next_task.get();
+        self.inner.next_task.set(id + 1);
+        let waker = Arc::new(TaskWaker {
+            id,
+            // born queued: we schedule it ourselves right below
+            queued: AtomicBool::new(true),
+            shared: self.inner.shared.clone(),
+        });
+        self.inner.tasks.borrow_mut().insert(id, Task { fut: Box::pin(fut), waker });
+        self.inner.shared.ready.lock().unwrap().push_back(id);
+        self.inner.shared.cv.notify_one();
+    }
+
+    /// A future that resolves `true` after `d` elapses (no cancel handle).
+    pub fn sleep(&self, d: Duration) -> Sleep {
+        self.timer_at(Instant::now() + d).0
+    }
+
+    /// Arm a timer for `deadline` **now** (before any poll), returning the
+    /// sleep future and an O(1) cancel handle. The future resolves `true`
+    /// when the timer fires, `false` when cancelled.
+    pub fn timer_at(&self, deadline: Instant) -> (Sleep, TimerCancel) {
+        let state = Arc::new(SleepShared { inner: Mutex::new(SleepInner { done: None, waker: None }) });
+        let wheel_waker = Waker::from(Arc::new(SleepWake(state.clone())));
+        let id = self.inner.wheel.borrow_mut().arm(deadline, wheel_waker);
+        (
+            Sleep { state: state.clone() },
+            TimerCancel { id, state, inner: self.inner.clone() },
+        )
+    }
+
+    /// Timers currently armed (tests).
+    pub fn pending_timers(&self) -> usize {
+        self.inner.wheel.borrow().pending()
+    }
+}
+
+struct SleepInner {
+    /// `Some(true)` fired, `Some(false)` cancelled, `None` pending.
+    done: Option<bool>,
+    waker: Option<Waker>,
+}
+
+struct SleepShared {
+    inner: Mutex<SleepInner>,
+}
+
+impl SleepShared {
+    fn finish(&self, fired: bool) {
+        let waker = {
+            let mut st = self.inner.lock().unwrap();
+            if st.done.is_some() {
+                return; // fire/cancel race: first outcome wins
+            }
+            st.done = Some(fired);
+            st.waker.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+/// The waker the wheel holds for a [`Sleep`]: marks it fired, then wakes
+/// the task awaiting it.
+struct SleepWake(Arc<SleepShared>);
+
+impl Wake for SleepWake {
+    fn wake(self: Arc<Self>) {
+        self.0.finish(true);
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.0.finish(true);
+    }
+}
+
+/// Future from [`Handle::sleep`] / [`Handle::timer_at`]; resolves `true`
+/// on fire, `false` on cancel.
+pub struct Sleep {
+    state: Arc<SleepShared>,
+}
+
+impl Future for Sleep {
+    type Output = bool;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<bool> {
+        let mut st = self.state.inner.lock().unwrap();
+        if let Some(fired) = st.done {
+            return Poll::Ready(fired);
+        }
+        st.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+/// O(1) cancel handle for an armed timer; resolves its [`Sleep`] with
+/// `false`. Single-threaded like the executor it points into.
+pub struct TimerCancel {
+    id: TimerId,
+    state: Arc<SleepShared>,
+    inner: Rc<Inner>,
+}
+
+impl TimerCancel {
+    /// Cancel the timer. Returns whether it was still pending (false if it
+    /// already fired or was already cancelled). Either way the `Sleep`
+    /// future is resolved — an awaiting task never hangs on a cancelled
+    /// timer.
+    pub fn cancel(self) -> bool {
+        let was_pending = self.inner.wheel.borrow_mut().cancel(self.id);
+        self.state.finish(false);
+        was_pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_run_and_spawn_nested() {
+        let exec = Executor::new();
+        let count = Rc::new(Cell::new(0u32));
+        let (c1, h) = (count.clone(), exec.handle());
+        exec.handle().spawn(async move {
+            c1.set(c1.get() + 1);
+            let c2 = c1.clone();
+            h.spawn(async move {
+                c2.set(c2.get() + 10);
+            });
+        });
+        exec.run();
+        assert_eq!(count.get(), 11);
+    }
+
+    #[test]
+    fn sleeps_complete_in_deadline_order() {
+        let exec = Executor::new();
+        let order: Rc<RefCell<Vec<u8>>> = Rc::new(RefCell::new(Vec::new()));
+        let h = exec.handle();
+        for (tag, ms) in [(3u8, 30u64), (1, 5), (2, 15)] {
+            let o = order.clone();
+            let sleep = h.sleep(Duration::from_millis(ms));
+            h.spawn(async move {
+                assert!(sleep.await, "uncancelled sleep must fire");
+                o.borrow_mut().push(tag);
+            });
+        }
+        exec.run();
+        assert_eq!(*order.borrow(), vec![1, 2, 3]);
+        assert_eq!(exec.stats().timer_fires.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn cancelled_timer_resolves_false_without_firing() {
+        let exec = Executor::new();
+        let h = exec.handle();
+        let (sleep, cancel) = h.timer_at(Instant::now() + Duration::from_secs(3600));
+        let outcome = Rc::new(Cell::new(None));
+        let o2 = outcome.clone();
+        h.spawn(async move {
+            o2.set(Some(sleep.await));
+        });
+        let h2 = h.clone();
+        h.spawn(async move {
+            // let the sleeper register first, then cancel from another task
+            let brief = h2.sleep(Duration::from_millis(2));
+            brief.await;
+            assert!(cancel.cancel(), "timer should still be pending");
+            assert_eq!(h2.pending_timers(), 0);
+        });
+        // completes immediately rather than hanging for an hour
+        exec.run();
+        assert_eq!(outcome.get(), Some(false));
+        assert_eq!(exec.stats().timer_fires.load(Ordering::SeqCst), 1); // only the brief sleep
+    }
+
+    #[test]
+    fn block_on_returns_value() {
+        let exec = Executor::new();
+        let h = exec.handle();
+        let v = exec.block_on(async move {
+            h.sleep(Duration::from_millis(1)).await;
+            42u64
+        });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn idle_executor_parks_without_wakeups() {
+        // an executor whose only task waits on a channel parks indefinitely:
+        // no timer fires, no polls beyond the initial one
+        let (tx, mut rx) = crate::exec::channel::channel::<u8>();
+        let exec = Executor::new();
+        let stats = exec.stats();
+        exec.handle().spawn(async move {
+            while rx.recv().await.is_some() {}
+        });
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            drop(tx); // close: lets run() terminate
+        });
+        exec.run();
+        sender.join().unwrap();
+        assert_eq!(
+            stats.timer_fires.load(Ordering::SeqCst),
+            0,
+            "idle executor fired a timer"
+        );
+        // initial poll + the close wake: nothing in between
+        assert!(
+            stats.polls.load(Ordering::SeqCst) <= 2,
+            "idle executor polled more than spawn + close"
+        );
+    }
+}

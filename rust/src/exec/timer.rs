@@ -1,0 +1,503 @@
+//! Hierarchical timer wheel: O(1) arm and cancel, amortized-O(1) expiry.
+//!
+//! The wheel is the executor's deadline store. Four levels of 64 slots each
+//! cover `64^4` ticks (~28 min at [`crate::exec::Executor::new`]'s 100 µs
+//! tick — the wheel itself takes the tick as a parameter); anything farther
+//! lands in an overflow list that is re-examined when the top level wraps.
+//! A timer at delta `d` ticks lives at level `⌊log64 d⌋`, in the slot its
+//! absolute expiry tick hashes to — so arming is a push onto one `Vec` and
+//! cancelling is a `swap_remove` through an id → position index, both O(1).
+//!
+//! [`TimerWheel::advance`] walks the tick cursor forward, firing the level-0
+//! slot at every tick and *cascading* a higher level's slot into the levels
+//! below whenever the cursor crosses that level's boundary. Entries fire in
+//! arm order within a tick (slot `Vec`s preserve insertion order; cancels
+//! use `swap_remove` but never reorder *surviving* same-tick entries
+//! relative to a fire, because a fire drains the whole slot at once).
+//!
+//! The wheel is a plain single-threaded data structure: the executor owns
+//! it, arms from futures (same thread), and fires from its run loop. Only
+//! the `Waker`s stored in entries cross threads (by `Waker`'s own contract).
+
+use std::collections::HashMap;
+use std::task::Waker;
+use std::time::{Duration, Instant};
+
+/// Slots per level (64 keeps slot math to shifts and masks).
+pub const SLOTS: usize = 64;
+/// Hierarchy depth.
+pub const LEVELS: usize = 4;
+const SLOT_BITS: u32 = 6; // log2(SLOTS)
+
+/// Handle to an armed timer, used for O(1) cancellation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
+
+struct Entry {
+    id: u64,
+    expiry_tick: u64,
+    waker: Waker,
+}
+
+/// Where an armed timer currently lives (kept exact across cascades so
+/// cancel can `swap_remove` without scanning).
+#[derive(Clone, Copy)]
+enum Pos {
+    Slot { level: usize, slot: usize, idx: usize },
+    Overflow { idx: usize },
+}
+
+/// The wheel itself. See the module docs for the level/cascade scheme.
+pub struct TimerWheel {
+    origin: Instant,
+    tick_ns: u64,
+    /// The last tick fully processed by [`Self::advance`].
+    now_tick: u64,
+    levels: Vec<Vec<Vec<Entry>>>,
+    overflow: Vec<Entry>,
+    index: HashMap<u64, Pos>,
+    next_id: u64,
+    /// Exact earliest pending expiry tick when `soonest_valid`; recomputed
+    /// lazily (one pass over the slots) after the minimum fires or cancels.
+    soonest: Option<u64>,
+    soonest_valid: bool,
+    /// Total timers ever fired (telemetry; cancelled timers never count).
+    pub fired_total: u64,
+}
+
+impl TimerWheel {
+    /// A wheel with the given tick granularity, originated `now`.
+    pub fn new(tick: Duration) -> TimerWheel {
+        TimerWheel::with_origin(tick, Instant::now())
+    }
+
+    /// A wheel with an explicit origin (deterministic tests).
+    pub fn with_origin(tick: Duration, origin: Instant) -> TimerWheel {
+        let tick_ns = (tick.as_nanos() as u64).max(1);
+        TimerWheel {
+            origin,
+            tick_ns,
+            now_tick: 0,
+            levels: (0..LEVELS).map(|_| (0..SLOTS).map(|_| Vec::new()).collect()).collect(),
+            overflow: Vec::new(),
+            index: HashMap::new(),
+            next_id: 0,
+            soonest: None,
+            soonest_valid: true,
+            fired_total: 0,
+        }
+    }
+
+    /// Ticks elapsed from the origin to `t` (saturating at zero for
+    /// pre-origin instants).
+    fn ticks_at(&self, t: Instant) -> u64 {
+        let d = t.saturating_duration_since(self.origin);
+        (d.as_nanos() / self.tick_ns as u128).min(u64::MAX as u128) as u64
+    }
+
+    fn instant_of_tick(&self, tick: u64) -> Instant {
+        self.origin + Duration::from_nanos(tick.saturating_mul(self.tick_ns))
+    }
+
+    /// Number of pending (armed, not yet fired or cancelled) timers.
+    pub fn pending(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Arm a timer: `waker` is woken once the wheel advances past
+    /// `deadline`. Deadlines at or before the current tick are rounded up
+    /// to the next tick (a timer always fires strictly after it is armed).
+    pub fn arm(&mut self, deadline: Instant, waker: Waker) -> TimerId {
+        let expiry_tick = self.ticks_at(deadline).max(self.now_tick + 1);
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.soonest_valid {
+            self.soonest = Some(self.soonest.map_or(expiry_tick, |s| s.min(expiry_tick)));
+        }
+        self.place(Entry { id, expiry_tick, waker });
+        TimerId(id)
+    }
+
+    /// Cancel an armed timer. Returns `false` if it already fired or was
+    /// already cancelled. O(1): position lookup + `swap_remove`.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        let Some(pos) = self.index.remove(&id.0) else {
+            return false;
+        };
+        let removed = self.remove_at(pos);
+        if self.soonest_valid && Some(removed.expiry_tick) == self.soonest {
+            // the cached minimum may have just left; recompute on demand
+            self.soonest_valid = false;
+        }
+        true
+    }
+
+    /// The exact earliest pending expiry tick (recomputing the lazy cache
+    /// with one pass over the slots when the previous minimum left).
+    fn soonest_tick(&mut self) -> Option<u64> {
+        if self.index.is_empty() {
+            return None;
+        }
+        if !self.soonest_valid {
+            let mut min = u64::MAX;
+            for level in &self.levels {
+                for slot in level {
+                    for e in slot {
+                        min = min.min(e.expiry_tick);
+                    }
+                }
+            }
+            for e in &self.overflow {
+                min = min.min(e.expiry_tick);
+            }
+            self.soonest = Some(min);
+            self.soonest_valid = true;
+        }
+        self.soonest
+    }
+
+    /// The instant of the earliest pending deadline, if any. Exact (no
+    /// spurious early deadlines): the executor parks precisely until this.
+    pub fn next_deadline(&mut self) -> Option<Instant> {
+        self.soonest_tick().map(|t| self.instant_of_tick(t))
+    }
+
+    /// Advance the cursor to `now`, firing every due timer (waking it and
+    /// returning its id, in fire order) and cascading higher levels at
+    /// their boundaries.
+    pub fn advance(&mut self, now: Instant) -> Vec<TimerId> {
+        let target = self.ticks_at(now);
+        let mut fired = Vec::new();
+        while self.now_tick < target {
+            // empty wheel: nothing can fire, jump straight to the target
+            let Some(soonest) = self.soonest_tick() else {
+                self.now_tick = target;
+                break;
+            };
+            // Leap over the empty stretch up to the next expiry (or the
+            // target, whichever is first): after a long park (one far
+            // timer, no traffic) walking every elapsed tick would cost
+            // O(elapsed/tick). Slot positions are cursor-relative, so the
+            // cursor cannot simply jump — every entry is re-placed against
+            // the new cursor instead (O(pending), paid once per leap).
+            // Short stretches just walk: below about one slot lap the
+            // per-tick loop is cheaper than a re-place.
+            let leap_to = (soonest - 1).min(target);
+            if leap_to > self.now_tick + SLOTS as u64 {
+                let entries = self.drain_all();
+                self.now_tick = leap_to;
+                for e in entries {
+                    self.place(e);
+                }
+            }
+            // walk tick-by-tick up to the next fire (or the target)
+            let walk_to = soonest.min(target);
+            while self.now_tick < walk_to {
+                self.now_tick += 1;
+                let t = self.now_tick;
+                // Drain the overflow list when the top level wraps: every
+                // overflow entry was ≥ 64^4 ticks out when armed, so the
+                // next wrap always precedes its expiry.
+                if t % (SLOTS as u64).pow(LEVELS as u32) == 0 && !self.overflow.is_empty() {
+                    let of = std::mem::take(&mut self.overflow);
+                    for e in of {
+                        self.index.remove(&e.id);
+                        self.replace_or_fire(e, &mut fired);
+                    }
+                }
+                // Cascade boundary-crossing levels, highest first, so an
+                // entry dropping several levels is re-placed before the
+                // level below takes its own slot this tick.
+                for level in (1..LEVELS).rev() {
+                    if t % (SLOTS as u64).pow(level as u32) == 0 {
+                        let slot = ((t >> (SLOT_BITS * level as u32)) % SLOTS as u64) as usize;
+                        let entries = std::mem::take(&mut self.levels[level][slot]);
+                        for e in entries {
+                            self.index.remove(&e.id);
+                            self.replace_or_fire(e, &mut fired);
+                        }
+                    }
+                }
+                // Fire the level-0 slot for this tick. Every entry here
+                // expires exactly now (level-0 residency implies expiry
+                // within the current lap), but stay defensive about a
+                // same-slot future lap.
+                let slot0 = (t % SLOTS as u64) as usize;
+                if !self.levels[0][slot0].is_empty() {
+                    let entries = std::mem::take(&mut self.levels[0][slot0]);
+                    for e in entries {
+                        self.index.remove(&e.id);
+                        self.replace_or_fire(e, &mut fired);
+                    }
+                }
+            }
+        }
+        fired
+    }
+
+    /// Pull every entry out of the wheel (slots + overflow), clearing the
+    /// position index — the leap in [`Self::advance`] re-places them
+    /// against the moved cursor.
+    fn drain_all(&mut self) -> Vec<Entry> {
+        let mut entries = Vec::with_capacity(self.index.len());
+        for level in &mut self.levels {
+            for slot in level {
+                entries.append(slot);
+            }
+        }
+        entries.append(&mut self.overflow);
+        self.index.clear();
+        entries
+    }
+
+    /// Re-place an entry relative to the current tick, or fire it if due.
+    /// A fire invalidates the cached minimum (the fired entry may have been
+    /// it); the next `soonest_tick` recomputes.
+    fn replace_or_fire(&mut self, e: Entry, fired: &mut Vec<TimerId>) {
+        if e.expiry_tick <= self.now_tick {
+            self.fired_total += 1;
+            self.soonest_valid = false;
+            fired.push(TimerId(e.id));
+            e.waker.wake();
+        } else {
+            self.place(e);
+        }
+    }
+
+    /// Insert into the right level/slot for its delta, recording the
+    /// position in the id index.
+    fn place(&mut self, e: Entry) {
+        let delta = e.expiry_tick - self.now_tick;
+        let id = e.id;
+        let horizon = (SLOTS as u64).pow(LEVELS as u32);
+        if delta >= horizon {
+            self.overflow.push(e);
+            self.index.insert(id, Pos::Overflow { idx: self.overflow.len() - 1 });
+            return;
+        }
+        let mut level = 0usize;
+        let mut span = SLOTS as u64;
+        while delta >= span {
+            level += 1;
+            span *= SLOTS as u64;
+        }
+        let slot = ((e.expiry_tick >> (SLOT_BITS * level as u32)) % SLOTS as u64) as usize;
+        self.levels[level][slot].push(e);
+        let idx = self.levels[level][slot].len() - 1;
+        self.index.insert(id, Pos::Slot { level, slot, idx });
+    }
+
+    /// Remove the entry at `pos` (its index entry is already gone), fixing
+    /// up the index of whichever entry `swap_remove` moved into its place.
+    fn remove_at(&mut self, pos: Pos) -> Entry {
+        match pos {
+            Pos::Slot { level, slot, idx } => {
+                let v = &mut self.levels[level][slot];
+                let e = v.swap_remove(idx);
+                if idx < v.len() {
+                    let moved = v[idx].id;
+                    self.index.insert(moved, Pos::Slot { level, slot, idx });
+                }
+                e
+            }
+            Pos::Overflow { idx } => {
+                let e = self.overflow.swap_remove(idx);
+                if idx < self.overflow.len() {
+                    let moved = self.overflow[idx].id;
+                    self.index.insert(moved, Pos::Overflow { idx });
+                }
+                e
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::task::Wake;
+
+    /// Waker that counts its wakes.
+    struct CountingWake(AtomicUsize);
+    impl Wake for CountingWake {
+        fn wake(self: Arc<Self>) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+        fn wake_by_ref(self: &Arc<Self>) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    fn counter() -> (Arc<CountingWake>, Waker) {
+        let c = Arc::new(CountingWake(AtomicUsize::new(0)));
+        (c.clone(), Waker::from(c))
+    }
+
+    fn wheel() -> (TimerWheel, Instant) {
+        let origin = Instant::now();
+        (TimerWheel::with_origin(Duration::from_millis(1), origin), origin)
+    }
+
+    fn at(origin: Instant, ticks: u64) -> Instant {
+        origin + Duration::from_millis(ticks)
+    }
+
+    #[test]
+    fn arm_fire_and_pending_accounting() {
+        let (mut w, o) = wheel();
+        let (c, wk) = counter();
+        w.arm(at(o, 5), wk);
+        assert_eq!(w.pending(), 1);
+        assert!(w.advance(at(o, 4)).is_empty(), "fired before deadline");
+        assert_eq!(c.0.load(Ordering::SeqCst), 0);
+        let fired = w.advance(at(o, 5));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(c.0.load(Ordering::SeqCst), 1);
+        assert_eq!(w.pending(), 0);
+        assert!(w.next_deadline().is_none());
+    }
+
+    #[test]
+    fn cancel_prevents_fire_and_is_o1_bookkept() {
+        let (mut w, o) = wheel();
+        let (c1, wk1) = counter();
+        let (c2, wk2) = counter();
+        let t1 = w.arm(at(o, 10), wk1);
+        let t2 = w.arm(at(o, 10), wk2);
+        assert!(w.cancel(t1));
+        assert!(!w.cancel(t1), "double cancel must be a no-op");
+        assert_eq!(w.pending(), 1);
+        let fired = w.advance(at(o, 20));
+        assert_eq!(fired, vec![t2]);
+        assert_eq!(c1.0.load(Ordering::SeqCst), 0, "cancelled timer fired");
+        assert_eq!(c2.0.load(Ordering::SeqCst), 1);
+        assert!(!w.cancel(t2), "cancelling a fired timer must return false");
+    }
+
+    #[test]
+    fn simultaneous_expiry_fires_in_arm_order() {
+        let (mut w, o) = wheel();
+        let mut ids = Vec::new();
+        for _ in 0..5 {
+            let (_, wk) = counter();
+            ids.push(w.arm(at(o, 7), wk));
+        }
+        let fired = w.advance(at(o, 7));
+        assert_eq!(fired, ids, "same-tick timers must fire in arm order");
+    }
+
+    #[test]
+    fn cascade_across_levels() {
+        let (mut w, o) = wheel();
+        // one timer per level: deltas 3 (L0), 100 (L1), 5000 (L2), 300_000 (L3)
+        let deadlines = [3u64, 100, 5000, 300_000];
+        let counters: Vec<_> = deadlines
+            .iter()
+            .map(|&d| {
+                let (c, wk) = counter();
+                (d, c, w.arm(at(o, d), wk))
+            })
+            .collect();
+        assert_eq!(w.pending(), 4);
+        // walk time forward in uneven jumps crossing every cascade boundary
+        let mut now = 0u64;
+        for &(d, ref c, id) in &counters {
+            while now < d {
+                now = (now + 917).min(d);
+                let fired = w.advance(at(o, now));
+                if now >= d {
+                    assert!(fired.contains(&id), "timer at {d} did not fire by {now}");
+                }
+            }
+            assert_eq!(c.0.load(Ordering::SeqCst), 1, "timer at {d} wake count");
+        }
+        assert_eq!(w.pending(), 0);
+        assert_eq!(w.fired_total, 4);
+    }
+
+    #[test]
+    fn far_future_deadline_goes_to_overflow_and_survives_cancel() {
+        let (mut w, o) = wheel();
+        // beyond the 64^4-tick horizon
+        let horizon = 64u64 * 64 * 64 * 64;
+        let (c, wk) = counter();
+        let far = w.arm(at(o, horizon + 17), wk);
+        let (_, wk2) = counter();
+        let far2 = w.arm(at(o, horizon * 2), wk2);
+        assert_eq!(w.pending(), 2);
+        // next_deadline is exact even for overflow residents
+        assert_eq!(w.next_deadline(), Some(at(o, horizon + 17)));
+        assert!(w.cancel(far2));
+        assert_eq!(w.pending(), 1);
+        // nothing fires while the cursor is far away
+        assert!(w.advance(at(o, 1000)).is_empty());
+        assert_eq!(c.0.load(Ordering::SeqCst), 0);
+        assert!(w.cancel(far));
+        assert_eq!(w.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_recomputes_after_min_leaves() {
+        let (mut w, o) = wheel();
+        let (_, wk1) = counter();
+        let (_, wk2) = counter();
+        let first = w.arm(at(o, 4), wk1);
+        w.arm(at(o, 9), wk2);
+        assert_eq!(w.next_deadline(), Some(at(o, 4)));
+        assert!(w.cancel(first));
+        assert_eq!(w.next_deadline(), Some(at(o, 9)), "min must recompute after cancel");
+        let fired = w.advance(at(o, 9));
+        assert_eq!(fired.len(), 1);
+        assert!(w.next_deadline().is_none());
+    }
+
+    #[test]
+    fn past_deadline_fires_on_next_advance() {
+        let (mut w, o) = wheel();
+        w.advance(at(o, 50));
+        let (c, wk) = counter();
+        // deadline already in the past: rounds up to the next tick
+        w.arm(at(o, 10), wk);
+        assert_eq!(w.next_deadline(), Some(at(o, 51)));
+        let fired = w.advance(at(o, 51));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(c.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn long_gap_leaps_without_walking_or_losing_timers() {
+        let (mut w, o) = wheel();
+        let (c1, wk1) = counter();
+        let (c2, wk2) = counter();
+        let near = w.arm(at(o, 500), wk1);
+        let far = w.arm(at(o, 200_000), wk2);
+        // one giant advance: both must fire, in deadline order
+        let fired = w.advance(at(o, 200_000));
+        assert_eq!(fired, vec![near, far]);
+        assert_eq!(c1.0.load(Ordering::SeqCst), 1);
+        assert_eq!(c2.0.load(Ordering::SeqCst), 1);
+        assert_eq!(w.pending(), 0);
+
+        // a leap *below* the earliest expiry re-places entries but fires
+        // nothing, and the deadline stays exact afterwards
+        let (c3, wk3) = counter();
+        let id = w.arm(at(o, 500_000), wk3);
+        assert!(w.advance(at(o, 450_000)).is_empty());
+        assert_eq!(w.next_deadline(), Some(at(o, 500_000)));
+        assert_eq!(w.advance(at(o, 500_000)), vec![id]);
+        assert_eq!(c3.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn empty_wheel_fast_forwards() {
+        let (mut w, o) = wheel();
+        assert!(w.advance(at(o, 10_000_000)).is_empty());
+        let (c, wk) = counter();
+        w.arm(at(o, 10_000_005), wk);
+        let fired = w.advance(at(o, 10_000_005));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(c.0.load(Ordering::SeqCst), 1);
+    }
+}

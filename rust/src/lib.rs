@@ -27,8 +27,10 @@
 //! whitened stochastic variational GPs with `O(M²)` natural-gradient updates
 //! ([`svgp`]), Thompson-sampling Bayesian optimization ([`bo`]), a Gibbs
 //! sampler for image super-resolution ([`gibbs`]), a PJRT runtime that
-//! executes AOT-compiled JAX/Pallas artifacts ([`runtime`]) and a batching
-//! sampling-service coordinator ([`coordinator`]).
+//! executes AOT-compiled JAX/Pallas artifacts ([`runtime`]), a
+//! dependency-free async executor with a hierarchical timer wheel ([`exec`])
+//! and a batching sampling-service coordinator ([`coordinator`]) whose
+//! dispatcher runs on it.
 //!
 //! ## Quickstart
 //!
@@ -57,6 +59,7 @@
 //! ```
 
 pub mod util;
+pub mod exec;
 pub mod rng;
 pub mod linalg;
 pub mod special;

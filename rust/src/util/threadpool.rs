@@ -27,10 +27,17 @@
 //! never even constructed. Nested parallel calls from inside a parallel
 //! region run serially on the calling worker (no deadlock, no
 //! oversubscription).
+//!
+//! Alongside the chunk pool lives [`TaskPool`]: a small independent-job
+//! pool (FIFO or LIFO queue, condvar-parked workers, drain-on-drop) that
+//! the coordinator uses for batch execution and background warming — the
+//! compute half of the `exec` split, where the async executor owns the
+//! waiting and these worker threads own the CPU-bound jobs.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// First panic payload captured from a job's body, re-raised verbatim on the
 /// submitting thread once the job completes.
@@ -358,6 +365,124 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
+/// Queue discipline for a [`TaskPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskOrder {
+    /// First submitted, first run (batch execution: fairness).
+    Fifo,
+    /// Last submitted, first run (the warmer: a burst of re-registrations
+    /// should warm the *newest* operator version first — older queued jobs
+    /// are likely already stale).
+    Lifo,
+}
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+struct TaskPoolState {
+    queue: VecDeque<PoolJob>,
+    stop: bool,
+}
+
+struct TaskPoolShared {
+    state: Mutex<TaskPoolState>,
+    cv: Condvar,
+}
+
+/// A small general-purpose **task** pool: independent `FnOnce` jobs on a
+/// fixed set of parked worker threads, with a configurable queue order.
+///
+/// This is deliberately separate from the data-parallel chunk pool above:
+/// that one runs *one* job's chunks across every worker (and the submitter)
+/// with a barrier; this one runs *many* unrelated jobs concurrently with no
+/// barrier. The coordinator uses two of them — a FIFO pool for batch
+/// execution and a LIFO pool for background context warming — so neither
+/// path ever polls: workers park on a condvar until a job arrives.
+///
+/// Dropping the pool **drains the queue**: workers finish every job
+/// submitted before the drop, then exit. (Shutdown must not abandon
+/// accepted work — an in-flight batch's clients are waiting on it.)
+pub struct TaskPool {
+    shared: Arc<TaskPoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TaskPool {
+    /// A pool of `workers.max(1)` named threads with the given queue order.
+    pub fn new(name: &str, workers: usize, order: TaskOrder) -> TaskPool {
+        let shared = Arc::new(TaskPoolShared {
+            state: Mutex::new(TaskPoolState { queue: VecDeque::new(), stop: false }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(move || task_pool_worker(&shared, order))
+                    .expect("failed to spawn task pool worker")
+            })
+            .collect();
+        TaskPool { shared, handles }
+    }
+
+    /// Enqueue a job and wake a worker.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        self.shared.cv.notify_one();
+    }
+
+    /// Jobs queued but not yet started.
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Worker thread count.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().stop = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn task_pool_worker(shared: &TaskPoolShared, order: TaskOrder) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let popped = match order {
+                    TaskOrder::Fifo => st.queue.pop_front(),
+                    TaskOrder::Lifo => st.queue.pop_back(),
+                };
+                if let Some(j) = popped {
+                    break Some(j);
+                }
+                if st.stop {
+                    break None;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        match job {
+            // a panicking job must not kill the worker: later jobs (and the
+            // drop-time drain) still need it
+            Some(j) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+            }
+            None => return,
+        }
+    }
+}
+
 /// Pre-pool reference implementation: spawns fresh scoped threads on every
 /// call. Kept (not routed anywhere hot) as the *before* side of the
 /// `BENCH_kernel_mvm.json` comparison and as a correctness oracle in tests.
@@ -526,6 +651,59 @@ mod tests {
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn task_pool_runs_all_jobs_and_drains_on_drop() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = TaskPool::new("tp-test", 3, TaskOrder::Fifo);
+        for _ in 0..50 {
+            let done = done.clone();
+            pool.submit(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must finish every accepted job before joining
+        assert_eq!(done.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn task_pool_lifo_runs_newest_first() {
+        // one worker, jobs gated so the queue builds up before any pops
+        let gate = Arc::new(Mutex::new(()));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let pool = TaskPool::new("tp-lifo", 1, TaskOrder::Lifo);
+        let g = gate.lock().unwrap();
+        for i in 0..4 {
+            let (gate, order) = (gate.clone(), order.clone());
+            pool.submit(move || {
+                drop(gate.lock().unwrap());
+                order.lock().unwrap().push(i);
+            });
+        }
+        // job 0 may already be claimed by the (blocked) worker; the rest
+        // must pop newest-first
+        drop(g);
+        drop(pool);
+        let order = order.lock().unwrap().clone();
+        assert_eq!(order.len(), 4);
+        let tail: Vec<usize> = order.iter().copied().filter(|&i| i != order[0]).collect();
+        let mut sorted_desc = tail.clone();
+        sorted_desc.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(tail, sorted_desc, "LIFO pool ran queued jobs oldest-first: {order:?}");
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_job() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = TaskPool::new("tp-panic", 1, TaskOrder::Fifo);
+        pool.submit(|| panic!("job panic must not kill the worker"));
+        let d = done.clone();
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 1);
     }
 
     #[test]

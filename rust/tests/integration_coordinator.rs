@@ -1,19 +1,21 @@
 //! Coordinator invariants under concurrency (property-style): every request
 //! answered exactly once, batched results identical to solo solves, routing
-//! by operator name, metrics accounting, and the preconditioned serving
-//! pipeline (policy-driven solves + background warming).
+//! by operator name, metrics accounting, the preconditioned serving
+//! pipeline (policy-driven solves + background warming), and the async
+//! dispatcher backend: no-starvation parity with the threaded baseline,
+//! zero wakeups at idle, and bounded-concurrency warming.
 
 use ciq::ciq::{CiqOptions, PrecondConfig, SolverPolicy};
-use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::coordinator::{DispatchBackend, ReqKind, SamplingService, ServiceConfig, SharedOp};
 use ciq::linalg::eigen::spd_inv_sqrt;
 use ciq::linalg::Matrix;
 use ciq::operators::{DenseOp, KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
 use ciq::util::rel_err;
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn spd(n: usize, seed: u64) -> Matrix {
     let mut rng = Pcg64::seeded(seed);
@@ -131,17 +133,19 @@ fn graceful_shutdown_drains_inflight() {
     }
 }
 
-#[test]
-fn starvation_steady_trickle_flushed_within_deadline() {
-    // Regression for the dispatcher flush-starvation bug: deadlines used to be
-    // checked only on the recv_timeout Timeout branch, so a steady trickle of
-    // requests arriving faster than max_wait kept the loop on its Ok path and
-    // a sub-max_batch shard was never flushed until the trickle stopped.
-    //
-    // 30 requests at ~5 ms spacing with max_wait = 15 ms and max_batch = 1000:
-    // the old dispatcher's first flush happened only after the full ~150 ms
-    // trickle (p50 latency ≈ 90 ms, one giant batch); the deadline-aware
-    // dispatcher flushes every ~15 ms regardless of arrivals.
+// Regression for the dispatcher flush-starvation bug (PR 1), now a property
+// both backends must preserve: deadlines used to be checked only on the
+// recv_timeout Timeout branch, so a steady trickle of requests arriving
+// faster than max_wait kept the loop on its Ok path and a sub-max_batch
+// shard was never flushed until the trickle stopped.
+//
+// 30 requests at ~5 ms spacing with max_wait = 15 ms and max_batch = 1000:
+// the starving dispatcher's first flush happened only after the full ~150 ms
+// trickle (p50 latency ≈ 90 ms, one giant batch); a deadline-correct
+// dispatcher (threaded: deadline-aware recv timeout; async: per-shard timer
+// armed at oldest.enqueued + max_wait) flushes every ~15 ms regardless of
+// arrivals.
+fn run_starvation_trickle(backend: DispatchBackend) {
     let n = 8;
     let mut map: HashMap<String, SharedOp> = HashMap::new();
     map.insert("a".to_string(), Arc::new(DenseOp::new(Matrix::eye(n))));
@@ -151,13 +155,14 @@ fn starvation_steady_trickle_flushed_within_deadline() {
             max_wait: Duration::from_millis(15),
             workers: 1,
             ciq: CiqOptions::default(),
+            backend,
             ..Default::default()
         },
         map,
     );
     let mut rng = Pcg64::seeded(77);
     let mut tickets = Vec::new();
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     for _ in 0..30 {
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         tickets.push(svc.submit("a", ReqKind::Whiten, b));
@@ -174,13 +179,217 @@ fn starvation_steady_trickle_flushed_within_deadline() {
     let p50 = svc.metrics().latency_percentile_us(50.0);
     assert!(
         p50 < bound_us,
-        "p50 latency {p50}us (bound {bound_us}us) — steady trickle starved the shard of flushes"
+        "[{backend:?}] p50 latency {p50}us (bound {bound_us}us) — steady trickle starved the \
+         shard of flushes"
     );
     assert!(
         svc.metrics().max_batch_size() < 30,
-        "all requests collapsed into one post-trickle flush (batch {})",
+        "[{backend:?}] all requests collapsed into one post-trickle flush (batch {})",
         svc.metrics().max_batch_size()
     );
+    if backend == DispatchBackend::Async {
+        // every deadline flush goes through the wheel there (the threaded
+        // loop may also flush an expired shard on the arrival path, so its
+        // count is timing-dependent)
+        assert!(
+            svc.metrics().timer_fires.load(Ordering::Relaxed) >= 2,
+            "[{backend:?}] trickle flushes must be deadline-driven"
+        );
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn starvation_steady_trickle_flushed_within_deadline() {
+    run_starvation_trickle(DispatchBackend::Threaded);
+}
+
+#[test]
+fn starvation_steady_trickle_flushed_within_deadline_async() {
+    run_starvation_trickle(DispatchBackend::Async);
+}
+
+#[test]
+fn threaded_and_async_backends_serve_identical_results() {
+    // Backend equivalence for the one-release migration window: the same
+    // traffic against the same operator must produce the same (solo-exact)
+    // results and the same request accounting on both dispatchers.
+    let n = 14;
+    let k = spd(n, 21);
+    let inv = spd_inv_sqrt(&k).unwrap();
+    let mut rng = Pcg64::seeded(22);
+    let reqs: Vec<Vec<f64>> = (0..24).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    for backend in [DispatchBackend::Threaded, DispatchBackend::Async] {
+        let mut map: HashMap<String, SharedOp> = HashMap::new();
+        map.insert("k".to_string(), Arc::new(DenseOp::new(k.clone())));
+        let svc = SamplingService::start(
+            ServiceConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(3),
+                workers: 2,
+                ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+                backend,
+                ..Default::default()
+            },
+            map,
+        );
+        let tickets: Vec<_> =
+            reqs.iter().map(|b| svc.submit("k", ReqKind::Whiten, b.clone())).collect();
+        for (t, b) in tickets.into_iter().zip(&reqs) {
+            let got = t.wait().unwrap();
+            assert!(
+                rel_err(&got, &inv.matvec(b)) < 1e-5,
+                "[{backend:?}] batched result differs from solo"
+            );
+        }
+        let m = svc.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 24, "[{backend:?}]");
+        assert_eq!(m.completed.load(Ordering::Relaxed), 24, "[{backend:?}]");
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0, "[{backend:?}]");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn async_backend_performs_zero_wakeups_while_idle() {
+    // The acceptance test for the exec port: a single dispatcher thread
+    // multiplexes all shards, and while the service sits idle *nothing*
+    // moves — no poll interval exists to tick. The timer only fires while a
+    // shard holds a pending flush deadline.
+    let n = 8;
+    let mut map: HashMap<String, SharedOp> = HashMap::new();
+    map.insert("a".to_string(), Arc::new(DenseOp::new(Matrix::eye(n))));
+    let svc = SamplingService::start(
+        ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ciq: CiqOptions::default(),
+            // keep the startup warm job out of the books: this test pins
+            // exact wakeup counts
+            warm_on_register: false,
+            ..Default::default() // backend: Async
+        },
+        map,
+    );
+    // liveness probe: one sub-ceiling request must flush via exactly one
+    // armed deadline (one arrival wakeup + one timer fire)
+    svc.submit("a", ReqKind::Whiten, vec![1.0; n]).wait().unwrap();
+    let m = svc.metrics();
+    assert_eq!(m.dispatcher_wakeups.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        m.timer_fires.load(Ordering::Relaxed),
+        1,
+        "a single sub-ceiling request must flush by its armed deadline"
+    );
+    // idle window: no arrivals, no shard with a pending deadline. Pin the
+    // property at the *executor* layer too — the coordinator counters above
+    // only count coordinator events, and could not catch a reintroduced
+    // internal poll interval; task polls can.
+    let exec_stats = m.exec_stats().expect("async backend must expose executor stats");
+    std::thread::sleep(Duration::from_millis(20)); // let the executor re-park
+    let polls_before = exec_stats.polls.load(Ordering::Relaxed);
+    let wakeups_before = exec_stats.wakeups.load(Ordering::Relaxed);
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(
+        m.dispatcher_wakeups.load(Ordering::Relaxed),
+        1,
+        "idle service woke the dispatcher"
+    );
+    assert_eq!(
+        m.timer_fires.load(Ordering::Relaxed),
+        1,
+        "timer fired with no pending flush deadline"
+    );
+    assert_eq!(
+        exec_stats.polls.load(Ordering::Relaxed),
+        polls_before,
+        "executor polled tasks while the service was idle"
+    );
+    assert!(
+        exec_stats.wakeups.load(Ordering::Relaxed) <= wakeups_before + 1,
+        "executor woke repeatedly while idle (poll-interval regression)"
+    );
+    svc.shutdown();
+}
+
+/// An operator whose MVMs are artificially slow, tracking how many run
+/// concurrently — the probe for warm-pool parallelism.
+struct SlowOp {
+    inner: DenseOp,
+    delay: Duration,
+    active: Arc<AtomicUsize>,
+    peak: Arc<AtomicUsize>,
+}
+
+impl LinearOp for SlowOp {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+        std::thread::sleep(self.delay);
+        let y = self.inner.matvec(x);
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        y
+    }
+}
+
+#[test]
+fn warm_pool_builds_contexts_concurrently_under_registration_burst() {
+    // Regression for single-threaded warming: N slow-to-warm operators
+    // registered together must overlap their context builds (bounded by
+    // warm_concurrency) instead of serializing behind one build. The old
+    // one-warmer-thread design pins peak observed concurrency at exactly 1.
+    let n = 16;
+    let nops = 4;
+    let active = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let mut rng = Pcg64::seeded(80);
+    let mut map: HashMap<String, SharedOp> = HashMap::new();
+    for i in 0..nops {
+        let a = Matrix::randn(n, n, &mut rng);
+        let mut k = a.matmul(&a.transpose());
+        for j in 0..n {
+            k[(j, j)] += n as f64 * 0.5;
+        }
+        map.insert(
+            format!("op{i}"),
+            Arc::new(SlowOp {
+                inner: DenseOp::new(k),
+                delay: Duration::from_millis(2),
+                active: active.clone(),
+                peak: peak.clone(),
+            }),
+        );
+    }
+    let svc = SamplingService::start(
+        ServiceConfig {
+            workers: 1,
+            warm_concurrency: nops,
+            ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+            ..Default::default() // warm_on_register: true
+        },
+        map,
+    );
+    let t0 = Instant::now();
+    while (svc.metrics().warmed_operators.load(Ordering::Relaxed) as usize) < nops {
+        assert!(t0.elapsed() < Duration::from_secs(30), "warm pool never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        peak.load(Ordering::SeqCst) >= 2,
+        "a registration burst must warm concurrently (peak concurrent MVMs = {})",
+        peak.load(Ordering::SeqCst)
+    );
+    // every warmed operator serves its first batch with zero inline work
+    let mut rng = Pcg64::seeded(81);
+    for i in 0..nops {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit(&format!("op{i}"), ReqKind::Whiten, b).wait().unwrap();
+    }
+    assert_eq!(svc.metrics().cache_misses.load(Ordering::Relaxed), 0);
     svc.shutdown();
 }
 
