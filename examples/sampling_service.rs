@@ -5,12 +5,11 @@
 //!
 //! Run: `cargo run --release --example sampling_service -- [--n 2000]
 //!   [--clients 8] [--policy plain|cached|precond] [--rank 48]
-//!   [--adaptive-ms 50] [--backend async|threaded] [--adaptive-wait-us 200]`
+//!   [--adaptive-ms 50] [--adaptive-wait-us 200]`
 
 use ciq::ciq::{PrecondConfig, SolverPolicy};
 use ciq::coordinator::{
-    AdaptiveBatchConfig, AdaptiveWaitConfig, DispatchBackend, ReqKind, SamplingService,
-    ServiceConfig, SharedOp,
+    AdaptiveBatchConfig, AdaptiveWaitConfig, ReqKind, SamplingService, ServiceConfig, SharedOp,
 };
 use ciq::linalg::Matrix;
 use ciq::operators::{KernelOp, KernelType};
@@ -37,10 +36,6 @@ fn main() {
     };
     let adaptive_ms = args.get_or("adaptive-ms", 0u64);
     let adaptive_wait_us = args.get_or("adaptive-wait-us", 0u64);
-    let backend = match args.get("backend").unwrap_or("async") {
-        "threaded" => DispatchBackend::Threaded,
-        _ => DispatchBackend::Async,
-    };
 
     let mut rng = Pcg64::seeded(0);
     let x = Matrix::randn(n, 2, &mut rng);
@@ -62,14 +57,13 @@ fn main() {
             adaptive_wait: (adaptive_wait_us > 0).then(|| AdaptiveWaitConfig {
                 min_wait: Duration::from_micros(adaptive_wait_us),
             }),
-            backend,
             ..Default::default()
         },
         ops,
     ));
 
     println!(
-        "== sampling service ({backend:?} dispatcher): {clients} clients × {per_client} \
+        "== sampling service (async dispatcher): {clients} clients × {per_client} \
          requests, N = {n} =="
     );
     let t0 = std::time::Instant::now();
@@ -109,6 +103,12 @@ fn main() {
         "dispatcher: wakeups={} timer_fires={} (event/deadline-driven only — zero at idle)",
         svc.metrics().dispatcher_wakeups.load(Ordering::Relaxed),
         svc.metrics().timer_fires.load(Ordering::Relaxed),
+    );
+    println!(
+        "workspaces: checkouts={} grows={} peak_bytes={} (grows stand still once warm)",
+        svc.metrics().workspace_checkouts.load(Ordering::Relaxed),
+        svc.metrics().workspace_grows.load(Ordering::Relaxed),
+        svc.metrics().workspace_bytes_high_water.load(Ordering::Relaxed),
     );
     let ceilings = svc.metrics().batch_ceilings();
     if !ceilings.is_empty() {

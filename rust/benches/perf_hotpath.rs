@@ -4,27 +4,36 @@
 //! (tile size, threading), (2) the msMINRES per-iteration recurrence
 //! overhead, (3) RHS batching in the coordinator (block-msMINRES vs
 //! per-vector solves), (5) preconditioned vs plain CIQ on an
-//! ill-conditioned kernel (emits `BENCH_ciq_precond.json`), (6) the
-//! coordinator's dispatcher backends — threaded vs async enqueue→flush
-//! latency at 1/8/64 shards (emits `BENCH_dispatch.json`).
+//! ill-conditioned kernel (emits `BENCH_ciq_precond.json`), (6) the async
+//! dispatcher's enqueue→flush latency at 1/8/64 shards (emits
+//! `BENCH_dispatch.json`), (7) allocation pressure of the solve stack —
+//! allocs/solve and solves/sec, workspace-warm vs cold, measured through a
+//! counting global allocator (emits `BENCH_alloc.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
-//! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, and
-//! section 6 to 1/8 shards (the CI smoke configuration); the full sweep
-//! covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel types ×
-//! {matvec, matmat r=8}.
+//! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, section 6
+//! to 1/8 shards, and section 7 to N=256 (the CI smoke configuration); the
+//! full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
+//! types × {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use ciq::ciq::{Ciq, CiqOptions, PrecondConfig, SolveKind, SolverPolicy};
+use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, PrecondConfig, SolveKind, SolverPolicy};
 use ciq::krylov::msminres::{msminres, MsMinresOptions};
-use ciq::linalg::Matrix;
+use ciq::linalg::{Matrix, SolveWorkspace};
 use ciq::operators::{KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
+use ciq::util::allocs::{thread_allocs, CountingAllocator};
 use ciq::util::cli::Args;
 use ciq::util::threadpool::{num_threads, pool_spawned_threads};
+
+// §7 measures allocation pressure through this counting allocator; it
+// delegates straight to `System`, so the timing sections are unaffected
+// beyond one thread-local increment per allocation event.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 /// One before/after measurement for the JSON report.
 struct MvmEntry {
@@ -209,23 +218,96 @@ fn main() {
 
     bench_dispatch(args.has("fast"), &mut checks);
 
-    // evaluate every recorded verdict only now — all three JSON artifacts
+    bench_alloc(args.has("fast"), &mut rng, &mut checks);
+
+    // evaluate every recorded verdict only now — all four JSON artifacts
     // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
     }
 }
 
-/// §6: dispatcher backends head-to-head — threaded vs async enqueue→flush
-/// latency on the deadline path, at 1/8/64 shards. Every wave submits one
-/// sub-ceiling request per shard, so each must wait out its armed flush
-/// deadline: the measured latency is `max_wait` plus pure dispatcher
-/// overhead (the threaded backend pays an O(shards) deadline scan per
-/// event; the async one a timer-wheel fire per shard). Writes
-/// `BENCH_dispatch.json` into the CWD (uploaded by the CI bench-smoke job
-/// next to the other two JSONs).
+/// §7: allocation pressure of the solve stack — the zero-allocation
+/// steady-state acceptance numbers. A cold solve (fresh workspace per call)
+/// pays the first-touch growth; a warm solve on a pooled workspace must pay
+/// **zero** allocations on the solving thread (the counting global allocator
+/// above is thread-local; all solver-side allocations happen on the
+/// submitting thread — pool workers only run allocation-free GEMM bodies).
+/// Writes `BENCH_alloc.json` into the CWD.
+fn bench_alloc(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
+    use ciq::operators::DenseOp;
+
+    let n = if fast { 256 } else { 1024 };
+    let r = 8;
+    let reps = if fast { 10 } else { 30 };
+    println!("# perf 7: alloc pressure (N={n}, r={r}, counting global allocator)");
+    let a = Matrix::randn(n, n, rng);
+    let mut k = a.matmul(&a.transpose());
+    for i in 0..n {
+        k[(i, i)] += n as f64 * 0.5;
+    }
+    let op = DenseOp::new(k);
+    let b = Matrix::randn(n, r, rng);
+    let solver = Ciq::new(CiqOptions { tol: 1e-6, ..Default::default() });
+    let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).expect("ctx");
+
+    // cold: a fresh workspace per solve — every buffer is a first touch
+    let mut cold_allocs = 0u64;
+    let t_cold = common::bench_median(3, || {
+        let mut ws = SolveWorkspace::new();
+        let a0 = thread_allocs();
+        let res = solver.solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx).expect("cold");
+        cold_allocs = thread_allocs() - a0;
+        recycle_block_result(&mut ws, res);
+    });
+
+    // warm: one pooled workspace, measured over `reps` steady-state solves
+    let mut ws = SolveWorkspace::new();
+    for _ in 0..2 {
+        let res = solver.solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx).expect("warm-up");
+        recycle_block_result(&mut ws, res);
+    }
+    let a0 = thread_allocs();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let res = solver.solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx).expect("warm");
+        recycle_block_result(&mut ws, res);
+    }
+    let warm_secs = t0.elapsed().as_secs_f64() / reps as f64;
+    let warm_allocs = (thread_allocs() - a0) as f64 / reps as f64;
+    let solves_per_sec = 1.0 / warm_secs.max(1e-12);
+
+    println!("mode\tallocs_per_solve\tms_per_solve");
+    println!("cold\t{cold_allocs}\t{:.2}", t_cold * 1e3);
+    println!("warm\t{warm_allocs:.2}\t{:.2}", warm_secs * 1e3);
+    println!("warm solves/sec: {solves_per_sec:.1}");
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.alloc.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"n\": {n}, \"rhs\": {r}, \"reps\": {reps}, \"threads\": {}, \
+         \"counter\": \"thread-local, submitting thread\"}},\n  \"entries\": [\n    \
+         {{\"mode\": \"cold\", \"allocs_per_solve\": {cold_allocs}, \"ms_per_solve\": {:.4}}},\n    \
+         {{\"mode\": \"warm\", \"allocs_per_solve\": {warm_allocs:.2}, \"ms_per_solve\": {:.4}, \
+         \"solves_per_sec\": {solves_per_sec:.1}}}\n  ]\n}}\n",
+        num_threads(),
+        t_cold * 1e3,
+        warm_secs * 1e3,
+    );
+    std::fs::write("BENCH_alloc.json", json).expect("write BENCH_alloc.json");
+    println!("wrote BENCH_alloc.json");
+    checks.push(("cold solve allocates (sanity: the counter is live)".into(), cold_allocs > 0));
+    checks.push(("warm-path allocs/solve == 0 (zero-allocation steady state)".into(), warm_allocs == 0.0));
+}
+
+/// §6: the async dispatcher's enqueue→flush latency on the deadline path,
+/// at 1/8/64 shards. Every wave submits one sub-ceiling request per shard,
+/// so each must wait out its armed flush deadline: the measured latency is
+/// `max_wait` plus pure dispatcher overhead (one timer-wheel fire per
+/// shard). Writes `BENCH_dispatch.json` into the CWD (uploaded by the CI
+/// bench-smoke job next to the other JSONs). The threaded baseline this
+/// section used to race is retired — compare against the committed history
+/// for the before-side.
 fn bench_dispatch(fast: bool, checks: &mut Checks) {
-    use ciq::coordinator::{DispatchBackend, ReqKind, SamplingService, ServiceConfig, SharedOp};
+    use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
     use ciq::operators::DenseOp;
     use std::collections::HashMap;
     use std::sync::atomic::Ordering;
@@ -236,61 +318,55 @@ fn bench_dispatch(fast: bool, checks: &mut Checks) {
     let shard_counts: &[usize] = if fast { &[1, 8] } else { &[1, 8, 64] };
     let waves = if fast { 20 } else { 50 };
     let max_wait = Duration::from_millis(2);
-    println!("# perf 6: dispatcher backends (deadline path, {waves} waves, max_wait 2 ms)");
-    println!("backend\tshards\tp50_us\tp99_us\twakeups\ttimer_fires");
+    println!("# perf 6: async dispatcher (deadline path, {waves} waves, max_wait 2 ms)");
+    println!("shards\tp50_us\tp99_us\twakeups\ttimer_fires");
     let mut entries: Vec<String> = Vec::new();
     let mut async_event_driven = true;
-    for backend in [DispatchBackend::Threaded, DispatchBackend::Async] {
-        for &shards in shard_counts {
-            // identity operators: the solve is trivial, so latency beyond
-            // max_wait is dispatcher overhead
-            let mut map: HashMap<String, SharedOp> = HashMap::new();
-            for s in 0..shards {
-                map.insert(format!("op{s}"), Arc::new(DenseOp::new(Matrix::eye(n))));
-            }
-            let svc = SamplingService::start(
-                ServiceConfig {
-                    max_batch: 1024,
-                    max_wait,
-                    workers: 2,
-                    ciq: CiqOptions::default(),
-                    warm_on_register: false,
-                    backend,
-                    ..Default::default()
-                },
-                map,
-            );
-            for _ in 0..waves {
-                let tickets: Vec<_> = (0..shards)
-                    .map(|s| svc.submit(&format!("op{s}"), ReqKind::Whiten, vec![1.0; n]))
-                    .collect();
-                for t in tickets {
-                    t.wait().expect("dispatch bench request failed");
-                }
-            }
-            let m = svc.metrics();
-            let (p50, p99) =
-                (m.latency_percentile_us(50.0), m.latency_percentile_us(99.0));
-            let wakeups = m.dispatcher_wakeups.load(Ordering::Relaxed);
-            let fires = m.timer_fires.load(Ordering::Relaxed);
-            println!("{backend:?}\t{shards}\t{p50}\t{p99}\t{wakeups}\t{fires}");
-            entries.push(format!(
-                "    {{\"backend\": \"{backend:?}\", \"shards\": {shards}, \"p50_us\": {p50}, \
-                 \"p99_us\": {p99}, \"wakeups\": {wakeups}, \"timer_fires\": {fires}}}"
-            ));
-            if backend == DispatchBackend::Async {
-                // Strictly event/deadline-driven, checked behaviorally (not
-                // just by re-counting submissions): every wakeup is an
-                // arrival, and every wave's per-shard batch flushed via its
-                // own armed deadline — a reintroduced poll loop that flushed
-                // shards early would starve the deadline tasks of fires, a
-                // double-fire would overshoot. (The idle-window guarantee
-                // itself is pinned by the integration test on ExecStats.)
-                let expected = (waves * shards) as u64;
-                async_event_driven &= wakeups == expected && fires == expected;
-            }
-            svc.shutdown();
+    for &shards in shard_counts {
+        // identity operators: the solve is trivial, so latency beyond
+        // max_wait is dispatcher overhead
+        let mut map: HashMap<String, SharedOp> = HashMap::new();
+        for s in 0..shards {
+            map.insert(format!("op{s}"), Arc::new(DenseOp::new(Matrix::eye(n))));
         }
+        let svc = SamplingService::start(
+            ServiceConfig {
+                max_batch: 1024,
+                max_wait,
+                workers: 2,
+                ciq: CiqOptions::default(),
+                warm_on_register: false,
+                ..Default::default()
+            },
+            map,
+        );
+        for _ in 0..waves {
+            let tickets: Vec<_> = (0..shards)
+                .map(|s| svc.submit(&format!("op{s}"), ReqKind::Whiten, vec![1.0; n]))
+                .collect();
+            for t in tickets {
+                t.wait().expect("dispatch bench request failed");
+            }
+        }
+        let m = svc.metrics();
+        let (p50, p99) = (m.latency_percentile_us(50.0), m.latency_percentile_us(99.0));
+        let wakeups = m.dispatcher_wakeups.load(Ordering::Relaxed);
+        let fires = m.timer_fires.load(Ordering::Relaxed);
+        println!("{shards}\t{p50}\t{p99}\t{wakeups}\t{fires}");
+        entries.push(format!(
+            "    {{\"backend\": \"Async\", \"shards\": {shards}, \"p50_us\": {p50}, \
+             \"p99_us\": {p99}, \"wakeups\": {wakeups}, \"timer_fires\": {fires}}}"
+        ));
+        // Strictly event/deadline-driven, checked behaviorally (not just by
+        // re-counting submissions): every wakeup is an arrival, and every
+        // wave's per-shard batch flushed via its own armed deadline — a
+        // reintroduced poll loop that flushed shards early would starve the
+        // deadline tasks of fires, a double-fire would overshoot. (The
+        // idle-window guarantee itself is pinned by the integration test on
+        // ExecStats.)
+        let expected = (waves * shards) as u64;
+        async_event_driven &= wakeups == expected && fires == expected;
+        svc.shutdown();
     }
     let json = format!(
         "{{\n  \"schema\": \"ciq.bench.dispatch.v1\",\n  \"config\": {{\"fast\": {fast}, \

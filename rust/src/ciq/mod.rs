@@ -40,13 +40,25 @@
 //! `M = P^{-1/2} K P^{-1/2}` and return the rotation-equivalent maps of
 //! Eqs. S12/S13 (see `rust/DESIGN.md` for why that preserves sampling and
 //! whitening semantics).
+//!
+//! ## Zero-allocation steady state
+//!
+//! [`Ciq::solve_block_in`] / [`Ciq::solve_in`] are the workspace twins of
+//! the unified solves: every buffer comes from a caller-supplied
+//! [`SolveWorkspace`] and the MVMs run through the operators'
+//! `matvec_in`/`matmat_in` entry points, so a warmed workspace executes the
+//! whole `krylov → ciq` stack without touching the heap (`rust/DESIGN.md`
+//! §4). The owned entry points are wrappers over the same engines with a
+//! transient workspace — results are bit-for-bit identical.
 
 pub mod precond;
 
 use self::precond::WhitenedOp;
-use crate::krylov::msminres::{msminres, msminres_block, MsMinresOptions};
+use crate::krylov::msminres::{
+    msminres, msminres_block, msminres_block_in, msminres_in, MsMinresOptions,
+};
 use crate::krylov::{estimate_extreme_eigenvalues, EigenBounds};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::precond::PivotedCholesky;
 use crate::quadrature::{ciq_quadrature, QuadratureRule};
@@ -175,6 +187,9 @@ pub struct SolverContext {
     pub cache: SolverCache,
     /// The pivoted-Cholesky factor when the policy is preconditioned.
     pub precond: Option<Arc<PivotedCholesky>>,
+    /// msMINRES options prebuilt from the rule (weights cloned once here,
+    /// not once per solve) — what the workspace entry points run on.
+    pub ms: MsMinresOptions,
 }
 
 impl SolverContext {
@@ -200,6 +215,29 @@ pub struct CiqBlockResult {
     /// cold call doubles as cache population); `None` on warm calls, which
     /// keeps the hot path free of rule clones.
     pub cache: Option<SolverCache>,
+}
+
+/// Workspace-backed single-vector result of [`Ciq::solve_in`]: `solution`
+/// belongs to the caller's workspace — hand it back with
+/// [`crate::linalg::SolveWorkspace::give_vec`] once consumed.
+#[derive(Debug)]
+pub struct CiqVecSolve {
+    /// `≈ K^{±1/2} b` (or its rotation under a preconditioned context).
+    pub solution: Vec<f64>,
+    /// msMINRES iterations used.
+    pub iterations: usize,
+    /// Max relative residual across shifts at exit.
+    pub residual: f64,
+}
+
+/// Return a [`CiqBlockResult`] produced by [`Ciq::solve_block_in`] to its
+/// workspace so the next solve reuses the buffers. (Results from the owned
+/// entry points may also be handed in — that simply donates their capacity
+/// to the pool.)
+pub fn recycle_block_result(ws: &mut SolveWorkspace, res: CiqBlockResult) {
+    ws.give_mat(res.solution);
+    ws.give_usize(res.col_iterations);
+    ws.give_vec(res.residuals);
 }
 
 /// Backward-pass payload: the vector–Jacobian product of Eq. (3) in factored
@@ -346,19 +384,39 @@ impl Ciq {
     /// expensive, per-operator step — everything [`Ciq::solve`] /
     /// [`Ciq::solve_block`] do afterwards is estimation-free.
     pub fn build_context(&self, op: &dyn LinearOp, policy: &SolverPolicy) -> Result<SolverContext> {
+        self.build_context_with_hint(op, policy, None).map(|(ctx, _)| ctx)
+    }
+
+    /// [`Ciq::build_context`] with an optional pivoted-Cholesky warm-start
+    /// hint: the previous operator version's pivot order
+    /// ([`PivotedCholesky::pivot_order`]), used by the coordinator when
+    /// `replace_operator` installs a perturbed kernel. Returns the context
+    /// plus the pivot-search passes the hint saved (0 for non-preconditioned
+    /// policies).
+    pub fn build_context_with_hint(
+        &self,
+        op: &dyn LinearOp,
+        policy: &SolverPolicy,
+        hint: Option<&[usize]>,
+    ) -> Result<(SolverContext, usize)> {
         match policy {
             SolverPolicy::Plain | SolverPolicy::CachedBounds => {
-                Ok(SolverContext { cache: self.solver_cache(op)?, precond: None })
+                let cache = self.solver_cache(op)?;
+                let ms = self.ms_opts(&cache.rule);
+                Ok((SolverContext { cache, precond: None, ms }, 0))
             }
             SolverPolicy::Preconditioned(cfg) => {
                 let sigma2 = match cfg.sigma2 {
                     Some(s) => s,
                     None => default_precond_sigma2(op),
                 };
-                let pc = Arc::new(PivotedCholesky::new(op, cfg.rank, sigma2, cfg.build_tol)?);
+                let (pc, saved) =
+                    PivotedCholesky::new_with_hint(op, cfg.rank, sigma2, cfg.build_tol, hint)?;
+                let pc = Arc::new(pc);
                 let m = WhitenedOp::new(op, pc.as_ref());
                 let cache = self.solver_cache(&m)?;
-                Ok(SolverContext { cache, precond: Some(pc) })
+                let ms = self.ms_opts(&cache.rule);
+                Ok((SolverContext { cache, precond: Some(pc), ms }, saved))
             }
         }
     }
@@ -402,6 +460,9 @@ impl Ciq {
     /// keeps the panel-GEMM batch economics because [`WhitenedOp`] forwards
     /// whole blocks ([`WhitenedOp::matmat`] →
     /// [`PivotedCholesky::invsqrt_matmat`] + the operator's own `matmat`).
+    ///
+    /// Thin wrapper over [`Ciq::solve_block_in`] with a transient workspace
+    /// — one engine, so the owned and workspace paths can never drift.
     pub fn solve_block(
         &self,
         op: &dyn LinearOp,
@@ -409,21 +470,140 @@ impl Ciq {
         kind: SolveKind,
         ctx: &SolverContext,
     ) -> Result<CiqBlockResult> {
-        match &ctx.precond {
-            None => match kind {
-                SolveKind::InvSqrt => self.invsqrt_mvm_block_with_bounds(op, b, Some(&ctx.cache)),
-                SolveKind::Sqrt => self.sqrt_mvm_block_with_bounds(op, b, Some(&ctx.cache)),
-            },
+        let mut ws = SolveWorkspace::new();
+        self.solve_block_in(&mut ws, op, b, kind, ctx)
+    }
+
+    /// Workspace-backed blocked solve — the coordinator's steady-state hot
+    /// path. Identical numerics to [`Ciq::solve_block`] (bit-for-bit), but
+    /// every buffer — Krylov state, the weighted combination, rotation and
+    /// square-root post-passes, and the returned `solution` /
+    /// `col_iterations` / `residuals` — comes from `ws`, and the MVMs run
+    /// through [`LinearOp::matmat_in`]. With a warmed workspace the whole
+    /// call performs **zero** heap allocations. Recycle the result with
+    /// [`recycle_block_result`] once consumed.
+    pub fn solve_block_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        op: &dyn LinearOp,
+        b: &Matrix,
+        kind: SolveKind,
+        ctx: &SolverContext,
+    ) -> Result<CiqBlockResult> {
+        let n = op.size();
+        let r = b.cols();
+        let rule = &ctx.cache.rule;
+        let nq = rule.shifts.len();
+        // run on K, or on the whitened M under a preconditioned context
+        let blk = match &ctx.precond {
+            None => msminres_block_in(ws, op, b, &rule.shifts, &ctx.ms),
             Some(pc) => {
                 let m = WhitenedOp::new(op, pc.as_ref());
-                let mut res = self.invsqrt_mvm_block_with_bounds(&m, b, Some(&ctx.cache))?;
-                res.solution = pc.invsqrt_matmat(&res.solution);
-                if kind == SolveKind::Sqrt {
-                    res.solution = op.matmat(&res.solution);
-                }
-                Ok(res)
+                msminres_block_in(ws, &m, b, &rule.shifts, &ctx.ms)
+            }
+        };
+        // weighted combination; transposed layout so each (column, shift)
+        // pair is one contiguous axpy, then one transpose into n × r
+        let mut tmp = ws.take_mat(r.max(1), n);
+        for j in 0..r {
+            let trow = tmp.row_mut(j);
+            for (q, w) in rule.weights.iter().enumerate() {
+                crate::util::axpy(*w, blk.solutions.row(j * nq + q), trow);
             }
         }
+        let mut out = ws.take_mat(n, r);
+        for i in 0..n {
+            for j in 0..r {
+                out[(i, j)] = tmp[(j, i)];
+            }
+        }
+        ws.give_mat(tmp);
+        let crate::krylov::msminres::MsMinresBlockSolve {
+            solutions,
+            col_iterations,
+            residuals,
+            column_work,
+        } = blk;
+        ws.give_mat(solutions);
+        // rotation / square-root post-passes, all through `_in` MVMs
+        let solution = match &ctx.precond {
+            None => {
+                if kind == SolveKind::Sqrt {
+                    let mut s = ws.take_mat(n, r);
+                    op.matmat_in(ws, &out, &mut s);
+                    ws.give_mat(out);
+                    s
+                } else {
+                    out
+                }
+            }
+            Some(pc) => {
+                // rotate back out of the whitened space (Eqs. S12/S13)
+                let mut rot = ws.take_mat(n, r);
+                pc.invsqrt_matmat_in(ws, &out, &mut rot);
+                ws.give_mat(out);
+                if kind == SolveKind::Sqrt {
+                    let mut s = ws.take_mat(n, r);
+                    op.matmat_in(ws, &rot, &mut s);
+                    ws.give_mat(rot);
+                    s
+                } else {
+                    rot
+                }
+            }
+        };
+        Ok(CiqBlockResult { solution, col_iterations, residuals, column_work, cache: None })
+    }
+
+    /// Workspace-backed single-vector solve against a prebuilt context —
+    /// the slim hot-path twin of [`Ciq::solve`] (the returned buffer
+    /// belongs to `ws`). Unlike [`Ciq::solve_block`], `solve` cannot be a
+    /// wrapper over this: its [`CiqResult`] carries the shifted solves and
+    /// rule the backward pass needs, which the slim result deliberately
+    /// drops. One contract difference follows: this entry point runs with
+    /// the **context's** prebuilt msMINRES options (`ctx.ms` — cloned once
+    /// per context, not per solve), while `solve` derives them from the
+    /// serving `Ciq`'s own options; build the context with the same options
+    /// that serve it (as the coordinator does) and the two are bit-for-bit
+    /// identical.
+    pub fn solve_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        op: &dyn LinearOp,
+        b: &[f64],
+        kind: SolveKind,
+        ctx: &SolverContext,
+    ) -> Result<CiqVecSolve> {
+        let n = op.size();
+        let rule = &ctx.cache.rule;
+        let ms = match &ctx.precond {
+            None => msminres_in(ws, op, b, &rule.shifts, &ctx.ms),
+            Some(pc) => {
+                let m = WhitenedOp::new(op, pc.as_ref());
+                msminres_in(ws, &m, b, &rule.shifts, &ctx.ms)
+            }
+        };
+        let mut sol = ws.take_vec(n);
+        for (q, w) in rule.weights.iter().enumerate() {
+            crate::util::axpy(*w, ms.solutions.row(q), &mut sol);
+        }
+        let iterations = ms.iterations;
+        let residual = ms.residuals.iter().cloned().fold(0.0, f64::max);
+        ms.recycle(ws);
+        if let Some(pc) = &ctx.precond {
+            // rotate back: R' b = P^{-1/2} M^{-1/2} b
+            let mut rot = ws.take_vec(n);
+            pc.invsqrt_mvm_in(ws, &sol, &mut rot);
+            ws.give_vec(sol);
+            sol = rot;
+        }
+        if kind == SolveKind::Sqrt {
+            let mut s = ws.take_vec(n);
+            op.matvec_in(ws, &sol, &mut s);
+            ws.give_vec(sol);
+            sol = s;
+        }
+        Ok(CiqVecSolve { solution: sol, iterations, residual })
     }
 
     /// Blocked whitening for `r` right-hand sides (columns of `b`): shares
@@ -492,14 +672,31 @@ impl Ciq {
     /// `vᵀ (∂ K^{-1/2} b / ∂K)` in factored form. Costs one extra msMINRES
     /// call (the `r_q` solves are reused from the forward pass).
     pub fn backward(&self, op: &dyn LinearOp, forward: &CiqResult, v: &[f64]) -> Result<CiqBackward> {
+        let mut ws = SolveWorkspace::new();
+        self.backward_in(&mut ws, op, forward, v)
+    }
+
+    /// [`Ciq::backward`] with the extra msMINRES call's Krylov state drawn
+    /// from `ws`. The returned [`CiqBackward`] owns its term vectors (it
+    /// outlives the solve as an autograd payload), so the backward pass is
+    /// workspace-assisted rather than fully allocation-free — it sits on the
+    /// training path, not the serving steady state.
+    pub fn backward_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        op: &dyn LinearOp,
+        forward: &CiqResult,
+        v: &[f64],
+    ) -> Result<CiqBackward> {
         let rule = &forward.rule;
-        let ms = msminres(op, v, &rule.shifts, &self.ms_opts(rule));
+        let ms = msminres_in(ws, op, v, &rule.shifts, &self.ms_opts(rule));
         let terms = rule
             .weights
             .iter()
-            .zip(ms.solutions.into_iter().zip(&forward.shifted_solves))
-            .map(|(&w, (l, r))| (w, l, r.clone()))
+            .enumerate()
+            .map(|(q, &w)| (w, ms.solutions.row(q).to_vec(), forward.shifted_solves[q].clone()))
             .collect();
+        ms.recycle(ws);
         Ok(CiqBackward { terms })
     }
 }
@@ -742,6 +939,76 @@ mod tests {
             }
         }
         assert_eq!(default_precond_sigma2(&Bounded(&base)), 0.125);
+    }
+
+    #[test]
+    fn workspace_solves_match_owned_api_bit_for_bit_and_stay_warm() {
+        // solve_block_in / solve_in against a *reused* workspace must equal
+        // the owned solve_block / solve exactly, under both a plain context
+        // and a preconditioned one, for both solve kinds — and a warmed
+        // workspace must stop growing.
+        let n = 26;
+        let k = random_spd(n, 31, n as f64 * 0.5);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(32);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let solver = Ciq::new(CiqOptions { tol: 1e-9, ..Default::default() });
+        let cfg = PrecondConfig { rank: 8, sigma2: Some(1.0), build_tol: 1e-14 };
+        let ctx_plain = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+        let ctx_pre = solver.build_context(&op, &SolverPolicy::Preconditioned(cfg)).unwrap();
+        let mut ws = SolveWorkspace::new();
+        for ctx in [&ctx_plain, &ctx_pre] {
+            for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
+                let owned = solver.solve_block(&op, &b, kind, ctx).unwrap();
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, ctx).unwrap();
+                assert_eq!(
+                    res.solution.max_abs_diff(&owned.solution),
+                    0.0,
+                    "solve_block_in diverged ({kind:?}, precond={})",
+                    ctx.is_preconditioned()
+                );
+                assert_eq!(res.col_iterations, owned.col_iterations);
+                assert_eq!(res.residuals, owned.residuals);
+                assert_eq!(res.column_work, owned.column_work);
+                assert!(res.cache.is_none());
+                let owned_v = solver.solve(&op, &b.col(0), kind, ctx).unwrap();
+                let res_v = solver.solve_in(&mut ws, &op, &b.col(0), kind, ctx).unwrap();
+                assert_eq!(res_v.solution, owned_v.solution, "solve_in diverged ({kind:?})");
+                assert_eq!(res_v.iterations, owned_v.iterations);
+                recycle_block_result(&mut ws, res);
+                ws.give_vec(res_v.solution);
+            }
+        }
+        // steady state: repeating the whole sweep allocates nothing new
+        let grows = ws.grows();
+        for ctx in [&ctx_plain, &ctx_pre] {
+            for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, ctx).unwrap();
+                recycle_block_result(&mut ws, res);
+            }
+        }
+        assert_eq!(ws.grows(), grows, "warmed CIQ workspace must not re-allocate");
+    }
+
+    #[test]
+    fn backward_in_matches_backward() {
+        let n = 14;
+        let k = random_spd(n, 33, n as f64 * 0.6);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(34);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let solver = Ciq::new(CiqOptions { tol: 1e-10, ..Default::default() });
+        let fwd = solver.invsqrt_mvm(&op, &b).unwrap();
+        let owned = solver.backward(&op, &fwd, &v).unwrap();
+        let mut ws = SolveWorkspace::new();
+        let ws_res = solver.backward_in(&mut ws, &op, &fwd, &v).unwrap();
+        assert_eq!(owned.terms.len(), ws_res.terms.len());
+        for ((w1, l1, r1), (w2, l2, r2)) in owned.terms.iter().zip(&ws_res.terms) {
+            assert_eq!(w1, w2);
+            assert_eq!(l1, l2);
+            assert_eq!(r1, r2);
+        }
     }
 
     #[test]

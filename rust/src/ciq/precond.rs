@@ -17,7 +17,7 @@
 //! path.)
 
 use super::{Ciq, CiqResult};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::precond::PivotedCholesky;
 use crate::Result;
@@ -53,6 +53,31 @@ impl LinearOp for WhitenedOp<'_> {
         let a = self.p.invsqrt_matmat(x);
         let b = self.k.matmat(&a);
         self.p.invsqrt_matmat(&b)
+    }
+
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        let n = self.size();
+        let mut a = ws.take_vec(n);
+        self.p.invsqrt_mvm_in(ws, x, &mut a);
+        let mut b = ws.take_vec(n);
+        self.k.matvec_in(ws, &a, &mut b);
+        self.p.invsqrt_mvm_in(ws, &b, out);
+        ws.give_vec(a);
+        ws.give_vec(b);
+    }
+
+    /// Whole-block whitened MVM with every panel drawn from `ws` — the
+    /// preconditioned leg of the zero-allocation steady state.
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        let n = self.size();
+        let cols = x.cols();
+        let mut a = ws.take_mat(n, cols);
+        self.p.invsqrt_matmat_in(ws, x, &mut a);
+        let mut b = ws.take_mat(n, cols);
+        self.k.matmat_in(ws, &a, &mut b);
+        self.p.invsqrt_matmat_in(ws, &b, out);
+        ws.give_mat(a);
+        ws.give_mat(b);
     }
 }
 

@@ -13,6 +13,7 @@
 //! backend both stand perfectly still while the service is idle — the
 //! regression test for "zero idle polls".
 
+use crate::linalg::WsStats;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -40,6 +41,19 @@ pub struct Metrics {
     /// Warm jobs that failed to build a context (the batch path will retry
     /// inline and surface the error to clients).
     pub warm_failures: AtomicU64,
+    /// Pivot-search passes skipped by pivoted-Cholesky warm starts: a
+    /// `replace_operator` seeds the new factor with the old version's pivot
+    /// order, and each accepted hinted pivot skips one O(n) greedy scan.
+    pub warm_starts: AtomicU64,
+    /// Solve-workspace buffer checkouts performed by batch flushes.
+    pub workspace_checkouts: AtomicU64,
+    /// Workspace checkouts that had to heap-allocate. Stands still once the
+    /// pool is warm — the zero-allocation steady-state gauge (regression-
+    /// tested at the allocator level in `alloc_regression`).
+    pub workspace_grows: AtomicU64,
+    /// Peak bytes of scratch owned by any single workspace (max across the
+    /// pool's workspaces).
+    pub workspace_bytes_high_water: AtomicU64,
     /// Eigenvalue-estimation MVMs avoided by cache hits.
     pub saved_mvms: AtomicU64,
     /// Matmat column-work actually performed by compacted block solves.
@@ -114,6 +128,14 @@ impl Metrics {
     pub fn saved_column_work(&self) -> u64 {
         let full = self.column_work_full.load(Ordering::Relaxed);
         full.saturating_sub(self.column_work.load(Ordering::Relaxed))
+    }
+
+    /// Fold one returned workspace's drained telemetry into the service
+    /// counters (checkouts/grows are deltas, the high-water is a max).
+    pub fn record_workspace(&self, stats: &WsStats) {
+        self.workspace_checkouts.fetch_add(stats.checkouts, Ordering::Relaxed);
+        self.workspace_grows.fetch_add(stats.grows, Ordering::Relaxed);
+        self.workspace_bytes_high_water.fetch_max(stats.bytes_high_water, Ordering::Relaxed);
     }
 
     /// Install the async dispatcher's executor stats (startup, once).
@@ -306,8 +328,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
-             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} saved_mvms={} saved_colwork={} \
-             wakeups={} timer_fires={}",
+             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
+             saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={}",
             self.policy(),
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -319,10 +341,14 @@ impl Metrics {
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
             self.warmed_operators.load(Ordering::Relaxed),
+            self.warm_starts.load(Ordering::Relaxed),
             self.saved_mvms.load(Ordering::Relaxed),
             self.saved_column_work(),
             self.dispatcher_wakeups.load(Ordering::Relaxed),
             self.timer_fires.load(Ordering::Relaxed),
+            self.workspace_checkouts.load(Ordering::Relaxed),
+            self.workspace_grows.load(Ordering::Relaxed),
+            self.workspace_bytes_high_water.load(Ordering::Relaxed),
         )
     }
 }
@@ -427,6 +453,24 @@ mod tests {
         m.set_policy("CachedBounds");
         assert_eq!(m.policy(), "CachedBounds");
         assert!(m.summary().contains("policy=CachedBounds"));
+    }
+
+    #[test]
+    fn workspace_telemetry_accumulates_and_renders() {
+        let m = Metrics::default();
+        m.record_workspace(&WsStats { checkouts: 10, grows: 4, bytes_high_water: 800 });
+        m.record_workspace(&WsStats { checkouts: 7, grows: 0, bytes_high_water: 1200 });
+        m.record_workspace(&WsStats { checkouts: 3, grows: 1, bytes_high_water: 600 });
+        assert_eq!(m.workspace_checkouts.load(Ordering::Relaxed), 20);
+        assert_eq!(m.workspace_grows.load(Ordering::Relaxed), 5);
+        // high water is a max across workspaces, not a sum
+        assert_eq!(m.workspace_bytes_high_water.load(Ordering::Relaxed), 1200);
+        m.warm_starts.fetch_add(9, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("ws_checkouts=20"));
+        assert!(s.contains("ws_grows=5"));
+        assert!(s.contains("ws_peak_bytes=1200"));
+        assert!(s.contains("warm_starts=9"));
     }
 
     #[test]

@@ -18,32 +18,40 @@
 //! * records per-request latency, batch-size, per-shard queue-depth, and
 //!   cache-economics metrics.
 //!
-//! ## Two dispatcher backends; both are purely event/deadline driven
+//! ## One event/deadline-driven dispatcher
 //!
-//! [`ServiceConfig::backend`] selects the dispatcher:
+//! **One** thread runs a [`crate::exec`] executor. Channel arrivals are an
+//! intake *task* (the mpsc sender unparks the executor — no receive
+//! timeout exists at all), and every shard arms its own flush deadline in
+//! the executor's timer wheel on first enqueue, firing exactly at
+//! `oldest.enqueued + max_wait`. A full batch cancels the armed timer in
+//! O(1). An idle service performs **zero** wakeups —
+//! [`Metrics::dispatcher_wakeups`] and [`Metrics::timer_fires`] stand
+//! still, which a regression test asserts — and a steady sub-`max_wait`
+//! trickle can never starve a sub-`max_batch` shard of its flush (the PR 1
+//! guarantee, still regression-tested). The pre-`exec` threaded dispatcher
+//! that soaked one release as the equivalence baseline is retired; the
+//! async executor is the only backend.
 //!
-//! * [`DispatchBackend::Async`] (the default): **one** thread runs a
-//!   [`crate::exec`] executor. Channel arrivals are an intake *task* (the
-//!   mpsc sender unparks the executor — no receive timeout exists at all),
-//!   and every shard arms its own flush deadline in the executor's timer
-//!   wheel on first enqueue, firing exactly at `oldest.enqueued +
-//!   max_wait`. A full batch cancels the armed timer in O(1). An idle
-//!   service performs **zero** wakeups — [`Metrics::dispatcher_wakeups`]
-//!   and [`Metrics::timer_fires`] stand still, which a regression test
-//!   asserts.
-//! * [`DispatchBackend::Threaded`]: the pre-`exec` single-loop dispatcher,
-//!   kept for one release as the equivalence baseline. Its `recv` timeout
-//!   is computed from the **oldest pending flush deadline** across shards
-//!   (never a fixed poll interval — with no deadline pending it blocks in
-//!   plain `recv`), and expired shards are flushed after every received
-//!   request, so a steady sub-`max_wait` trickle can never starve a
-//!   sub-`max_batch` shard of its flush (the PR 1 guarantee; both backends
-//!   carry the regression test).
+//! The dispatcher owns only the *waiting*: batches execute on a FIFO
+//! [`TaskPool`] whose workers park on a condvar, and the actual solve
+//! compute still fans out through the persistent panel-GEMM chunk pool.
 //!
-//! In both backends the dispatcher owns only the *waiting*: batches execute
-//! on a FIFO [`TaskPool`] whose workers park on a condvar (the old
-//! `recv_timeout(20ms)` worker poll is gone), and the actual solve compute
-//! still fans out through the persistent panel-GEMM chunk pool.
+//! ## Zero-allocation steady state
+//!
+//! Batch workers draw every solve buffer from a lazily-grown
+//! [`WorkspacePool`]: one [`crate::linalg::SolveWorkspace`] is checked out
+//! per flush
+//! (so at most `workers` ever exist), the batch matrix is built in
+//! workspace memory, the solve runs through [`Ciq::solve_block_in`] (zero
+//! heap allocations once warm — see `rust/DESIGN.md` §4), results are
+//! recycled after the responses are sent, and the workspace returns to the
+//! pool. Steady traffic therefore performs no per-request allocations
+//! below the request envelope (the rhs/response vectors clients own).
+//! Telemetry: [`Metrics::workspace_checkouts`], [`Metrics::workspace_grows`]
+//! (stands still once warm — regression-tested), and
+//! [`Metrics::workspace_bytes_high_water`]. Deregistering an operator
+//! prunes the pool's idle buffers along with the shard telemetry.
 //!
 //! ## Solver policies and per-operator solver contexts
 //!
@@ -124,16 +132,16 @@ pub mod metrics;
 
 pub use metrics::Metrics;
 
-use crate::ciq::{Ciq, CiqOptions, SolveKind, SolverContext, SolverPolicy};
+use crate::ciq::{self, Ciq, CiqOptions, SolveKind, SolverContext, SolverPolicy};
 use crate::exec;
-use crate::linalg::Matrix;
+use crate::linalg::WorkspacePool;
 use crate::operators::LinearOp;
 use crate::util::threadpool::{TaskOrder, TaskPool};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -160,11 +168,20 @@ struct OpEntry {
     /// `(context, MVMs the one-time build actually spent)` — hits credit
     /// exactly what the build paid, even when Lanczos broke out early.
     context: Mutex<Option<(Arc<SolverContext>, u64)>>,
+    /// Pivoted-Cholesky warm-start hint: the *previous* operator version's
+    /// pivot order, captured at `replace_operator` time. The context build
+    /// seeds the new factor's candidate permutation from it, skipping
+    /// pivot-search passes ([`Metrics::warm_starts`] counts the savings).
+    precond_hint: Option<Vec<usize>>,
 }
 
 impl OpEntry {
     fn fresh(op: SharedOp) -> Arc<OpEntry> {
-        Arc::new(OpEntry { op, context: Mutex::new(None) })
+        Self::fresh_with_hint(op, None)
+    }
+
+    fn fresh_with_hint(op: SharedOp, precond_hint: Option<Vec<usize>>) -> Arc<OpEntry> {
+        Arc::new(OpEntry { op, context: Mutex::new(None), precond_hint })
     }
 }
 
@@ -190,17 +207,6 @@ struct Request {
     rhs: Vec<f64>,
     enqueued: Instant,
     respond: Sender<crate::Result<Vec<f64>>>,
-}
-
-/// Which dispatcher runs the service (see the module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DispatchBackend {
-    /// Single-loop thread + mpsc dispatcher (pre-`exec` baseline, kept for
-    /// one release behind this switch).
-    Threaded,
-    /// One [`crate::exec`] executor thread: per-shard deadline tasks on a
-    /// timer wheel, channel arrivals as task wakes, zero idle wakeups.
-    Async,
 }
 
 /// Configuration of the clamped-AIMD per-shard batch controller.
@@ -264,8 +270,6 @@ pub struct ServiceConfig {
     /// Per-shard adaptive flush deadlines; `None` keeps the static
     /// `max_wait` everywhere.
     pub adaptive_wait: Option<AdaptiveWaitConfig>,
-    /// Which dispatcher runs the service.
-    pub backend: DispatchBackend,
 }
 
 impl Default for ServiceConfig {
@@ -280,44 +284,24 @@ impl Default for ServiceConfig {
             warm_concurrency: 2,
             adaptive: None,
             adaptive_wait: None,
-            backend: DispatchBackend::Async,
-        }
-    }
-}
-
-/// The request sender half, one variant per backend.
-enum ReqTx {
-    Std(Sender<Request>),
-    Exec(exec::channel::Sender<Request>),
-}
-
-impl ReqTx {
-    fn send(&self, req: Request) {
-        // if the dispatcher is gone the Ticket will report the failure
-        match self {
-            ReqTx::Std(tx) => {
-                let _ = tx.send(req);
-            }
-            ReqTx::Exec(tx) => {
-                let _ = tx.send(req);
-            }
         }
     }
 }
 
 /// Handle to a running sampling service.
 pub struct SamplingService {
-    tx: Option<ReqTx>,
+    tx: Option<exec::channel::Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     ops: OpMap,
-    config: Arc<ServiceConfig>,
-    /// Async backend: registration events routed through the executor's
-    /// warm-router task (`None` otherwise).
+    /// Registration events routed through the executor's warm-router task
+    /// (`None` when warming is disabled or the policy is `Plain`).
     warm_tx: Option<exec::channel::Sender<WarmJob>>,
     /// Bounded newest-first warm pool (`None` when warming is disabled or
     /// the policy is `Plain`).
     warm_pool: Option<Arc<TaskPool>>,
+    /// Per-flush solve workspaces shared by the batch workers.
+    workspaces: Arc<WorkspacePool>,
 }
 
 /// A pending response.
@@ -365,37 +349,28 @@ impl SamplingService {
             None
         };
 
-        let (tx, dispatcher, warm_tx) = match config.backend {
-            DispatchBackend::Threaded => {
-                let (tx, rx) = mpsc::channel::<Request>();
-                let (c, r, m) = (config.clone(), registry.clone(), metrics.clone());
-                let handle = std::thread::spawn(move || dispatcher_threaded(c, r, rx, m));
-                (ReqTx::Std(tx), handle, None)
-            }
-            DispatchBackend::Async => {
-                let (tx, rx) = exec::channel::channel::<Request>();
-                let (warm_tx, warm_rx) = if warm_pool.is_some() {
-                    let (a, b) = exec::channel::channel::<WarmJob>();
-                    (Some(a), Some(b))
-                } else {
-                    (None, None)
-                };
-                let (c, r, m) = (config.clone(), registry.clone(), metrics.clone());
-                let wp = warm_pool.clone();
-                let handle =
-                    std::thread::spawn(move || dispatcher_async(c, r, rx, warm_rx, wp, m));
-                (ReqTx::Exec(tx), handle, warm_tx)
-            }
+        let workspaces = Arc::new(WorkspacePool::new());
+        let (tx, rx) = exec::channel::channel::<Request>();
+        let (warm_tx, warm_rx) = if warm_pool.is_some() {
+            let (a, b) = exec::channel::channel::<WarmJob>();
+            (Some(a), Some(b))
+        } else {
+            (None, None)
         };
+        let (c, r, m, w) =
+            (config.clone(), registry.clone(), metrics.clone(), workspaces.clone());
+        let wp = warm_pool.clone();
+        let dispatcher =
+            std::thread::spawn(move || dispatcher_async(c, r, rx, warm_rx, wp, m, w));
 
         let svc = SamplingService {
             tx: Some(tx),
             dispatcher: Some(dispatcher),
             metrics,
             ops: registry,
-            config,
             warm_tx,
             warm_pool,
+            workspaces,
         };
         if warm {
             let initial: Vec<WarmJob> = svc
@@ -412,16 +387,11 @@ impl SamplingService {
         svc
     }
 
-    /// Hand a fresh entry to the warm machinery: through the executor's
-    /// warm-router task on the async backend, straight onto the pool on the
-    /// threaded one. No-op when warming is off.
+    /// Hand a fresh entry to the warm machinery through the executor's
+    /// warm-router task. No-op when warming is off.
     fn enqueue_warm(&self, name: String, entry: Arc<OpEntry>) {
         if let Some(wtx) = &self.warm_tx {
             let _ = wtx.send((name, entry));
-        } else if let Some(pool) = &self.warm_pool {
-            let (ops, config, metrics) =
-                (self.ops.clone(), self.config.clone(), self.metrics.clone());
-            pool.submit(move || warm_entry(&name, &entry, &ops, &config, &metrics));
         }
     }
 
@@ -433,7 +403,29 @@ impl SamplingService {
     /// rebuild happens off the request path.
     pub fn replace_operator(&self, name: &str, op: SharedOp) {
         self.metrics.operator_replacements.fetch_add(1, Ordering::Relaxed);
-        let entry = OpEntry::fresh(op);
+        // Warm-start hint: if the outgoing version already built a
+        // preconditioned context for a same-size operator, seed the fresh
+        // build with its pivot order (a hyperparameter-step replacement
+        // barely moves the greedy pivots). The hint is advisory — the build
+        // falls back to the full greedy scan the moment it stops holding.
+        // The registry read guard is dropped *before* touching the entry's
+        // context mutex: a warmer may hold that mutex across a long build,
+        // and blocking on it under the registry lock would stall the
+        // dispatcher's per-arrival registry reads behind a queued writer.
+        let old_entry = self.ops.read().unwrap().get(name).cloned();
+        let hint = old_entry.and_then(|old| {
+            if old.op.size() != op.size() {
+                return None;
+            }
+            // try_lock: a warmer may hold the context mutex across a long
+            // build; the hint is advisory, so skip it rather than stall the
+            // replacement behind a build for the version being replaced.
+            let guard = old.context.try_lock().ok()?;
+            guard
+                .as_ref()
+                .and_then(|(ctx, _)| ctx.precond.as_ref().map(|pc| pc.pivot_order().to_vec()))
+        });
+        let entry = OpEntry::fresh_with_hint(op, hint);
         self.ops.write().unwrap().insert(name.to_string(), entry.clone());
         self.enqueue_warm(name.to_string(), entry);
     }
@@ -453,6 +445,9 @@ impl SamplingService {
         let removed = self.ops.write().unwrap().remove(name).is_some();
         if removed {
             self.metrics.prune_shard(name);
+            // workload shape changed for good: drop idle workspaces' pooled
+            // buffers so scratch sized for the retired operator can't linger
+            self.workspaces.prune();
         }
         removed
     }
@@ -468,7 +463,8 @@ impl SamplingService {
             respond: rtx,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx.as_ref().unwrap().send(req);
+        // if the dispatcher is gone the Ticket will report the failure
+        let _ = self.tx.as_ref().unwrap().send(req);
         Ticket { rx: rrx }
     }
 
@@ -533,199 +529,7 @@ fn tune_wait(config: &ServiceConfig, metrics: &Metrics, label: &str, full_flush:
 }
 
 // ---------------------------------------------------------------------------
-// Threaded backend (pre-`exec` baseline, behind `DispatchBackend::Threaded`)
-// ---------------------------------------------------------------------------
-
-/// Dispatcher-side shard: pending requests plus the precomputed metrics
-/// label (built once per shard, not once per arrival).
-struct Shard {
-    label: String,
-    requests: Vec<Request>,
-}
-
-/// Send one shard's queue off as a batch on the worker pool.
-fn flush_shard(
-    key: &ShardKey,
-    shards: &mut HashMap<ShardKey, Shard>,
-    config: &Arc<ServiceConfig>,
-    ops: &OpMap,
-    pool: &TaskPool,
-    metrics: &Arc<Metrics>,
-) {
-    if let Some(shard) = shards.remove(key) {
-        if shard.requests.is_empty() {
-            return;
-        }
-        metrics.record_batch(shard.requests.len());
-        // update-only: flushing a queue that raced a deregistration's
-        // prune_shard must not resurrect the pruned depth entry
-        metrics.record_shard_drained(&shard.label);
-        let batch = Batch { op_name: key.0.clone(), kind: key.1, requests: shard.requests };
-        let (o, c, m) = (ops.clone(), config.clone(), metrics.clone());
-        pool.submit(move || execute_batch(&o, &c, batch, &m));
-    }
-}
-
-/// Flush every shard whose oldest request has waited at least its effective
-/// wait, and return the earliest flush deadline still pending — the single
-/// source of truth for the dispatcher's next recv timeout.
-fn flush_expired(
-    shards: &mut HashMap<ShardKey, Shard>,
-    config: &Arc<ServiceConfig>,
-    ops: &OpMap,
-    pool: &TaskPool,
-    metrics: &Arc<Metrics>,
-) -> Option<Instant> {
-    let now = Instant::now();
-    let expired: Vec<ShardKey> = shards
-        .iter()
-        .filter(|(_, s)| {
-            s.requests
-                .first()
-                .map(|r| r.enqueued + effective_wait(config, metrics, &s.label) <= now)
-                .unwrap_or(false)
-        })
-        .map(|(k, _)| k.clone())
-        .collect();
-    for key in expired {
-        // a deadline flush by definition came up short of its ceiling:
-        // stretch the shard's wait (guarded against resurrecting a pruned
-        // entry, same contract as the AIMD tune in execute_batch)
-        if config.adaptive_wait.is_some() {
-            if let Some(s) = shards.get(&key) {
-                let registry = ops.read().unwrap();
-                if registry.contains_key(&key.0) {
-                    tune_wait(config, metrics, &s.label, false);
-                }
-            }
-        }
-        flush_shard(&key, shards, config, ops, pool, metrics);
-    }
-    shards
-        .values()
-        .filter_map(|s| {
-            s.requests.first().map(|r| r.enqueued + effective_wait(config, metrics, &s.label))
-        })
-        .min()
-}
-
-fn dispatcher_threaded(
-    config: Arc<ServiceConfig>,
-    ops: OpMap,
-    rx: Receiver<Request>,
-    metrics: Arc<Metrics>,
-) {
-    // FIFO worker pool: workers park between batches (no poll interval; the
-    // pool drains on drop, which is what flushes in-flight work at shutdown)
-    let pool = TaskPool::new("ciq-batch", config.workers.max(1), TaskOrder::Fifo);
-
-    // sharded batching loop: one queue per (operator, kind)
-    let mut shards: HashMap<ShardKey, Shard> = HashMap::new();
-    // Deadline-aware receive: wake when the *oldest pending* request's flush
-    // deadline expires; with nothing pending, block outright (no idle poll).
-    let mut next_deadline: Option<Instant> = None;
-    loop {
-        let received = match next_deadline {
-            Some(deadline) => {
-                rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
-            }
-            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
-        };
-        match received {
-            Ok(req) => {
-                metrics.dispatcher_wakeups.fetch_add(1, Ordering::Relaxed);
-                // the flush deadline a newly-nonempty shard just acquired
-                // (its oldest request's arrival + its effective wait)
-                let mut new_first_deadline: Option<Instant> = None;
-                {
-                    // The registry guard spans the membership check *and* the
-                    // shard/telemetry writes: deregistration removes the map
-                    // entry under the write lock and prunes telemetry strictly
-                    // afterwards, so anything recorded here for a present
-                    // operator happens-before that prune and cannot be
-                    // resurrected state.
-                    let registry = ops.read().unwrap();
-                    if !registry.contains_key(&req.op_name) {
-                        // Rejected up front: no shard is created, so
-                        // client-controlled names cannot grow the shard map or
-                        // its metrics without bound.
-                        metrics.failed.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.respond.send(Err(crate::Error::Invalid(format!(
-                            "unknown operator '{}'",
-                            req.op_name
-                        ))));
-                    } else {
-                        let key = (req.op_name.clone(), req.kind);
-                        let shard = shards.entry(key.clone()).or_insert_with(|| Shard {
-                            label: shard_label(&key.0, key.1),
-                            requests: Vec::new(),
-                        });
-                        shard.requests.push(req);
-                        let depth = shard.requests.len();
-                        metrics.record_shard_depth(&shard.label, depth);
-                        let ceiling = effective_ceiling(&config, &metrics, &shard.label);
-                        if depth >= ceiling {
-                            // full flush: demand filled the batch before the
-                            // deadline — shrink the shard's wait
-                            tune_wait(&config, &metrics, &shard.label, true);
-                            flush_shard(&key, &mut shards, &config, &ops, &pool, &metrics);
-                        } else if depth == 1 {
-                            // first enqueue: this shard's own deadline may be
-                            // *earlier* than the one currently armed (per-shard
-                            // adaptive waits can differ), so fold it in below
-                            // instead of assuming the newest arrival always
-                            // expires last.
-                            let wait = effective_wait(&config, &metrics, &shard.label);
-                            new_first_deadline = Some(shard.requests[0].enqueued + wait);
-                        }
-                    }
-                }
-                if let Some(d) = new_first_deadline {
-                    next_deadline = Some(next_deadline.map_or(d, |nd| nd.min(d)));
-                }
-                // Deadlines are re-checked after *every* arrival — a steady
-                // trickle faster than max_wait can no longer starve a
-                // sub-max_batch shard of its flush — but the O(shards) scan
-                // only runs once the known earliest deadline has passed (an
-                // arrival into an already-nonempty shard never moves the
-                // earliest deadline up, a newly-nonempty shard's deadline was
-                // just folded in above, and a stale-early deadline from a
-                // max_batch flush just wakes the loop once ahead of time and
-                // self-corrects).
-                match next_deadline {
-                    Some(deadline) if deadline > Instant::now() => {}
-                    _ => {
-                        next_deadline =
-                            flush_expired(&mut shards, &config, &ops, &pool, &metrics);
-                    }
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                // a flush deadline expired. A stale deadline (its shard
-                // already full-flushed) can land here with nothing pending:
-                // count a fire only when some shard still holds requests, so
-                // the metric keeps its "idle adds zero" contract — and
-                // `dispatcher_wakeups` stays arrivals-only on both backends.
-                if !shards.is_empty() {
-                    metrics.timer_fires.fetch_add(1, Ordering::Relaxed);
-                }
-                next_deadline = flush_expired(&mut shards, &config, &ops, &pool, &metrics);
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                // drain remaining
-                let keys: Vec<ShardKey> = shards.keys().cloned().collect();
-                for key in keys {
-                    flush_shard(&key, &mut shards, &config, &ops, &pool, &metrics);
-                }
-                break;
-            }
-        }
-    }
-    // pool drop: drains queued batches, then joins the workers
-}
-
-// ---------------------------------------------------------------------------
-// Async backend (the default): one exec thread multiplexing all shards
+// The dispatcher: one exec thread multiplexing all shards
 // ---------------------------------------------------------------------------
 
 /// Everything the async dispatcher's tasks and closures share.
@@ -734,6 +538,7 @@ struct DispatchCtx {
     ops: OpMap,
     metrics: Arc<Metrics>,
     pool: Arc<TaskPool>,
+    workspaces: Arc<WorkspacePool>,
     /// Monotonic shard-incarnation counter (executor thread only). A
     /// deadline task only flushes the incarnation it was armed for: a timer
     /// that fired but was polled *after* a full flush re-created its shard
@@ -760,11 +565,12 @@ fn dispatch_batch(ctx: &DispatchCtx, key: &ShardKey, label: &str, requests: Vec<
         return;
     }
     ctx.metrics.record_batch(requests.len());
-    // update-only: must not resurrect a pruned depth entry (see threaded)
+    // update-only: must not resurrect a pruned depth entry
     ctx.metrics.record_shard_drained(label);
     let batch = Batch { op_name: key.0.clone(), kind: key.1, requests };
-    let (o, c, m) = (ctx.ops.clone(), ctx.config.clone(), ctx.metrics.clone());
-    ctx.pool.submit(move || execute_batch(&o, &c, batch, &m));
+    let (o, c, m, w) =
+        (ctx.ops.clone(), ctx.config.clone(), ctx.metrics.clone(), ctx.workspaces.clone());
+    ctx.pool.submit(move || execute_batch(&o, &c, batch, &m, &w));
 }
 
 /// Route one arrival: reject unknown operators, enqueue into the shard,
@@ -776,8 +582,9 @@ fn route_async(
     shards: &AsyncShards,
     req: Request,
 ) {
-    // Same prune-ordering contract as the threaded backend: the registry
-    // guard spans the membership check and every shard/telemetry write.
+    // Prune-ordering contract: the registry guard spans the membership
+    // check and every shard/telemetry write, so anything recorded here for
+    // a present operator happens-before a deregistration's prune.
     let registry = ctx.ops.read().unwrap();
     if !registry.contains_key(&req.op_name) {
         ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -865,6 +672,7 @@ fn dispatcher_async(
     warm_rx: Option<exec::channel::Receiver<WarmJob>>,
     warm_pool: Option<Arc<TaskPool>>,
     metrics: Arc<Metrics>,
+    workspaces: Arc<WorkspacePool>,
 ) {
     let executor = exec::Executor::new();
     let handle = executor.handle();
@@ -877,16 +685,17 @@ fn dispatcher_async(
         ops: ops.clone(),
         metrics: metrics.clone(),
         pool,
+        workspaces,
         shard_gen: Cell::new(0),
     });
     let shards: AsyncShards = Rc::new(RefCell::new(HashMap::new()));
 
     // Warm router: registration events arrive like requests (a channel wake,
     // not a poll) and feed the bounded newest-first warm pool. Deliberately
-    // routed through the executor rather than submitted straight to the pool
-    // (which the threaded backend does): the warmer is an executor task
-    // feeding a work pool, so registrations share the dispatcher's single
-    // event source and ordering with request traffic.
+    // routed through the executor rather than submitted straight to the
+    // pool: the warmer is an executor task feeding a work pool, so
+    // registrations share the dispatcher's single event source and ordering
+    // with request traffic.
     if let (Some(mut wrx), Some(wpool)) = (warm_rx, warm_pool) {
         let (wops, wcfg, wmet) = (ops, config, metrics);
         handle.spawn(async move {
@@ -931,10 +740,13 @@ fn dispatcher_async(
 /// waits instead of duplicating the build. `on_build` fires just before a
 /// fallible build starts (the batch path records its cache miss there, so
 /// repeated estimation on a failing operator stays visible in telemetry).
+/// A build that consumed the entry's pivoted-Cholesky warm-start hint
+/// credits the saved pivot-search passes to [`Metrics::warm_starts`].
 fn ensure_context(
     entry: &OpEntry,
     solver: &Ciq,
     policy: &SolverPolicy,
+    metrics: &Metrics,
     on_build: impl FnOnce(),
 ) -> crate::Result<(Arc<SolverContext>, u64, bool)> {
     let mut guard = entry.context.lock().unwrap();
@@ -945,7 +757,12 @@ fn ensure_context(
     // count what the build actually spends (Lanczos may break out early on
     // an invariant subspace) so hits credit the true savings
     let counting = crate::operators::CountingOp::new(entry.op.as_ref());
-    let ctx = Arc::new(solver.build_context(&counting, policy)?);
+    let (ctx, saved_passes) =
+        solver.build_context_with_hint(&counting, policy, entry.precond_hint.as_deref())?;
+    let ctx = Arc::new(ctx);
+    if saved_passes > 0 {
+        metrics.warm_starts.fetch_add(saved_passes as u64, Ordering::Relaxed);
+    }
     let estimation_mvms = counting.matvec_count();
     *guard = Some((ctx.clone(), estimation_mvms));
     Ok((ctx, estimation_mvms, true))
@@ -961,7 +778,7 @@ fn cached_context(
     metrics: &Metrics,
 ) -> crate::Result<Arc<SolverContext>> {
     let (ctx, estimation_mvms, built) =
-        ensure_context(entry, solver, policy, || metrics.record_cache_miss())?;
+        ensure_context(entry, solver, policy, metrics, || metrics.record_cache_miss())?;
     if !built {
         metrics.record_cache_hit(estimation_mvms);
     }
@@ -990,7 +807,7 @@ fn warm_entry(
         return;
     }
     let solver = Ciq::new(config.ciq.clone());
-    match ensure_context(entry, &solver, &config.policy, || {}) {
+    match ensure_context(entry, &solver, &config.policy, metrics, || {}) {
         Ok(_) => {
             metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
         }
@@ -1001,7 +818,13 @@ fn warm_entry(
     }
 }
 
-fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Metrics) {
+fn execute_batch(
+    ops: &OpMap,
+    config: &ServiceConfig,
+    batch: Batch,
+    metrics: &Metrics,
+    workspaces: &WorkspacePool,
+) {
     // Pin this batch's (operator, cache) pair up front: a concurrent
     // replace_operator swaps the map entry but cannot mix versions here.
     let entry = match ops.read().unwrap().get(&batch.op_name).cloned() {
@@ -1035,7 +858,11 @@ fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Me
         return;
     }
     let r = valid.len();
-    let mut b = Matrix::zeros(n, r);
+    // every solve buffer — the batch matrix included — comes from a pooled
+    // workspace: a steady-traffic flush allocates nothing below the request
+    // envelope once the workspace is warm
+    let mut ws = workspaces.checkout();
+    let mut b = ws.take_mat(n, r);
     for (j, req) in valid.iter().enumerate() {
         for i in 0..n {
             b[(i, j)] = req.rhs[i];
@@ -1055,7 +882,8 @@ fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Me
     // cost (or time blocked behind the warm pool's per-operator mutex) is
     // not flush latency and must not halve the shard's ceiling.
     let flush_started = Instant::now();
-    let result = ctx_res.and_then(|ctx| solver.solve_block(op.as_ref(), &b, kind, &ctx));
+    let result = ctx_res.and_then(|ctx| solver.solve_block_in(&mut ws, op.as_ref(), &b, kind, &ctx));
+    ws.give_mat(b);
     match result {
         Ok(res) => {
             // clamped-AIMD feedback: the observed flush latency steers this
@@ -1079,11 +907,14 @@ fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Me
             let full = res.col_iterations.iter().copied().max().unwrap_or(0) * r;
             metrics.record_column_work(res.column_work as u64, full as u64);
             for (j, req) in valid.into_iter().enumerate() {
+                // the response vector is the request envelope — the one
+                // allocation a request intrinsically owns
                 let col = res.solution.col(j);
                 metrics.record_latency(req.enqueued.elapsed());
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(Ok(col));
             }
+            ciq::recycle_block_result(&mut ws, res);
         }
         Err(e) => {
             // propagate the underlying error kind per request (no rewrap)
@@ -1093,11 +924,13 @@ fn execute_batch(ops: &OpMap, config: &ServiceConfig, batch: Batch, metrics: &Me
             }
         }
     }
+    metrics.record_workspace(&workspaces.checkin(ws));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::operators::DenseOp;
     use crate::rng::Pcg64;
     use crate::util::rel_err;
@@ -1343,58 +1176,173 @@ mod tests {
     fn adaptive_wait_shrinks_on_full_flushes_and_stretches_when_short() {
         // Full flushes (instant bursts of max_batch) must walk the shard's
         // wait down toward the floor; short deadline flushes walk it back up
-        // toward the static cap. Runs on both backends.
-        for backend in [DispatchBackend::Async, DispatchBackend::Threaded] {
-            let n = 12;
-            let (op, _) = make_op(n, 71);
-            let mut ops = HashMap::new();
-            ops.insert("k".to_string(), op);
-            let max_wait = Duration::from_millis(4);
-            let cfg = ServiceConfig {
-                max_batch: 4,
-                max_wait,
-                workers: 1,
-                ciq: CiqOptions { tol: 1e-8, ..Default::default() },
-                adaptive_wait: Some(AdaptiveWaitConfig { min_wait: Duration::from_micros(100) }),
-                backend,
-                ..Default::default()
-            };
-            let svc = SamplingService::start(cfg, ops);
-            let mut rng = Pcg64::seeded(72);
-            // bursts of exactly max_batch: every flush is full
-            for _ in 0..3 {
-                let tickets: Vec<Ticket> = (0..4)
-                    .map(|_| {
-                        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                        svc.submit("k", ReqKind::Whiten, b)
-                    })
-                    .collect();
-                for t in tickets {
-                    t.wait().unwrap();
-                }
+        // toward the static cap.
+        let n = 12;
+        let (op, _) = make_op(n, 71);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let max_wait = Duration::from_millis(4);
+        let cfg = ServiceConfig {
+            max_batch: 4,
+            max_wait,
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+            adaptive_wait: Some(AdaptiveWaitConfig { min_wait: Duration::from_micros(100) }),
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(72);
+        // bursts of exactly max_batch: every flush is full
+        for _ in 0..3 {
+            let tickets: Vec<Ticket> = (0..4)
+                .map(|_| {
+                    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    svc.submit("k", ReqKind::Whiten, b)
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
             }
-            let after_full = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
-            assert!(
-                after_full < max_wait,
-                "[{backend:?}] full flushes must shrink the wait: {after_full:?}"
-            );
-            // singletons: every flush is a short deadline flush
-            for _ in 0..8 {
-                let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
-            }
-            let after_short = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
-            assert!(
-                after_short > after_full,
-                "[{backend:?}] short deadline flushes must stretch the wait: \
-                 {after_full:?} → {after_short:?}"
-            );
-            assert!(after_short <= max_wait, "[{backend:?}] wait exceeded the static cap");
-            // deregistration prunes the wait telemetry too
-            assert!(svc.deregister_operator("k"));
-            assert!(svc.metrics().shard_wait("k/Whiten").is_none());
-            svc.shutdown();
         }
+        let after_full = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
+        assert!(after_full < max_wait, "full flushes must shrink the wait: {after_full:?}");
+        // singletons: every flush is a short deadline flush
+        for _ in 0..8 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
+        }
+        let after_short = svc.metrics().shard_wait("k/Whiten").expect("wait tuned");
+        assert!(
+            after_short > after_full,
+            "short deadline flushes must stretch the wait: {after_full:?} → {after_short:?}"
+        );
+        assert!(after_short <= max_wait, "wait exceeded the static cap");
+        // deregistration prunes the wait telemetry too
+        assert!(svc.deregister_operator("k"));
+        assert!(svc.metrics().shard_wait("k/Whiten").is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn steady_state_flushes_stop_growing_workspaces() {
+        // After warm-up, identical flushes must be served entirely from
+        // pooled workspace buffers: `workspace_grows` stands still while
+        // `workspace_checkouts` keeps climbing (the allocator-level proof
+        // lives in the alloc_regression integration test).
+        let n = 20;
+        let (op, _) = make_op(n, 81);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            max_batch: 4,
+            // long deadline: every burst of 4 deterministically flushes as a
+            // full width-4 batch, so warm-up provably covers the steady
+            // shape (a deadline-split narrower batch would still reuse the
+            // pooled buffers, but a never-warmed *wider* one would grow)
+            max_wait: Duration::from_millis(250),
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-8, ..Default::default() },
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(82);
+        let send_burst = |rng: &mut Pcg64| {
+            let tickets: Vec<Ticket> = (0..4)
+                .map(|_| {
+                    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    svc.submit("k", ReqKind::Whiten, b)
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+        };
+        for _ in 0..3 {
+            send_burst(&mut rng);
+        }
+        let m = svc.metrics();
+        let grows_warm = m.workspace_grows.load(Ordering::Relaxed);
+        let checkouts_warm = m.workspace_checkouts.load(Ordering::Relaxed);
+        assert!(grows_warm > 0, "warm-up must have grown the workspace");
+        assert!(checkouts_warm > 0);
+        for _ in 0..5 {
+            send_burst(&mut rng);
+        }
+        assert_eq!(
+            m.workspace_grows.load(Ordering::Relaxed),
+            grows_warm,
+            "steady-state flushes must perform zero workspace growth"
+        );
+        assert!(
+            m.workspace_checkouts.load(Ordering::Relaxed) > checkouts_warm,
+            "steady-state flushes must keep drawing from the pool"
+        );
+        assert!(m.workspace_bytes_high_water.load(Ordering::Relaxed) > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replace_operator_warm_starts_preconditioner_from_old_pivots() {
+        // Under the Preconditioned policy, replacing an operator must seed
+        // the new pivoted-Cholesky build with the previous version's pivot
+        // order: Metrics::warm_starts counts the skipped search passes, and
+        // the replacement still serves correct results.
+        let n = 24;
+        let mut rng = Pcg64::seeded(91);
+        let (op, k) = make_op(n, 92);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op.clone());
+        let rank = 6;
+        let cfg = ServiceConfig {
+            workers: 1,
+            ciq: CiqOptions { tol: 1e-9, ..Default::default() },
+            policy: SolverPolicy::Preconditioned(crate::ciq::PrecondConfig {
+                rank,
+                sigma2: Some(1.0),
+                build_tol: 1e-14,
+            }),
+            // deterministic: the first batch builds the context inline
+            warm_on_register: false,
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("k", ReqKind::Whiten, b.clone()).wait().unwrap();
+        assert_eq!(
+            svc.metrics().warm_starts.load(Ordering::Relaxed),
+            0,
+            "first build has no hint to consume"
+        );
+        // replace with the *same* operator: every hinted pivot must hold
+        svc.replace_operator("k", op);
+        svc.submit("k", ReqKind::Whiten, b).wait().unwrap();
+        assert_eq!(
+            svc.metrics().warm_starts.load(Ordering::Relaxed),
+            rank as u64,
+            "hinted rebuild must skip every pivot-search pass"
+        );
+        // correctness probe after the warm-started rebuild: the served
+        // sampling map R (assembled from unit vectors) must satisfy
+        // R Rᵀ = K — the invariant the Eqs. S12/S13 rotation preserves
+        // (R R' b ≠ b under preconditioning, so no whiten→sample roundtrip)
+        let tickets: Vec<Ticket> = (0..n)
+            .map(|j| {
+                let mut e = vec![0.0; n];
+                e[j] = 1.0;
+                svc.submit("k", ReqKind::Sample, e)
+            })
+            .collect();
+        let mut r_mat = Matrix::zeros(n, n);
+        for (j, t) in tickets.into_iter().enumerate() {
+            let col = t.wait().unwrap();
+            for i in 0..n {
+                r_mat[(i, j)] = col[i];
+            }
+        }
+        let rrt = r_mat.matmul(&r_mat.transpose());
+        let err = (&rrt - &k).fro_norm() / k.fro_norm();
+        assert!(err < 1e-2, "warm-started preconditioner drifted: R Rᵀ vs K rel err {err}");
+        svc.shutdown();
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! solves with `S'` (Appx. E, footnote: Jacobi preconditioner) and for the
 //! Gibbs-sampler posterior means.
 
+use crate::linalg::SolveWorkspace;
 use crate::operators::LinearOp;
 use crate::util::{axpy, dot, norm2};
 
@@ -29,25 +30,46 @@ pub fn pcg(
     precond: Option<&dyn Fn(&[f64]) -> Vec<f64>>,
     opts: &CgOptions,
 ) -> (Vec<f64>, f64, usize) {
+    let mut ws = SolveWorkspace::new();
+    pcg_in(&mut ws, op, b, precond, opts)
+}
+
+/// Workspace engine behind [`pcg`]: the iterate, residual, search direction,
+/// and `K·p` buffers are slabs from `ws` and each MVM runs through
+/// [`LinearOp::matvec_in`], so the unpreconditioned warmed path is
+/// allocation-free (a `precond` closure still allocates its own return —
+/// that contract is the caller's). The returned solution is
+/// workspace-backed.
+pub fn pcg_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    b: &[f64],
+    precond: Option<&dyn Fn(&[f64]) -> Vec<f64>>,
+    opts: &CgOptions,
+) -> (Vec<f64>, f64, usize) {
     let n = op.size();
     assert_eq!(b.len(), n);
     let bnorm = norm2(b);
     if bnorm == 0.0 {
-        return (vec![0.0; n], 0.0, 0);
+        return (ws.take_vec(n), 0.0, 0);
     }
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut z = match precond {
-        Some(p) => p(&r),
-        None => r.clone(),
-    };
-    let mut p = z.clone();
+    let mut x = ws.take_vec(n);
+    let mut r = ws.take_vec(n);
+    r.copy_from_slice(b);
+    let mut z = ws.take_vec(n);
+    match precond {
+        Some(pre) => z.copy_from_slice(&pre(&r)),
+        None => z.copy_from_slice(&r),
+    }
+    let mut p = ws.take_vec(n);
+    p.copy_from_slice(&z);
+    let mut kp = ws.take_vec(n);
     let mut rz = dot(&r, &z);
     let mut iters = 0;
     let mut res = 1.0;
     for _ in 0..opts.max_iters {
         iters += 1;
-        let kp = op.matvec(&p);
+        op.matvec_in(ws, &p, &mut kp);
         let pkp = dot(&p, &kp);
         if pkp <= 0.0 || !pkp.is_finite() {
             break; // loss of positive definiteness; return best iterate
@@ -59,10 +81,10 @@ pub fn pcg(
         if res < opts.tol {
             break;
         }
-        z = match precond {
-            Some(pre) => pre(&r),
-            None => r.clone(),
-        };
+        match precond {
+            Some(pre) => z.copy_from_slice(&pre(&r)),
+            None => z.copy_from_slice(&r),
+        }
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -70,6 +92,10 @@ pub fn pcg(
             p[i] = z[i] + beta * p[i];
         }
     }
+    ws.give_vec(r);
+    ws.give_vec(z);
+    ws.give_vec(p);
+    ws.give_vec(kp);
     (x, res, iters)
 }
 

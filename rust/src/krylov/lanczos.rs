@@ -1,6 +1,7 @@
 //! Lanczos tridiagonalization and extreme-eigenvalue estimation (Appx. B.2).
 
 use crate::linalg::eigen::tridiag_eigenvalues;
+use crate::linalg::SolveWorkspace;
 use crate::operators::LinearOp;
 use crate::rng::Pcg64;
 use crate::util::{axpy, dot, norm2};
@@ -33,23 +34,49 @@ pub fn lanczos_tridiag(
     iters: usize,
     reorth: bool,
 ) -> (Vec<f64>, Vec<f64>) {
+    let mut ws = SolveWorkspace::new();
+    lanczos_tridiag_in(&mut ws, op, b, iters, reorth)
+}
+
+/// Workspace engine behind [`lanczos_tridiag`]: the Krylov vectors and the
+/// reorthogonalization basis are slabs from `ws`, and each MVM runs through
+/// [`LinearOp::matvec_in`] — a warmed workspace runs O(N)-allocation-free.
+/// The returned `(alphas, betas)` are workspace-backed; give them back with
+/// [`SolveWorkspace::give_vec`] when reusing the workspace.
+pub fn lanczos_tridiag_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    b: &[f64],
+    iters: usize,
+    reorth: bool,
+) -> (Vec<f64>, Vec<f64>) {
     let n = op.size();
     assert_eq!(b.len(), n);
-    let mut alphas = Vec::with_capacity(iters);
-    let mut betas = Vec::new();
+    let jmax = iters.min(n);
+    let mut alphas = ws.take_vec(iters.max(1));
+    alphas.clear();
+    let mut betas = ws.take_vec(iters.max(1));
+    betas.clear();
     let nb = norm2(b);
     if nb == 0.0 {
-        return (vec![0.0], vec![]);
+        alphas.push(0.0);
+        return (alphas, betas);
     }
-    let mut q: Vec<f64> = b.iter().map(|x| x / nb).collect();
-    let mut q_prev = vec![0.0; n];
+    let mut q = ws.take_vec(n);
+    for i in 0..n {
+        q[i] = b[i] / nb;
+    }
+    let mut q_prev = ws.take_vec(n);
+    let mut w = ws.take_vec(n);
+    let mut basis = ws.take_vec(if reorth { jmax * n } else { 0 });
+    let mut nbasis = 0usize;
     let mut beta_prev = 0.0;
-    let mut basis: Vec<Vec<f64>> = Vec::new();
-    for j in 0..iters.min(n) {
+    for j in 0..jmax {
         if reorth {
-            basis.push(q.clone());
+            basis[nbasis * n..(nbasis + 1) * n].copy_from_slice(&q);
+            nbasis += 1;
         }
-        let mut w = op.matvec(&q);
+        op.matvec_in(ws, &q, &mut w);
         if beta_prev != 0.0 {
             axpy(-beta_prev, &q_prev, &mut w);
         }
@@ -57,22 +84,30 @@ pub fn lanczos_tridiag(
         axpy(-alpha, &q, &mut w);
         if reorth {
             // full Gram–Schmidt against all previous basis vectors
-            for v in &basis {
+            for t in 0..nbasis {
+                let v = &basis[t * n..(t + 1) * n];
                 let c = dot(v, &w);
                 axpy(-c, v, &mut w);
             }
         }
         alphas.push(alpha);
         let beta = norm2(&w);
-        if j + 1 < iters.min(n) {
+        if j + 1 < jmax {
             if beta < 1e-13 * alpha.abs().max(1.0) {
                 break; // invariant subspace found
             }
             betas.push(beta);
-            q_prev = std::mem::replace(&mut q, w.iter().map(|x| x / beta).collect());
+            for i in 0..n {
+                q_prev[i] = q[i];
+                q[i] = w[i] / beta;
+            }
             beta_prev = beta;
         }
     }
+    ws.give_vec(q);
+    ws.give_vec(q_prev);
+    ws.give_vec(w);
+    ws.give_vec(basis);
     (alphas, betas)
 }
 

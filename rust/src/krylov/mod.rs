@@ -1,6 +1,11 @@
 //! Krylov-subspace methods: Lanczos extreme-eigenvalue estimation,
 //! MINRES, multi-shift MINRES (msMINRES — Alg. 4 of the paper), and
 //! preconditioned conjugate gradients.
+//!
+//! Every solver exposes a `*_in` entry point taking a
+//! [`crate::linalg::SolveWorkspace`] whose O(N) state comes from pooled
+//! slabs — the zero-allocation steady-state path — with the original owned
+//! signatures kept as thin wrappers over a transient workspace.
 
 pub mod lanczos;
 pub mod minres;
@@ -8,7 +13,10 @@ pub mod msminres;
 pub mod cg;
 pub mod slq;
 
-pub use lanczos::{estimate_extreme_eigenvalues, lanczos_tridiag, EigenBounds};
+pub use lanczos::{estimate_extreme_eigenvalues, lanczos_tridiag, lanczos_tridiag_in, EigenBounds};
 pub use minres::minres;
-pub use msminres::{msminres, msminres_block, MsMinresBlockResult, MsMinresOptions, MsMinresResult};
-pub use cg::{pcg, CgOptions};
+pub use msminres::{
+    msminres, msminres_block, msminres_block_in, msminres_in, MsMinresBlockResult,
+    MsMinresBlockSolve, MsMinresOptions, MsMinresResult, MsMinresSolve,
+};
+pub use cg::{pcg, pcg_in, CgOptions};

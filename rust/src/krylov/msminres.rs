@@ -6,8 +6,21 @@
 //! Per shift, the tridiagonal QR is updated with Givens rotations and the
 //! solution advances through a three-term "search direction" recurrence, so
 //! total extra storage is `O(QN)` (Property 1).
+//!
+//! ## Workspace entry points
+//!
+//! The engines are [`msminres_in`] / [`msminres_block_in`]: every O(N) and
+//! O(N·r) buffer — the `Q` shift recurrences, the Lanczos vectors, the
+//! compacted block panels, even the returned solutions — is a slab drawn
+//! from a caller-supplied [`SolveWorkspace`], and the per-iteration MVMs run
+//! through [`LinearOp::matvec_in`] / [`LinearOp::matmat_in`]. A warmed
+//! workspace therefore makes the steady-state solve **allocation-free**
+//! (pinned by the `alloc_regression` integration tests with a counting
+//! global allocator). [`msminres`] / [`msminres_block`] keep their original
+//! signatures as thin wrappers that own a transient workspace, so no caller
+//! breaks and results are bit-for-bit those of the `_in` engines.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::util::{axpy, dot, norm2};
 
@@ -49,91 +62,114 @@ pub struct MsMinresResult {
     pub shift_work: usize,
 }
 
-/// Per-shift recurrence state.
-struct ShiftState {
-    /// previous two Givens rotations
-    c1: f64,
-    s1: f64,
-    c2: f64,
-    s2: f64,
-    /// running rhs component; |phi_bar| is the absolute residual
-    phi_bar: f64,
-    /// search directions d_{k-1}, d_{k-2}
-    d_prev: Vec<f64>,
-    d_prev2: Vec<f64>,
-    /// current solution
-    x: Vec<f64>,
-    /// frozen once converged
-    done: bool,
+/// Workspace-backed result of [`msminres_in`]: every buffer came from the
+/// caller's [`SolveWorkspace`] — hand them back with
+/// [`MsMinresSolve::recycle`] once consumed so the next solve stays
+/// allocation-free.
+#[derive(Debug)]
+pub struct MsMinresSolve {
+    /// `Q × n` row-major matrix whose row `q` is the contiguous solution
+    /// `c_q ≈ (K + t_q I)^{-1} b`.
+    pub solutions: Matrix,
+    /// Relative residuals per shift at exit (len `Q`).
+    pub residuals: Vec<f64>,
+    /// Iterations executed (= MVMs performed).
+    pub iterations: usize,
+    /// Whether the stopping tolerance was reached.
+    pub converged: bool,
+    /// Max-over-shifts relative residual after each iteration.
+    pub residual_history: Vec<f64>,
+    /// Active-shift recurrence work (see [`MsMinresResult::shift_work`]).
+    pub shift_work: usize,
 }
 
-impl ShiftState {
-    fn new(n: usize, beta1: f64) -> ShiftState {
-        ShiftState {
-            c1: 1.0,
-            s1: 0.0,
-            c2: 1.0,
-            s2: 0.0,
-            phi_bar: beta1,
-            d_prev: vec![0.0; n],
-            d_prev2: vec![0.0; n],
-            x: vec![0.0; n],
-            done: false,
-        }
-    }
-
-    /// Advance one MINRES step given this iteration's Lanczos scalars and
-    /// vector. `beta_k` couples v_{k-1},v_k (0 at k=1); `beta_next` is the
-    /// new subdiagonal.
-    #[inline]
-    fn step(&mut self, shift: f64, alpha: f64, beta_k: f64, beta_next: f64, v: &[f64]) {
-        let eps = self.s2 * beta_k;
-        let delta_bar = self.c2 * beta_k;
-        let a = alpha + shift;
-        let delta = self.c1 * delta_bar + self.s1 * a;
-        let gamma_bar = -self.s1 * delta_bar + self.c1 * a;
-        let gamma = (gamma_bar * gamma_bar + beta_next * beta_next).sqrt();
-        // Givens zeroing beta_next; guard breakdown (gamma == 0 happens only
-        // for exactly-singular shifted systems, impossible for t > 0 SPD).
-        let (c, s) = if gamma > 0.0 { (gamma_bar / gamma, beta_next / gamma) } else { (1.0, 0.0) };
-        let tau = c * self.phi_bar;
-        self.phi_bar = -s * self.phi_bar;
-        // d_k = (v_k - delta d_{k-1} - eps d_{k-2}) / gamma
-        // then x += tau d_k. Reuse d_prev2's buffer as the new direction.
-        let inv_gamma = if gamma > 0.0 { 1.0 / gamma } else { 0.0 };
-        for i in 0..v.len() {
-            let d_new = (v[i] - delta * self.d_prev[i] - eps * self.d_prev2[i]) * inv_gamma;
-            self.d_prev2[i] = d_new; // temporarily stash
-            self.x[i] += tau * d_new;
-        }
-        std::mem::swap(&mut self.d_prev, &mut self.d_prev2);
-        // after swap: d_prev = d_new, d_prev2 = old d_prev  ✓
-        self.c2 = self.c1;
-        self.s2 = self.s1;
-        self.c1 = c;
-        self.s1 = s;
-    }
-
-    /// Retire a converged shift: mark it done and release its two `O(N)`
-    /// search-direction buffers. `x` (the answer) and `phi_bar` (the frozen
-    /// residual) survive; the recurrence never advances again — the
-    /// single-vector analogue of the block solver retiring a column from the
-    /// matmat.
-    fn freeze(&mut self) {
-        self.done = true;
-        self.d_prev = Vec::new();
-        self.d_prev2 = Vec::new();
+impl MsMinresSolve {
+    /// Return every buffer to the workspace.
+    pub fn recycle(self, ws: &mut SolveWorkspace) {
+        ws.give_mat(self.solutions);
+        ws.give_vec(self.residuals);
+        ws.give_vec(self.residual_history);
     }
 }
 
-/// Weighted CIQ stopping rule shared by [`msminres`] and [`msminres_block`]:
-/// stop when the `|w|`-weighted average relative residual falls below `tol`.
-fn weighted_converged(states: &[ShiftState], ws: &[f64], beta1: f64, tol: f64) -> bool {
-    let wsum: f64 = ws.iter().map(|w| w.abs()).sum();
-    let wres: f64 = states
-        .iter()
-        .zip(ws)
-        .map(|(st, w)| w.abs() * (st.phi_bar.abs() / beta1))
+/// Per-(column,shift) recurrence scalars, stored `SC` to a slab row:
+/// the two previous Givens rotations, the running rhs component (|phi| is
+/// the absolute residual), a done flag, and the parity selecting which half
+/// of the direction slab currently holds `d_{k-1}`.
+const SC: usize = 8;
+const SC_C1: usize = 0;
+const SC_S1: usize = 1;
+const SC_C2: usize = 2;
+const SC_S2: usize = 3;
+const SC_PHI: usize = 4;
+const SC_DONE: usize = 5;
+const SC_PAR: usize = 6;
+
+#[inline]
+fn sc_init(sc: &mut [f64], beta1: f64) {
+    sc[SC_C1] = 1.0;
+    sc[SC_S1] = 0.0;
+    sc[SC_C2] = 1.0;
+    sc[SC_S2] = 0.0;
+    sc[SC_PHI] = beta1;
+    sc[SC_DONE] = 0.0;
+    sc[SC_PAR] = 0.0;
+    sc[7] = 0.0;
+}
+
+/// Advance one shift's MINRES step given this iteration's Lanczos scalars
+/// and vector. `beta_k` couples v_{k-1},v_k (0 at k=1); `beta_next` is the
+/// new subdiagonal. `dirs` holds the shift's two `O(N)` search directions as
+/// halves of one `2n` slab; `SC_PAR` selects which half is `d_{k-1}`, the
+/// new direction overwrites `d_{k-2}`'s half, and parity flips — the slab
+/// equivalent of the old owned-buffer swap, byte-for-byte the same numerics.
+#[inline]
+fn shift_step(
+    sc: &mut [f64],
+    shift: f64,
+    alpha: f64,
+    beta_k: f64,
+    beta_next: f64,
+    v: &[f64],
+    dirs: &mut [f64],
+    x: &mut [f64],
+) {
+    let n = v.len();
+    let eps = sc[SC_S2] * beta_k;
+    let delta_bar = sc[SC_C2] * beta_k;
+    let a = alpha + shift;
+    let delta = sc[SC_C1] * delta_bar + sc[SC_S1] * a;
+    let gamma_bar = -sc[SC_S1] * delta_bar + sc[SC_C1] * a;
+    let gamma = (gamma_bar * gamma_bar + beta_next * beta_next).sqrt();
+    // Givens zeroing beta_next; guard breakdown (gamma == 0 happens only
+    // for exactly-singular shifted systems, impossible for t > 0 SPD).
+    let (c, s) = if gamma > 0.0 { (gamma_bar / gamma, beta_next / gamma) } else { (1.0, 0.0) };
+    let tau = c * sc[SC_PHI];
+    sc[SC_PHI] = -s * sc[SC_PHI];
+    // d_k = (v_k - delta d_{k-1} - eps d_{k-2}) / gamma, then x += tau d_k.
+    let inv_gamma = if gamma > 0.0 { 1.0 / gamma } else { 0.0 };
+    let (half_a, half_b) = dirs.split_at_mut(n);
+    let (d_prev, d_new_buf) =
+        if sc[SC_PAR] == 0.0 { (half_a, half_b) } else { (half_b, half_a) };
+    for i in 0..n {
+        let d_new = (v[i] - delta * d_prev[i] - eps * d_new_buf[i]) * inv_gamma;
+        d_new_buf[i] = d_new;
+        x[i] += tau * d_new;
+    }
+    sc[SC_PAR] = 1.0 - sc[SC_PAR];
+    sc[SC_C2] = sc[SC_C1];
+    sc[SC_S2] = sc[SC_S1];
+    sc[SC_C1] = c;
+    sc[SC_S1] = s;
+}
+
+/// Weighted CIQ stopping rule shared by [`msminres_in`] and
+/// [`msminres_block_in`]: stop when the `|w|`-weighted average relative
+/// residual over one column's `nq` shift records falls below `tol`.
+fn weighted_converged(sc: &[f64], nq: usize, weights: &[f64], beta1: f64, tol: f64) -> bool {
+    let wsum: f64 = weights.iter().map(|w| w.abs()).sum();
+    let wres: f64 = (0..nq)
+        .map(|q| weights[q].abs() * (sc[q * SC + SC_PHI].abs() / beta1))
         .sum::<f64>()
         / wsum.max(1e-300);
     wres < tol
@@ -143,41 +179,83 @@ fn weighted_converged(states: &[ShiftState], ws: &[f64], beta1: f64, tol: f64) -
 ///
 /// `shifts` must be ≥ 0 (SPD + nonnegative shifts keeps every system SPD,
 /// which is what the CIQ quadrature produces — Eq. S5).
+///
+/// Thin wrapper over [`msminres_in`] with a transient workspace; results are
+/// bit-for-bit those of the workspace engine.
 pub fn msminres(
     op: &dyn LinearOp,
     b: &[f64],
     shifts: &[f64],
     opts: &MsMinresOptions,
 ) -> MsMinresResult {
+    let mut ws = SolveWorkspace::new();
+    let sol = msminres_in(&mut ws, op, b, shifts, opts);
+    let solutions = (0..shifts.len()).map(|q| sol.solutions.row(q).to_vec()).collect();
+    MsMinresResult {
+        solutions,
+        residuals: sol.residuals,
+        iterations: sol.iterations,
+        converged: sol.converged,
+        residual_history: sol.residual_history,
+        shift_work: sol.shift_work,
+    }
+}
+
+/// Workspace engine behind [`msminres`]: all state lives in slabs drawn from
+/// `ws`, MVMs run through [`LinearOp::matvec_in`], and a warmed workspace
+/// makes the whole solve allocation-free. The returned buffers belong to
+/// `ws` — recycle them ([`MsMinresSolve::recycle`]) when done.
+pub fn msminres_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    b: &[f64],
+    shifts: &[f64],
+    opts: &MsMinresOptions,
+) -> MsMinresSolve {
     let n = op.size();
     assert_eq!(b.len(), n);
     assert!(!shifts.is_empty());
+    let nq = shifts.len();
+    if let Some(w) = &opts.weights {
+        assert_eq!(w.len(), nq, "msminres: weights must match the shift count");
+    }
+    let cp = ws.checkpoint();
     let beta1 = norm2(b);
     if beta1 == 0.0 {
-        return MsMinresResult {
-            solutions: vec![vec![0.0; n]; shifts.len()],
-            residuals: vec![0.0; shifts.len()],
+        return MsMinresSolve {
+            solutions: ws.take_mat(nq, n),
+            residuals: ws.take_vec(nq),
             iterations: 0,
             converged: true,
-            residual_history: vec![],
+            residual_history: ws.take_vec(0),
             shift_work: 0,
         };
     }
-    let mut states: Vec<ShiftState> = shifts.iter().map(|_| ShiftState::new(n, beta1)).collect();
 
-    // Lanczos state
-    let mut v: Vec<f64> = b.iter().map(|x| x / beta1).collect();
-    let mut v_prev = vec![0.0; n];
+    // state slabs (all zeroed by the workspace)
+    let mut sc = ws.take_vec(nq * SC);
+    for q in 0..nq {
+        sc_init(&mut sc[q * SC..(q + 1) * SC], beta1);
+    }
+    let mut dirs = ws.take_vec(nq * 2 * n);
+    let mut xs = ws.take_mat(nq, n); // row q = solution for shift q
+    let mut v = ws.take_vec(n);
+    for i in 0..n {
+        v[i] = b[i] / beta1;
+    }
+    let mut v_prev = ws.take_vec(n);
+    let mut w = ws.take_vec(n);
+    let mut history = ws.take_vec(opts.max_iters);
+
     let mut beta_k = 0.0f64; // couples v_prev and v
-    let mut iters = 0;
+    let mut iters = 0usize;
     let mut converged = false;
-    let mut residual_history = Vec::new();
     let mut shift_work = 0usize;
 
     for _k in 1..=opts.max_iters {
         iters += 1;
         // Lanczos expansion
-        let mut w = op.matvec(&v);
+        op.matvec_in(ws, &v, &mut w);
         if beta_k != 0.0 {
             axpy(-beta_k, &v_prev, &mut w);
         }
@@ -186,24 +264,34 @@ pub fn msminres(
         let beta_next = norm2(&w);
 
         // advance only the active shifts; a converged shift is frozen —
-        // buffers released, recurrence never touched again
-        for (q, st) in states.iter_mut().enumerate() {
-            if !st.done {
+        // its recurrence is never touched again
+        for q in 0..nq {
+            let base = q * SC;
+            if sc[base + SC_DONE] == 0.0 {
                 shift_work += 1;
-                st.step(shifts[q], alpha, beta_k, beta_next, &v);
-                if (st.phi_bar.abs() / beta1) < opts.tol {
-                    st.freeze();
+                shift_step(
+                    &mut sc[base..base + SC],
+                    shifts[q],
+                    alpha,
+                    beta_k,
+                    beta_next,
+                    &v,
+                    &mut dirs[q * 2 * n..(q + 1) * 2 * n],
+                    xs.row_mut(q),
+                );
+                if (sc[base + SC_PHI].abs() / beta1) < opts.tol {
+                    sc[base + SC_DONE] = 1.0;
                 }
             }
         }
 
-        residual_history
-            .push(states.iter().map(|st| st.phi_bar.abs() / beta1).fold(0.0, f64::max));
+        history[iters - 1] =
+            (0..nq).map(|q| sc[q * SC + SC_PHI].abs() / beta1).fold(0.0, f64::max);
 
         // stopping criterion
         let stop = match &opts.weights {
-            Some(ws) => weighted_converged(&states, ws, beta1, opts.tol),
-            None => states.iter().all(|st| st.done),
+            Some(wq) => weighted_converged(&sc, nq, wq, beta1, opts.tol),
+            None => (0..nq).all(|q| sc[q * SC + SC_DONE] != 0.0),
         };
         if stop {
             converged = true;
@@ -224,12 +312,27 @@ pub fn msminres(
         beta_k = beta_next;
     }
 
-    MsMinresResult {
-        residuals: states.iter().map(|st| st.phi_bar.abs() / beta1).collect(),
-        solutions: states.into_iter().map(|st| st.x).collect(),
+    history.truncate(iters);
+    let mut residuals = ws.take_vec(nq);
+    for q in 0..nq {
+        residuals[q] = sc[q * SC + SC_PHI].abs() / beta1;
+    }
+    ws.give_vec(sc);
+    ws.give_vec(dirs);
+    ws.give_vec(v);
+    ws.give_vec(v_prev);
+    ws.give_vec(w);
+    debug_assert_eq!(
+        ws.leaked_since(&cp),
+        3,
+        "msminres_in must keep exactly solutions + residuals + history checked out"
+    );
+    MsMinresSolve {
+        solutions: xs,
+        residuals,
         iterations: iters,
         converged,
-        residual_history,
+        residual_history: history,
         shift_work,
     }
 }
@@ -250,19 +353,29 @@ pub struct MsMinresBlockResult {
     pub column_work: usize,
 }
 
-/// All per-column state of one right-hand side in the blocked solve, so a
-/// converged column can be retired from the matmat in one move.
-struct BlockColumn {
-    /// Original column index in `b_mat`.
-    index: usize,
-    beta1: f64,
-    v: Vec<f64>,
-    v_prev: Vec<f64>,
-    beta_k: f64,
-    iters: usize,
-    /// One recurrence per shift.
-    states: Vec<ShiftState>,
-    done: bool,
+/// Workspace-backed result of [`msminres_block_in`] — recycle via
+/// [`MsMinresBlockSolve::recycle`] once consumed.
+#[derive(Debug)]
+pub struct MsMinresBlockSolve {
+    /// `(r·Q) × n` row-major matrix: row `j·Q + q` is the contiguous
+    /// solution for RHS column `j` under shift `q`.
+    pub solutions: Matrix,
+    /// Iterations executed per original column.
+    pub col_iterations: Vec<usize>,
+    /// Per-shift relative residuals (max over columns).
+    pub residuals: Vec<f64>,
+    /// Matmat column-work actually paid (see
+    /// [`MsMinresBlockResult::column_work`]).
+    pub column_work: usize,
+}
+
+impl MsMinresBlockSolve {
+    /// Return every buffer to the workspace.
+    pub fn recycle(self, ws: &mut SolveWorkspace) {
+        ws.give_mat(self.solutions);
+        ws.give_usize(self.col_iterations);
+        ws.give_vec(self.residuals);
+    }
 }
 
 /// Block msMINRES: independent recurrences for each column of `b_mat`,
@@ -274,46 +387,95 @@ struct BlockColumn {
 /// remaining unconverged columns, so per-iteration work shrinks with
 /// convergence instead of staying at full width. `column_work` records the
 /// matmat columns actually paid for.
+///
+/// Thin wrapper over [`msminres_block_in`] with a transient workspace.
 pub fn msminres_block(
     op: &dyn LinearOp,
     b_mat: &Matrix,
     shifts: &[f64],
     opts: &MsMinresOptions,
 ) -> MsMinresBlockResult {
+    let mut ws = SolveWorkspace::new();
+    let blk = msminres_block_in(&mut ws, op, b_mat, shifts, opts);
+    let (n, r, nq) = (op.size(), b_mat.cols(), shifts.len());
+    let MsMinresBlockSolve { solutions: sols, col_iterations, residuals, column_work } = blk;
+    let mut solutions: Vec<Matrix> = (0..nq).map(|_| Matrix::zeros(n, r)).collect();
+    for j in 0..r {
+        for (q, sol) in solutions.iter_mut().enumerate() {
+            let row = sols.row(j * nq + q);
+            for i in 0..n {
+                sol[(i, j)] = row[i];
+            }
+        }
+    }
+    MsMinresBlockResult { solutions, col_iterations, residuals, column_work }
+}
+
+/// Workspace engine behind [`msminres_block`]: per-column Lanczos vectors,
+/// the `r × Q` shift recurrences, the compacted MVM panels, and the returned
+/// solutions all live in `ws` slabs; the shared per-iteration MVM runs
+/// through [`LinearOp::matmat_in`]. Warmed workspace ⇒ zero heap
+/// allocations for the whole solve.
+pub fn msminres_block_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    b_mat: &Matrix,
+    shifts: &[f64],
+    opts: &MsMinresOptions,
+) -> MsMinresBlockSolve {
     let n = op.size();
     let r = b_mat.cols();
     assert_eq!(b_mat.rows(), n);
     assert!(!shifts.is_empty());
+    let nq = shifts.len();
+    if let Some(w) = &opts.weights {
+        assert_eq!(w.len(), nq, "msminres_block: weights must match the shift count");
+    }
+    let cp = ws.checkpoint();
 
-    let mut active: Vec<BlockColumn> = Vec::with_capacity(r);
-    let mut finished: Vec<BlockColumn> = Vec::new();
+    // per-(column,shift) recurrence state + per-column Lanczos state
+    let mut sc = ws.take_vec(r * nq * SC);
+    let mut dirs = ws.take_vec(r * nq * 2 * n);
+    let mut xs = ws.take_mat(r * nq, n); // row j*nq+q = solution (j, q)
+    let mut lanc = ws.take_vec(r * 2 * n); // per column: [v | v_prev]
+    let mut beta1s = ws.take_vec(r);
+    let mut beta_ks = ws.take_vec(r);
+    let mut iters = ws.take_usize(r);
+    let mut cdone = ws.take_usize(r); // 1 once a column retired
+    let mut active = ws.take_usize(r); // active original-column indices
+    let mut wcol = ws.take_vec(n);
+
+    let mut nactive = 0usize;
     for j in 0..r {
-        let col = b_mat.col(j);
-        let beta1 = norm2(&col);
-        let mut bc = BlockColumn {
-            index: j,
-            beta1,
-            v: vec![0.0; n],
-            v_prev: vec![0.0; n],
-            beta_k: 0.0,
-            iters: 0,
-            states: shifts.iter().map(|_| ShiftState::new(n, beta1)).collect(),
-            done: beta1 == 0.0,
-        };
-        if bc.done {
-            finished.push(bc);
-        } else {
+        let mut sum = 0.0;
+        for i in 0..n {
+            let x = b_mat[(i, j)];
+            sum += x * x;
+        }
+        let beta1 = sum.sqrt();
+        beta1s[j] = beta1;
+        for q in 0..nq {
+            sc_init(&mut sc[(j * nq + q) * SC..(j * nq + q + 1) * SC], beta1);
+        }
+        if beta1 > 0.0 {
+            let vcol = &mut lanc[j * 2 * n..j * 2 * n + n];
             for i in 0..n {
-                bc.v[i] = col[i] / beta1;
+                vcol[i] = b_mat[(i, j)] / beta1;
             }
-            active.push(bc);
+            active[nactive] = j;
+            nactive += 1;
+        } else {
+            cdone[j] = 1; // zero RHS short-circuits with iters = 0
         }
     }
+    active.truncate(nactive);
 
     let mut column_work = 0usize;
-    let mut wcol = vec![0.0; n];
-    // reused across iterations; re-allocated only when compaction shrinks it
-    let mut vmat = Matrix::zeros(n, active.len().max(1));
+    // reused across iterations; swapped for narrower pooled panels when
+    // compaction shrinks the active width
+    let mut vmat = ws.take_mat(n, nactive.max(1));
+    let mut wmat = ws.take_mat(n, nactive.max(1));
+
     for _k in 1..=opts.max_iters {
         if active.is_empty() {
             break;
@@ -321,91 +483,118 @@ pub fn msminres_block(
         // compacted matmat: only unconverged columns ride the block MVM
         let width = active.len();
         if vmat.cols() != width {
-            vmat = Matrix::zeros(n, width);
+            ws.give_mat(vmat);
+            ws.give_mat(wmat);
+            vmat = ws.take_mat(n, width);
+            wmat = ws.take_mat(n, width);
         }
-        for (c, col) in active.iter().enumerate() {
+        for (c, &j) in active.iter().enumerate() {
+            let vcol = &lanc[j * 2 * n..j * 2 * n + n];
             for i in 0..n {
-                vmat[(i, c)] = col.v[i];
+                vmat[(i, c)] = vcol[i];
             }
         }
-        let w = op.matmat(&vmat);
+        op.matmat_in(ws, &vmat, &mut wmat);
         column_work += width;
 
-        for (c, col) in active.iter_mut().enumerate() {
-            col.iters += 1;
+        let mut any_done = false;
+        for pos in 0..width {
+            let j = active[pos];
+            iters[j] += 1;
+            let beta1 = beta1s[j];
+            let beta_k = beta_ks[j];
             // per-column Lanczos update
+            let (vcol, vprev) = lanc[j * 2 * n..(j + 1) * 2 * n].split_at_mut(n);
             let mut alpha = 0.0;
             for i in 0..n {
-                let wi = w[(i, c)] - col.beta_k * col.v_prev[i];
+                let wi = wmat[(i, pos)] - beta_k * vprev[i];
                 wcol[i] = wi;
-                alpha += col.v[i] * wi;
+                alpha += vcol[i] * wi;
             }
             let mut bn2 = 0.0;
             for i in 0..n {
-                let wi = wcol[i] - alpha * col.v[i];
+                let wi = wcol[i] - alpha * vcol[i];
                 wcol[i] = wi;
                 bn2 += wi * wi;
             }
             let beta_next = bn2.sqrt();
             let mut all_done = true;
-            for (q, st) in col.states.iter_mut().enumerate() {
-                if !st.done {
-                    st.step(shifts[q], alpha, col.beta_k, beta_next, &col.v);
-                    if (st.phi_bar.abs() / col.beta1) < opts.tol {
-                        // same freeze as the single-vector path: drop the
-                        // shift's direction buffers the moment it converges
-                        st.freeze();
+            for q in 0..nq {
+                let base = (j * nq + q) * SC;
+                if sc[base + SC_DONE] == 0.0 {
+                    shift_step(
+                        &mut sc[base..base + SC],
+                        shifts[q],
+                        alpha,
+                        beta_k,
+                        beta_next,
+                        vcol,
+                        &mut dirs[(j * nq + q) * 2 * n..(j * nq + q + 1) * 2 * n],
+                        xs.row_mut(j * nq + q),
+                    );
+                    if (sc[base + SC_PHI].abs() / beta1) < opts.tol {
+                        // same freeze as the single-vector path: the shift's
+                        // recurrence is never advanced again
+                        sc[base + SC_DONE] = 1.0;
                     }
                 }
-                all_done &= st.done;
+                all_done &= sc[base + SC_DONE] != 0.0;
             }
             // same stopping criterion as `msminres`: weighted residual when
             // CIQ weights are supplied, all-shifts-done otherwise
             let stop = match &opts.weights {
-                Some(ws) => weighted_converged(&col.states, ws, col.beta1, opts.tol),
+                Some(wq) => {
+                    weighted_converged(&sc[j * nq * SC..(j + 1) * nq * SC], nq, wq, beta1, opts.tol)
+                }
                 None => all_done,
             };
             if stop || beta_next < 1e-13 * alpha.abs().max(1.0) {
-                col.done = true;
+                cdone[j] = 1;
+                any_done = true;
                 continue;
             }
             for i in 0..n {
-                col.v_prev[i] = col.v[i];
-                col.v[i] = wcol[i] / beta_next;
+                vprev[i] = vcol[i];
+                vcol[i] = wcol[i] / beta_next;
             }
-            col.beta_k = beta_next;
+            beta_ks[j] = beta_next;
         }
 
-        // retire converged columns so the next matmat shrinks
-        if active.iter().any(|c| c.done) {
-            let mut still = Vec::with_capacity(active.len());
-            for col in active {
-                if col.done {
-                    finished.push(col);
-                } else {
-                    still.push(col);
+        // retire converged columns (stable order) so the next matmat shrinks
+        if any_done {
+            active.retain(|&j| cdone[j] == 0);
+        }
+    }
+
+    // per-shift residuals: max over columns with a nonzero RHS
+    let mut residuals = ws.take_vec(nq);
+    for j in 0..r {
+        if beta1s[j] > 0.0 {
+            for (q, res) in residuals.iter_mut().enumerate() {
+                let rr = sc[(j * nq + q) * SC + SC_PHI].abs() / beta1s[j];
+                if rr > *res {
+                    *res = rr;
                 }
             }
-            active = still;
         }
     }
-    finished.append(&mut active);
 
-    let mut solutions: Vec<Matrix> = (0..shifts.len()).map(|_| Matrix::zeros(n, r)).collect();
-    let mut residuals = vec![0.0f64; shifts.len()];
-    let mut col_iterations = vec![0usize; r];
-    for col in &finished {
-        col_iterations[col.index] = col.iters;
-        for (q, st) in col.states.iter().enumerate() {
-            for i in 0..n {
-                solutions[q][(i, col.index)] = st.x[i];
-            }
-            if col.beta1 > 0.0 {
-                residuals[q] = residuals[q].max(st.phi_bar.abs() / col.beta1);
-            }
-        }
-    }
-    MsMinresBlockResult { solutions, col_iterations, residuals, column_work }
+    ws.give_vec(sc);
+    ws.give_vec(dirs);
+    ws.give_vec(lanc);
+    ws.give_vec(beta1s);
+    ws.give_vec(beta_ks);
+    ws.give_usize(cdone);
+    ws.give_usize(active);
+    ws.give_vec(wcol);
+    ws.give_mat(vmat);
+    ws.give_mat(wmat);
+    debug_assert_eq!(
+        ws.leaked_since(&cp),
+        3,
+        "msminres_block_in must keep exactly solutions + col_iterations + residuals checked out"
+    );
+    MsMinresBlockSolve { solutions: xs, col_iterations: iters, residuals, column_work }
 }
 
 #[cfg(test)]
@@ -660,6 +849,106 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_workspace_engines_match_owned_api_bit_for_bit() {
+        // The `_in` engines against a *reused, dirty* workspace must produce
+        // exactly (bit-for-bit) the owned API's results across kernels,
+        // shifts, and widths — stale pooled state can never leak into a
+        // solve.
+        let mut ws = SolveWorkspace::new();
+        crate::util::proptest::check_default("*_in == owned API bit-for-bit", move |rng, _| {
+            let n = 8 + rng.below(20);
+            let r = 1 + rng.below(4);
+            let a = Matrix::randn(n, n, rng);
+            let mut k = a.matmul(&a.transpose());
+            for i in 0..n {
+                k[(i, i)] += n as f64 * (0.2 + rng.uniform());
+            }
+            let op = DenseOp::new(k);
+            let nq = 1 + rng.below(3);
+            let shifts: Vec<f64> = (0..nq).map(|_| rng.uniform() * 30.0).collect();
+            let weights = if rng.uniform() < 0.3 {
+                Some((0..nq).map(|_| rng.normal()).collect())
+            } else {
+                None
+            };
+            let opts = MsMinresOptions {
+                max_iters: 40 + rng.below(100),
+                tol: 1e-9,
+                weights,
+            };
+            // single-vector
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let owned = msminres(&op, &b, &shifts, &opts);
+            let sol = msminres_in(&mut ws, &op, &b, &shifts, &opts);
+            crate::prop_assert!(sol.iterations == owned.iterations, "iteration mismatch");
+            crate::prop_assert!(sol.converged == owned.converged, "convergence mismatch");
+            crate::prop_assert!(sol.shift_work == owned.shift_work, "shift_work mismatch");
+            crate::prop_assert!(sol.residuals == owned.residuals, "residual mismatch");
+            crate::prop_assert!(
+                sol.residual_history == owned.residual_history,
+                "history mismatch"
+            );
+            for q in 0..nq {
+                crate::prop_assert!(
+                    sol.solutions.row(q) == owned.solutions[q].as_slice(),
+                    "shift {q} solution mismatch"
+                );
+            }
+            sol.recycle(&mut ws);
+            // blocked
+            let bm = Matrix::randn(n, r, rng);
+            let owned_blk = msminres_block(&op, &bm, &shifts, &opts);
+            let blk = msminres_block_in(&mut ws, &op, &bm, &shifts, &opts);
+            crate::prop_assert!(
+                blk.col_iterations == owned_blk.col_iterations,
+                "block col_iterations mismatch"
+            );
+            crate::prop_assert!(blk.residuals == owned_blk.residuals, "block residual mismatch");
+            crate::prop_assert!(
+                blk.column_work == owned_blk.column_work,
+                "block column_work mismatch"
+            );
+            for j in 0..r {
+                for q in 0..nq {
+                    let row = blk.solutions.row(j * nq + q);
+                    let col = owned_blk.solutions[q].col(j);
+                    crate::prop_assert!(row == col.as_slice(), "block ({j},{q}) mismatch");
+                }
+            }
+            blk.recycle(&mut ws);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn warmed_workspace_solves_without_growing() {
+        // Identical repeated solves on one workspace must stop allocating
+        // after the first (the steady-state contract the coordinator's pool
+        // relies on; the allocator-level proof lives in the alloc_regression
+        // integration test).
+        let n = 30;
+        let k = random_spd(n, 55);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(56);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let bv: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shifts = [0.1, 1.0, 10.0];
+        let opts = MsMinresOptions { max_iters: 200, tol: 1e-9, weights: None };
+        let mut ws = SolveWorkspace::new();
+        for _ in 0..2 {
+            msminres_block_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+            msminres_in(&mut ws, &op, &bv, &shifts, &opts).recycle(&mut ws);
+        }
+        let grows = ws.grows();
+        for _ in 0..3 {
+            msminres_block_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+            msminres_in(&mut ws, &op, &bv, &shifts, &opts).recycle(&mut ws);
+        }
+        assert_eq!(ws.grows(), grows, "warmed msMINRES workspace must not re-allocate");
+        assert!(ws.checkouts() > 0);
     }
 
     #[test]

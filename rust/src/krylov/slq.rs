@@ -10,10 +10,10 @@
 //! `O(probes · J · ξ(K))` without ever factorizing `K`.
 
 use crate::linalg::eigen::sym_eig;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::rng::Pcg64;
-use crate::util::{axpy, dot, norm2};
+use crate::util::norm2;
 use crate::{Error, Result};
 
 /// Options for the SLQ estimators.
@@ -37,47 +37,21 @@ impl Default for SlqOptions {
 /// run Lanczos from `z`, eigendecompose the small tridiagonal `T = V Θ Vᵀ`,
 /// and return `‖z‖² Σ_k (V_{1k})² f(θ_k)`.
 fn probe_quadrature(
+    ws: &mut SolveWorkspace,
     op: &dyn LinearOp,
     z: &[f64],
     iters: usize,
     f: &dyn Fn(f64) -> f64,
 ) -> Result<f64> {
-    let n = op.size();
     let nz = norm2(z);
     if nz == 0.0 {
         return Ok(0.0);
     }
-    let mut alphas = Vec::with_capacity(iters);
-    let mut betas: Vec<f64> = Vec::new();
-    let mut q: Vec<f64> = z.iter().map(|x| x / nz).collect();
-    let mut q_prev = vec![0.0; n];
-    let mut beta_prev = 0.0;
     // full reorthogonalization: J is small and Ritz accuracy matters for log
-    let mut basis: Vec<Vec<f64>> = Vec::new();
-    for j in 0..iters.min(n) {
-        basis.push(q.clone());
-        let mut w = op.matvec(&q);
-        if beta_prev != 0.0 {
-            axpy(-beta_prev, &q_prev, &mut w);
-        }
-        let alpha = dot(&q, &w);
-        axpy(-alpha, &q, &mut w);
-        for v in &basis {
-            let c = dot(v, &w);
-            axpy(-c, v, &mut w);
-        }
-        alphas.push(alpha);
-        let beta = norm2(&w);
-        if j + 1 < iters.min(n) {
-            if beta < 1e-13 * alpha.abs().max(1.0) {
-                break;
-            }
-            betas.push(beta);
-            q_prev = std::mem::replace(&mut q, w.iter().map(|x| x / beta).collect());
-            beta_prev = beta;
-        }
-    }
-    // tridiagonal eigen-pairs (need first-row eigenvector weights)
+    let (alphas, betas) = crate::krylov::lanczos_tridiag_in(ws, op, z, iters, true);
+    // tridiagonal eigen-pairs (need first-row eigenvector weights); the
+    // J×J eigensolve below still allocates — it is O(J²) dense work on a
+    // tiny matrix, off the O(N) steady-state path the workspace covers.
     let m = alphas.len();
     let mut t = Matrix::zeros(m, m);
     for i in 0..m {
@@ -87,6 +61,8 @@ fn probe_quadrature(
         t[(i, i + 1)] = betas[i];
         t[(i + 1, i)] = betas[i];
     }
+    ws.give_vec(alphas);
+    ws.give_vec(betas);
     let eig = sym_eig(&t)?;
     let mut acc = 0.0;
     for k in 0..m {
@@ -106,14 +82,38 @@ pub fn trace_of_function(
     f: impl Fn(f64) -> f64,
     opts: &SlqOptions,
 ) -> Result<f64> {
+    let mut ws = SolveWorkspace::new();
+    trace_of_function_in(&mut ws, op, f, opts)
+}
+
+/// Workspace engine behind [`trace_of_function`]: probe vectors and every
+/// O(N) Lanczos buffer come from `ws` (the per-probe `J×J` tridiagonal
+/// eigensolve still allocates — tiny dense work off the O(N) path).
+pub fn trace_of_function_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    f: impl Fn(f64) -> f64,
+    opts: &SlqOptions,
+) -> Result<f64> {
     let n = op.size();
     let mut rng = Pcg64::seeded(opts.seed);
     let mut acc = 0.0;
+    let mut z = ws.take_vec(n);
     for _ in 0..opts.probes {
         // Rademacher probe
-        let z: Vec<f64> = (0..n).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
-        acc += probe_quadrature(op, &z, opts.lanczos_iters, &f)?;
+        for zi in z.iter_mut() {
+            *zi = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        }
+        let probe = probe_quadrature(ws, op, &z, opts.lanczos_iters, &f);
+        match probe {
+            Ok(p) => acc += p,
+            Err(e) => {
+                ws.give_vec(z);
+                return Err(e);
+            }
+        }
     }
+    ws.give_vec(z);
     Ok(acc / opts.probes as f64)
 }
 

@@ -46,12 +46,23 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+std::thread_local! {
+    // Per-thread B-panel pack scratch for [`gemm_nn`]: grows to the largest
+    // k·NR this thread has seen, then every later call is allocation-free —
+    // part of the zero-allocation steady-state contract of the solve stack.
+    // Deliberately retained for the thread's lifetime (8·k_max·NR bytes per
+    // pool worker): the pre-thread-local code allocated this buffer on
+    // *every* call, so retention trades a small, bounded per-thread floor
+    // for the removal of per-call heap traffic.
+    static PACK: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// `C += A · B` with `A: m×k`, `B: k×n`, `C: m×n`, all contiguous
 /// row-major. B is packed one `NR`-column panel at a time so the micro-
-/// kernel streams it from a dense buffer.
+/// kernel streams it from a dense buffer (a reused thread-local, so warm
+/// calls never touch the heap).
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    let mut pack = Vec::new();
-    gemm_nn_with_pack(m, k, n, a, b, c, &mut pack);
+    PACK.with(|p| gemm_nn_with_pack(m, k, n, a, b, c, &mut *p.borrow_mut()));
 }
 
 /// [`gemm_nn`] with a caller-owned pack scratch buffer (resized as needed),

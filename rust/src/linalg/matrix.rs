@@ -3,6 +3,7 @@
 //! to partition work across the persistent thread pool.
 
 use super::gemm;
+use super::workspace::SolveWorkspace;
 use crate::rng::Pcg64;
 use crate::util::threadpool::{num_threads, parallel_fill, parallel_map};
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
@@ -45,6 +46,12 @@ impl Matrix {
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols, "buffer size mismatch");
         Matrix { rows, cols, data }
+    }
+
+    /// Take back the row-major backing buffer (capacity preserved) — the
+    /// [`super::workspace::SolveWorkspace`] recycling path.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
     }
 
     /// Matrix of iid standard normals.
@@ -106,14 +113,22 @@ impl Matrix {
 
     /// `self * v` (matrix–vector).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        assert_eq!(v.len(), self.cols, "matvec dim mismatch");
         let mut out = vec![0.0; self.rows];
-        parallel_fill(&mut out, 256, |start, block| {
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// `self * v` written into `out` — no allocation, same threading as
+    /// [`Self::matvec`]. The zero-allocation solve path
+    /// ([`crate::operators::LinearOp::matvec_in`]) bottoms out here.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols, "matvec dim mismatch");
+        assert_eq!(out.len(), self.rows, "matvec out dim mismatch");
+        parallel_fill(out, 256, |start, block| {
             for (k, o) in block.iter_mut().enumerate() {
                 *o = gemm::dot_unrolled(self.row(start + k), v);
             }
         });
-        out
     }
 
     /// `selfᵀ * v` without forming the transpose: the `n = 1` case of
@@ -152,19 +167,29 @@ impl Matrix {
     /// panel of output rows and runs the register-blocked
     /// [`gemm::gemm_nn`] micro-kernel over it.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Self::matmul`] written into a pre-sized `out` — no allocation
+    /// (the B-panel pack scratch inside [`gemm::gemm_nn`] is a reused
+    /// thread-local), same threading.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        assert_eq!(out.rows, self.rows, "matmul out rows mismatch");
+        assert_eq!(out.cols, other.cols, "matmul out cols mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        if m == 0 || k == 0 || n == 0 {
-            return out;
-        }
         let data_out = out.as_mut_slice();
+        data_out.fill(0.0);
+        if m == 0 || k == 0 || n == 0 {
+            return;
+        }
         parallel_fill(data_out, 64 * n, |start_flat, block| {
             let row0 = start_flat / n;
             let nrows = block.len() / n;
             gemm::gemm_nn(nrows, k, n, &self.data[row0 * k..(row0 + nrows) * k], &other.data, block);
         });
-        out
     }
 
     /// `selfᵀ * other` without forming the transpose. The shared row
@@ -206,6 +231,56 @@ impl Matrix {
             }
         }
         Matrix::from_vec(m, n, flat)
+    }
+
+    /// `selfᵀ * other` into a pre-sized `out`, with the per-stripe partial
+    /// products drawn from `ws` instead of fresh heap buffers — the
+    /// zero-allocation analogue of [`Self::t_matmul`] (same stripe split,
+    /// identical numerics: each stripe reduces its own rows, partials are
+    /// summed in stripe order).
+    pub fn t_matmul_in(&self, ws: &mut SolveWorkspace, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.rows, other.rows, "t_matmul dim mismatch");
+        assert_eq!(out.rows, self.cols, "t_matmul out rows mismatch");
+        assert_eq!(out.cols, other.cols, "t_matmul out cols mismatch");
+        let (p_rows, m, n) = (self.rows, self.cols, other.cols);
+        out.as_mut_slice().fill(0.0);
+        if p_rows == 0 || m == 0 || n == 0 {
+            return;
+        }
+        let stripes = num_threads().min(p_rows.div_ceil(64).max(1));
+        if stripes <= 1 || p_rows * m * n < 65_536 {
+            gemm::gemm_tn(p_rows, m, n, &self.data, &other.data, out.as_mut_slice());
+            return;
+        }
+        let rows_per = p_rows.div_ceil(stripes);
+        // one flat scratch holds every stripe's partial; blocks of exactly
+        // m*n elements line up with the stripes
+        let mut partials = ws.take_vec(stripes * m * n);
+        parallel_fill(&mut partials, m * n, |start, block| {
+            let s = start / (m * n);
+            let r0 = (s * rows_per).min(p_rows);
+            let r1 = ((s + 1) * rows_per).min(p_rows);
+            if r1 > r0 {
+                gemm::gemm_tn(r1 - r0, m, n, &self.data[r0 * m..r1 * m], &other.data[r0 * n..r1 * n], block);
+            }
+        });
+        let flat = out.as_mut_slice();
+        for s in 0..stripes {
+            for (o, p) in flat.iter_mut().zip(&partials[s * m * n..(s + 1) * m * n]) {
+                *o += p;
+            }
+        }
+        ws.give_vec(partials);
+    }
+
+    /// `selfᵀ * v` into a pre-sized `out` without allocating. Serial
+    /// [`gemm::gemm_tn`] — the in-place path serves skinny reductions
+    /// (preconditioner factors), where striping has nothing to win.
+    pub fn matvec_t_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
+        assert_eq!(out.len(), self.cols, "matvec_t out dim mismatch");
+        out.fill(0.0);
+        gemm::gemm_tn(self.rows, self.cols, 1, &self.data, v, out);
     }
 
     /// Scale in place.
@@ -369,6 +444,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_versions() {
+        let mut rng = Pcg64::seeded(31);
+        let mut ws = SolveWorkspace::new();
+        // small (serial) and large (striped) shapes
+        for &(p, m, n) in &[(9usize, 5usize, 7usize), (601, 40, 23)] {
+            let a = Matrix::randn(p, m, &mut rng);
+            let b = Matrix::randn(p, n, &mut rng);
+            let mut out = Matrix::zeros(m, n);
+            a.t_matmul_in(&mut ws, &b, &mut out);
+            assert!(out.max_abs_diff(&a.t_matmul(&b)) == 0.0, "t_matmul_in ({p},{m},{n})");
+            let sq = Matrix::randn(m, m, &mut rng);
+            let mut out2 = Matrix::zeros(m, n);
+            sq.matmul_into(&a.t_matmul(&b), &mut out2);
+            assert!(out2.max_abs_diff(&sq.matmul(&out)) == 0.0, "matmul_into ({m},{n})");
+            let v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut tv = vec![1.0; m]; // nonzero: _into must overwrite
+            a.matvec_t_into(&v, &mut tv);
+            let tref = a.matvec_t(&v);
+            for (x, y) in tv.iter().zip(&tref) {
+                assert!((x - y).abs() < 1e-9, "matvec_t_into ({p},{m})");
+            }
+            let w: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut mv = vec![1.0; p];
+            a.matvec_into(&w, &mut mv);
+            assert_eq!(mv, a.matvec(&w), "matvec_into ({p},{m})");
+        }
+        // into_vec round-trip preserves the buffer
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = m.into_vec();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

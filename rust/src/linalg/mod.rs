@@ -6,12 +6,16 @@
 //! operator's panel MVM), Cholesky factorization with triangular solves
 //! ([`chol`]), a symmetric eigendecomposition (Householder
 //! tridiagonalization + implicit-QL, [`eigen`]) used as the *exact*
-//! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline.
+//! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline, and
+//! the [`workspace`] buffer pool behind the solve stack's zero-allocation
+//! steady state (`rust/DESIGN.md` §4).
 
 mod matrix;
 pub mod chol;
 pub mod eigen;
 pub mod gemm;
+pub mod workspace;
 
 pub use chol::Cholesky;
 pub use matrix::Matrix;
+pub use workspace::{SolveWorkspace, WorkspacePool, WsStats};

@@ -1,0 +1,443 @@
+//! `SolveWorkspace` — a growable, checkpointable scratch arena for the
+//! solve stack (krylov → ciq → coordinator).
+//!
+//! The paper's promise is that `K^{±1/2} b` costs ~100 MVMs, so at serving
+//! scale the MVM kernel should be the *only* cost — yet a heap-allocating
+//! solver puts the allocator on the hot path once per O(N) buffer per solve
+//! (Q shift recurrences × several O(N)/O(N·r) buffers for msMINRES alone).
+//! The workspace turns that steady-state traffic into buffer *reuse*:
+//!
+//! * [`SolveWorkspace::take_vec`] / [`SolveWorkspace::take_mat`] /
+//!   [`SolveWorkspace::take_usize`] hand out owned, zeroed buffers drawn
+//!   from a free list — a fresh heap allocation (**a grow**) happens only
+//!   when no pooled buffer is large enough, i.e. during first-touch warm-up
+//!   or after a workload-shape change.
+//! * [`SolveWorkspace::give_vec`] / [`SolveWorkspace::give_mat`] /
+//!   [`SolveWorkspace::give_usize`] return buffers for the next solve.
+//!   Matrices and vectors share one `f64` pool (a matrix is checked in as
+//!   its backing buffer), so a shrinking block solve can recycle its old
+//!   wide panel as the next narrower one.
+//! * A warmed workspace running the same solve shape performs **zero** heap
+//!   allocations — the property the `alloc_regression` integration tests
+//!   pin with a counting global allocator
+//!   ([`crate::util::allocs::CountingAllocator`]).
+//!
+//! Buffers are handed out as plain owned `Vec`/[`Matrix`] values rather
+//! than borrows of one slab: the borrow checker then imposes no artificial
+//! lifetime coupling between scratch buffers, a leaked buffer degrades to a
+//! one-time re-grow instead of unsafety, and the operator layer can take
+//! further scratch from the same workspace mid-solve
+//! ([`crate::operators::LinearOp::matmat_in`]).
+//!
+//! ## Checkpoints
+//!
+//! [`SolveWorkspace::checkpoint`] snapshots the number of outstanding
+//! checkouts; [`SolveWorkspace::leaked_since`] reports how many buffers a
+//! region failed to give back. Solver entry points use this in debug builds
+//! to prove they are leak-free — a leak is not unsafe, but every leaked
+//! buffer is a grow (= a heap allocation) on the next identical solve.
+//!
+//! ## Pools of workspaces
+//!
+//! [`WorkspacePool`] is the coordinator-facing layer: a lazily-grown set of
+//! workspaces checked out per batch flush (at most one per concurrent batch
+//! worker) and returned afterwards, with [`WorkspacePool::prune`] dropping
+//! pooled buffers when operator churn invalidates the steady-state shapes.
+//! [`WorkspacePool::checkin`] drains each workspace's telemetry so
+//! `Metrics::workspace_{checkouts,grows,bytes_high_water}` reflect live
+//! traffic.
+
+use super::Matrix;
+use std::sync::Mutex;
+
+/// Telemetry drained from a workspace by [`SolveWorkspace::drain_stats`]:
+/// `checkouts`/`grows` are deltas since the last drain,
+/// `bytes_high_water` is the workspace's lifetime peak of owned bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WsStats {
+    /// Buffer checkouts since the last drain.
+    pub checkouts: u64,
+    /// Checkouts that had to heap-allocate since the last drain.
+    pub grows: u64,
+    /// Peak bytes of buffer capacity this workspace has ever owned.
+    pub bytes_high_water: u64,
+}
+
+/// Best-fit lookup: index of the smallest pooled buffer with capacity ≥ `n`.
+/// Best-fit (rather than first/last-fit) makes the pool's capacity-multiset
+/// evolution a function of the request sequence alone, so a warmed workspace
+/// replaying an identical solve provably never grows.
+fn best_fit<T>(free: &[Vec<T>], n: usize) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, b) in free.iter().enumerate() {
+        let c = b.capacity();
+        if c >= n {
+            match best {
+                Some((_, bc)) if bc <= c => {}
+                _ => best = Some((i, c)),
+            }
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Snapshot of a workspace's outstanding-checkout count
+/// (see [`SolveWorkspace::checkpoint`]).
+#[derive(Clone, Copy, Debug)]
+pub struct WsCheckpoint {
+    outstanding: i64,
+}
+
+/// A growable pool of reusable scratch buffers for the solve stack.
+#[derive(Default)]
+pub struct SolveWorkspace {
+    /// Free `f64` buffers (matrices check in/out through here too).
+    free: Vec<Vec<f64>>,
+    /// Free `usize` buffers (iteration counters, active-column index lists).
+    free_usize: Vec<Vec<usize>>,
+    /// Lifetime checkouts.
+    checkouts: u64,
+    /// Lifetime checkouts that heap-allocated.
+    grows: u64,
+    /// Counters already reported through [`Self::drain_stats`].
+    reported_checkouts: u64,
+    reported_grows: u64,
+    /// Current / peak bytes of capacity owned (free + checked out).
+    bytes_owned: u64,
+    bytes_high_water: u64,
+    /// Checked-out-minus-returned buffer count (can go negative if a caller
+    /// donates an external buffer; only deltas between checkpoints matter).
+    outstanding: i64,
+}
+
+impl SolveWorkspace {
+    /// An empty workspace; every buffer it ever owns comes from growth.
+    pub fn new() -> SolveWorkspace {
+        SolveWorkspace::default()
+    }
+
+    /// Check out a zero-filled `f64` buffer of length `n`. Reuses the
+    /// **smallest** pooled buffer whose capacity fits (best-fit: a small
+    /// request can never waste a large buffer another take needs, so a
+    /// repeated solve's take sequence is satisfiable from exactly the
+    /// buffers its first run grew); grows (one heap allocation) only when
+    /// none fits.
+    pub fn take_vec(&mut self, n: usize) -> Vec<f64> {
+        self.checkouts += 1;
+        self.outstanding += 1;
+        let mut v = match best_fit(&self.free, n) {
+            Some(i) => self.free.swap_remove(i),
+            None => {
+                let v = Vec::with_capacity(n);
+                self.grew(v.capacity() as u64 * 8);
+                v
+            }
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return an `f64` buffer to the pool.
+    pub fn give_vec(&mut self, v: Vec<f64>) {
+        self.outstanding -= 1;
+        self.free.push(v);
+    }
+
+    /// Check out a zeroed `rows × cols` matrix backed by the `f64` pool.
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Matrix {
+        let data = self.take_vec(rows * cols);
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Return a matrix's backing buffer to the `f64` pool.
+    pub fn give_mat(&mut self, m: Matrix) {
+        self.give_vec(m.into_vec());
+    }
+
+    /// Check out a zero-filled `usize` buffer of length `n` (best-fit, like
+    /// [`Self::take_vec`]).
+    pub fn take_usize(&mut self, n: usize) -> Vec<usize> {
+        self.checkouts += 1;
+        self.outstanding += 1;
+        let mut v = match best_fit(&self.free_usize, n) {
+            Some(i) => self.free_usize.swap_remove(i),
+            None => {
+                let v = Vec::with_capacity(n);
+                self.grew(v.capacity() as u64 * 8);
+                v
+            }
+        };
+        v.clear();
+        v.resize(n, 0);
+        v
+    }
+
+    /// Return a `usize` buffer to the pool.
+    pub fn give_usize(&mut self, v: Vec<usize>) {
+        self.outstanding -= 1;
+        self.free_usize.push(v);
+    }
+
+    fn grew(&mut self, bytes: u64) {
+        self.grows += 1;
+        self.bytes_owned += bytes;
+        self.bytes_high_water = self.bytes_high_water.max(self.bytes_owned);
+    }
+
+    /// Snapshot the outstanding-checkout count.
+    pub fn checkpoint(&self) -> WsCheckpoint {
+        WsCheckpoint { outstanding: self.outstanding }
+    }
+
+    /// Buffers checked out since `cp` that were never given back. Zero for a
+    /// leak-free region; each leak costs one grow on the next warm solve.
+    pub fn leaked_since(&self, cp: &WsCheckpoint) -> i64 {
+        self.outstanding - cp.outstanding
+    }
+
+    /// Lifetime checkouts.
+    pub fn checkouts(&self) -> u64 {
+        self.checkouts
+    }
+
+    /// Lifetime checkouts that heap-allocated. A warmed workspace running a
+    /// fixed solve shape stops advancing this — the zero-allocation
+    /// steady-state invariant.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Peak bytes of buffer capacity ever owned.
+    pub fn bytes_high_water(&self) -> u64 {
+        self.bytes_high_water
+    }
+
+    /// Free buffers currently pooled (telemetry / tests).
+    pub fn pooled_buffers(&self) -> usize {
+        self.free.len() + self.free_usize.len()
+    }
+
+    /// Drop every pooled buffer (outstanding checkouts are unaffected).
+    /// The next solves re-grow from scratch — used when the workload shape
+    /// changes for good (operator deregistration).
+    pub fn clear(&mut self) {
+        let freed: u64 = self.free.iter().map(|v| v.capacity() as u64 * 8).sum::<u64>()
+            + self.free_usize.iter().map(|v| v.capacity() as u64 * 8).sum::<u64>();
+        self.bytes_owned = self.bytes_owned.saturating_sub(freed);
+        self.free.clear();
+        self.free_usize.clear();
+    }
+
+    /// Drain telemetry: `(checkouts, grows)` as deltas since the previous
+    /// drain plus the lifetime `bytes_high_water`.
+    pub fn drain_stats(&mut self) -> WsStats {
+        let stats = WsStats {
+            checkouts: self.checkouts - self.reported_checkouts,
+            grows: self.grows - self.reported_grows,
+            bytes_high_water: self.bytes_high_water,
+        };
+        self.reported_checkouts = self.checkouts;
+        self.reported_grows = self.grows;
+        stats
+    }
+}
+
+/// A lazily-grown pool of [`SolveWorkspace`]s shared by the coordinator's
+/// batch workers: one workspace is checked out per batch flush and returned
+/// afterwards, so at most `workers` workspaces ever exist and each worker's
+/// steady-state flush runs entirely on warmed buffers.
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<SolveWorkspace>>,
+}
+
+impl WorkspacePool {
+    /// An empty pool; workspaces are created on first checkout.
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Check out a workspace (a pooled one when available, else fresh).
+    pub fn checkout(&self) -> SolveWorkspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a workspace, draining its telemetry for the caller to record.
+    pub fn checkin(&self, mut ws: SolveWorkspace) -> WsStats {
+        let stats = ws.drain_stats();
+        self.free.lock().unwrap().push(ws);
+        stats
+    }
+
+    /// Drop the pooled buffers of every idle workspace (checked-out ones are
+    /// untouched and return normally). Called on operator deregistration so
+    /// workspace scratch sized for a retired operator does not linger. (The
+    /// GEMM layer's per-thread pack/panel thread-locals are out of scope:
+    /// they are retained for the worker threads' lifetime by design — see
+    /// `linalg::gemm` — and are bounded by `8·k_max·NR` bytes per thread.)
+    pub fn prune(&self) {
+        for ws in self.free.lock().unwrap().iter_mut() {
+            ws.clear();
+        }
+    }
+
+    /// Idle workspaces currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_takes_stop_growing() {
+        let mut ws = SolveWorkspace::new();
+        // warm-up: three distinct sizes
+        let a = ws.take_vec(100);
+        let b = ws.take_vec(50);
+        let m = ws.take_mat(10, 7);
+        assert_eq!(ws.grows(), 3);
+        ws.give_vec(a);
+        ws.give_vec(b);
+        ws.give_mat(m);
+        // steady state: identical shape, zero growth
+        for _ in 0..10 {
+            let a = ws.take_vec(100);
+            let b = ws.take_vec(50);
+            let m = ws.take_mat(10, 7);
+            assert!(a.iter().all(|&x| x == 0.0));
+            assert_eq!(m.rows(), 10);
+            ws.give_vec(a);
+            ws.give_vec(b);
+            ws.give_mat(m);
+        }
+        assert_eq!(ws.grows(), 3, "warmed workspace must not re-allocate");
+        assert_eq!(ws.checkouts(), 33);
+        assert!(ws.bytes_high_water() >= (100 + 50 + 70) * 8);
+    }
+
+    #[test]
+    fn buffers_are_zeroed_on_reuse() {
+        let mut ws = SolveWorkspace::new();
+        let mut v = ws.take_vec(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        ws.give_vec(v);
+        let v = ws.take_vec(8);
+        assert!(v.iter().all(|&x| x == 0.0), "recycled buffer must be zeroed");
+        ws.give_vec(v);
+        let mut m = ws.take_mat(2, 4);
+        m[(1, 3)] = 3.0;
+        ws.give_mat(m);
+        let m = ws.take_mat(4, 2);
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+        ws.give_mat(m);
+    }
+
+    #[test]
+    fn smaller_requests_reuse_bigger_buffers() {
+        let mut ws = SolveWorkspace::new();
+        let big = ws.take_vec(1000);
+        ws.give_vec(big);
+        let small = ws.take_vec(10);
+        assert_eq!(ws.grows(), 1, "a big pooled buffer must serve a smaller request");
+        assert_eq!(small.len(), 10);
+        ws.give_vec(small);
+    }
+
+    #[test]
+    fn best_fit_never_wastes_a_big_buffer_on_a_small_request() {
+        // Regression for the last-fit policy: a small take must not consume
+        // a large pooled buffer that a later take in the same solve needs —
+        // that would force a grow on a warmed workspace, whatever the free
+        // list's order.
+        let mut ws = SolveWorkspace::new();
+        let a = ws.take_vec(100);
+        let b = ws.take_vec(50);
+        ws.give_vec(a); // free order: [100, 50]
+        ws.give_vec(b);
+        let small = ws.take_vec(40);
+        let big = ws.take_vec(80);
+        assert_eq!(ws.grows(), 2, "best-fit must serve both takes from the pool");
+        // reversed free order: give-back sequence flips the list
+        ws.give_vec(big); // free order: [100, 50] again after both returns
+        ws.give_vec(small);
+        let small = ws.take_vec(40);
+        let big = ws.take_vec(80);
+        assert_eq!(ws.grows(), 2, "order of the free list must not matter");
+        ws.give_vec(small);
+        ws.give_vec(big);
+    }
+
+    #[test]
+    fn checkpoint_detects_leaks() {
+        let mut ws = SolveWorkspace::new();
+        let cp = ws.checkpoint();
+        let a = ws.take_vec(4);
+        let b = ws.take_vec(4);
+        ws.give_vec(a);
+        assert_eq!(ws.leaked_since(&cp), 1);
+        ws.give_vec(b);
+        assert_eq!(ws.leaked_since(&cp), 0);
+    }
+
+    #[test]
+    fn usize_pool_is_independent() {
+        let mut ws = SolveWorkspace::new();
+        let u = ws.take_usize(16);
+        assert!(u.iter().all(|&x| x == 0));
+        ws.give_usize(u);
+        let grows = ws.grows();
+        let u = ws.take_usize(16);
+        assert_eq!(ws.grows(), grows);
+        ws.give_usize(u);
+    }
+
+    #[test]
+    fn clear_drops_pooled_buffers_and_stats_drain() {
+        let mut ws = SolveWorkspace::new();
+        let v = ws.take_vec(64);
+        ws.give_vec(v);
+        assert_eq!(ws.pooled_buffers(), 1);
+        let s = ws.drain_stats();
+        assert_eq!(s.checkouts, 1);
+        assert_eq!(s.grows, 1);
+        assert!(s.bytes_high_water >= 64 * 8);
+        // second drain reports only the delta
+        let s2 = ws.drain_stats();
+        assert_eq!(s2.checkouts, 0);
+        assert_eq!(s2.grows, 0);
+        ws.clear();
+        assert_eq!(ws.pooled_buffers(), 0);
+        let v = ws.take_vec(64);
+        assert_eq!(ws.drain_stats().grows, 1, "cleared workspace must re-grow");
+        ws.give_vec(v);
+    }
+
+    #[test]
+    fn workspace_pool_recycles_and_prunes() {
+        let pool = WorkspacePool::new();
+        let mut ws = pool.checkout();
+        let v = ws.take_vec(32);
+        ws.give_vec(v);
+        let stats = pool.checkin(ws);
+        assert_eq!(stats.checkouts, 1);
+        assert_eq!(stats.grows, 1);
+        assert_eq!(pool.pooled(), 1);
+        // the recycled workspace serves the same shape without growing
+        let mut ws = pool.checkout();
+        let v = ws.take_vec(32);
+        ws.give_vec(v);
+        let stats = pool.checkin(ws);
+        assert_eq!(stats.checkouts, 1);
+        assert_eq!(stats.grows, 0, "pooled workspace must stay warm across checkins");
+        pool.prune();
+        let mut ws = pool.checkout();
+        assert_eq!(ws.pooled_buffers(), 0, "prune must drop pooled buffers");
+        let v = ws.take_vec(32);
+        ws.give_vec(v);
+        assert_eq!(pool.checkin(ws).grows, 1);
+    }
+}

@@ -1,7 +1,13 @@
 //! Operator combinators: shifts, scaling, sums, diagonals, low-rank updates.
+//!
+//! Every combinator carries both a fused blocked [`LinearOp::matmat`] (so
+//! batch economics survive composition) and a workspace-fed
+//! [`LinearOp::matmat_in`] that draws its panel scratch from the caller's
+//! [`SolveWorkspace`] instead of allocating — composition therefore
+//! preserves the solve stack's zero-allocation steady state.
 
 use super::LinearOp;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 
 /// `K + t I` — the shifted systems at the heart of msMINRES-CIQ.
 pub struct ShiftedOp<'a, T: LinearOp + ?Sized> {
@@ -35,6 +41,18 @@ impl<T: LinearOp + ?Sized> LinearOp for ShiftedOp<'_, T> {
             *yi += self.shift * xi;
         }
         y
+    }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.inner.matvec_in(ws, x, out);
+        for (yi, xi) in out.iter_mut().zip(x) {
+            *yi += self.shift * xi;
+        }
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.inner.matmat_in(ws, x, out);
+        for (yi, xi) in out.as_mut_slice().iter_mut().zip(x.as_slice()) {
+            *yi += self.shift * xi;
+        }
     }
     fn diagonal(&self) -> Vec<f64> {
         let mut d = self.inner.diagonal();
@@ -77,6 +95,16 @@ impl<T: LinearOp + ?Sized> LinearOp for ScaledOp<'_, T> {
         y.scale(self.scale);
         y
     }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.inner.matvec_in(ws, x, out);
+        for yi in out.iter_mut() {
+            *yi *= self.scale;
+        }
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.inner.matmat_in(ws, x, out);
+        out.scale(self.scale);
+    }
     fn diagonal(&self) -> Vec<f64> {
         self.inner.diagonal().into_iter().map(|d| d * self.scale).collect()
     }
@@ -115,6 +143,24 @@ impl LinearOp for SumOp<'_> {
         }
         ya
     }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.a.matvec_in(ws, x, out);
+        let mut yb = ws.take_vec(self.size());
+        self.b.matvec_in(ws, x, &mut yb);
+        for (p, q) in out.iter_mut().zip(&yb) {
+            *p = self.wa * *p + self.wb * q;
+        }
+        ws.give_vec(yb);
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.a.matmat_in(ws, x, out);
+        let mut yb = ws.take_mat(self.size(), x.cols());
+        self.b.matmat_in(ws, x, &mut yb);
+        for (p, q) in out.as_mut_slice().iter_mut().zip(yb.as_slice()) {
+            *p = self.wa * *p + self.wb * q;
+        }
+        ws.give_mat(yb);
+    }
     fn diagonal(&self) -> Vec<f64> {
         let da = self.a.diagonal();
         let db = self.b.diagonal();
@@ -150,6 +196,20 @@ impl LinearOp for DiagOp {
             }
         }
         y
+    }
+    fn matvec_in(&self, _ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        for ((o, &d), &xi) in out.iter_mut().zip(&self.d).zip(x) {
+            *o = d * xi;
+        }
+    }
+    fn matmat_in(&self, _ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.rows(), self.size(), "matmat dim mismatch");
+        out.as_mut_slice().copy_from_slice(x.as_slice());
+        for (i, &d) in self.d.iter().enumerate() {
+            for v in out.row_mut(i) {
+                *v *= d;
+            }
+        }
     }
     fn diagonal(&self) -> Vec<f64> {
         self.d.clone()
@@ -200,6 +260,24 @@ impl LinearOp for LowRankPlusDiagOp {
             *yi += self.sigma2 * xi;
         }
         y
+    }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        let mut lt_x = ws.take_vec(self.l.cols());
+        self.l.matvec_t_into(x, &mut lt_x);
+        self.l.matvec_into(&lt_x, out);
+        for (yi, xi) in out.iter_mut().zip(x) {
+            *yi += self.sigma2 * xi;
+        }
+        ws.give_vec(lt_x);
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        let mut lt_x = ws.take_mat(self.l.cols(), x.cols());
+        self.l.t_matmul_in(ws, x, &mut lt_x);
+        self.l.matmul_into(&lt_x, out);
+        for (yi, xi) in out.as_mut_slice().iter_mut().zip(x.as_slice()) {
+            *yi += self.sigma2 * xi;
+        }
+        ws.give_mat(lt_x);
     }
     fn diagonal(&self) -> Vec<f64> {
         (0..self.size())
@@ -254,6 +332,30 @@ impl LinearOp for SubtractLowRankOp<'_> {
             *yi -= wi;
         }
         y
+    }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.a.matvec_in(ws, x, out);
+        let mut wt_x = ws.take_vec(self.w.cols());
+        self.w.matvec_t_into(x, &mut wt_x);
+        let mut wwt_x = ws.take_vec(self.size());
+        self.w.matvec_into(&wt_x, &mut wwt_x);
+        for (yi, wi) in out.iter_mut().zip(&wwt_x) {
+            *yi -= wi;
+        }
+        ws.give_vec(wt_x);
+        ws.give_vec(wwt_x);
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.a.matmat_in(ws, x, out);
+        let mut wt_x = ws.take_mat(self.w.cols(), x.cols());
+        self.w.t_matmul_in(ws, x, &mut wt_x);
+        let mut wwt_x = ws.take_mat(self.size(), x.cols());
+        self.w.matmul_into(&wt_x, &mut wwt_x);
+        for (yi, wi) in out.as_mut_slice().iter_mut().zip(wwt_x.as_slice()) {
+            *yi -= wi;
+        }
+        ws.give_mat(wt_x);
+        ws.give_mat(wwt_x);
     }
     fn diagonal(&self) -> Vec<f64> {
         let da = self.a.diagonal();
@@ -376,6 +478,50 @@ mod tests {
         assert!(lr.matmat(&x).max_abs_diff(&matmat_by_columns(&lr, &x)) < 1e-12);
         let sub = SubtractLowRankOp::new(&op_a, w);
         assert!(sub.matmat(&x).max_abs_diff(&matmat_by_columns(&sub, &x)) < 1e-12);
+    }
+
+    #[test]
+    fn combinator_workspace_variants_match_and_stay_warm() {
+        // matmat_in/matvec_in must agree with their allocating twins and
+        // perform zero workspace growth once warmed.
+        let mut rng = Pcg64::seeded(13);
+        let mut ws = crate::linalg::SolveWorkspace::new();
+        let base = sym(14, 14);
+        let other = sym(14, 15);
+        let op_a = DenseOp::new(base);
+        let op_b = DenseOp::new(other);
+        let x = Matrix::randn(14, 5, &mut rng);
+        let xv: Vec<f64> = (0..14).map(|_| rng.normal()).collect();
+        let w = Matrix::randn(14, 3, &mut rng);
+        let l = Matrix::randn(14, 4, &mut rng);
+        let shifted = ShiftedOp::new(&op_a, 1.7);
+        let scaled = ScaledOp::new(&op_a, -0.3);
+        let sum = SumOp::new(&op_a, 0.5, &op_b, 2.0);
+        let diag = DiagOp::new((0..14).map(|i| 0.5 + i as f64).collect());
+        let lr = LowRankPlusDiagOp::new(l, 0.9);
+        let sub = SubtractLowRankOp::new(&op_a, w);
+        let ops: [&dyn LinearOp; 6] = [&shifted, &scaled, &sum, &diag, &lr, &sub];
+        for _round in 0..2 {
+            for op in ops {
+                let want = op.matmat(&x);
+                let mut out = ws.take_mat(14, 5);
+                op.matmat_in(&mut ws, &x, &mut out);
+                assert_eq!(out.max_abs_diff(&want), 0.0, "matmat_in diverged");
+                ws.give_mat(out);
+                let wantv = op.matvec(&xv);
+                let mut outv = ws.take_vec(14);
+                op.matvec_in(&mut ws, &xv, &mut outv);
+                assert_eq!(outv, wantv, "matvec_in diverged");
+                ws.give_vec(outv);
+            }
+        }
+        let grows = ws.grows();
+        for op in ops {
+            let mut out = ws.take_mat(14, 5);
+            op.matmat_in(&mut ws, &x, &mut out);
+            ws.give_mat(out);
+        }
+        assert_eq!(ws.grows(), grows, "warmed combinator matmat_in re-allocated");
     }
 
     #[test]

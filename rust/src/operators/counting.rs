@@ -6,7 +6,7 @@
 //! prose.
 
 use super::LinearOp;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Wraps a [`LinearOp`] and counts the work flowing through it.
@@ -72,10 +72,21 @@ impl<T: LinearOp> LinearOp for CountingOp<T> {
         self.inner.matvec(x)
     }
 
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.matvecs.fetch_add(1, Ordering::Relaxed);
+        self.inner.matvec_in(ws, x, out)
+    }
+
     fn matmat(&self, x: &Matrix) -> Matrix {
         self.matmats.fetch_add(1, Ordering::Relaxed);
         self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
         self.inner.matmat(x)
+    }
+
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.matmats.fetch_add(1, Ordering::Relaxed);
+        self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
+        self.inner.matmat_in(ws, x, out)
     }
 
     fn diagonal(&self) -> Vec<f64> {

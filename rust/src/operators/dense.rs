@@ -1,7 +1,7 @@
 //! Dense-matrix operator (testing and small-N baselines).
 
 use super::LinearOp;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 
 /// Wrap an explicit symmetric matrix as a [`LinearOp`].
 pub struct DenseOp {
@@ -30,8 +30,16 @@ impl LinearOp for DenseOp {
         self.k.matvec(x)
     }
 
+    fn matvec_in(&self, _ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.k.matvec_into(x, out);
+    }
+
     fn matmat(&self, x: &Matrix) -> Matrix {
         self.k.matmul(x)
+    }
+
+    fn matmat_in(&self, _ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.k.matmul_into(x, out);
     }
 
     fn diagonal(&self) -> Vec<f64> {

@@ -19,8 +19,18 @@
 //! panel pipeline's property tests.
 
 use super::LinearOp;
-use crate::linalg::{gemm, Matrix};
+use crate::linalg::{gemm, Matrix, SolveWorkspace};
 use crate::util::threadpool::{num_threads, parallel_fill_scoped, parallel_fill_threads, parallel_map_threads};
+use std::cell::RefCell;
+
+std::thread_local! {
+    // Per-thread (Gram panel, GEMM pack) scratch for the panel pipeline:
+    // sized on first use per thread, then every later MVM on that thread is
+    // allocation-free — the kernel-operator half of the solve stack's
+    // zero-allocation steady state.
+    static PANEL_SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Kernel family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -144,6 +154,60 @@ impl KernelOp {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads.max(1));
         self
+    }
+
+    /// The panel-pipeline engine behind [`LinearOp::matmat`] /
+    /// [`LinearOp::matmat_in`]: computes `K·B` into the row-major `flat`
+    /// output slice. Gram-panel and GEMM-pack scratch are reused
+    /// thread-locals, so a warm call performs zero heap allocations on every
+    /// participating thread.
+    fn matmat_into_slice(&self, b: &Matrix, flat: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.rows(), n, "kernel matmat dim mismatch");
+        let r = b.cols();
+        assert_eq!(flat.len(), n * r, "kernel matmat out size mismatch");
+        flat.fill(0.0);
+        if n == 0 || r == 0 {
+            return;
+        }
+        let tile = self.tile;
+        let d = self.xs.cols();
+        let xs = self.xs.as_slice();
+        let nthreads = self.threads.unwrap_or_else(num_threads);
+        // one block = `tile` output rows; blocks are written disjointly
+        parallel_fill_threads(flat, tile * r, nthreads, |start_flat, block| {
+            let i0 = start_flat / r;
+            let rows = block.len() / r;
+            PANEL_SCRATCH.with(|scratch| {
+                let (panel, pack) = &mut *scratch.borrow_mut();
+                if panel.len() < rows * tile {
+                    panel.resize(rows * tile, 0.0);
+                }
+                for jt in (0..n).step_by(tile) {
+                    let j1 = (jt + tile).min(n);
+                    let jw = j1 - jt;
+                    let pan = &mut panel[..rows * jw];
+                    pan.fill(0.0);
+                    // stage 1: pan = X(i-block) · X(j-tile)ᵀ (micro-kernel GEMM)
+                    gemm::gemm_nt(rows, d, jw, &xs[i0 * d..(i0 + rows) * d], &xs[jt * d..j1 * d], pan);
+                    // stage 2: pan ← s²·ρ(√max(‖xi‖²+‖xj‖²−2·pan, 0)) (+σ² diag)
+                    for bi in 0..rows {
+                        let i = i0 + bi;
+                        let sqi = self.sq[i];
+                        let prow = &mut pan[bi * jw..(bi + 1) * jw];
+                        for (jj, v) in prow.iter_mut().enumerate() {
+                            let d2 = (sqi + self.sq[jt + jj] - 2.0 * *v).max(0.0);
+                            *v = self.outputscale * self.kind.rho(d2.sqrt());
+                        }
+                        if i >= jt && i < j1 {
+                            prow[i - jt] += self.noise;
+                        }
+                    }
+                    // stage 3: out-block += pan · B(j-tile) (second small GEMM)
+                    gemm::gemm_nn_with_pack(rows, jw, r, pan, &b.as_slice()[jt * r..j1 * r], block, pack);
+                }
+            });
+        });
     }
 
     /// Kernel value between scaled rows `i` and `j`.
@@ -294,52 +358,24 @@ impl LinearOp for KernelOp {
         out.as_slice().to_vec()
     }
 
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.n(), "kernel matvec_in out dim mismatch");
+        let mut xm = ws.take_mat(x.len(), 1);
+        xm.as_mut_slice().copy_from_slice(x);
+        self.matmat_into_slice(&xm, out);
+        ws.give_mat(xm);
+    }
+
     fn matmat(&self, b: &Matrix) -> Matrix {
-        let n = self.n();
-        assert_eq!(b.rows(), n, "kernel matmat dim mismatch");
-        let r = b.cols();
-        let mut out = Matrix::zeros(n, r);
-        if n == 0 || r == 0 {
-            return out;
-        }
-        let tile = self.tile;
-        let d = self.xs.cols();
-        let xs = self.xs.as_slice();
-        let nthreads = self.threads.unwrap_or_else(num_threads);
-        let flat = out.as_mut_slice();
-        // one block = `tile` output rows; blocks are written disjointly
-        parallel_fill_threads(flat, tile * r, nthreads, |start_flat, block| {
-            let i0 = start_flat / r;
-            let rows = block.len() / r;
-            // scratch Gram panel + GEMM pack buffer, reused across every
-            // j-tile of this block (no per-tile heap traffic)
-            let mut panel = vec![0.0f64; rows * tile];
-            let mut pack = Vec::new();
-            for jt in (0..n).step_by(tile) {
-                let j1 = (jt + tile).min(n);
-                let jw = j1 - jt;
-                let pan = &mut panel[..rows * jw];
-                pan.fill(0.0);
-                // stage 1: pan = X(i-block) · X(j-tile)ᵀ (micro-kernel GEMM)
-                gemm::gemm_nt(rows, d, jw, &xs[i0 * d..(i0 + rows) * d], &xs[jt * d..j1 * d], pan);
-                // stage 2: pan ← s²·ρ(√max(‖xi‖²+‖xj‖²−2·pan, 0)) (+σ² diag)
-                for bi in 0..rows {
-                    let i = i0 + bi;
-                    let sqi = self.sq[i];
-                    let prow = &mut pan[bi * jw..(bi + 1) * jw];
-                    for (jj, v) in prow.iter_mut().enumerate() {
-                        let d2 = (sqi + self.sq[jt + jj] - 2.0 * *v).max(0.0);
-                        *v = self.outputscale * self.kind.rho(d2.sqrt());
-                    }
-                    if i >= jt && i < j1 {
-                        prow[i - jt] += self.noise;
-                    }
-                }
-                // stage 3: out-block += pan · B(j-tile) (second small GEMM)
-                gemm::gemm_nn_with_pack(rows, jw, r, pan, &b.as_slice()[jt * r..j1 * r], block, &mut pack);
-            }
-        });
+        let mut out = Matrix::zeros(self.n(), b.cols());
+        self.matmat_into_slice(b, out.as_mut_slice());
         out
+    }
+
+    fn matmat_in(&self, _ws: &mut SolveWorkspace, b: &Matrix, out: &mut Matrix) {
+        assert_eq!(out.rows(), self.n(), "kernel matmat_in out rows mismatch");
+        assert_eq!(out.cols(), b.cols(), "kernel matmat_in out cols mismatch");
+        self.matmat_into_slice(b, out.as_mut_slice());
     }
 
     fn diagonal(&self) -> Vec<f64> {

@@ -17,7 +17,7 @@ pub use counting::CountingOp;
 pub use dense::DenseOp;
 pub use kernel::{cross_kernel, KernelOp, KernelType};
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 
 /// A symmetric linear operator `K ∈ R^{n×n}` accessed through MVMs.
 pub trait LinearOp: Sync {
@@ -26,6 +26,28 @@ pub trait LinearOp: Sync {
 
     /// `y = K x`.
     fn matvec(&self, x: &[f64]) -> Vec<f64>;
+
+    /// `out = K x` with any scratch drawn from `ws` — the zero-allocation
+    /// solve path ([`crate::krylov::msminres::msminres_in`] and friends).
+    /// Default routes through [`Self::matvec`] (one transient allocation);
+    /// structured operators override with a genuinely in-place compute.
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        let _ = ws;
+        assert_eq!(out.len(), self.size(), "matvec_in out dim mismatch");
+        out.copy_from_slice(&self.matvec(x));
+    }
+
+    /// `out = K X` for a block of right-hand sides, scratch drawn from `ws`.
+    /// Same contract as [`Self::matvec_in`]: the default allocates once via
+    /// [`Self::matmat`]; overrides write straight into `out` so a warmed
+    /// workspace-backed block solve performs zero heap allocations.
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        let _ = ws;
+        assert_eq!(out.rows(), self.size(), "matmat_in out rows mismatch");
+        assert_eq!(out.cols(), x.cols(), "matmat_in out cols mismatch");
+        let y = self.matmat(x);
+        out.as_mut_slice().copy_from_slice(y.as_slice());
+    }
 
     /// `Y = K X` for a block of right-hand sides (columns of `x`).
     ///
@@ -100,8 +122,14 @@ impl<T: LinearOp + ?Sized> LinearOp for &T {
     fn matvec(&self, x: &[f64]) -> Vec<f64> {
         (**self).matvec(x)
     }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        (**self).matvec_in(ws, x, out)
+    }
     fn matmat(&self, x: &Matrix) -> Matrix {
         (**self).matmat(x)
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        (**self).matmat_in(ws, x, out)
     }
     fn diagonal(&self) -> Vec<f64> {
         (**self).diagonal()

@@ -8,7 +8,7 @@
 //! which is precisely what Appx. D requires of a CIQ preconditioner.
 
 use crate::linalg::eigen::sym_eig;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::{Error, Result};
 
@@ -22,6 +22,8 @@ pub struct PivotedCholesky {
     u: Matrix,
     /// eigenvalues of `LᵀL` (spectrum of the low-rank part), length `r`
     s2: Vec<f64>,
+    /// pivot order chosen during the build (empty for [`Self::from_factor`])
+    pivots: Vec<usize>,
 }
 
 impl PivotedCholesky {
@@ -31,6 +33,29 @@ impl PivotedCholesky {
     ///
     /// Stops early if the residual diagonal drops below `tol`.
     pub fn new(op: &dyn LinearOp, rank: usize, sigma2: f64, tol: f64) -> Result<PivotedCholesky> {
+        Self::new_with_hint(op, rank, sigma2, tol, None).map(|(pc, _)| pc)
+    }
+
+    /// [`Self::new`] with an optional **warm-start pivot hint**: the pivot
+    /// order of a previous build on a similar operator (hyperparameter-step
+    /// workloads replace operators with slightly perturbed kernels, whose
+    /// greedy pivot order barely moves). While the hint holds, each step
+    /// takes the hinted pivot outright — skipping the O(n) max-diagonal
+    /// search pass — and falls back to the full greedy scan the moment a
+    /// hinted pivot is unavailable or has a residual diagonal ≤ `tol`.
+    ///
+    /// Returns the factor plus the number of pivot-search passes saved.
+    /// For an identical operator the hinted build reproduces the cold build
+    /// bit-for-bit (the greedy argmax is exactly the hint); for a perturbed
+    /// one it trades an O(n·rank) search for a possibly slightly looser
+    /// (still exact-as-a-preconditioner) pivot set.
+    pub fn new_with_hint(
+        op: &dyn LinearOp,
+        rank: usize,
+        sigma2: f64,
+        tol: f64,
+        hint: Option<&[usize]>,
+    ) -> Result<(PivotedCholesky, usize)> {
         let n = op.size();
         let rank = rank.min(n);
         if sigma2 <= 0.0 {
@@ -38,19 +63,52 @@ impl PivotedCholesky {
         }
         let mut d = op.diagonal();
         let mut perm: Vec<usize> = (0..n).collect();
+        // pos[element] = its index in perm, so a hinted pivot swaps in O(1)
+        let mut pos: Vec<usize> = (0..n).collect();
         let mut l = Matrix::zeros(n, rank);
         let mut m_used = 0;
+        let mut saved_passes = 0usize;
+        // a hint referencing out-of-range rows (operator size changed) is
+        // ignored outright
+        let mut hint_live = hint.map(|h| h.iter().all(|&p| p < n)).unwrap_or(false);
         for m in 0..rank {
-            // pivot: largest remaining diagonal
-            let (rel, &piv) = perm[m..]
-                .iter()
-                .enumerate()
-                .max_by(|a, b| d[*a.1].partial_cmp(&d[*b.1]).unwrap())
-                .unwrap();
-            perm.swap(m, m + rel);
-            if d[piv] <= tol {
-                break;
-            }
+            let hinted = if hint_live {
+                match hint.and_then(|h| h.get(m)) {
+                    Some(&cand) if pos[cand] >= m && d[cand] > tol => Some(cand),
+                    _ => {
+                        hint_live = false;
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let piv = match hinted {
+                Some(cand) => {
+                    // accept the hinted pivot without scanning the diagonal
+                    saved_passes += 1;
+                    let ip = pos[cand];
+                    perm.swap(m, ip);
+                    pos[perm[ip]] = ip;
+                    pos[perm[m]] = m;
+                    cand
+                }
+                None => {
+                    // pivot: largest remaining diagonal (full greedy pass)
+                    let (rel, &piv) = perm[m..]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| d[*a.1].partial_cmp(&d[*b.1]).unwrap())
+                        .unwrap();
+                    perm.swap(m, m + rel);
+                    pos[perm[m + rel]] = m + rel;
+                    pos[perm[m]] = m;
+                    if d[piv] <= tol {
+                        break;
+                    }
+                    piv
+                }
+            };
             let lmm = d[piv].sqrt();
             l[(piv, m)] = lmm;
             let col = op.column(piv);
@@ -74,7 +132,9 @@ impl PivotedCholesky {
                 lt[(i, j)] = l[(i, j)];
             }
         }
-        Self::from_factor(lt, sigma2)
+        let mut pc = Self::from_factor(lt, sigma2)?;
+        pc.pivots = perm[..m_used].to_vec();
+        Ok((pc, saved_passes))
     }
 
     /// Build directly from a low-rank factor (`n × r`) and σ².
@@ -94,7 +154,14 @@ impl PivotedCholesky {
                 u[(i, j)] *= inv;
             }
         }
-        Ok(PivotedCholesky { l, sigma2, u, s2 })
+        Ok(PivotedCholesky { l, sigma2, u, s2, pivots: Vec::new() })
+    }
+
+    /// Pivot order chosen by the build (empty for [`Self::from_factor`]) —
+    /// feed it to [`Self::new_with_hint`] to warm-start the next build on a
+    /// perturbed version of the same operator.
+    pub fn pivot_order(&self) -> &[usize] {
+        &self.pivots
     }
 
     /// Dimension.
@@ -129,42 +196,28 @@ impl PivotedCholesky {
 
     /// Generic spectral map `f(P) x = σ_f x + U (f(s²+σ²) − f(σ²)) Uᵀ x`
     /// where `σ_f = f(σ²)` — exact because `P = U diag(s²+σ²) Uᵀ + σ²(I−UUᵀ)`.
+    /// Thin wrapper over [`Self::spectral_apply_in`] with a transient
+    /// workspace, so the owned and workspace paths are one implementation
+    /// (bit-for-bit identical at every size).
     fn spectral_apply(&self, x: &[f64], f: impl Fn(f64) -> f64) -> Vec<f64> {
-        let f0 = f(self.sigma2);
-        let utx = self.u.matvec_t(x);
-        let scaled: Vec<f64> = utx
-            .iter()
-            .zip(&self.s2)
-            .map(|(c, s2)| c * (f(s2 + self.sigma2) - f0))
-            .collect();
-        let mut y = self.u.matvec(&scaled);
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi += f0 * xi;
-        }
-        y
+        let mut ws = SolveWorkspace::new();
+        let mut out = vec![0.0; self.n()];
+        self.spectral_apply_in(&mut ws, x, f, &mut out);
+        out
     }
 
     /// Blocked analogue of [`Self::spectral_apply`]: `f(P) X` for all columns
     /// of `X` at once through the panel-GEMM engine (`UᵀX` → row scaling →
     /// `U·` → `+ f(σ²) X`). This is what lets the whitened operator's
     /// `matmat` keep the block solver's batch economics — the per-column
-    /// route would fall back to `2·cols` skinny GEMVs.
+    /// route would fall back to `2·cols` skinny GEMVs. Thin wrapper over
+    /// [`Self::spectral_apply_block_in`] (one engine, owned == workspace
+    /// bit-for-bit).
     fn spectral_apply_block(&self, x: &Matrix, f: impl Fn(f64) -> f64) -> Matrix {
-        let f0 = f(self.sigma2);
-        let mut utx = self.u.t_matmul(x);
-        for (i, &s2) in self.s2.iter().enumerate() {
-            let g = f(s2 + self.sigma2) - f0;
-            for j in 0..utx.cols() {
-                utx[(i, j)] *= g;
-            }
-        }
-        let mut y = self.u.matmul(&utx);
-        for i in 0..y.rows() {
-            for j in 0..y.cols() {
-                y[(i, j)] += f0 * x[(i, j)];
-            }
-        }
-        y
+        let mut ws = SolveWorkspace::new();
+        let mut out = Matrix::zeros(self.n(), x.cols());
+        self.spectral_apply_block_in(&mut ws, x, f, &mut out);
+        out
     }
 
     /// `P^{-1} x` — exact Woodbury-equivalent solve, `O(nr)`.
@@ -195,6 +248,86 @@ impl PivotedCholesky {
     /// `P^{-1/2} X` for a block of columns — exact, `O(nr·cols)`.
     pub fn invsqrt_matmat(&self, x: &Matrix) -> Matrix {
         self.spectral_apply_block(x, |e| 1.0 / e.sqrt())
+    }
+
+    /// [`Self::spectral_apply`] into a pre-sized `out`, all scratch from
+    /// `ws` — the single-vector leg of the zero-allocation solve path.
+    fn spectral_apply_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        x: &[f64],
+        f: impl Fn(f64) -> f64,
+        out: &mut [f64],
+    ) {
+        let f0 = f(self.sigma2);
+        let mut utx = ws.take_vec(self.u.cols());
+        self.u.matvec_t_into(x, &mut utx);
+        for (c, &s2) in utx.iter_mut().zip(&self.s2) {
+            *c *= f(s2 + self.sigma2) - f0;
+        }
+        self.u.matvec_into(&utx, out);
+        for (yi, xi) in out.iter_mut().zip(x) {
+            *yi += f0 * xi;
+        }
+        ws.give_vec(utx);
+    }
+
+    /// [`Self::spectral_apply_block`] into a pre-sized `out`, with the
+    /// `UᵀX` panel drawn from `ws` — preconditioned block solves stay
+    /// allocation-free once the workspace is warm.
+    fn spectral_apply_block_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        x: &Matrix,
+        f: impl Fn(f64) -> f64,
+        out: &mut Matrix,
+    ) {
+        let f0 = f(self.sigma2);
+        let mut utx = ws.take_mat(self.u.cols(), x.cols());
+        self.u.t_matmul_in(ws, x, &mut utx);
+        for (i, &s2) in self.s2.iter().enumerate() {
+            let g = f(s2 + self.sigma2) - f0;
+            for j in 0..utx.cols() {
+                utx[(i, j)] *= g;
+            }
+        }
+        self.u.matmul_into(&utx, out);
+        for i in 0..out.rows() {
+            for j in 0..out.cols() {
+                out[(i, j)] += f0 * x[(i, j)];
+            }
+        }
+        ws.give_mat(utx);
+    }
+
+    /// `out = P^{-1} x` with scratch from `ws` — exact, `O(nr)`.
+    pub fn solve_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.spectral_apply_in(ws, x, |e| 1.0 / e, out)
+    }
+
+    /// `out = P^{1/2} x` with scratch from `ws` — exact, `O(nr)`.
+    pub fn sqrt_mvm_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.spectral_apply_in(ws, x, |e| e.sqrt(), out)
+    }
+
+    /// `out = P^{-1/2} x` with scratch from `ws` — exact, `O(nr)`.
+    pub fn invsqrt_mvm_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.spectral_apply_in(ws, x, |e| 1.0 / e.sqrt(), out)
+    }
+
+    /// `out = P^{-1} X` with scratch from `ws` — exact, `O(nr·cols)`.
+    pub fn solve_matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.spectral_apply_block_in(ws, x, |e| 1.0 / e, out)
+    }
+
+    /// `out = P^{1/2} X` with scratch from `ws` — exact, `O(nr·cols)`.
+    pub fn sqrt_matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.spectral_apply_block_in(ws, x, |e| e.sqrt(), out)
+    }
+
+    /// `out = P^{-1/2} X` with scratch from `ws` — exact, `O(nr·cols)`.
+    pub fn invsqrt_matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.spectral_apply_block_in(ws, x, |e| 1.0 / e.sqrt(), out)
     }
 }
 
@@ -321,6 +454,77 @@ mod tests {
             assert!(rel_err(&sq.col(j), &pc.sqrt_mvm(&col)) < 1e-12, "sqrt col {j}");
             assert!(rel_err(&sol.col(j), &pc.solve(&col)) < 1e-12, "solve col {j}");
         }
+    }
+
+    #[test]
+    fn hint_on_identical_operator_reproduces_factor_and_skips_every_search() {
+        let mut rng = Pcg64::seeded(9);
+        let x = Matrix::randn(40, 2, &mut rng);
+        let op = KernelOp::new(&x, KernelType::Rbf, 0.8, 1.0, 1e-2);
+        let (cold, saved_cold) = PivotedCholesky::new_with_hint(&op, 12, 1e-2, 1e-12, None).unwrap();
+        assert_eq!(saved_cold, 0);
+        assert_eq!(cold.pivot_order().len(), cold.rank());
+        let (warm, saved) =
+            PivotedCholesky::new_with_hint(&op, 12, 1e-2, 1e-12, Some(cold.pivot_order())).unwrap();
+        assert_eq!(saved, cold.rank(), "every pivot-search pass must be skipped");
+        assert_eq!(warm.pivot_order(), cold.pivot_order());
+        assert_eq!(cold.factor().max_abs_diff(warm.factor()), 0.0, "hinted factor must be bit-identical");
+    }
+
+    #[test]
+    fn hint_on_perturbed_operator_still_builds_valid_preconditioner() {
+        let mut rng = Pcg64::seeded(10);
+        let x = Matrix::randn(50, 1, &mut rng);
+        let op_a = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-2);
+        let (cold, _) = PivotedCholesky::new_with_hint(&op_a, 16, 1e-2, 1e-12, None).unwrap();
+        // a hyperparameter step: slightly different lengthscale
+        let op_b = KernelOp::new(&x, KernelType::Rbf, 1.05, 1.0, 1e-2);
+        let (warm, saved) =
+            PivotedCholesky::new_with_hint(&op_b, 16, 1e-2, 1e-12, Some(cold.pivot_order())).unwrap();
+        assert!(saved > 0, "perturbed rebuild must reuse at least some hinted pivots");
+        // the warm factor still approximates the *new* operator
+        let k = op_b.to_dense();
+        let v: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        assert!(rel_err(&warm.matvec(&v), &k.matvec(&v)) < 0.05);
+        // a stale hint from a different-size operator is ignored, not trusted
+        let x_small = Matrix::randn(20, 1, &mut rng);
+        let op_c = KernelOp::new(&x_small, KernelType::Rbf, 1.0, 1.0, 1e-2);
+        let (_, saved_c) =
+            PivotedCholesky::new_with_hint(&op_c, 8, 1e-2, 1e-12, Some(cold.pivot_order())).unwrap();
+        assert_eq!(saved_c, 0, "out-of-range hint must be ignored");
+    }
+
+    #[test]
+    fn workspace_spectral_applies_match_and_stay_warm() {
+        let mut rng = Pcg64::seeded(11);
+        let l = Matrix::randn(24, 5, &mut rng);
+        let pc = PivotedCholesky::from_factor(l, 0.4).unwrap();
+        let x = Matrix::randn(24, 6, &mut rng);
+        let v: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let mut ws = crate::linalg::SolveWorkspace::new();
+        for _ in 0..2 {
+            let mut out = ws.take_mat(24, 6);
+            pc.invsqrt_matmat_in(&mut ws, &x, &mut out);
+            assert_eq!(out.max_abs_diff(&pc.invsqrt_matmat(&x)), 0.0);
+            pc.sqrt_matmat_in(&mut ws, &x, &mut out);
+            assert_eq!(out.max_abs_diff(&pc.sqrt_matmat(&x)), 0.0);
+            pc.solve_matmat_in(&mut ws, &x, &mut out);
+            assert_eq!(out.max_abs_diff(&pc.solve_matmat(&x)), 0.0);
+            ws.give_mat(out);
+            let mut outv = ws.take_vec(24);
+            pc.invsqrt_mvm_in(&mut ws, &v, &mut outv);
+            assert_eq!(outv, pc.invsqrt_mvm(&v));
+            pc.sqrt_mvm_in(&mut ws, &v, &mut outv);
+            assert_eq!(outv, pc.sqrt_mvm(&v));
+            pc.solve_in(&mut ws, &v, &mut outv);
+            assert_eq!(outv, pc.solve(&v));
+            ws.give_vec(outv);
+        }
+        let grows = ws.grows();
+        let mut out = ws.take_mat(24, 6);
+        pc.invsqrt_matmat_in(&mut ws, &x, &mut out);
+        ws.give_mat(out);
+        assert_eq!(ws.grows(), grows, "warmed spectral apply re-allocated");
     }
 
     #[test]

@@ -1,0 +1,65 @@
+//! A counting global allocator for allocation-pressure regression tests and
+//! the `perf_hotpath` §7 alloc bench.
+//!
+//! [`CountingAllocator`] wraps [`std::alloc::System`] and bumps a
+//! **thread-local** counter on every `alloc`/`alloc_zeroed`/`realloc`. It is
+//! *defined* here but *registered* only by the binaries that measure
+//! allocation pressure (`rust/tests/alloc_regression.rs`,
+//! `rust/benches/perf_hotpath.rs`) via `#[global_allocator]` — the library
+//! itself never changes the process allocator.
+//!
+//! The counter is thread-local so a measurement brackets exactly the work
+//! the measuring thread performs: the zero-allocation steady-state claim for
+//! the solve stack is that the *submitting* thread performs no allocations
+//! inside a warmed `krylov`/`ciq` solve (pool workers only run
+//! allocation-free GEMM bodies; the regression tests additionally pin
+//! `CIQ_THREADS=1` so every instruction of the solve runs on the counted
+//! thread).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // const-init: no lazy TLS initialization (which could itself allocate)
+    // inside the allocator.
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations (`alloc`/`alloc_zeroed`/`realloc`) performed by the current
+/// thread since it started, when [`CountingAllocator`] is the registered
+/// global allocator. Always 0 otherwise.
+pub fn thread_allocs() -> u64 {
+    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: the allocator can be called during TLS setup/teardown.
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+/// A [`System`]-backed allocator that counts per-thread allocation events.
+pub struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`; the counter never influences the
+// returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

@@ -5,6 +5,7 @@ pub mod threadpool;
 pub mod cli;
 pub mod proptest;
 pub mod fastmath;
+pub mod allocs;
 
 use std::time::Instant;
 

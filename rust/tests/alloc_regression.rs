@@ -1,0 +1,168 @@
+//! Allocation-pressure regression tests: with a counting global allocator
+//! installed, a **warmed** workspace-backed solve in the krylov/ciq layers
+//! must perform **zero** heap allocations — the steady-state contract the
+//! coordinator's per-flush workspace pool relies on.
+//!
+//! Every test pins `CIQ_THREADS=1` *before* the first parallel call so the
+//! whole solve executes on the measuring thread (the allocator's counter is
+//! thread-local; with worker threads parked out of existence, "no
+//! allocations observed" really means "no allocations anywhere in the
+//! solve"). The env var is read once per process, so all tests in this
+//! binary run serial — which is exactly what an allocation census wants.
+
+use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, SolveKind, SolverPolicy};
+use ciq::krylov::msminres::{msminres_block_in, msminres_in, MsMinresOptions};
+use ciq::linalg::{Matrix, SolveWorkspace};
+use ciq::operators::DenseOp;
+use ciq::rng::Pcg64;
+use ciq::util::allocs::{thread_allocs, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Force the solve stack fully serial so the thread-local allocation
+/// counter sees every allocation the solve performs.
+fn serial_mode() {
+    std::env::set_var("CIQ_THREADS", "1");
+}
+
+fn random_spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seeded(seed);
+    let a = Matrix::randn(n, n, &mut rng);
+    let mut k = a.matmul(&a.transpose());
+    for i in 0..n {
+        k[(i, i)] += n as f64 * 0.5;
+    }
+    k
+}
+
+#[test]
+fn counting_allocator_counts_this_thread() {
+    serial_mode();
+    let before = thread_allocs();
+    let v: Vec<u64> = Vec::with_capacity(1024);
+    assert!(thread_allocs() > before, "allocator failed to count an allocation");
+    drop(v);
+}
+
+#[test]
+fn warmed_msminres_in_performs_zero_heap_allocations() {
+    serial_mode();
+    let n = 48;
+    let k = random_spd(n, 1);
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(2);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let shifts = [0.1, 1.0, 10.0];
+    let opts = MsMinresOptions { max_iters: 200, tol: 1e-9, weights: None };
+    let mut ws = SolveWorkspace::new();
+    // warm-up: first touch grows the pool
+    for _ in 0..2 {
+        msminres_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+    }
+    let grows = ws.grows();
+    let allocs_before = thread_allocs();
+    for _ in 0..3 {
+        let sol = msminres_in(&mut ws, &op, &b, &shifts, &opts);
+        assert!(sol.converged);
+        sol.recycle(&mut ws);
+    }
+    assert_eq!(
+        thread_allocs() - allocs_before,
+        0,
+        "warmed msminres_in touched the heap"
+    );
+    assert_eq!(ws.grows(), grows);
+}
+
+#[test]
+fn warmed_ciq_solve_block_in_performs_zero_heap_allocations() {
+    serial_mode();
+    let n = 40;
+    let r = 4;
+    let k = random_spd(n, 3);
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(4);
+    let b = Matrix::randn(n, r, &mut rng);
+    let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+    let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+    let mut ws = SolveWorkspace::new();
+    for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
+        // warm-up for this solve shape
+        for _ in 0..2 {
+            let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+            recycle_block_result(&mut ws, res);
+        }
+        // the acceptance measurement: the whole krylov→ciq block solve,
+        // steady state, zero allocations
+        let allocs_before = thread_allocs();
+        for _ in 0..3 {
+            let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+            recycle_block_result(&mut ws, res);
+        }
+        assert_eq!(
+            thread_allocs() - allocs_before,
+            0,
+            "warmed solve_block_in ({kind:?}) touched the heap"
+        );
+    }
+}
+
+#[test]
+fn warmed_single_vector_solve_in_performs_zero_heap_allocations() {
+    serial_mode();
+    let n = 32;
+    let k = random_spd(n, 5);
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(6);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+    let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+    let mut ws = SolveWorkspace::new();
+    for _ in 0..2 {
+        let res = solver.solve_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx).unwrap();
+        ws.give_vec(res.solution);
+    }
+    let allocs_before = thread_allocs();
+    for _ in 0..3 {
+        let res = solver.solve_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx).unwrap();
+        ws.give_vec(res.solution);
+    }
+    assert_eq!(thread_allocs() - allocs_before, 0, "warmed solve_in touched the heap");
+}
+
+#[test]
+fn warmed_block_engine_is_alloc_free_even_with_compaction() {
+    // Heterogeneous columns: compaction shrinks the panel mid-solve, which
+    // swaps panels through the pool — still zero allocations once warm.
+    serial_mode();
+    let n = 36;
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        k[(i, i)] = 1.0 + i as f64;
+    }
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(7);
+    let mut b = Matrix::zeros(n, 4);
+    b[(0, 0)] = 1.0; // eigenvector: converges on iteration 1 → early retire
+    for j in 1..4 {
+        for i in 0..n {
+            b[(i, j)] = rng.normal();
+        }
+    }
+    let shifts = [0.1, 1.0];
+    let opts = MsMinresOptions { max_iters: 200, tol: 1e-10, weights: None };
+    let mut ws = SolveWorkspace::new();
+    for _ in 0..2 {
+        msminres_block_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+    }
+    let allocs_before = thread_allocs();
+    let sol = msminres_block_in(&mut ws, &op, &b, &shifts, &opts);
+    assert!(sol.column_work > 0);
+    sol.recycle(&mut ws);
+    assert_eq!(
+        thread_allocs() - allocs_before,
+        0,
+        "compacting block solve touched the heap when warm"
+    );
+}

@@ -2,11 +2,12 @@
 //! answered exactly once, batched results identical to solo solves, routing
 //! by operator name, metrics accounting, the preconditioned serving
 //! pipeline (policy-driven solves + background warming), and the async
-//! dispatcher backend: no-starvation parity with the threaded baseline,
-//! zero wakeups at idle, and bounded-concurrency warming.
+//! dispatcher: no flush starvation under a steady trickle, zero wakeups at
+//! idle, and bounded-concurrency warming. (The threaded dispatcher is
+//! retired; the async executor backend is the only one.)
 
 use ciq::ciq::{CiqOptions, PrecondConfig, SolverPolicy};
-use ciq::coordinator::{DispatchBackend, ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
 use ciq::linalg::eigen::spd_inv_sqrt;
 use ciq::linalg::Matrix;
 use ciq::operators::{DenseOp, KernelOp, KernelType, LinearOp};
@@ -133,19 +134,19 @@ fn graceful_shutdown_drains_inflight() {
     }
 }
 
-// Regression for the dispatcher flush-starvation bug (PR 1), now a property
-// both backends must preserve: deadlines used to be checked only on the
-// recv_timeout Timeout branch, so a steady trickle of requests arriving
-// faster than max_wait kept the loop on its Ok path and a sub-max_batch
-// shard was never flushed until the trickle stopped.
+// Regression for the dispatcher flush-starvation bug (PR 1): deadlines used
+// to be checked only on the recv_timeout Timeout branch, so a steady
+// trickle of requests arriving faster than max_wait kept the loop on its Ok
+// path and a sub-max_batch shard was never flushed until the trickle
+// stopped.
 //
 // 30 requests at ~5 ms spacing with max_wait = 15 ms and max_batch = 1000:
 // the starving dispatcher's first flush happened only after the full ~150 ms
-// trickle (p50 latency ≈ 90 ms, one giant batch); a deadline-correct
-// dispatcher (threaded: deadline-aware recv timeout; async: per-shard timer
-// armed at oldest.enqueued + max_wait) flushes every ~15 ms regardless of
-// arrivals.
-fn run_starvation_trickle(backend: DispatchBackend) {
+// trickle (p50 latency ≈ 90 ms, one giant batch); the deadline-correct
+// dispatcher (per-shard timer armed at oldest.enqueued + max_wait) flushes
+// every ~15 ms regardless of arrivals.
+#[test]
+fn starvation_steady_trickle_flushed_within_deadline() {
     let n = 8;
     let mut map: HashMap<String, SharedOp> = HashMap::new();
     map.insert("a".to_string(), Arc::new(DenseOp::new(Matrix::eye(n))));
@@ -155,7 +156,6 @@ fn run_starvation_trickle(backend: DispatchBackend) {
             max_wait: Duration::from_millis(15),
             workers: 1,
             ciq: CiqOptions::default(),
-            backend,
             ..Default::default()
         },
         map,
@@ -179,75 +179,19 @@ fn run_starvation_trickle(backend: DispatchBackend) {
     let p50 = svc.metrics().latency_percentile_us(50.0);
     assert!(
         p50 < bound_us,
-        "[{backend:?}] p50 latency {p50}us (bound {bound_us}us) — steady trickle starved the \
-         shard of flushes"
+        "p50 latency {p50}us (bound {bound_us}us) — steady trickle starved the shard of flushes"
     );
     assert!(
         svc.metrics().max_batch_size() < 30,
-        "[{backend:?}] all requests collapsed into one post-trickle flush (batch {})",
+        "all requests collapsed into one post-trickle flush (batch {})",
         svc.metrics().max_batch_size()
     );
-    if backend == DispatchBackend::Async {
-        // every deadline flush goes through the wheel there (the threaded
-        // loop may also flush an expired shard on the arrival path, so its
-        // count is timing-dependent)
-        assert!(
-            svc.metrics().timer_fires.load(Ordering::Relaxed) >= 2,
-            "[{backend:?}] trickle flushes must be deadline-driven"
-        );
-    }
+    // every deadline flush goes through the timer wheel
+    assert!(
+        svc.metrics().timer_fires.load(Ordering::Relaxed) >= 2,
+        "trickle flushes must be deadline-driven"
+    );
     svc.shutdown();
-}
-
-#[test]
-fn starvation_steady_trickle_flushed_within_deadline() {
-    run_starvation_trickle(DispatchBackend::Threaded);
-}
-
-#[test]
-fn starvation_steady_trickle_flushed_within_deadline_async() {
-    run_starvation_trickle(DispatchBackend::Async);
-}
-
-#[test]
-fn threaded_and_async_backends_serve_identical_results() {
-    // Backend equivalence for the one-release migration window: the same
-    // traffic against the same operator must produce the same (solo-exact)
-    // results and the same request accounting on both dispatchers.
-    let n = 14;
-    let k = spd(n, 21);
-    let inv = spd_inv_sqrt(&k).unwrap();
-    let mut rng = Pcg64::seeded(22);
-    let reqs: Vec<Vec<f64>> = (0..24).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
-    for backend in [DispatchBackend::Threaded, DispatchBackend::Async] {
-        let mut map: HashMap<String, SharedOp> = HashMap::new();
-        map.insert("k".to_string(), Arc::new(DenseOp::new(k.clone())));
-        let svc = SamplingService::start(
-            ServiceConfig {
-                max_batch: 8,
-                max_wait: Duration::from_millis(3),
-                workers: 2,
-                ciq: CiqOptions { tol: 1e-9, ..Default::default() },
-                backend,
-                ..Default::default()
-            },
-            map,
-        );
-        let tickets: Vec<_> =
-            reqs.iter().map(|b| svc.submit("k", ReqKind::Whiten, b.clone())).collect();
-        for (t, b) in tickets.into_iter().zip(&reqs) {
-            let got = t.wait().unwrap();
-            assert!(
-                rel_err(&got, &inv.matvec(b)) < 1e-5,
-                "[{backend:?}] batched result differs from solo"
-            );
-        }
-        let m = svc.metrics();
-        assert_eq!(m.submitted.load(Ordering::Relaxed), 24, "[{backend:?}]");
-        assert_eq!(m.completed.load(Ordering::Relaxed), 24, "[{backend:?}]");
-        assert_eq!(m.failed.load(Ordering::Relaxed), 0, "[{backend:?}]");
-        svc.shutdown();
-    }
 }
 
 #[test]
@@ -268,7 +212,7 @@ fn async_backend_performs_zero_wakeups_while_idle() {
             // keep the startup warm job out of the books: this test pins
             // exact wakeup counts
             warm_on_register: false,
-            ..Default::default() // backend: Async
+            ..Default::default()
         },
         map,
     );
