@@ -108,24 +108,31 @@ impl Metrics {
 
     /// Record a spectral-cache hit and the estimation MVMs it avoided.
     pub fn record_cache_hit(&self, saved_mvms: u64) {
+        // ordering: Relaxed — independent telemetry counters; readers only
+        // need eventual per-counter totals, never cross-counter consistency.
         self.cache_hits.fetch_add(1, Ordering::Relaxed);
         self.saved_mvms.fetch_add(saved_mvms, Ordering::Relaxed);
     }
 
     /// Record a spectral-cache miss (Lanczos estimation ran).
     pub fn record_cache_miss(&self) {
+        // ordering: Relaxed — telemetry counter, no synchronization implied.
         self.cache_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one batch's matmat column-work: `done` as performed by the
     /// compacted solver, `full` as an uncompacted solver would have paid.
     pub fn record_column_work(&self, done: u64, full: u64) {
+        // ordering: Relaxed — telemetry counters; `saved_column_work` already
+        // tolerates reading the pair mid-update (saturating_sub).
         self.column_work.fetch_add(done, Ordering::Relaxed);
         self.column_work_full.fetch_add(full, Ordering::Relaxed);
     }
 
     /// Matmat columns saved by active-column compaction so far.
     pub fn saved_column_work(&self) -> u64 {
+        // ordering: Relaxed — monitoring read; a torn pair only skews one
+        // report and the subtraction saturates.
         let full = self.column_work_full.load(Ordering::Relaxed);
         full.saturating_sub(self.column_work.load(Ordering::Relaxed))
     }
@@ -133,6 +140,8 @@ impl Metrics {
     /// Fold one returned workspace's drained telemetry into the service
     /// counters (checkouts/grows are deltas, the high-water is a max).
     pub fn record_workspace(&self, stats: &WsStats) {
+        // ordering: Relaxed — telemetry deltas/max; publication of the stats
+        // themselves rode the workspace checkin that produced `stats`.
         self.workspace_checkouts.fetch_add(stats.checkouts, Ordering::Relaxed);
         self.workspace_grows.fetch_add(stats.grows, Ordering::Relaxed);
         self.workspace_bytes_high_water.fetch_max(stats.bytes_high_water, Ordering::Relaxed);
@@ -326,29 +335,32 @@ impl Metrics {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        // ordering: Relaxed — monitoring snapshot; counters are independent
+        // and a log line needs no cross-counter consistency.
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
         format!(
             "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
              mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
              saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={}",
             self.policy(),
-            self.submitted.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
+            ld(&self.submitted),
+            ld(&self.completed),
+            ld(&self.failed),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
             self.mean_batch_size(),
             self.mean_iterations(),
-            self.cache_hits.load(Ordering::Relaxed),
-            self.cache_misses.load(Ordering::Relaxed),
-            self.warmed_operators.load(Ordering::Relaxed),
-            self.warm_starts.load(Ordering::Relaxed),
-            self.saved_mvms.load(Ordering::Relaxed),
+            ld(&self.cache_hits),
+            ld(&self.cache_misses),
+            ld(&self.warmed_operators),
+            ld(&self.warm_starts),
+            ld(&self.saved_mvms),
             self.saved_column_work(),
-            self.dispatcher_wakeups.load(Ordering::Relaxed),
-            self.timer_fires.load(Ordering::Relaxed),
-            self.workspace_checkouts.load(Ordering::Relaxed),
-            self.workspace_grows.load(Ordering::Relaxed),
-            self.workspace_bytes_high_water.load(Ordering::Relaxed),
+            ld(&self.dispatcher_wakeups),
+            ld(&self.timer_fires),
+            ld(&self.workspace_checkouts),
+            ld(&self.workspace_grows),
+            ld(&self.workspace_bytes_high_water),
         )
     }
 }

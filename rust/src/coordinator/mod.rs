@@ -402,6 +402,8 @@ impl SamplingService {
     /// module docs) — and hands the fresh entry to the warm pool so the
     /// rebuild happens off the request path.
     pub fn replace_operator(&self, name: &str, op: SharedOp) {
+        // ordering: Relaxed — telemetry counter; the registry RwLock below
+        // carries all synchronization for the replacement itself.
         self.metrics.operator_replacements.fetch_add(1, Ordering::Relaxed);
         // Warm-start hint: if the outgoing version already built a
         // preconditioned context for a same-size operator, seed the fresh
@@ -462,6 +464,8 @@ impl SamplingService {
             enqueued: Instant::now(),
             respond: rtx,
         };
+        // ordering: Relaxed — telemetry counter; the request itself rides the
+        // channel send, which is the synchronizing edge.
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         // if the dispatcher is gone the Ticket will report the failure
         let _ = self.tx.as_ref().unwrap().send(req);
@@ -587,6 +591,8 @@ fn route_async(
     // a present operator happens-before a deregistration's prune.
     let registry = ctx.ops.read().unwrap();
     if !registry.contains_key(&req.op_name) {
+        // ordering: Relaxed — telemetry; the error reaches the client via the
+        // response channel, not via this counter.
         ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
         let _ = req.respond.send(Err(crate::Error::Invalid(format!(
             "unknown operator '{}'",
@@ -651,6 +657,8 @@ fn route_async(
             if shard.requests.is_empty() {
                 return;
             }
+            // ordering: Relaxed — liveness telemetry; the idle-poll test reads
+            // it after the service is quiescent (joined/awaited).
             fctx.metrics.timer_fires.fetch_add(1, Ordering::Relaxed);
             // a deadline flush came up short of its ceiling: stretch the
             // wait (guarded against resurrecting pruned telemetry)
@@ -710,6 +718,8 @@ fn dispatcher_async(
     let (ictx, ishards, ihandle) = (ctx.clone(), shards.clone(), handle.clone());
     handle.spawn(async move {
         while let Some(req) = rx.recv().await {
+            // ordering: Relaxed — liveness telemetry, same discipline as
+            // `timer_fires` above.
             ictx.metrics.dispatcher_wakeups.fetch_add(1, Ordering::Relaxed);
             route_async(&ihandle, &ictx, &ishards, req);
         }
@@ -761,6 +771,8 @@ fn ensure_context(
         solver.build_context_with_hint(&counting, policy, entry.precond_hint.as_deref())?;
     let ctx = Arc::new(ctx);
     if saved_passes > 0 {
+        // ordering: Relaxed — telemetry; the built context is published by the
+        // OnceLock/entry write, not by this counter.
         metrics.warm_starts.fetch_add(saved_passes as u64, Ordering::Relaxed);
     }
     let estimation_mvms = counting.matvec_count();
@@ -809,10 +821,13 @@ fn warm_entry(
     let solver = Ciq::new(config.ciq.clone());
     match ensure_context(entry, &solver, &config.policy, metrics, || {}) {
         Ok(_) => {
+            // ordering: Relaxed — telemetry; warm-start tests spin on this
+            // counter but only need eventual visibility, not an edge.
             metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
         }
         Err(_) => {
             // the next batch retries inline and surfaces the error
+            // ordering: Relaxed — telemetry, same discipline as above.
             metrics.warm_failures.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -831,6 +846,8 @@ fn execute_batch(
         Some(entry) => entry,
         None => {
             for req in batch.requests {
+                // ordering: Relaxed — telemetry; the error rides the response
+                // channel to the client.
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req
                     .respond
@@ -845,6 +862,8 @@ fn execute_batch(
     let mut valid = Vec::new();
     for req in batch.requests {
         if req.rhs.len() != n {
+            // ordering: Relaxed — telemetry; the error rides the response
+            // channel to the client.
             metrics.failed.fetch_add(1, Ordering::Relaxed);
             let _ = req.respond.send(Err(crate::Error::Shape(format!(
                 "rhs len {} != operator size {n}",
@@ -911,6 +930,8 @@ fn execute_batch(
                 // allocation a request intrinsically owns
                 let col = res.solution.col(j);
                 metrics.record_latency(req.enqueued.elapsed());
+                // ordering: Relaxed — telemetry; the result rides the response
+                // channel, which synchronizes with the waiting client.
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(Ok(col));
             }
@@ -919,6 +940,8 @@ fn execute_batch(
         Err(e) => {
             // propagate the underlying error kind per request (no rewrap)
             for req in valid {
+                // ordering: Relaxed — telemetry; the cloned error rides the
+                // response channel to each client.
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(Err(e.clone()));
             }

@@ -13,10 +13,11 @@
 //! the queue and resolves `None`. Dropping the `Receiver` makes every
 //! subsequent `send` return the value to the caller as an error.
 
+use crate::util::sync::Mutex;
 use std::collections::VecDeque;
 use std::future::Future;
 use std::pin::Pin;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::task::{Context, Poll, Waker};
 
 struct ChanState<T> {
@@ -82,7 +83,11 @@ impl<T> Drop for Sender<T> {
             let mut st = self.shared.state.lock().unwrap();
             st.senders -= 1;
             if st.senders == 0 {
-                // closed: wake the receiver so a pending recv resolves None
+                // closed: wake the receiver so a pending recv resolves None.
+                // Dropping this wake (mutation M1 in rust/tests/model_exec.rs)
+                // strands a receiver that registered its waker before the
+                // last sender dropped — the model checker finds that
+                // interleaving as a deadlock.
                 st.waker.take()
             } else {
                 None

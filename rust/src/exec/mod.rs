@@ -29,13 +29,13 @@ pub mod timer;
 
 pub use timer::{TimerId, TimerWheel};
 
+use crate::util::sync::{AtomicBool, AtomicU64, Condvar, Mutex, Ordering};
 use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
 use std::future::Future;
 use std::pin::Pin;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::task::{Context, Poll, Wake, Waker};
 use std::time::{Duration, Instant};
 
@@ -73,6 +73,14 @@ impl Wake for TaskWaker {
         self.wake_by_ref();
     }
     fn wake_by_ref(self: &Arc<Self>) {
+        // ordering: AcqRel — the swap must both *acquire* the task state
+        // written by the run loop before it cleared `queued` (so this wake
+        // sees a fully-published pending task) and *release* our claim so
+        // the run loop's next clear synchronizes with it. Relaxed here could
+        // let two wakers both observe `false` only in theory on the same
+        // task id — the queue push below is lock-serialized — but the dedup
+        // contract ("at most one queue entry per cleared flag") is what the
+        // model test `exec_queued_flag_dedup` pins down.
         if !self.queued.swap(true, Ordering::AcqRel) {
             self.shared.ready.lock().unwrap().push_back(self.id);
             self.shared.cv.notify_one();
@@ -163,9 +171,18 @@ impl Executor {
                     continue; // completed earlier; stale wake
                 };
                 // clear before the poll so a wake *during* the poll re-queues
+                // ordering: Release — pairs with the AcqRel swap in
+                // `wake_by_ref`: everything this thread did to the task
+                // before clearing is visible to the waker that wins the next
+                // swap. Clearing *after* the poll instead would open a lost-
+                // wake window (wake lands mid-poll, sees `queued == true`,
+                // skips the push, flag is then cleared: task sleeps forever)
+                // — caught by model mutation M2 in rust/tests/model_exec.rs.
                 task.waker.queued.store(false, Ordering::Release);
                 let waker = Waker::from(task.waker.clone());
                 let mut cx = Context::from_waker(&waker);
+                // ordering: Relaxed — monotonic telemetry counter, no reader
+                // infers cross-thread state from it.
                 inner.shared.stats.polls.fetch_add(1, Ordering::Relaxed);
                 match task.fut.as_mut().poll(&mut cx) {
                     Poll::Ready(()) => {}
@@ -177,6 +194,7 @@ impl Executor {
             // 2. fire due timers (their wakes land on the ready queue)
             let fired = inner.wheel.borrow_mut().advance(Instant::now());
             if !fired.is_empty() {
+                // ordering: Relaxed — telemetry counter.
                 inner.shared.stats.timer_fires.fetch_add(fired.len() as u64, Ordering::Relaxed);
                 continue;
             }
@@ -189,6 +207,7 @@ impl Executor {
             if !ready.is_empty() {
                 continue; // a wake slipped in between drain and park
             }
+            // ordering: Relaxed — telemetry counter.
             inner.shared.stats.parks.fetch_add(1, Ordering::Relaxed);
             match deadline {
                 Some(d) => {
@@ -201,6 +220,7 @@ impl Executor {
                     drop(guard);
                 }
             }
+            // ordering: Relaxed — telemetry counter.
             inner.shared.stats.wakeups.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -436,5 +456,126 @@ mod tests {
             stats.polls.load(Ordering::SeqCst) <= 2,
             "idle executor polled more than spawn + close"
         );
+    }
+
+    #[test]
+    fn cancel_racing_fire_at_same_tick_first_outcome_wins() {
+        // Two timers armed for the *same* deadline land in the same wheel
+        // tick and both fire in one `advance` batch, before either awaiting
+        // task gets polled. Task B (whose timer was armed first, so B's task
+        // is woken first) then cancels A's handle — but A's timer already
+        // fired, so the cancel must lose: `SleepShared::finish`'s
+        // first-outcome-wins guard keeps A's resolved value `true`.
+        // Removing that guard (mutation M4) flips `a_out` to `false`.
+        let exec = Executor::with_tick(Duration::from_millis(1));
+        let h = exec.handle();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        let (sleep_b, _cancel_b) = h.timer_at(deadline); // armed first → fires first
+        let (sleep_a, cancel_a) = h.timer_at(deadline);
+        let a_out = Rc::new(Cell::new(None));
+        let (a2, cancel_won) = (a_out.clone(), Rc::new(Cell::new(None)));
+        let c2 = cancel_won.clone();
+        h.spawn(async move {
+            a2.set(Some(sleep_a.await));
+        });
+        h.spawn(async move {
+            assert!(sleep_b.await, "b's own timer fired");
+            c2.set(Some(cancel_a.cancel()));
+        });
+        exec.run();
+        assert_eq!(cancel_won.get(), Some(false), "cancel raced an already-fired timer");
+        assert_eq!(a_out.get(), Some(true), "first outcome (fire) must win the race");
+    }
+
+    #[test]
+    fn cancel_before_fire_wins_and_timer_never_fires() {
+        // The mirror image: cancel lands while the timer is genuinely
+        // pending; the later deadline must not fire it anyway.
+        let exec = Executor::with_tick(Duration::from_millis(1));
+        let h = exec.handle();
+        let (sleep, cancel) = h.timer_at(Instant::now() + Duration::from_millis(5));
+        let out = Rc::new(Cell::new(None));
+        let o2 = out.clone();
+        h.spawn(async move {
+            o2.set(Some(sleep.await));
+        });
+        let h2 = h.clone();
+        h.spawn(async move {
+            assert!(cancel.cancel(), "timer still pending");
+            // outlive the cancelled deadline to prove it stays dead
+            h2.sleep(Duration::from_millis(20)).await;
+        });
+        let stats = exec.stats();
+        exec.run();
+        assert_eq!(out.get(), Some(false));
+        assert_eq!(stats.timer_fires.load(Ordering::SeqCst), 1, "only the guard sleep fires");
+    }
+
+    #[test]
+    fn stale_incarnation_deadline_is_ignored() {
+        // The coordinator pattern: a deadline task snapshots a shard's
+        // generation tag when armed and must no-op if the shard was rebuilt
+        // (generation bumped) before the deadline fired. Modeled here at the
+        // executor level with an Rc'd generation cell.
+        let exec = Executor::with_tick(Duration::from_millis(1));
+        let h = exec.handle();
+        let generation = Rc::new(Cell::new(1u64));
+        let flushes = Rc::new(Cell::new(0u32));
+        for _ in 0..2 {
+            // two rounds: one stale, one current
+            let armed_gen = generation.get();
+            let (g2, f2) = (generation.clone(), flushes.clone());
+            let sleep = h.sleep(Duration::from_millis(5));
+            h.spawn(async move {
+                assert!(sleep.await);
+                if g2.get() == armed_gen {
+                    f2.set(f2.get() + 1);
+                }
+            });
+            // bump after arming the FIRST task only: its deadline is stale
+            if armed_gen == 1 {
+                generation.set(2);
+            }
+        }
+        exec.run();
+        assert_eq!(flushes.get(), 1, "stale-generation deadline must not flush");
+    }
+}
+
+/// Model-checked variant of the timer fire-vs-cancel family: explores every
+/// interleaving of a concurrent fire and cancel on one `SleepShared` under
+/// the deterministic scheduler (`RUSTFLAGS="--cfg ciq_model"`). The
+/// deterministic test above pins the *wheel-level* race at a single tick;
+/// this one pins the `finish` protocol itself. Mutation M4 (see
+/// `rust/tests/model_exec.rs`) removes the first-outcome-wins guard and is
+/// caught here as a flipped outcome.
+#[cfg(all(test, ciq_model))]
+mod model_tests {
+    use super::*;
+    use crate::util::model;
+
+    #[test]
+    fn timer_fire_vs_cancel_outcome_is_sticky() {
+        model::check(|| {
+            let state =
+                Arc::new(SleepShared { inner: Mutex::new(SleepInner { done: None, waker: None }) });
+            let (fire, cancel) = (state.clone(), state.clone());
+            // The wheel's fire path and a cancel path racing on one timer.
+            let t_fire = model::spawn(move || fire.finish(true));
+            let t_cancel = model::spawn(move || cancel.finish(false));
+            // Observer: once an outcome is decided it must never change.
+            let first = state.inner.lock().unwrap().done;
+            let second = state.inner.lock().unwrap().done;
+            if let (Some(a), Some(b)) = (first, second) {
+                assert_eq!(a, b, "sleep outcome flipped after being decided");
+            }
+            t_fire.join();
+            t_cancel.join();
+            let done = state.inner.lock().unwrap().done;
+            assert!(done.is_some(), "one of fire/cancel must decide the outcome");
+            if let Some(a) = first {
+                assert_eq!(done, Some(a), "decided outcome changed after the race settled");
+            }
+        });
     }
 }

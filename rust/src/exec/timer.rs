@@ -491,6 +491,61 @@ mod tests {
     }
 
     #[test]
+    fn timer_ids_are_never_recycled() {
+        // Ids are monotonic for the wheel's lifetime: a handle that outlives
+        // its timer (fired or cancelled) can never alias a newer timer.
+        let (mut w, o) = wheel();
+        let (_, wk) = counter();
+        let a = w.arm(at(o, 2), wk);
+        assert_eq!(w.advance(at(o, 2)).len(), 1);
+        let (_, wk) = counter();
+        let b = w.arm(at(o, 4), wk);
+        assert_ne!(a, b, "fired id recycled");
+        assert!(w.cancel(b));
+        let (_, wk) = counter();
+        let c = w.arm(at(o, 6), wk);
+        assert_ne!(b, c, "cancelled id recycled");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stale_id_cannot_cancel_after_swap_remove_fixup() {
+        // cancel() uses swap_remove + index fixup; a stale handle held
+        // across that shuffle must stay dead and the moved survivor must
+        // stay cancellable/fireable under its own id.
+        let (mut w, o) = wheel();
+        let (_, wk1) = counter();
+        let (c2, wk2) = counter();
+        let (c3, wk3) = counter();
+        let t1 = w.arm(at(o, 8), wk1);
+        let t2 = w.arm(at(o, 8), wk2);
+        let t3 = w.arm(at(o, 8), wk3); // same slot as t1/t2
+        assert!(w.cancel(t1)); // swap_remove moves t3 into t1's index
+        assert!(!w.cancel(t1), "stale id revived after fixup");
+        assert!(w.cancel(t3), "moved entry lost its index");
+        assert_eq!(c3.0.load(Ordering::SeqCst), 0);
+        assert_eq!(w.advance(at(o, 8)), vec![t2]);
+        assert_eq!(c2.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn stale_id_cannot_cancel_newer_timer_in_same_slot() {
+        // After t1 fires, a new timer occupying the same slot position must
+        // be untouchable through the old handle.
+        let (mut w, o) = wheel();
+        let (_, wk) = counter();
+        let t1 = w.arm(at(o, 3), wk);
+        assert_eq!(w.advance(at(o, 3)), vec![t1]);
+        let (c, wk) = counter();
+        // same level-0 slot one lap later (3 + 64 ticks)
+        let t2 = w.arm(at(o, 3 + SLOTS as u64), wk);
+        assert!(!w.cancel(t1), "stale id cancelled a successor");
+        assert_eq!(w.pending(), 1);
+        assert_eq!(w.advance(at(o, 3 + SLOTS as u64)), vec![t2]);
+        assert_eq!(c.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
     fn empty_wheel_fast_forwards() {
         let (mut w, o) = wheel();
         assert!(w.advance(at(o, 10_000_000)).is_empty());

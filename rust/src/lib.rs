@@ -58,6 +58,12 @@
 //! assert_eq!(y.len(), n);
 //! ```
 
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification (enforced structurally by
+// `tools/structlint.rs`), even inside `unsafe fn`.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
+
 pub mod util;
 pub mod exec;
 pub mod rng;

@@ -35,22 +35,28 @@ impl<T: LinearOp> CountingOp<T> {
 
     /// Number of `matvec` calls so far (Lanczos estimation spends these).
     pub fn matvec_count(&self) -> u64 {
+        // ordering: Relaxed — work counter; tests read it after the counted
+        // work has already been synchronized by join/channel receipt.
         self.matvecs.load(Ordering::Relaxed)
     }
 
     /// Number of `matmat` calls so far (one per block-solver iteration).
     pub fn matmat_count(&self) -> u64 {
+        // ordering: Relaxed — same work-counter discipline as `matvec_count`.
         self.matmats.load(Ordering::Relaxed)
     }
 
     /// Total columns across all `matmat` calls — the block solver's true
     /// column-work.
     pub fn matmat_col_count(&self) -> u64 {
+        // ordering: Relaxed — same work-counter discipline as `matvec_count`.
         self.matmat_cols.load(Ordering::Relaxed)
     }
 
     /// Reset all counters to zero.
     pub fn reset(&self) {
+        // ordering: Relaxed — counters are independent; callers reset between
+        // phases, never concurrently with counted work they care about.
         self.matvecs.store(0, Ordering::Relaxed);
         self.matmats.store(0, Ordering::Relaxed);
         self.matmat_cols.store(0, Ordering::Relaxed);
@@ -68,22 +74,26 @@ impl<T: LinearOp> LinearOp for CountingOp<T> {
     }
 
     fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        // ordering: Relaxed — tally only; no data is published through it.
         self.matvecs.fetch_add(1, Ordering::Relaxed);
         self.inner.matvec(x)
     }
 
     fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        // ordering: Relaxed — tally only; no data is published through it.
         self.matvecs.fetch_add(1, Ordering::Relaxed);
         self.inner.matvec_in(ws, x, out)
     }
 
     fn matmat(&self, x: &Matrix) -> Matrix {
+        // ordering: Relaxed — tallies only; no data is published through them.
         self.matmats.fetch_add(1, Ordering::Relaxed);
         self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
         self.inner.matmat(x)
     }
 
     fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        // ordering: Relaxed — tallies only; no data is published through them.
         self.matmats.fetch_add(1, Ordering::Relaxed);
         self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
         self.inner.matmat_in(ws, x, out)

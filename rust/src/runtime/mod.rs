@@ -104,7 +104,10 @@ pub struct Executable {
     pub meta: ArtifactMeta,
 }
 
+// SAFETY: see the struct docs — the FFI handle is only reached through the
+// `Mutex`, which serializes all cross-thread access.
 unsafe impl Send for Executable {}
+// SAFETY: as above.
 unsafe impl Sync for Executable {}
 
 /// PJRT runtime holding a CPU client.
@@ -112,8 +115,10 @@ pub struct Runtime {
     client: xla::PjRtClient,
 }
 
-// Same argument as for `Executable`: access is serialized by our wrappers.
+// SAFETY: same argument as for `Executable` — access is serialized by our
+// wrappers.
 unsafe impl Send for Runtime {}
+// SAFETY: as above.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

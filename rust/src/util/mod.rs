@@ -1,11 +1,14 @@
 //! Small infrastructure: scoped parallelism, CLI parsing, a mini
-//! property-testing harness, and timing helpers.
+//! property-testing harness, timing helpers, and the concurrency-checking
+//! layer (`sync` facade + `model` deterministic interleaving checker).
 
 pub mod threadpool;
 pub mod cli;
 pub mod proptest;
 pub mod fastmath;
 pub mod allocs;
+pub mod model;
+pub mod sync;
 
 use std::time::Instant;
 

@@ -1,0 +1,839 @@
+//! Deterministic interleaving checker ("loom-lite") behind the
+//! [`crate::util::sync`] facade.
+//!
+//! The checker runs a test closure many times, each time forcing a different
+//! thread interleaving, and reports the first schedule under which the
+//! closure panics, asserts, or deadlocks. It is the model-side backend of
+//! `util/sync`: when the crate is compiled with `--cfg ciq_model`, every
+//! `sync::Mutex` / `sync::Condvar` / `sync::Atomic*` operation performed by a
+//! thread spawned through [`spawn`] becomes a *scheduling point* routed
+//! through the [`Sched`] token-passing scheduler below.
+//!
+//! # Execution model
+//!
+//! Threads are real OS threads, but exactly **one** is runnable at a time: a
+//! single token (`SchedState::running`) is handed from thread to thread at
+//! scheduling points, so every execution is a deterministic serialization
+//! chosen by the [`Explorer`]. This checks *interleavings* under sequential
+//! consistency — all shim atomics execute as `SeqCst` regardless of the
+//! `Ordering` the caller passed. Protocol bugs (lost wakeups, missed
+//! rendezvous, use-of-stale-state windows, deadlocks) are in scope;
+//! weak-memory reorderings are not — that is what the Miri/TSan CI lanes are
+//! for (see DESIGN.md §5).
+//!
+//! # Exploration
+//!
+//! Each run is a path through a schedule tree whose branch points are the
+//! `choose(n)` calls the scheduler makes when more than one thread could run
+//! next. Two modes:
+//!
+//! - [`ModelConfig::dfs`]: iterative depth-first enumeration of the tree
+//!   with a CHESS-style *preemption bound*: context switches at blocking
+//!   points (lock contention, condvar wait, join, thread exit) are always
+//!   explored for free, but involuntary switches at non-blocking points
+//!   (atomic ops, lock release) are limited to `max_preemptions` per
+//!   execution. Most real protocol bugs need only 1–2 preemptions, which
+//!   keeps the tree tractable while still falsifying the scary windows.
+//! - [`ModelConfig::random`]: seeded pseudo-random walks. The seed fully
+//!   determines every schedule, so re-running with a printed seed replays a
+//!   failure exactly.
+//!
+//! On failure the checker panics with the first error plus the schedule
+//! trace (the sequence of branch choices) that produced it.
+
+pub mod shim;
+
+use crate::rng::Pcg64;
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+// ---------------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Dfs { max_preemptions: usize },
+    Random { seed: u64 },
+}
+
+#[derive(Clone, Copy)]
+struct Choice {
+    chosen: usize,
+    num: usize,
+}
+
+/// Persistent (across iterations) schedule-tree cursor.
+struct Explorer {
+    mode: Mode,
+    /// Path through the schedule tree: replayed prefix + fresh suffix.
+    stack: Vec<Choice>,
+    /// Replay cursor within the current iteration.
+    depth: usize,
+    /// Involuntary context switches taken this iteration (DFS budget).
+    preemptions: usize,
+    rng: Pcg64,
+}
+
+impl Explorer {
+    fn new(mode: Mode) -> Self {
+        let seed = match mode {
+            Mode::Random { seed } => seed,
+            Mode::Dfs { .. } => 0,
+        };
+        Explorer { mode, stack: Vec::new(), depth: 0, preemptions: 0, rng: Pcg64::seeded(seed) }
+    }
+
+    fn begin_iteration(&mut self, iter: u64) {
+        self.depth = 0;
+        self.preemptions = 0;
+        if let Mode::Random { seed } = self.mode {
+            // Distinct deterministic stream per iteration.
+            self.rng = Pcg64::seeded(seed ^ iter.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            self.stack.clear();
+        }
+    }
+
+    /// Resolve one branch point with `n` options; replays the recorded
+    /// prefix, then extends depth-first (option 0) or randomly.
+    fn choose(&mut self, n: usize) -> usize {
+        debug_assert!(n >= 2);
+        if self.depth < self.stack.len() {
+            if self.stack[self.depth].num == n {
+                let c = self.stack[self.depth].chosen;
+                self.depth += 1;
+                return c;
+            }
+            // Divergence from the recorded path (only possible if the test
+            // body itself is nondeterministic); drop the stale suffix.
+            self.stack.truncate(self.depth);
+        }
+        let pick = match self.mode {
+            Mode::Dfs { .. } => 0,
+            Mode::Random { .. } => self.rng.below(n),
+        };
+        self.stack.push(Choice { chosen: pick, num: n });
+        self.depth += 1;
+        pick
+    }
+
+    /// Move to the next schedule. Returns `false` when the tree is exhausted
+    /// (DFS only; random walks never exhaust).
+    fn advance(&mut self) -> bool {
+        match self.mode {
+            Mode::Random { .. } => true,
+            Mode::Dfs { .. } => {
+                while let Some(c) = self.stack.pop() {
+                    if c.chosen + 1 < c.num {
+                        self.stack.push(Choice { chosen: c.chosen + 1, num: c.num });
+                        return true;
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    fn trace(&self) -> Vec<usize> {
+        self.stack[..self.depth.min(self.stack.len())].iter().map(|c| c.chosen).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    /// Eligible to receive the token.
+    Runnable,
+    /// Blocked acquiring the model mutex at this address.
+    LockWait(usize),
+    /// Parked on the condvar at `cv`. `timeout` waits are always eligible
+    /// (the scheduler may "fire the timeout" at any point); `notified` marks
+    /// a wakeup that has been delivered but not yet scheduled.
+    CvWait { cv: usize, timeout: bool, notified: bool },
+    /// Blocked in `JoinHandle::join` on the given model thread id.
+    JoinWait(usize),
+    Finished,
+}
+
+struct SchedState {
+    status: Vec<Status>,
+    /// Model tid currently holding the execution token.
+    running: usize,
+    /// Addresses of model mutexes currently held.
+    locked: HashSet<usize>,
+    /// Scheduling events this iteration (runaway-schedule bound).
+    steps: usize,
+    live: usize,
+    abort: bool,
+    error: Option<String>,
+}
+
+/// Sentinel panic payload used to unwind model threads after an abort; never
+/// reported as a failure itself.
+struct ModelAbort;
+
+fn abort_panic() -> ! {
+    std::panic::panic_any(ModelAbort);
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked (non-string payload)".to_string()
+    }
+}
+
+pub(crate) struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    explorer: Arc<StdMutex<Explorer>>,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+    max_steps: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The scheduler + tid of the calling thread, if it is a model thread.
+/// Shim primitives use this to decide between model routing and plain std.
+pub(crate) fn current() -> Option<(Arc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+impl Sched {
+    fn new(explorer: Arc<StdMutex<Explorer>>, max_steps: usize) -> Self {
+        Sched {
+            state: StdMutex::new(SchedState {
+                status: Vec::new(),
+                running: 0,
+                locked: HashSet::new(),
+                steps: 0,
+                live: 0,
+                abort: false,
+                error: None,
+            }),
+            cv: StdCondvar::new(),
+            explorer,
+            handles: StdMutex::new(Vec::new()),
+            max_steps,
+        }
+    }
+
+    /// Poison-tolerant state lock: model threads unwind (panic) while holding
+    /// it during aborts, and every other thread must still make progress.
+    fn guard(&self) -> StdMutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Tids eligible to receive the token, in ascending-tid order.
+    fn enabled(&self, st: &SchedState, exclude: Option<usize>) -> Vec<usize> {
+        st.status
+            .iter()
+            .enumerate()
+            .filter(|&(t, s)| {
+                Some(t) != exclude
+                    && matches!(
+                        s,
+                        Status::Runnable
+                            | Status::CvWait { notified: true, .. }
+                            | Status::CvWait { timeout: true, .. }
+                    )
+            })
+            .map(|(t, _)| t)
+            .collect()
+    }
+
+    fn choose(&self, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        self.explorer.lock().unwrap_or_else(|e| e.into_inner()).choose(n)
+    }
+
+    /// Park until this thread holds the token (or the run is aborting).
+    fn wait_for_token<'a>(
+        &'a self,
+        mut st: StdMutexGuard<'a, SchedState>,
+        me: usize,
+    ) -> StdMutexGuard<'a, SchedState> {
+        loop {
+            if st.abort {
+                drop(st);
+                abort_panic();
+            }
+            if st.running == me {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Hand the token to some enabled thread; `me` is no longer eligible
+    /// (its status was already changed). Detects deadlock: live threads
+    /// remain but none is enabled.
+    fn reschedule_from(&self, st: &mut SchedState, me: usize) {
+        let en = self.enabled(st, None);
+        if en.is_empty() {
+            if st.live > 0 {
+                let snapshot: Vec<(usize, Status)> =
+                    st.status.iter().copied().enumerate().collect();
+                st.abort = true;
+                if st.error.is_none() {
+                    st.error = Some(format!(
+                        "deadlock: no runnable thread (thread {me} blocked last); states: {snapshot:?}"
+                    ));
+                }
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let k = self.choose(en.len());
+        st.running = en[k];
+        self.cv.notify_all();
+    }
+
+    fn bump_steps(&self, st: &mut SchedState) {
+        st.steps += 1;
+        if st.steps > self.max_steps {
+            st.abort = true;
+            if st.error.is_none() {
+                st.error = Some(format!(
+                    "schedule exceeded {} steps (livelock or unbounded loop under the model)",
+                    self.max_steps
+                ));
+            }
+            self.cv.notify_all();
+        }
+    }
+
+    /// Non-blocking scheduling point: optionally hand the token to another
+    /// enabled thread (an involuntary preemption, budgeted under DFS) and
+    /// wait to get it back.
+    pub(crate) fn preempt(&self, me: usize) {
+        let mut st = self.guard();
+        if st.abort {
+            drop(st);
+            abort_panic();
+        }
+        self.bump_steps(&mut st);
+        if st.abort {
+            drop(st);
+            abort_panic();
+        }
+        let others = self.enabled(&st, Some(me));
+        if others.is_empty() {
+            return;
+        }
+        let may_preempt = {
+            let ex = self.explorer.lock().unwrap_or_else(|e| e.into_inner());
+            match ex.mode {
+                Mode::Dfs { max_preemptions } => ex.preemptions < max_preemptions,
+                Mode::Random { .. } => true,
+            }
+        };
+        if !may_preempt {
+            return;
+        }
+        let k = self.choose(1 + others.len());
+        if k == 0 {
+            return;
+        }
+        self.explorer.lock().unwrap_or_else(|e| e.into_inner()).preemptions += 1;
+        st.running = others[k - 1];
+        self.cv.notify_all();
+        let st = self.wait_for_token(st, me);
+        drop(st);
+    }
+
+    fn do_unlock(&self, st: &mut SchedState, addr: usize) {
+        st.locked.remove(&addr);
+        for s in st.status.iter_mut() {
+            if *s == Status::LockWait(addr) {
+                *s = Status::Runnable;
+            }
+        }
+    }
+
+    pub(crate) fn lock_acquire(&self, me: usize, addr: usize) {
+        self.preempt(me);
+        let mut st = self.guard();
+        loop {
+            if st.abort {
+                drop(st);
+                abort_panic();
+            }
+            if !st.locked.contains(&addr) {
+                st.locked.insert(addr);
+                return;
+            }
+            st.status[me] = Status::LockWait(addr);
+            self.reschedule_from(&mut st, me);
+            st = self.wait_for_token(st, me);
+            st.status[me] = Status::Runnable;
+        }
+    }
+
+    pub(crate) fn lock_release(&self, me: usize, addr: usize) {
+        {
+            let mut st = self.guard();
+            self.do_unlock(&mut st, addr);
+        }
+        // Releasing a lock is a visible event: let the checker hand the
+        // token to a thread that was spinning on this lock.
+        self.preempt(me);
+    }
+
+    /// Condvar wait: atomically (w.r.t. the scheduler) release the model
+    /// mutex and register as a waiter, then block until notified (or, for
+    /// `timeout` waits, until the scheduler nondeterministically fires the
+    /// timeout). Returns `true` if the wakeup was a notification.
+    pub(crate) fn cv_wait(&self, me: usize, cv: usize, mx: usize, timeout: bool) -> bool {
+        let mut st = self.guard();
+        if st.abort {
+            drop(st);
+            abort_panic();
+        }
+        self.bump_steps(&mut st);
+        self.do_unlock(&mut st, mx);
+        st.status[me] = Status::CvWait { cv, timeout, notified: false };
+        self.reschedule_from(&mut st, me);
+        st = self.wait_for_token(st, me);
+        let notified = match st.status[me] {
+            Status::CvWait { notified, .. } => notified,
+            _ => true,
+        };
+        st.status[me] = Status::Runnable;
+        drop(st);
+        notified
+    }
+
+    /// Deliver a notification to the longest-parked waiter(s) on `cv`
+    /// (deterministically: ascending tid order). Waiters become eligible but
+    /// do not run until scheduled.
+    pub(crate) fn cv_notify(&self, me: usize, cv: usize, all: bool) {
+        self.preempt(me);
+        let mut st = self.guard();
+        for s in st.status.iter_mut() {
+            if let Status::CvWait { cv: c, timeout, notified: false } = *s {
+                if c == cv {
+                    *s = Status::CvWait { cv: c, timeout, notified: true };
+                    if !all {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    pub(crate) fn join_wait(&self, me: usize, target: usize) {
+        self.preempt(me);
+        let mut st = self.guard();
+        if st.abort {
+            drop(st);
+            abort_panic();
+        }
+        if st.status[target] == Status::Finished {
+            return;
+        }
+        st.status[me] = Status::JoinWait(target);
+        self.reschedule_from(&mut st, me);
+        st = self.wait_for_token(st, me);
+        st.status[me] = Status::Runnable;
+    }
+
+    fn thread_finish(&self, me: usize) {
+        let mut st = self.guard();
+        st.status[me] = Status::Finished;
+        st.live -= 1;
+        for s in st.status.iter_mut() {
+            if *s == Status::JoinWait(me) {
+                *s = Status::Runnable;
+            }
+        }
+        if st.live == 0 {
+            self.cv.notify_all();
+            return;
+        }
+        self.reschedule_from(&mut st, me);
+    }
+
+    fn record_panic(&self, payload: &(dyn std::any::Any + Send)) {
+        if payload.downcast_ref::<ModelAbort>().is_some() {
+            return;
+        }
+        let msg = payload_msg(payload);
+        let mut st = self.guard();
+        if st.error.is_none() {
+            st.error = Some(msg);
+        }
+        st.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Register a new model thread and start its OS thread. The thread parks
+    /// until first scheduled.
+    fn start_thread(
+        self: &Arc<Self>,
+        f: Box<dyn FnOnce() + Send + 'static>,
+        root: bool,
+    ) -> usize {
+        let tid = {
+            let mut st = self.guard();
+            st.status.push(Status::Runnable);
+            st.live += 1;
+            if root {
+                st.running = 0;
+            }
+            st.status.len() - 1
+        };
+        let sched = self.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("ciq-model-{tid}"))
+            .spawn(move || {
+                CTX.with(|c| *c.borrow_mut() = Some((sched.clone(), tid)));
+                {
+                    let st = sched.guard();
+                    // A freshly-aborted run can finish before we are ever
+                    // scheduled; swallow the unwind sentinel in that case.
+                    let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        let st = sched.wait_for_token(st, tid);
+                        drop(st);
+                    }));
+                    if r.is_err() {
+                        sched.thread_finish(tid);
+                        CTX.with(|c| *c.borrow_mut() = None);
+                        return;
+                    }
+                }
+                let r = std::panic::catch_unwind(AssertUnwindSafe(f));
+                if let Err(p) = r {
+                    sched.record_panic(&*p);
+                }
+                sched.thread_finish(tid);
+                CTX.with(|c| *c.borrow_mut() = None);
+            })
+            .expect("spawn model thread");
+        self.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+        tid
+    }
+
+    /// Driver side: block until every model thread has finished, then reap
+    /// the OS threads.
+    fn wait_all(&self) {
+        let mut st = self.guard();
+        while st.live > 0 {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(st);
+        let handles: Vec<_> =
+            self.handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// Handle to a model thread spawned with [`spawn`].
+pub struct JoinHandle {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+impl JoinHandle {
+    /// Block (as a model scheduling point) until the thread finishes.
+    pub fn join(self) {
+        let (sched, me) = current().expect("JoinHandle::join outside a model thread");
+        debug_assert!(Arc::ptr_eq(&sched, &self.sched));
+        sched.join_wait(me, self.tid);
+    }
+}
+
+/// Spawn a model thread. Must be called from inside a [`check`] closure (or
+/// a thread transitively spawned by one).
+pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> JoinHandle {
+    let (sched, me) = current().expect("model::spawn outside a model run");
+    let tid = sched.start_thread(Box::new(f), false);
+    // Spawning is a visible event: the child may run before we continue.
+    sched.preempt(me);
+    JoinHandle { sched, tid }
+}
+
+/// Exploration configuration for [`check_with`].
+pub struct ModelConfig {
+    /// Stop after this many executions even if DFS has not exhausted the
+    /// schedule tree (a coverage bound, not a correctness bound).
+    pub max_iterations: usize,
+    /// Per-execution scheduling-event bound; exceeding it fails the check
+    /// (livelock / unbounded loop detector).
+    pub max_steps: usize,
+    mode: Mode,
+}
+
+impl ModelConfig {
+    /// Bounded-DFS enumeration with at most `max_preemptions` involuntary
+    /// context switches per execution (switches at blocking points are
+    /// always free).
+    pub fn dfs(max_preemptions: usize) -> Self {
+        ModelConfig { max_iterations: 4096, max_steps: 100_000, mode: Mode::Dfs { max_preemptions } }
+    }
+
+    /// Seeded random-walk mode: `iterations` schedules drawn from a PRNG
+    /// stream fully determined by `seed` (replay = same seed).
+    pub fn random(seed: u64, iterations: usize) -> Self {
+        ModelConfig { max_iterations: iterations, max_steps: 100_000, mode: Mode::Random { seed } }
+    }
+
+    /// Override the iteration bound.
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.max_iterations = n;
+        self
+    }
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig::dfs(2)
+    }
+}
+
+/// Outcome of a passing [`check_with`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Executions explored.
+    pub iterations: usize,
+    /// DFS exhausted the (preemption-bounded) schedule tree.
+    pub exhausted: bool,
+}
+
+/// [`check_with`] under [`ModelConfig::default`] (DFS, 2 preemptions).
+pub fn check<F: Fn() + Send + Sync + 'static>(f: F) -> Report {
+    check_with(ModelConfig::default(), f)
+}
+
+/// Run `f` under every explored schedule. Panics — with the failing schedule
+/// trace — on the first execution that panics, asserts, or deadlocks.
+pub fn check_with<F: Fn() + Send + Sync + 'static>(cfg: ModelConfig, f: F) -> Report {
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let explorer = Arc::new(StdMutex::new(Explorer::new(cfg.mode)));
+    let mut iterations = 0;
+    let mut exhausted = false;
+    for iter in 0..cfg.max_iterations {
+        iterations = iter + 1;
+        explorer.lock().unwrap_or_else(|e| e.into_inner()).begin_iteration(iter as u64);
+        let sched = Arc::new(Sched::new(explorer.clone(), cfg.max_steps));
+        let body = f.clone();
+        sched.start_thread(Box::new(move || body()), true);
+        sched.wait_all();
+        let (error, trace) = {
+            let st = sched.guard();
+            let ex = explorer.lock().unwrap_or_else(|e| e.into_inner());
+            (st.error.clone(), ex.trace())
+        };
+        if let Some(msg) = error {
+            let seed_note = match cfg.mode {
+                Mode::Random { seed } => format!(" (random mode, seed {seed})"),
+                Mode::Dfs { max_preemptions } => {
+                    format!(" (dfs mode, preemption bound {max_preemptions})")
+                }
+            };
+            panic!(
+                "model check failed on execution {iterations}{seed_note}: {msg}\n  schedule trace: {trace:?}"
+            );
+        }
+        if !explorer.lock().unwrap_or_else(|e| e.into_inner()).advance() {
+            exhausted = true;
+            break;
+        }
+    }
+    Report { iterations, exhausted }
+}
+
+// ---------------------------------------------------------------------------
+// Meta-tests: the checker must catch planted bugs. Always compiled, so the
+// tier-1 lane validates the checker itself without `--cfg ciq_model`.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::shim::{AtomicUsize, Condvar, Mutex, Ordering};
+    use super::*;
+    use std::sync::atomic::{AtomicBool as StdAtomicBool, Ordering as StdOrdering};
+
+    #[test]
+    fn explores_multiple_schedules_and_finds_lost_update() {
+        // Two threads each do a non-atomic read-modify-write through shim
+        // atomics. Under some interleaving both read 0 and the final value
+        // is 1 — the checker must reach that schedule.
+        let saw_lost = Arc::new(StdAtomicBool::new(false));
+        let saw = saw_lost.clone();
+        let report = check_with(ModelConfig::dfs(2), move || {
+            let v = Arc::new(AtomicUsize::new(0));
+            let (a, b) = (v.clone(), v.clone());
+            let t1 = spawn(move || {
+                let x = a.load(Ordering::Relaxed);
+                a.store(x + 1, Ordering::Relaxed);
+            });
+            let t2 = spawn(move || {
+                let x = b.load(Ordering::Relaxed);
+                b.store(x + 1, Ordering::Relaxed);
+            });
+            t1.join();
+            t2.join();
+            if v.load(Ordering::Relaxed) == 1 {
+                saw.store(true, StdOrdering::SeqCst);
+            }
+        });
+        assert!(report.iterations > 1, "expected multiple schedules, got {report:?}");
+        assert!(saw_lost.load(StdOrdering::SeqCst), "lost-update interleaving never explored");
+    }
+
+    #[test]
+    fn reports_assertion_under_racy_schedule() {
+        // Same lost update, but asserted against: the check must FAIL.
+        let r = std::panic::catch_unwind(|| {
+            check_with(ModelConfig::dfs(2), || {
+                let v = Arc::new(AtomicUsize::new(0));
+                let (a, b) = (v.clone(), v.clone());
+                let t1 = spawn(move || {
+                    let x = a.load(Ordering::Relaxed);
+                    a.store(x + 1, Ordering::Relaxed);
+                });
+                let t2 = spawn(move || {
+                    let x = b.load(Ordering::Relaxed);
+                    b.store(x + 1, Ordering::Relaxed);
+                });
+                t1.join();
+                t2.join();
+                assert_eq!(v.load(Ordering::Relaxed), 2, "lost update");
+            });
+        });
+        let msg = payload_msg(&*r.expect_err("racy assertion must be caught"));
+        assert!(msg.contains("model check failed"), "unexpected failure message: {msg}");
+        assert!(msg.contains("lost update"), "original assertion lost: {msg}");
+    }
+
+    #[test]
+    fn detects_abba_deadlock() {
+        let r = std::panic::catch_unwind(|| {
+            check_with(ModelConfig::dfs(1), || {
+                let a = Arc::new(Mutex::new(0u32));
+                let b = Arc::new(Mutex::new(0u32));
+                let (a1, b1) = (a.clone(), b.clone());
+                let (a2, b2) = (a.clone(), b.clone());
+                let t1 = spawn(move || {
+                    let _ga = a1.lock().unwrap();
+                    let _gb = b1.lock().unwrap();
+                });
+                let t2 = spawn(move || {
+                    let _gb = b2.lock().unwrap();
+                    let _ga = a2.lock().unwrap();
+                });
+                t1.join();
+                t2.join();
+            });
+        });
+        let msg = payload_msg(&*r.expect_err("ABBA deadlock must be caught"));
+        assert!(msg.contains("deadlock"), "expected deadlock report, got: {msg}");
+    }
+
+    #[test]
+    fn mutex_gives_mutual_exclusion() {
+        // With a real lock around the read-modify-write, every schedule must
+        // see the full count.
+        let report = check_with(ModelConfig::dfs(2).iterations(2000), || {
+            let v = Arc::new(Mutex::new(0u64));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let v = v.clone();
+                    spawn(move || {
+                        for _ in 0..2 {
+                            let mut g = v.lock().unwrap();
+                            *g += 1;
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join();
+            }
+            assert_eq!(*v.lock().unwrap(), 4);
+        });
+        assert!(report.iterations >= 1);
+    }
+
+    #[test]
+    fn condvar_handoff_never_loses_wakeup() {
+        // Classic flag + condvar rendezvous; correct in every interleaving
+        // because the flag is checked under the lock.
+        check_with(ModelConfig::dfs(2), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let producer = spawn(move || {
+                let (mx, cv) = &*p2;
+                *mx.lock().unwrap() = true;
+                cv.notify_one();
+            });
+            let (mx, cv) = &*pair;
+            let mut g = mx.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            producer.join();
+        });
+    }
+
+    #[test]
+    fn random_mode_is_deterministic_per_seed() {
+        // Two runs with the same seed must explore the same schedules: drive
+        // a racy (but assert-free) body and compare observed outcomes.
+        let run = |seed: u64| {
+            let outcomes = Arc::new(StdMutex::new(Vec::new()));
+            let o = outcomes.clone();
+            check_with(ModelConfig::random(seed, 40), move || {
+                let v = Arc::new(AtomicUsize::new(0));
+                let (a, b) = (v.clone(), v.clone());
+                let t1 = spawn(move || {
+                    let x = a.load(Ordering::Relaxed);
+                    a.store(x + 1, Ordering::Relaxed);
+                });
+                let t2 = spawn(move || {
+                    let x = b.load(Ordering::Relaxed);
+                    b.store(x + 1, Ordering::Relaxed);
+                });
+                t1.join();
+                t2.join();
+                o.lock().unwrap().push(v.load(Ordering::Relaxed));
+            });
+            let g = outcomes.lock().unwrap();
+            g.clone()
+        };
+        assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn join_observes_side_effects() {
+        check_with(ModelConfig::dfs(1), || {
+            let v = Arc::new(AtomicUsize::new(0));
+            let v2 = v.clone();
+            let t = spawn(move || {
+                v2.store(7, Ordering::Release);
+            });
+            t.join();
+            assert_eq!(v.load(Ordering::Acquire), 7);
+        });
+    }
+}

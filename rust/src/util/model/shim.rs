@@ -1,0 +1,343 @@
+//! Model-aware drop-in replacements for the `std::sync` primitives used by
+//! the shimmed modules (`exec/`, `util/threadpool.rs`).
+//!
+//! Each type wraps its std counterpart and consults
+//! [`super::current`]: on a **model thread** (spawned via
+//! [`super::spawn`] inside a [`super::check`] run) every operation becomes a
+//! scheduling point routed through the deterministic scheduler; on any other
+//! thread it degrades to the plain std operation, so code under test behaves
+//! identically when constructed outside a model run.
+//!
+//! Two deliberate semantic simplifications, both *stricter* than std:
+//!
+//! - All atomics execute `SeqCst` under the model regardless of the caller's
+//!   `Ordering` (the checker explores interleavings under sequential
+//!   consistency; weak-memory effects are Miri/TSan territory).
+//! - Model locks never report poisoning (a panicking schedule aborts the
+//!   whole execution anyway), but the API still returns `LockResult` so call
+//!   sites written against std (`.lock().unwrap()`) compile unchanged.
+//!
+//! Timed condvar waits are modeled as *nondeterministic* timeouts: the
+//! scheduler may wake a `wait_timeout` at any point, so code must be correct
+//! whether the timeout fires early or never-before-notify — exactly the
+//! property a real racing timer demands.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::time::Duration;
+
+pub use std::sync::atomic::Ordering;
+pub type LockResult<T> = Result<T, std::sync::PoisonError<T>>;
+
+use super::current;
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Model-aware mutex; see the module docs for semantics.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((sched, me)) = current() {
+            sched.lock_acquire(me, self.addr());
+            // The model lock serializes model threads, so the inner std lock
+            // is uncontended here; it still guards the data for real.
+            let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard { inner: Some(g), mx: self })
+        } else {
+            let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard { inner: Some(g), mx: self })
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.inner.into_inner().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        Ok(self.inner.get_mut().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+/// Guard for [`Mutex`]; dropping it releases the model lock (a scheduling
+/// point) after the inner std guard.
+pub struct MutexGuard<'a, T> {
+    inner: Option<StdMutexGuard<'a, T>>,
+    mx: &'a Mutex<T>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Release the std guard and disarm `Drop`, returning the mutex for
+    /// re-acquisition. Used by `Condvar::wait*` which must not run the
+    /// model-unlock in `Drop` (the scheduler releases-and-registers
+    /// atomically instead).
+    fn dissolve(mut self) -> &'a Mutex<T> {
+        let mx = self.mx;
+        self.inner.take();
+        std::mem::forget(self);
+        mx
+    }
+
+    /// Like `dissolve`, but keeps the std guard alive (non-model condvar
+    /// path hands it straight to `StdCondvar::wait`).
+    fn take_std(mut self) -> (StdMutexGuard<'a, T>, &'a Mutex<T>) {
+        let g = self.inner.take().expect("guard already dissolved");
+        let mx = self.mx;
+        std::mem::forget(self);
+        (g, mx)
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard dissolved")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard dissolved")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Drop the std guard first so the data lock is free before any other
+        // model thread is scheduled by `lock_release`.
+        self.inner.take();
+        if let Some((sched, me)) = current() {
+            sched.lock_release(me, self.mx.addr());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Result of [`Condvar::wait_timeout`]; mirrors
+/// `std::sync::WaitTimeoutResult`.
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-aware condition variable.
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { inner: StdCondvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if let Some((sched, me)) = current() {
+            let mx = guard.dissolve();
+            sched.cv_wait(me, self.addr(), mx.addr(), false);
+            sched.lock_acquire(me, mx.addr());
+            let g = mx.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard { inner: Some(g), mx })
+        } else {
+            let (g, mx) = guard.take_std();
+            let g = self.inner.wait(g).unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard { inner: Some(g), mx })
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if let Some((sched, me)) = current() {
+            let mx = guard.dissolve();
+            // Timeout length is irrelevant under the model: the scheduler
+            // may fire the timeout at any point (see module docs).
+            let notified = sched.cv_wait(me, self.addr(), mx.addr(), true);
+            sched.lock_acquire(me, mx.addr());
+            let g = mx.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok((MutexGuard { inner: Some(g), mx }, WaitTimeoutResult(!notified)))
+        } else {
+            let (g, mx) = guard.take_std();
+            let (g, res) = self.inner.wait_timeout(g, dur).unwrap_or_else(|e| e.into_inner());
+            Ok((MutexGuard { inner: Some(g), mx }, WaitTimeoutResult(res.timed_out())))
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((sched, me)) = current() {
+            sched.cv_notify(me, self.addr(), false);
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((sched, me)) = current() {
+            sched.cv_notify(me, self.addr(), true);
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+fn model_event() {
+    if let Some((sched, me)) = current() {
+        sched.preempt(me);
+    }
+}
+
+macro_rules! model_atomic {
+    ($name:ident, $std:ty, $val:ty) => {
+        /// Model-aware atomic: each op is a scheduling point and executes
+        /// `SeqCst` under the model (caller's ordering recorded but ignored).
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $val) -> Self {
+                $name { inner: <$std>::new(v) }
+            }
+
+            pub fn load(&self, _order: Ordering) -> $val {
+                model_event();
+                self.inner.load(Ordering::SeqCst)
+            }
+
+            pub fn store(&self, v: $val, _order: Ordering) {
+                model_event();
+                self.inner.store(v, Ordering::SeqCst)
+            }
+
+            pub fn swap(&self, v: $val, _order: Ordering) -> $val {
+                model_event();
+                self.inner.swap(v, Ordering::SeqCst)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $val,
+                new: $val,
+                _ok: Ordering,
+                _err: Ordering,
+            ) -> Result<$val, $val> {
+                model_event();
+                self.inner.compare_exchange(cur, new, Ordering::SeqCst, Ordering::SeqCst)
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                $name::new(Default::default())
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                self.inner.fmt(f)
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+macro_rules! model_atomic_arith {
+    ($name:ident, $val:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $val, _order: Ordering) -> $val {
+                model_event();
+                self.inner.fetch_add(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_sub(&self, v: $val, _order: Ordering) -> $val {
+                model_event();
+                self.inner.fetch_sub(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_max(&self, v: $val, _order: Ordering) -> $val {
+                model_event();
+                self.inner.fetch_max(v, Ordering::SeqCst)
+            }
+        }
+    };
+}
+
+model_atomic_arith!(AtomicU64, u64);
+model_atomic_arith!(AtomicUsize, usize);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Off-model fallback: shim types behave like std when no scheduler is
+    // registered on the current thread.
+    #[test]
+    fn fallback_mutex_and_condvar() {
+        let mx = Mutex::new(1u32);
+        {
+            let mut g = mx.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*mx.lock().unwrap(), 2);
+        assert_eq!(mx.into_inner().unwrap(), 2);
+
+        let cv = Condvar::new();
+        let mx = Mutex::new(false);
+        let g = mx.lock().unwrap();
+        let (_g, res) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        assert!(res.timed_out());
+    }
+
+    #[test]
+    fn fallback_atomics() {
+        let b = AtomicBool::new(false);
+        assert!(!b.swap(true, Ordering::AcqRel));
+        assert!(b.load(Ordering::Acquire));
+        let u = AtomicU64::new(5);
+        assert_eq!(u.fetch_add(2, Ordering::Relaxed), 5);
+        assert_eq!(u.load(Ordering::Relaxed), 7);
+        let z = AtomicUsize::new(0);
+        assert_eq!(z.compare_exchange(0, 9, Ordering::SeqCst, Ordering::SeqCst), Ok(0));
+        assert_eq!(z.load(Ordering::SeqCst), 9);
+    }
+}

@@ -28,16 +28,38 @@
 //! region run serially on the calling worker (no deadlock, no
 //! oversubscription).
 //!
+//! ## Epoch protocol & ordering audit
+//!
+//! The park/unpark handoff is deliberately **mutex-based, not atomic-based**:
+//! `epoch`, `task`, and `active` only ever change under `ChunkPool::state`,
+//! so their visibility is carried by the lock and no `Ordering` subtleties
+//! apply to them at all. The protocol:
+//!
+//! 1. submitter (under `state`): `epoch += 1`, `task = Some(..)`, notify;
+//! 2. worker (under `state`): sees `epoch != seen` with a task present →
+//!    records `seen = epoch`, `active += 1`, *then* releases the lock and
+//!    runs chunks (registration-before-work: the submitter's step 4 check
+//!    cannot miss a worker that will still touch the task);
+//! 3. worker (under `state`): `active -= 1`, notify `done_cv` at zero;
+//! 4. submitter (under `state`): waits `active == 0`, then `task = None` —
+//!    only after this can its stack frame (which the task borrows) unwind.
+//!
+//! The *only* atomic in the hot protocol is the chunk-claim counter, which
+//! is safe at `Relaxed` (see the comment at its use). This file goes through
+//! [`crate::util::sync`] so the whole protocol runs under the deterministic
+//! model checker (`--cfg ciq_model`, see `rust/tests/model_exec.rs`), which
+//! explores the park/unpark interleavings directly.
+//!
 //! Alongside the chunk pool lives [`TaskPool`]: a small independent-job
 //! pool (FIFO or LIFO queue, condvar-parked workers, drain-on-drop) that
 //! the coordinator uses for batch execution and background warming — the
 //! compute half of the `exec` split, where the async executor owns the
 //! waiting and these worker threads own the CPU-bound jobs.
 
+use crate::util::sync::{AtomicUsize, Condvar, Mutex, Ordering};
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// First panic payload captured from a job's body, re-raised verbatim on the
 /// submitting thread once the job completes.
@@ -61,7 +83,10 @@ pub fn num_threads() -> usize {
 /// process. Tests assert this stays constant across thousands of parallel
 /// calls — the "no per-MVM thread spawning" guarantee.
 pub fn pool_spawned_threads() -> usize {
-    SPAWNED.load(Ordering::SeqCst)
+    // ordering: Relaxed — monotonic telemetry counter read for tests; no
+    // other state is inferred from it. (Was SeqCst; nothing synchronizes
+    // through it.)
+    SPAWNED.load(Ordering::Relaxed)
 }
 
 static SPAWNED: AtomicUsize = AtomicUsize::new(0);
@@ -69,7 +94,7 @@ static SPAWNED: AtomicUsize = AtomicUsize::new(0);
 thread_local! {
     // True on pool workers (always) and on a submitter while it executes its
     // own job; parallel entry points check it to run nested calls serially.
-    static IN_PARALLEL: Cell<bool> = Cell::new(false);
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
 }
 
 fn in_parallel_region() -> bool {
@@ -79,7 +104,8 @@ fn in_parallel_region() -> bool {
 /// One job: call `func(s, e)` for chunk ranges popped off `counter` until
 /// `nchunks` is exhausted. The `'static` references are lifetime-erased
 /// borrows of the submitter's stack frame — valid because the submitter
-/// blocks until every registered worker has finished (see [`run_parallel`]).
+/// blocks until every registered worker has finished (see
+/// [`ChunkPool::run`]).
 #[derive(Clone, Copy)]
 struct Task {
     func: &'static (dyn Fn(usize, usize) + Sync),
@@ -99,9 +125,17 @@ struct PoolState {
     /// the state lock, so the submitter's `active == 0` check cannot race a
     /// late take).
     active: usize,
+    /// Asks workers to exit (only ever set by [`ChunkPool::shutdown`];
+    /// the process-wide pool never stops).
+    stop: bool,
 }
 
-struct Pool {
+/// The data-parallel chunk pool: one job at a time, every worker (plus the
+/// submitter) stealing chunks off a shared counter. Public so the model
+/// checker (`rust/tests/model_exec.rs`) can build a private instance whose
+/// workers are *model* threads; production code uses the process-wide
+/// instance behind [`parallel_for_chunks`] and friends.
+pub struct ChunkPool {
     state: Mutex<PoolState>,
     work_cv: Condvar,
     done_cv: Condvar,
@@ -110,60 +144,159 @@ struct Pool {
     workers: usize,
 }
 
-fn pool() -> &'static Pool {
-    static POOL: OnceLock<&'static Pool> = OnceLock::new();
-    *POOL.get_or_init(|| {
-        let workers = num_threads().saturating_sub(1);
-        let pool: &'static Pool = Box::leak(Box::new(Pool {
-            state: Mutex::new(PoolState { epoch: 0, task: None, active: 0 }),
+impl ChunkPool {
+    /// A pool expecting `workers` worker threads (spawn them with
+    /// [`ChunkPool::spawn_workers_with`]). `workers == 0` makes
+    /// [`ChunkPool::run`] fully serial on the caller.
+    pub fn new(workers: usize) -> Arc<ChunkPool> {
+        Arc::new(ChunkPool {
+            state: Mutex::new(PoolState { epoch: 0, task: None, active: 0, stop: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             submit: Mutex::new(()),
             workers,
-        }));
-        for _ in 0..workers {
-            SPAWNED.fetch_add(1, Ordering::SeqCst);
-            std::thread::Builder::new()
-                .name("ciq-pool".into())
-                .spawn(move || worker_loop(pool))
-                .expect("failed to spawn pool worker");
-        }
-        pool
-    })
-}
+        })
+    }
 
-fn worker_loop(pool: &'static Pool) {
-    IN_PARALLEL.with(|f| f.set(true));
-    let mut seen = 0u64;
-    loop {
-        let task = {
-            let mut guard = pool.state.lock().unwrap();
-            loop {
-                if guard.epoch != seen {
-                    if let Some(task) = guard.task {
-                        seen = guard.epoch;
-                        guard.active += 1;
-                        break task;
+    /// Hand `workers` worker-loop closures to `spawn`. Injectable so the
+    /// global pool spawns real OS threads while model tests spawn model
+    /// threads — same worker code either way.
+    pub fn spawn_workers_with(self: &Arc<Self>, mut spawn: impl FnMut(Box<dyn FnOnce() + Send + 'static>)) {
+        for _ in 0..self.workers {
+            let pool = self.clone();
+            spawn(Box::new(move || pool.worker_loop()));
+        }
+    }
+
+    /// Ask every worker to exit once idle (they finish a claimed job
+    /// first). Used by model tests; the global pool lives forever.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().stop = true;
+        self.work_cv.notify_all();
+    }
+
+    fn worker_loop(&self) {
+        IN_PARALLEL.with(|f| f.set(true));
+        let mut seen = 0u64;
+        loop {
+            let task = {
+                let mut guard = self.state.lock().unwrap();
+                loop {
+                    if guard.stop {
+                        return;
                     }
-                    // Epoch moved but the task is already cleared: we slept
-                    // through that whole job. Remember the epoch so we do not
-                    // spin, and wait for the next one.
-                    seen = guard.epoch;
+                    if guard.epoch != seen {
+                        if let Some(task) = guard.task {
+                            seen = guard.epoch;
+                            guard.active += 1;
+                            break task;
+                        }
+                        // Epoch moved but the task is already cleared: we
+                        // slept through that whole job. Remember the epoch so
+                        // we do not spin, and wait for the next one.
+                        seen = guard.epoch;
+                    }
+                    guard = self.work_cv.wait(guard).unwrap();
                 }
-                guard = pool.work_cv.wait(guard).unwrap();
+            };
+            run_chunks(&task);
+            let mut guard = self.state.lock().unwrap();
+            guard.active -= 1;
+            if guard.active == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Run one chunked job to completion: publish the task, work the
+    /// submitter's share, then wait out every registered worker before the
+    /// borrowed stack frame may unwind. See the module-level protocol docs;
+    /// weakening step 4 (mutation M3 in `rust/tests/model_exec.rs`) lets a
+    /// worker touch a dead frame and is caught by the model checker.
+    pub fn run(&self, n: usize, chunk: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        let chunk = chunk.max(1);
+        if n == 0 {
+            return;
+        }
+        if self.workers == 0 {
+            run_serial(n, chunk, body);
+            return;
+        }
+        let nchunks = n.div_ceil(chunk);
+        let counter = AtomicUsize::new(0);
+        let panicked: PanicSlot = Mutex::new(None);
+        // SAFETY: the erased borrows (`body`, `counter`, `panicked`) live on
+        // this stack frame, and this function does not return (nor unwind —
+        // the panic slot defers re-raising) until step 4 below has observed
+        // `active == 0` under the state lock with the task retired, after
+        // which no worker can reach them.
+        let task = unsafe {
+            Task {
+                func: erase_body(body),
+                counter: erase_counter(&counter),
+                panicked: erase_slot(&panicked),
+                n,
+                chunk,
+                nchunks,
             }
         };
+        // One job at a time; competing submitters queue here.
+        let submit_guard = self.submit.lock().unwrap();
+        {
+            let mut guard = self.state.lock().unwrap();
+            guard.epoch = guard.epoch.wrapping_add(1);
+            guard.task = Some(task);
+            self.work_cv.notify_all();
+        }
+        // The submitting thread works its share too (and is marked
+        // in-parallel so any nested parallel call from the body degrades to
+        // serial).
+        IN_PARALLEL.with(|f| f.set(true));
         run_chunks(&task);
-        let mut guard = pool.state.lock().unwrap();
-        guard.active -= 1;
-        if guard.active == 0 {
-            pool.done_cv.notify_all();
+        IN_PARALLEL.with(|f| f.set(false));
+        // Wait for every registered worker to finish, then retire the task
+        // so a late-waking worker can never touch this (about to die) stack
+        // frame.
+        {
+            let mut guard = self.state.lock().unwrap();
+            while guard.active > 0 {
+                guard = self.done_cv.wait(guard).unwrap();
+            }
+            guard.task = None;
+        }
+        drop(submit_guard);
+        if let Some(payload) = panicked.into_inner().unwrap() {
+            std::panic::resume_unwind(payload);
         }
     }
 }
 
+/// The process-wide pool, created (with real OS worker threads) on first
+/// use.
+fn pool() -> &'static Arc<ChunkPool> {
+    static POOL: OnceLock<Arc<ChunkPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let p = ChunkPool::new(num_threads().saturating_sub(1));
+        p.spawn_workers_with(|worker| {
+            // ordering: Relaxed — spawn telemetry only (see
+            // `pool_spawned_threads`); thread startup itself synchronizes.
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+            std::thread::Builder::new()
+                .name("ciq-pool".into())
+                .spawn(worker)
+                .expect("failed to spawn pool worker");
+        });
+        p
+    })
+}
+
 fn run_chunks(task: &Task) {
     loop {
+        // ordering: Relaxed — the counter only *claims* chunk indices;
+        // fetch_add's atomicity alone guarantees each index is claimed once.
+        // All data written by chunk bodies is published to the submitter by
+        // the state-lock release/acquire in the active==0 handshake, never
+        // through this counter.
         let c = task.counter.fetch_add(1, Ordering::Relaxed);
         if c >= task.nchunks {
             break;
@@ -183,22 +316,38 @@ fn run_chunks(task: &Task) {
     }
 }
 
-// SAFETY (all three): pure lifetime erasure so borrows of the submitter's
-// stack can cross into worker threads. The protocol in `run_parallel`
-// guarantees the borrows outlive every access: workers register on the task
-// under the state lock before touching it, and the submitter clears the task
-// and returns only after observing `active == 0` under that same lock with
-// the chunk counter exhausted.
+/// Lifetime-erase a job body for the worker-visible [`Task`].
+///
+/// # Safety
+///
+/// The caller must guarantee the borrow outlives every worker access — i.e.
+/// it must follow the registration/retire protocol of [`ChunkPool::run`].
 unsafe fn erase_body<'a>(
     f: &'a (dyn Fn(usize, usize) + Sync),
 ) -> &'static (dyn Fn(usize, usize) + Sync) {
-    std::mem::transmute(f)
+    // SAFETY: pure lifetime transmute (same type, same layout); validity is
+    // the caller's contract above.
+    unsafe { std::mem::transmute(f) }
 }
+
+/// Lifetime-erase the chunk counter; same contract as [`erase_body`].
+///
+/// # Safety
+///
+/// See [`erase_body`].
 unsafe fn erase_counter(c: &AtomicUsize) -> &'static AtomicUsize {
-    std::mem::transmute(c)
+    // SAFETY: pure lifetime transmute; validity is the caller's contract.
+    unsafe { std::mem::transmute(c) }
 }
+
+/// Lifetime-erase the panic slot; same contract as [`erase_body`].
+///
+/// # Safety
+///
+/// See [`erase_body`].
 unsafe fn erase_slot(s: &PanicSlot) -> &'static PanicSlot {
-    std::mem::transmute(s)
+    // SAFETY: pure lifetime transmute; validity is the caller's contract.
+    unsafe { std::mem::transmute(s) }
 }
 
 fn run_serial(n: usize, chunk: usize, body: &dyn Fn(usize, usize)) {
@@ -207,52 +356,6 @@ fn run_serial(n: usize, chunk: usize, body: &dyn Fn(usize, usize)) {
         let e = (s + chunk).min(n);
         body(s, e);
         s = e;
-    }
-}
-
-fn run_parallel(n: usize, chunk: usize, nchunks: usize, body: &(dyn Fn(usize, usize) + Sync)) {
-    let pool = pool();
-    if pool.workers == 0 {
-        run_serial(n, chunk, body);
-        return;
-    }
-    let counter = AtomicUsize::new(0);
-    let panicked: PanicSlot = Mutex::new(None);
-    let task = unsafe {
-        Task {
-            func: erase_body(body),
-            counter: erase_counter(&counter),
-            panicked: erase_slot(&panicked),
-            n,
-            chunk,
-            nchunks,
-        }
-    };
-    // One job at a time; competing submitters queue here.
-    let submit_guard = pool.submit.lock().unwrap();
-    {
-        let mut guard = pool.state.lock().unwrap();
-        guard.epoch = guard.epoch.wrapping_add(1);
-        guard.task = Some(task);
-        pool.work_cv.notify_all();
-    }
-    // The submitting thread works its share too (and is marked in-parallel
-    // so any nested parallel call from the body degrades to serial).
-    IN_PARALLEL.with(|f| f.set(true));
-    run_chunks(&task);
-    IN_PARALLEL.with(|f| f.set(false));
-    // Wait for every registered worker to finish, then retire the task so a
-    // late-waking worker can never touch this (about to die) stack frame.
-    {
-        let mut guard = pool.state.lock().unwrap();
-        while guard.active > 0 {
-            guard = pool.done_cv.wait(guard).unwrap();
-        }
-        guard.task = None;
-    }
-    drop(submit_guard);
-    if let Some(payload) = panicked.into_inner().unwrap() {
-        std::panic::resume_unwind(payload);
     }
 }
 
@@ -285,7 +388,7 @@ where
         run_serial(n, chunk, &body);
         return;
     }
-    run_parallel(n, chunk, nchunks, &body);
+    pool().run(n, chunk, &body);
 }
 
 /// Parallel map over `0..n`, collecting results in order. Work is
@@ -363,6 +466,7 @@ struct SendPtr<T>(*mut T);
 // SAFETY: the pointer is only ever used to carve out disjoint `&mut [T]`
 // blocks across threads, which is sound exactly when `T: Send`.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — shared references to the wrapper only copy the pointer.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Queue discipline for a [`TaskPool`].
@@ -519,6 +623,8 @@ where
     std::thread::scope(|scope| {
         for _ in 0..nthreads.min(slots.len()) {
             scope.spawn(|| loop {
+                // ordering: Relaxed — claim counter; the scope join is the
+                // publication barrier for the written blocks.
                 let c = counter.fetch_add(1, Ordering::Relaxed);
                 if c >= slots.len() {
                     break;
@@ -542,10 +648,10 @@ mod tests {
         let sum = AtomicU64::new(0);
         parallel_for_chunks(n, 64, |s, e| {
             let local: u64 = (s..e).map(|i| i as u64).sum();
-            sum.fetch_add(local, Ordering::Relaxed);
+            sum.fetch_add(local, std::sync::atomic::Ordering::Relaxed);
         });
         let expect: u64 = (0..n as u64).sum();
-        assert_eq!(sum.load(Ordering::Relaxed), expect);
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), expect);
     }
 
     #[test]
@@ -620,6 +726,27 @@ mod tests {
     }
 
     #[test]
+    fn private_chunk_pool_with_injected_spawner_runs_and_shuts_down() {
+        // The model checker's entry path, exercised here with real threads:
+        // a private ChunkPool whose workers come from an injected spawner.
+        let pool = ChunkPool::new(2);
+        let mut handles = Vec::new();
+        pool.spawn_workers_with(|w| handles.push(std::thread::spawn(w)));
+        let sum = AtomicUsize::new(0);
+        for _ in 0..3 {
+            sum.store(0, std::sync::atomic::Ordering::SeqCst);
+            pool.run(100, 10, &|s, e| {
+                sum.fetch_add(e - s, std::sync::atomic::Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(std::sync::atomic::Ordering::SeqCst), 100);
+        }
+        pool.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
     fn one_thread_runs_fully_serial_on_calling_thread() {
         let me = std::thread::current().id();
         let ids = Mutex::new(Vec::new());
@@ -644,27 +771,27 @@ mod tests {
 
     #[test]
     fn nested_parallel_calls_run_serially_without_deadlock() {
-        let total = AtomicUsize::new(0);
+        let total = std::sync::atomic::AtomicUsize::new(0);
         parallel_for_chunks_threads(8, 1, 4, |_s, _e| {
             parallel_for_chunks_threads(10, 3, 4, |a, b| {
-                total.fetch_add(b - a, Ordering::Relaxed);
+                total.fetch_add(b - a, std::sync::atomic::Ordering::Relaxed);
             });
         });
-        assert_eq!(total.load(Ordering::Relaxed), 80);
+        assert_eq!(total.load(std::sync::atomic::Ordering::Relaxed), 80);
     }
 
     #[test]
     fn task_pool_runs_all_jobs_and_drains_on_drop() {
-        let done = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let pool = TaskPool::new("tp-test", 3, TaskOrder::Fifo);
         for _ in 0..50 {
             let done = done.clone();
             pool.submit(move || {
-                done.fetch_add(1, Ordering::SeqCst);
+                done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
             });
         }
         drop(pool); // must finish every accepted job before joining
-        assert_eq!(done.load(Ordering::SeqCst), 50);
+        assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 50);
     }
 
     #[test]
@@ -695,15 +822,15 @@ mod tests {
 
     #[test]
     fn task_pool_survives_panicking_job() {
-        let done = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let pool = TaskPool::new("tp-panic", 1, TaskOrder::Fifo);
         pool.submit(|| panic!("job panic must not kill the worker"));
         let d = done.clone();
         pool.submit(move || {
-            d.fetch_add(1, Ordering::SeqCst);
+            d.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         });
         drop(pool);
-        assert_eq!(done.load(Ordering::SeqCst), 1);
+        assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 1);
     }
 
     #[test]
@@ -712,11 +839,11 @@ mod tests {
             for _ in 0..4 {
                 s.spawn(|| {
                     for _ in 0..10 {
-                        let sum = AtomicUsize::new(0);
+                        let sum = std::sync::atomic::AtomicUsize::new(0);
                         parallel_for_chunks_threads(1000, 16, 4, |a, b| {
-                            sum.fetch_add(b - a, Ordering::Relaxed);
+                            sum.fetch_add(b - a, std::sync::atomic::Ordering::Relaxed);
                         });
-                        assert_eq!(sum.load(Ordering::Relaxed), 1000);
+                        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 1000);
                     }
                 });
             }
