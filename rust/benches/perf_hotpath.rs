@@ -8,12 +8,17 @@
 //! dispatcher's enqueue→flush latency at 1/8/64 shards (emits
 //! `BENCH_dispatch.json`), (7) allocation pressure of the solve stack —
 //! allocs/solve and solves/sec, workspace-warm vs cold, measured through a
-//! counting global allocator (emits `BENCH_alloc.json`).
+//! counting global allocator (emits `BENCH_alloc.json`), (8) the batched
+//! dense Newton–Schulz tier vs per-operator Krylov across
+//! N ∈ {16, 64, 256, 1024} × batch ∈ {1, 8, 64, 512} — the crossover that
+//! sets `BatchedDenseConfig::n_threshold` (emits
+//! `BENCH_batched_dense.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
 //! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, section 6
-//! to 1/8 shards, and section 7 to N=256 (the CI smoke configuration); the
+//! to 1/8 shards, section 7 to N=256, and section 8 to
+//! N ∈ {16, 64} × batch ∈ {1, 8} (the CI smoke configuration); the
 //! full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
 //! types × {matvec, matmat r=8}.
 
@@ -220,7 +225,9 @@ fn main() {
 
     bench_alloc(args.has("fast"), &mut rng, &mut checks);
 
-    // evaluate every recorded verdict only now — all four JSON artifacts
+    bench_batched_dense(args.has("fast"), &mut rng, &mut checks);
+
+    // evaluate every recorded verdict only now — all five JSON artifacts
     // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
@@ -440,5 +447,127 @@ fn bench_ciq_precond(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
     checks.push((
         "preconditioned CIQ uses fewer msMINRES iterations than plain".into(),
         iters.1 < iters.0,
+    ));
+}
+
+/// §8: the batched-dense Newton–Schulz tier vs per-operator Krylov — the
+/// crossover measurement behind `BatchedDenseConfig::n_threshold`. For each
+/// `N × batch` cell: `build_ms` is the one-per-operator-version coupled
+/// Newton–Schulz factorization of the whole stack, `apply_ms` the
+/// steady-state batched GEMV serving one request per operator, and
+/// `krylov_ms` the per-operator cached-bounds CIQ solve (warm workspace, so
+/// both sides are steady-state). Stack buffers are capped at ~32 MiB: big
+/// cells measure a subset of the batch and extrapolate linearly (both tiers
+/// are linear in batch — `"sample"` in the JSON records the measured
+/// subset). Writes `BENCH_batched_dense.json` into the CWD (uploaded by the
+/// CI bench-smoke job next to the other JSONs).
+fn bench_batched_dense(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
+    use ciq::ciq::dense_sqrt::{newton_schulz_stack_in, DenseFactorStack, DenseSqrtOptions};
+    use ciq::linalg::batched::gemv_nn_batched;
+    use ciq::linalg::eigen;
+    use ciq::operators::DenseOp;
+
+    let ns: &[usize] = if fast { &[16, 64] } else { &[16, 64, 256, 1024] };
+    let batches: &[usize] = if fast { &[1, 8] } else { &[1, 8, 64, 512] };
+    let opts = DenseSqrtOptions::default();
+    println!("# perf 8: batched dense Newton–Schulz tier vs per-operator Krylov");
+    println!("n\tbatch\tbuild_ms\tapply_ms\tkrylov_ms\tdense_speedup");
+    let mut entries: Vec<String> = Vec::new();
+    let mut ns_accuracy = 0.0f64;
+    let mut crossover_n = 0usize;
+    let solver = Ciq::new(CiqOptions { tol: 1e-10, ..Default::default() });
+    for &n in ns {
+        let nn = n * n;
+        let cap = ((1usize << 22) / nn).max(1);
+        let reps = if n >= 256 { 1 } else { 3 };
+        let sample_max = batches.iter().copied().max().unwrap_or(1).min(cap);
+        // one SPD ensemble per N, reused across batch sizes
+        let mut a_stack = vec![0.0; sample_max * nn];
+        for i in 0..sample_max {
+            let a = Matrix::randn(n, n, rng);
+            let mut k = a.matmul(&a.transpose());
+            for d in 0..n {
+                k[(d, d)] += n as f64 * 0.5;
+            }
+            a_stack[i * nn..(i + 1) * nn].copy_from_slice(k.as_slice());
+        }
+        let xs: Vec<f64> = (0..sample_max * n).map(|_| rng.normal()).collect();
+        // per-operator Krylov reference: cached-bounds context, warm
+        // workspace, one single-RHS solve per request
+        let op = DenseOp::new(Matrix::from_vec(n, n, a_stack[..nn].to_vec()));
+        let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).expect("ctx");
+        let mut kws = SolveWorkspace::new();
+        let b = &xs[..n];
+        for _ in 0..2 {
+            let res = solver.solve_in(&mut kws, &op, b, SolveKind::InvSqrt, &ctx).expect("warm");
+            kws.give_vec(res.solution);
+        }
+        let t_krylov_req = common::bench_median(reps, || {
+            let res = solver.solve_in(&mut kws, &op, b, SolveKind::InvSqrt, &ctx).expect("solve");
+            kws.give_vec(res.solution);
+        });
+        for &batch in batches {
+            let sample = batch.min(cap);
+            let scale = batch as f64 / sample as f64;
+            let mut stack = DenseFactorStack::new(n, sample);
+            let mut ws = SolveWorkspace::new();
+            let t_build = common::bench_median(reps, || {
+                newton_schulz_stack_in(&mut ws, n, sample, &a_stack[..sample * nn], &opts, &mut stack);
+            });
+            assert!(stack.all_converged(), "bench ensemble must converge (N={n})");
+            let mut ys = vec![0.0; sample * n];
+            let t_apply = common::bench_median(reps, || {
+                ys.fill(0.0);
+                gemv_nn_batched(sample, n, &stack.invsqrt[..sample * nn], &xs[..sample * n], &mut ys);
+            });
+            let build_ms = t_build * scale * 1e3;
+            let apply_ms = t_apply * scale * 1e3;
+            let krylov_ms = t_krylov_req * batch as f64 * 1e3;
+            let speedup = krylov_ms / apply_ms.max(1e-9);
+            println!(
+                "{n}\t{batch}\t{build_ms:.3}\t{apply_ms:.4}\t{krylov_ms:.3}\t{speedup:.1}x"
+            );
+            entries.push(format!(
+                "    {{\"n\": {n}, \"batch\": {batch}, \"sample\": {sample}, \
+                 \"build_ms\": {build_ms:.4}, \"apply_ms\": {apply_ms:.5}, \
+                 \"krylov_ms\": {krylov_ms:.4}, \"dense_speedup\": {speedup:.2}}}"
+            ));
+            // the routing threshold: largest N whose steady-state apply
+            // still beats the Krylov path at the widest batch in the sweep
+            if batches.last() == Some(&batch) && apply_ms < krylov_ms && n > crossover_n {
+                crossover_n = n;
+            }
+            // oracle check on one element per cell (cheap sizes only):
+            // factors must match the exact eigendecomposition square root
+            if n <= 256 {
+                let m = Matrix::from_vec(n, n, a_stack[..nn].to_vec());
+                let exact = eigen::spd_sqrt(&m).expect("oracle");
+                let got = stack.sqrt_mat(0);
+                let (mut num, mut den) = (0.0f64, 0.0f64);
+                for (g, e) in got.iter().zip(exact.as_slice()) {
+                    num += (g - e) * (g - e);
+                    den += e * e;
+                }
+                ns_accuracy = ns_accuracy.max((num / den.max(1e-300)).sqrt());
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.batched_dense.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"threads\": {}, \"ns\": {ns:?}, \"batches\": {batches:?}, \"tol\": {:.0e}}},\n  \
+         \"entries\": [\n{}\n  ],\n  \"crossover_n\": {crossover_n}\n}}\n",
+        num_threads(),
+        opts.tol,
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_batched_dense.json", json).expect("write BENCH_batched_dense.json");
+    println!("wrote BENCH_batched_dense.json ({} entries, crossover_n = {crossover_n})", entries.len());
+    checks.push((
+        "batched Newton–Schulz matches the eigen K^{1/2} oracle (1e-8)".into(),
+        ns_accuracy < 1e-8,
+    ));
+    checks.push((
+        "dense tier beats per-operator Krylov at the smallest N".into(),
+        crossover_n >= 16,
     ));
 }

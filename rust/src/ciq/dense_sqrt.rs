@@ -1,0 +1,710 @@
+//! Batched dense Newton–Schulz square roots: the small-`N` tier of the
+//! solve stack.
+//!
+//! The msMINRES/CIQ machinery (this crate's namesake) wins when `K` is
+//! large and MVM-bound; for fleets of *small* posteriors the per-request
+//! Krylov iteration is pure overhead. Following the batched-sqrt exemplars
+//! (Lin & Maji's `matrix-sqrt`, its bcnn and FastDifferentiableMatSqrt
+//! descendants), this module computes `K^{1/2}` and `K^{-1/2}` for a whole
+//! **stack** of materialized small SPD operators with nothing but GEMMs:
+//!
+//! Trace-normalize each element: `norm_i = trace(A_i)`. For SPD `A`,
+//! `trace(A) ≥ λ_max`, so every eigenvalue of `A_i / norm_i` lies in
+//! `(0, 1]` — exactly the region where the coupled Newton–Schulz iteration
+//!
+//! ```text
+//! Y_0 = A/norm,  Z_0 = I
+//! T_k = ½ (3 I − Z_k Y_k),   Y_{k+1} = Y_k T_k,   Z_{k+1} = T_k Z_k
+//! ```
+//!
+//! converges quadratically with `Y_k → (A/norm)^{1/2}` and
+//! `Z_k → (A/norm)^{-1/2}`; un-normalizing gives `K^{1/2} = √norm · Y` and
+//! `K^{-1/2} = Z / √norm`. Convergence is monitored per batch element
+//! through the identity `Z_k Y_k = 3I − 2 T_k`: the scaled residual
+//! `r_k = ‖Z_k Y_k − I‖_F / √n` is available from the product the
+//! iteration computes anyway, so converged elements **exit early** (their
+//! factors are finalized into the output stack and the remaining GEMM
+//! passes skip them) while stragglers keep iterating. An element that
+//! fails to reach `tol` within `max_iters` — a numerically singular `A`
+//! has a zero eigenvalue the product map `p ← p(3−p)²/4` can never lift —
+//! is reported with `converged = false`, and the coordinator routes its
+//! requests through the msMINRES path instead (the guaranteed fallback;
+//! see `rust/DESIGN.md` §6).
+//!
+//! The backward pass solves the Lyapunov equation
+//! `dL/dY · Y + Y · dL/dY = dL/dA`-style sensitivity by the matching
+//! coupled iteration from the exemplars
+//! ([`newton_schulz_backward_stack_in`]).
+//!
+//! Everything here is allocation-free in the steady state: all scratch
+//! (`Y`/`Z`/temp stacks, per-element norms and flags) is checked out of
+//! the caller's [`SolveWorkspace`], the batched GEMM phases run through
+//! [`crate::linalg::batched`]'s chunk-pool parallelism (one batch element
+//! per disjoint output block), and results land in a caller-owned
+//! [`DenseFactorStack`]. `rust/tests/alloc_regression.rs` pins the
+//! zero-allocation claim with the counting global allocator.
+
+use crate::linalg::gemm::{gemm_nn, gemm_tn};
+use crate::linalg::SolveWorkspace;
+use crate::util::threadpool::parallel_fill;
+
+/// Iteration knobs for the forward Newton–Schulz solve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseSqrtOptions {
+    /// Iteration cap per batch element. Quadratic convergence makes ~20
+    /// iterations enough for condition numbers into the 1e6 range; the
+    /// default leaves headroom so `converged = false` genuinely means
+    /// "numerically singular", not "impatient".
+    pub max_iters: usize,
+    /// Scaled-residual exit threshold on `‖Z_k Y_k − I‖_F / √n`.
+    pub tol: f64,
+}
+
+impl Default for DenseSqrtOptions {
+    fn default() -> DenseSqrtOptions {
+        DenseSqrtOptions { max_iters: 40, tol: 1e-13 }
+    }
+}
+
+/// Configuration of the coordinator's batched-dense tier
+/// ([`crate::ciq::SolverPolicy::BatchedDense`]): which operators the tier
+/// captures and how hard the Newton–Schulz iteration tries before handing
+/// an operator back to the Krylov path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchedDenseConfig {
+    /// Operators with `size() ≤ n_threshold` are served by the dense tier;
+    /// larger ones stay on per-operator Krylov shards. The default tracks
+    /// the measured crossover of `perf_hotpath` §8 (`BENCH_batched_dense`).
+    pub n_threshold: usize,
+    /// Forward-iteration cap (see [`DenseSqrtOptions::max_iters`]).
+    pub max_iters: usize,
+    /// Forward residual tolerance (see [`DenseSqrtOptions::tol`]). The
+    /// default sits near f64 roundoff so dense-tier answers match the
+    /// Krylov path to ≤ 1e-6 even at high quadrature accuracy.
+    pub tol: f64,
+}
+
+impl Default for BatchedDenseConfig {
+    fn default() -> BatchedDenseConfig {
+        BatchedDenseConfig { n_threshold: 256, max_iters: 40, tol: 1e-13 }
+    }
+}
+
+impl BatchedDenseConfig {
+    /// The forward-iteration options this tier runs under.
+    pub fn sqrt_opts(&self) -> DenseSqrtOptions {
+        DenseSqrtOptions { max_iters: self.max_iters, tol: self.tol }
+    }
+}
+
+/// Output of one batched forward solve: `batch` pairs of `n×n` factors
+/// plus per-element convergence diagnostics. Allocated once by the caller
+/// ([`DenseFactorStack::new`]) and refilled in place on every
+/// [`newton_schulz_stack_in`] call — the solve itself never allocates.
+#[derive(Clone, Debug)]
+pub struct DenseFactorStack {
+    n: usize,
+    batch: usize,
+    /// `batch` row-major `n×n` matrices `≈ A_i^{1/2}` (stride `n·n`).
+    pub sqrt: Vec<f64>,
+    /// `batch` row-major `n×n` matrices `≈ A_i^{-1/2}`.
+    pub invsqrt: Vec<f64>,
+    /// Whether element `i` hit `tol` within `max_iters`. A `false` entry's
+    /// factors are best-effort and must not be served — fall back to
+    /// msMINRES.
+    pub converged: Vec<bool>,
+    /// Newton–Schulz updates element `i` performed before exit.
+    pub iters: Vec<usize>,
+    /// Final scaled residual `‖Z Y − I‖_F / √n` per element.
+    pub residuals: Vec<f64>,
+}
+
+impl DenseFactorStack {
+    /// A zeroed stack for `batch` elements of size `n` (the one allocation
+    /// of the dense tier's lifecycle).
+    pub fn new(n: usize, batch: usize) -> DenseFactorStack {
+        DenseFactorStack {
+            n,
+            batch,
+            sqrt: vec![0.0; batch * n * n],
+            invsqrt: vec![0.0; batch * n * n],
+            converged: vec![false; batch],
+            iters: vec![0; batch],
+            residuals: vec![f64::INFINITY; batch],
+        }
+    }
+
+    /// Element size `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of batch elements.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Row-major `n×n` slice `≈ A_i^{1/2}`.
+    pub fn sqrt_mat(&self, i: usize) -> &[f64] {
+        let nn = self.n * self.n;
+        &self.sqrt[i * nn..(i + 1) * nn]
+    }
+
+    /// Row-major `n×n` slice `≈ A_i^{-1/2}`.
+    pub fn invsqrt_mat(&self, i: usize) -> &[f64] {
+        let nn = self.n * self.n;
+        &self.invsqrt[i * nn..(i + 1) * nn]
+    }
+
+    /// Whether every element converged.
+    pub fn all_converged(&self) -> bool {
+        self.converged.iter().all(|&c| c)
+    }
+
+    /// Clone element `i` out into a standalone per-operator cache unit.
+    pub fn extract_pair(&self, i: usize) -> DenseFactorPair {
+        DenseFactorPair {
+            n: self.n,
+            sqrt: self.sqrt_mat(i).to_vec(),
+            invsqrt: self.invsqrt_mat(i).to_vec(),
+            converged: self.converged[i],
+            iters: self.iters[i],
+            residual: self.residuals[i],
+        }
+    }
+}
+
+/// One operator's cached dense factors — what the coordinator stores per
+/// operator version and applies with [`crate::linalg::batched::gemv_gather`]
+/// on every size-class flush.
+#[derive(Clone, Debug)]
+pub struct DenseFactorPair {
+    /// Factor dimension.
+    pub n: usize,
+    /// Row-major `n×n` `≈ K^{1/2}`.
+    pub sqrt: Vec<f64>,
+    /// Row-major `n×n` `≈ K^{-1/2}`.
+    pub invsqrt: Vec<f64>,
+    /// `false` marks the operator dense-incapable (serve via msMINRES).
+    pub converged: bool,
+    /// Forward iterations performed (feeds the backward pass).
+    pub iters: usize,
+    /// Final scaled residual.
+    pub residual: f64,
+}
+
+/// Trace-normalized coupled Newton–Schulz over a stack of `batch`
+/// row-major `n×n` SPD matrices (`a_stack`, stride `n·n`), writing
+/// `A_i^{1/2}` / `A_i^{-1/2}` and per-element diagnostics into `out`.
+///
+/// Each iteration runs three batched GEMM passes (`T = Z·Y`, `Y·T`,
+/// `T·Z`) parallelized across the batch dimension on the chunk pool, with
+/// converged elements skipped in place; the residual check rides on the
+/// `Z·Y` product the iteration needs anyway. All scratch comes from `ws`,
+/// so a warmed workspace runs the whole solve without heap allocation.
+///
+/// Elements whose trace is non-positive or non-finite (not SPD) are marked
+/// `converged = false` immediately; elements that exhaust `max_iters`
+/// keep their best-effort factors but also report `converged = false`.
+pub fn newton_schulz_stack_in(
+    ws: &mut SolveWorkspace,
+    n: usize,
+    batch: usize,
+    a_stack: &[f64],
+    opts: &DenseSqrtOptions,
+    out: &mut DenseFactorStack,
+) {
+    assert_eq!(a_stack.len(), batch * n * n, "newton_schulz_stack_in: A stack size");
+    assert_eq!(out.n, n, "newton_schulz_stack_in: output stack dimension");
+    assert_eq!(out.batch, batch, "newton_schulz_stack_in: output stack batch");
+    if batch == 0 || n == 0 {
+        return;
+    }
+    let nn = n * n;
+    let sqrt_n = (n as f64).sqrt();
+    let mut y = ws.take_vec(batch * nn);
+    let mut z = ws.take_vec(batch * nn);
+    let mut t = ws.take_vec(batch * nn);
+    let mut y2 = ws.take_vec(batch * nn);
+    let mut z2 = ws.take_vec(batch * nn);
+    let mut norms = ws.take_vec(batch);
+    // 0 = active, 1 = finalized (take_usize hands the buffer back zeroed).
+    let mut state = ws.take_usize(batch);
+
+    for i in 0..batch {
+        let a = &a_stack[i * nn..(i + 1) * nn];
+        let trace: f64 = (0..n).map(|r| a[r * n + r]).sum();
+        out.iters[i] = 0;
+        out.residuals[i] = f64::INFINITY;
+        out.converged[i] = false;
+        if !trace.is_finite() || trace <= 0.0 {
+            // Not plausibly SPD: mark dense-incapable without iterating.
+            out.sqrt[i * nn..(i + 1) * nn].fill(0.0);
+            out.invsqrt[i * nn..(i + 1) * nn].fill(0.0);
+            state[i] = 1;
+            continue;
+        }
+        norms[i] = trace;
+        let yi = &mut y[i * nn..(i + 1) * nn];
+        for (dst, src) in yi.iter_mut().zip(a.iter()) {
+            *dst = src / trace;
+        }
+        let zi = &mut z[i * nn..(i + 1) * nn];
+        zi.fill(0.0);
+        for r in 0..n {
+            zi[r * n + r] = 1.0;
+        }
+    }
+
+    let mut remaining = state.iter().filter(|&&s| s == 0).count();
+    for iter in 0..opts.max_iters {
+        if remaining == 0 {
+            break;
+        }
+        // T ← Z·Y for every active element (one block per element; done
+        // elements cost a flag check).
+        parallel_fill(&mut t, nn, |start, block| {
+            let i = start / nn;
+            if state[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            gemm_nn(n, n, n, &z[i * nn..(i + 1) * nn], &y[i * nn..(i + 1) * nn], block);
+        });
+        // Residual check + in-place transform T ← ³⁄₂I − ½T (serial: O(batch·n²)
+        // against the O(batch·n³) GEMM phases).
+        for i in 0..batch {
+            if state[i] != 0 {
+                continue;
+            }
+            let ti = &mut t[i * nn..(i + 1) * nn];
+            let mut frob2 = 0.0;
+            for r in 0..n {
+                for c in 0..n {
+                    let d = ti[r * n + c] - if r == c { 1.0 } else { 0.0 };
+                    frob2 += d * d;
+                }
+            }
+            let r = frob2.sqrt() / sqrt_n;
+            out.residuals[i] = r;
+            out.iters[i] = iter;
+            if r <= opts.tol && r.is_finite() {
+                let scale = norms[i].sqrt();
+                let yi = &y[i * nn..(i + 1) * nn];
+                let zi = &z[i * nn..(i + 1) * nn];
+                for (dst, src) in out.sqrt[i * nn..(i + 1) * nn].iter_mut().zip(yi.iter()) {
+                    *dst = src * scale;
+                }
+                for (dst, src) in out.invsqrt[i * nn..(i + 1) * nn].iter_mut().zip(zi.iter()) {
+                    *dst = src / scale;
+                }
+                out.converged[i] = true;
+                state[i] = 1;
+                remaining -= 1;
+                continue;
+            }
+            for v in ti.iter_mut() {
+                *v = -0.5 * *v;
+            }
+            for r in 0..n {
+                ti[r * n + r] += 1.5;
+            }
+        }
+        if remaining == 0 {
+            break;
+        }
+        // Y' ← Y·T and Z' ← T·Z for the stragglers.
+        parallel_fill(&mut y2, nn, |start, block| {
+            let i = start / nn;
+            if state[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            gemm_nn(n, n, n, &y[i * nn..(i + 1) * nn], &t[i * nn..(i + 1) * nn], block);
+        });
+        parallel_fill(&mut z2, nn, |start, block| {
+            let i = start / nn;
+            if state[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            gemm_nn(n, n, n, &t[i * nn..(i + 1) * nn], &z[i * nn..(i + 1) * nn], block);
+        });
+        // Finalized elements' stale blocks swap along harmlessly — their
+        // factors already live in `out` and every phase skips them.
+        std::mem::swap(&mut y, &mut y2);
+        std::mem::swap(&mut z, &mut z2);
+    }
+
+    // Stragglers at the cap: best-effort factors, converged = false.
+    for i in 0..batch {
+        if state[i] != 0 {
+            continue;
+        }
+        let scale = norms[i].sqrt();
+        out.iters[i] = opts.max_iters;
+        for (dst, src) in
+            out.sqrt[i * nn..(i + 1) * nn].iter_mut().zip(y[i * nn..(i + 1) * nn].iter())
+        {
+            *dst = src * scale;
+        }
+        for (dst, src) in
+            out.invsqrt[i * nn..(i + 1) * nn].iter_mut().zip(z[i * nn..(i + 1) * nn].iter())
+        {
+            *dst = src / scale;
+        }
+    }
+
+    ws.give_usize(state);
+    ws.give_vec(norms);
+    ws.give_vec(z2);
+    ws.give_vec(y2);
+    ws.give_vec(t);
+    ws.give_vec(z);
+    ws.give_vec(y);
+}
+
+/// Lyapunov-equation backward pass for the batched square root, after the
+/// exemplars' `lyap_newton_schulz`: given the forward outputs
+/// `Y_i ≈ A_i^{1/2}` (`sqrt_stack`) and upstream gradients
+/// `dL/dY_i` (`grad_stack`), computes `dL/dA_i` into `out` by the coupled
+/// iteration
+///
+/// ```text
+/// a_0 = Y/‖Y‖_F,  q_0 = dL/dY / ‖Y‖_F
+/// q_{k+1} = ½ [ q (3I − a²) − aᵀ (aᵀ q − q a) ]
+/// a_{k+1} = ½ a (3I − a²)
+/// dL/dA  = ½ q_final
+/// ```
+///
+/// which drives `a → I` while `q` contracts to the solution of the
+/// Lyapunov sensitivity equation `Y·dA + dA·Y = dY`. Iterations are
+/// per-element `iters[i]` with a floor of 10: the backward fixed point
+/// needs its own convergence budget even when the forward exited early.
+///
+/// Runs serially over the batch (this is the training path, not the
+/// serving hot path); the six `n×n` scratch buffers come from `ws` and are
+/// reused across elements.
+pub fn newton_schulz_backward_stack_in(
+    ws: &mut SolveWorkspace,
+    n: usize,
+    batch: usize,
+    sqrt_stack: &[f64],
+    grad_stack: &[f64],
+    iters: &[usize],
+    out: &mut [f64],
+) {
+    assert_eq!(sqrt_stack.len(), batch * n * n, "ns_backward: sqrt stack size");
+    assert_eq!(grad_stack.len(), batch * n * n, "ns_backward: grad stack size");
+    assert_eq!(iters.len(), batch, "ns_backward: iters length");
+    assert_eq!(out.len(), batch * n * n, "ns_backward: output stack size");
+    if batch == 0 || n == 0 {
+        return;
+    }
+    let nn = n * n;
+    let mut a = ws.take_vec(nn);
+    let mut q = ws.take_vec(nn);
+    let mut t3 = ws.take_vec(nn);
+    let mut buf1 = ws.take_vec(nn);
+    let mut buf2 = ws.take_vec(nn);
+    let mut buf3 = ws.take_vec(nn);
+
+    for i in 0..batch {
+        let yi = &sqrt_stack[i * nn..(i + 1) * nn];
+        let gi = &grad_stack[i * nn..(i + 1) * nn];
+        let oi = &mut out[i * nn..(i + 1) * nn];
+        let normz = yi.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if !normz.is_finite() || normz <= 0.0 {
+            oi.fill(0.0);
+            continue;
+        }
+        for (dst, src) in a.iter_mut().zip(yi.iter()) {
+            *dst = src / normz;
+        }
+        for (dst, src) in q.iter_mut().zip(gi.iter()) {
+            *dst = src / normz;
+        }
+        for _ in 0..iters[i].max(10) {
+            // t3 ← 3I − a·a
+            t3.fill(0.0);
+            gemm_nn(n, n, n, &a, &a, &mut t3);
+            for v in t3.iter_mut() {
+                *v = -*v;
+            }
+            for r in 0..n {
+                t3[r * n + r] += 3.0;
+            }
+            // buf1 ← q·t3
+            buf1.fill(0.0);
+            gemm_nn(n, n, n, &q, &t3, &mut buf1);
+            // buf2 ← aᵀ·q − q·a
+            buf2.fill(0.0);
+            gemm_tn(n, n, n, &a, &q, &mut buf2);
+            buf3.fill(0.0);
+            gemm_nn(n, n, n, &q, &a, &mut buf3);
+            for (d, s) in buf2.iter_mut().zip(buf3.iter()) {
+                *d -= s;
+            }
+            // buf3 ← aᵀ·buf2
+            buf3.fill(0.0);
+            gemm_tn(n, n, n, &a, &buf2, &mut buf3);
+            // q ← ½ (buf1 − buf3)
+            for ((qv, t1), t2) in q.iter_mut().zip(buf1.iter()).zip(buf3.iter()) {
+                *qv = 0.5 * (t1 - t2);
+            }
+            // a ← ½ a·t3
+            buf1.fill(0.0);
+            gemm_nn(n, n, n, &a, &t3, &mut buf1);
+            for (av, s) in a.iter_mut().zip(buf1.iter()) {
+                *av = 0.5 * s;
+            }
+        }
+        for (dst, src) in oi.iter_mut().zip(q.iter()) {
+            *dst = 0.5 * src;
+        }
+    }
+
+    ws.give_vec(buf3);
+    ws.give_vec(buf2);
+    ws.give_vec(buf1);
+    ws.give_vec(t3);
+    ws.give_vec(q);
+    ws.give_vec(a);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigen, Matrix};
+    use crate::operators::{KernelOp, KernelType, LinearOp};
+    use crate::rng::Pcg64;
+    use crate::util::rel_err;
+
+    /// `R Rᵀ + shift·I` — condition number steered by `shift`.
+    fn random_spd(n: usize, shift: f64, rng: &mut Pcg64) -> Vec<f64> {
+        let r: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += r[i * n + k] * r[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { shift * n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    /// Rank-deficient `B Bᵀ` with `B` of width `n−1`: has an exact zero
+    /// eigenvalue Newton–Schulz can never lift.
+    fn rank_deficient(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        let k = n - 1;
+        let b: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += b[i * k + l] * b[j * k + l];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        a
+    }
+
+    fn oracle_pair(n: usize, a: &[f64]) -> (Matrix, Matrix) {
+        let m = Matrix::from_vec(n, n, a.to_vec());
+        (eigen::spd_sqrt(&m).unwrap(), eigen::spd_inv_sqrt(&m).unwrap())
+    }
+
+    fn check_stack_against_oracle(n: usize, batch: usize, a_stack: &[f64], tol: f64) {
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, batch);
+        newton_schulz_stack_in(
+            &mut ws,
+            n,
+            batch,
+            a_stack,
+            &DenseSqrtOptions::default(),
+            &mut out,
+        );
+        assert!(out.all_converged(), "stack n={n} batch={batch} failed to converge");
+        for i in 0..batch {
+            let (sq, isq) = oracle_pair(n, &a_stack[i * n * n..(i + 1) * n * n]);
+            let e1 = rel_err(out.sqrt_mat(i), sq.as_slice());
+            let e2 = rel_err(out.invsqrt_mat(i), isq.as_slice());
+            assert!(e1 < tol, "sqrt element {i} (n={n}): rel err {e1:.3e}");
+            assert!(e2 < tol, "invsqrt element {i} (n={n}): rel err {e2:.3e}");
+        }
+    }
+
+    #[test]
+    fn ns_matches_spectral_oracle_across_sizes_and_conditioning() {
+        let mut rng = Pcg64::seeded(1234);
+        // (n, shift): shift steers conditioning from benign to harsh.
+        for &(n, shift) in &[(4usize, 2.0), (8, 0.5), (16, 0.1), (24, 1.0), (33, 0.02)] {
+            let batch = 3;
+            let mut stack = Vec::new();
+            for _ in 0..batch {
+                stack.extend(random_spd(n, shift, &mut rng));
+            }
+            check_stack_against_oracle(n, batch, &stack, 1e-8);
+        }
+    }
+
+    #[test]
+    fn ns_matches_oracle_on_kernel_matrices() {
+        let mut rng = Pcg64::seeded(99);
+        for &kind in &[KernelType::Rbf, KernelType::Matern32, KernelType::Matern52] {
+            let n = 20;
+            let x = Matrix::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
+            let op = KernelOp::new(&x, kind, 0.9, 1.3, 1e-2);
+            let dense = op.to_dense();
+            check_stack_against_oracle(n, 1, dense.as_slice(), 1e-7);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_element_fails_while_neighbors_converge() {
+        let mut rng = Pcg64::seeded(7);
+        let n = 12;
+        let mut stack = random_spd(n, 1.0, &mut rng);
+        stack.extend(rank_deficient(n, &mut rng));
+        stack.extend(random_spd(n, 0.5, &mut rng));
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, 3);
+        newton_schulz_stack_in(&mut ws, n, 3, &stack, &DenseSqrtOptions::default(), &mut out);
+        assert!(out.converged[0], "well-conditioned element 0 must converge");
+        assert!(
+            !out.converged[1],
+            "rank-deficient element must be flagged for Krylov fallback (residual {:.3e})",
+            out.residuals[1]
+        );
+        assert!(out.converged[2], "well-conditioned element 2 must converge");
+        // The flagged element still reports sane diagnostics.
+        assert_eq!(out.iters[1], DenseSqrtOptions::default().max_iters);
+        assert!(out.residuals[1] > 1e-8);
+        // And the pair extraction carries the flag the coordinator keys on.
+        assert!(!out.extract_pair(1).converged);
+        assert!(out.extract_pair(0).converged);
+    }
+
+    #[test]
+    fn non_spd_trace_is_flagged_without_iterating() {
+        let n = 5;
+        let mut stack = vec![0.0; n * n];
+        for r in 0..n {
+            stack[r * n + r] = -1.0;
+        }
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, 1);
+        newton_schulz_stack_in(&mut ws, n, 1, &stack, &DenseSqrtOptions::default(), &mut out);
+        assert!(!out.converged[0]);
+        assert_eq!(out.iters[0], 0);
+    }
+
+    #[test]
+    fn factors_multiply_back_to_identity_and_operator() {
+        let mut rng = Pcg64::seeded(42);
+        let n = 18;
+        let a = random_spd(n, 0.7, &mut rng);
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, 1);
+        newton_schulz_stack_in(&mut ws, n, 1, &a, &DenseSqrtOptions::default(), &mut out);
+        assert!(out.all_converged());
+        let sq = Matrix::from_vec(n, n, out.sqrt_mat(0).to_vec());
+        let isq = Matrix::from_vec(n, n, out.invsqrt_mat(0).to_vec());
+        let prod = sq.matmul(&isq);
+        let sq2 = sq.matmul(&sq);
+        for r in 0..n {
+            for c in 0..n {
+                let id = if r == c { 1.0 } else { 0.0 };
+                assert!((prod[(r, c)] - id).abs() < 1e-10, "K^1/2 · K^-1/2 ≠ I at ({r},{c})");
+            }
+        }
+        assert!(rel_err(sq2.as_slice(), &a) < 1e-10, "(K^1/2)² ≠ K");
+    }
+
+    /// Finite-difference validation of the Lyapunov backward pass: for
+    /// `L = Σ G ⊙ sqrt(A)`, compare `dL/dA` against
+    /// `(L(A + εE) − L(A − εE)) / 2ε` along a random symmetric direction.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 6;
+        let a = random_spd(n, 1.5, &mut rng);
+        let g: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        // Random symmetric perturbation direction.
+        let mut e = vec![0.0; n * n];
+        for r in 0..n {
+            for c in r..n {
+                let v = rng.normal();
+                e[r * n + c] = v;
+                e[c * n + r] = v;
+            }
+        }
+        let sqrt_of = |m: &[f64]| -> Vec<f64> {
+            let mut ws = SolveWorkspace::new();
+            let mut out = DenseFactorStack::new(n, 1);
+            newton_schulz_stack_in(&mut ws, n, 1, m, &DenseSqrtOptions::default(), &mut out);
+            assert!(out.all_converged());
+            out.sqrt_mat(0).to_vec()
+        };
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, 1);
+        newton_schulz_stack_in(&mut ws, n, 1, &a, &DenseSqrtOptions::default(), &mut out);
+        assert!(out.all_converged());
+        let mut grad = vec![0.0; n * n];
+        newton_schulz_backward_stack_in(
+            &mut ws,
+            n,
+            1,
+            &out.sqrt,
+            &g,
+            &out.iters,
+            &mut grad,
+        );
+        // Directional derivative from the backward pass vs central FD.
+        let analytic: f64 = grad.iter().zip(e.iter()).map(|(x, y)| x * y).sum();
+        let eps = 1e-5;
+        let ap: Vec<f64> = a.iter().zip(e.iter()).map(|(x, y)| x + eps * y).collect();
+        let am: Vec<f64> = a.iter().zip(e.iter()).map(|(x, y)| x - eps * y).collect();
+        let lp: f64 = sqrt_of(&ap).iter().zip(g.iter()).map(|(x, y)| x * y).sum();
+        let lm: f64 = sqrt_of(&am).iter().zip(g.iter()).map(|(x, y)| x * y).sum();
+        let fd = (lp - lm) / (2.0 * eps);
+        let denom = fd.abs().max(analytic.abs()).max(1e-12);
+        assert!(
+            (analytic - fd).abs() / denom < 1e-4,
+            "Lyapunov backward vs finite differences: analytic {analytic:.8e}, fd {fd:.8e}"
+        );
+    }
+
+    #[test]
+    fn warmed_workspace_stops_growing() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 10;
+        let batch = 4;
+        let mut stack = Vec::new();
+        for _ in 0..batch {
+            stack.extend(random_spd(n, 1.0, &mut rng));
+        }
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, batch);
+        newton_schulz_stack_in(&mut ws, n, batch, &stack, &DenseSqrtOptions::default(), &mut out);
+        let grows = ws.grows();
+        for _ in 0..3 {
+            newton_schulz_stack_in(
+                &mut ws,
+                n,
+                batch,
+                &stack,
+                &DenseSqrtOptions::default(),
+                &mut out,
+            );
+        }
+        assert_eq!(ws.grows(), grows, "warmed Newton–Schulz solve must not grow the workspace");
+        assert!(out.all_converged());
+    }
+}

@@ -51,8 +51,10 @@
 //! §4). The owned entry points are wrappers over the same engines with a
 //! transient workspace — results are bit-for-bit identical.
 
+pub mod dense_sqrt;
 pub mod precond;
 
+pub use self::dense_sqrt::BatchedDenseConfig;
 use self::precond::WhitenedOp;
 use crate::krylov::msminres::{
     msminres, msminres_block, msminres_block_in, msminres_in, MsMinresOptions,
@@ -173,6 +175,14 @@ pub enum SolverPolicy {
     /// accelerates all `Q` shifted solves at once, at the price of returning
     /// the rotation-equivalent maps of Eqs. S12/S13 instead of `K^{±1/2}`.
     Preconditioned(PrecondConfig),
+    /// Serve small operators (`size() ≤ n_threshold`) from cached dense
+    /// `K^{±1/2}` factors computed by batched Newton–Schulz iteration
+    /// ([`dense_sqrt`]): the coordinator shards such requests by size
+    /// class and turns each flush into one batched GEMV. Operators above
+    /// the threshold — and any operator whose iteration fails to converge
+    /// — fall back to the cached-bounds msMINRES path, whose context is
+    /// built alongside as the guarantee.
+    BatchedDense(BatchedDenseConfig),
 }
 
 /// Everything a solve needs besides the operator and the right-hand sides:
@@ -400,7 +410,12 @@ impl Ciq {
         hint: Option<&[usize]>,
     ) -> Result<(SolverContext, usize)> {
         match policy {
-            SolverPolicy::Plain | SolverPolicy::CachedBounds => {
+            // BatchedDense builds the same Krylov context as CachedBounds:
+            // it is both the fallback for non-convergent/oversized
+            // operators and the reference the dense tier must match.
+            SolverPolicy::Plain
+            | SolverPolicy::CachedBounds
+            | SolverPolicy::BatchedDense(_) => {
                 let cache = self.solver_cache(op)?;
                 let ms = self.ms_opts(&cache.rule);
                 Ok((SolverContext { cache, precond: None, ms }, 0))

@@ -69,6 +69,19 @@ pub struct Metrics {
     /// only exists while some shard holds a pending request, so an idle
     /// service adds zero.
     pub timer_fires: AtomicU64,
+    /// Requests served from cached dense `K^{±1/2}` factors (the
+    /// batched-dense tier's GEMV path).
+    pub dense_solves: AtomicU64,
+    /// Requests the dense tier handed back to the msMINRES path because
+    /// their operator's Newton–Schulz iteration did not converge (or the
+    /// operator's size changed underfoot).
+    pub dense_fallbacks: AtomicU64,
+    /// Operator versions whose dense factors were built (each is one
+    /// element of a batched Newton–Schulz solve).
+    pub dense_factor_builds: AtomicU64,
+    /// The dense tier's size-class threshold (crossover `N`), recorded at
+    /// startup; 0 when the tier is off.
+    pub dense_crossover_n: AtomicU64,
     /// The service's solver policy, for observability (`Debug` rendering of
     /// [`crate::ciq::SolverPolicy`]); set once at startup.
     policy: Mutex<String>,
@@ -83,6 +96,10 @@ pub struct Metrics {
     /// Per-shard adaptive flush wait in µs (wait-controller state), keyed by
     /// `"op/Kind"`. Absent ⇒ the shard still runs at the static `max_wait`.
     shard_waits: Mutex<HashMap<String, u64>>,
+    /// Requests served per size-class shard under the batched-dense tier,
+    /// keyed by `"sz{n}/Kind"`. Pruned (with the rest of the per-shard
+    /// maps) when a size class loses its last operator.
+    dense_shards: Mutex<HashMap<String, u64>>,
     /// Executor-layer telemetry (parks / wakeups / task polls / wheel
     /// fires) when the async backend runs; `None` on the threaded backend.
     /// The idle-service test asserts on these *below* the coordinator's own
@@ -236,14 +253,50 @@ impl Metrics {
     }
 
     /// Drop all per-shard state (queue-depth entries, adaptive batch
-    /// ceilings, and adaptive flush waits) belonging to operator `op_name` —
-    /// shard labels are `"op/Kind"`. Called on operator deregistration so
-    /// client-visible maps cannot grow without bound across operator churn.
+    /// ceilings, adaptive flush waits, and dense-tier counts) belonging to
+    /// operator `op_name` — shard labels are `"op/Kind"`. Called on operator
+    /// deregistration so client-visible maps cannot grow without bound
+    /// across operator churn.
     pub fn prune_shard(&self, op_name: &str) {
-        let prefix = format!("{op_name}/");
-        self.shard_depths.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
-        self.batch_ceilings.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
-        self.shard_waits.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
+        self.prune_prefix(&format!("{op_name}/"));
+    }
+
+    /// Drop every per-shard entry whose label starts with `prefix`: the
+    /// generalized prune behind operator deregistration (`"op/"`) and dense
+    /// size-class retirement (`"sz{n}/"`, when the last registered operator
+    /// of a size class departs).
+    pub fn prune_prefix(&self, prefix: &str) {
+        self.shard_depths.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+        self.batch_ceilings.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+        self.shard_waits.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+        self.dense_shards.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+    }
+
+    /// Credit `count` dense-tier requests to a size-class shard
+    /// (`"sz{n}/Kind"`).
+    pub fn record_dense_shard(&self, shard: &str, count: u64) {
+        *self.dense_shards.lock().unwrap().entry(shard.to_string()).or_insert(0) += count;
+    }
+
+    /// Requests a size-class shard has served from dense factors (0 if
+    /// never seen).
+    pub fn dense_shard_solves(&self, shard: &str) -> u64 {
+        self.dense_shards.lock().unwrap().get(shard).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all dense size-class shards as `(shard, served)`, sorted.
+    pub fn dense_shards(&self) -> Vec<(String, u64)> {
+        let m = self.dense_shards.lock().unwrap();
+        let mut v: Vec<(String, u64)> = m.iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort();
+        v
+    }
+
+    /// Record the dense tier's size-class threshold (startup, once).
+    pub fn set_dense_crossover(&self, n: u64) {
+        // ordering: Relaxed — telemetry written once at startup before any
+        // traffic; readers only need the eventual value.
+        self.dense_crossover_n.store(n, Ordering::Relaxed);
     }
 
     /// Record a shard's current queue depth (also tracks its max). Fast path
@@ -341,7 +394,8 @@ impl Metrics {
         format!(
             "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
              mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
-             saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={}",
+             saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={} \
+             dense_solves={} dense_fallbacks={} dense_builds={} dense_crossover_n={}",
             self.policy(),
             ld(&self.submitted),
             ld(&self.completed),
@@ -361,6 +415,10 @@ impl Metrics {
             ld(&self.workspace_checkouts),
             ld(&self.workspace_grows),
             ld(&self.workspace_bytes_high_water),
+            ld(&self.dense_solves),
+            ld(&self.dense_fallbacks),
+            ld(&self.dense_factor_builds),
+            ld(&self.dense_crossover_n),
         )
     }
 }
@@ -444,6 +502,34 @@ mod tests {
         m.record_shard_drained("ab/Sample");
         assert_eq!(m.shard_depth("ab/Sample"), 0);
         assert_eq!(m.max_shard_depth("ab/Sample"), 2);
+    }
+
+    #[test]
+    fn dense_tier_counters_accumulate_render_and_prune() {
+        let m = Metrics::default();
+        m.record_dense_shard("sz16/Sample", 8);
+        m.record_dense_shard("sz16/Sample", 4);
+        m.record_dense_shard("sz64/Whiten", 2);
+        assert_eq!(m.dense_shard_solves("sz16/Sample"), 12);
+        assert_eq!(m.dense_shard_solves("sz64/Whiten"), 2);
+        assert_eq!(m.dense_shard_solves("sz256/Sample"), 0);
+        assert_eq!(m.dense_shards().len(), 2);
+        // size-class retirement prunes exactly that class across all maps
+        m.record_shard_depth("sz16/Sample", 3);
+        m.prune_prefix("sz16/");
+        assert_eq!(m.dense_shard_solves("sz16/Sample"), 0);
+        assert_eq!(m.shard_depth("sz16/Sample"), 0);
+        assert_eq!(m.dense_shard_solves("sz64/Whiten"), 2, "unrelated class pruned");
+        // tier counters render in the one-line summary
+        m.dense_solves.fetch_add(14, Ordering::Relaxed);
+        m.dense_fallbacks.fetch_add(3, Ordering::Relaxed);
+        m.dense_factor_builds.fetch_add(5, Ordering::Relaxed);
+        m.set_dense_crossover(256);
+        let s = m.summary();
+        assert!(s.contains("dense_solves=14"));
+        assert!(s.contains("dense_fallbacks=3"));
+        assert!(s.contains("dense_builds=5"));
+        assert!(s.contains("dense_crossover_n=256"));
     }
 
     #[test]

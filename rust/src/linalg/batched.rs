@@ -1,0 +1,169 @@
+//! Strided **batched** GEMM/GEMV entry points for fleets of small
+//! operators.
+//!
+//! The panel micro-kernels in [`crate::linalg::gemm`] were built for one
+//! large operand; the batched-dense Newton–Schulz tier
+//! (`crate::ciq::dense_sqrt`) instead multiplies *stacks* of small
+//! matrices — hundreds of `N ≤ 256` covariance factors per flush. A naive
+//! per-element loop would serialize on one core and re-enter the dispatch
+//! machinery per element, so the entries here flip the parallel axis:
+//! **threads split the batch dimension** (each element's output block is
+//! disjoint, so [`parallel_fill`] hands them out with no locking), while
+//! each element runs the serial register-tiled kernels. B-panel packing
+//! happens inside [`gemm_nn`] through its thread-local scratch, which each
+//! pool worker reuses across every batch element it claims — the pack cost
+//! is paid once per thread, not once per element.
+//!
+//! All entries **accumulate** (`C += A·B`) like the rest of the `gemm`
+//! family and allocate nothing: callers own every buffer (typically checked
+//! out of a [`crate::linalg::SolveWorkspace`]), so the batched tier keeps
+//! the zero-allocation steady-state contract of `rust/DESIGN.md` §4.
+
+use crate::linalg::gemm::gemm_nn;
+use crate::util::threadpool::parallel_fill;
+
+/// Batched `C_i += A_i · B_i` over a stack of `batch` independent products:
+/// `a` holds `batch` row-major `m×k` matrices contiguously (stride `m·k`),
+/// `b` holds `batch` `k×n` matrices (stride `k·n`), `c` holds `batch` `m×n`
+/// accumulators (stride `m·n`). Parallelized across the batch dimension on
+/// the persistent chunk pool; each element runs the serial panel kernels.
+pub fn gemm_nn_batched(
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    assert_eq!(a.len(), batch * m * k, "gemm_nn_batched: A stack size");
+    assert_eq!(b.len(), batch * k * n, "gemm_nn_batched: B stack size");
+    assert_eq!(c.len(), batch * m * n, "gemm_nn_batched: C stack size");
+    if batch == 0 || m == 0 || n == 0 {
+        return;
+    }
+    let (sa, sb, sc) = (m * k, k * n, m * n);
+    parallel_fill(c, sc, |start, block| {
+        let i = start / sc;
+        gemm_nn(m, k, n, &a[i * sa..(i + 1) * sa], &b[i * sb..(i + 1) * sb], block);
+    });
+}
+
+/// Batched `y_i += M_i · x_i` over a stack of `batch` square `n×n` matrices
+/// (stride `n·n`) and `batch` length-`n` vectors (stride `n`): the
+/// steady-state *apply* of the batched-dense tier — one call turns a whole
+/// flush of cached-factor requests into GEMV work split across the pool.
+pub fn gemv_nn_batched(batch: usize, n: usize, mats: &[f64], xs: &[f64], ys: &mut [f64]) {
+    assert_eq!(mats.len(), batch * n * n, "gemv_nn_batched: matrix stack size");
+    assert_eq!(xs.len(), batch * n, "gemv_nn_batched: x stack size");
+    assert_eq!(ys.len(), batch * n, "gemv_nn_batched: y stack size");
+    if batch == 0 || n == 0 {
+        return;
+    }
+    parallel_fill(ys, n, |start, block| {
+        let i = start / n;
+        let m = &mats[i * n * n..(i + 1) * n * n];
+        let x = &xs[i * n..(i + 1) * n];
+        gemv_serial(n, m, x, block);
+    });
+}
+
+/// Gather variant of [`gemv_nn_batched`]: element `i` multiplies by
+/// `mats[i]` (a borrowed `n×n` matrix that need not be contiguous with its
+/// neighbors). The coordinator's size-class flush uses this to apply each
+/// request's *own* cached operator factor in one batched call, even though
+/// the factors live in per-operator caches.
+pub fn gemv_gather(n: usize, mats: &[&[f64]], xs: &[f64], ys: &mut [f64]) {
+    let batch = mats.len();
+    assert_eq!(xs.len(), batch * n, "gemv_gather: x stack size");
+    assert_eq!(ys.len(), batch * n, "gemv_gather: y stack size");
+    if batch == 0 || n == 0 {
+        return;
+    }
+    for m in mats {
+        assert_eq!(m.len(), n * n, "gemv_gather: matrix size");
+    }
+    parallel_fill(ys, n, |start, block| {
+        let i = start / n;
+        gemv_serial(n, mats[i], &xs[i * n..(i + 1) * n], block);
+    });
+}
+
+/// Serial `y += M·x` on one row-major `n×n` element (unrolled dot per row
+/// via the shared kernel helper).
+fn gemv_serial(n: usize, m: &[f64], x: &[f64], y: &mut [f64]) {
+    for (r, yr) in y.iter_mut().enumerate() {
+        *yr += crate::linalg::gemm::dot_unrolled(&m[r * n..(r + 1) * n], x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Pcg64;
+
+    fn stack(rng: &mut Pcg64, batch: usize, rows: usize, cols: usize) -> Vec<f64> {
+        (0..batch * rows * cols).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn batched_gemm_matches_per_element_matmul() {
+        let (batch, m, k, n) = (7, 5, 9, 6);
+        let mut rng = Pcg64::seeded(11);
+        let a = stack(&mut rng, batch, m, k);
+        let b = stack(&mut rng, batch, k, n);
+        let mut c = vec![0.0; batch * m * n];
+        // seed C with junk to prove accumulation semantics
+        for (i, v) in c.iter_mut().enumerate() {
+            *v = (i % 3) as f64;
+        }
+        let seed = c.clone();
+        gemm_nn_batched(batch, m, k, n, &a, &b, &mut c);
+        for i in 0..batch {
+            let am = Matrix::from_vec(m, k, a[i * m * k..(i + 1) * m * k].to_vec());
+            let bm = Matrix::from_vec(k, n, b[i * k * n..(i + 1) * k * n].to_vec());
+            let exact = am.matmul(&bm);
+            for r in 0..m {
+                for cidx in 0..n {
+                    let got = c[i * m * n + r * n + cidx];
+                    let want = seed[i * m * n + r * n + cidx] + exact[(r, cidx)];
+                    assert!(
+                        (got - want).abs() < 1e-12,
+                        "element {i} ({r},{cidx}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gemv_matches_matrix_matvec() {
+        let (batch, n) = (9, 13);
+        let mut rng = Pcg64::seeded(12);
+        let mats = stack(&mut rng, batch, n, n);
+        let xs = stack(&mut rng, batch, n, 1);
+        let mut ys = vec![0.0; batch * n];
+        gemv_nn_batched(batch, n, &mats, &xs, &mut ys);
+        let refs: Vec<&[f64]> = (0..batch).map(|i| &mats[i * n * n..(i + 1) * n * n]).collect();
+        let mut ys2 = vec![0.0; batch * n];
+        gemv_gather(n, &refs, &xs, &mut ys2);
+        for i in 0..batch {
+            let m = Matrix::from_vec(n, n, mats[i * n * n..(i + 1) * n * n].to_vec());
+            let want = m.matvec(&xs[i * n..(i + 1) * n]);
+            for r in 0..n {
+                assert!((ys[i * n + r] - want[r]).abs() < 1e-12, "strided gemv element {i}");
+                assert!((ys2[i * n + r] - want[r]).abs() < 1e-12, "gather gemv element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_degenerate_dims_are_noops() {
+        gemm_nn_batched(0, 4, 4, 4, &[], &[], &mut []);
+        gemv_nn_batched(0, 4, &[], &[], &mut []);
+        gemv_gather(4, &[], &[], &mut []);
+        let mut c = vec![1.0; 0];
+        gemm_nn_batched(3, 0, 5, 0, &[], &vec![0.0; 0], &mut c);
+    }
+}

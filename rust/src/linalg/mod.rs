@@ -3,7 +3,9 @@
 //! Provides everything the reproduction needs without external BLAS/LAPACK:
 //! a row-major [`Matrix`] with blocked & threaded GEMM built on the
 //! register-blocked panel micro-kernels in [`gemm`] (shared with the kernel
-//! operator's panel MVM), Cholesky factorization with triangular solves
+//! operator's panel MVM), strided batched GEMM/GEMV over stacks of small
+//! matrices ([`batched`], the engine under the dense Newton–Schulz tier),
+//! Cholesky factorization with triangular solves
 //! ([`chol`]), a symmetric eigendecomposition (Householder
 //! tridiagonalization + implicit-QL, [`eigen`]) used as the *exact*
 //! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline, and
@@ -11,6 +13,7 @@
 //! steady state (`rust/DESIGN.md` §4).
 
 mod matrix;
+pub mod batched;
 pub mod chol;
 pub mod eigen;
 pub mod gemm;

@@ -54,7 +54,11 @@
 //! pool (FIFO or LIFO queue, condvar-parked workers, drain-on-drop) that
 //! the coordinator uses for batch execution and background warming — the
 //! compute half of the `exec` split, where the async executor owns the
-//! waiting and these worker threads own the CPU-bound jobs.
+//! waiting and these worker threads own the CPU-bound jobs. Its park/drain
+//! handshake also runs on the [`crate::util::sync`] shim and is explored
+//! under the model checker via [`TaskPool::with_spawner`] (mutation M5 in
+//! `rust/tests/model_exec.rs` documents the interleaving that the
+//! drain-before-stop pop order exists to prevent).
 
 use crate::util::sync::{AtomicUsize, Condvar, Mutex, Ordering};
 use std::cell::Cell;
@@ -504,7 +508,10 @@ struct TaskPoolShared {
 ///
 /// Dropping the pool **drains the queue**: workers finish every job
 /// submitted before the drop, then exit. (Shutdown must not abandon
-/// accepted work — an in-flight batch's clients are waiting on it.)
+/// accepted work — an in-flight batch's clients are waiting on it.) Like
+/// the chunk pool, the whole handshake runs on the [`crate::util::sync`]
+/// primitives, and [`TaskPool::with_spawner`] lets the model checker run
+/// the workers as model threads and explore the park/drain interleavings.
 pub struct TaskPool {
     shared: Arc<TaskPoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -513,10 +520,7 @@ pub struct TaskPool {
 impl TaskPool {
     /// A pool of `workers.max(1)` named threads with the given queue order.
     pub fn new(name: &str, workers: usize, order: TaskOrder) -> TaskPool {
-        let shared = Arc::new(TaskPoolShared {
-            state: Mutex::new(TaskPoolState { queue: VecDeque::new(), stop: false }),
-            cv: Condvar::new(),
-        });
+        let shared = Self::fresh_shared();
         let handles = (0..workers.max(1))
             .map(|_| {
                 let shared = shared.clone();
@@ -527,6 +531,41 @@ impl TaskPool {
             })
             .collect();
         TaskPool { shared, handles }
+    }
+
+    /// Injectable-spawner constructor (the [`ChunkPool::spawn_workers_with`]
+    /// pattern): hands `workers.max(1)` worker-loop closures to `spawn`
+    /// instead of spawning OS threads, so the model checker
+    /// (`rust/tests/model_exec.rs`) can drive the pool's park/drain
+    /// handshake on *model* threads — same worker code either way. The
+    /// caller owns the workers' lifecycles: call [`TaskPool::shutdown`] and
+    /// join what it spawned; drop only re-signals stop (no handles to join).
+    pub fn with_spawner(
+        workers: usize,
+        order: TaskOrder,
+        mut spawn: impl FnMut(Box<dyn FnOnce() + Send + 'static>),
+    ) -> TaskPool {
+        let shared = Self::fresh_shared();
+        for _ in 0..workers.max(1) {
+            let shared = shared.clone();
+            spawn(Box::new(move || task_pool_worker(&shared, order)));
+        }
+        TaskPool { shared, handles: Vec::new() }
+    }
+
+    fn fresh_shared() -> Arc<TaskPoolShared> {
+        Arc::new(TaskPoolShared {
+            state: Mutex::new(TaskPoolState { queue: VecDeque::new(), stop: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Ask the workers to exit once the queue is drained (`stop` is honored
+    /// only after a pop comes up empty, so every job accepted before this
+    /// call still runs). Idempotent; [`Drop`] calls it too.
+    pub fn shutdown(&self) {
+        self.shared.state.lock().unwrap().stop = true;
+        self.shared.cv.notify_all();
     }
 
     /// Enqueue a job and wake a worker.
@@ -550,8 +589,7 @@ impl TaskPool {
 
 impl Drop for TaskPool {
     fn drop(&mut self) {
-        self.shared.state.lock().unwrap().stop = true;
-        self.shared.cv.notify_all();
+        self.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

@@ -10,8 +10,10 @@
 //! solve"). The env var is read once per process, so all tests in this
 //! binary run serial — which is exactly what an allocation census wants.
 
+use ciq::ciq::dense_sqrt::{newton_schulz_stack_in, DenseFactorStack, DenseSqrtOptions};
 use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, SolveKind, SolverPolicy};
 use ciq::krylov::msminres::{msminres_block_in, msminres_in, MsMinresOptions};
+use ciq::linalg::batched::gemv_nn_batched;
 use ciq::linalg::{Matrix, SolveWorkspace};
 use ciq::operators::DenseOp;
 use ciq::rng::Pcg64;
@@ -165,4 +167,50 @@ fn warmed_block_engine_is_alloc_free_even_with_compaction() {
         0,
         "compacting block solve touched the heap when warm"
     );
+}
+
+#[test]
+fn warmed_batched_dense_solve_performs_zero_heap_allocations() {
+    // The batched-dense tier's steady state: a coupled Newton–Schulz
+    // factorization over a whole stack of small operators plus the batched
+    // GEMV apply, all scratch drawn from the workspace and the factor stack
+    // reused across solves — zero heap allocations once warm.
+    serial_mode();
+    let n = 24;
+    let batch = 6;
+    let nn = n * n;
+    let mut a_stack = vec![0.0; batch * nn];
+    for i in 0..batch {
+        a_stack[i * nn..(i + 1) * nn].copy_from_slice(random_spd(n, 10 + i as u64).as_slice());
+    }
+    let mut rng = Pcg64::seeded(8);
+    let xs_src: Vec<f64> = (0..batch * n).map(|_| rng.normal()).collect();
+    let opts = DenseSqrtOptions::default();
+    // the factor stack is the once-per-operator-version allocation
+    let mut stack = DenseFactorStack::new(n, batch);
+    let mut ws = SolveWorkspace::new();
+    let mut solve_and_apply = |ws: &mut SolveWorkspace, stack: &mut DenseFactorStack| {
+        newton_schulz_stack_in(ws, n, batch, &a_stack, &opts, stack);
+        assert!(stack.all_converged(), "well-conditioned stack must converge");
+        let mut xs = ws.take_vec(batch * n);
+        let mut ys = ws.take_vec(batch * n);
+        xs.copy_from_slice(&xs_src);
+        gemv_nn_batched(batch, n, &stack.invsqrt, &xs, &mut ys);
+        ws.give_vec(ys);
+        ws.give_vec(xs);
+    };
+    for _ in 0..2 {
+        solve_and_apply(&mut ws, &mut stack);
+    }
+    let grows = ws.grows();
+    let allocs_before = thread_allocs();
+    for _ in 0..3 {
+        solve_and_apply(&mut ws, &mut stack);
+    }
+    assert_eq!(
+        thread_allocs() - allocs_before,
+        0,
+        "warmed batched Newton–Schulz solve + apply touched the heap"
+    );
+    assert_eq!(ws.grows(), grows, "steady-state batched solve grew the workspace");
 }

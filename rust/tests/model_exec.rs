@@ -1,6 +1,7 @@
 //! Model-checked concurrency tests for the executor stack: the channel's
-//! send-vs-close protocol, the executor's ready-queue dedup flag, and the
-//! chunk pool's park/unpark epoch handoff — explored under the deterministic
+//! send-vs-close protocol, the executor's ready-queue dedup flag, the
+//! chunk pool's park/unpark epoch handoff, and the task pool's
+//! drain-on-shutdown handshake — explored under the deterministic
 //! interleaving checker in `ciq::util::model` instead of wall-clock racing.
 //!
 //! Compiled only under `RUSTFLAGS="--cfg ciq_model"` (the `[[test]]` target
@@ -30,7 +31,7 @@ use ciq::exec::channel::channel;
 use ciq::exec::Executor;
 use ciq::util::model;
 use ciq::util::sync::{AtomicUsize, Condvar, Mutex, Ordering};
-use ciq::util::threadpool::ChunkPool;
+use ciq::util::threadpool::{ChunkPool, TaskOrder, TaskPool};
 use std::cell::Cell;
 use std::future::Future;
 use std::pin::Pin;
@@ -167,6 +168,37 @@ fn chunk_pool_epoch_handoff_completes_work() {
     });
 }
 
+/// Family 4 — **task-pool drain on shutdown**: [`TaskPool`] workers honor
+/// `stop` only after a pop comes up empty, so every job accepted before
+/// `shutdown` still runs — even when the stop notify reaches a worker that
+/// parked before the jobs were submitted. Mutation M5 (check `stop` before
+/// popping) lets that worker exit with the queue non-empty; the checker
+/// finds the interleaving where the drain counter comes up short.
+#[test]
+fn task_pool_drains_every_accepted_job_on_shutdown() {
+    model::check(move || {
+        let mut workers = Vec::new();
+        let pool =
+            TaskPool::with_spawner(1, TaskOrder::Fifo, |w| workers.push(model::spawn(w)));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let d = done.clone();
+            pool.submit(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        for w in workers {
+            w.join();
+        }
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            2,
+            "shutdown abandoned jobs accepted before it"
+        );
+    });
+}
+
 // ============================================================================
 // MUTATIONS — deliberately-weakened variants the checker must catch.
 //
@@ -234,4 +266,22 @@ fn chunk_pool_epoch_handoff_completes_work() {
 // -           }
 // +           // MUTATION M4: a later cancel/fire overwrites the outcome
 //             st.done = Some(fired);
+//
+// ----------------------------------------------------------------------------
+// M5 — task-pool worker honors `stop` before draining the queue (caught by
+//      `task_pool_drains_every_accepted_job_on_shutdown` as an ASSERTION
+//      failure: done == 0 after join — the worker parked before the jobs
+//      arrived, woke on the shutdown notify, and exited with both jobs
+//      still queued)
+//
+// --- rust/src/util/threadpool.rs  (task_pool_worker)
+//             let mut st = shared.state.lock().unwrap();
+//             loop {
+// +               if st.stop {
+// +                   break None; // MUTATION M5: exit before draining
+// +               }
+//                 let popped = match order {
+//                     TaskOrder::Fifo => st.queue.pop_front(),
+//                     TaskOrder::Lifo => st.queue.pop_back(),
+//                 };
 // ============================================================================
