@@ -12,15 +12,18 @@
 //! dense Newton–Schulz tier vs per-operator Krylov across
 //! N ∈ {16, 64, 256, 1024} × batch ∈ {1, 8, 64, 512} — the crossover that
 //! sets `BatchedDenseConfig::n_threshold` (emits
-//! `BENCH_batched_dense.json`).
+//! `BENCH_batched_dense.json`), (9) the runtime-dispatched SIMD
+//! micro-kernels vs the forced-scalar fallback — GEMM, kernel MVM, and the
+//! lane-parallel ρ panel vs per-element glibc `exp` across
+//! N ∈ {1024, 4096, 16384} (emits `BENCH_simd.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
 //! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, section 6
-//! to 1/8 shards, section 7 to N=256, and section 8 to
-//! N ∈ {16, 64} × batch ∈ {1, 8} (the CI smoke configuration); the
-//! full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
-//! types × {matvec, matmat r=8}.
+//! to 1/8 shards, section 7 to N=256, section 8 to
+//! N ∈ {16, 64} × batch ∈ {1, 8}, and section 9 to N=1024 (the CI smoke
+//! configuration); the full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} ×
+//! all four kernel types × {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -227,7 +230,9 @@ fn main() {
 
     bench_batched_dense(args.has("fast"), &mut rng, &mut checks);
 
-    // evaluate every recorded verdict only now — all five JSON artifacts
+    bench_simd(args.has("fast"), &mut rng, &mut checks);
+
+    // evaluate every recorded verdict only now — all six JSON artifacts
     // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
@@ -570,4 +575,170 @@ fn bench_batched_dense(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
         "dense tier beats per-operator Krylov at the smallest N".into(),
         crossover_n >= 16,
     ));
+}
+
+/// §9: the runtime-dispatched SIMD micro-kernel engine vs the forced-scalar
+/// fallback, measured through the *public* entry points so the dispatch
+/// overhead (one fn-pointer load per call) is part of the number. Three ops
+/// per size: `gemm_nn` on the coordinator's panel shape (`m=N, k=256, n=8`),
+/// the kernel operator's full matvec (distance panel + ρ + contraction), and
+/// the ρ panel evaluator alone — lane-parallel polynomial `exp` vs the
+/// per-element glibc path (`rho_row_scalar`), reported per element. Writes
+/// `BENCH_simd.json` into the CWD (uploaded by the CI bench-smoke job next
+/// to the other JSONs). The forced-scalar side doubles as the bit-exactness
+/// regression surface: `CIQ_SIMD=scalar` runs the verbatim pre-dispatch
+/// kernels.
+fn bench_simd(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
+    use ciq::linalg::gemm;
+    use ciq::linalg::simd::{self, Backend, RhoFamily};
+
+    let best = simd::best_available();
+    let ns: &[usize] = if fast { &[1024] } else { &[1024, 4096, 16384] };
+    let reps = if fast { 3 } else { 5 };
+    println!(
+        "# perf 9: SIMD dispatch (scalar vs {}, detected backends: {})",
+        best.name(),
+        Backend::all()
+            .iter()
+            .filter(|b| b.available())
+            .map(|b| b.name())
+            .collect::<Vec<_>>()
+            .join("/")
+    );
+    println!("n\top\tscalar_ms\tsimd_ms\tspeedup");
+    let mut entries: Vec<String> = Vec::new();
+    let mut max_rel = 0.0f64;
+    let mut gemm_speedup_4096 = f64::NAN;
+    let mut rho_speedup_4096 = f64::NAN;
+    let mut worst_speedup = f64::INFINITY;
+    for &n in ns {
+        // — gemm_nn on the panel shape the solve stack actually runs —
+        let (kdim, r) = (256usize, 8usize);
+        let a: Vec<f64> = (0..n * kdim).map(|_| rng.normal()).collect();
+        let bm: Vec<f64> = (0..kdim * r).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0; n * r];
+        simd::set_backend(Backend::Scalar).expect("scalar always available");
+        let t_scalar = common::bench_median(reps, || {
+            c.fill(0.0);
+            gemm::gemm_nn(n, kdim, r, &a, &bm, &mut c);
+        });
+        let c_ref = c.clone();
+        simd::set_backend(best).expect("best_available must be available");
+        let t_simd = common::bench_median(reps, || {
+            c.fill(0.0);
+            gemm::gemm_nn(n, kdim, r, &a, &bm, &mut c);
+        });
+        for (got, want) in c.iter().zip(&c_ref) {
+            max_rel = max_rel.max((got - want).abs() / (1.0 + want.abs()));
+        }
+        let mut push = |op: &str, t_s: f64, t_v: f64, extra: String| {
+            let speedup = t_s / t_v.max(1e-12);
+            println!("{n}\t{op}\t{:.3}\t{:.3}\t{speedup:.2}x", t_s * 1e3, t_v * 1e3);
+            entries.push(format!(
+                "    {{\"n\": {n}, \"op\": \"{op}\", \"scalar_ms\": {:.4}, \
+                 \"simd_ms\": {:.4}, \"speedup\": {speedup:.3}{extra}}}",
+                t_s * 1e3,
+                t_v * 1e3
+            ));
+            speedup
+        };
+        let s = push("gemm_nn_m_n_k256_r8", t_scalar, t_simd, String::new());
+        worst_speedup = worst_speedup.min(s);
+        if n == 4096 {
+            gemm_speedup_4096 = s;
+        }
+
+        // — full kernel matvec: distance GEMM + ρ panel + contraction —
+        let x = Matrix::randn(n, 4, rng);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let op = KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-1);
+        let mvm_reps = if n >= 16384 { 2 } else { reps };
+        simd::set_backend(Backend::Scalar).expect("scalar always available");
+        let t_scalar = common::bench_median(mvm_reps, || {
+            let _ = op.matvec(&v);
+        });
+        let y_ref = op.matvec(&v);
+        simd::set_backend(best).expect("best_available must be available");
+        let t_simd = common::bench_median(mvm_reps, || {
+            let _ = op.matvec(&v);
+        });
+        let y = op.matvec(&v);
+        for (got, want) in y.iter().zip(&y_ref) {
+            max_rel = max_rel.max((got - want).abs() / (1.0 + want.abs()));
+        }
+        let s = push("kernel_matvec_d4_rbf", t_scalar, t_simd, String::new());
+        worst_speedup = worst_speedup.min(s);
+
+        // — ρ panel alone: lane-parallel exp vs per-element glibc exp —
+        // `row` holds the dot products the distance GEMM would produce;
+        // zeros make d2 = sq[j] exactly, spanning [0, ~4] like a unit-ℓ RBF.
+        let sq: Vec<f64> = (0..n).map(|_| rng.normal().powi(2)).collect();
+        let mut row = vec![0.0; n];
+        let inner = ((1usize << 22) / n).max(1);
+        let t_glibc = common::bench_median(reps, || {
+            for _ in 0..inner {
+                row.fill(0.0);
+                simd::rho_row_scalar(RhoFamily::Rbf, 1.0, 0.0, &sq, &mut row);
+            }
+        });
+        let row_ref = row.clone();
+        let t_lane = common::bench_median(reps, || {
+            for _ in 0..inner {
+                row.fill(0.0);
+                if let Some(t) = simd::table_for(best) {
+                    (t.rho_row)(RhoFamily::Rbf, 1.0, 0.0, &sq, &mut row);
+                } else {
+                    simd::rho_row_scalar(RhoFamily::Rbf, 1.0, 0.0, &sq, &mut row);
+                }
+            }
+        });
+        for (got, want) in row.iter().zip(&row_ref) {
+            max_rel = max_rel.max((got - want).abs() / (1.0 + want.abs()));
+        }
+        let per_elem = format!(
+            ", \"glibc_ns_per_elem\": {:.2}, \"simd_ns_per_elem\": {:.2}",
+            t_glibc / (inner * n) as f64 * 1e9,
+            t_lane / (inner * n) as f64 * 1e9
+        );
+        let s = push("rho_panel_rbf", t_glibc, t_lane, per_elem);
+        worst_speedup = worst_speedup.min(s);
+        if n == 4096 {
+            rho_speedup_4096 = s;
+        }
+    }
+    simd::clear_backend_override();
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.simd.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"backend\": \"{}\", \"threads\": {}, \"reps\": {reps}, \
+         \"gemm_shape\": \"m=N, k=256, n=8\"}},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        best.name(),
+        num_threads(),
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_simd.json", json).expect("write BENCH_simd.json");
+    println!("wrote BENCH_simd.json ({} entries, backend = {})", entries.len(), best.name());
+    checks.push((
+        "dispatched kernels agree with forced-scalar (rel 1e-10)".into(),
+        max_rel < 1e-10,
+    ));
+    if best == Backend::Scalar {
+        println!("no SIMD backend detected — speedup gates skipped (scalar == scalar)");
+        return;
+    }
+    // soft floor on every cell: dispatch must never cost real throughput
+    checks.push((
+        "dispatched kernels are never slower than 0.8x scalar".into(),
+        worst_speedup > 0.8,
+    ));
+    if !fast {
+        // the ISSUE acceptance numbers, measured at N=4096 in full mode
+        checks.push((
+            "dispatched gemm_nn >= 1.5x scalar at N=4096".into(),
+            gemm_speedup_4096 >= 1.5,
+        ));
+        checks.push((
+            "rho panel >= 2x glibc exp per element at N=4096".into(),
+            rho_speedup_4096 >= 2.0,
+        ));
+    }
 }

@@ -9,10 +9,14 @@
 //! machinery per element, so the entries here flip the parallel axis:
 //! **threads split the batch dimension** (each element's output block is
 //! disjoint, so [`parallel_fill`] hands them out with no locking), while
-//! each element runs the serial register-tiled kernels. B-panel packing
-//! happens inside [`gemm_nn`] through its thread-local scratch, which each
-//! pool worker reuses across every batch element it claims — the pack cost
-//! is paid once per thread, not once per element.
+//! each element runs the serial register-tiled kernels (which in turn pick
+//! up the runtime-dispatched SIMD variants of [`crate::linalg::simd`] with
+//! no changes here — one resolved function-pointer table serves every batch
+//! element). B-panel packing happens inside [`gemm_nn`] through its
+//! thread-local scratch, which each pool worker reuses across every batch
+//! element it claims — the pack cost is paid once per thread, not once per
+//! element, and the scratch grows to the largest `k·NR` the worker has seen
+//! across size classes (regression-proved in `tests/alloc_regression.rs`).
 //!
 //! All entries **accumulate** (`C += A·B`) like the rest of the `gemm`
 //! family and allocate nothing: callers own every buffer (typically checked

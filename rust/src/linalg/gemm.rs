@@ -15,18 +15,39 @@
 //!   contiguous inner loops (the `VᵀW` reorthogonalization case).
 //!
 //! All kernels *accumulate* into `C` (callers zero it when they need a plain
-//! product), are pure serial building blocks (threading lives in the
-//! callers, over disjoint output panels), and carry no `unsafe`: panel
-//! bounds are sliced once per tile, and the compiler hoists the checks.
+//! product) and are pure serial building blocks (threading lives in the
+//! callers, over disjoint output panels).
+//!
+//! Each public entry point dispatches through [`super::simd::table`]: when a
+//! runtime-detected SIMD backend is active, the call forwards to the
+//! explicit `core::arch` variant of the same layout; otherwise (scalar
+//! backend, or no SIMD support compiled/detected) the safe `*_scalar`
+//! kernels below run — they are the always-compiled fallback *and* the
+//! oracle the SIMD property tests compare against, and with
+//! `CIQ_SIMD=scalar` their results are bit-identical to the pre-dispatch
+//! code. This file itself stays `unsafe`-free; all intrinsics live in
+//! [`super::simd`].
+
+use super::simd;
 
 /// Register-tile rows of the [`gemm_nn`] micro-kernel.
 pub const MR: usize = 4;
 /// Register-tile columns of the [`gemm_nn`] micro-kernel.
 pub const NR: usize = 8;
 
-/// Dot product with a 4-way unrolled, `chunks_exact`-vectorizable loop.
+/// Dot product: dispatches to the active SIMD backend, falling back to the
+/// 4-way unrolled `chunks_exact`-vectorizable scalar loop.
 #[inline]
 pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    if let Some(t) = simd::table() {
+        return (t.dot)(a, b);
+    }
+    dot_scalar(a, b)
+}
+
+/// The scalar dot kernel (pre-dispatch `dot_unrolled` body, bit-identical).
+#[inline]
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let ca = a.chunks_exact(4);
     let cb = b.chunks_exact(4);
@@ -49,7 +70,8 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
 std::thread_local! {
     // Per-thread B-panel pack scratch for [`gemm_nn`]: grows to the largest
     // k·NR this thread has seen, then every later call is allocation-free —
-    // part of the zero-allocation steady-state contract of the solve stack.
+    // part of the zero-allocation steady-state contract of the solve stack
+    // (regression-proved across size classes in tests/alloc_regression.rs).
     // Deliberately retained for the thread's lifetime (8·k_max·NR bytes per
     // pool worker): the pre-thread-local code allocated this buffer on
     // *every* call, so retention trades a small, bounded per-thread floor
@@ -57,12 +79,19 @@ std::thread_local! {
     static PACK: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
+/// Current length of this thread's [`gemm_nn`] pack scratch — observability
+/// for the growth-bound regression tests (the documented contract: grows to
+/// the largest `k·NR` seen on this thread, never shrinks, never exceeds it).
+pub fn thread_pack_len() -> usize {
+    PACK.with(|p| p.borrow().len())
+}
+
 /// `C += A · B` with `A: m×k`, `B: k×n`, `C: m×n`, all contiguous
 /// row-major. B is packed one `NR`-column panel at a time so the micro-
 /// kernel streams it from a dense buffer (a reused thread-local, so warm
 /// calls never touch the heap).
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    PACK.with(|p| gemm_nn_with_pack(m, k, n, a, b, c, &mut *p.borrow_mut()));
+    PACK.with(|p| gemm_nn_with_pack(m, k, n, a, b, c, &mut p.borrow_mut()));
 }
 
 /// [`gemm_nn`] with a caller-owned pack scratch buffer (resized as needed),
@@ -87,7 +116,24 @@ pub fn gemm_nn_with_pack(
     if n >= NR && pack.len() < k * NR {
         pack.resize(k * NR, 0.0);
     }
-    let bpack: &mut [f64] = pack;
+    if let Some(t) = simd::table() {
+        return (t.gemm_nn)(m, k, n, a, b, c, pack);
+    }
+    gemm_nn_scalar(m, k, n, a, b, c, pack);
+}
+
+/// The scalar [`gemm_nn`] driver (pre-dispatch body, bit-identical).
+/// Preconditions (validated by [`gemm_nn_with_pack`]): buffer sizes match,
+/// no zero dimension, `pack.len() ≥ k·NR` whenever `n ≥ NR`.
+pub(crate) fn gemm_nn_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    bpack: &mut [f64],
+) {
     let mut j = 0;
     while j + NR <= n {
         // pack the B panel: k rows × NR contiguous columns
@@ -96,28 +142,42 @@ pub fn gemm_nn_with_pack(
         }
         let mut i = 0;
         while i + MR <= m {
-            kernel_mrxnr(k, n, j, &a[i * k..(i + MR) * k], &bpack, &mut c[i * n..(i + MR) * n]);
+            kernel_mrxnr(k, n, j, &a[i * k..(i + MR) * k], bpack, &mut c[i * n..(i + MR) * n]);
             i += MR;
         }
         while i < m {
-            kernel_1xnr(n, j, &a[i * k..(i + 1) * k], &bpack, &mut c[i * n..(i + 1) * n]);
+            kernel_1xnr(n, j, &a[i * k..(i + 1) * k], bpack, &mut c[i * n..(i + 1) * n]);
             i += 1;
         }
         j += NR;
     }
     if j < n {
-        // column tail: plain rank-1 accumulation over the remaining columns
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (p, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..(p + 1) * n];
-                for jj in j..n {
-                    crow[jj] += av * brow[jj];
-                }
+        gemm_nn_coltail(m, k, n, j, a, b, c);
+    }
+}
+
+/// Column tail of [`gemm_nn`]: plain rank-1 accumulation over the `< NR`
+/// columns right of `j`. Shared by the scalar driver and every SIMD driver
+/// (the tail is too narrow for a packed panel either way).
+pub(crate) fn gemm_nn_coltail(
+    m: usize,
+    k: usize,
+    n: usize,
+    j: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for jj in j..n {
+                crow[jj] += av * brow[jj];
             }
         }
     }
@@ -178,6 +238,14 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
     if k == 0 {
         return;
     }
+    if let Some(t) = simd::table() {
+        return (t.gemm_nt)(m, k, n, a, b, c);
+    }
+    gemm_nt_scalar(m, k, n, a, b, c);
+}
+
+/// The scalar [`gemm_nt`] driver (pre-dispatch body, bit-identical).
+pub(crate) fn gemm_nt_scalar(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     const TB: usize = 4;
     let mut i = 0;
     while i + TB <= m {
@@ -204,7 +272,7 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
         while j < n {
             let brow = &b[j * k..(j + 1) * k];
             for mi in 0..TB {
-                c[(i + mi) * n + j] += dot_unrolled(&a[(i + mi) * k..(i + mi + 1) * k], brow);
+                c[(i + mi) * n + j] += dot_scalar(&a[(i + mi) * k..(i + mi + 1) * k], brow);
             }
             j += 1;
         }
@@ -213,7 +281,7 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
     while i < m {
         let arow = &a[i * k..(i + 1) * k];
         for j in 0..n {
-            c[i * n + j] += dot_unrolled(arow, &b[j * k..(j + 1) * k]);
+            c[i * n + j] += dot_scalar(arow, &b[j * k..(j + 1) * k]);
         }
         i += 1;
     }
@@ -229,6 +297,21 @@ pub fn gemm_tn(p_rows: usize, m: usize, n: usize, a: &[f64], b: &[f64], c: &mut 
     if m == 0 || n == 0 {
         return;
     }
+    if let Some(t) = simd::table() {
+        return (t.gemm_tn)(p_rows, m, n, a, b, c);
+    }
+    gemm_tn_scalar(p_rows, m, n, a, b, c);
+}
+
+/// The scalar [`gemm_tn`] driver (pre-dispatch body, bit-identical).
+pub(crate) fn gemm_tn_scalar(
+    p_rows: usize,
+    m: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) {
     let mut p = 0;
     while p + 4 <= p_rows {
         let b0 = &b[p * n..(p + 1) * n];
@@ -378,5 +461,33 @@ mod tests {
         gemm_nn(2, 0, 3, &[], &[], &mut c2);
         gemm_nt(2, 0, 3, &[], &[], &mut c2);
         assert!(c2.iter().all(|&x| x == 1.0));
+    }
+
+    /// The documented thread-local PACK contract: the scratch grows to the
+    /// largest `k·NR` this thread has seen and exactly that — never smaller
+    /// (which would mean per-call reallocation) and never beyond it. Runs
+    /// on a dedicated thread so other tests' gemm calls can't interfere.
+    #[test]
+    fn thread_pack_grows_to_running_max_k_and_stays() {
+        std::thread::spawn(|| {
+            assert_eq!(thread_pack_len(), 0);
+            let mut max_k = 0usize;
+            for &k in &[3usize, 17, 9, 64, 5, 64, 33, 2] {
+                max_k = max_k.max(k);
+                let a = vec![1.0; 2 * k];
+                let b = vec![1.0; k * NR];
+                let mut c = vec![0.0; 2 * NR];
+                gemm_nn(2, k, NR, &a, &b, &mut c);
+                assert_eq!(thread_pack_len(), max_k * NR, "after k={k}");
+            }
+            // narrow products (n < NR) must not grow the pack at all
+            let a = vec![1.0; 2 * 1000];
+            let b = vec![1.0; 1000 * 3];
+            let mut c = vec![0.0; 2 * 3];
+            gemm_nn(2, 1000, 3, &a, &b, &mut c);
+            assert_eq!(thread_pack_len(), max_k * NR, "n < NR grew the pack");
+        })
+        .join()
+        .unwrap();
     }
 }

@@ -8,15 +8,18 @@
 //! Cholesky factorization with triangular solves
 //! ([`chol`]), a symmetric eigendecomposition (Householder
 //! tridiagonalization + implicit-QL, [`eigen`]) used as the *exact*
-//! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline, and
-//! the [`workspace`] buffer pool behind the solve stack's zero-allocation
-//! steady state (`rust/DESIGN.md` §4).
+//! `K^{1/2}` oracle in tests and inside the randomized-SVD baseline, the
+//! [`workspace`] buffer pool behind the solve stack's zero-allocation
+//! steady state (`rust/DESIGN.md` §4), and the runtime-dispatched SIMD
+//! micro-kernel engine ([`simd`], `rust/DESIGN.md` §7) that the [`gemm`]
+//! entry points route through on CPUs with AVX2/AVX-512/NEON.
 
 mod matrix;
 pub mod batched;
 pub mod chol;
 pub mod eigen;
 pub mod gemm;
+pub mod simd;
 pub mod workspace;
 
 pub use chol::Cholesky;

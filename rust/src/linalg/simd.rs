@@ -1,0 +1,2650 @@
+//! Runtime-dispatched SIMD micro-kernels for the GEMM/MVM hot paths.
+//!
+//! The serving stack funnels every hot inner loop — KernelOp Gram panels,
+//! msMINRES reorthogonalization, the batched Newton–Schulz tier — through
+//! the register-tiled kernels in [`super::gemm`], which until this layer
+//! relied on LLVM auto-vectorizing `chunks_exact` loops. This module makes
+//! the vectorization *explicit*: hand-written `core::arch` kernels for the
+//! three GEMM layouts (`gemm_nn` 4×8 FMA tile, `gemm_nt` contiguous-row
+//! reductions, `gemm_tn` rank-1 updates), the unrolled dot product, and a
+//! lane-parallel `ρ`/`dρ` panel evaluator built on a polynomial SIMD `exp`.
+//!
+//! ## Dispatch model
+//!
+//! * [`Backend`] enumerates the implemented instruction sets. AVX2+FMA and
+//!   AVX-512F variants are compiled on `x86_64` and selected behind
+//!   `is_x86_feature_detected!`; NEON is the `aarch64` baseline. The safe
+//!   scalar kernels in [`super::gemm`] are the always-compiled fallback and
+//!   the oracle the property tests compare against.
+//! * Selection happens **once per process** ([`backend`] /
+//!   [`table`]): the first dispatch resolves `CIQ_SIMD` + CPUID into a
+//!   `&'static` [`KernelTable`] of plain function pointers cached in a
+//!   `OnceLock`. Per-call feature detection would put an atomic load *and*
+//!   a branch tree in front of kernels that are called millions of times
+//!   per solve; a resolved fn-pointer table costs one predictable indirect
+//!   call. [`resolutions`] exposes the resolve counter so tests can prove
+//!   the "exactly once" claim (`pool_spawned_threads`-style).
+//! * `CIQ_SIMD={auto,avx2,avx512,neon,scalar}` overrides auto-detection
+//!   (unknown or unavailable values warn to stderr and fall back to
+//!   `auto`). Tests and benches flip backends *in-process* with
+//!   [`set_backend`] / [`clear_backend_override`], which bypass the cached
+//!   choice without re-running resolution.
+//!
+//! ## Safety conventions
+//!
+//! All `#[target_feature]` kernels live in this file (a `structlint` rule
+//! confines `core::arch` and `#[target_feature]` here). Every kernel is an
+//! `unsafe fn` whose single obligation is "the named features are available
+//! on the executing CPU"; the only callers are the safe `*_entry` wrappers
+//! stored in a [`KernelTable`], and [`table_for`] refuses to hand out a
+//! table whose backend [`Backend::available`] rejects — that check is the
+//! discharge of the obligation. Raw-pointer arithmetic inside kernels is
+//! justified per-kernel by slice bounds established in safe code.
+//!
+//! ## SIMD `exp` contract
+//!
+//! The panel evaluator needs one `exp` per matrix entry. The scalar
+//! bit-twiddled [`crate::util::fastmath::fast_exp`] was benchmarked against
+//! glibc and reverted (EXPERIMENTS.md §Perf iteration 2: glibc `exp` is
+//! ~6 ns/call, the approximation 0.9–1.0×) — but vectorizing amortizes the
+//! range reduction and polynomial over 4–8 lanes, which is different
+//! economics. The vector `exp` here uses the same `2^n · 2^f` scheme and
+//! hi/lo `ln 2` split as `fast_exp` with a **degree-11 Taylor** polynomial
+//! on `|f| ≤ ln2/2` (truncation ≤ 7e-15), giving ≤ ~4 ULP relative error
+//! over the kernel domain `x ∈ [-708, 0]` — property-tested against glibc
+//! at 1e-13. Inputs below -708 flush to zero (glibc returns subnormals
+//! there; kernels treat both as 0). The glibc path remains the fallback
+//! (scalar backend, lane remainders) and the oracle.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// An implemented instruction-set backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The safe, always-compiled kernels in [`super::gemm`] (plus the glibc
+    /// `exp` path in the kernel operator). Fallback and oracle.
+    Scalar,
+    /// AVX2 + FMA (`x86_64`, 4 × f64 lanes).
+    Avx2,
+    /// AVX-512F (`x86_64`, 8 × f64 lanes).
+    Avx512,
+    /// NEON / AdvSIMD (`aarch64` baseline, 2 × f64 lanes).
+    Neon,
+}
+
+impl Backend {
+    /// All backends, scalar first, strongest last.
+    pub fn all() -> [Backend; 4] {
+        [Backend::Scalar, Backend::Avx2, Backend::Avx512, Backend::Neon]
+    }
+
+    /// Stable lowercase name (matches the `CIQ_SIMD` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend can run on the executing CPU. This is the
+    /// runtime gate every `unsafe` kernel's feature contract rests on.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Backend::Neon => {
+                // NEON is baseline on aarch64: always present when this arm
+                // is compiled for that target.
+                cfg!(target_arch = "aarch64")
+            }
+        }
+    }
+
+    fn to_idx(self) -> u8 {
+        match self {
+            Backend::Scalar => 0,
+            Backend::Avx2 => 1,
+            Backend::Avx512 => 2,
+            Backend::Neon => 3,
+        }
+    }
+
+    fn from_idx(i: u8) -> Backend {
+        match i {
+            0 => Backend::Scalar,
+            1 => Backend::Avx2,
+            2 => Backend::Avx512,
+            3 => Backend::Neon,
+            _ => unreachable!("invalid backend index"),
+        }
+    }
+}
+
+/// Strongest available backend on this CPU (AVX-512F > AVX2 > NEON >
+/// scalar).
+pub fn best_available() -> Backend {
+    for b in [Backend::Avx512, Backend::Avx2, Backend::Neon] {
+        if b.available() {
+            return b;
+        }
+    }
+    Backend::Scalar
+}
+
+/// Parse a `CIQ_SIMD` spec into a backend. Pure (no env access) so the
+/// parsing is unit-testable; unknown or unavailable specs warn to stderr
+/// and fall back to auto-detection.
+pub fn choose(spec: &str) -> Backend {
+    let want = match spec.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => return best_available(),
+        "scalar" => Backend::Scalar,
+        "avx2" => Backend::Avx2,
+        "avx512" => Backend::Avx512,
+        "neon" => Backend::Neon,
+        other => {
+            eprintln!("ciq: unknown CIQ_SIMD value {other:?}; using auto detection");
+            return best_available();
+        }
+    };
+    if want.available() {
+        want
+    } else {
+        eprintln!(
+            "ciq: CIQ_SIMD={} requested but not available on this CPU; using auto detection",
+            want.name()
+        );
+        best_available()
+    }
+}
+
+/// Sentinel meaning "no in-process override"; real backends use
+/// [`Backend::to_idx`] (0..=3).
+const OVERRIDE_NONE: u8 = u8::MAX;
+
+/// In-process backend override ([`set_backend`]); beats the cached
+/// environment choice. `u8::MAX` = none.
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
+
+/// The once-per-process resolved backend (env + CPUID).
+static CHOSEN: OnceLock<Backend> = OnceLock::new();
+
+/// The resolved backend's kernel table (None for scalar), cached alongside
+/// [`CHOSEN`] so the steady-state [`table`] call is one atomic load + one
+/// `OnceLock` read — no repeated feature detection.
+static RESOLVED_TABLE: OnceLock<Option<&'static KernelTable>> = OnceLock::new();
+
+/// Process-lifetime count of [`CHOSEN`] resolutions. The `OnceLock`
+/// guarantees ≤ 1; tests assert == 1 after heavy multi-threaded use.
+static RESOLUTIONS: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve() -> Backend {
+    // ordering: Relaxed — monotonic diagnostic counter, read only by tests
+    // after the OnceLock has already synchronized the resolution itself.
+    RESOLUTIONS.fetch_add(1, Ordering::Relaxed);
+    match std::env::var("CIQ_SIMD") {
+        Ok(spec) => choose(&spec),
+        Err(_) => best_available(),
+    }
+}
+
+/// Number of times dispatch resolution has run in this process (≤ 1 by
+/// construction; exposed so tests can prove it, like
+/// `pool_spawned_threads`).
+pub fn resolutions() -> usize {
+    // ordering: Relaxed — see `resolve`; a plain counter with no dependent
+    // memory to publish.
+    RESOLUTIONS.load(Ordering::Relaxed)
+}
+
+/// The backend the next kernel dispatch will use: the in-process override
+/// if one is set, else the once-per-process `CIQ_SIMD`/CPUID resolution.
+pub fn backend() -> Backend {
+    // ordering: Relaxed — the override is one independent word; no other
+    // memory is published through it, and the tests/benches that flip it
+    // synchronize externally (they run the kernels on the flipping thread).
+    let ov = OVERRIDE.load(Ordering::Relaxed);
+    if ov != OVERRIDE_NONE {
+        return Backend::from_idx(ov);
+    }
+    *CHOSEN.get_or_init(resolve)
+}
+
+/// Force a backend for this process (tests/benches), bypassing — not
+/// re-running — the cached resolution. Fails if the backend cannot run on
+/// this CPU, so a forced table never violates a kernel's feature contract.
+pub fn set_backend(b: Backend) -> Result<(), String> {
+    if !b.available() {
+        return Err(format!("backend {} is not available on this CPU", b.name()));
+    }
+    // ordering: Relaxed — single-word flag; see `backend` for why no
+    // stronger ordering is needed.
+    OVERRIDE.store(b.to_idx(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Drop the [`set_backend`] override, returning to the resolved choice.
+pub fn clear_backend_override() {
+    // ordering: Relaxed — single-word flag; see `backend`.
+    OVERRIDE.store(OVERRIDE_NONE, Ordering::Relaxed);
+}
+
+/// The kernel table for the current [`backend`], or `None` when the scalar
+/// fallback should run. This is the call sites' single entry point:
+/// `if let Some(t) = simd::table() { (t.gemm_nn)(…) } else { scalar }`.
+pub fn table() -> Option<&'static KernelTable> {
+    // ordering: Relaxed — see `backend`.
+    let ov = OVERRIDE.load(Ordering::Relaxed);
+    if ov != OVERRIDE_NONE {
+        return table_for(Backend::from_idx(ov));
+    }
+    *RESOLVED_TABLE.get_or_init(|| table_for(*CHOSEN.get_or_init(resolve)))
+}
+
+/// The kernel table for a specific backend, if it is compiled *and*
+/// available on this CPU (`None` for scalar — callers fall back to
+/// [`super::gemm`]). The availability check here is what discharges the
+/// `unsafe` feature contract of every kernel reachable through the table.
+pub fn table_for(b: Backend) -> Option<&'static KernelTable> {
+    if !b.available() {
+        return None;
+    }
+    match b {
+        Backend::Scalar => None,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => Some(&x86::AVX2_TABLE),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 => Some(&x86::AVX512_TABLE),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => Some(&neon::NEON_TABLE),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 | Backend::Avx512 => None,
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => None,
+    }
+}
+
+/// Resolved function pointers for one backend. All entries are *safe* fns
+/// (thin wrappers whose bodies enter the `unsafe` feature-gated kernels):
+/// `#[target_feature]` fns cannot coerce to safe fn pointers on the pinned
+/// toolchain, and routing every entry through [`table_for`]'s availability
+/// check keeps the unsafety confined to this module.
+///
+/// Contracts (validated by the dispatching wrappers in [`super::gemm`] /
+/// the kernel operator, and re-checked with `debug_assert!` in the
+/// kernels):
+/// * `gemm_nn(m, k, n, a, b, c, pack)`: buffer sizes as in
+///   [`super::gemm::gemm_nn_with_pack`]; `pack.len() ≥ k·NR` whenever
+///   `n ≥ NR` (the wrapper grows it before dispatch).
+/// * `gemm_nt` / `gemm_tn` / `dot`: same shapes as their
+///   [`super::gemm`] counterparts.
+/// * `rho_row(fam, outputscale, sqi, sq, row)`: in-place
+///   `row[j] ← s²·ρ(√max(sqi + sq[j] − 2·row[j], 0))` with
+///   `sq.len() == row.len()`.
+/// * `grad_row(fam, outputscale, li, sqi, sq, pan, rv)`: returns the
+///   row's `(Σ_j li·rv[j]·s²·dρ(r_j), Σ_j li·rv[j]·s²·ρ(r_j))` partial
+///   sums, `r_j = √max(sqi + sq[j] − 2·pan[j], 0)`, equal-length slices.
+pub struct KernelTable {
+    /// Which backend these pointers implement (for logs/benches).
+    pub backend: Backend,
+    /// `C += A·B` micro-kernel driver (packed-B panels).
+    pub gemm_nn: fn(usize, usize, usize, &[f64], &[f64], &mut [f64], &mut [f64]),
+    /// `C += A·Bᵀ` (contiguous-row reductions).
+    pub gemm_nt: fn(usize, usize, usize, &[f64], &[f64], &mut [f64]),
+    /// `C += Aᵀ·B` (rank-1 updates).
+    pub gemm_tn: fn(usize, usize, usize, &[f64], &[f64], &mut [f64]),
+    /// Vectorized dot product.
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    /// Lane-parallel kernel-panel evaluation (Gram values → `s²·ρ`).
+    pub rho_row: fn(RhoFamily, f64, f64, &[f64], &mut [f64]),
+    /// Lane-parallel gradient-panel contraction (one output row's partial
+    /// `(d log ℓ, d log s²)` sums).
+    pub grad_row: fn(RhoFamily, f64, f64, f64, &[f64], &[f64], &[f64]) -> (f64, f64),
+}
+
+/// Kernel correlation family — the SIMD-facing mirror of
+/// `operators::KernelType`, which delegates its `ρ`/`dρ` scalar math here
+/// so the scalar fallback, the lane remainders, and the vector kernels all
+/// share one set of formulas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RhoFamily {
+    /// Squared-exponential `exp(-r²/2)`.
+    Rbf,
+    /// Matérn ν = 1/2: `exp(-r)`.
+    Matern12,
+    /// Matérn ν = 3/2: `(1+√3 r) exp(-√3 r)`.
+    Matern32,
+    /// Matérn ν = 5/2: `(1+√5 r+5r²/3) exp(-√5 r)`.
+    Matern52,
+}
+
+impl RhoFamily {
+    /// Correlation as a function of the scaled distance `r ≥ 0` (glibc
+    /// `exp`; the scalar reference the vector kernels are tested against).
+    #[inline]
+    pub fn rho(self, r: f64) -> f64 {
+        match self {
+            RhoFamily::Rbf => (-0.5 * r * r).exp(),
+            RhoFamily::Matern12 => (-r).exp(),
+            RhoFamily::Matern32 => {
+                let a = 3f64.sqrt() * r;
+                (1.0 + a) * (-a).exp()
+            }
+            RhoFamily::Matern52 => {
+                let a = 5f64.sqrt() * r;
+                (1.0 + a + a * a / 3.0) * (-a).exp()
+            }
+        }
+    }
+
+    /// `d ρ / d log ℓ` as a function of scaled distance `r` (note
+    /// `dr/d log ℓ = −r`), used for hyperparameter gradients.
+    #[inline]
+    pub fn drho_dlog_ell(self, r: f64) -> f64 {
+        match self {
+            RhoFamily::Rbf => r * r * (-0.5 * r * r).exp(),
+            RhoFamily::Matern12 => r * (-r).exp(),
+            RhoFamily::Matern32 => {
+                let s = 3f64.sqrt();
+                s * r * s * r * (-s * r).exp()
+            }
+            RhoFamily::Matern52 => {
+                let s = 5f64.sqrt();
+                let a = s * r;
+                // dρ/dr = -(a/3)(1+a) e^{-a} · s ... computed analytically:
+                // ρ(r) = (1+a+a²/3)e^{-a}, dρ/da = (1/3)a(1+a)·(-e^{-a}) + ...
+                // dρ/da = -(a + a²)/3 · e^{-a} ... derive: d/da[(1+a+a²/3)e^{-a}]
+                //       = (1+2a/3)e^{-a} - (1+a+a²/3)e^{-a} = -(a/3)(1+a)e^{-a}
+                // dρ/dlogℓ = dρ/da · da/dlogℓ = -(a/3)(1+a)e^{-a} · (-a)
+                a * a / 3.0 * (1.0 + a) * (-a).exp()
+            }
+        }
+    }
+}
+
+/// Scalar reference for [`KernelTable::rho_row`] — bit-identical to the
+/// pre-dispatch panel loop in the kernel operator (same op order per
+/// element). Oracle for the SIMD property tests and the bench's "before"
+/// side.
+pub fn rho_row_scalar(fam: RhoFamily, outputscale: f64, sqi: f64, sq: &[f64], row: &mut [f64]) {
+    debug_assert_eq!(sq.len(), row.len());
+    for (v, &sj) in row.iter_mut().zip(sq) {
+        let d2 = (sqi + sj - 2.0 * *v).max(0.0);
+        *v = outputscale * fam.rho(d2.sqrt());
+    }
+}
+
+/// Scalar reference for [`KernelTable::grad_row`] — bit-identical op order
+/// to the pre-dispatch gradient loop (`lr = li·rv[j]·s²` in that exact
+/// association). Oracle for the SIMD property tests.
+pub fn grad_row_scalar(
+    fam: RhoFamily,
+    outputscale: f64,
+    li: f64,
+    sqi: f64,
+    sq: &[f64],
+    pan: &[f64],
+    rv: &[f64],
+) -> (f64, f64) {
+    debug_assert_eq!(sq.len(), pan.len());
+    debug_assert_eq!(sq.len(), rv.len());
+    let mut d_ell = 0.0;
+    let mut d_s2 = 0.0;
+    for ((&xx, &sj), &rj) in pan.iter().zip(sq).zip(rv) {
+        let rr = (sqi + sj - 2.0 * xx).max(0.0).sqrt();
+        let lr = li * rj * outputscale;
+        d_ell += lr * fam.drho_dlog_ell(rr);
+        d_s2 += lr * fam.rho(rr);
+    }
+    (d_ell, d_s2)
+}
+
+/// Taylor coefficients `1/k!` for the degree-11 `e^r` polynomial on
+/// `|r| ≤ ln2/2` (truncation `r¹²/12!` ≤ 7e-15 at the interval edge — the
+/// accuracy step up from `fast_exp`'s degree-7 that keeps the vector path
+/// inside the solver's 1e-10 test tolerances).
+#[allow(dead_code)] // referenced only by the cfg(target_arch) kernel modules
+const EXP_POLY: [f64; 12] = [
+    1.0,
+    1.0,
+    1.0 / 2.0,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5040.0,
+    1.0 / 40320.0,
+    1.0 / 362880.0,
+    1.0 / 3628800.0,
+    1.0 / 39916800.0,
+];
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2+FMA and AVX-512F kernel variants. Every `unsafe fn` here has a
+    //! single safety obligation — the features named in its
+    //! `#[target_feature]` are available on the executing CPU — discharged
+    //! by [`super::table_for`]'s `Backend::available` gate in front of the
+    //! safe `*_entry` wrappers (the only callers).
+
+    use super::{Backend, KernelTable, RhoFamily, EXP_POLY};
+    use crate::linalg::gemm::{self, MR, NR};
+    use crate::util::fastmath::{LN_2_HI, LN_2_LO, LOG2_E};
+    use core::arch::x86_64::*;
+
+    const ROUND_NEAREST: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    pub(super) static AVX2_TABLE: KernelTable = KernelTable {
+        backend: Backend::Avx2,
+        gemm_nn: gemm_nn_avx2_entry,
+        gemm_nt: gemm_nt_avx2_entry,
+        gemm_tn: gemm_tn_avx2_entry,
+        dot: dot_avx2_entry,
+        rho_row: rho_row_avx2_entry,
+        grad_row: grad_row_avx2_entry,
+    };
+
+    // ---------------------------------------------------------------- AVX2
+
+    /// Vector `e^x` (4 lanes), valid for `x ≤ 708`: `fast_exp`'s
+    /// `2^n · 2^f` scheme with the hi/lo `ln 2` split and a degree-11
+    /// Taylor polynomial (module docs: ≤ ~4 ULP on the kernel domain).
+    /// Flushes `x < -708` to zero.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn exp_avx2(x: __m256d) -> __m256d {
+        // SAFETY: register-only intrinsics (no memory access); avx2+fma
+        // hold by this fn's own contract.
+        unsafe {
+            // clamp keeps n inside the i32 convert range for arbitrarily
+            // negative inputs; the final mask zeroes the clamped lanes
+            let xc = _mm256_max_pd(x, _mm256_set1_pd(-800.0));
+            let n = _mm256_round_pd::<ROUND_NEAREST>(_mm256_mul_pd(xc, _mm256_set1_pd(LOG2_E)));
+            // r = (x − n·ln2_hi) − n·ln2_lo, |r| ≤ ln2/2
+            let r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN_2_HI), xc);
+            let r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN_2_LO), r);
+            let mut p = _mm256_set1_pd(EXP_POLY[11]);
+            for idx in (0..11).rev() {
+                p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(EXP_POLY[idx]));
+            }
+            // 2^n through the exponent bits (n ≥ −1022 after the −708 cut,
+            // so the biased exponent stays normal)
+            let n64 = _mm256_cvtepi32_epi64(_mm256_cvtpd_epi32(n));
+            let bits = _mm256_slli_epi64::<52>(_mm256_add_epi64(n64, _mm256_set1_epi64x(1023)));
+            let res = _mm256_mul_pd(p, _mm256_castsi256_pd(bits));
+            // flush x < −708 to zero (glibc would return a subnormal)
+            let keep = _mm256_cmp_pd::<_CMP_GE_OQ>(x, _mm256_set1_pd(-708.0));
+            _mm256_and_pd(res, keep)
+        }
+    }
+
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn neg_avx2(v: __m256d) -> __m256d {
+        // SAFETY: register-only intrinsic; features per the fn contract.
+        unsafe { _mm256_xor_pd(v, _mm256_set1_pd(-0.0)) }
+    }
+
+    /// Horizontal sum of a 4-lane accumulator.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn hsum_avx2(v: __m256d) -> f64 {
+        // SAFETY: register-only intrinsics; features per the fn contract.
+        unsafe {
+            let lo = _mm256_castpd256_pd128(v);
+            let hi = _mm256_extractf128_pd::<1>(v);
+            let s = _mm_add_pd(lo, hi);
+            let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
+            _mm_cvtsd_f64(s)
+        }
+    }
+
+    /// Vectorized dot with zip-truncation semantics (like the scalar
+    /// kernel): two independent accumulators over 8-element chunks.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: avx2+fma per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut p = 0;
+            while p + 8 <= n {
+                let a0 = _mm256_loadu_pd(ap.add(p));
+                let b0 = _mm256_loadu_pd(bp.add(p));
+                acc0 = _mm256_fmadd_pd(a0, b0, acc0);
+                let a1 = _mm256_loadu_pd(ap.add(p + 4));
+                let b1 = _mm256_loadu_pd(bp.add(p + 4));
+                acc1 = _mm256_fmadd_pd(a1, b1, acc1);
+                p += 8;
+            }
+            if p + 4 <= n {
+                let a0 = _mm256_loadu_pd(ap.add(p));
+                let b0 = _mm256_loadu_pd(bp.add(p));
+                acc0 = _mm256_fmadd_pd(a0, b0, acc0);
+                p += 4;
+            }
+            let mut s = hsum_avx2(_mm256_add_pd(acc0, acc1));
+            while p < n {
+                s += *ap.add(p) * *bp.add(p);
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile of [`gemm_nn_avx2`]: 8 ymm accumulators, two B
+    /// loads + four broadcasts + eight FMAs per reduction step.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn kernel_mrxnr_avx2(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f64],
+        bpack: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: avx2+fma per the fn contract. Loads read a at
+        // mi·k + p < MR·k and bpack at p·NR + lane < k·NR; loads/stores on
+        // c touch rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all
+        // inside the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc00 = _mm256_setzero_pd();
+            let mut acc01 = _mm256_setzero_pd();
+            let mut acc10 = _mm256_setzero_pd();
+            let mut acc11 = _mm256_setzero_pd();
+            let mut acc20 = _mm256_setzero_pd();
+            let mut acc21 = _mm256_setzero_pd();
+            let mut acc30 = _mm256_setzero_pd();
+            let mut acc31 = _mm256_setzero_pd();
+            for p in 0..k {
+                let b0 = _mm256_loadu_pd(bp.add(p * NR));
+                let b1 = _mm256_loadu_pd(bp.add(p * NR + 4));
+                let a0 = _mm256_set1_pd(*ap.add(p));
+                acc00 = _mm256_fmadd_pd(a0, b0, acc00);
+                acc01 = _mm256_fmadd_pd(a0, b1, acc01);
+                let a1 = _mm256_set1_pd(*ap.add(k + p));
+                acc10 = _mm256_fmadd_pd(a1, b0, acc10);
+                acc11 = _mm256_fmadd_pd(a1, b1, acc11);
+                let a2 = _mm256_set1_pd(*ap.add(2 * k + p));
+                acc20 = _mm256_fmadd_pd(a2, b0, acc20);
+                acc21 = _mm256_fmadd_pd(a2, b1, acc21);
+                let a3 = _mm256_set1_pd(*ap.add(3 * k + p));
+                acc30 = _mm256_fmadd_pd(a3, b0, acc30);
+                acc31 = _mm256_fmadd_pd(a3, b1, acc31);
+            }
+            let cp = c.as_mut_ptr();
+            let c0 = cp.add(j);
+            _mm256_storeu_pd(c0, _mm256_add_pd(_mm256_loadu_pd(c0), acc00));
+            let c0h = cp.add(j + 4);
+            _mm256_storeu_pd(c0h, _mm256_add_pd(_mm256_loadu_pd(c0h), acc01));
+            let c1 = cp.add(n + j);
+            _mm256_storeu_pd(c1, _mm256_add_pd(_mm256_loadu_pd(c1), acc10));
+            let c1h = cp.add(n + j + 4);
+            _mm256_storeu_pd(c1h, _mm256_add_pd(_mm256_loadu_pd(c1h), acc11));
+            let c2 = cp.add(2 * n + j);
+            _mm256_storeu_pd(c2, _mm256_add_pd(_mm256_loadu_pd(c2), acc20));
+            let c2h = cp.add(2 * n + j + 4);
+            _mm256_storeu_pd(c2h, _mm256_add_pd(_mm256_loadu_pd(c2h), acc21));
+            let c3 = cp.add(3 * n + j);
+            _mm256_storeu_pd(c3, _mm256_add_pd(_mm256_loadu_pd(c3), acc30));
+            let c3h = cp.add(3 * n + j + 4);
+            _mm256_storeu_pd(c3h, _mm256_add_pd(_mm256_loadu_pd(c3h), acc31));
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_avx2`].
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn kernel_1xnr_avx2(j: usize, arow: &[f64], bpack: &[f64], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: avx2+fma per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the stores hit crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            for (p, &av) in arow.iter().enumerate() {
+                let avv = _mm256_set1_pd(av);
+                let b0 = _mm256_loadu_pd(bp.add(p * NR));
+                let b1 = _mm256_loadu_pd(bp.add(p * NR + 4));
+                acc0 = _mm256_fmadd_pd(avv, b0, acc0);
+                acc1 = _mm256_fmadd_pd(avv, b1, acc1);
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), acc0));
+            let cph = cp.add(4);
+            _mm256_storeu_pd(cph, _mm256_add_pd(_mm256_loadu_pd(cph), acc1));
+        }
+    }
+
+    /// Driver for the packed-panel `C += A·B`: identical structure to the
+    /// scalar [`gemm::gemm_nn_with_pack`] (pack an NR-column B panel, sweep
+    /// MR-row tiles, shared scalar column tail), with AVX2 register tiles.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_nn_avx2(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the tile
+        // kernels; the panel slicing matches the (bounds-checked) scalar
+        // driver exactly.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_avx2(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_avx2(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                gemm::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Four simultaneous dots against one shared B row (the 4-row block of
+    /// [`gemm_nt_avx2`]): each loaded `b` vector feeds four FMAs.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot4_avx2(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        b: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let k = b.len();
+        debug_assert!(a0.len() == k && a1.len() == k && a2.len() == k && a3.len() == k);
+        // SAFETY: avx2+fma per the fn contract; all loads read at
+        // p + lane < k = b.len() = a*.len() (debug-asserted, guaranteed by
+        // the driver's row slicing).
+        unsafe {
+            let p0 = a0.as_ptr();
+            let p1 = a1.as_ptr();
+            let p2 = a2.as_ptr();
+            let p3 = a3.as_ptr();
+            let bp = b.as_ptr();
+            let mut s0 = _mm256_setzero_pd();
+            let mut s1 = _mm256_setzero_pd();
+            let mut s2 = _mm256_setzero_pd();
+            let mut s3 = _mm256_setzero_pd();
+            let mut p = 0;
+            while p + 4 <= k {
+                let bv = _mm256_loadu_pd(bp.add(p));
+                s0 = _mm256_fmadd_pd(_mm256_loadu_pd(p0.add(p)), bv, s0);
+                s1 = _mm256_fmadd_pd(_mm256_loadu_pd(p1.add(p)), bv, s1);
+                s2 = _mm256_fmadd_pd(_mm256_loadu_pd(p2.add(p)), bv, s2);
+                s3 = _mm256_fmadd_pd(_mm256_loadu_pd(p3.add(p)), bv, s3);
+                p += 4;
+            }
+            let mut r0 = hsum_avx2(s0);
+            let mut r1 = hsum_avx2(s1);
+            let mut r2 = hsum_avx2(s2);
+            let mut r3 = hsum_avx2(s3);
+            while p < k {
+                let bv = *bp.add(p);
+                r0 += *p0.add(p) * bv;
+                r1 += *p1.add(p) * bv;
+                r2 += *p2.add(p) * bv;
+                r3 += *p3.add(p) * bv;
+                p += 1;
+            }
+            (r0, r1, r2, r3)
+        }
+    }
+
+    /// `C += A·Bᵀ`: contiguous-row reductions, four output rows sharing
+    /// each loaded B row (same blocking as the scalar [`gemm::gemm_nt`]).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_nt_avx2(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the dot
+        // kernels; row slicing is bounds-checked safe code.
+        unsafe {
+            let mut i = 0;
+            while i + 4 <= m {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for j in 0..n {
+                    let (s0, s1, s2, s3) = dot4_avx2(a0, a1, a2, a3, &b[j * k..(j + 1) * k]);
+                    c[i * n + j] += s0;
+                    c[(i + 1) * n + j] += s1;
+                    c[(i + 2) * n + j] += s2;
+                    c[(i + 3) * n + j] += s3;
+                }
+                i += 4;
+            }
+            while i < m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    c[i * n + j] += dot_avx2(arow, &b[j * k..(j + 1) * k]);
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// One 4-way rank-1 row update of [`gemm_tn_avx2`]:
+    /// `crow += a0·b0 + a1·b1 + a2·b2 + a3·b3` over contiguous rows.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn rank4_row_avx2(
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[f64],
+        b1: &[f64],
+        b2: &[f64],
+        b3: &[f64],
+        crow: &mut [f64],
+    ) {
+        let n = crow.len();
+        debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+        // SAFETY: avx2+fma per the fn contract; all loads/stores run at
+        // j + lane < n = crow.len() = b*.len() (debug-asserted, guaranteed
+        // by the driver's row slicing).
+        unsafe {
+            let v0 = _mm256_set1_pd(a0);
+            let v1 = _mm256_set1_pd(a1);
+            let v2 = _mm256_set1_pd(a2);
+            let v3 = _mm256_set1_pd(a3);
+            let q0 = b0.as_ptr();
+            let q1 = b1.as_ptr();
+            let q2 = b2.as_ptr();
+            let q3 = b3.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut cv = _mm256_loadu_pd(cp.add(j));
+                cv = _mm256_fmadd_pd(v0, _mm256_loadu_pd(q0.add(j)), cv);
+                cv = _mm256_fmadd_pd(v1, _mm256_loadu_pd(q1.add(j)), cv);
+                cv = _mm256_fmadd_pd(v2, _mm256_loadu_pd(q2.add(j)), cv);
+                cv = _mm256_fmadd_pd(v3, _mm256_loadu_pd(q3.add(j)), cv);
+                _mm256_storeu_pd(cp.add(j), cv);
+                j += 4;
+            }
+            while j < n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// Single rank-1 row update for the p-row remainder of
+    /// [`gemm_tn_avx2`].
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rank1_row_avx2(av: f64, brow: &[f64], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: avx2+fma per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = _mm256_set1_pd(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let cv =
+                    _mm256_fmadd_pd(vv, _mm256_loadu_pd(bp.add(j)), _mm256_loadu_pd(cp.add(j)));
+                _mm256_storeu_pd(cp.add(j), cv);
+                j += 4;
+            }
+            while j < n {
+                crow[j] += av * brow[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// `C += Aᵀ·B`: 4-way unrolled rank-1 updates with vectorized
+    /// contiguous inner rows, keeping the scalar kernel's zero-skip.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_tn_avx2(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the row
+        // kernels; row slicing is bounds-checked safe code.
+        unsafe {
+            let mut p = 0;
+            while p + 4 <= p_rows {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for i in 0..m {
+                    let a0 = a[p * m + i];
+                    let a1 = a[(p + 1) * m + i];
+                    let a2 = a[(p + 2) * m + i];
+                    let a3 = a[(p + 3) * m + i];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    rank4_row_avx2(a0, a1, a2, a3, b0, b1, b2, b3, crow);
+                }
+                p += 4;
+            }
+            while p < p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_avx2(av, brow, &mut c[i * n..(i + 1) * n]);
+                }
+                p += 1;
+            }
+        }
+    }
+
+    /// Lane-parallel `row[j] ← s²·ρ(√max(sqi + sq[j] − 2·row[j], 0))`.
+    /// RBF skips the square root entirely (`ρ = e^{-d²/2}`); the Matérn
+    /// families take one vector sqrt. Lane remainders use the scalar glibc
+    /// path.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rho_row_avx2(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f64,
+        sq: &[f64],
+        row: &mut [f64],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n4 = n - n % 4;
+        // SAFETY: avx2+fma per the fn contract; loads/stores run at
+        // j + lane < n4 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = _mm256_set1_pd(sqi);
+            let vos = _mm256_set1_pd(outputscale);
+            let vm2 = _mm256_set1_pd(-2.0);
+            let vzero = _mm256_setzero_pd();
+            let vone = _mm256_set1_pd(1.0);
+            let mut j = 0;
+            while j < n4 {
+                let v = _mm256_loadu_pd(rp.add(j));
+                let base = _mm256_add_pd(vsqi, _mm256_loadu_pd(sp.add(j)));
+                let d2 = _mm256_max_pd(_mm256_fmadd_pd(vm2, v, base), vzero);
+                let rho = match fam {
+                    RhoFamily::Rbf => exp_avx2(_mm256_mul_pd(_mm256_set1_pd(-0.5), d2)),
+                    RhoFamily::Matern12 => exp_avx2(neg_avx2(_mm256_sqrt_pd(d2))),
+                    RhoFamily::Matern32 => {
+                        let aa = _mm256_sqrt_pd(_mm256_mul_pd(_mm256_set1_pd(3.0), d2));
+                        let e = exp_avx2(neg_avx2(aa));
+                        _mm256_mul_pd(_mm256_add_pd(vone, aa), e)
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm256_sqrt_pd(_mm256_mul_pd(_mm256_set1_pd(5.0), d2));
+                        let e = exp_avx2(neg_avx2(aa));
+                        let lin = _mm256_add_pd(vone, aa);
+                        let third = _mm256_set1_pd(1.0 / 3.0);
+                        let a2t = _mm256_mul_pd(_mm256_mul_pd(aa, aa), third);
+                        _mm256_mul_pd(_mm256_add_pd(lin, a2t), e)
+                    }
+                };
+                _mm256_storeu_pd(rp.add(j), _mm256_mul_pd(vos, rho));
+                j += 4;
+            }
+            for jj in n4..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = outputscale * fam.rho(d2.sqrt());
+            }
+        }
+    }
+
+    /// Lane-parallel gradient-panel contraction: one output row's
+    /// `(Σ lr·dρ, Σ lr·ρ)` partial sums, `lr = li·rv[j]·s²`.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_avx2(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n4 = n - n % 4;
+        let scale = li * outputscale;
+        // SAFETY: avx2+fma per the fn contract; all loads run at
+        // j + lane < n4 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rp = rv.as_ptr();
+            let vsqi = _mm256_set1_pd(sqi);
+            let vm2 = _mm256_set1_pd(-2.0);
+            let vzero = _mm256_setzero_pd();
+            let vone = _mm256_set1_pd(1.0);
+            let vscale = _mm256_set1_pd(scale);
+            let mut ae = _mm256_setzero_pd();
+            let mut as2 = _mm256_setzero_pd();
+            let mut j = 0;
+            while j < n4 {
+                let xx = _mm256_loadu_pd(pp.add(j));
+                let base = _mm256_add_pd(vsqi, _mm256_loadu_pd(sp.add(j)));
+                let d2 = _mm256_max_pd(_mm256_fmadd_pd(vm2, xx, base), vzero);
+                let (rho, drho) = match fam {
+                    RhoFamily::Rbf => {
+                        let e = exp_avx2(_mm256_mul_pd(_mm256_set1_pd(-0.5), d2));
+                        (e, _mm256_mul_pd(d2, e))
+                    }
+                    RhoFamily::Matern12 => {
+                        let aa = _mm256_sqrt_pd(d2);
+                        let e = exp_avx2(neg_avx2(aa));
+                        (e, _mm256_mul_pd(aa, e))
+                    }
+                    RhoFamily::Matern32 => {
+                        let aa = _mm256_sqrt_pd(_mm256_mul_pd(_mm256_set1_pd(3.0), d2));
+                        let e = exp_avx2(neg_avx2(aa));
+                        let rho = _mm256_mul_pd(_mm256_add_pd(vone, aa), e);
+                        (rho, _mm256_mul_pd(_mm256_mul_pd(aa, aa), e))
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm256_sqrt_pd(_mm256_mul_pd(_mm256_set1_pd(5.0), d2));
+                        let e = exp_avx2(neg_avx2(aa));
+                        let lin = _mm256_add_pd(vone, aa);
+                        let third = _mm256_set1_pd(1.0 / 3.0);
+                        let a2t = _mm256_mul_pd(_mm256_mul_pd(aa, aa), third);
+                        let rho = _mm256_mul_pd(_mm256_add_pd(lin, a2t), e);
+                        (rho, _mm256_mul_pd(_mm256_mul_pd(a2t, lin), e))
+                    }
+                };
+                let lr = _mm256_mul_pd(vscale, _mm256_loadu_pd(rp.add(j)));
+                ae = _mm256_fmadd_pd(lr, drho, ae);
+                as2 = _mm256_fmadd_pd(lr, rho, as2);
+                j += 4;
+            }
+            let mut d_ell = hsum_avx2(ae);
+            let mut d_s2 = hsum_avx2(as2);
+            for jj in n4..n {
+                let rr = (sqi + sq[jj] - 2.0 * pan[jj]).max(0.0).sqrt();
+                let lr = li * rv[jj] * outputscale;
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe table entries. Every body's `unsafe` discharge is the same:
+    // these fns are reachable only through AVX2_TABLE, which `table_for`
+    // exposes only after `Backend::Avx2.available()` confirmed the avx2
+    // and fma features on this CPU.
+
+    fn gemm_nn_avx2_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_nn_avx2(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_avx2_entry(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_nt_avx2(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_avx2_entry(p_rows: usize, m: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_tn_avx2(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_avx2_entry(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { dot_avx2(a, b) }
+    }
+
+    fn rho_row_avx2_entry(fam: RhoFamily, outputscale: f64, sqi: f64, sq: &[f64], row: &mut [f64]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { rho_row_avx2(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_avx2_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { grad_row_avx2(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+
+    // ------------------------------------------------------------- AVX-512
+
+    pub(super) static AVX512_TABLE: KernelTable = KernelTable {
+        backend: Backend::Avx512,
+        gemm_nn: gemm_nn_avx512_entry,
+        gemm_nt: gemm_nt_avx512_entry,
+        gemm_tn: gemm_tn_avx512_entry,
+        dot: dot_avx512_entry,
+        rho_row: rho_row_avx512_entry,
+        grad_row: grad_row_avx512_entry,
+    };
+
+    /// 8-lane variant of [`exp_avx2`] (same scheme, same ULP contract);
+    /// the underflow flush uses a zeroing merge mask instead of an AND.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    #[inline]
+    unsafe fn exp_avx512(x: __m512d) -> __m512d {
+        // SAFETY: register-only intrinsics; avx512f holds by this fn's own
+        // contract.
+        unsafe {
+            let xc = _mm512_max_pd(x, _mm512_set1_pd(-800.0));
+            let scaled = _mm512_mul_pd(xc, _mm512_set1_pd(LOG2_E));
+            let n = _mm512_roundscale_pd::<ROUND_NEAREST>(scaled);
+            let r = _mm512_fnmadd_pd(n, _mm512_set1_pd(LN_2_HI), xc);
+            let r = _mm512_fnmadd_pd(n, _mm512_set1_pd(LN_2_LO), r);
+            let mut p = _mm512_set1_pd(EXP_POLY[11]);
+            for idx in (0..11).rev() {
+                p = _mm512_fmadd_pd(p, r, _mm512_set1_pd(EXP_POLY[idx]));
+            }
+            let n64 = _mm512_cvtepi32_epi64(_mm512_cvtpd_epi32(n));
+            let bits = _mm512_slli_epi64::<52>(_mm512_add_epi64(n64, _mm512_set1_epi64(1023)));
+            let res = _mm512_mul_pd(p, _mm512_castsi512_pd(bits));
+            let keep = _mm512_cmp_pd_mask::<_CMP_GE_OQ>(x, _mm512_set1_pd(-708.0));
+            _mm512_maskz_mov_pd(keep, res)
+        }
+    }
+
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    #[inline]
+    unsafe fn neg_avx512(v: __m512d) -> __m512d {
+        // SAFETY: register-only intrinsic; avx512f per the fn contract.
+        // (`xor_pd` would need AVX512DQ; an exact 0−v negation does not.)
+        unsafe { _mm512_sub_pd(_mm512_setzero_pd(), v) }
+    }
+
+    /// 8-lane dot with zip-truncation semantics.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot_avx512(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: avx512f per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = _mm512_setzero_pd();
+            let mut acc1 = _mm512_setzero_pd();
+            let mut p = 0;
+            while p + 16 <= n {
+                let a0 = _mm512_loadu_pd(ap.add(p));
+                let b0 = _mm512_loadu_pd(bp.add(p));
+                acc0 = _mm512_fmadd_pd(a0, b0, acc0);
+                let a1 = _mm512_loadu_pd(ap.add(p + 8));
+                let b1 = _mm512_loadu_pd(bp.add(p + 8));
+                acc1 = _mm512_fmadd_pd(a1, b1, acc1);
+                p += 16;
+            }
+            if p + 8 <= n {
+                let a0 = _mm512_loadu_pd(ap.add(p));
+                let b0 = _mm512_loadu_pd(bp.add(p));
+                acc0 = _mm512_fmadd_pd(a0, b0, acc0);
+                p += 8;
+            }
+            let mut s = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+            while p < n {
+                s += *ap.add(p) * *bp.add(p);
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile, AVX-512: the whole NR=8 panel row is one zmm,
+    /// so the reduction step is one load + four broadcasts + four FMAs.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn kernel_mrxnr_avx512(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f64],
+        bpack: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: avx512f per the fn contract. Loads read a at
+        // mi·k + p < MR·k and bpack at p·NR + lane < k·NR; loads/stores on
+        // c touch rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all
+        // inside the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc0 = _mm512_setzero_pd();
+            let mut acc1 = _mm512_setzero_pd();
+            let mut acc2 = _mm512_setzero_pd();
+            let mut acc3 = _mm512_setzero_pd();
+            for p in 0..k {
+                let bv = _mm512_loadu_pd(bp.add(p * NR));
+                acc0 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(p)), bv, acc0);
+                acc1 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(k + p)), bv, acc1);
+                acc2 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(2 * k + p)), bv, acc2);
+                acc3 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(3 * k + p)), bv, acc3);
+            }
+            let cp = c.as_mut_ptr();
+            let c0 = cp.add(j);
+            _mm512_storeu_pd(c0, _mm512_add_pd(_mm512_loadu_pd(c0), acc0));
+            let c1 = cp.add(n + j);
+            _mm512_storeu_pd(c1, _mm512_add_pd(_mm512_loadu_pd(c1), acc1));
+            let c2 = cp.add(2 * n + j);
+            _mm512_storeu_pd(c2, _mm512_add_pd(_mm512_loadu_pd(c2), acc2));
+            let c3 = cp.add(3 * n + j);
+            _mm512_storeu_pd(c3, _mm512_add_pd(_mm512_loadu_pd(c3), acc3));
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_avx512`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn kernel_1xnr_avx512(j: usize, arow: &[f64], bpack: &[f64], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: avx512f per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the store hits crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc = _mm512_setzero_pd();
+            for (p, &av) in arow.iter().enumerate() {
+                let bv = _mm512_loadu_pd(bp.add(p * NR));
+                acc = _mm512_fmadd_pd(_mm512_set1_pd(av), bv, acc);
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), acc));
+        }
+    }
+
+    /// AVX-512 driver for the packed-panel `C += A·B` (same structure as
+    /// [`gemm_nn_avx2`]).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_nn_avx512(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: avx512f per the fn contract, forwarded to the tile
+        // kernels; the panel slicing matches the (bounds-checked) scalar
+        // driver exactly.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_avx512(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_avx512(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                gemm::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Four simultaneous 8-lane dots against one shared B row.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot4_avx512(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        b: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let k = b.len();
+        debug_assert!(a0.len() == k && a1.len() == k && a2.len() == k && a3.len() == k);
+        // SAFETY: avx512f per the fn contract; all loads read at
+        // p + lane < k = b.len() = a*.len() (debug-asserted, guaranteed by
+        // the driver's row slicing).
+        unsafe {
+            let p0 = a0.as_ptr();
+            let p1 = a1.as_ptr();
+            let p2 = a2.as_ptr();
+            let p3 = a3.as_ptr();
+            let bp = b.as_ptr();
+            let mut s0 = _mm512_setzero_pd();
+            let mut s1 = _mm512_setzero_pd();
+            let mut s2 = _mm512_setzero_pd();
+            let mut s3 = _mm512_setzero_pd();
+            let mut p = 0;
+            while p + 8 <= k {
+                let bv = _mm512_loadu_pd(bp.add(p));
+                s0 = _mm512_fmadd_pd(_mm512_loadu_pd(p0.add(p)), bv, s0);
+                s1 = _mm512_fmadd_pd(_mm512_loadu_pd(p1.add(p)), bv, s1);
+                s2 = _mm512_fmadd_pd(_mm512_loadu_pd(p2.add(p)), bv, s2);
+                s3 = _mm512_fmadd_pd(_mm512_loadu_pd(p3.add(p)), bv, s3);
+                p += 8;
+            }
+            let mut r0 = _mm512_reduce_add_pd(s0);
+            let mut r1 = _mm512_reduce_add_pd(s1);
+            let mut r2 = _mm512_reduce_add_pd(s2);
+            let mut r3 = _mm512_reduce_add_pd(s3);
+            while p < k {
+                let bv = *bp.add(p);
+                r0 += *p0.add(p) * bv;
+                r1 += *p1.add(p) * bv;
+                r2 += *p2.add(p) * bv;
+                r3 += *p3.add(p) * bv;
+                p += 1;
+            }
+            (r0, r1, r2, r3)
+        }
+    }
+
+    /// AVX-512 `C += A·Bᵀ` (same blocking as [`gemm_nt_avx2`]).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_nt_avx512(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: avx512f per the fn contract, forwarded to the dot
+        // kernels; row slicing is bounds-checked safe code.
+        unsafe {
+            let mut i = 0;
+            while i + 4 <= m {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for j in 0..n {
+                    let (s0, s1, s2, s3) = dot4_avx512(a0, a1, a2, a3, &b[j * k..(j + 1) * k]);
+                    c[i * n + j] += s0;
+                    c[(i + 1) * n + j] += s1;
+                    c[(i + 2) * n + j] += s2;
+                    c[(i + 3) * n + j] += s3;
+                }
+                i += 4;
+            }
+            while i < m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    c[i * n + j] += dot_avx512(arow, &b[j * k..(j + 1) * k]);
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// One 8-lane 4-way rank-1 row update of [`gemm_tn_avx512`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn rank4_row_avx512(
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[f64],
+        b1: &[f64],
+        b2: &[f64],
+        b3: &[f64],
+        crow: &mut [f64],
+    ) {
+        let n = crow.len();
+        debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+        // SAFETY: avx512f per the fn contract; all loads/stores run at
+        // j + lane < n = crow.len() = b*.len() (debug-asserted, guaranteed
+        // by the driver's row slicing).
+        unsafe {
+            let v0 = _mm512_set1_pd(a0);
+            let v1 = _mm512_set1_pd(a1);
+            let v2 = _mm512_set1_pd(a2);
+            let v3 = _mm512_set1_pd(a3);
+            let q0 = b0.as_ptr();
+            let q1 = b1.as_ptr();
+            let q2 = b2.as_ptr();
+            let q3 = b3.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut cv = _mm512_loadu_pd(cp.add(j));
+                cv = _mm512_fmadd_pd(v0, _mm512_loadu_pd(q0.add(j)), cv);
+                cv = _mm512_fmadd_pd(v1, _mm512_loadu_pd(q1.add(j)), cv);
+                cv = _mm512_fmadd_pd(v2, _mm512_loadu_pd(q2.add(j)), cv);
+                cv = _mm512_fmadd_pd(v3, _mm512_loadu_pd(q3.add(j)), cv);
+                _mm512_storeu_pd(cp.add(j), cv);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// Single 8-lane rank-1 row update for the p-row remainder.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn rank1_row_avx512(av: f64, brow: &[f64], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: avx512f per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = _mm512_set1_pd(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                let bv = _mm512_loadu_pd(bp.add(j));
+                let cv = _mm512_fmadd_pd(vv, bv, _mm512_loadu_pd(cp.add(j)));
+                _mm512_storeu_pd(cp.add(j), cv);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += av * brow[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// AVX-512 `C += Aᵀ·B` (same blocking and zero-skip as
+    /// [`gemm_tn_avx2`]).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_tn_avx512(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: avx512f per the fn contract, forwarded to the row
+        // kernels; row slicing is bounds-checked safe code.
+        unsafe {
+            let mut p = 0;
+            while p + 4 <= p_rows {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for i in 0..m {
+                    let a0 = a[p * m + i];
+                    let a1 = a[(p + 1) * m + i];
+                    let a2 = a[(p + 2) * m + i];
+                    let a3 = a[(p + 3) * m + i];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    rank4_row_avx512(a0, a1, a2, a3, b0, b1, b2, b3, crow);
+                }
+                p += 4;
+            }
+            while p < p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_avx512(av, brow, &mut c[i * n..(i + 1) * n]);
+                }
+                p += 1;
+            }
+        }
+    }
+
+    /// 8-lane variant of [`rho_row_avx2`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn rho_row_avx512(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f64,
+        sq: &[f64],
+        row: &mut [f64],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n8 = n - n % 8;
+        // SAFETY: avx512f per the fn contract; loads/stores run at
+        // j + lane < n8 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = _mm512_set1_pd(sqi);
+            let vos = _mm512_set1_pd(outputscale);
+            let vm2 = _mm512_set1_pd(-2.0);
+            let vzero = _mm512_setzero_pd();
+            let vone = _mm512_set1_pd(1.0);
+            let mut j = 0;
+            while j < n8 {
+                let v = _mm512_loadu_pd(rp.add(j));
+                let base = _mm512_add_pd(vsqi, _mm512_loadu_pd(sp.add(j)));
+                let d2 = _mm512_max_pd(_mm512_fmadd_pd(vm2, v, base), vzero);
+                let rho = match fam {
+                    RhoFamily::Rbf => exp_avx512(_mm512_mul_pd(_mm512_set1_pd(-0.5), d2)),
+                    RhoFamily::Matern12 => exp_avx512(neg_avx512(_mm512_sqrt_pd(d2))),
+                    RhoFamily::Matern32 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(3.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        _mm512_mul_pd(_mm512_add_pd(vone, aa), e)
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(5.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let lin = _mm512_add_pd(vone, aa);
+                        let third = _mm512_set1_pd(1.0 / 3.0);
+                        let a2t = _mm512_mul_pd(_mm512_mul_pd(aa, aa), third);
+                        _mm512_mul_pd(_mm512_add_pd(lin, a2t), e)
+                    }
+                };
+                _mm512_storeu_pd(rp.add(j), _mm512_mul_pd(vos, rho));
+                j += 8;
+            }
+            for jj in n8..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = outputscale * fam.rho(d2.sqrt());
+            }
+        }
+    }
+
+    /// 8-lane variant of [`grad_row_avx2`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_avx512(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n8 = n - n % 8;
+        let scale = li * outputscale;
+        // SAFETY: avx512f per the fn contract; all loads run at
+        // j + lane < n8 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rp = rv.as_ptr();
+            let vsqi = _mm512_set1_pd(sqi);
+            let vm2 = _mm512_set1_pd(-2.0);
+            let vzero = _mm512_setzero_pd();
+            let vone = _mm512_set1_pd(1.0);
+            let vscale = _mm512_set1_pd(scale);
+            let mut ae = _mm512_setzero_pd();
+            let mut as2 = _mm512_setzero_pd();
+            let mut j = 0;
+            while j < n8 {
+                let xx = _mm512_loadu_pd(pp.add(j));
+                let base = _mm512_add_pd(vsqi, _mm512_loadu_pd(sp.add(j)));
+                let d2 = _mm512_max_pd(_mm512_fmadd_pd(vm2, xx, base), vzero);
+                let (rho, drho) = match fam {
+                    RhoFamily::Rbf => {
+                        let e = exp_avx512(_mm512_mul_pd(_mm512_set1_pd(-0.5), d2));
+                        (e, _mm512_mul_pd(d2, e))
+                    }
+                    RhoFamily::Matern12 => {
+                        let aa = _mm512_sqrt_pd(d2);
+                        let e = exp_avx512(neg_avx512(aa));
+                        (e, _mm512_mul_pd(aa, e))
+                    }
+                    RhoFamily::Matern32 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(3.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let rho = _mm512_mul_pd(_mm512_add_pd(vone, aa), e);
+                        (rho, _mm512_mul_pd(_mm512_mul_pd(aa, aa), e))
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(5.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let lin = _mm512_add_pd(vone, aa);
+                        let third = _mm512_set1_pd(1.0 / 3.0);
+                        let a2t = _mm512_mul_pd(_mm512_mul_pd(aa, aa), third);
+                        let rho = _mm512_mul_pd(_mm512_add_pd(lin, a2t), e);
+                        (rho, _mm512_mul_pd(_mm512_mul_pd(a2t, lin), e))
+                    }
+                };
+                let lr = _mm512_mul_pd(vscale, _mm512_loadu_pd(rp.add(j)));
+                ae = _mm512_fmadd_pd(lr, drho, ae);
+                as2 = _mm512_fmadd_pd(lr, rho, as2);
+                j += 8;
+            }
+            let mut d_ell = _mm512_reduce_add_pd(ae);
+            let mut d_s2 = _mm512_reduce_add_pd(as2);
+            for jj in n8..n {
+                let rr = (sqi + sq[jj] - 2.0 * pan[jj]).max(0.0).sqrt();
+                let lr = li * rv[jj] * outputscale;
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe AVX-512 table entries; same discharge as the AVX2 block, with
+    // `Backend::Avx512.available()` confirming avx512f.
+
+    fn gemm_nn_avx512_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_nn_avx512(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_avx512_entry(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_nt_avx512(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_avx512_entry(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_tn_avx512(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_avx512_entry(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { dot_avx512(a, b) }
+    }
+
+    fn rho_row_avx512_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f64,
+        sq: &[f64],
+        row: &mut [f64],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { rho_row_avx512(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_avx512_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { grad_row_avx512(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON/AdvSIMD (2 × f64 lane) kernel variants — the `aarch64`
+    //! baseline, so [`super::Backend::available`] is unconditionally true
+    //! there; the `#[target_feature]`/`unsafe` structure still mirrors the
+    //! x86 module so all backends share one safety convention.
+
+    use super::{Backend, KernelTable, RhoFamily, EXP_POLY};
+    use crate::linalg::gemm::{self, MR, NR};
+    use crate::util::fastmath::{LN_2_HI, LN_2_LO, LOG2_E};
+    use core::arch::aarch64::*;
+
+    pub(super) static NEON_TABLE: KernelTable = KernelTable {
+        backend: Backend::Neon,
+        gemm_nn: gemm_nn_neon_entry,
+        gemm_nt: gemm_nt_neon_entry,
+        gemm_tn: gemm_tn_neon_entry,
+        dot: dot_neon_entry,
+        rho_row: rho_row_neon_entry,
+        grad_row: grad_row_neon_entry,
+    };
+
+    /// 2-lane variant of the vector `e^x` (same scheme and ULP contract as
+    /// the x86 versions; see the module docs).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn exp_neon(x: float64x2_t) -> float64x2_t {
+        // SAFETY: register-only intrinsics; neon holds by this fn's own
+        // contract.
+        unsafe {
+            let xc = vmaxq_f64(x, vdupq_n_f64(-800.0));
+            let n = vrndnq_f64(vmulq_f64(xc, vdupq_n_f64(LOG2_E)));
+            // r = (x − n·ln2_hi) − n·ln2_lo (vfmsq: a − b·c)
+            let r = vfmsq_f64(xc, n, vdupq_n_f64(LN_2_HI));
+            let r = vfmsq_f64(r, n, vdupq_n_f64(LN_2_LO));
+            let mut p = vdupq_n_f64(EXP_POLY[11]);
+            for idx in (0..11).rev() {
+                p = vfmaq_f64(vdupq_n_f64(EXP_POLY[idx]), p, r);
+            }
+            // n is integral, so the toward-zero convert is exact
+            let n64 = vcvtq_s64_f64(n);
+            let bits = vshlq_n_s64::<52>(vaddq_s64(n64, vdupq_n_s64(1023)));
+            let res = vmulq_f64(p, vreinterpretq_f64_s64(bits));
+            let keep = vcgeq_f64(x, vdupq_n_f64(-708.0));
+            vreinterpretq_f64_u64(vandq_u64(vreinterpretq_u64_f64(res), keep))
+        }
+    }
+
+    /// 2-lane dot with zip-truncation semantics.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: neon per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = vdupq_n_f64(0.0);
+            let mut acc1 = vdupq_n_f64(0.0);
+            let mut p = 0;
+            while p + 4 <= n {
+                acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(p)), vld1q_f64(bp.add(p)));
+                acc1 = vfmaq_f64(acc1, vld1q_f64(ap.add(p + 2)), vld1q_f64(bp.add(p + 2)));
+                p += 4;
+            }
+            if p + 2 <= n {
+                acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(p)), vld1q_f64(bp.add(p)));
+                p += 2;
+            }
+            let mut s = vaddvq_f64(vaddq_f64(acc0, acc1));
+            while p < n {
+                s += *ap.add(p) * *bp.add(p);
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile (MR·NR/2 = 16 q-register accumulators).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn kernel_mrxnr_neon(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f64],
+        bpack: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: neon per the fn contract. Loads read a at mi·k + p <
+        // MR·k and bpack at p·NR + lane < k·NR; loads/stores on c touch
+        // rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all inside
+        // the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+            for p in 0..k {
+                let bv = [
+                    vld1q_f64(bp.add(p * NR)),
+                    vld1q_f64(bp.add(p * NR + 2)),
+                    vld1q_f64(bp.add(p * NR + 4)),
+                    vld1q_f64(bp.add(p * NR + 6)),
+                ];
+                for (mi, arow) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f64(*ap.add(mi * k + p));
+                    for (t, slot) in arow.iter_mut().enumerate() {
+                        *slot = vfmaq_f64(*slot, av, bv[t]);
+                    }
+                }
+            }
+            let cp = c.as_mut_ptr();
+            for (mi, arow) in acc.iter().enumerate() {
+                let cr = cp.add(mi * n + j);
+                for (t, slot) in arow.iter().enumerate() {
+                    let cv = vaddq_f64(vld1q_f64(cr.add(2 * t)), *slot);
+                    vst1q_f64(cr.add(2 * t), cv);
+                }
+            }
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_neon`].
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn kernel_1xnr_neon(j: usize, arow: &[f64], bpack: &[f64], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: neon per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the stores hit crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc = [vdupq_n_f64(0.0); 4];
+            for (p, &av) in arow.iter().enumerate() {
+                let avv = vdupq_n_f64(av);
+                for (t, slot) in acc.iter_mut().enumerate() {
+                    *slot = vfmaq_f64(*slot, avv, vld1q_f64(bp.add(p * NR + 2 * t)));
+                }
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            for (t, slot) in acc.iter().enumerate() {
+                let cv = vaddq_f64(vld1q_f64(cp.add(2 * t)), *slot);
+                vst1q_f64(cp.add(2 * t), cv);
+            }
+        }
+    }
+
+    /// NEON driver for the packed-panel `C += A·B` (same structure as the
+    /// scalar and x86 drivers).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_nn_neon(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: neon per the fn contract, forwarded to the tile kernels;
+        // the panel slicing matches the (bounds-checked) scalar driver.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_neon(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_neon(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                gemm::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Four simultaneous 2-lane dots against one shared B row.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot4_neon(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        b: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let k = b.len();
+        debug_assert!(a0.len() == k && a1.len() == k && a2.len() == k && a3.len() == k);
+        // SAFETY: neon per the fn contract; all loads read at
+        // p + lane < k = b.len() = a*.len() (debug-asserted).
+        unsafe {
+            let p0 = a0.as_ptr();
+            let p1 = a1.as_ptr();
+            let p2 = a2.as_ptr();
+            let p3 = a3.as_ptr();
+            let bp = b.as_ptr();
+            let mut s0 = vdupq_n_f64(0.0);
+            let mut s1 = vdupq_n_f64(0.0);
+            let mut s2 = vdupq_n_f64(0.0);
+            let mut s3 = vdupq_n_f64(0.0);
+            let mut p = 0;
+            while p + 2 <= k {
+                let bv = vld1q_f64(bp.add(p));
+                s0 = vfmaq_f64(s0, vld1q_f64(p0.add(p)), bv);
+                s1 = vfmaq_f64(s1, vld1q_f64(p1.add(p)), bv);
+                s2 = vfmaq_f64(s2, vld1q_f64(p2.add(p)), bv);
+                s3 = vfmaq_f64(s3, vld1q_f64(p3.add(p)), bv);
+                p += 2;
+            }
+            let mut r0 = vaddvq_f64(s0);
+            let mut r1 = vaddvq_f64(s1);
+            let mut r2 = vaddvq_f64(s2);
+            let mut r3 = vaddvq_f64(s3);
+            while p < k {
+                let bv = *bp.add(p);
+                r0 += *p0.add(p) * bv;
+                r1 += *p1.add(p) * bv;
+                r2 += *p2.add(p) * bv;
+                r3 += *p3.add(p) * bv;
+                p += 1;
+            }
+            (r0, r1, r2, r3)
+        }
+    }
+
+    /// NEON `C += A·Bᵀ` (same blocking as the x86 variants).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_nt_neon(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: neon per the fn contract, forwarded to the dot kernels;
+        // row slicing is bounds-checked safe code.
+        unsafe {
+            let mut i = 0;
+            while i + 4 <= m {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for j in 0..n {
+                    let (s0, s1, s2, s3) = dot4_neon(a0, a1, a2, a3, &b[j * k..(j + 1) * k]);
+                    c[i * n + j] += s0;
+                    c[(i + 1) * n + j] += s1;
+                    c[(i + 2) * n + j] += s2;
+                    c[(i + 3) * n + j] += s3;
+                }
+                i += 4;
+            }
+            while i < m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    c[i * n + j] += dot_neon(arow, &b[j * k..(j + 1) * k]);
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// One 2-lane 4-way rank-1 row update of [`gemm_tn_neon`].
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn rank4_row_neon(
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[f64],
+        b1: &[f64],
+        b2: &[f64],
+        b3: &[f64],
+        crow: &mut [f64],
+    ) {
+        let n = crow.len();
+        debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+        // SAFETY: neon per the fn contract; all loads/stores run at
+        // j + lane < n = crow.len() = b*.len() (debug-asserted).
+        unsafe {
+            let v0 = vdupq_n_f64(a0);
+            let v1 = vdupq_n_f64(a1);
+            let v2 = vdupq_n_f64(a2);
+            let v3 = vdupq_n_f64(a3);
+            let q0 = b0.as_ptr();
+            let q1 = b1.as_ptr();
+            let q2 = b2.as_ptr();
+            let q3 = b3.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 2 <= n {
+                let mut cv = vld1q_f64(cp.add(j));
+                cv = vfmaq_f64(cv, v0, vld1q_f64(q0.add(j)));
+                cv = vfmaq_f64(cv, v1, vld1q_f64(q1.add(j)));
+                cv = vfmaq_f64(cv, v2, vld1q_f64(q2.add(j)));
+                cv = vfmaq_f64(cv, v3, vld1q_f64(q3.add(j)));
+                vst1q_f64(cp.add(j), cv);
+                j += 2;
+            }
+            while j < n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// Single 2-lane rank-1 row update for the p-row remainder.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn rank1_row_neon(av: f64, brow: &[f64], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: neon per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = vdupq_n_f64(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 2 <= n {
+                let cv = vfmaq_f64(vld1q_f64(cp.add(j)), vv, vld1q_f64(bp.add(j)));
+                vst1q_f64(cp.add(j), cv);
+                j += 2;
+            }
+            while j < n {
+                crow[j] += av * brow[j];
+                j += 1;
+            }
+        }
+    }
+
+    /// NEON `C += Aᵀ·B` (same blocking and zero-skip as the x86 variants).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_tn_neon(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: neon per the fn contract, forwarded to the row kernels;
+        // row slicing is bounds-checked safe code.
+        unsafe {
+            let mut p = 0;
+            while p + 4 <= p_rows {
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for i in 0..m {
+                    let a0 = a[p * m + i];
+                    let a1 = a[(p + 1) * m + i];
+                    let a2 = a[(p + 2) * m + i];
+                    let a3 = a[(p + 3) * m + i];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    rank4_row_neon(a0, a1, a2, a3, b0, b1, b2, b3, crow);
+                }
+                p += 4;
+            }
+            while p < p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_neon(av, brow, &mut c[i * n..(i + 1) * n]);
+                }
+                p += 1;
+            }
+        }
+    }
+
+    /// 2-lane variant of the rho panel evaluator.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn rho_row_neon(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f64,
+        sq: &[f64],
+        row: &mut [f64],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n2 = n - n % 2;
+        // SAFETY: neon per the fn contract; loads/stores run at
+        // j + lane < n2 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = vdupq_n_f64(sqi);
+            let vos = vdupq_n_f64(outputscale);
+            let vm2 = vdupq_n_f64(-2.0);
+            let vzero = vdupq_n_f64(0.0);
+            let vone = vdupq_n_f64(1.0);
+            let mut j = 0;
+            while j < n2 {
+                let v = vld1q_f64(rp.add(j));
+                let base = vaddq_f64(vsqi, vld1q_f64(sp.add(j)));
+                let d2 = vmaxq_f64(vfmaq_f64(base, vm2, v), vzero);
+                let rho = match fam {
+                    RhoFamily::Rbf => exp_neon(vmulq_f64(vdupq_n_f64(-0.5), d2)),
+                    RhoFamily::Matern12 => exp_neon(vnegq_f64(vsqrtq_f64(d2))),
+                    RhoFamily::Matern32 => {
+                        let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(3.0), d2));
+                        let e = exp_neon(vnegq_f64(aa));
+                        vmulq_f64(vaddq_f64(vone, aa), e)
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(5.0), d2));
+                        let e = exp_neon(vnegq_f64(aa));
+                        let lin = vaddq_f64(vone, aa);
+                        let third = vdupq_n_f64(1.0 / 3.0);
+                        let a2t = vmulq_f64(vmulq_f64(aa, aa), third);
+                        vmulq_f64(vaddq_f64(lin, a2t), e)
+                    }
+                };
+                vst1q_f64(rp.add(j), vmulq_f64(vos, rho));
+                j += 2;
+            }
+            for jj in n2..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = outputscale * fam.rho(d2.sqrt());
+            }
+        }
+    }
+
+    /// 2-lane variant of the gradient-panel contraction.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_neon(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n2 = n - n % 2;
+        let scale = li * outputscale;
+        // SAFETY: neon per the fn contract; all loads run at
+        // j + lane < n2 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rp = rv.as_ptr();
+            let vsqi = vdupq_n_f64(sqi);
+            let vm2 = vdupq_n_f64(-2.0);
+            let vzero = vdupq_n_f64(0.0);
+            let vone = vdupq_n_f64(1.0);
+            let vscale = vdupq_n_f64(scale);
+            let mut ae = vdupq_n_f64(0.0);
+            let mut as2 = vdupq_n_f64(0.0);
+            let mut j = 0;
+            while j < n2 {
+                let xx = vld1q_f64(pp.add(j));
+                let base = vaddq_f64(vsqi, vld1q_f64(sp.add(j)));
+                let d2 = vmaxq_f64(vfmaq_f64(base, vm2, xx), vzero);
+                let (rho, drho) = match fam {
+                    RhoFamily::Rbf => {
+                        let e = exp_neon(vmulq_f64(vdupq_n_f64(-0.5), d2));
+                        (e, vmulq_f64(d2, e))
+                    }
+                    RhoFamily::Matern12 => {
+                        let aa = vsqrtq_f64(d2);
+                        let e = exp_neon(vnegq_f64(aa));
+                        (e, vmulq_f64(aa, e))
+                    }
+                    RhoFamily::Matern32 => {
+                        let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(3.0), d2));
+                        let e = exp_neon(vnegq_f64(aa));
+                        let rho = vmulq_f64(vaddq_f64(vone, aa), e);
+                        (rho, vmulq_f64(vmulq_f64(aa, aa), e))
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(5.0), d2));
+                        let e = exp_neon(vnegq_f64(aa));
+                        let lin = vaddq_f64(vone, aa);
+                        let third = vdupq_n_f64(1.0 / 3.0);
+                        let a2t = vmulq_f64(vmulq_f64(aa, aa), third);
+                        let rho = vmulq_f64(vaddq_f64(lin, a2t), e);
+                        (rho, vmulq_f64(vmulq_f64(a2t, lin), e))
+                    }
+                };
+                let lr = vmulq_f64(vscale, vld1q_f64(rp.add(j)));
+                ae = vfmaq_f64(ae, lr, drho);
+                as2 = vfmaq_f64(as2, lr, rho);
+                j += 2;
+            }
+            let mut d_ell = vaddvq_f64(ae);
+            let mut d_s2 = vaddvq_f64(as2);
+            for jj in n2..n {
+                let rr = (sqi + sq[jj] - 2.0 * pan[jj]).max(0.0).sqrt();
+                let lr = li * rv[jj] * outputscale;
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe NEON table entries; the discharge matches the x86 blocks —
+    // `table_for` only exposes NEON_TABLE when `Backend::Neon.available()`
+    // holds (always, on aarch64).
+
+    fn gemm_nn_neon_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        pack: &mut [f64],
+    ) {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { gemm_nn_neon(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_neon_entry(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { gemm_nt_neon(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_neon_entry(p_rows: usize, m: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { gemm_tn_neon(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_neon_entry(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { dot_neon(a, b) }
+    }
+
+    fn rho_row_neon_entry(fam: RhoFamily, outputscale: f64, sqi: f64, sq: &[f64], row: &mut [f64]) {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { rho_row_neon(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_neon_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f64,
+        sq: &[f64],
+        pan: &[f64],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: neon verified by `table_for` (see entry-block note).
+        unsafe { grad_row_neon(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{self, NR};
+
+    /// Deterministic LCG in [-1, 1] — the tests may not depend on wall
+    /// clock or OS randomness.
+    fn lcg(state: &mut u64) -> f64 {
+        *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((*state >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0
+    }
+
+    fn fill(state: &mut u64, buf: &mut [f64]) {
+        for v in buf.iter_mut() {
+            *v = lcg(state);
+        }
+    }
+
+    /// Hybrid absolute+relative comparison (exp-dominated values span many
+    /// orders of magnitude).
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    /// Every backend with a kernel table on this machine (empty on CPUs
+    /// with no SIMD backend — the tests then trivially pass, and the
+    /// forced-scalar CI lane covers the fallback path).
+    fn tables() -> Vec<&'static KernelTable> {
+        Backend::all().iter().filter_map(|&b| table_for(b)).collect()
+    }
+
+    /// GEMM shapes exercising full tiles plus every remainder class: row
+    /// tails `m % MR`, packed-panel column tails `n % NR` (1..=7), and
+    /// small dims 1..=15.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (3, 5, 7),
+        (4, 8, 8),
+        (4, 8, 16),
+        (5, 9, 17),
+        (6, 1, 13),
+        (7, 13, 15),
+        (8, 16, 24),
+        (9, 4, 11),
+        (12, 33, 9),
+        (13, 2, 31),
+        (16, 15, 14),
+    ];
+
+    const FAMILIES: [RhoFamily; 4] = [
+        RhoFamily::Rbf,
+        RhoFamily::Matern12,
+        RhoFamily::Matern32,
+        RhoFamily::Matern52,
+    ];
+
+    #[test]
+    fn choose_parses_specs() {
+        assert_eq!(choose(""), best_available());
+        assert_eq!(choose("auto"), best_available());
+        assert_eq!(choose(" AUTO "), best_available());
+        assert_eq!(choose("scalar"), Backend::Scalar);
+        assert_eq!(choose("Scalar"), Backend::Scalar);
+        assert_eq!(choose("definitely-not-an-isa"), best_available());
+        for b in [Backend::Avx2, Backend::Avx512, Backend::Neon] {
+            let got = choose(b.name());
+            if b.available() {
+                assert_eq!(got, b);
+            } else {
+                assert_eq!(got, best_available());
+            }
+        }
+    }
+
+    #[test]
+    fn table_for_respects_availability() {
+        assert!(table_for(Backend::Scalar).is_none());
+        for &b in Backend::all().iter() {
+            match table_for(b) {
+                Some(t) => {
+                    assert!(b.available());
+                    assert_eq!(t.backend, b);
+                }
+                None => assert!(b == Backend::Scalar || !b.available()),
+            }
+        }
+        assert!(best_available() == Backend::Scalar || table_for(best_available()).is_some());
+    }
+
+    /// The `pool_spawned_threads`-style proof: dispatch resolution runs at
+    /// most once per process no matter how many threads race on `table()`.
+    /// Also the `set_backend` round trip — one test owns the global
+    /// override so parallel test threads can't interleave on it.
+    #[test]
+    fn dispatch_resolution_runs_once_and_override_round_trips() {
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            handles.push(std::thread::spawn(|| {
+                for _ in 0..200 {
+                    let t = table();
+                    if let Some(t) = t {
+                        assert!(t.backend.available());
+                    }
+                    let _ = backend();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(resolutions(), 1, "resolution must run exactly once");
+
+        let resolved = backend();
+        set_backend(Backend::Scalar).unwrap();
+        assert_eq!(backend(), Backend::Scalar);
+        assert!(table().is_none());
+        let best = best_available();
+        set_backend(best).unwrap();
+        assert_eq!(backend(), best);
+        clear_backend_override();
+        assert_eq!(backend(), resolved);
+        for &b in Backend::all().iter() {
+            if !b.available() {
+                assert!(set_backend(b).is_err());
+                assert_eq!(backend(), resolved, "failed set_backend must not stick");
+            }
+        }
+        assert_eq!(resolutions(), 1, "overrides must not re-run resolution");
+    }
+
+    #[test]
+    fn gemm_nn_matches_scalar_on_every_backend() {
+        let mut st = 0x1234_5678_9abc_def0u64;
+        for t in tables() {
+            for &(m, k, n) in SHAPES {
+                // +1 so the kernels run on unaligned slice starts
+                let mut abuf = vec![0.0; m * k + 1];
+                let mut bbuf = vec![0.0; k * n + 1];
+                fill(&mut st, &mut abuf);
+                fill(&mut st, &mut bbuf);
+                let (a, b) = (&abuf[1..], &bbuf[1..]);
+                let mut c_s = vec![0.25; m * n];
+                let mut c_v = c_s.clone();
+                let mut pack_s = vec![0.0; k * NR];
+                let mut pack_v = vec![0.0; k * NR];
+                gemm::gemm_nn_scalar(m, k, n, a, b, &mut c_s, &mut pack_s);
+                (t.gemm_nn)(m, k, n, a, b, &mut c_v, &mut pack_v);
+                for (x, y) in c_v.iter().zip(&c_s) {
+                    assert!(
+                        approx(*x, *y, 1e-12),
+                        "gemm_nn {} ({m},{k},{n}): {x} vs {y}",
+                        t.backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_scalar_on_every_backend() {
+        let mut st = 0x0dd0_1234_0000_0001u64;
+        for t in tables() {
+            for &(m, k, n) in SHAPES {
+                let mut abuf = vec![0.0; m * k + 1];
+                let mut bbuf = vec![0.0; n * k + 1];
+                fill(&mut st, &mut abuf);
+                fill(&mut st, &mut bbuf);
+                let (a, b) = (&abuf[1..], &bbuf[1..]);
+                let mut c_s = vec![-0.5; m * n];
+                let mut c_v = c_s.clone();
+                gemm::gemm_nt_scalar(m, k, n, a, b, &mut c_s);
+                (t.gemm_nt)(m, k, n, a, b, &mut c_v);
+                for (x, y) in c_v.iter().zip(&c_s) {
+                    assert!(
+                        approx(*x, *y, 1e-12),
+                        "gemm_nt {} ({m},{k},{n}): {x} vs {y}",
+                        t.backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_scalar_on_every_backend() {
+        let mut st = 0xbeef_0000_1111_2222u64;
+        for t in tables() {
+            for &(p_rows, m, n) in SHAPES {
+                let mut abuf = vec![0.0; p_rows * m + 1];
+                let mut bbuf = vec![0.0; p_rows * n + 1];
+                fill(&mut st, &mut abuf);
+                fill(&mut st, &mut bbuf);
+                let mut a = abuf[1..].to_vec();
+                // exercise the zero-skip branch too
+                if !a.is_empty() {
+                    a[0] = 0.0;
+                    let last = a.len() - 1;
+                    a[last] = 0.0;
+                }
+                let b = &bbuf[1..];
+                let mut c_s = vec![1.5; m * n];
+                let mut c_v = c_s.clone();
+                gemm::gemm_tn_scalar(p_rows, m, n, &a, b, &mut c_s);
+                (t.gemm_tn)(p_rows, m, n, &a, b, &mut c_v);
+                for (x, y) in c_v.iter().zip(&c_s) {
+                    assert!(
+                        approx(*x, *y, 1e-12),
+                        "gemm_tn {} ({p_rows},{m},{n}): {x} vs {y}",
+                        t.backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_on_every_backend() {
+        let mut st = 0x5151_5151_5151_5151u64;
+        for t in tables() {
+            for len in 0..=33usize {
+                let mut abuf = vec![0.0; len + 1];
+                let mut bbuf = vec![0.0; len + 1];
+                fill(&mut st, &mut abuf);
+                fill(&mut st, &mut bbuf);
+                let (a, b) = (&abuf[1..], &bbuf[1..]);
+                let want = gemm::dot_scalar(a, b);
+                let got = (t.dot)(a, b);
+                assert!(approx(got, want, 1e-13), "dot {} len {len}", t.backend.name());
+            }
+            // zip-truncation semantics: unequal lengths use the shorter
+            let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+            let b = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+            assert_eq!((t.dot)(&a, &b), gemm::dot_scalar(&a, &b));
+            assert_eq!((t.dot)(&b, &a), gemm::dot_scalar(&b, &a));
+        }
+    }
+
+    #[test]
+    fn rho_row_matches_scalar_on_every_backend() {
+        let mut st = 0x0707_0707_0707_0707u64;
+        for t in tables() {
+            for fam in FAMILIES {
+                for n in (1..=15).chain([64, 67]) {
+                    for &sqi in &[0.0, 1.3, 37.0] {
+                        let mut sq = vec![0.0; n];
+                        let mut row = vec![0.0; n];
+                        for j in 0..n {
+                            // d² = sqi + sq[j] − 2·row[j] sometimes clamps
+                            // at 0 (row > (sqi+sq)/2) and sometimes runs
+                            // far into the exp tail (sq up to ~400)
+                            sq[j] = (lcg(&mut st) + 1.0) * 200.0;
+                            row[j] = lcg(&mut st) * (0.6 * (sqi + sq[j]));
+                        }
+                        let mut row_s = row.clone();
+                        rho_row_scalar(fam, 1.7, sqi, &sq, &mut row_s);
+                        (t.rho_row)(fam, 1.7, sqi, &sq, &mut row);
+                        for (x, y) in row.iter().zip(&row_s) {
+                            assert!(
+                                approx(*x, *y, 1e-11),
+                                "rho_row {} {fam:?} n={n}: {x} vs {y}",
+                                t.backend.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_row_matches_scalar_on_every_backend() {
+        let mut st = 0xfeed_0000_0000_0001u64;
+        for t in tables() {
+            for fam in FAMILIES {
+                for n in (1..=15).chain([64, 67]) {
+                    let sqi = 2.5;
+                    let li = -0.8;
+                    let mut sq = vec![0.0; n];
+                    let mut pan = vec![0.0; n];
+                    let mut rv = vec![0.0; n];
+                    for j in 0..n {
+                        sq[j] = (lcg(&mut st) + 1.0) * 30.0;
+                        pan[j] = lcg(&mut st) * (0.6 * (sqi + sq[j]));
+                        rv[j] = lcg(&mut st);
+                    }
+                    let (we, ws) = grad_row_scalar(fam, 1.3, li, sqi, &sq, &pan, &rv);
+                    let (ge, gs) = (t.grad_row)(fam, 1.3, li, sqi, &sq, &pan, &rv);
+                    assert!(
+                        approx(ge, we, 1e-10) && approx(gs, ws, 1e-10),
+                        "grad_row {} {fam:?} n={n}: ({ge},{gs}) vs ({we},{ws})",
+                        t.backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The documented `exp` contract: ≤ ~4 ULP vs glibc over `[-708, 0]`
+    /// (tested at 1e-13 relative) and flush-to-zero below -708. Driven
+    /// through the RBF `rho_row` with `row = 0`, `sqi = 0`, `s² = 1`, which
+    /// evaluates exactly `exp(-0.5·sq[j])` lane-parallel.
+    #[test]
+    fn vector_exp_matches_glibc_within_contract() {
+        for t in tables() {
+            let mut d2s = Vec::new();
+            let mut x = 0.0f64;
+            while x <= 1416.0 {
+                d2s.push(x);
+                x += 0.37;
+            }
+            d2s.push(1416.0); // exp(-708) itself must survive, not flush
+            // pad to a lane multiple so no element takes the scalar tail
+            while d2s.len() % 8 != 0 {
+                d2s.push(1416.0);
+            }
+            let mut row = vec![0.0; d2s.len()];
+            (t.rho_row)(RhoFamily::Rbf, 1.0, 0.0, &d2s, &mut row);
+            for (j, &d2) in d2s.iter().enumerate() {
+                let expect = (-0.5 * d2).exp();
+                let rel = ((row[j] - expect) / expect).abs();
+                assert!(
+                    rel <= 1e-13,
+                    "{} exp({}) rel err {rel:e}",
+                    t.backend.name(),
+                    -0.5 * d2
+                );
+            }
+            let deep = [1420.0, 1500.0, 2000.0, 1.0e6, 2.0e9, 1.0e300, 4.0e300, 8.0e300];
+            let mut row = vec![0.0; deep.len()];
+            (t.rho_row)(RhoFamily::Rbf, 1.0, 0.0, &deep, &mut row);
+            assert!(
+                row.iter().all(|&v| v == 0.0),
+                "{}: below-cutoff inputs must flush to zero, got {row:?}",
+                t.backend.name()
+            );
+        }
+    }
+}

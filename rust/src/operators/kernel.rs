@@ -9,7 +9,9 @@
 //! 1. the squared-distance tile `d²_ij = ‖x_i‖² + ‖x_j‖² − 2·x_i·x_jᵀ`
 //!    materializes as one Gram panel via the register-blocked
 //!    [`gemm::gemm_nt`] micro-kernel,
-//! 2. `ρ` (or `dρ`) is applied over the contiguous panel in place,
+//! 2. `ρ` (or `dρ`) is applied over the contiguous panel in place —
+//!    lane-parallel through [`crate::linalg::simd`]'s vector `exp` when a
+//!    SIMD backend is active, per-entry glibc `exp` otherwise,
 //! 3. the panel contracts against the right-hand-side block with a second
 //!    small GEMM ([`gemm::gemm_nn`]).
 //!
@@ -19,6 +21,7 @@
 //! panel pipeline's property tests.
 
 use super::LinearOp;
+use crate::linalg::simd::{self, RhoFamily};
 use crate::linalg::{gemm, Matrix, SolveWorkspace};
 use crate::util::threadpool::{num_threads, parallel_fill_scoped, parallel_fill_threads, parallel_map_threads};
 use std::cell::RefCell;
@@ -46,50 +49,40 @@ pub enum KernelType {
 }
 
 impl KernelType {
-    /// Correlation as a function of the scaled distance `r ≥ 0`.
+    /// The SIMD-facing correlation family this kernel evaluates —
+    /// [`RhoFamily`] owns the `ρ`/`dρ` formulas (scalar *and* vector) so the
+    /// panel pipeline, the lane remainders, and these scalar accessors all
+    /// share one implementation.
+    #[inline]
+    pub fn family(&self) -> RhoFamily {
+        match self {
+            KernelType::Rbf => RhoFamily::Rbf,
+            KernelType::Matern12 => RhoFamily::Matern12,
+            KernelType::Matern32 => RhoFamily::Matern32,
+            KernelType::Matern52 => RhoFamily::Matern52,
+        }
+    }
+
+    /// Correlation as a function of the scaled distance `r ≥ 0` (glibc
+    /// `exp` path).
     ///
-    /// The MVM hot loop is exp-bound. We benchmarked a bit-twiddled
+    /// The MVM hot loop is exp-bound. We benchmarked a bit-twiddled scalar
     /// [`crate::util::fastmath::fast_exp`] here and *reverted* it: this
     /// glibc's `exp` runs at ~6 ns/call and the approximation was 0.9–1.0×
-    /// (see EXPERIMENTS.md §Perf, iteration 2).
+    /// (see EXPERIMENTS.md §Perf, iteration 2). The *vector* `exp` inside
+    /// [`crate::linalg::simd`] is different economics — it amortizes the
+    /// range reduction over 4–8 lanes — and is what the panel pipeline uses
+    /// when a SIMD backend is active.
     #[inline]
     pub fn rho(&self, r: f64) -> f64 {
-        match self {
-            KernelType::Rbf => (-0.5 * r * r).exp(),
-            KernelType::Matern12 => (-r).exp(),
-            KernelType::Matern32 => {
-                let a = 3f64.sqrt() * r;
-                (1.0 + a) * (-a).exp()
-            }
-            KernelType::Matern52 => {
-                let a = 5f64.sqrt() * r;
-                (1.0 + a + a * a / 3.0) * (-a).exp()
-            }
-        }
+        self.family().rho(r)
     }
 
     /// `d ρ / d log ℓ` as a function of scaled distance `r` (note
     /// `dr/d log ℓ = −r`), used for hyperparameter gradients.
     #[inline]
     pub fn drho_dlog_ell(&self, r: f64) -> f64 {
-        match self {
-            KernelType::Rbf => r * r * (-0.5 * r * r).exp(),
-            KernelType::Matern12 => r * (-r).exp(),
-            KernelType::Matern32 => {
-                let s = 3f64.sqrt();
-                s * r * s * r * (-s * r).exp()
-            }
-            KernelType::Matern52 => {
-                let s = 5f64.sqrt();
-                let a = s * r;
-                // dρ/dr = -(a/3)(1+a) e^{-a} · s ... computed analytically:
-                // ρ(r) = (1+a+a²/3)e^{-a}, dρ/da = (1/3)a(1+a)·(-e^{-a}) + ...
-                // dρ/da = -(a + a²)/3 · e^{-a} ... derive: d/da[(1+a+a²/3)e^{-a}]
-                //       = (1+2a/3)e^{-a} - (1+a+a²/3)e^{-a} = -(a/3)(1+a)e^{-a}
-                // dρ/dlogℓ = dρ/da · da/dlogℓ = -(a/3)(1+a)e^{-a} · (-a)
-                a * a / 3.0 * (1.0 + a) * (-a).exp()
-            }
-        }
+        self.family().drho_dlog_ell(r)
     }
 }
 
@@ -174,6 +167,10 @@ impl KernelOp {
         let d = self.xs.cols();
         let xs = self.xs.as_slice();
         let nthreads = self.threads.unwrap_or_else(num_threads);
+        // resolve SIMD dispatch once per matmat, outside the parallel
+        // closure (a `&'static` table is freely shared across workers)
+        let tbl = simd::table();
+        let fam = self.kind.family();
         // one block = `tile` output rows; blocks are written disjointly
         parallel_fill_threads(flat, tile * r, nthreads, |start_flat, block| {
             let i0 = start_flat / r;
@@ -195,9 +192,14 @@ impl KernelOp {
                         let i = i0 + bi;
                         let sqi = self.sq[i];
                         let prow = &mut pan[bi * jw..(bi + 1) * jw];
-                        for (jj, v) in prow.iter_mut().enumerate() {
-                            let d2 = (sqi + self.sq[jt + jj] - 2.0 * *v).max(0.0);
-                            *v = self.outputscale * self.kind.rho(d2.sqrt());
+                        if let Some(t) = tbl {
+                            // lane-parallel ρ over the contiguous panel row
+                            (t.rho_row)(fam, self.outputscale, sqi, &self.sq[jt..j1], prow);
+                        } else {
+                            for (jj, v) in prow.iter_mut().enumerate() {
+                                let d2 = (sqi + self.sq[jt + jj] - 2.0 * *v).max(0.0);
+                                *v = self.outputscale * self.kind.rho(d2.sqrt());
+                            }
                         }
                         if i >= jt && i < j1 {
                             prow[i - jt] += self.noise;
@@ -245,6 +247,8 @@ impl KernelOp {
         let xs = self.xs.as_slice();
         let ntiles = n.div_ceil(tile);
         let nthreads = self.threads.unwrap_or_else(num_threads);
+        let tbl = simd::table();
+        let fam = self.kind.family();
         let partials: Vec<(f64, f64)> = parallel_map_threads(ntiles, nthreads, |ti| {
             let it0 = ti * tile;
             let it1 = (it0 + tile).min(n);
@@ -266,12 +270,27 @@ impl KernelOp {
                     }
                     let sqi = self.sq[i];
                     let prow = &pan[bi * jw..(bi + 1) * jw];
-                    for (jj, &xx) in prow.iter().enumerate() {
-                        let j = jt + jj;
-                        let rr = (sqi + self.sq[j] - 2.0 * xx).max(0.0).sqrt();
-                        let lr = li * r[j] * self.outputscale;
-                        d_ell += lr * self.kind.drho_dlog_ell(rr);
-                        d_s2 += lr * self.kind.rho(rr);
+                    if let Some(t) = tbl {
+                        // lane-parallel dρ/ρ contraction over the panel row
+                        let (de, ds) = (t.grad_row)(
+                            fam,
+                            self.outputscale,
+                            li,
+                            sqi,
+                            &self.sq[jt..j1],
+                            prow,
+                            &r[jt..j1],
+                        );
+                        d_ell += de;
+                        d_s2 += ds;
+                    } else {
+                        for (jj, &xx) in prow.iter().enumerate() {
+                            let j = jt + jj;
+                            let rr = (sqi + self.sq[j] - 2.0 * xx).max(0.0).sqrt();
+                            let lr = li * r[j] * self.outputscale;
+                            d_ell += lr * self.kind.drho_dlog_ell(rr);
+                            d_s2 += lr * self.kind.rho(rr);
+                        }
                     }
                 }
             }

@@ -8,9 +8,12 @@
 //! polynomial on `f ∈ [-0.5, 0.5]`: max relative error < 1e-8 over the
 //! range kernels use (`x ≤ 0`), at ~3–4× the throughput of libm.
 
-const LOG2_E: f64 = std::f64::consts::LOG2_E;
-const LN_2_HI: f64 = 6.931_471_803_691_238e-1;
-const LN_2_LO: f64 = 1.908_214_929_270_587_7e-10;
+// Shared with the lane-parallel SIMD exp in `linalg::simd`, which uses the
+// same `2^n · 2^f` scheme and hi/lo ln2 split (at degree 11, for the solver's
+// tighter tolerance) — one set of range-reduction constants for both paths.
+pub(crate) const LOG2_E: f64 = std::f64::consts::LOG2_E;
+pub(crate) const LN_2_HI: f64 = 6.931_471_803_691_238e-1;
+pub(crate) const LN_2_LO: f64 = 1.908_214_929_270_587_7e-10;
 
 /// Fast `e^x` (<1e-8 relative error for |x| ≤ 700; clamps to 0/inf outside).
 #[inline(always)]

@@ -9,15 +9,21 @@
 //! allocations observed" really means "no allocations anywhere in the
 //! solve"). The env var is read once per process, so all tests in this
 //! binary run serial — which is exactly what an allocation census wants.
+//!
+//! The headline proofs run under **both** the forced-scalar kernels and the
+//! best detected SIMD backend ([`with_backends`]): the dispatch layer's
+//! promise is a resolved function-pointer table, so flipping backends must
+//! not reintroduce per-call heap traffic anywhere in the solve stack.
 
 use ciq::ciq::dense_sqrt::{newton_schulz_stack_in, DenseFactorStack, DenseSqrtOptions};
 use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, SolveKind, SolverPolicy};
 use ciq::krylov::msminres::{msminres_block_in, msminres_in, MsMinresOptions};
-use ciq::linalg::batched::gemv_nn_batched;
-use ciq::linalg::{Matrix, SolveWorkspace};
+use ciq::linalg::batched::{gemm_nn_batched, gemv_nn_batched};
+use ciq::linalg::{gemm, simd, Matrix, SolveWorkspace};
 use ciq::operators::DenseOp;
 use ciq::rng::Pcg64;
 use ciq::util::allocs::{thread_allocs, CountingAllocator};
+use std::sync::Mutex;
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
@@ -26,6 +32,22 @@ static ALLOC: CountingAllocator = CountingAllocator;
 /// counter sees every allocation the solve performs.
 fn serial_mode() {
     std::env::set_var("CIQ_THREADS", "1");
+}
+
+/// Serializes the process-global backend override across this binary's test
+/// threads: only one backend sweep runs at a time.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` once with the scalar kernels forced and once with the best
+/// detected SIMD backend, then restore auto dispatch. The zero-alloc
+/// contract must hold identically on both sides.
+fn with_backends(mut f: impl FnMut(simd::Backend)) {
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for b in [simd::Backend::Scalar, simd::best_available()] {
+        simd::set_backend(b).expect("backend reported available");
+        f(b);
+    }
+    simd::clear_backend_override();
 }
 
 fn random_spd(n: usize, seed: u64) -> Matrix {
@@ -58,23 +80,25 @@ fn warmed_msminres_in_performs_zero_heap_allocations() {
     let shifts = [0.1, 1.0, 10.0];
     let opts = MsMinresOptions { max_iters: 200, tol: 1e-9, weights: None };
     let mut ws = SolveWorkspace::new();
-    // warm-up: first touch grows the pool
-    for _ in 0..2 {
-        msminres_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
-    }
-    let grows = ws.grows();
-    let allocs_before = thread_allocs();
-    for _ in 0..3 {
-        let sol = msminres_in(&mut ws, &op, &b, &shifts, &opts);
-        assert!(sol.converged);
-        sol.recycle(&mut ws);
-    }
-    assert_eq!(
-        thread_allocs() - allocs_before,
-        0,
-        "warmed msminres_in touched the heap"
-    );
-    assert_eq!(ws.grows(), grows);
+    with_backends(|backend| {
+        // warm-up: first touch grows the pool
+        for _ in 0..2 {
+            msminres_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+        }
+        let grows = ws.grows();
+        let allocs_before = thread_allocs();
+        for _ in 0..3 {
+            let sol = msminres_in(&mut ws, &op, &b, &shifts, &opts);
+            assert!(sol.converged);
+            sol.recycle(&mut ws);
+        }
+        assert_eq!(
+            thread_allocs() - allocs_before,
+            0,
+            "warmed msminres_in touched the heap under {backend:?}"
+        );
+        assert_eq!(ws.grows(), grows);
+    });
 }
 
 #[test]
@@ -89,25 +113,27 @@ fn warmed_ciq_solve_block_in_performs_zero_heap_allocations() {
     let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
     let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
     let mut ws = SolveWorkspace::new();
-    for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
-        // warm-up for this solve shape
-        for _ in 0..2 {
-            let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
-            recycle_block_result(&mut ws, res);
+    with_backends(|backend| {
+        for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
+            // warm-up for this solve shape
+            for _ in 0..2 {
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+                recycle_block_result(&mut ws, res);
+            }
+            // the acceptance measurement: the whole krylov→ciq block solve,
+            // steady state, zero allocations
+            let allocs_before = thread_allocs();
+            for _ in 0..3 {
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+                recycle_block_result(&mut ws, res);
+            }
+            assert_eq!(
+                thread_allocs() - allocs_before,
+                0,
+                "warmed solve_block_in ({kind:?}) touched the heap under {backend:?}"
+            );
         }
-        // the acceptance measurement: the whole krylov→ciq block solve,
-        // steady state, zero allocations
-        let allocs_before = thread_allocs();
-        for _ in 0..3 {
-            let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
-            recycle_block_result(&mut ws, res);
-        }
-        assert_eq!(
-            thread_allocs() - allocs_before,
-            0,
-            "warmed solve_block_in ({kind:?}) touched the heap"
-        );
-    }
+    });
 }
 
 #[test]
@@ -199,18 +225,63 @@ fn warmed_batched_dense_solve_performs_zero_heap_allocations() {
         ws.give_vec(ys);
         ws.give_vec(xs);
     };
-    for _ in 0..2 {
-        solve_and_apply(&mut ws, &mut stack);
+    with_backends(|backend| {
+        for _ in 0..2 {
+            solve_and_apply(&mut ws, &mut stack);
+        }
+        let grows = ws.grows();
+        let allocs_before = thread_allocs();
+        for _ in 0..3 {
+            solve_and_apply(&mut ws, &mut stack);
+        }
+        assert_eq!(
+            thread_allocs() - allocs_before,
+            0,
+            "warmed batched Newton–Schulz solve + apply touched the heap under {backend:?}"
+        );
+        assert_eq!(ws.grows(), grows, "steady-state batched solve grew the workspace");
+    });
+}
+
+#[test]
+fn batched_pack_scratch_growth_is_bounded_across_size_classes() {
+    // The batched tier reuses each worker thread's B-panel pack across every
+    // element it claims; the scratch must grow to the *running max* `k·NR`
+    // seen so far and never beyond — no per-class or per-element churn. With
+    // `CIQ_THREADS=1` the only worker is this thread, so `thread_pack_len`
+    // observes exactly the scratch the batched path uses.
+    serial_mode();
+    let batch = 4;
+    // deliberately non-monotone size classes: growth must track the max only
+    let classes = [8usize, 32, 16, 64, 24, 64, 8];
+    let mut max_k = 0usize;
+    for &k in &classes {
+        max_k = max_k.max(k);
+        let (m, n) = (k, k); // n = k ≥ NR, so every class exercises packing
+        let a = vec![0.5; batch * m * k];
+        let b = vec![0.25; batch * k * n];
+        let mut c = vec![0.0; batch * m * n];
+        gemm_nn_batched(batch, m, k, n, &a, &b, &mut c);
+        assert_eq!(
+            gemm::thread_pack_len(),
+            max_k * gemm::NR,
+            "pack scratch after size class k={k}"
+        );
     }
-    let grows = ws.grows();
+    // steady state: re-running an already-seen class allocates nothing and
+    // leaves the scratch exactly at the high-water mark
+    let k = 32;
+    let a = vec![0.5; batch * k * k];
+    let b = vec![0.25; batch * k * k];
+    let mut c = vec![0.0; batch * k * k];
     let allocs_before = thread_allocs();
     for _ in 0..3 {
-        solve_and_apply(&mut ws, &mut stack);
+        gemm_nn_batched(batch, k, k, k, &a, &b, &mut c);
     }
     assert_eq!(
         thread_allocs() - allocs_before,
         0,
-        "warmed batched Newton–Schulz solve + apply touched the heap"
+        "warmed batched GEMM re-packed through the heap"
     );
-    assert_eq!(ws.grows(), grows, "steady-state batched solve grew the workspace");
+    assert_eq!(gemm::thread_pack_len(), max_k * gemm::NR, "pack left the high-water mark");
 }

@@ -1,0 +1,133 @@
+//! End-to-end forced-backend property tests for the runtime SIMD dispatch
+//! layer (`rust/DESIGN.md` §7).
+//!
+//! The unit tests inside `linalg::simd` compare each backend's function
+//! pointers against the scalar oracles *directly* (no global state). This
+//! binary covers the other half of the contract: with the process-wide
+//! override forced to each detected backend via
+//! [`ciq::linalg::simd::set_backend`], the **whole public surface** — dense
+//! `Matrix` products and the kernel operator's panel MVM / gradient
+//! contraction — must agree with the per-entry scalar oracles.
+//!
+//! The override is process-global, so every test here funnels through
+//! [`forced_backends`], which serializes on a `Mutex` and always restores
+//! auto dispatch, even across the harness's parallel test threads.
+
+use ciq::linalg::simd::{self, Backend};
+use ciq::linalg::Matrix;
+use ciq::operators::{KernelOp, KernelType, LinearOp};
+use ciq::rng::Pcg64;
+use std::sync::Mutex;
+
+/// One guard for the process-global backend override.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` once per *available* backend (scalar always included), with the
+/// global override forced to that backend for the duration, then restore
+/// auto dispatch.
+fn forced_backends(mut f: impl FnMut(Backend)) {
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for b in Backend::all() {
+        if !b.available() {
+            // Forcing an unavailable backend must fail cleanly and must not
+            // disturb whatever override is currently in place.
+            assert!(simd::set_backend(b).is_err(), "{b:?} unavailable yet accepted");
+            continue;
+        }
+        simd::set_backend(b).expect("available backend must be accepted");
+        assert_eq!(simd::backend(), b, "override did not take effect");
+        f(b);
+    }
+    simd::clear_backend_override();
+}
+
+fn data(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seeded(seed);
+    Matrix::randn(n, d, &mut rng)
+}
+
+const KINDS: [KernelType; 4] =
+    [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52];
+
+#[test]
+fn kernel_matmat_matches_naive_oracle_under_every_forced_backend() {
+    // Sizes straddle the panel tile and the SIMD lane widths (2/4/8) so both
+    // full lanes and scalar remainder tails run on every backend.
+    forced_backends(|backend| {
+        for &(n, d, r) in &[(1usize, 1usize, 1usize), (13, 3, 2), (34, 4, 5), (61, 2, 7)] {
+            let x = data(n, d, 21);
+            let mut rng = Pcg64::seeded(22);
+            let b = Matrix::randn(n, r, &mut rng);
+            for kind in KINDS {
+                let op = KernelOp::new(&x, kind, 0.7, 1.3, 1e-2).with_tile(16);
+                let got = op.matmat(&b);
+                let want = op.matmat_naive(&b);
+                let diff = got.max_abs_diff(&want);
+                assert!(
+                    diff < 1e-10,
+                    "{backend:?} kind={kind:?} n={n} d={d} r={r} diff={diff:e}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn kernel_grad_contract_matches_naive_oracle_under_every_forced_backend() {
+    forced_backends(|backend| {
+        for &(n, d) in &[(1usize, 1usize), (17, 2), (45, 3)] {
+            let x = data(n, d, 31);
+            let mut rng = Pcg64::seeded(32);
+            let l: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for kind in KINDS {
+                let op = KernelOp::new(&x, kind, 0.6, 1.1, 1e-3).with_tile(16);
+                let (ge, gs) = op.grad_contract(&l, &r);
+                let (ne, ns) = op.grad_contract_naive(&l, &r);
+                assert!(
+                    (ge - ne).abs() < 1e-10 * (1.0 + ne.abs()),
+                    "{backend:?} kind={kind:?} n={n} ell grad {ge} vs {ne}"
+                );
+                assert!(
+                    (gs - ns).abs() < 1e-10 * (1.0 + ns.abs()),
+                    "{backend:?} kind={kind:?} n={n} s2 grad {gs} vs {ns}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn matrix_products_agree_with_forced_scalar_reference() {
+    // Reference results computed with the scalar kernels forced; every other
+    // available backend must match them to accumulation-order tolerance.
+    let mut rng = Pcg64::seeded(41);
+    let a = Matrix::randn(23, 17, &mut rng);
+    let b = Matrix::randn(17, 11, &mut rng);
+    let v: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+    let vt: Vec<f64> = (0..23).map(|_| rng.normal()).collect();
+    let mut scalar_mm: Option<Matrix> = None;
+    let mut scalar_mv: Option<Vec<f64>> = None;
+    let mut scalar_mvt: Option<Vec<f64>> = None;
+    forced_backends(|backend| {
+        let mm = a.matmul(&b);
+        let mv = a.matvec(&v);
+        let mvt = a.matvec_t(&vt);
+        if backend == Backend::Scalar {
+            // Backend::all() lists scalar first, so the reference fills
+            // before any SIMD backend is compared against it.
+            scalar_mm = Some(mm);
+            scalar_mv = Some(mv);
+            scalar_mvt = Some(mvt);
+            return;
+        }
+        let diff = mm.max_abs_diff(scalar_mm.as_ref().expect("scalar ran first"));
+        assert!(diff < 1e-12, "{backend:?} matmul drift {diff:e}");
+        for (got, want) in mv.iter().zip(scalar_mv.as_ref().unwrap()) {
+            assert!((got - want).abs() < 1e-12, "{backend:?} matvec drift");
+        }
+        for (got, want) in mvt.iter().zip(scalar_mvt.as_ref().unwrap()) {
+            assert!((got - want).abs() < 1e-12, "{backend:?} matvec_t drift");
+        }
+    });
+}

@@ -19,6 +19,16 @@
 //!    shrinking the interleavings the model checker explores. `Arc`,
 //!    `OnceLock`, `mpsc`, and `Weak` stay allowed — they are not scheduling
 //!    points the checker needs to own.
+//! 4. **Arch escape** — `core::arch` / `std::arch` paths or
+//!    `#[target_feature]` attributes anywhere but `linalg/simd.rs`. All
+//!    intrinsics live behind the one dispatch layer whose `table_for`
+//!    availability check discharges their feature contracts; an intrinsic
+//!    elsewhere would be a second, unaudited unsafe surface.
+//! 5. **Feature-blind SAFETY** — a `#[target_feature(enable = "…")]` fn
+//!    whose preceding `SAFETY:` comment does not name every enabled
+//!    feature. The comment is the contract ("caller must ensure avx2 and
+//!    fma…"); if it names the wrong feature, the `Backend::available` gate
+//!    and the kernel can silently disagree.
 //!
 //! Test regions are exempt: scanning stops at the first `#[cfg(test)]` line
 //! (by crate convention test modules sit at the bottom of each file). Scope
@@ -47,6 +57,10 @@ const ORDERING_WINDOW: usize = 10;
 /// Files routed through `crate::util::sync` whose primitives must stay
 /// model-checkable (rule 3). Matched as path suffixes.
 const SHIMMED: &[&str] = &["exec/mod.rs", "exec/channel.rs", "util/threadpool.rs"];
+
+/// The single file allowed to contain `core::arch`/`std::arch` paths and
+/// `#[target_feature]` fns (rule 4). Matched as a path suffix.
+const ARCH_HOME: &str = "linalg/simd.rs";
 
 #[derive(Debug, PartialEq, Eq)]
 struct Violation {
@@ -311,10 +325,36 @@ fn sync_items_after(code: &str, after: usize) -> Vec<String> {
     items
 }
 
+/// Parse the feature list out of a raw `#[target_feature(enable = "…")]`
+/// source line (rule 5 must read the *raw* line: the lexer blanks string
+/// contents out of the code text). Returns the lowercased features, or
+/// `None` when the line holds no complete single-line enable list.
+fn enable_features(raw_line: &str) -> Option<Vec<String>> {
+    let at = raw_line.find("target_feature")?;
+    let rest = &raw_line[at..];
+    let en = rest.find("enable")?;
+    let rest = &rest[en..];
+    let open = rest.find('"')?;
+    let rest = &rest[open + 1..];
+    let close = rest.find('"')?;
+    let feats: Vec<String> = rest[..close]
+        .split(',')
+        .map(|f| f.trim().to_ascii_lowercase())
+        .filter(|f| !f.is_empty())
+        .collect();
+    if feats.is_empty() {
+        None
+    } else {
+        Some(feats)
+    }
+}
+
 /// Lint one file's source. `relpath` is the display path (also used for the
 /// shimmed-module suffix match).
 fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
     let shimmed = SHIMMED.iter().any(|s| relpath.ends_with(s));
+    let arch_home = relpath.ends_with(ARCH_HOME);
+    let raw: Vec<&str> = src.lines().collect();
     let lines = split_lines(src);
     // Test regions are exempt: by convention the `#[cfg(test)]` module sits
     // at the bottom of each file.
@@ -396,6 +436,60 @@ fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
                     }
                 }
                 from = after;
+            }
+        }
+        // Rule 4: intrinsics and feature-gated fns are confined to the SIMD
+        // dispatch layer.
+        if !arch_home {
+            if line.code.contains("core::arch") || line.code.contains("std::arch") {
+                out.push(Violation {
+                    file: relpath.to_string(),
+                    line: lineno,
+                    rule: "arch-outside-simd",
+                    msg: format!(
+                        "`core::arch`/`std::arch` outside {ARCH_HOME}; intrinsics live \
+                         behind the dispatch layer whose availability check discharges \
+                         their feature contracts"
+                    ),
+                });
+            }
+            if line.code.contains("#[target_feature") {
+                out.push(Violation {
+                    file: relpath.to_string(),
+                    line: lineno,
+                    rule: "arch-outside-simd",
+                    msg: format!(
+                        "`#[target_feature]` outside {ARCH_HOME}; feature-gated kernels \
+                         belong in the dispatch layer"
+                    ),
+                });
+            }
+        }
+        // Rule 5: a target_feature fn's SAFETY comment must name every
+        // enabled feature (parsed from the raw line — the lexer blanks the
+        // string out of the code text).
+        if line.code.contains("#[target_feature") {
+            if let Some(feats) = raw.get(idx).and_then(|r| enable_features(r)) {
+                let lo = idx.saturating_sub(SAFETY_WINDOW);
+                let window: String = lines[lo..idx]
+                    .iter()
+                    .map(|l| l.comment.to_lowercase())
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                let missing: Vec<&String> =
+                    feats.iter().filter(|f| !window.contains(f.as_str())).collect();
+                if !window.contains("safety:") || !missing.is_empty() {
+                    out.push(Violation {
+                        file: relpath.to_string(),
+                        line: lineno,
+                        rule: "target-feature-safety-names-feature",
+                        msg: format!(
+                            "`#[target_feature(enable = …)]` whose preceding `SAFETY:` \
+                             comment does not name the detected feature(s) {feats:?} \
+                             within the {SAFETY_WINDOW} preceding lines"
+                        ),
+                    });
+                }
             }
         }
     }
@@ -484,6 +578,25 @@ use std::sync::{mpsc, Arc, OnceLock, Weak};
 use std::thread;
 "#;
 
+const FIX_ARCH_BAD: &str = r#"
+use core::arch::x86_64::*;
+#[target_feature(enable = "avx2")]
+fn f() {}
+"#;
+
+const FIX_TF_GOOD: &str = r#"
+use core::arch::x86_64::*;
+// SAFETY: caller must ensure avx2 and fma are available on the executing CPU.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn f() {}
+"#;
+
+const FIX_TF_BAD: &str = r#"
+// SAFETY: pointers are valid for the whole panel.
+#[target_feature(enable = "avx512f")]
+unsafe fn f() {}
+"#;
+
 const FIX_FALSE_POSITIVES: &str = r####"
 //! Docs may say unsafe and Ordering::Relaxed and std::sync::Mutex freely.
 fn f() -> &'static str {
@@ -529,6 +642,21 @@ fn self_test() -> Result<(), String> {
     expect(FIX_SHIM_BAD, "src/operators/mod.rs", &[])?;
     expect(FIX_SHIM_GOOD, "src/exec/channel.rs", &[])?;
     expect(FIX_FALSE_POSITIVES, "src/util/threadpool.rs", &[])?;
+    // Arch escape: intrinsic imports and feature-gated fns outside the
+    // dispatch layer (the bare attribute also trips the SAFETY-names-feature
+    // rule — there is no SAFETY comment at all)...
+    expect(
+        FIX_ARCH_BAD,
+        "src/operators/kernel.rs",
+        &["arch-outside-simd", "arch-outside-simd", "target-feature-safety-names-feature"],
+    )?;
+    // ...a properly annotated kernel is clean inside linalg/simd.rs...
+    expect(FIX_TF_GOOD, "src/linalg/simd.rs", &[])?;
+    // ...but the identical source anywhere else is confined...
+    expect(FIX_TF_GOOD, "src/util/fastmath.rs", &["arch-outside-simd", "arch-outside-simd"])?;
+    // ...and a SAFETY comment that names no feature fails rule 5 even
+    // though it satisfies the plain unsafe rule.
+    expect(FIX_TF_BAD, "src/linalg/simd.rs", &["target-feature-safety-names-feature"])?;
     Ok(())
 }
 
@@ -537,7 +665,7 @@ fn main() -> ExitCode {
     if args.iter().any(|a| a == "--self-test") {
         return match self_test() {
             Ok(()) => {
-                println!("structlint: self-test passed (8 fixtures)");
+                println!("structlint: self-test passed (12 fixtures)");
                 ExitCode::SUCCESS
             }
             Err(e) => {
@@ -617,6 +745,29 @@ mod tests {
     fn safety_doc_section_counts() {
         let src = "/// # Safety\n/// caller must uphold X\nunsafe fn f() {}\n";
         assert!(lint_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn enable_features_parses_raw_lines() {
+        assert_eq!(
+            enable_features(r#"    #[target_feature(enable = "avx2,fma")]"#),
+            Some(vec!["avx2".to_string(), "fma".to_string()])
+        );
+        assert_eq!(
+            enable_features(r#"#[target_feature(enable = "neon")]"#),
+            Some(vec!["neon".to_string()])
+        );
+        assert_eq!(enable_features("fn no_attr_here() {}"), None);
+        assert_eq!(enable_features(r#"#[target_feature(enable = "")]"#), None);
+    }
+
+    #[test]
+    fn target_feature_safety_window_excludes_the_attribute_line() {
+        // the feature name inside the attribute's own string must not
+        // satisfy the rule — only a comment above it can
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
+        let v = lint_file("src/linalg/simd.rs", src);
+        assert!(v.iter().any(|v| v.rule == "target-feature-safety-names-feature"), "{v:#?}");
     }
 
     #[test]
