@@ -1,0 +1,102 @@
+//! Observability dump: drive a small workload through the sampling service
+//! with the flight recorder and the residual-trajectory sampler turned on,
+//! then export everything the service can tell you about itself —
+//!
+//! - the typed metrics snapshot as Prometheus text exposition and as JSON,
+//! - sampled per-solve residual trajectories (msMINRES convergence, live),
+//! - the flight-recorder timeline as Chrome trace-event JSON, loadable in
+//!   Perfetto (https://ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Run: `cargo run --release --example obs_dump -- [--n 600] [--clients 4]
+//!   [--requests 6] [--sample-every 2] [--trace-out obs_trace.json]`
+
+use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
+use ciq::linalg::Matrix;
+use ciq::obs::solvetrace;
+use ciq::obs::trace::{self, EventKind};
+use ciq::operators::{KernelOp, KernelType};
+use ciq::rng::Pcg64;
+use ciq::util::cli::Args;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse();
+    let n = args.get_or("n", 600usize);
+    let clients = args.get_or("clients", 4usize);
+    let per_client = args.get_or("requests", 6usize);
+    let sample_every = args.get_or("sample-every", 2u64);
+    let trace_out = args.get("trace-out").unwrap_or("obs_trace.json").to_string();
+
+    let mut rng = Pcg64::seeded(0);
+    let x = Matrix::randn(n, 2, &mut rng);
+    let rbf: SharedOp = Arc::new(KernelOp::new(&x, KernelType::Rbf, 1.0, 1.0, 1e-2));
+    let mut ops = HashMap::new();
+    ops.insert("rbf".to_string(), rbf);
+
+    // Turn the full observability surface on *before* traffic: the flight
+    // recorder (per-thread event rings) and the 1-in-N residual sampler.
+    trace::set_enabled(true);
+    solvetrace::configure(sample_every);
+
+    let svc = Arc::new(SamplingService::start(
+        ServiceConfig { max_batch: 8, workers: 2, ..Default::default() },
+        ops,
+    ));
+
+    println!("== observability dump: {clients} clients × {per_client} requests, N = {n} ==");
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            scope.spawn(move || {
+                let mut rng = Pcg64::seeded(100 + c as u64);
+                for r in 0..per_client {
+                    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    let kind = if r % 2 == 0 { ReqKind::Sample } else { ReqKind::Whiten };
+                    let out = svc.submit("rbf", kind, b).wait().expect("request failed");
+                    assert_eq!(out.len(), n);
+                }
+            });
+        }
+    });
+
+    trace::set_enabled(false);
+    solvetrace::configure(0);
+
+    // 1. Typed metrics snapshot — Prometheus text exposition, then JSON.
+    let snap = svc.metrics().snapshot();
+    println!("\n--- Prometheus exposition ---");
+    print!("{}", snap.to_prometheus());
+    println!("\n--- metrics JSON ---");
+    println!("{}", snap.to_json());
+
+    // 2. Sampled residual trajectories: msMINRES convergence from live traffic.
+    let trajs = solvetrace::drain();
+    println!("\n--- sampled residual trajectories ({} solves) ---", trajs.len());
+    for (i, t) in trajs.iter().enumerate() {
+        let first = t.residuals.first().copied().unwrap_or(0.0);
+        let last = t.residuals.last().copied().unwrap_or(0.0);
+        println!(
+            "  solve {i:>2}: cols={} iters={} tol={:.1e}  residual {first:.3e} -> {last:.3e}",
+            t.cols, t.iters, t.tol
+        );
+    }
+
+    // 3. Flight-recorder timeline: summarize, then export Chrome trace JSON.
+    let trace_snap = trace::snapshot();
+    let enqueues = trace_snap.of_kind(EventKind::Enqueue).count();
+    let responds = trace_snap.of_kind(EventKind::Respond).count();
+    let solves = trace_snap.of_kind(EventKind::SolveEnd).count();
+    println!(
+        "\nflight recorder: {} events ({enqueues} enqueues, {responds} responds, \
+         {solves} solve spans)",
+        trace_snap.events.len()
+    );
+    let chrome = trace_snap.to_chrome_json();
+    std::fs::write(&trace_out, &chrome).expect("write trace file");
+    println!(
+        "wrote {} ({} bytes) — load it at https://ui.perfetto.dev or chrome://tracing",
+        trace_out,
+        chrome.len()
+    );
+}

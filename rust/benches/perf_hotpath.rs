@@ -15,15 +15,20 @@
 //! `BENCH_batched_dense.json`), (9) the runtime-dispatched SIMD
 //! micro-kernels vs the forced-scalar fallback — GEMM, kernel MVM, and the
 //! lane-parallel ρ panel vs per-element glibc `exp` across
-//! N ∈ {1024, 4096, 16384} (emits `BENCH_simd.json`).
+//! N ∈ {1024, 4096, 16384} (emits `BENCH_simd.json`), (10) the
+//! observability layer's ns/event — disabled `trace!` vs a plain
+//! relaxed-load branch (the cost-contract gate), the enabled recorder
+//! write, and the lock-free histogram record vs the retired `Mutex<Vec>`
+//! push (emits `BENCH_obs.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
 //! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, section 6
 //! to 1/8 shards, section 7 to N=256, section 8 to
-//! N ∈ {16, 64} × batch ∈ {1, 8}, and section 9 to N=1024 (the CI smoke
-//! configuration); the full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} ×
-//! all four kernel types × {matvec, matmat r=8}.
+//! N ∈ {16, 64} × batch ∈ {1, 8}, section 9 to N=1024, and section 10 to
+//! 200k events/rep (the CI smoke configuration); the full sweep covers
+//! N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel types ×
+//! {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -232,7 +237,9 @@ fn main() {
 
     bench_simd(args.has("fast"), &mut rng, &mut checks);
 
-    // evaluate every recorded verdict only now — all six JSON artifacts
+    bench_obs(args.has("fast"), &mut checks);
+
+    // evaluate every recorded verdict only now — all seven JSON artifacts
     // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
@@ -574,6 +581,120 @@ fn bench_batched_dense(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
     checks.push((
         "dense tier beats per-operator Krylov at the smallest N".into(),
         crossover_n >= 16,
+    ));
+}
+
+/// §10: the observability layer's hot-path cost, in ns/event — the numbers
+/// behind the `obs/` cost contract (DESIGN.md §8):
+///
+/// - `branch_baseline` — a plain relaxed `AtomicBool` load + branch, the
+///   target the disabled path is gated against;
+/// - `trace_disabled` — a `trace!` site with recording off (the contract:
+///   one relaxed load, no timestamp, no TLS, no payload evaluation);
+/// - `trace_enabled` — a full recorder write: clock read + seqlock publish
+///   into the thread's pre-registered ring;
+/// - `hist_record` — one lock-free histogram record (4 relaxed RMWs), the
+///   completion path's per-request telemetry cost;
+/// - `mutex_vec_push` — the retired `Mutex<Vec<u64>>` latency storage this
+///   PR replaced (lock + push per event, pre-grown so realloc is excluded —
+///   the comparison is against its *best* case).
+///
+/// Writes `BENCH_obs.json` into the CWD (uploaded by the CI bench-smoke
+/// job next to the other JSONs). The gating check is the cost contract:
+/// disabled `trace!` within noise of the plain branch.
+fn bench_obs(fast: bool, checks: &mut Checks) {
+    use ciq::obs::hist::AtomicHistogram;
+    use ciq::obs::trace::{self, EventKind};
+    use std::hint::black_box;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    let events: usize = if fast { 200_000 } else { 2_000_000 };
+    let reps = if fast { 3 } else { 5 };
+    println!("# perf 10: observability hot path ({events} events/rep)");
+    println!("op\tns_per_event");
+    let per_ns = |t: f64| t / events as f64 * 1e9;
+
+    // the contract target: one relaxed atomic load + branch, same loop shape
+    // as the trace! sites below (black_box pins the loop counter in both)
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    let t_branch = common::bench_median(reps, || {
+        for i in 0..events {
+            if black_box(&FLAG).load(Ordering::Relaxed) {
+                black_box(i);
+            }
+            black_box(i);
+        }
+    });
+
+    trace::set_enabled(false);
+    let t_disabled = common::bench_median(reps, || {
+        for i in 0..events {
+            ciq::trace!(EventKind::Enqueue, i, 0u64);
+            black_box(i);
+        }
+    });
+
+    trace::set_enabled(true);
+    ciq::trace!(EventKind::Enqueue, 0u64, 0u64); // register this thread's ring
+    let t_enabled = common::bench_median(reps, || {
+        for i in 0..events {
+            ciq::trace!(EventKind::Enqueue, i, 1u64);
+            black_box(i);
+        }
+    });
+    trace::set_enabled(false);
+
+    let hist = AtomicHistogram::new();
+    let t_hist = common::bench_median(reps, || {
+        for i in 0..events {
+            hist.record(black_box((i & 0xFFFF) as u64));
+        }
+    });
+
+    // the retired storage, best case: pre-grown Vec, uncontended lock
+    let vec: Mutex<Vec<u64>> = Mutex::new(Vec::with_capacity(events));
+    let t_mutex_vec = common::bench_median(reps, || {
+        vec.lock().unwrap().clear();
+        for i in 0..events {
+            vec.lock().unwrap().push(black_box((i & 0xFFFF) as u64));
+        }
+    });
+
+    let rows = [
+        ("branch_baseline", t_branch),
+        ("trace_disabled", t_disabled),
+        ("trace_enabled", t_enabled),
+        ("hist_record", t_hist),
+        ("mutex_vec_push", t_mutex_vec),
+    ];
+    let mut entries: Vec<String> = Vec::new();
+    for (op, t) in rows {
+        println!("{op}\t{:.2}", per_ns(t));
+        entries.push(format!("    {{\"op\": \"{op}\", \"ns_per_event\": {:.3}}}", per_ns(t)));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.obs.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"events_per_rep\": {events}, \"reps\": {reps}, \"threads\": {}}},\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        num_threads(),
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_obs.json", json).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json ({} entries)", entries.len());
+    // the cost contract: a disabled trace! site is the relaxed-load branch —
+    // allow 2x + 1 ns/event for timing noise at sub-ns magnitudes
+    checks.push((
+        "disabled trace! within noise of a plain relaxed-load branch".into(),
+        per_ns(t_disabled) <= 2.0 * per_ns(t_branch) + 1.0,
+    ));
+    checks.push((
+        "enabled trace! stays under 1 us/event".into(),
+        per_ns(t_enabled) < 1_000.0,
+    ));
+    checks.push((
+        "lock-free histogram record stays under 1 us/event".into(),
+        per_ns(t_hist) < 1_000.0,
     ));
 }
 

@@ -507,6 +507,7 @@ impl Ciq {
     ) -> Result<CiqBlockResult> {
         let n = op.size();
         let r = b.cols();
+        crate::trace!(crate::obs::trace::EventKind::SolveStart, r, n);
         let rule = &ctx.cache.rule;
         let nq = rule.shifts.len();
         // run on K, or on the whitened M under a preconditioned context
@@ -567,6 +568,11 @@ impl Ciq {
                 }
             }
         };
+        crate::trace!(
+            crate::obs::trace::EventKind::SolveEnd,
+            col_iterations.iter().copied().max().unwrap_or(0),
+            column_work
+        );
         Ok(CiqBlockResult { solution, col_iterations, residuals, column_work, cache: None })
     }
 
@@ -590,6 +596,7 @@ impl Ciq {
         ctx: &SolverContext,
     ) -> Result<CiqVecSolve> {
         let n = op.size();
+        crate::trace!(crate::obs::trace::EventKind::SolveStart, 1, n);
         let rule = &ctx.cache.rule;
         let ms = match &ctx.precond {
             None => msminres_in(ws, op, b, &rule.shifts, &ctx.ms),
@@ -618,6 +625,7 @@ impl Ciq {
             ws.give_vec(sol);
             sol = s;
         }
+        crate::trace!(crate::obs::trace::EventKind::SolveEnd, iterations, iterations);
         Ok(CiqVecSolve { solution: sol, iterations, residual })
     }
 

@@ -1,11 +1,19 @@
-//! Service metrics: counters, latency histogram, batch sizes, msMINRES
-//! iteration telemetry (the data behind Fig. S7), plus the cache-aware
-//! execution engine's economics: per-shard queue depths, spectral-cache
-//! hit/miss counts, MVMs saved by cache reuse, matmat column-work saved
-//! by active-column compaction, background-warmer progress, the adaptive
-//! batch controller's per-shard ceilings, and the adaptive wait
-//! controller's per-shard flush windows (controller state itself lives here
-//! so it is observable for free).
+//! Service metrics: counters plus lock-free log-bucketed histograms
+//! ([`crate::obs::AtomicHistogram`]) for request latency, batch sizes, and
+//! msMINRES iteration telemetry (the data behind Fig. S7) — fixed memory, no
+//! mutex and no allocation on the completion path, percentiles within the
+//! histogram's documented ≤ 6.25 % relative error (`obs::hist::REL_ERR`).
+//! The cache-aware execution engine's economics live here too: per-shard
+//! queue depths, spectral-cache hit/miss counts, MVMs saved by cache reuse,
+//! matmat column-work saved by active-column compaction, background-warmer
+//! progress, the adaptive batch controller's per-shard ceilings, and the
+//! adaptive wait controller's per-shard flush windows (controller state
+//! itself lives here so it is observable for free; the per-shard maps stay
+//! mutexed — they are touched per flush, not per request).
+//!
+//! [`Metrics::snapshot`] copies everything into a typed
+//! [`MetricsSnapshot`] serializable as JSON or Prometheus text exposition;
+//! the legacy one-line [`Metrics::summary`] renders from the same snapshot.
 //!
 //! The dispatcher's *liveness* is observable too: [`Metrics::dispatcher_wakeups`]
 //! counts event-driven wakeups (one per received request) and
@@ -14,9 +22,11 @@
 //! regression test for "zero idle polls".
 
 use crate::linalg::WsStats;
+use crate::obs::hist::AtomicHistogram;
+use crate::obs::snapshot::MetricsSnapshot;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 /// Shared metrics for the sampling service.
@@ -85,9 +95,13 @@ pub struct Metrics {
     /// The service's solver policy, for observability (`Debug` rendering of
     /// [`crate::ciq::SolverPolicy`]); set once at startup.
     policy: Mutex<String>,
-    latencies_us: Mutex<Vec<u64>>,
-    batch_sizes: Mutex<Vec<usize>>,
-    iter_counts: Mutex<Vec<usize>>,
+    /// End-to-end request latency in µs: lock-free, fixed-memory, O(1)
+    /// wait-free record on the completion path.
+    latency_hist: AtomicHistogram,
+    /// Dispatched batch sizes (same storage; `sum`/`max` are exact).
+    batch_hist: AtomicHistogram,
+    /// msMINRES iterations per served RHS (Fig. S7 data; exact below 32).
+    iter_hist: AtomicHistogram,
     /// Per-shard `(current depth, max depth)` keyed by `"op/Kind"`.
     shard_depths: Mutex<HashMap<String, (usize, usize)>>,
     /// Per-shard adaptive batch ceiling (AIMD state), keyed by `"op/Kind"`.
@@ -101,26 +115,32 @@ pub struct Metrics {
     /// maps) when a size class loses its last operator.
     dense_shards: Mutex<HashMap<String, u64>>,
     /// Executor-layer telemetry (parks / wakeups / task polls / wheel
-    /// fires) when the async backend runs; `None` on the threaded backend.
-    /// The idle-service test asserts on these *below* the coordinator's own
-    /// counters: task polls must not advance while the service is idle.
-    exec_stats: Mutex<Option<Arc<crate::exec::ExecStats>>>,
+    /// fires) when the async backend runs; unset on the threaded backend.
+    /// Set once at startup through a lock-free `OnceLock` — `summary()` and
+    /// `snapshot()` no longer take a mutex to read it. The idle-service test
+    /// asserts on these *below* the coordinator's own counters: task polls
+    /// must not advance while the service is idle.
+    exec_stats: OnceLock<Arc<crate::exec::ExecStats>>,
 }
 
 impl Metrics {
-    /// Record one request's end-to-end latency.
+    /// Record one request's end-to-end latency. Wait-free, allocation-free:
+    /// one histogram record (four relaxed atomic RMWs).
     pub fn record_latency(&self, d: Duration) {
-        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+        self.latency_hist.record(d.as_micros() as u64);
     }
 
-    /// Record a dispatched batch size.
+    /// Record a dispatched batch size. Wait-free, allocation-free.
     pub fn record_batch(&self, size: usize) {
-        self.batch_sizes.lock().unwrap().push(size);
+        self.batch_hist.record(size as u64);
     }
 
-    /// Record msMINRES iteration counts (per RHS).
+    /// Record msMINRES iteration counts (per RHS). Wait-free,
+    /// allocation-free.
     pub fn record_iters(&self, iters: &[usize]) {
-        self.iter_counts.lock().unwrap().extend_from_slice(iters);
+        for &it in iters {
+            self.iter_hist.record(it as u64);
+        }
     }
 
     /// Record a spectral-cache hit and the estimation MVMs it avoided.
@@ -164,14 +184,17 @@ impl Metrics {
         self.workspace_bytes_high_water.fetch_max(stats.bytes_high_water, Ordering::Relaxed);
     }
 
-    /// Install the async dispatcher's executor stats (startup, once).
+    /// Install the async dispatcher's executor stats (startup, once). A
+    /// second call is a no-op: the first installed handle wins, matching the
+    /// one-executor-per-service lifecycle.
     pub fn set_exec_stats(&self, stats: Arc<crate::exec::ExecStats>) {
-        *self.exec_stats.lock().unwrap() = Some(stats);
+        let _ = self.exec_stats.set(stats);
     }
 
     /// The async dispatcher's executor-layer stats, when that backend runs.
+    /// Lock-free read of the set-once handle.
     pub fn exec_stats(&self) -> Option<Arc<crate::exec::ExecStats>> {
-        self.exec_stats.lock().unwrap().clone()
+        self.exec_stats.get().cloned()
     }
 
     /// Record the service's solver policy (startup, once).
@@ -340,86 +363,96 @@ impl Metrics {
         v
     }
 
-    /// Latency percentile in microseconds (p in [0,100]).
+    /// Latency percentile in µs (p in [0,100]), `None` when no request has
+    /// completed. The report is the covering bucket's upper bound:
+    /// `true <= reported <= true * (1 + obs::hist::REL_ERR)`. O(buckets),
+    /// allocation-free, no mutex — the clone-and-sort of the old
+    /// `Mutex<Vec<u64>>` storage is gone.
+    pub fn latency_percentile(&self, p: f64) -> Option<u64> {
+        self.latency_hist.percentile(p)
+    }
+
+    /// Legacy-shaped latency percentile: 0 when no data (callers that need
+    /// to distinguish "no data" from a true 0 µs sample use
+    /// [`Metrics::latency_percentile`]).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return 0;
-        }
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.latency_hist.percentile(p).unwrap_or(0)
     }
 
-    /// Largest batch dispatched.
+    /// Largest batch dispatched (exact: the histogram tracks the max aside).
     pub fn max_batch_size(&self) -> usize {
-        self.batch_sizes.lock().unwrap().iter().copied().max().unwrap_or(0)
+        self.batch_hist.max() as usize
     }
 
-    /// Mean batch size.
+    /// Mean batch size (exact: sum and count are tracked aside).
     pub fn mean_batch_size(&self) -> f64 {
-        let v = self.batch_sizes.lock().unwrap();
-        if v.is_empty() {
-            return 0.0;
-        }
-        v.iter().sum::<usize>() as f64 / v.len() as f64
+        self.batch_hist.mean()
     }
 
     /// Mean msMINRES iterations per served RHS (0 if none recorded) — the
-    /// number the preconditioned policy is judged on.
+    /// number the preconditioned policy is judged on. Exact.
     pub fn mean_iterations(&self) -> f64 {
-        let v = self.iter_counts.lock().unwrap();
-        if v.is_empty() {
-            return 0.0;
-        }
-        v.iter().sum::<usize>() as f64 / v.len() as f64
+        self.iter_hist.mean()
     }
 
     /// Histogram of msMINRES iteration counts with the given bucket width —
-    /// regenerates Fig. S7 from live service traffic.
+    /// regenerates Fig. S7 from live service traffic. Counts below 32
+    /// re-bin exactly; above that each log-bucket lands at its upper bound
+    /// (≤ 6.25 % high).
     pub fn iteration_histogram(&self, bucket: usize) -> Vec<(usize, usize)> {
-        let v = self.iter_counts.lock().unwrap();
+        let snap = self.iter_hist.snapshot();
+        let w = bucket.max(1);
         let mut hist: std::collections::BTreeMap<usize, usize> = Default::default();
-        for &it in v.iter() {
-            *hist.entry((it / bucket.max(1)) * bucket.max(1)).or_default() += 1;
+        for (_, hi, c) in snap.buckets() {
+            let rep = hi.min(snap.max()) as usize;
+            *hist.entry((rep / w) * w).or_default() += c as usize;
         }
         hist.into_iter().collect()
     }
 
-    /// One-line summary for logs.
-    pub fn summary(&self) -> String {
+    /// Copy every counter, histogram, per-shard map, and the executor's
+    /// counters into a typed, serializable [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
         // ordering: Relaxed — monitoring snapshot; counters are independent
-        // and a log line needs no cross-counter consistency.
+        // and a report needs no cross-counter consistency.
         let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
-        format!(
-            "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
-             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
-             saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={} \
-             dense_solves={} dense_fallbacks={} dense_builds={} dense_crossover_n={}",
-            self.policy(),
-            ld(&self.submitted),
-            ld(&self.completed),
-            ld(&self.failed),
-            self.latency_percentile_us(50.0),
-            self.latency_percentile_us(99.0),
-            self.mean_batch_size(),
-            self.mean_iterations(),
-            ld(&self.cache_hits),
-            ld(&self.cache_misses),
-            ld(&self.warmed_operators),
-            ld(&self.warm_starts),
-            ld(&self.saved_mvms),
-            self.saved_column_work(),
-            ld(&self.dispatcher_wakeups),
-            ld(&self.timer_fires),
-            ld(&self.workspace_checkouts),
-            ld(&self.workspace_grows),
-            ld(&self.workspace_bytes_high_water),
-            ld(&self.dense_solves),
-            ld(&self.dense_fallbacks),
-            ld(&self.dense_factor_builds),
-            ld(&self.dense_crossover_n),
-        )
+        MetricsSnapshot {
+            policy: self.policy(),
+            submitted: ld(&self.submitted),
+            completed: ld(&self.completed),
+            failed: ld(&self.failed),
+            cache_hits: ld(&self.cache_hits),
+            cache_misses: ld(&self.cache_misses),
+            operator_replacements: ld(&self.operator_replacements),
+            warmed_operators: ld(&self.warmed_operators),
+            warm_failures: ld(&self.warm_failures),
+            warm_starts: ld(&self.warm_starts),
+            workspace_checkouts: ld(&self.workspace_checkouts),
+            workspace_grows: ld(&self.workspace_grows),
+            workspace_bytes_high_water: ld(&self.workspace_bytes_high_water),
+            saved_mvms: ld(&self.saved_mvms),
+            saved_column_work: self.saved_column_work(),
+            column_work: ld(&self.column_work),
+            dispatcher_wakeups: ld(&self.dispatcher_wakeups),
+            timer_fires: ld(&self.timer_fires),
+            dense_solves: ld(&self.dense_solves),
+            dense_fallbacks: ld(&self.dense_fallbacks),
+            dense_factor_builds: ld(&self.dense_factor_builds),
+            dense_crossover_n: ld(&self.dense_crossover_n),
+            latency_us: self.latency_hist.snapshot(),
+            batch_sizes: self.batch_hist.snapshot(),
+            iterations: self.iter_hist.snapshot(),
+            shard_depths: self.shard_depths(),
+            batch_ceilings: self.batch_ceilings(),
+            shard_waits: self.shard_waits(),
+            dense_shards: self.dense_shards(),
+            exec: self.exec_stats.get().map(|s| s.snapshot()),
+        }
+    }
+
+    /// One-line summary for logs (rendered from [`Metrics::snapshot`]).
+    pub fn summary(&self) -> String {
+        self.snapshot().to_line()
     }
 }
 
@@ -430,13 +463,24 @@ mod tests {
     #[test]
     fn percentiles_and_histogram() {
         let m = Metrics::default();
+        // Empty: Option-returning percentile distinguishes "no data" (the
+        // old clone-and-sort API returned 0 for both).
+        assert_eq!(m.latency_percentile(50.0), None);
+        assert_eq!(m.latency_percentile_us(50.0), 0);
         for us in [100u64, 200, 300, 400, 500] {
             m.record_latency(Duration::from_micros(us));
         }
-        assert_eq!(m.latency_percentile_us(0.0), 100);
-        assert_eq!(m.latency_percentile_us(50.0), 300);
-        assert_eq!(m.latency_percentile_us(100.0), 500);
+        // Histogram-backed percentiles: within the documented relative-error
+        // bound, never below the true sample.
+        for (p, truth) in [(0.0, 100u64), (50.0, 300), (100.0, 500)] {
+            let got = m.latency_percentile_us(p);
+            assert!(got >= truth, "p{p}: {got} < true {truth}");
+            let bound = (truth as f64 * (1.0 + crate::obs::hist::REL_ERR)).ceil() as u64;
+            assert!(got <= bound, "p{p}: {got} > bound {bound}");
+        }
         m.record_iters(&[5, 12, 13, 27]);
+        // Iteration counts below 32 are stored exactly, so Fig. S7 re-binning
+        // is unchanged from the Vec-backed storage.
         let h = m.iteration_histogram(10);
         assert_eq!(h, vec![(0, 1), (10, 2), (20, 1)]);
         m.record_batch(3);
@@ -444,6 +488,36 @@ mod tests {
         assert_eq!(m.max_batch_size(), 7);
         assert!((m.mean_batch_size() - 5.0).abs() < 1e-12);
         assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn snapshot_serializes_and_exec_handle_is_set_once() {
+        let m = Metrics::default();
+        m.set_policy("Plain");
+        m.record_latency(Duration::from_micros(250));
+        m.record_batch(4);
+        m.record_iters(&[17]);
+        m.record_shard_depth("a/Sample", 2);
+        let s = m.snapshot();
+        assert_eq!(s.policy, "Plain");
+        assert_eq!(s.latency_us.count(), 1);
+        assert_eq!(s.batch_sizes.max(), 4);
+        assert_eq!(s.iterations.count(), 1);
+        assert!(s.exec.is_none());
+        let json = s.to_json();
+        assert!(json.contains("\"policy\":\"Plain\""));
+        assert!(json.contains("\"shard_depths\":{\"a/Sample\":[2,2]}"));
+        assert!(s.to_prometheus().contains("ciq_batch_size_count 1"));
+        assert_eq!(m.summary(), s.to_line());
+
+        // OnceLock semantics: the first installed executor handle wins.
+        let e1 = Arc::new(crate::exec::ExecStats::default());
+        e1.polls.fetch_add(7, Ordering::Relaxed);
+        m.set_exec_stats(e1.clone());
+        m.set_exec_stats(Arc::new(crate::exec::ExecStats::default()));
+        let got = m.exec_stats().expect("handle installed");
+        assert_eq!(got.polls.load(Ordering::Relaxed), 7);
+        assert_eq!(m.snapshot().exec.unwrap().polls, 7);
     }
 
     #[test]

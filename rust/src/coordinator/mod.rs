@@ -137,6 +137,7 @@ use crate::ciq::{self, BatchedDenseConfig, Ciq, CiqOptions, SolveKind, SolverCon
 use crate::exec;
 use crate::linalg::batched::gemv_gather;
 use crate::linalg::WorkspacePool;
+use crate::obs::trace::EventKind;
 use crate::operators::LinearOp;
 use crate::util::threadpool::{TaskOrder, TaskPool};
 use std::cell::{Cell, RefCell};
@@ -240,6 +241,9 @@ fn shard_id_label(id: &ShardId, kind: ReqKind) -> String {
 
 /// One request.
 struct Request {
+    /// Globally unique id ([`crate::obs::trace::next_request_id`]) correlating
+    /// this request's flight-recorder events across threads.
+    id: u64,
     op_name: String,
     kind: ReqKind,
     rhs: Vec<f64>,
@@ -522,12 +526,16 @@ impl SamplingService {
     pub fn submit(&self, op_name: &str, kind: ReqKind, rhs: Vec<f64>) -> Ticket {
         let (rtx, rrx) = mpsc::channel();
         let req = Request {
+            id: crate::obs::trace::next_request_id(),
             op_name: op_name.to_string(),
             kind,
             rhs,
+            // clock: request arrival — end-to-end latency is measured from
+            // here to the response send.
             enqueued: Instant::now(),
             respond: rtx,
         };
+        crate::trace!(EventKind::Enqueue, req.id, req.kind as u64);
         // ordering: Relaxed — telemetry counter; the request itself rides the
         // channel send, which is the synchronizing edge.
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -707,6 +715,7 @@ fn route_async(
         if let Some(t) = shard.timer.take() {
             t.cancel();
         }
+        crate::trace!(EventKind::FlushFull, shard.requests.len(), shard.requests[0].id);
         // Wait tuning targets Krylov batching economics; size-class shards
         // keep the static window (their flushes are GEMV-bound and the
         // per-op liveness check behind the controller's anti-resurrection
@@ -751,6 +760,7 @@ fn route_async(
             if shard.requests.is_empty() {
                 return;
             }
+            crate::trace!(EventKind::FlushDeadline, shard.requests.len(), shard.requests[0].id);
             // ordering: Relaxed — liveness telemetry; the idle-poll test reads
             // it after the service is quiescent (joined/awaited).
             fctx.metrics.timer_fires.fetch_add(1, Ordering::Relaxed);
@@ -916,14 +926,17 @@ fn warm_entry(
     if !live {
         return;
     }
+    crate::trace!(EventKind::WarmStart, entry.op.size(), 0);
     let solver = Ciq::new(config.ciq.clone());
     match ensure_context(entry, &solver, &config.policy, metrics, || {}) {
-        Ok(_) => {
+        Ok((_, _, built)) => {
+            crate::trace!(EventKind::WarmDone, u64::from(built), entry.op.size());
             // ordering: Relaxed — telemetry; warm-start tests spin on this
             // counter but only need eventual visibility, not an edge.
             metrics.warmed_operators.fetch_add(1, Ordering::Relaxed);
         }
         Err(_) => {
+            crate::trace!(EventKind::WarmFail, entry.op.size(), 0);
             // the next batch retries inline and surfaces the error
             // ordering: Relaxed — telemetry, same discipline as above.
             metrics.warm_failures.fetch_add(1, Ordering::Relaxed);
@@ -979,6 +992,7 @@ fn execute_batch(
     // workspace: a steady-traffic flush allocates nothing below the request
     // envelope once the workspace is warm
     let mut ws = workspaces.checkout();
+    crate::trace!(EventKind::WorkspaceCheckout, r, 0);
     let mut b = ws.take_mat(n, r);
     for (j, req) in valid.iter().enumerate() {
         for i in 0..n {
@@ -998,6 +1012,7 @@ fn execute_batch(
     // The AIMD clock starts *after* the context is in hand: one-time build
     // cost (or time blocked behind the warm pool's per-operator mutex) is
     // not flush latency and must not halve the shard's ceiling.
+    // clock: AIMD feedback measures the solve alone, not queueing or build.
     let flush_started = Instant::now();
     let result = ctx_res.and_then(|ctx| solver.solve_block_in(&mut ws, op.as_ref(), &b, kind, &ctx));
     ws.give_mat(b);
@@ -1027,7 +1042,9 @@ fn execute_batch(
                 // the response vector is the request envelope — the one
                 // allocation a request intrinsically owns
                 let col = res.solution.col(j);
-                metrics.record_latency(req.enqueued.elapsed());
+                let latency = req.enqueued.elapsed();
+                metrics.record_latency(latency);
+                crate::trace!(EventKind::Respond, req.id, latency.as_micros());
                 // ordering: Relaxed — telemetry; the result rides the response
                 // channel, which synchronizes with the waiting client.
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -1077,6 +1094,7 @@ fn execute_dense_batch(
         // well-defined if that ever changes
         _ => BatchedDenseConfig::default(),
     };
+    let flush_size = requests.len();
     // Group by operator, pinning each version once: a concurrent
     // replace_operator swaps the map entry but cannot mix versions inside
     // this flush.
@@ -1113,6 +1131,7 @@ fn execute_dense_batch(
         groups.into_iter().partition(|(entry, _)| entry.op.size() == class_n);
 
     let mut ws = workspaces.checkout();
+    crate::trace!(EventKind::WorkspaceCheckout, flush_size, 0);
     // Cold path: materialize + factor every operator version in this flush
     // whose dense pair is missing, as one batched Newton–Schulz solve. The
     // per-entry cache store is brief (never held across the build): two
@@ -1142,6 +1161,7 @@ fn execute_dense_batch(
             &dense_cfg.sqrt_opts(),
             &mut stack,
         );
+        crate::trace!(EventKind::DenseFactorBuild, to_build.len(), class_n);
         // ordering: Relaxed — telemetry; the pairs are published by the
         // entry mutex stores below.
         metrics.dense_factor_builds.fetch_add(to_build.len() as u64, Ordering::Relaxed);
@@ -1192,6 +1212,7 @@ fn execute_dense_batch(
                 .collect();
             gemv_gather(class_n, &mats, &xs, &mut ys);
         }
+        crate::trace!(EventKind::DenseServe, served, class_n);
         // ordering: Relaxed — telemetry; the results ride the response
         // channels, which synchronize with the waiting clients.
         metrics.dense_solves.fetch_add(served as u64, Ordering::Relaxed);
@@ -1200,7 +1221,9 @@ fn execute_dense_batch(
             // the response vector is the request envelope — the one
             // allocation a request intrinsically owns
             let sol = ys[ri * class_n..(ri + 1) * class_n].to_vec();
-            metrics.record_latency(req.enqueued.elapsed());
+            let latency = req.enqueued.elapsed();
+            metrics.record_latency(latency);
+            crate::trace!(EventKind::Respond, req.id, latency.as_micros());
             // ordering: Relaxed — telemetry, same discipline as above.
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             let _ = req.respond.send(Ok(sol));
@@ -1216,6 +1239,7 @@ fn execute_dense_batch(
         if reqs.is_empty() {
             continue;
         }
+        crate::trace!(EventKind::DenseFallback, reqs.len(), class_n);
         // ordering: Relaxed — telemetry counter.
         metrics.dense_fallbacks.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         let op_name = reqs[0].op_name.clone();

@@ -52,6 +52,20 @@ pub struct ExecStats {
     pub timer_fires: AtomicU64,
 }
 
+impl ExecStats {
+    /// Plain-data copy of the counters for [`crate::obs::MetricsSnapshot`].
+    pub fn snapshot(&self) -> crate::obs::ExecSnapshot {
+        // ordering: Relaxed — monitoring snapshot of independent counters;
+        // no cross-counter consistency is implied.
+        crate::obs::ExecSnapshot {
+            parks: self.parks.load(Ordering::Relaxed),
+            wakeups: self.wakeups.load(Ordering::Relaxed),
+            polls: self.polls.load(Ordering::Relaxed),
+            timer_fires: self.timer_fires.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Cross-thread wake state: the ready queue plus the condvar the executor
 /// thread parks on.
 struct ExecShared {
@@ -192,6 +206,7 @@ impl Executor {
                 }
             }
             // 2. fire due timers (their wakes land on the ready queue)
+            // clock: the wheel is advanced to real time once per loop turn.
             let fired = inner.wheel.borrow_mut().advance(Instant::now());
             if !fired.is_empty() {
                 // ordering: Relaxed — telemetry counter.
@@ -211,6 +226,7 @@ impl Executor {
             inner.shared.stats.parks.fetch_add(1, Ordering::Relaxed);
             match deadline {
                 Some(d) => {
+                    // clock: park timeout = remaining real time to deadline.
                     let timeout = d.saturating_duration_since(Instant::now());
                     let (guard, _) = inner.shared.cv.wait_timeout(ready, timeout).unwrap();
                     drop(guard);
@@ -257,6 +273,7 @@ impl Handle {
 
     /// A future that resolves `true` after `d` elapses (no cancel handle).
     pub fn sleep(&self, d: Duration) -> Sleep {
+        // clock: relative sleep is anchored at the call instant.
         self.timer_at(Instant::now() + d).0
     }
 

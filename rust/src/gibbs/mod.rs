@@ -151,6 +151,7 @@ pub fn reconstruct(cfg: &GibbsConfig, seed: u64) -> Result<GibbsResult> {
 
     let solver = Ciq::new(cfg.ciq.clone());
     for s in 0..cfg.samples {
+        // clock: per-sample wall-time reported in `GibbsResult::sample_secs`.
         let t0 = std::time::Instant::now();
         prec.gamma_obs = gamma_obs;
         prec.gamma_prior = gamma_prior;

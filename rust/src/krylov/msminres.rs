@@ -231,6 +231,10 @@ pub fn msminres_in(
             shift_work: 0,
         };
     }
+    // 1-in-N residual-trajectory sampling (`obs/solvetrace`): the decision
+    // is one relaxed load when sampling is off, and the history below is
+    // computed regardless — a sampled solve costs one strided copy at exit.
+    let sampled = crate::obs::solvetrace::should_sample();
 
     // state slabs (all zeroed by the workspace)
     let mut sc = ws.take_vec(nq * SC);
@@ -313,6 +317,9 @@ pub fn msminres_in(
     }
 
     history.truncate(iters);
+    if sampled {
+        crate::obs::solvetrace::submit(&history, iters, 1, opts.tol);
+    }
     let mut residuals = ws.take_vec(nq);
     for q in 0..nq {
         residuals[q] = sc[q * SC + SC_PHI].abs() / beta1;
@@ -471,6 +478,13 @@ pub fn msminres_block_in(
     active.truncate(nactive);
 
     let mut column_work = 0usize;
+    // 1-in-N residual-trajectory sampling (`obs/solvetrace`): the block path
+    // tracks no history normally, so the slab is pooled workspace scratch
+    // taken only on sampled solves and returned before exit — the zero-alloc
+    // steady state and the bit-for-bit owned/_in equivalence are unchanged.
+    let sampled = nactive > 0 && crate::obs::solvetrace::should_sample();
+    let mut hist = if sampled { Some(ws.take_vec(opts.max_iters)) } else { None };
+    let mut hist_len = 0usize;
     // reused across iterations; swapped for narrower pooled panels when
     // compaction shrinks the active width
     let mut vmat = ws.take_mat(n, nactive.max(1));
@@ -560,10 +574,33 @@ pub fn msminres_block_in(
             beta_ks[j] = beta_next;
         }
 
+        if let Some(h) = hist.as_mut() {
+            // Fig. 2 curve point: max over this iteration's active columns of
+            // the per-column max-over-shifts relative residual. Computed
+            // before the retire pass so a column's sub-tol terminal value
+            // still lands in the trajectory.
+            let mut mx = 0.0f64;
+            for &j in active.iter() {
+                for q in 0..nq {
+                    let rr = sc[(j * nq + q) * SC + SC_PHI].abs() / beta1s[j];
+                    if rr > mx {
+                        mx = rr;
+                    }
+                }
+            }
+            h[hist_len] = mx;
+            hist_len += 1;
+        }
+
         // retire converged columns (stable order) so the next matmat shrinks
         if any_done {
             active.retain(|&j| cdone[j] == 0);
         }
+    }
+
+    if let Some(h) = hist.take() {
+        crate::obs::solvetrace::submit(&h[..hist_len], hist_len, r, opts.tol);
+        ws.give_vec(h);
     }
 
     // per-shift residuals: max over columns with a nonzero RHS

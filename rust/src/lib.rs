@@ -28,9 +28,11 @@
 //! ([`svgp`]), Thompson-sampling Bayesian optimization ([`bo`]), a Gibbs
 //! sampler for image super-resolution ([`gibbs`]), a PJRT runtime that
 //! executes AOT-compiled JAX/Pallas artifacts ([`runtime`]), a
-//! dependency-free async executor with a hierarchical timer wheel ([`exec`])
-//! and a batching sampling-service coordinator ([`coordinator`]) whose
-//! dispatcher runs on it.
+//! dependency-free async executor with a hierarchical timer wheel ([`exec`]),
+//! a batching sampling-service coordinator ([`coordinator`]) whose
+//! dispatcher runs on it, and a flight-recorder observability layer
+//! ([`obs`]: lock-free histograms, structured solve traces, exportable
+//! service snapshots).
 //!
 //! ## Quickstart
 //!
@@ -65,6 +67,7 @@
 #![deny(unused_unsafe)]
 
 pub mod util;
+pub mod obs;
 pub mod exec;
 pub mod rng;
 pub mod linalg;

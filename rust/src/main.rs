@@ -105,6 +105,7 @@ fn cmd_serve(args: &Args) -> ciq::Result<()> {
         },
         ops,
     );
+    // clock: end-to-end demo wall-time printed at exit.
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = (0..requests)
         .map(|i| {

@@ -1,0 +1,365 @@
+//! Lock-free log-bucketed histograms (HDR-style) for hot-path telemetry.
+//!
+//! Layout: values below `2^SUB_BITS` (= 32) land in one exact bucket each;
+//! above that, each power-of-two octave is split into `2^(SUB_BITS-1)` (= 16)
+//! linear sub-buckets. A bucket covering `[lo, hi]` therefore has
+//! `(hi - lo) / lo < 1/16`, so any percentile reported from the bucket upper
+//! bound overshoots the true sample by **at most 6.25 %** (`REL_ERR`), and
+//! values `< 32` are exact. The whole `u64` range fits in `NUM_BUCKETS` = 976
+//! counters (~7.6 KiB), so memory is fixed no matter how long the service
+//! runs — unlike the unbounded `Mutex<Vec<u64>>` this replaces.
+//!
+//! `record` is one `fetch_add` on the bucket plus three bookkeeping atomics
+//! (count/sum/max): O(1), wait-free, no mutex, no allocation. `percentile`
+//! copies the counters into a fixed stack array and walks it: O(buckets) and
+//! allocation-free (regression-tested in `alloc_regression`). Snapshots are
+//! plain counter vectors and merge by addition, so per-shard or per-process
+//! histograms aggregate losslessly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log₂ of the number of exact low buckets; each octave above them gets
+/// `2^(SUB_BITS-1)` linear sub-buckets.
+pub const SUB_BITS: u32 = 5;
+const SUBS: u64 = 1 << SUB_BITS; // 32 exact buckets for values 0..32
+const HALF: usize = (SUBS / 2) as usize; // 16 sub-buckets per octave
+/// Total bucket count covering the full `u64` range.
+pub const NUM_BUCKETS: usize = SUBS as usize + (64 - SUB_BITS as usize) * HALF;
+/// Documented relative-error bound of percentile reports: the reported value
+/// is `>=` the true sample and overshoots it by at most this factor.
+pub const REL_ERR: f64 = 1.0 / HALF as f64;
+
+/// Bucket index for a value: identity below `SUBS`, log-linear above.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUBS {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS since v >= SUBS
+        let major = (msb - SUB_BITS + 1) as usize;
+        let sub = (v >> major) as usize; // in [HALF, 2*HALF)
+        SUBS as usize + (major - 1) * HALF + (sub - HALF)
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+fn bucket_lo(i: usize) -> u64 {
+    if i < SUBS as usize {
+        i as u64
+    } else {
+        let major = (i - SUBS as usize) / HALF + 1;
+        let off = (i - SUBS as usize) % HALF;
+        ((HALF + off) as u64) << major
+    }
+}
+
+/// Inclusive upper bound of bucket `i`.
+fn bucket_hi(i: usize) -> u64 {
+    if i < SUBS as usize {
+        i as u64
+    } else {
+        let major = (i - SUBS as usize) / HALF + 1;
+        bucket_lo(i) + (1u64 << major) - 1
+    }
+}
+
+/// Fixed-memory concurrent histogram: O(1) wait-free `record`, O(buckets)
+/// allocation-free `percentile`, mergeable [`HistSnapshot`]s. See the module
+/// docs for the bucketing scheme and the `REL_ERR` error bound.
+pub struct AtomicHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        AtomicHistogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Wait-free: four relaxed atomic RMWs, no branch on
+    /// contention, no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        // ordering: Relaxed — independent telemetry counters; readers take
+        // approximate snapshots and never need cross-counter consistency.
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        // ordering: Relaxed — monitoring read of an independent counter.
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (exact, unlike the bucketed values).
+    pub fn sum(&self) -> u64 {
+        // ordering: Relaxed — monitoring read of an independent counter.
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded sample (exact).
+    pub fn max(&self) -> u64 {
+        // ordering: Relaxed — monitoring read of an independent counter.
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean of recorded samples, 0.0 when empty (sum and count are exact).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Percentile `p` in `[0, 100]`, or `None` when no samples were recorded
+    /// (distinguishing "no data" from a true 0 sample — the bug the old
+    /// clone-and-sort path had). The result is the bucket upper bound capped
+    /// at the observed max: `true <= reported <= true * (1 + REL_ERR)`.
+    /// Allocation-free: the counters are copied into a fixed stack array.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        let mut counts = [0u64; NUM_BUCKETS];
+        let mut total = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            // ordering: Relaxed — approximate snapshot; racing records may
+            // land on either side of the copy, both are valid reports.
+            let c = b.load(Ordering::Relaxed);
+            counts[i] = c;
+            total += c;
+        }
+        percentile_from(&counts, total, self.max(), p)
+    }
+
+    /// Point-in-time copy of the counters for merging and serialization.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = vec![0u64; NUM_BUCKETS];
+        let mut total = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            // ordering: Relaxed — approximate snapshot, as in `percentile`.
+            let c = b.load(Ordering::Relaxed);
+            counts[i] = c;
+            total += c;
+        }
+        HistSnapshot { counts, count: total, sum: self.sum(), max: self.max() }
+    }
+}
+
+/// Shared percentile walk over a counter array: rank `ceil(p/100 * total)`
+/// (clamped to `[1, total]`), reported as the covering bucket's upper bound
+/// capped at `max`.
+fn percentile_from(counts: &[u64], total: u64, max: u64, p: f64) -> Option<u64> {
+    if total == 0 {
+        return None;
+    }
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * total as f64).ceil() as u64;
+    let rank = rank.clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(bucket_hi(i).min(max));
+        }
+    }
+    Some(max)
+}
+
+/// Mergeable point-in-time histogram snapshot. `count` is the sum of the
+/// bucket counters at copy time (racing `record`s may make the independently
+/// read `sum`/`max` trail or lead by a few samples; all reads are valid
+/// telemetry).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl HistSnapshot {
+    /// An empty snapshot (identity element for `merge`).
+    pub fn empty() -> Self {
+        HistSnapshot { counts: vec![0u64; NUM_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Same semantics and error bound as [`AtomicHistogram::percentile`].
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        percentile_from(&self.counts, self.count, self.max, p)
+    }
+
+    /// Fold another snapshot into this one (counters add, maxima max): the
+    /// merge of per-shard histograms is the histogram of the union.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty buckets as `(lo, hi, count)`, ascending.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lo(i), bucket_hi(i), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_contiguous() {
+        // Every bucket boundary maps to itself and indices never decrease.
+        let mut prev = 0usize;
+        for v in 0..4096u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index decreased at v={v}");
+            assert!(bucket_lo(i) <= v && v <= bucket_hi(i), "v={v} outside bucket {i}");
+            prev = i;
+        }
+        for shift in SUB_BITS..63 {
+            let v = 1u64 << shift;
+            for probe in [v - 1, v, v + 1, v + (v >> 1)] {
+                let i = bucket_index(probe);
+                assert!(bucket_lo(i) <= probe && probe <= bucket_hi(i));
+            }
+        }
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = AtomicHistogram::new();
+        for v in [0u64, 1, 5, 12, 13, 27, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), Some(0));
+        assert_eq!(h.percentile(100.0), Some(31));
+        // rank 4 of 7 → the 4th smallest = 12
+        assert_eq!(h.percentile(50.0), Some(12));
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 89);
+        assert_eq!(h.max(), 31);
+    }
+
+    #[test]
+    fn empty_histogram_reports_none_and_zero_is_distinct() {
+        // Regression for the old `latency_percentile_us` conflating "no
+        // data" with a true 0 µs sample.
+        let h = AtomicHistogram::new();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.snapshot().percentile(99.0), None);
+        h.record(0);
+        assert_eq!(h.percentile(50.0), Some(0));
+    }
+
+    #[test]
+    fn percentiles_within_documented_error_bound() {
+        // Log-uniform synthetic distribution: exact sorted percentiles vs
+        // histogram reports must satisfy true <= reported <= true*(1+REL_ERR).
+        let h = AtomicHistogram::new();
+        let mut vals: Vec<u64> = Vec::new();
+        let mut x = 17u64;
+        for i in 0..10_000u64 {
+            // xorshift; spread samples over ~6 decades
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = (x % 1_000_000).max(i % 97);
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * vals.len() as f64).ceil() as usize;
+            let truth = vals[rank.clamp(1, vals.len()) - 1];
+            let got = h.percentile(p).unwrap();
+            assert!(got >= truth, "p{p}: reported {got} < true {truth}");
+            let bound = (truth as f64 * (1.0 + REL_ERR)).ceil() as u64;
+            assert!(got <= bound, "p{p}: reported {got} > bound {bound} (true {truth})");
+        }
+    }
+
+    #[test]
+    fn snapshots_merge_to_union() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        let u = AtomicHistogram::new();
+        for v in [3u64, 700, 45_000] {
+            a.record(v);
+            u.record(v);
+        }
+        for v in [9u64, 801, 2_000_000] {
+            b.record(v);
+            u.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m, u.snapshot());
+        assert_eq!(m.count(), 6);
+        assert_eq!(m.max(), 2_000_000);
+        assert_eq!(m.buckets().map(|(_, _, c)| c).sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(AtomicHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1000 + i % 500);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().count(), 40_000);
+    }
+}

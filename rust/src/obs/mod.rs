@@ -1,0 +1,32 @@
+//! Observability: the dependency-free instrumentation layer under the
+//! serving stack (DESIGN.md §8).
+//!
+//! Three pillars, each costing (provably) nothing when idle or disabled:
+//!
+//! - [`hist`] — lock-free HDR-style [`hist::AtomicHistogram`]s: fixed
+//!   memory, O(1) wait-free record, percentiles within a documented ≤ 6.25 %
+//!   relative error, mergeable snapshots. These back the coordinator's
+//!   latency / batch-size / iteration telemetry, replacing unbounded
+//!   `Mutex<Vec<_>>`s on the completion path.
+//! - [`trace`] — a flight recorder: per-thread seqlock-published event
+//!   rings behind the [`trace!`](crate::trace) macro (one relaxed-load
+//!   branch when off), drained to a [`trace::TraceSnapshot`] and exportable
+//!   as Chrome trace-event JSON for Perfetto.
+//! - [`solvetrace`] + [`snapshot`] — 1-in-N sampled per-solve residual
+//!   trajectories out of `msminres_in`/`msminres_block_in` (Fig. 2 curves
+//!   from live traffic), and the typed, JSON/Prometheus-serializable
+//!   [`snapshot::MetricsSnapshot`].
+//!
+//! [`clock`] pins the shared monotonic time base; structlint rule 6 keeps
+//! every other `Instant::now()`/`SystemTime::now()` in the tree justified
+//! with a `// clock:` comment so timing stays auditable and mockable.
+
+pub mod clock;
+pub mod hist;
+pub mod snapshot;
+pub mod solvetrace;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, HistSnapshot};
+pub use snapshot::{ExecSnapshot, MetricsSnapshot};
+pub use trace::{EventKind, TraceEvent, TraceSnapshot};

@@ -1,0 +1,384 @@
+//! Typed, exportable service snapshots: the machine-readable successor to
+//! the coordinator's format-string-only `summary()`.
+//!
+//! [`MetricsSnapshot`] is a plain-data copy of every service counter, the
+//! three telemetry histograms, the per-shard controller state, and the
+//! executor's liveness counters. It serializes as JSON (`to_json`) and as
+//! Prometheus text exposition format (`to_prometheus`); `to_line` renders
+//! the legacy one-line log summary so existing log scrapers keep working.
+//! All serializers are hand-rolled — the crate stays dependency-free.
+
+use super::hist::HistSnapshot;
+
+/// Executor-layer liveness counters (async backend), copied out of
+/// `exec::ExecStats` at snapshot time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecSnapshot {
+    pub parks: u64,
+    pub wakeups: u64,
+    pub polls: u64,
+    pub timer_fires: u64,
+}
+
+/// Point-in-time copy of the whole service's telemetry. Counters are read
+/// relaxed and independently: totals are exact per counter, cross-counter
+/// consistency is approximate (standard monitoring semantics).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub policy: String,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub operator_replacements: u64,
+    pub warmed_operators: u64,
+    pub warm_failures: u64,
+    pub warm_starts: u64,
+    pub workspace_checkouts: u64,
+    pub workspace_grows: u64,
+    pub workspace_bytes_high_water: u64,
+    pub saved_mvms: u64,
+    pub saved_column_work: u64,
+    pub column_work: u64,
+    pub dispatcher_wakeups: u64,
+    pub timer_fires: u64,
+    pub dense_solves: u64,
+    pub dense_fallbacks: u64,
+    pub dense_factor_builds: u64,
+    pub dense_crossover_n: u64,
+    /// End-to-end request latency in µs.
+    pub latency_us: HistSnapshot,
+    /// Dispatched batch sizes.
+    pub batch_sizes: HistSnapshot,
+    /// msMINRES iterations per served RHS (the Fig. S7 data).
+    pub iterations: HistSnapshot,
+    /// `(shard, current depth, max depth)`, sorted.
+    pub shard_depths: Vec<(String, usize, usize)>,
+    /// `(shard, adaptive batch ceiling)`, sorted.
+    pub batch_ceilings: Vec<(String, usize)>,
+    /// `(shard, adaptive flush wait µs)`, sorted.
+    pub shard_waits: Vec<(String, u64)>,
+    /// `(size-class shard, requests served dense)`, sorted.
+    pub dense_shards: Vec<(String, u64)>,
+    /// Executor counters when the async backend runs.
+    pub exec: Option<ExecSnapshot>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Prometheus label values escape `\`, `"` and newlines.
+fn prom_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn json_hist(h: &HistSnapshot) -> String {
+    let mut out = format!(
+        "{{\"count\":{},\"sum\":{},\"max\":{},\"p50\":{},\"p99\":{},\"p999\":{},\"buckets\":[",
+        h.count(),
+        h.sum(),
+        h.max(),
+        json_opt(h.percentile(50.0)),
+        json_opt(h.percentile(99.0)),
+        json_opt(h.percentile(99.9)),
+    );
+    let mut first = true;
+    for (lo, hi, c) in h.buckets() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!("[{lo},{hi},{c}]"));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn json_opt(v: Option<u64>) -> String {
+    match v {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+impl MetricsSnapshot {
+    /// The snapshot as a single JSON object (counters, histograms with
+    /// non-empty buckets, per-shard maps, executor counters).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"policy\":\"{}\"", json_escape(&self.policy)));
+        for (k, v) in self.counters() {
+            out.push_str(&format!(",\"{k}\":{v}"));
+        }
+        out.push_str(&format!(",\"latency_us\":{}", json_hist(&self.latency_us)));
+        out.push_str(&format!(",\"batch_sizes\":{}", json_hist(&self.batch_sizes)));
+        out.push_str(&format!(",\"iterations\":{}", json_hist(&self.iterations)));
+        out.push_str(",\"shard_depths\":{");
+        for (i, (k, cur, max)) in self.shard_depths.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":[{cur},{max}]", json_escape(k)));
+        }
+        out.push_str("},\"batch_ceilings\":{");
+        for (i, (k, c)) in self.batch_ceilings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{c}", json_escape(k)));
+        }
+        out.push_str("},\"shard_waits_us\":{");
+        for (i, (k, us)) in self.shard_waits.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{us}", json_escape(k)));
+        }
+        out.push_str("},\"dense_shards\":{");
+        for (i, (k, c)) in self.dense_shards.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{c}", json_escape(k)));
+        }
+        out.push('}');
+        match &self.exec {
+            Some(e) => out.push_str(&format!(
+                ",\"exec\":{{\"parks\":{},\"wakeups\":{},\"polls\":{},\"timer_fires\":{}}}",
+                e.parks, e.wakeups, e.polls, e.timer_fires
+            )),
+            None => out.push_str(",\"exec\":null"),
+        }
+        out.push('}');
+        out
+    }
+
+    /// The snapshot in Prometheus text exposition format: counters as
+    /// `counter`, histograms as `summary` quantiles (p50/p99/p999 with the
+    /// documented ≤ 6.25 % overshoot), per-shard state as labeled gauges.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters() {
+            out.push_str(&format!("# TYPE ciq_{k} counter\nciq_{k} {v}\n"));
+        }
+        for (name, h) in [
+            ("request_latency_us", &self.latency_us),
+            ("batch_size", &self.batch_sizes),
+            ("solve_iterations", &self.iterations),
+        ] {
+            out.push_str(&format!("# TYPE ciq_{name} summary\n"));
+            for (q, p) in [("0.5", 50.0), ("0.99", 99.0), ("0.999", 99.9)] {
+                if let Some(v) = h.percentile(p) {
+                    out.push_str(&format!("ciq_{name}{{quantile=\"{q}\"}} {v}\n"));
+                }
+            }
+            out.push_str(&format!("ciq_{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("ciq_{name}_count {}\n", h.count()));
+        }
+        out.push_str("# TYPE ciq_shard_depth gauge\n");
+        for (k, cur, _) in &self.shard_depths {
+            out.push_str(&format!("ciq_shard_depth{{shard=\"{}\"}} {cur}\n", prom_escape(k)));
+        }
+        out.push_str("# TYPE ciq_shard_batch_ceiling gauge\n");
+        for (k, c) in &self.batch_ceilings {
+            out.push_str(&format!(
+                "ciq_shard_batch_ceiling{{shard=\"{}\"}} {c}\n",
+                prom_escape(k)
+            ));
+        }
+        out.push_str("# TYPE ciq_shard_wait_us gauge\n");
+        for (k, us) in &self.shard_waits {
+            out.push_str(&format!("ciq_shard_wait_us{{shard=\"{}\"}} {us}\n", prom_escape(k)));
+        }
+        out.push_str("# TYPE ciq_dense_shard_solves counter\n");
+        for (k, c) in &self.dense_shards {
+            out.push_str(&format!("ciq_dense_shard_solves{{shard=\"{}\"}} {c}\n", prom_escape(k)));
+        }
+        if let Some(e) = &self.exec {
+            for (k, v) in [
+                ("exec_parks", e.parks),
+                ("exec_wakeups", e.wakeups),
+                ("exec_polls", e.polls),
+                ("exec_timer_fires", e.timer_fires),
+            ] {
+                out.push_str(&format!("# TYPE ciq_{k} counter\nciq_{k} {v}\n"));
+            }
+        }
+        out
+    }
+
+    /// The legacy one-line log summary (`Metrics::summary` delegates here).
+    pub fn to_line(&self) -> String {
+        format!(
+            "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
+             mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
+             saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={} \
+             dense_solves={} dense_fallbacks={} dense_builds={} dense_crossover_n={}",
+            self.policy,
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.latency_us.percentile(50.0).unwrap_or(0),
+            self.latency_us.percentile(99.0).unwrap_or(0),
+            self.batch_sizes.mean(),
+            self.iterations.mean(),
+            self.cache_hits,
+            self.cache_misses,
+            self.warmed_operators,
+            self.warm_starts,
+            self.saved_mvms,
+            self.saved_column_work,
+            self.dispatcher_wakeups,
+            self.timer_fires,
+            self.workspace_checkouts,
+            self.workspace_grows,
+            self.workspace_bytes_high_water,
+            self.dense_solves,
+            self.dense_fallbacks,
+            self.dense_factor_builds,
+            self.dense_crossover_n,
+        )
+    }
+
+    /// The scalar counters as stable `(name, value)` pairs — the one list
+    /// both serializers iterate, so they can never drift apart.
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests_submitted", self.submitted),
+            ("requests_completed", self.completed),
+            ("requests_failed", self.failed),
+            ("cache_hits", self.cache_hits),
+            ("cache_misses", self.cache_misses),
+            ("operator_replacements", self.operator_replacements),
+            ("warmed_operators", self.warmed_operators),
+            ("warm_failures", self.warm_failures),
+            ("warm_starts", self.warm_starts),
+            ("workspace_checkouts", self.workspace_checkouts),
+            ("workspace_grows", self.workspace_grows),
+            ("workspace_bytes_high_water", self.workspace_bytes_high_water),
+            ("saved_mvms", self.saved_mvms),
+            ("saved_column_work", self.saved_column_work),
+            ("column_work", self.column_work),
+            ("dispatcher_wakeups", self.dispatcher_wakeups),
+            ("timer_fires", self.timer_fires),
+            ("dense_solves", self.dense_solves),
+            ("dense_fallbacks", self.dense_fallbacks),
+            ("dense_factor_builds", self.dense_factor_builds),
+            ("dense_crossover_n", self.dense_crossover_n),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::AtomicHistogram;
+
+    fn sample() -> MetricsSnapshot {
+        let lat = AtomicHistogram::new();
+        lat.record(250);
+        lat.record(900);
+        let batch = AtomicHistogram::new();
+        batch.record(4);
+        let iters = AtomicHistogram::new();
+        iters.record(37);
+        MetricsSnapshot {
+            policy: "CachedBounds".into(),
+            submitted: 2,
+            completed: 2,
+            failed: 0,
+            cache_hits: 1,
+            cache_misses: 1,
+            operator_replacements: 0,
+            warmed_operators: 1,
+            warm_failures: 0,
+            warm_starts: 0,
+            workspace_checkouts: 2,
+            workspace_grows: 1,
+            workspace_bytes_high_water: 4096,
+            saved_mvms: 15,
+            saved_column_work: 8,
+            column_work: 40,
+            dispatcher_wakeups: 2,
+            timer_fires: 1,
+            dense_solves: 0,
+            dense_fallbacks: 0,
+            dense_factor_builds: 0,
+            dense_crossover_n: 0,
+            latency_us: lat.snapshot(),
+            batch_sizes: batch.snapshot(),
+            iterations: iters.snapshot(),
+            shard_depths: vec![("a/Sample".into(), 1, 3)],
+            batch_ceilings: vec![("a/Sample".into(), 16)],
+            shard_waits: vec![("a/Sample".into(), 1500)],
+            dense_shards: vec![],
+            exec: Some(ExecSnapshot { parks: 5, wakeups: 6, polls: 7, timer_fires: 1 }),
+        }
+    }
+
+    #[test]
+    fn json_contains_counters_histograms_and_shards() {
+        let s = sample().to_json();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+        assert!(s.contains("\"policy\":\"CachedBounds\""));
+        assert!(s.contains("\"requests_submitted\":2"));
+        assert!(s.contains("\"latency_us\":{\"count\":2"));
+        assert!(s.contains("\"shard_depths\":{\"a/Sample\":[1,3]}"));
+        assert!(s.contains("\"exec\":{\"parks\":5"));
+        // crude structural check: balanced braces and quotes
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('"').count() % 2, 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let s = sample().to_prometheus();
+        assert!(s.contains("# TYPE ciq_requests_completed counter\nciq_requests_completed 2\n"));
+        assert!(s.contains("# TYPE ciq_request_latency_us summary\n"));
+        assert!(s.contains("ciq_request_latency_us{quantile=\"0.5\"}"));
+        assert!(s.contains("ciq_request_latency_us_count 2\n"));
+        assert!(s.contains("ciq_shard_depth{shard=\"a/Sample\"} 1\n"));
+        assert!(s.contains("ciq_exec_polls 7\n"));
+        // every non-comment line is `name{labels} value` or `name value`
+        for line in s.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn legacy_line_format_preserved() {
+        let line = sample().to_line();
+        assert!(line.contains("policy=CachedBounds"));
+        assert!(line.contains("cache_hit=1"));
+        assert!(line.contains("mean_batch=4.0"));
+        assert!(line.contains("dense_crossover_n=0"));
+    }
+
+    #[test]
+    fn escaping_is_safe_for_hostile_names() {
+        let mut s = sample();
+        s.policy = "quo\"te\\back\nnew".into();
+        s.shard_depths = vec![("bad\"shard".into(), 0, 0)];
+        let json = s.to_json();
+        assert!(json.contains("quo\\\"te\\\\back\\nnew"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let prom = s.to_prometheus();
+        assert!(prom.contains("shard=\"bad\\\"shard\""));
+    }
+}

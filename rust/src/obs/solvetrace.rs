@@ -1,0 +1,206 @@
+//! Sampled per-solve residual trajectories: Fig. 2-style residual-vs-MVM
+//! curves reconstructed from live traffic.
+//!
+//! `msminres_in`/`msminres_block_in` ask [`should_sample`] once per solve
+//! (one relaxed load when sampling is off; a relaxed counter increment and a
+//! modulo when on — configurable 1-in-N). A sampled solve's residual history
+//! already lives in pooled workspace scratch; at solve exit [`submit`]
+//! copies up to [`TRAJ_CAP`] strided points of it (always including the
+//! final residual) into one of a fixed set of pre-allocated slots — atomics
+//! only, no mutex, no allocation, so the zero-alloc steady-state proofs in
+//! `alloc_regression` hold with sampling enabled.
+//!
+//! Slots are claimed round-robin with an atomic counter and published with
+//! the same per-slot seqlock protocol as the flight-recorder ring
+//! (`obs/trace.rs`); [`drain`] skips torn slots. A slot is only reused after
+//! `SLOTS` further samples, so a drain racing a wrap-around loses (detects)
+//! at most the oldest trajectories.
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Residual points stored per trajectory (longer solves are strided down).
+pub const TRAJ_CAP: usize = 128;
+/// Trajectory slots held by the sampler (fixed memory: `SLOTS * TRAJ_CAP`
+/// residuals plus headers).
+pub const SLOTS: usize = 64;
+
+struct TrajSlot {
+    /// Seqlock generation: `2k+1` while claim `k` writes, `2k+2` published.
+    seq: AtomicU64,
+    iters: AtomicU64,
+    cols: AtomicU64,
+    points: AtomicU64,
+    tol_bits: AtomicU64,
+    vals: Box<[AtomicU64]>,
+}
+
+impl TrajSlot {
+    fn new() -> TrajSlot {
+        TrajSlot {
+            seq: AtomicU64::new(0),
+            iters: AtomicU64::new(0),
+            cols: AtomicU64::new(0),
+            points: AtomicU64::new(0),
+            tol_bits: AtomicU64::new(0),
+            vals: (0..TRAJ_CAP).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+static EVERY: AtomicU64 = AtomicU64::new(0);
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+static NEXT: AtomicUsize = AtomicUsize::new(0);
+static SLAB: OnceLock<Box<[TrajSlot]>> = OnceLock::new();
+
+/// Sample one in `every` solves (`0` disables sampling). The slot slab is
+/// allocated here, off the solve path, on first enable.
+pub fn configure(every: u64) {
+    if every > 0 {
+        SLAB.get_or_init(|| (0..SLOTS).map(|_| TrajSlot::new()).collect());
+    }
+    // ordering: Relaxed — the sampling rate guards no data; solvers racing
+    // the store just use the old rate for one more solve.
+    EVERY.store(every, Ordering::Relaxed);
+}
+
+/// Per-solve sampling draw. One relaxed load when sampling is off.
+#[inline]
+pub fn should_sample() -> bool {
+    // ordering: Relaxed — see `configure`; no payload rides the rate.
+    let every = EVERY.load(Ordering::Relaxed);
+    if every == 0 {
+        return false;
+    }
+    // ordering: Relaxed — the 1-in-N draw only needs RMW atomicity.
+    COUNTER.fetch_add(1, Ordering::Relaxed) % every == 0
+}
+
+/// Publish one sampled solve's residual history (`history[k]` = relative
+/// residual after iteration `k+1`, `iters` entries valid). Strides the
+/// history down to at most [`TRAJ_CAP`] points, always keeping the final
+/// residual. Atomics only: no mutex, no allocation.
+pub fn submit(history: &[f64], iters: usize, cols: usize, tol: f64) {
+    let Some(slab) = SLAB.get() else { return };
+    let iters = iters.min(history.len());
+    if iters == 0 {
+        return;
+    }
+    // ordering: Relaxed — slot claims only need RMW atomicity; the per-slot
+    // seqlock below is what publishes the payload.
+    let k = NEXT.fetch_add(1, Ordering::Relaxed);
+    let slot = &slab[k % SLOTS];
+    let gen = 2 * k as u64;
+    // Seqlock write protocol (same shape as obs/trace.rs):
+    // ordering: Relaxed — the Release fence below orders the odd marker
+    // before the payload stores for any reader that sees the payload.
+    slot.seq.store(gen + 1, Ordering::Relaxed);
+    fence(Ordering::Release);
+    let stride = iters.div_ceil(TRAJ_CAP).max(1);
+    let mut n = 0usize;
+    for j in (0..iters).step_by(stride) {
+        // ordering: Relaxed — payload rides the Release publish below.
+        slot.vals[n].store(history[j].to_bits(), Ordering::Relaxed);
+        n += 1;
+    }
+    // Termination must be visible even when the stride skips the last
+    // iteration: the final point is always the final residual.
+    // ordering: Relaxed — payload store, as above.
+    slot.vals[n - 1].store(history[iters - 1].to_bits(), Ordering::Relaxed);
+    // ordering: Relaxed — payload stores, as above.
+    slot.iters.store(iters as u64, Ordering::Relaxed);
+    slot.cols.store(cols as u64, Ordering::Relaxed);
+    slot.points.store(n as u64, Ordering::Relaxed);
+    slot.tol_bits.store(tol.to_bits(), Ordering::Relaxed);
+    // ordering: Release — publishes the payload to `drain`'s Acquire load.
+    slot.seq.store(gen + 2, Ordering::Release);
+}
+
+/// One sampled solve's residual trajectory.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// Strided relative residuals; the last entry is the final residual.
+    pub residuals: Vec<f64>,
+    /// True iteration (MVM) count of the solve.
+    pub iters: usize,
+    /// Right-hand-side columns of the solve (1 for the vector path).
+    pub cols: usize,
+    /// Convergence tolerance the solve ran with.
+    pub tol: f64,
+}
+
+/// Copy every cleanly-published trajectory out of the slab (newest-claimed
+/// slots last). Skips torn slots; never blocks a sampler.
+pub fn drain() -> Vec<Trajectory> {
+    let mut out = Vec::new();
+    let Some(slab) = SLAB.get() else { return out };
+    let mut stamped: Vec<(u64, Trajectory)> = Vec::new();
+    for slot in slab.iter() {
+        // ordering: Acquire — pairs with `submit`'s Release publish.
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 < 2 || s1 % 2 == 1 {
+            continue;
+        }
+        let n = slot.points.load(Ordering::Relaxed) as usize;
+        if n == 0 || n > TRAJ_CAP {
+            continue;
+        }
+        let mut residuals = Vec::with_capacity(n);
+        for v in slot.vals.iter().take(n) {
+            // ordering: Relaxed — validated by the generation re-read below.
+            residuals.push(f64::from_bits(v.load(Ordering::Relaxed)));
+        }
+        let iters = slot.iters.load(Ordering::Relaxed) as usize;
+        let cols = slot.cols.load(Ordering::Relaxed) as usize;
+        let tol = f64::from_bits(slot.tol_bits.load(Ordering::Relaxed));
+        // ordering: Acquire fence — seqlock read protocol: orders the payload
+        // loads above before the generation re-read below.
+        fence(Ordering::Acquire);
+        // ordering: Relaxed — ordered by the fence above.
+        let s2 = slot.seq.load(Ordering::Relaxed);
+        if s1 != s2 {
+            continue;
+        }
+        stamped.push((s1, Trajectory { residuals, iters, cols, tol }));
+    }
+    stamped.sort_by_key(|(gen, _)| *gen);
+    out.extend(stamped.into_iter().map(|(_, t)| t));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One combined test: the sampler state (rate, draw counter, slab) is
+    // process-global, so splitting these into parallel #[test]s would race
+    // on `configure`.
+    #[test]
+    fn sampling_draw_honors_rate_and_strided_submit_keeps_final() {
+        configure(1);
+        assert!(should_sample());
+        // A long monotone history strides down to TRAJ_CAP points with the
+        // final residual preserved exactly.
+        let iters = 1000usize;
+        let history: Vec<f64> = (0..iters).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        submit(&history, iters, 4, 1e-8);
+        let trajs = drain();
+        let t = trajs.last().expect("one trajectory published");
+        assert_eq!(t.iters, iters);
+        assert_eq!(t.cols, 4);
+        assert!(t.residuals.len() <= TRAJ_CAP);
+        assert_eq!(*t.residuals.last().unwrap(), 1.0 / iters as f64);
+        for w in t.residuals.windows(2) {
+            assert!(w[1] <= w[0], "strided trajectory stays monotone");
+        }
+        configure(0);
+        assert!(!should_sample());
+
+        // 1-in-N draw: the modulo counter is shared process-wide, so allow
+        // slack for any concurrent solver test consuming draws.
+        configure(4);
+        let hits = (0..400).filter(|_| should_sample()).count();
+        assert!((80..=120).contains(&hits), "1-in-4 sampling drew {hits}/400");
+        configure(0);
+    }
+}

@@ -1,0 +1,498 @@
+//! Flight recorder: per-thread bounded ring buffers of timestamped
+//! structured events, drained into a [`TraceSnapshot`] and exportable as
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! # Cost contract
+//!
+//! - **Disabled** (the default): every [`trace!`](crate::trace) site is one
+//!   relaxed atomic load and a branch — no timestamp, no TLS access, no
+//!   write. Bench §10 (`perf_hotpath`) asserts this stays within noise of a
+//!   plain branch.
+//! - **Enabled**: one clock read plus six relaxed stores and two
+//!   fence/release operations into a fixed, pre-registered ring — no mutex,
+//!   and no allocation after a thread's first event (registration creates
+//!   the thread's ring once; `alloc_regression` covers the steady state).
+//!
+//! # Memory model
+//!
+//! Each thread owns one fixed-capacity ring (`DEFAULT_CAP` events, oldest
+//! overwritten first) and is its only writer; a drain may run concurrently
+//! from any thread. Every slot is published with a per-slot seqlock: the
+//! writer marks the slot odd, Release-fences, writes the payload, then
+//! Release-stores the even generation; the reader Acquire-loads the
+//! generation, reads the payload, Acquire-fences, and re-reads the
+//! generation — a mismatch or odd value means a torn slot, which is skipped,
+//! never surfaced. All primitives route through `util::sync`, so under
+//! `--cfg ciq_model` the same code runs inside the deterministic
+//! interleaving checker (`tests/model_exec.rs`, mutation M6 validates that
+//! the publish ordering is load-bearing).
+
+use crate::util::sync::{fence, AtomicBool, AtomicU64, Mutex, Ordering};
+use std::sync::Arc;
+
+/// Events a thread's ring holds before wrapping (power of two).
+pub const DEFAULT_CAP: usize = 4096;
+
+/// Structured event kinds wired through the request path. Payload words
+/// `(a, b)` per kind are documented on each variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum EventKind {
+    /// Request accepted into a shard queue. `a` = request id, `b` = request
+    /// kind discriminant.
+    Enqueue = 1,
+    /// Shard flushed because it reached its batch ceiling. `a` = batch size,
+    /// `b` = id of the first request in the batch.
+    FlushFull = 2,
+    /// Shard flushed by its deadline timer. `a` = batch size, `b` = id of
+    /// the first request in the batch.
+    FlushDeadline = 3,
+    /// Solve workspace checked out of the pool. `a` = batch size, `b` = 0.
+    WorkspaceCheckout = 4,
+    /// Solver entry (msMINRES path). `a` = right-hand-side columns,
+    /// `b` = operator dimension.
+    SolveStart = 5,
+    /// Solver exit. `a` = max iterations across columns (the MVM count),
+    /// `b` = total column-work performed.
+    SolveEnd = 6,
+    /// Batch served from cached dense `K^{±1/2}` factors. `a` = requests
+    /// served, `b` = size-class `n`.
+    DenseServe = 7,
+    /// Dense tier handed requests back to the msMINRES path. `a` = requests
+    /// falling back, `b` = size-class `n`.
+    DenseFallback = 8,
+    /// Batched Newton–Schulz factor build. `a` = operators factored,
+    /// `b` = size-class `n`.
+    DenseFactorBuild = 9,
+    /// Background warmer picked up a context build. `a` = operator
+    /// dimension.
+    WarmStart = 10,
+    /// Warmer finished. `a` = 1 if this warm performed the build (0: a
+    /// racing batch already filled the context), `b` = operator dimension.
+    WarmDone = 11,
+    /// Warmer failed a context build (batch path will retry inline).
+    /// `a` = operator dimension.
+    WarmFail = 12,
+    /// Response sent to the client. `a` = request id, `b` = end-to-end
+    /// latency in µs.
+    Respond = 13,
+}
+
+impl EventKind {
+    fn from_u64(v: u64) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Enqueue,
+            2 => EventKind::FlushFull,
+            3 => EventKind::FlushDeadline,
+            4 => EventKind::WorkspaceCheckout,
+            5 => EventKind::SolveStart,
+            6 => EventKind::SolveEnd,
+            7 => EventKind::DenseServe,
+            8 => EventKind::DenseFallback,
+            9 => EventKind::DenseFactorBuild,
+            10 => EventKind::WarmStart,
+            11 => EventKind::WarmDone,
+            12 => EventKind::WarmFail,
+            13 => EventKind::Respond,
+            _ => return None,
+        })
+    }
+
+    /// Stable display name (Chrome trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::FlushFull => "flush_full",
+            EventKind::FlushDeadline => "flush_deadline",
+            EventKind::WorkspaceCheckout => "ws_checkout",
+            EventKind::SolveStart => "solve_start",
+            EventKind::SolveEnd => "solve_end",
+            EventKind::DenseServe => "dense_serve",
+            EventKind::DenseFallback => "dense_fallback",
+            EventKind::DenseFactorBuild => "dense_factor_build",
+            EventKind::WarmStart => "warm_start",
+            EventKind::WarmDone => "warm_done",
+            EventKind::WarmFail => "warm_fail",
+            EventKind::Respond => "respond",
+        }
+    }
+}
+
+/// One drained event: ring owner, global write index within that ring,
+/// epoch-relative timestamp, and the kind-specific payload words.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub tid: u64,
+    pub seq: u64,
+    pub t_ns: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+struct Slot {
+    /// Seqlock generation: `2i+1` while write `i` is in flight, `2i+2` once
+    /// published, 0 for never-written.
+    seq: AtomicU64,
+    t: AtomicU64,
+    kd: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            t: AtomicU64::new(0),
+            kd: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One thread's bounded event ring. **Single-writer**: `push` must only be
+/// called by the owning thread (production code enforces this via the
+/// thread-local registration in [`record`]); `snapshot_into` may run
+/// concurrently from any thread and skips torn slots.
+pub struct ThreadRing {
+    tid: u64,
+    mask: usize,
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl ThreadRing {
+    /// A ring of `cap` slots (`cap` must be a power of two).
+    pub fn new(tid: u64, cap: usize) -> ThreadRing {
+        assert!(cap.is_power_of_two(), "ring capacity must be a power of two");
+        ThreadRing {
+            tid,
+            mask: cap - 1,
+            head: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    /// Events ever written (not capped at the ring size).
+    pub fn written(&self) -> u64 {
+        // ordering: Relaxed — approximate monitoring count; the per-slot
+        // seqlock is what guards payload visibility.
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Append one event, overwriting the oldest when full. Owner thread only.
+    pub fn push(&self, t_ns: u64, kind: u64, a: u64, b: u64) {
+        // ordering: Relaxed — `head` is only ever written by this (owning)
+        // thread; this is a read of our own counter.
+        let i = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(i as usize) & self.mask];
+        // Seqlock write protocol; tests/model_exec.rs mutation M6 documents
+        // what breaks when the publish below moves before the payload.
+        // ordering: Relaxed — the Release fence below orders this odd marker
+        // before the payload stores for any reader that sees the payload.
+        slot.seq.store(2 * i + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        // ordering: Relaxed — payload publication rides the Release store of
+        // the even generation below.
+        slot.t.store(t_ns, Ordering::Relaxed);
+        slot.kd.store(kind, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        // ordering: Release — publishes the payload: a reader Acquire-loading
+        // this even generation observes every payload store above.
+        slot.seq.store(2 * i + 2, Ordering::Release);
+        // ordering: Relaxed — own-thread counter, approximate for readers.
+        self.head.store(i + 1, Ordering::Relaxed);
+    }
+
+    /// Copy every cleanly-published slot into `out`, skipping torn or
+    /// never-written slots. Safe to call concurrently with `push`.
+    pub fn snapshot_into(&self, out: &mut Vec<TraceEvent>) {
+        for slot in self.slots.iter() {
+            // ordering: Acquire — pairs with the writer's Release publish; a
+            // clean even generation here makes the payload loads below see
+            // the corresponding payload stores.
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 < 2 || s1 % 2 == 1 {
+                continue; // never written, or write in flight
+            }
+            // ordering: Relaxed — validated by the generation re-read below.
+            let t = slot.t.load(Ordering::Relaxed);
+            let kd = slot.kd.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            // ordering: Acquire fence — seqlock read protocol: orders the
+            // payload loads above before the generation re-read below, so a
+            // writer that started overwriting mid-read is always detected.
+            fence(Ordering::Acquire);
+            // ordering: Relaxed — ordered by the fence above.
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s1 != s2 {
+                continue; // torn: the writer wrapped past us mid-read
+            }
+            let Some(kind) = EventKind::from_u64(kd) else { continue };
+            out.push(TraceEvent { tid: self.tid, seq: s1 / 2 - 1, t_ns: t, kind, a, b });
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(1);
+static REGISTRY: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static RING: std::cell::OnceCell<Arc<ThreadRing>> = const { std::cell::OnceCell::new() };
+}
+
+/// Turn recording on or off. Off is the default; the disabled cost at every
+/// `trace!` site is the single relaxed load in [`enabled`].
+pub fn set_enabled(on: bool) {
+    // ordering: Relaxed — the flag guards no data; a stale view only starts
+    // or stops recording a few events late.
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the flight recorder is on — the whole disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    // ordering: Relaxed — see `set_enabled`; no payload rides this flag.
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Globally unique request ids for event correlation across threads.
+pub fn next_request_id() -> u64 {
+    // ordering: Relaxed — uniqueness only needs RMW atomicity.
+    NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Record one event into the calling thread's ring (registering the ring on
+/// the thread's first event). Call sites should go through
+/// [`trace!`](crate::trace) so the disabled path stays a single branch.
+pub fn record(kind: EventKind, a: u64, b: u64) {
+    let t = super::clock::now_ns();
+    RING.with(|cell| {
+        let ring = cell.get_or_init(register_ring);
+        ring.push(t, kind as u64, a, b);
+    });
+}
+
+fn register_ring() -> Arc<ThreadRing> {
+    // ordering: Relaxed — tid uniqueness only needs RMW atomicity.
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let ring = Arc::new(ThreadRing::new(tid, DEFAULT_CAP));
+    REGISTRY.lock().unwrap().push(ring.clone());
+    ring
+}
+
+/// Emit a flight-recorder event; compiles to a single relaxed-load branch
+/// when recording is off. `$a`/`$b` are only evaluated when recording is on.
+#[macro_export]
+macro_rules! trace {
+    ($kind:expr, $a:expr, $b:expr) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::record($kind, $a as u64, $b as u64);
+        }
+    };
+}
+
+/// Drain every registered ring into one snapshot, sorted by time. Rings keep
+/// their contents (a snapshot is a copy, not a consume), so concurrent
+/// snapshots and writers never block each other.
+pub fn snapshot() -> TraceSnapshot {
+    let mut events = Vec::new();
+    for ring in REGISTRY.lock().unwrap().iter() {
+        ring.snapshot_into(&mut events);
+    }
+    events.sort_by_key(|e| (e.t_ns, e.tid, e.seq));
+    TraceSnapshot { events }
+}
+
+/// A drained, time-sorted copy of every thread's ring.
+pub struct TraceSnapshot {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceSnapshot {
+    /// Events of one kind, in time order.
+    pub fn of_kind(&self, kind: EventKind) -> impl Iterator<Item = &TraceEvent> + '_ {
+        self.events.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Serialize as Chrome trace-event JSON (the `traceEvents` array form),
+    /// loadable in Perfetto or `chrome://tracing`:
+    ///
+    /// - `SolveStart`/`SolveEnd` and `WarmStart`/`WarmDone|WarmFail` pairs on
+    ///   one thread become complete (`"ph":"X"`) spans;
+    /// - `Enqueue`→`Respond` pairs matched on the request id become async
+    ///   (`"b"`/`"e"`) spans, which Perfetto nests under a per-request track
+    ///   so queue-wait → solve → respond reads as a timeline;
+    /// - everything else is an instant event.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut span_open: std::collections::HashMap<(u64, &'static str), &TraceEvent> =
+            std::collections::HashMap::new();
+        for e in &self.events {
+            let ts = e.t_ns as f64 / 1000.0;
+            match e.kind {
+                EventKind::SolveStart => {
+                    span_open.insert((e.tid, "solve"), e);
+                }
+                EventKind::WarmStart => {
+                    span_open.insert((e.tid, "warm"), e);
+                }
+                EventKind::SolveEnd | EventKind::WarmDone | EventKind::WarmFail => {
+                    let name =
+                        if e.kind == EventKind::SolveEnd { "solve" } else { "warm" };
+                    if let Some(start) = span_open.remove(&(e.tid, name)) {
+                        let ts0 = start.t_ns as f64 / 1000.0;
+                        let dur = (e.t_ns.saturating_sub(start.t_ns)) as f64 / 1000.0;
+                        push_sep(&mut out, &mut first);
+                        out.push_str(&format!(
+                            "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                             \"ts\":{ts0:.3},\"dur\":{dur:.3},\
+                             \"args\":{{\"a\":{},\"b\":{}}}}}",
+                            e.tid, e.a, e.b
+                        ));
+                    }
+                }
+                EventKind::Enqueue => {
+                    push_sep(&mut out, &mut first);
+                    out.push_str(&format!(
+                        "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"b\",\
+                         \"id\":{},\"pid\":1,\"tid\":{},\"ts\":{ts:.3},\
+                         \"args\":{{\"kind\":{}}}}}",
+                        e.a, e.tid, e.b
+                    ));
+                }
+                EventKind::Respond => {
+                    push_sep(&mut out, &mut first);
+                    out.push_str(&format!(
+                        "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"e\",\
+                         \"id\":{},\"pid\":1,\"tid\":{},\"ts\":{ts:.3},\
+                         \"args\":{{\"latency_us\":{}}}}}",
+                        e.a, e.tid, e.b
+                    ));
+                }
+                _ => {
+                    push_sep(&mut out, &mut first);
+                    out.push_str(&format!(
+                        "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\
+                         \"tid\":{},\"ts\":{ts:.3},\
+                         \"args\":{{\"a\":{},\"b\":{}}}}}",
+                        e.kind.name(),
+                        e.tid,
+                        e.a,
+                        e.b
+                    ));
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn push_sep(out: &mut String, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enable flag is process-global; tests that toggle it serialize
+    /// here so the harness's parallel test threads cannot interleave.
+    static FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn ring_keeps_last_cap_events_and_reads_cleanly() {
+        let ring = ThreadRing::new(7, 8);
+        for i in 0..20u64 {
+            ring.push(i * 10, EventKind::Enqueue as u64, i, i + 1);
+        }
+        assert_eq!(ring.written(), 20);
+        let mut out = Vec::new();
+        ring.snapshot_into(&mut out);
+        assert_eq!(out.len(), 8, "ring holds exactly cap events");
+        out.sort_by_key(|e| e.seq);
+        for (k, e) in out.iter().enumerate() {
+            let i = 12 + k as u64; // events 12..20 survive
+            assert_eq!(e.seq, i);
+            assert_eq!(e.t_ns, i * 10);
+            assert_eq!(e.a, i);
+            assert_eq!(e.b, i + 1);
+            assert_eq!(e.tid, 7);
+            assert_eq!(e.kind, EventKind::Enqueue);
+        }
+    }
+
+    #[test]
+    fn disabled_macro_skips_payload_evaluation() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        set_enabled(false);
+        let mut evaluated = false;
+        let mut probe = || {
+            evaluated = true;
+            1u64
+        };
+        crate::trace!(EventKind::Enqueue, probe(), 0);
+        assert!(!evaluated, "disabled trace! must not evaluate payload args");
+    }
+
+    #[test]
+    fn record_drain_roundtrip_via_global_recorder() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        set_enabled(true);
+        let id = next_request_id();
+        crate::trace!(EventKind::Enqueue, id, 2);
+        crate::trace!(EventKind::Respond, id, 123);
+        set_enabled(false);
+        let snap = snapshot();
+        let enq: Vec<_> = snap.of_kind(EventKind::Enqueue).filter(|e| e.a == id).collect();
+        let rsp: Vec<_> = snap.of_kind(EventKind::Respond).filter(|e| e.a == id).collect();
+        assert_eq!(enq.len(), 1);
+        assert_eq!(rsp.len(), 1);
+        assert!(rsp[0].t_ns >= enq[0].t_ns, "snapshot is time-sorted per event");
+        assert_eq!(rsp[0].b, 123);
+        let json = snap.to_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"ph\":\"b\""));
+        assert!(json.contains("\"ph\":\"e\""));
+    }
+
+    #[test]
+    fn solve_pairs_become_complete_spans() {
+        let snap = TraceSnapshot {
+            events: vec![
+                TraceEvent {
+                    tid: 3,
+                    seq: 0,
+                    t_ns: 1_000,
+                    kind: EventKind::SolveStart,
+                    a: 4,
+                    b: 256,
+                },
+                TraceEvent {
+                    tid: 3,
+                    seq: 1,
+                    t_ns: 51_000,
+                    kind: EventKind::SolveEnd,
+                    a: 37,
+                    b: 120,
+                },
+            ],
+        };
+        let json = snap.to_chrome_json();
+        assert!(json.contains("\"name\":\"solve\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"dur\":50.000"));
+    }
+}

@@ -435,6 +435,7 @@ pub fn train(
     let mut adam = AdamState::new(model.hyper_logs().len());
     let n = data.len();
     let mut ll_trace = Vec::with_capacity(steps);
+    // clock: wall-time for the reported training throughput (steps/sec).
     let t0 = std::time::Instant::now();
     for step in 0..steps {
         let idx = data.minibatch(batch, rng);

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 /// Time a closure, returning `(result, seconds)`.
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    // clock: generic stopwatch helper — callers own the interpretation.
     let t0 = Instant::now();
     let out = f();
     (out, t0.elapsed().as_secs_f64())

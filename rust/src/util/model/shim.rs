@@ -223,6 +223,14 @@ fn model_event() {
     }
 }
 
+/// Model-aware memory fence: a scheduling point under the model (where every
+/// atomic already runs `SeqCst`, making the fence itself redundant), the real
+/// `std::sync::atomic::fence` otherwise.
+pub fn fence(order: Ordering) {
+    model_event();
+    std::sync::atomic::fence(order);
+}
+
 macro_rules! model_atomic {
     ($name:ident, $std:ty, $val:ty) => {
         /// Model-aware atomic: each op is a scheduling point and executes

@@ -1,5 +1,5 @@
 //! Sync facade for the shimmed concurrency modules (`exec/`,
-//! `util/threadpool.rs`).
+//! `util/threadpool.rs`, `obs/trace.rs`).
 //!
 //! Normally this is a zero-cost re-export of the `std::sync` types, so the
 //! production build is byte-for-byte the std code. Under `--cfg ciq_model`
@@ -10,19 +10,19 @@
 //!
 //! Rules for shimmed modules (enforced by `tools/structlint.rs`):
 //!
-//! - import `Mutex`/`Condvar`/`Atomic*`/`Ordering` from here, never from
-//!   `std::sync` directly;
+//! - import `Mutex`/`Condvar`/`Atomic*`/`Ordering`/`fence` from here, never
+//!   from `std::sync` directly;
 //! - `Arc`, `OnceLock`, and `mpsc` are *not* shimmed (they carry no
 //!   interesting interleavings of their own) and stay on `std::sync`;
 //! - no `std::thread::park` — parking must go through a shimmed `Condvar`
 //!   so the model scheduler can see it.
 
 #[cfg(not(ciq_model))]
-pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+pub use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 #[cfg(not(ciq_model))]
 pub use std::sync::{Condvar, Mutex, MutexGuard};
 
 #[cfg(ciq_model)]
 pub use crate::util::model::shim::{
-    AtomicBool, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard, Ordering,
+    fence, AtomicBool, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard, Ordering,
 };

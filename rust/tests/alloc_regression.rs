@@ -17,13 +17,17 @@
 
 use ciq::ciq::dense_sqrt::{newton_schulz_stack_in, DenseFactorStack, DenseSqrtOptions};
 use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, SolveKind, SolverPolicy};
+use ciq::coordinator::Metrics;
 use ciq::krylov::msminres::{msminres_block_in, msminres_in, MsMinresOptions};
 use ciq::linalg::batched::{gemm_nn_batched, gemv_nn_batched};
 use ciq::linalg::{gemm, simd, Matrix, SolveWorkspace};
+use ciq::obs::trace::EventKind;
+use ciq::obs::{solvetrace, trace};
 use ciq::operators::DenseOp;
 use ciq::rng::Pcg64;
 use ciq::util::allocs::{thread_allocs, CountingAllocator};
 use std::sync::Mutex;
+use std::time::Duration;
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
@@ -34,8 +38,11 @@ fn serial_mode() {
     std::env::set_var("CIQ_THREADS", "1");
 }
 
-/// Serializes the process-global backend override across this binary's test
-/// threads: only one backend sweep runs at a time.
+/// Serializes process-global observability state (backend override, flight
+/// recorder, trajectory sampler) across this binary's test threads: a census
+/// must never observe another test's recorder flipping mid-measurement (an
+/// unregistered thread ring or a fresh history checkout would show up as an
+/// allocation in the wrong test).
 static BACKEND_LOCK: Mutex<()> = Mutex::new(());
 
 /// Run `f` once with the scalar kernels forced and once with the best
@@ -139,6 +146,7 @@ fn warmed_ciq_solve_block_in_performs_zero_heap_allocations() {
 #[test]
 fn warmed_single_vector_solve_in_performs_zero_heap_allocations() {
     serial_mode();
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let n = 32;
     let k = random_spd(n, 5);
     let op = DenseOp::new(k);
@@ -164,6 +172,7 @@ fn warmed_block_engine_is_alloc_free_even_with_compaction() {
     // Heterogeneous columns: compaction shrinks the panel mid-solve, which
     // swaps panels through the pool — still zero allocations once warm.
     serial_mode();
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let n = 36;
     let mut k = Matrix::zeros(n, n);
     for i in 0..n {
@@ -284,4 +293,64 @@ fn batched_pack_scratch_growth_is_bounded_across_size_classes() {
         "warmed batched GEMM re-packed through the heap"
     );
     assert_eq!(gemm::thread_pack_len(), max_k * gemm::NR, "pack left the high-water mark");
+}
+
+#[test]
+fn fully_instrumented_completion_path_performs_zero_heap_allocations() {
+    // The observability layer's headline contract: with the flight recorder
+    // ON and residual-trajectory sampling at 1-in-1, the completion path —
+    // histogram records, trace! events, percentile reads, and a sampled
+    // block solve — still performs zero heap allocations once warm.
+    serial_mode();
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    // Satellite regression: the histogram-backed percentile distinguishes
+    // "no data" (None) and is an O(buckets) walk, not a clone-and-sort.
+    let m = Metrics::default();
+    assert_eq!(m.latency_percentile(50.0), None, "empty histogram must report None");
+
+    let n = 36;
+    let k = random_spd(n, 9);
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(10);
+    let b = Matrix::randn(n, 3, &mut rng);
+    let shifts = [0.1, 1.0];
+    let opts = MsMinresOptions { max_iters: 200, tol: 1e-9, weights: None };
+    let mut ws = SolveWorkspace::new();
+
+    trace::set_enabled(true);
+    solvetrace::configure(1); // sample every solve; allocates the slab here
+    // Warm-up: registers this thread's event ring (the one-time allocation),
+    // pools the block solver's history scratch, grows the solve pool.
+    ciq::trace!(EventKind::Enqueue, 0u64, 0u64);
+    for _ in 0..2 {
+        msminres_block_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+    }
+
+    let allocs_before = thread_allocs();
+    for i in 0..3u64 {
+        // coordinator completion-path telemetry: wait-free histogram records
+        m.record_latency(Duration::from_micros(100 + i));
+        m.record_batch(8);
+        m.record_iters(&[21, 34]);
+        // flight recorder, enabled: atomics into the pre-registered ring
+        ciq::trace!(EventKind::Enqueue, i, 1u64);
+        ciq::trace!(EventKind::Respond, i, 104u64);
+        // a sampled solve: history from the workspace pool, trajectory
+        // published into the pre-allocated slab
+        msminres_block_in(&mut ws, &op, &b, &shifts, &opts).recycle(&mut ws);
+        assert!(m.latency_percentile(99.0).is_some());
+    }
+    assert_eq!(
+        thread_allocs() - allocs_before,
+        0,
+        "instrumented completion path (histograms + trace! + sampled solve) touched the heap"
+    );
+
+    solvetrace::configure(0);
+    trace::set_enabled(false);
+    // The census is over; draining (which allocates) must see the samples.
+    let trajs = solvetrace::drain();
+    assert!(trajs.len() >= 3, "sampled solves published {} trajectories", trajs.len());
+    assert_eq!(m.latency_percentile(50.0).map(|v| v >= 100), Some(true));
 }

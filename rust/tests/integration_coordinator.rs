@@ -10,6 +10,8 @@ use ciq::ciq::{CiqOptions, PrecondConfig, SolverPolicy};
 use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
 use ciq::linalg::eigen::spd_inv_sqrt;
 use ciq::linalg::Matrix;
+use ciq::obs::solvetrace;
+use ciq::obs::trace::{self, EventKind};
 use ciq::operators::{DenseOp, KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
 use ciq::util::rel_err;
@@ -434,6 +436,118 @@ fn preconditioned_policy_serves_correctly_with_fewer_iterations_than_plain() {
         pre_iters < 0.8 * plain_iters,
         "preconditioning not measurably faster: {pre_iters:.1} vs plain {plain_iters:.1} mean iters"
     );
+}
+
+/// The flight-recorder acceptance test: drained trace spans must
+/// reconstruct each request's timeline — enqueue → (queue wait) → solve →
+/// respond — and the trace-derived end-to-end time must agree with the
+/// latency the coordinator recorded at the response site.
+///
+/// The recorder is process-global, so the snapshot may also hold events from
+/// tests running in parallel; every invariant asserted here is universal
+/// (it holds for *any* complete request), and attribution only needs the
+/// request-id bracket taken around our own submissions.
+#[test]
+fn flight_recorder_reconstructs_request_timeline_within_latency_tolerance() {
+    let n = 18;
+    let svc = service(vec![("t", spd(n, 41))], 8);
+    trace::set_enabled(true);
+    let lo = trace::next_request_id();
+    let mut rng = Pcg64::seeded(42);
+    for _ in 0..4 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("t", ReqKind::Whiten, b).wait().unwrap();
+    }
+    let hi = trace::next_request_id();
+    trace::set_enabled(false);
+    let snap = trace::snapshot();
+
+    let mut checked = 0;
+    for enq in snap.of_kind(EventKind::Enqueue) {
+        if !(lo < enq.a && enq.a < hi) {
+            continue;
+        }
+        // a still-in-flight foreign request may miss its Respond — skip it
+        let Some(rsp) = snap.of_kind(EventKind::Respond).find(|e| e.a == enq.a) else {
+            continue;
+        };
+        // trace-derived e2e vs the µs latency recorded at the response site
+        let trace_us = rsp.t_ns.saturating_sub(enq.t_ns) / 1000;
+        let recorded_us = rsp.b;
+        let tol_us = 2_000 + recorded_us / 4;
+        assert!(
+            trace_us.abs_diff(recorded_us) <= tol_us,
+            "trace e2e {trace_us}us disagrees with recorded latency {recorded_us}us \
+             (request {})",
+            enq.a
+        );
+        // the responding worker's solve span must nest inside the request
+        // window: enqueue ≤ solve start ≤ solve end ≤ respond, so queue
+        // wait + solve never exceeds the end-to-end time
+        let start = snap
+            .of_kind(EventKind::SolveStart)
+            .find(|e| e.tid == rsp.tid && enq.t_ns <= e.t_ns && e.t_ns <= rsp.t_ns);
+        let end = snap
+            .of_kind(EventKind::SolveEnd)
+            .find(|e| e.tid == rsp.tid && enq.t_ns <= e.t_ns && e.t_ns <= rsp.t_ns);
+        let (Some(start), Some(end)) = (start, end) else {
+            panic!("request {} has no solve span on its responding worker", enq.a);
+        };
+        assert!(start.t_ns <= end.t_ns, "solve span inverted");
+        let queue_wait_plus_solve = end.t_ns.saturating_sub(enq.t_ns);
+        assert!(
+            queue_wait_plus_solve <= rsp.t_ns.saturating_sub(enq.t_ns),
+            "queue wait + solve exceeds the request's end-to-end window"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 4, "only {checked} of our 4 requests left complete trace pairs");
+    // the exported form is loadable Chrome trace JSON with async request
+    // spans and complete solve spans
+    let json = snap.to_chrome_json();
+    assert!(json.contains("\"ph\":\"b\"") && json.contains("\"ph\":\"e\""));
+    assert!(json.contains("\"name\":\"solve\"") && json.contains("\"ph\":\"X\""));
+    svc.shutdown();
+}
+
+/// The residual-trajectory acceptance test: with 1-in-1 sampling on, served
+/// solves publish monotone, terminating residual histories (the Fig. 2
+/// curve shape) — and a well-conditioned operator converges below its own
+/// tolerance in well under 100 MVMs.
+#[test]
+fn sampled_residual_trajectories_are_monotone_and_terminate() {
+    let n = 18;
+    let svc = service(vec![("r", spd(n, 51))], 8);
+    solvetrace::configure(1);
+    let mut rng = Pcg64::seeded(52);
+    for _ in 0..3 {
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        svc.submit("r", ReqKind::Whiten, b).wait().unwrap();
+    }
+    solvetrace::configure(0);
+    let trajs = solvetrace::drain();
+    assert!(!trajs.is_empty(), "sampling at 1-in-1 published no trajectory");
+    // universal invariant (sampling is process-global, other tests' solves
+    // may be in the drain too): msMINRES residual estimates are monotone
+    // non-increasing — φ_{k+1} = φ_k·|s_k| with |s_k| ≤ 1 per shift, and a
+    // max over per-column monotone sequences on a shrinking active set
+    for t in &trajs {
+        assert!(!t.residuals.is_empty() && t.iters > 0 && t.cols > 0);
+        for w in t.residuals.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-9),
+                "residual trajectory not monotone: {:?}",
+                t.residuals
+            );
+        }
+    }
+    // existential: at least one sampled solve (ours are n=18, tol 1e-9)
+    // terminates below its own tolerance in < 100 MVMs
+    assert!(
+        trajs.iter().any(|t| t.iters < 100 && *t.residuals.last().unwrap() <= t.tol),
+        "no sampled solve terminated below tolerance within 100 MVMs"
+    );
+    svc.shutdown();
 }
 
 #[test]

@@ -1,8 +1,9 @@
 //! Model-checked concurrency tests for the executor stack: the channel's
 //! send-vs-close protocol, the executor's ready-queue dedup flag, the
-//! chunk pool's park/unpark epoch handoff, and the task pool's
-//! drain-on-shutdown handshake — explored under the deterministic
-//! interleaving checker in `ciq::util::model` instead of wall-clock racing.
+//! chunk pool's park/unpark epoch handoff, the task pool's
+//! drain-on-shutdown handshake, and the flight recorder's seqlock ring
+//! publish — explored under the deterministic interleaving checker in
+//! `ciq::util::model` instead of wall-clock racing.
 //!
 //! Compiled only under `RUSTFLAGS="--cfg ciq_model"` (the `[[test]]` target
 //! is otherwise an empty crate): the cfg routes `crate::util::sync` through
@@ -29,7 +30,9 @@
 
 use ciq::exec::channel::channel;
 use ciq::exec::Executor;
+use ciq::obs::trace::{EventKind, ThreadRing};
 use ciq::util::model;
+use ciq::util::model::ModelConfig;
 use ciq::util::sync::{AtomicUsize, Condvar, Mutex, Ordering};
 use ciq::util::threadpool::{ChunkPool, TaskOrder, TaskPool};
 use std::cell::Cell;
@@ -199,6 +202,46 @@ fn task_pool_drains_every_accepted_job_on_shutdown() {
     });
 }
 
+/// Family 5 — **flight-recorder ring writer vs snapshot drain**: the per-slot
+/// seqlock in `obs::trace::ThreadRing` must never surface a torn event. The
+/// writer wraps a tiny (2-slot) ring while a concurrent drain runs, so the
+/// checker explores every overlap of overwrite and read. Each pushed event
+/// carries a self-describing payload (`t = 10·i`, `a = i`, `b = i + 1`, slot
+/// generation encodes `i`), so a drained event whose payload disagrees with
+/// its own generation is *proof* of a torn read. Mutation M6 (publish the
+/// even generation before the payload stores) lets the drain accept a slot
+/// whose payload is still the previous write's; the checker finds the
+/// interleaving where `a != seq` and reports the assertion failure.
+///
+/// After the writer joins, a quiescent drain must recover the last `cap`
+/// events exactly — the overwrite path loses only the oldest data.
+#[test]
+fn trace_ring_drain_never_surfaces_torn_events() {
+    model::check_with(ModelConfig::dfs(2), move || {
+        let ring = Arc::new(ThreadRing::new(0, 2));
+        let w = ring.clone();
+        let writer = model::spawn(move || {
+            for i in 0..3u64 {
+                w.push(10 * i, EventKind::Enqueue as u64, i, i + 1);
+            }
+        });
+        let mut out = Vec::new();
+        ring.snapshot_into(&mut out);
+        for e in &out {
+            assert_eq!(e.a, e.seq, "payload `a` torn against the slot generation");
+            assert_eq!(e.b, e.seq + 1, "payload `b` torn against the slot generation");
+            assert_eq!(e.t_ns, 10 * e.seq, "timestamp torn against the slot generation");
+            assert_eq!(e.kind, EventKind::Enqueue);
+        }
+        writer.join();
+        out.clear();
+        ring.snapshot_into(&mut out);
+        out.sort_by_key(|e| e.seq);
+        let seqs: Vec<u64> = out.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2], "quiescent drain must recover the last cap events");
+    });
+}
+
 // ============================================================================
 // MUTATIONS — deliberately-weakened variants the checker must catch.
 //
@@ -284,4 +327,27 @@ fn task_pool_drains_every_accepted_job_on_shutdown() {
 //                     TaskOrder::Fifo => st.queue.pop_front(),
 //                     TaskOrder::Lifo => st.queue.pop_back(),
 //                 };
+//
+// ----------------------------------------------------------------------------
+// M6 — ring slot published before the payload is written (caught by
+//      `trace_ring_drain_never_surfaces_torn_events` as an ASSERTION
+//      failure: a drained event's payload disagrees with its own slot
+//      generation — e.g. `a != seq` — because the drain accepted a slot
+//      whose even generation was visible while the payload still held the
+//      previous write). This is an *algorithmic* reorder of the seqlock
+//      publish, so the sequentially-consistent checker sees it directly; the
+//      equivalent weak-memory bug (demoting the final store to `Relaxed`) is
+//      Miri/TSan territory, same as the rest of this file.
+//
+// --- rust/src/obs/trace.rs  (ThreadRing::push)
+//         let slot = &self.slots[(i as usize) & self.mask];
+//         slot.seq.store(2 * i + 1, Ordering::Relaxed);
+//         fence(Ordering::Release);
+// +       slot.seq.store(2 * i + 2, Ordering::Release);
+// +         ^ MUTATION M6: slot reads as cleanly published from here on
+//         slot.t.store(t_ns, Ordering::Relaxed);
+//         slot.kd.store(kind, Ordering::Relaxed);
+//         slot.a.store(a, Ordering::Relaxed);
+//         slot.b.store(b, Ordering::Relaxed);
+// -       slot.seq.store(2 * i + 2, Ordering::Release);
 // ============================================================================

@@ -29,6 +29,12 @@
 //!    feature. The comment is the contract ("caller must ensure avx2 and
 //!    fma…"); if it names the wrong feature, the `Backend::available` gate
 //!    and the kernel can silently disagree.
+//! 6. **Unjustified clock reads** — `Instant::now()` / `SystemTime::now()`
+//!    outside `obs/` (the shared monotonic time base) and `exec/timer.rs`
+//!    (the wheel's origin) without a `// clock:` justification comment on
+//!    the same line or within the 6 preceding lines. Ad-hoc clock reads are
+//!    how timing becomes unauditable and unmockable; each one must say why
+//!    it cannot go through `obs::clock`.
 //!
 //! Test regions are exempt: scanning stops at the first `#[cfg(test)]` line
 //! (by crate convention test modules sit at the bottom of each file). Scope
@@ -56,7 +62,12 @@ const ORDERING_WINDOW: usize = 10;
 
 /// Files routed through `crate::util::sync` whose primitives must stay
 /// model-checkable (rule 3). Matched as path suffixes.
-const SHIMMED: &[&str] = &["exec/mod.rs", "exec/channel.rs", "util/threadpool.rs"];
+const SHIMMED: &[&str] =
+    &["exec/mod.rs", "exec/channel.rs", "util/threadpool.rs", "obs/trace.rs"];
+
+/// How far above an `Instant::now()`/`SystemTime::now()` a `// clock:`
+/// comment may sit (rule 6).
+const CLOCK_WINDOW: usize = 6;
 
 /// The single file allowed to contain `core::arch`/`std::arch` paths and
 /// `#[target_feature]` fns (rule 4). Matched as a path suffix.
@@ -354,6 +365,11 @@ fn enable_features(raw_line: &str) -> Option<Vec<String>> {
 fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
     let shimmed = SHIMMED.iter().any(|s| relpath.ends_with(s));
     let arch_home = relpath.ends_with(ARCH_HOME);
+    // Rule 6 exemptions: obs/ owns the shared time base, the timer wheel
+    // reads its own origin.
+    let clock_home = relpath.contains("/obs/")
+        || relpath.starts_with("obs/")
+        || relpath.ends_with("exec/timer.rs");
     let raw: Vec<&str> = src.lines().collect();
     let lines = split_lines(src);
     // Test regions are exempt: by convention the `#[cfg(test)]` module sits
@@ -463,6 +479,27 @@ fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
                          belong in the dispatch layer"
                     ),
                 });
+            }
+        }
+        // Rule 6: raw clock reads outside the clock-owning modules need a
+        // `// clock:` justification.
+        if !clock_home {
+            for probe in ["Instant::now", "SystemTime::now"] {
+                if find_word(&line.code, probe, 0).is_some() {
+                    let lo = idx.saturating_sub(CLOCK_WINDOW);
+                    if !comment_in_window(&lines, lo, idx, &["clock:"]) {
+                        out.push(Violation {
+                            file: relpath.to_string(),
+                            line: lineno,
+                            rule: "clock-read-needs-justification",
+                            msg: format!(
+                                "`{probe}()` outside obs/ and exec/timer.rs without a \
+                                 `// clock:` comment on the same line or within the \
+                                 {CLOCK_WINDOW} preceding lines"
+                            ),
+                        });
+                    }
+                }
             }
         }
         // Rule 5: a target_feature fn's SAFETY comment must name every
@@ -597,6 +634,24 @@ const FIX_TF_BAD: &str = r#"
 unsafe fn f() {}
 "#;
 
+const FIX_CLOCK_BAD: &str = r#"
+use std::time::Instant;
+fn f() -> Instant {
+    Instant::now()
+}
+"#;
+
+const FIX_CLOCK_GOOD: &str = r#"
+use std::time::Instant;
+fn f() -> Instant {
+    // clock: request arrival timestamp — latency is measured from here.
+    Instant::now()
+}
+fn g() -> std::time::SystemTime {
+    std::time::SystemTime::now() // clock: wall time for the export filename
+}
+"#;
+
 const FIX_FALSE_POSITIVES: &str = r####"
 //! Docs may say unsafe and Ordering::Relaxed and std::sync::Mutex freely.
 fn f() -> &'static str {
@@ -657,6 +712,13 @@ fn self_test() -> Result<(), String> {
     // ...and a SAFETY comment that names no feature fails rule 5 even
     // though it satisfies the plain unsafe rule.
     expect(FIX_TF_BAD, "src/linalg/simd.rs", &["target-feature-safety-names-feature"])?;
+    // Clock reads: unjustified outside the clock-owning modules...
+    expect(FIX_CLOCK_BAD, "src/coordinator/mod.rs", &["clock-read-needs-justification"])?;
+    // ...exempt inside them...
+    expect(FIX_CLOCK_BAD, "src/obs/clock.rs", &[])?;
+    expect(FIX_CLOCK_BAD, "src/exec/timer.rs", &[])?;
+    // ...and justified reads pass anywhere.
+    expect(FIX_CLOCK_GOOD, "src/svgp/mod.rs", &[])?;
     Ok(())
 }
 
@@ -665,7 +727,7 @@ fn main() -> ExitCode {
     if args.iter().any(|a| a == "--self-test") {
         return match self_test() {
             Ok(()) => {
-                println!("structlint: self-test passed (12 fixtures)");
+                println!("structlint: self-test passed (16 fixtures)");
                 ExitCode::SUCCESS
             }
             Err(e) => {
