@@ -7,11 +7,19 @@
 //! - the flight-recorder timeline as Chrome trace-event JSON, loadable in
 //!   Perfetto (https://ui.perfetto.dev) or `chrome://tracing`.
 //!
+//! The workload runs under the mixed-precision policy by default
+//! (`--precision f64` restores the pure-f64 tier), so the dump also shows
+//! the precision telemetry: `solves_mixed` / `refine_sweeps` /
+//! `precision_fallbacks` in both expositions, and the recorder's
+//! `RefineSweep` events on the timeline.
+//!
 //! Run: `cargo run --release --example obs_dump -- [--n 600] [--clients 4]
-//!   [--requests 6] [--sample-every 2] [--trace-out obs_trace.json]`
+//!   [--requests 6] [--sample-every 2] [--precision mixed|f64]
+//!   [--trace-out obs_trace.json]`
 
+use ciq::ciq::CiqOptions;
 use ciq::coordinator::{ReqKind, SamplingService, ServiceConfig, SharedOp};
-use ciq::linalg::Matrix;
+use ciq::linalg::{Matrix, Precision, RefineConfig};
 use ciq::obs::solvetrace;
 use ciq::obs::trace::{self, EventKind};
 use ciq::operators::{KernelOp, KernelType};
@@ -27,6 +35,10 @@ fn main() {
     let per_client = args.get_or("requests", 6usize);
     let sample_every = args.get_or("sample-every", 2u64);
     let trace_out = args.get("trace-out").unwrap_or("obs_trace.json").to_string();
+    let precision = match args.get("precision").unwrap_or("mixed") {
+        "f64" => Precision::F64,
+        _ => Precision::Mixed(RefineConfig::default()),
+    };
 
     let mut rng = Pcg64::seeded(0);
     let x = Matrix::randn(n, 2, &mut rng);
@@ -40,7 +52,12 @@ fn main() {
     solvetrace::configure(sample_every);
 
     let svc = Arc::new(SamplingService::start(
-        ServiceConfig { max_batch: 8, workers: 2, ..Default::default() },
+        ServiceConfig {
+            max_batch: 8,
+            workers: 2,
+            ciq: CiqOptions { precision, ..Default::default() },
+            ..Default::default()
+        },
         ops,
     ));
 
@@ -87,10 +104,16 @@ fn main() {
     let enqueues = trace_snap.of_kind(EventKind::Enqueue).count();
     let responds = trace_snap.of_kind(EventKind::Respond).count();
     let solves = trace_snap.of_kind(EventKind::SolveEnd).count();
+    let sweeps = trace_snap.of_kind(EventKind::RefineSweep).count();
     println!(
         "\nflight recorder: {} events ({enqueues} enqueues, {responds} responds, \
-         {solves} solve spans)",
+         {solves} solve spans, {sweeps} refine sweeps)",
         trace_snap.events.len()
+    );
+    println!(
+        "precision policy: {} mixed solves, {} f64 solves, {} refinement sweeps, \
+         {} fallbacks",
+        snap.solves_mixed, snap.solves_f64, snap.refine_sweeps, snap.precision_fallbacks
     );
     let chrome = trace_snap.to_chrome_json();
     std::fs::write(&trace_out, &chrome).expect("write trace file");

@@ -19,23 +19,26 @@
 //! observability layer's ns/event — disabled `trace!` vs a plain
 //! relaxed-load branch (the cost-contract gate), the enabled recorder
 //! write, and the lock-free histogram record vs the retired `Mutex<Vec>`
-//! push (emits `BENCH_obs.json`).
+//! push (emits `BENCH_obs.json`), (11) the mixed-precision MVM engine —
+//! f32-storage kernel panels with f64 iterative refinement vs the pure-f64
+//! block solve through the same cached-bounds entry point (emits
+//! `BENCH_mixed.json`).
 //!
 //! Run: `cargo bench --bench perf_hotpath [-- --n 3000] [--fast]`
 //!
 //! `--fast` shrinks section 0 to N=1024, d=4, section 5 to N=400, section 6
 //! to 1/8 shards, section 7 to N=256, section 8 to
-//! N ∈ {16, 64} × batch ∈ {1, 8}, section 9 to N=1024, and section 10 to
-//! 200k events/rep (the CI smoke configuration); the full sweep covers
-//! N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel types ×
-//! {matvec, matmat r=8}.
+//! N ∈ {16, 64} × batch ∈ {1, 8}, section 9 to N=1024, section 10 to
+//! 200k events/rep, and section 11 to N=512 (the CI smoke configuration);
+//! the full sweep covers N ∈ {1024, 4096} × d ∈ {4, 16} × all four kernel
+//! types × {matvec, matmat r=8}.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, PrecondConfig, SolveKind, SolverPolicy};
 use ciq::krylov::msminres::{msminres, MsMinresOptions};
-use ciq::linalg::{Matrix, SolveWorkspace};
+use ciq::linalg::{Matrix, Precision, RefineConfig, SolveWorkspace};
 use ciq::operators::{KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
 use ciq::util::allocs::{thread_allocs, CountingAllocator};
@@ -239,7 +242,9 @@ fn main() {
 
     bench_obs(args.has("fast"), &mut checks);
 
-    // evaluate every recorded verdict only now — all seven JSON artifacts
+    bench_mixed(args.has("fast"), &mut rng, &mut checks);
+
+    // evaluate every recorded verdict only now — all eight JSON artifacts
     // exist on disk whatever happens below
     for (label, ok) in &checks {
         common::shape_check(label, *ok);
@@ -862,4 +867,118 @@ fn bench_simd(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
             rho_speedup_4096 >= 2.0,
         ));
     }
+}
+
+/// §11: the mixed-precision MVM engine — f32-storage kernel panels with f64
+/// iterative refinement vs the pure-f64 solve, through the same
+/// cached-bounds [`Ciq::solve_block_in`] entry point both policies serve
+/// from (warm workspace on both sides, so the numbers are steady-state).
+/// Per `N × kernel` cell the JSON records the two medians, the refinement
+/// sweeps the mixed side spent, whether it fell back to f64, and the hybrid
+/// rel error between the two solutions. The gates are correctness-only:
+/// agreement, no fallback, and at least one sweep (proof the mixed path
+/// actually ran) — the speedup itself is read off the committed JSON for
+/// the target machine, because on hardware without wide-f32 SIMD lanes the
+/// mixed tier's win is bandwidth, not a guaranteed ratio. Writes
+/// `BENCH_mixed.json` into the CWD (uploaded by the CI bench-smoke job next
+/// to the other JSONs).
+fn bench_mixed(fast: bool, rng: &mut Pcg64, checks: &mut Checks) {
+    let ns: &[usize] = if fast { &[512] } else { &[512, 2048] };
+    let r = 8;
+    let reps = if fast { 2 } else { 3 };
+    let tol = 1e-6;
+    let kinds: [(KernelType, &'static str); 2] =
+        [(KernelType::Rbf, "rbf"), (KernelType::Matern32, "matern32")];
+    println!("# perf 11: mixed-precision MVM engine (f32 storage + f64 refinement vs pure f64)");
+    println!("n\tkernel\tf64_ms\tmixed_ms\tspeedup\tsweeps\trel_err");
+    let f64_solver = Ciq::new(CiqOptions { tol, ..Default::default() });
+    let mixed_solver = Ciq::new(CiqOptions {
+        tol,
+        precision: Precision::Mixed(RefineConfig::default()),
+        ..Default::default()
+    });
+    let mut entries: Vec<String> = Vec::new();
+    let mut max_rel = 0.0f64;
+    let mut any_fallback = false;
+    let mut min_sweeps = usize::MAX;
+    for &n in ns {
+        let x = Matrix::randn(n, 4, rng);
+        let b = Matrix::randn(n, r, rng);
+        for (kind, kname) in kinds {
+            let op = KernelOp::new(&x, kind, 1.0, 1.0, 1e-1);
+            let ctx64 =
+                f64_solver.build_context(&op, &SolverPolicy::CachedBounds).expect("f64 ctx");
+            let ctx32 =
+                mixed_solver.build_context(&op, &SolverPolicy::CachedBounds).expect("mixed ctx");
+            let mut ws = SolveWorkspace::new();
+            // harvest pass: agreement + telemetry, doubling as the warm-up
+            let res64 = f64_solver
+                .solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx64)
+                .expect("f64 solve");
+            let resmx = mixed_solver
+                .solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx32)
+                .expect("mixed solve");
+            let mut rel = 0.0f64;
+            for j in 0..r {
+                for i in 0..n {
+                    let (g, w) = (resmx.solution[(i, j)], res64.solution[(i, j)]);
+                    rel = rel.max((g - w).abs() / (1.0 + w.abs()));
+                }
+            }
+            max_rel = max_rel.max(rel);
+            let fallback = resmx.precision_fallback;
+            any_fallback |= fallback;
+            min_sweeps = min_sweeps.min(resmx.refine_sweeps);
+            let sweeps = resmx.refine_sweeps;
+            recycle_block_result(&mut ws, res64);
+            recycle_block_result(&mut ws, resmx);
+            let t64 = common::bench_median(reps, || {
+                let res = f64_solver
+                    .solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx64)
+                    .expect("f64 solve");
+                recycle_block_result(&mut ws, res);
+            });
+            let tmx = common::bench_median(reps, || {
+                let res = mixed_solver
+                    .solve_block_in(&mut ws, &op, &b, SolveKind::InvSqrt, &ctx32)
+                    .expect("mixed solve");
+                recycle_block_result(&mut ws, res);
+            });
+            let speedup = t64 / tmx.max(1e-12);
+            println!(
+                "{n}\t{kname}\t{:.2}\t{:.2}\t{speedup:.2}x\t{sweeps}\t{rel:.2e}",
+                t64 * 1e3,
+                tmx * 1e3
+            );
+            entries.push(format!(
+                "    {{\"n\": {n}, \"kernel\": \"{kname}\", \"f64_ms\": {:.4}, \
+                 \"mixed_ms\": {:.4}, \"speedup\": {speedup:.3}, \
+                 \"refine_sweeps\": {sweeps}, \"fallback\": {fallback}, \
+                 \"rel_err\": {rel:.3e}}}",
+                t64 * 1e3,
+                tmx * 1e3
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"ciq.bench.mixed.v1\",\n  \"config\": {{\"fast\": {fast}, \
+         \"threads\": {}, \"reps\": {reps}, \"rhs\": {r}, \"tol\": {tol:.0e}}},\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        num_threads(),
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_mixed.json", json).expect("write BENCH_mixed.json");
+    println!("wrote BENCH_mixed.json ({} entries)", entries.len());
+    checks.push((
+        "mixed solve agrees with the f64 solve (hybrid 1e-4 at tol 1e-6)".into(),
+        max_rel < 1e-4,
+    ));
+    checks.push((
+        "mixed tier never fell back on the well-conditioned bench kernels".into(),
+        !any_fallback,
+    ));
+    checks.push((
+        "mixed tier refined (>= 1 sweep per solve, proof the f32 path ran)".into(),
+        min_sweeps >= 1,
+    ));
 }

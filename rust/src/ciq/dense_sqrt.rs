@@ -44,9 +44,44 @@
 //! [`DenseFactorStack`]. `rust/tests/alloc_regression.rs` pins the
 //! zero-allocation claim with the counting global allocator.
 
-use crate::linalg::gemm::{gemm_nn, gemm_tn};
-use crate::linalg::SolveWorkspace;
+use crate::linalg::gemm::{gemm_nn, gemm_tn, NR};
+use crate::linalg::{mixed, Precision, SolveWorkspace};
 use crate::util::threadpool::parallel_fill;
+use std::cell::RefCell;
+
+/// f32 bulk-phase exit threshold on the scaled residual: past this point the
+/// f32 iterates sit inside the f32 roundoff regime and further f32 sweeps
+/// stop paying — the f64 polish takes over.
+const MIXED_NS_FLOOR: f64 = 1e-3;
+/// Anchored acceptance gate of the mixed path: the relative
+/// `‖Y² − A/tr‖_F / ‖A/tr‖_F` the f64 polish must reach, else the stack
+/// re-runs in pure f64. (`‖ZY − I‖` alone is *not* a certificate that `Y`
+/// approximates `A^{1/2}` — the f32 phase perturbs which square root the
+/// coupled iteration tracks, so acceptance re-anchors to `A` in f64.)
+const MIXED_NS_GATE: f64 = 1e-10;
+/// Fixed f64 re-anchored Newton sweeps after the f32 bulk phase. Each sweep
+/// contracts the factor error quadratically (modulo an `O(η‖E‖)` commutator
+/// term), so three sweeps take the ~1e-5 f32 handoff error to the f64 floor.
+const MIXED_POLISH_SWEEPS: usize = 3;
+
+std::thread_local! {
+    /// Per-thread f32 panel-pack scratch for the mixed GEMM phases: the
+    /// batch-parallel closures run on pool workers and cannot check pooled
+    /// buffers out of the caller's workspace. Sized on first use per thread
+    /// (same retention discipline as [`crate::linalg::gemm`]'s pack).
+    static NS_PACK_F32: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's f32 pack scratch sized for inner dimension `k`.
+fn with_ns_pack<R>(k: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    NS_PACK_F32.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < k * NR {
+            buf.resize(k * NR, 0.0);
+        }
+        f(&mut buf[..k * NR])
+    })
+}
 
 /// Iteration knobs for the forward Newton–Schulz solve.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,11 +93,17 @@ pub struct DenseSqrtOptions {
     pub max_iters: usize,
     /// Scaled-residual exit threshold on `‖Z_k Y_k − I‖_F / √n`.
     pub tol: f64,
+    /// Arithmetic policy: pure f64, or [`Precision::Mixed`] — an f32 GEMM
+    /// bulk phase followed by f64 re-anchored Newton polish with an f64
+    /// acceptance gate; a stack that misses the gate is transparently re-run
+    /// in pure f64 (`rust/DESIGN.md` §9). Under `Mixed`, `iters` counts f32
+    /// sweeps plus polish sweeps.
+    pub precision: Precision,
 }
 
 impl Default for DenseSqrtOptions {
     fn default() -> DenseSqrtOptions {
-        DenseSqrtOptions { max_iters: 40, tol: 1e-13 }
+        DenseSqrtOptions { max_iters: 40, tol: 1e-13, precision: Precision::F64 }
     }
 }
 
@@ -82,18 +123,27 @@ pub struct BatchedDenseConfig {
     /// default sits near f64 roundoff so dense-tier answers match the
     /// Krylov path to ≤ 1e-6 even at high quadrature accuracy.
     pub tol: f64,
+    /// Arithmetic policy of the factor builds (see
+    /// [`DenseSqrtOptions::precision`]). The coordinator mirrors the
+    /// service-wide precision policy into this field.
+    pub precision: Precision,
 }
 
 impl Default for BatchedDenseConfig {
     fn default() -> BatchedDenseConfig {
-        BatchedDenseConfig { n_threshold: 256, max_iters: 40, tol: 1e-13 }
+        BatchedDenseConfig {
+            n_threshold: 256,
+            max_iters: 40,
+            tol: 1e-13,
+            precision: Precision::F64,
+        }
     }
 }
 
 impl BatchedDenseConfig {
     /// The forward-iteration options this tier runs under.
     pub fn sqrt_opts(&self) -> DenseSqrtOptions {
-        DenseSqrtOptions { max_iters: self.max_iters, tol: self.tol }
+        DenseSqrtOptions { max_iters: self.max_iters, tol: self.tol, precision: self.precision }
     }
 }
 
@@ -206,6 +256,13 @@ pub struct DenseFactorPair {
 /// Elements whose trace is non-positive or non-finite (not SPD) are marked
 /// `converged = false` immediately; elements that exhaust `max_iters`
 /// keep their best-effort factors but also report `converged = false`.
+///
+/// Under [`Precision::Mixed`] the bulk GEMM sweeps run on f32 stacks and a
+/// fixed number of f64 re-anchored Newton sweeps polish the factors back to
+/// f64 accuracy, gated by a final f64 residual check against `A` itself; a
+/// stack that misses the gate (or stagnates in f32 — e.g. a rank-deficient
+/// element) is re-run in pure f64, bit-identical to a [`Precision::F64`]
+/// call. Trace normalization and all accept/reject decisions are always f64.
 pub fn newton_schulz_stack_in(
     ws: &mut SolveWorkspace,
     n: usize,
@@ -217,6 +274,26 @@ pub fn newton_schulz_stack_in(
     assert_eq!(a_stack.len(), batch * n * n, "newton_schulz_stack_in: A stack size");
     assert_eq!(out.n, n, "newton_schulz_stack_in: output stack dimension");
     assert_eq!(out.batch, batch, "newton_schulz_stack_in: output stack batch");
+    if let Precision::Mixed(_) = opts.precision {
+        if mixed_ns_stack_in(ws, n, batch, a_stack, opts, out) {
+            return;
+        }
+        // gate miss or f32 stagnation: the rerun below reinitializes every
+        // output field, so the result is bit-identical to a pure-f64 call.
+    }
+    ns_stack_f64_in(ws, n, batch, a_stack, opts, out);
+}
+
+/// The pure-f64 coupled Newton–Schulz engine (and the fallback target of the
+/// mixed path).
+fn ns_stack_f64_in(
+    ws: &mut SolveWorkspace,
+    n: usize,
+    batch: usize,
+    a_stack: &[f64],
+    opts: &DenseSqrtOptions,
+    out: &mut DenseFactorStack,
+) {
     if batch == 0 || n == 0 {
         return;
     }
@@ -362,6 +439,318 @@ pub fn newton_schulz_stack_in(
     ws.give_vec(t);
     ws.give_vec(z);
     ws.give_vec(y);
+}
+
+/// The mixed-precision engine: f32 coupled Newton–Schulz bulk phase down to
+/// [`MIXED_NS_FLOOR`], then [`MIXED_POLISH_SWEEPS`] f64 Newton sweeps
+/// re-anchored to `A` (`Y += ½(A/tr − Y²)Z`, `Z ← Z(2I − YZ)`), then a
+/// final f64 gate on both `‖ZY − I‖_F/√n ≤ tol` and the anchored
+/// [`MIXED_NS_GATE`]. Returns `false` when any serveable element stagnated
+/// or missed the gate — the caller then re-runs the stack in pure f64.
+fn mixed_ns_stack_in(
+    ws: &mut SolveWorkspace,
+    n: usize,
+    batch: usize,
+    a_stack: &[f64],
+    opts: &DenseSqrtOptions,
+    out: &mut DenseFactorStack,
+) -> bool {
+    if batch == 0 || n == 0 {
+        return true;
+    }
+    let nn = n * n;
+    let sqrt_n = (n as f64).sqrt();
+    let mut y = ws.take_vec(batch * nn);
+    let mut z = ws.take_vec(batch * nn);
+    let mut t = ws.take_vec(batch * nn);
+    let mut y2 = ws.take_vec(batch * nn);
+    let mut z2 = ws.take_vec(batch * nn);
+    let mut norms = ws.take_vec(batch);
+    let mut mnorms = ws.take_vec(batch);
+    // 0 = serveable, 1 = excluded at init (not plausibly SPD).
+    let mut state = ws.take_usize(batch);
+
+    // Trace normalization stays f64: the scale the factors are un-normalized
+    // with never passes through f32.
+    for i in 0..batch {
+        let a = &a_stack[i * nn..(i + 1) * nn];
+        let trace: f64 = (0..n).map(|r| a[r * n + r]).sum();
+        out.iters[i] = 0;
+        out.residuals[i] = f64::INFINITY;
+        out.converged[i] = false;
+        if !trace.is_finite() || trace <= 0.0 {
+            out.sqrt[i * nn..(i + 1) * nn].fill(0.0);
+            out.invsqrt[i * nn..(i + 1) * nn].fill(0.0);
+            state[i] = 1;
+            continue;
+        }
+        norms[i] = trace;
+        mnorms[i] = a.iter().map(|v| v * v).sum::<f64>().sqrt() / trace;
+        let yi = &mut y[i * nn..(i + 1) * nn];
+        for (dst, src) in yi.iter_mut().zip(a.iter()) {
+            *dst = src / trace;
+        }
+        let zi = &mut z[i * nn..(i + 1) * nn];
+        zi.fill(0.0);
+        for r in 0..n {
+            zi[r * n + r] = 1.0;
+        }
+    }
+
+    let mut y32 = ws.take_f32(batch * nn);
+    let mut z32 = ws.take_f32(batch * nn);
+    let mut t32 = ws.take_f32(batch * nn);
+    mixed::downconvert(&y, &mut y32);
+    mixed::downconvert(&z, &mut z32);
+    // 0 = still refining in f32, 1 = at the f32 floor (or excluded).
+    let mut pre = ws.take_usize(batch);
+    for i in 0..batch {
+        if state[i] != 0 {
+            pre[i] = 1;
+        }
+    }
+    let floor = opts.tol.max(MIXED_NS_FLOOR);
+    let mut ok = true;
+    for _ in 0..opts.max_iters {
+        if pre.iter().all(|&p| p != 0) {
+            break;
+        }
+        // T ← Z₃₂·Y₃₂ with f64 accumulation (one block per element).
+        parallel_fill(&mut t, nn, |start, block| {
+            let i = start / nn;
+            if pre[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            let (zi, yi) = (&z32[i * nn..(i + 1) * nn], &y32[i * nn..(i + 1) * nn]);
+            with_ns_pack(n, |pack| mixed::gemm_nn(n, n, n, zi, yi, block, pack));
+        });
+        // f64 residual check + transform T ← ³⁄₂I − ½T, narrowed once.
+        for i in 0..batch {
+            if pre[i] != 0 {
+                continue;
+            }
+            let ti = &mut t[i * nn..(i + 1) * nn];
+            let mut frob2 = 0.0;
+            for r in 0..n {
+                for c in 0..n {
+                    let d = ti[r * n + c] - if r == c { 1.0 } else { 0.0 };
+                    frob2 += d * d;
+                }
+            }
+            let r = frob2.sqrt() / sqrt_n;
+            out.residuals[i] = r;
+            out.iters[i] += 1;
+            if !r.is_finite() {
+                pre[i] = 1;
+                ok = false;
+                continue;
+            }
+            if r <= floor {
+                pre[i] = 1;
+                continue;
+            }
+            for v in ti.iter_mut() {
+                *v = -0.5 * *v;
+            }
+            for r in 0..n {
+                ti[r * n + r] += 1.5;
+            }
+            mixed::downconvert(ti, &mut t32[i * nn..(i + 1) * nn]);
+        }
+        if pre.iter().all(|&p| p != 0) {
+            break;
+        }
+        // Y' ← Y₃₂·T₃₂ and Z' ← T₃₂·Z₃₂, narrowed back into the f32 stacks.
+        parallel_fill(&mut y2, nn, |start, block| {
+            let i = start / nn;
+            if pre[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            let (yi, ti) = (&y32[i * nn..(i + 1) * nn], &t32[i * nn..(i + 1) * nn]);
+            with_ns_pack(n, |pack| mixed::gemm_nn(n, n, n, yi, ti, block, pack));
+        });
+        parallel_fill(&mut z2, nn, |start, block| {
+            let i = start / nn;
+            if pre[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            let (ti, zi) = (&t32[i * nn..(i + 1) * nn], &z32[i * nn..(i + 1) * nn]);
+            with_ns_pack(n, |pack| mixed::gemm_nn(n, n, n, ti, zi, block, pack));
+        });
+        for i in 0..batch {
+            if pre[i] != 0 {
+                continue;
+            }
+            mixed::downconvert(&y2[i * nn..(i + 1) * nn], &mut y32[i * nn..(i + 1) * nn]);
+            mixed::downconvert(&z2[i * nn..(i + 1) * nn], &mut z32[i * nn..(i + 1) * nn]);
+        }
+    }
+    // An element that never reached the floor stagnated in f32 (the classic
+    // case: a zero eigenvalue the product map can never lift).
+    for i in 0..batch {
+        if state[i] == 0 && pre[i] == 0 {
+            ok = false;
+        }
+    }
+
+    if ok {
+        for i in 0..batch {
+            if state[i] != 0 {
+                continue;
+            }
+            mixed::upconvert(&y32[i * nn..(i + 1) * nn], &mut y[i * nn..(i + 1) * nn]);
+            mixed::upconvert(&z32[i * nn..(i + 1) * nn], &mut z[i * nn..(i + 1) * nn]);
+        }
+        for _ in 0..MIXED_POLISH_SWEEPS {
+            // E ← A/tr − Y·Y (computed in t).
+            parallel_fill(&mut t, nn, |start, block| {
+                let i = start / nn;
+                if state[i] != 0 {
+                    return;
+                }
+                block.fill(0.0);
+                gemm_nn(n, n, n, &y[i * nn..(i + 1) * nn], &y[i * nn..(i + 1) * nn], block);
+            });
+            for i in 0..batch {
+                if state[i] != 0 {
+                    continue;
+                }
+                let ti = &mut t[i * nn..(i + 1) * nn];
+                let ai = &a_stack[i * nn..(i + 1) * nn];
+                let inv = 1.0 / norms[i];
+                for (tv, av) in ti.iter_mut().zip(ai.iter()) {
+                    *tv = av * inv - *tv;
+                }
+            }
+            // Y ← Y + ½ E·Z (Newton step for the sqrt, anchored to A).
+            parallel_fill(&mut y2, nn, |start, block| {
+                let i = start / nn;
+                if state[i] != 0 {
+                    return;
+                }
+                block.fill(0.0);
+                gemm_nn(n, n, n, &t[i * nn..(i + 1) * nn], &z[i * nn..(i + 1) * nn], block);
+            });
+            for i in 0..batch {
+                if state[i] != 0 {
+                    continue;
+                }
+                let yi = &mut y[i * nn..(i + 1) * nn];
+                for (yv, dv) in yi.iter_mut().zip(y2[i * nn..(i + 1) * nn].iter()) {
+                    *yv += 0.5 * dv;
+                }
+            }
+            // Z ← Z·(2I − Y·Z) (Newton step for the inverse of the new Y).
+            parallel_fill(&mut t, nn, |start, block| {
+                let i = start / nn;
+                if state[i] != 0 {
+                    return;
+                }
+                block.fill(0.0);
+                gemm_nn(n, n, n, &y[i * nn..(i + 1) * nn], &z[i * nn..(i + 1) * nn], block);
+            });
+            for i in 0..batch {
+                if state[i] != 0 {
+                    continue;
+                }
+                let ti = &mut t[i * nn..(i + 1) * nn];
+                for v in ti.iter_mut() {
+                    *v = -*v;
+                }
+                for r in 0..n {
+                    ti[r * n + r] += 2.0;
+                }
+            }
+            parallel_fill(&mut z2, nn, |start, block| {
+                let i = start / nn;
+                if state[i] != 0 {
+                    return;
+                }
+                block.fill(0.0);
+                gemm_nn(n, n, n, &z[i * nn..(i + 1) * nn], &t[i * nn..(i + 1) * nn], block);
+            });
+            // Excluded elements' stale blocks swap along harmlessly — their
+            // outputs were zeroed at init and every phase skips them.
+            std::mem::swap(&mut z, &mut z2);
+            for i in 0..batch {
+                if state[i] == 0 {
+                    out.iters[i] += 1;
+                }
+            }
+        }
+        // Final f64 acceptance gate: ZY against I *and* Y² against A.
+        parallel_fill(&mut t, nn, |start, block| {
+            let i = start / nn;
+            if state[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            gemm_nn(n, n, n, &z[i * nn..(i + 1) * nn], &y[i * nn..(i + 1) * nn], block);
+        });
+        parallel_fill(&mut y2, nn, |start, block| {
+            let i = start / nn;
+            if state[i] != 0 {
+                return;
+            }
+            block.fill(0.0);
+            gemm_nn(n, n, n, &y[i * nn..(i + 1) * nn], &y[i * nn..(i + 1) * nn], block);
+        });
+        let gate = opts.tol.max(MIXED_NS_GATE);
+        for i in 0..batch {
+            if state[i] != 0 {
+                continue;
+            }
+            let ti = &t[i * nn..(i + 1) * nn];
+            let mut frob2 = 0.0;
+            for r in 0..n {
+                for c in 0..n {
+                    let d = ti[r * n + c] - if r == c { 1.0 } else { 0.0 };
+                    frob2 += d * d;
+                }
+            }
+            let r = frob2.sqrt() / sqrt_n;
+            let ai = &a_stack[i * nn..(i + 1) * nn];
+            let inv = 1.0 / norms[i];
+            let mut e2 = 0.0;
+            for (yv, av) in y2[i * nn..(i + 1) * nn].iter().zip(ai.iter()) {
+                let d = av * inv - yv;
+                e2 += d * d;
+            }
+            let ra = e2.sqrt() / mnorms[i];
+            out.residuals[i] = r;
+            if r.is_finite() && ra.is_finite() && r <= opts.tol && ra <= gate {
+                let scale = norms[i].sqrt();
+                let yi = &y[i * nn..(i + 1) * nn];
+                let zi = &z[i * nn..(i + 1) * nn];
+                for (dst, src) in out.sqrt[i * nn..(i + 1) * nn].iter_mut().zip(yi.iter()) {
+                    *dst = src * scale;
+                }
+                for (dst, src) in out.invsqrt[i * nn..(i + 1) * nn].iter_mut().zip(zi.iter()) {
+                    *dst = src / scale;
+                }
+                out.converged[i] = true;
+            } else {
+                ok = false;
+            }
+        }
+    }
+
+    ws.give_usize(pre);
+    ws.give_f32(t32);
+    ws.give_f32(z32);
+    ws.give_f32(y32);
+    ws.give_usize(state);
+    ws.give_vec(mnorms);
+    ws.give_vec(norms);
+    ws.give_vec(z2);
+    ws.give_vec(y2);
+    ws.give_vec(t);
+    ws.give_vec(z);
+    ws.give_vec(y);
+    ok
 }
 
 /// Lyapunov-equation backward pass for the batched square root, after the
@@ -625,6 +1014,63 @@ mod tests {
             }
         }
         assert!(rel_err(sq2.as_slice(), &a) < 1e-10, "(K^1/2)² ≠ K");
+    }
+
+    #[test]
+    fn mixed_stack_matches_oracle_at_f64_accuracy() {
+        use crate::linalg::RefineConfig;
+        let mut rng = Pcg64::seeded(77);
+        let n = 16;
+        let batch = 3;
+        let mut stack = Vec::new();
+        for _ in 0..batch {
+            stack.extend(random_spd(n, 0.5, &mut rng));
+        }
+        let mut ws = SolveWorkspace::new();
+        let mut out = DenseFactorStack::new(n, batch);
+        let opts = DenseSqrtOptions {
+            precision: Precision::Mixed(RefineConfig::default()),
+            ..Default::default()
+        };
+        newton_schulz_stack_in(&mut ws, n, batch, &stack, &opts, &mut out);
+        assert!(out.all_converged(), "mixed stack must converge: {:?}", out.residuals);
+        for i in 0..batch {
+            let (sq, isq) = oracle_pair(n, &stack[i * n * n..(i + 1) * n * n]);
+            let e1 = rel_err(out.sqrt_mat(i), sq.as_slice());
+            let e2 = rel_err(out.invsqrt_mat(i), isq.as_slice());
+            assert!(e1 < 1e-8, "mixed sqrt element {i}: rel err {e1:.3e}");
+            assert!(e2 < 1e-8, "mixed invsqrt element {i}: rel err {e2:.3e}");
+            assert!(out.residuals[i] <= opts.tol, "final residual above tol");
+        }
+    }
+
+    #[test]
+    fn mixed_stack_falls_back_bit_identically_on_rank_deficiency() {
+        use crate::linalg::RefineConfig;
+        // The rank-deficient element stagnates in the f32 phase, so the whole
+        // stack re-runs in pure f64 — every output must be bit-identical to a
+        // Precision::F64 call.
+        let mut rng = Pcg64::seeded(17);
+        let n = 12;
+        let mut stack = random_spd(n, 1.0, &mut rng);
+        stack.extend(rank_deficient(n, &mut rng));
+        let mut ws = SolveWorkspace::new();
+        let mut f64_out = DenseFactorStack::new(n, 2);
+        newton_schulz_stack_in(&mut ws, n, 2, &stack, &DenseSqrtOptions::default(), &mut f64_out);
+        let opts = DenseSqrtOptions {
+            precision: Precision::Mixed(RefineConfig::default()),
+            ..Default::default()
+        };
+        let mut mixed_out = DenseFactorStack::new(n, 2);
+        newton_schulz_stack_in(&mut ws, n, 2, &stack, &opts, &mut mixed_out);
+        assert_eq!(mixed_out.sqrt, f64_out.sqrt, "fallback sqrt factors must be bit-identical");
+        assert_eq!(mixed_out.invsqrt, f64_out.invsqrt);
+        assert_eq!(mixed_out.converged, f64_out.converged);
+        assert_eq!(mixed_out.iters, f64_out.iters);
+        assert_eq!(
+            mixed_out.residuals, f64_out.residuals,
+            "fallback diagnostics must be bit-identical"
+        );
     }
 
     /// Finite-difference validation of the Lyapunov backward pass: for

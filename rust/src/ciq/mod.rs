@@ -57,10 +57,11 @@ pub mod precond;
 pub use self::dense_sqrt::BatchedDenseConfig;
 use self::precond::WhitenedOp;
 use crate::krylov::msminres::{
-    msminres, msminres_block, msminres_block_in, msminres_in, MsMinresOptions,
+    msminres, msminres_block, msminres_block_in, msminres_block_refined_in, msminres_in,
+    MsMinresOptions,
 };
 use crate::krylov::{estimate_extreme_eigenvalues, EigenBounds};
-use crate::linalg::{Matrix, SolveWorkspace};
+use crate::linalg::{Matrix, Precision, SolveWorkspace};
 use crate::operators::LinearOp;
 use crate::precond::PivotedCholesky;
 use crate::quadrature::{ciq_quadrature, QuadratureRule};
@@ -83,6 +84,12 @@ pub struct CiqOptions {
     pub seed: u64,
     /// Use the weighted (CIQ-aware) stopping criterion instead of max-shift.
     pub weighted_stop: bool,
+    /// Arithmetic policy of the blocked solves: pure f64, or f32-storage
+    /// kernels wrapped in f64 iterative refinement
+    /// ([`crate::linalg::Precision::Mixed`], `rust/DESIGN.md` §9). Only the
+    /// non-preconditioned block path honors `Mixed`; everything else runs
+    /// f64 regardless.
+    pub precision: Precision,
 }
 
 impl Default for CiqOptions {
@@ -94,6 +101,7 @@ impl Default for CiqOptions {
             lanczos_iters: 15,
             seed: 0x51C2,
             weighted_stop: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -200,6 +208,11 @@ pub struct SolverContext {
     /// msMINRES options prebuilt from the rule (weights cloned once here,
     /// not once per solve) — what the workspace entry points run on.
     pub ms: MsMinresOptions,
+    /// Resolved arithmetic policy for blocked solves through this context.
+    /// Preconditioned contexts always resolve to [`Precision::F64`]: the
+    /// whitened operator's MVM runs through `P^{-1/2}` triangular solves
+    /// whose conditioning the f32 forward-error model does not cover.
+    pub precision: Precision,
 }
 
 impl SolverContext {
@@ -225,6 +238,13 @@ pub struct CiqBlockResult {
     /// cold call doubles as cache population); `None` on warm calls, which
     /// keeps the hot path free of rule clones.
     pub cache: Option<SolverCache>,
+    /// Iterative-refinement sweeps spent when the solve ran under
+    /// [`Precision::Mixed`] (0 on pure-f64 solves).
+    pub refine_sweeps: usize,
+    /// Whether a mixed solve stagnated and was re-run in pure f64. The
+    /// returned numbers are then bit-identical to an f64 solve — this flag
+    /// is the only trace the failed mixed attempt leaves.
+    pub precision_fallback: bool,
 }
 
 /// Workspace-backed single-vector result of [`Ciq::solve_in`]: `solution`
@@ -418,7 +438,8 @@ impl Ciq {
             | SolverPolicy::BatchedDense(_) => {
                 let cache = self.solver_cache(op)?;
                 let ms = self.ms_opts(&cache.rule);
-                Ok((SolverContext { cache, precond: None, ms }, 0))
+                let precision = self.opts.precision;
+                Ok((SolverContext { cache, precond: None, ms, precision }, 0))
             }
             SolverPolicy::Preconditioned(cfg) => {
                 let sigma2 = match cfg.sigma2 {
@@ -431,7 +452,10 @@ impl Ciq {
                 let m = WhitenedOp::new(op, pc.as_ref());
                 let cache = self.solver_cache(&m)?;
                 let ms = self.ms_opts(&cache.rule);
-                Ok((SolverContext { cache, precond: Some(pc), ms }, saved))
+                // precision: the whitened path always runs f64 — see the
+                // `SolverContext::precision` doc for why Mixed is not honored.
+                let precision = Precision::F64;
+                Ok((SolverContext { cache, precond: Some(pc), ms, precision }, saved))
             }
         }
     }
@@ -510,12 +534,20 @@ impl Ciq {
         crate::trace!(crate::obs::trace::EventKind::SolveStart, r, n);
         let rule = &ctx.cache.rule;
         let nq = rule.shifts.len();
-        // run on K, or on the whitened M under a preconditioned context
-        let blk = match &ctx.precond {
-            None => msminres_block_in(ws, op, b, &rule.shifts, &ctx.ms),
+        // run on K, or on the whitened M under a preconditioned context; the
+        // mixed-precision engine only engages on the plain path and only when
+        // the operator actually ships f32 kernels — everything else is the
+        // bit-identical f64 solve this method has always performed
+        let (blk, refine_sweeps, precision_fallback) = match &ctx.precond {
+            None => match ctx.precision {
+                Precision::Mixed(cfg) if op.supports_mixed() => {
+                    msminres_block_refined_in(ws, op, b, &rule.shifts, &ctx.ms, &cfg)
+                }
+                _ => (msminres_block_in(ws, op, b, &rule.shifts, &ctx.ms), 0, false),
+            },
             Some(pc) => {
                 let m = WhitenedOp::new(op, pc.as_ref());
-                msminres_block_in(ws, &m, b, &rule.shifts, &ctx.ms)
+                (msminres_block_in(ws, &m, b, &rule.shifts, &ctx.ms), 0, false)
             }
         };
         // weighted combination; transposed layout so each (column, shift)
@@ -573,7 +605,15 @@ impl Ciq {
             col_iterations.iter().copied().max().unwrap_or(0),
             column_work
         );
-        Ok(CiqBlockResult { solution, col_iterations, residuals, column_work, cache: None })
+        Ok(CiqBlockResult {
+            solution,
+            col_iterations,
+            residuals,
+            column_work,
+            cache: None,
+            refine_sweeps,
+            precision_fallback,
+        })
     }
 
     /// Workspace-backed single-vector solve against a prebuilt context —
@@ -668,6 +708,8 @@ impl Ciq {
             residuals: blk.residuals,
             column_work: blk.column_work,
             cache: fresh,
+            refine_sweeps: 0,
+            precision_fallback: false,
         })
     }
 
@@ -918,6 +960,39 @@ mod tests {
         let us = solver.solve_block(&op, &b, SolveKind::Sqrt, &ctx).unwrap();
         let ls = solver.sqrt_mvm_block_with_bounds(&op, &b, Some(&ctx.cache)).unwrap();
         assert!(us.solution.max_abs_diff(&ls.solution) < 1e-14);
+    }
+
+    #[test]
+    fn mixed_context_meets_f64_tolerance_and_preconditioned_stays_f64() {
+        use crate::linalg::RefineConfig;
+        let n = 40;
+        let k = random_spd(n, 41, n as f64 * 0.5);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(42);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let solver = Ciq::new(CiqOptions { tol: 1e-8, ..Default::default() });
+        let ctx64 = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+        let base = solver.solve_block(&op, &b, SolveKind::InvSqrt, &ctx64).unwrap();
+        assert_eq!(base.refine_sweeps, 0, "f64 contexts never refine");
+        assert!(!base.precision_fallback);
+        let mixed = Ciq::new(CiqOptions {
+            tol: 1e-8,
+            precision: Precision::Mixed(RefineConfig::default()),
+            ..Default::default()
+        });
+        let ctxm = mixed.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+        assert!(ctxm.precision.is_mixed());
+        let res = mixed.solve_block(&op, &b, SolveKind::InvSqrt, &ctxm).unwrap();
+        assert!(res.refine_sweeps >= 1, "tol below the f32 floor must take a sweep");
+        assert!(!res.precision_fallback, "well-conditioned solve must not fall back");
+        for &r in &res.residuals {
+            assert!(r <= 1e-8, "refined residual {r} above the f64 tolerance");
+        }
+        assert!(res.solution.max_abs_diff(&base.solution) < 1e-6, "mixed drifted from f64");
+        // a preconditioned context never honors Mixed
+        let cfg = PrecondConfig { rank: 8, sigma2: Some(1.0), build_tol: 1e-14 };
+        let ctxp = mixed.build_context(&op, &SolverPolicy::Preconditioned(cfg)).unwrap();
+        assert_eq!(ctxp.precision, Precision::F64);
     }
 
     #[test]

@@ -92,6 +92,16 @@ pub struct Metrics {
     /// The dense tier's size-class threshold (crossover `N`), recorded at
     /// startup; 0 when the tier is off.
     pub dense_crossover_n: AtomicU64,
+    /// Krylov block solves executed in pure f64 (including mixed solves
+    /// that fell back).
+    pub solves_f64: AtomicU64,
+    /// Krylov block solves served by the mixed-precision engine (f32
+    /// kernels + f64 iterative refinement) without falling back.
+    pub solves_mixed: AtomicU64,
+    /// Iterative-refinement sweeps spent by mixed solves (Σ over batches).
+    pub refine_sweeps: AtomicU64,
+    /// Mixed solves that stagnated and were re-run in pure f64.
+    pub precision_fallbacks: AtomicU64,
     /// The service's solver policy, for observability (`Debug` rendering of
     /// [`crate::ciq::SolverPolicy`]); set once at startup.
     policy: Mutex<String>,
@@ -164,6 +174,23 @@ impl Metrics {
         // tolerates reading the pair mid-update (saturating_sub).
         self.column_work.fetch_add(done, Ordering::Relaxed);
         self.column_work_full.fetch_add(full, Ordering::Relaxed);
+    }
+
+    /// Record one Krylov block solve's precision outcome: which engine
+    /// served it, refinement sweeps spent, and whether the mixed attempt
+    /// fell back to pure f64 (a fallback counts as an f64 solve — that is
+    /// the arithmetic that produced the served answer).
+    pub fn record_precision(&self, mixed: bool, sweeps: u64, fallback: bool) {
+        // ordering: Relaxed — telemetry counters, no synchronization implied.
+        if mixed && !fallback {
+            self.solves_mixed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.solves_f64.fetch_add(1, Ordering::Relaxed);
+        }
+        self.refine_sweeps.fetch_add(sweeps, Ordering::Relaxed);
+        if fallback {
+            self.precision_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Matmat columns saved by active-column compaction so far.
@@ -439,6 +466,10 @@ impl Metrics {
             dense_fallbacks: ld(&self.dense_fallbacks),
             dense_factor_builds: ld(&self.dense_factor_builds),
             dense_crossover_n: ld(&self.dense_crossover_n),
+            solves_f64: ld(&self.solves_f64),
+            solves_mixed: ld(&self.solves_mixed),
+            refine_sweeps: ld(&self.refine_sweeps),
+            precision_fallbacks: ld(&self.precision_fallbacks),
             latency_us: self.latency_hist.snapshot(),
             batch_sizes: self.batch_hist.snapshot(),
             iterations: self.iter_hist.snapshot(),
@@ -604,6 +635,21 @@ mod tests {
         assert!(s.contains("dense_fallbacks=3"));
         assert!(s.contains("dense_builds=5"));
         assert!(s.contains("dense_crossover_n=256"));
+    }
+
+    #[test]
+    fn precision_counters_accumulate_and_render() {
+        let m = Metrics::default();
+        m.record_precision(false, 0, false);
+        m.record_precision(true, 3, false);
+        m.record_precision(true, 4, true);
+        assert_eq!(m.solves_f64.load(Ordering::Relaxed), 2, "fallback counts as f64");
+        assert_eq!(m.solves_mixed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.refine_sweeps.load(Ordering::Relaxed), 7);
+        assert_eq!(m.precision_fallbacks.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("solves_mixed=1"));
+        assert!(s.contains("precision_fallbacks=1"));
     }
 
     #[test]

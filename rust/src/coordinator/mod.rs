@@ -374,6 +374,17 @@ impl SamplingService {
     /// enabled (default), every initial operator is queued to the warm pool
     /// immediately.
     pub fn start(config: ServiceConfig, ops: HashMap<String, SharedOp>) -> SamplingService {
+        // Service-wide precision policy: the `CIQ_PRECISION` env override is
+        // applied once at startup so both solver tiers (Krylov and batched
+        // dense) see the same policy. Applying it here — not inside the
+        // solver — keeps unit tests that build `Ciq` directly on pure f64.
+        let mut config = config;
+        if let Some(p) = crate::linalg::mixed::env_precision_override() {
+            config.ciq.precision = p;
+            if let SolverPolicy::BatchedDense(cfg) = &mut config.policy {
+                cfg.precision = p;
+            }
+        }
         let entries: HashMap<String, Arc<OpEntry>> =
             ops.into_iter().map(|(name, op)| (name, OpEntry::fresh(op))).collect();
         let registry: OpMap = Arc::new(RwLock::new(entries));
@@ -1014,7 +1025,11 @@ fn execute_batch(
     // not flush latency and must not halve the shard's ceiling.
     // clock: AIMD feedback measures the solve alone, not queueing or build.
     let flush_started = Instant::now();
-    let result = ctx_res.and_then(|ctx| solver.solve_block_in(&mut ws, op.as_ref(), &b, kind, &ctx));
+    let mut ctx_mixed = false;
+    let result = ctx_res.and_then(|ctx| {
+        ctx_mixed = ctx.precision.is_mixed();
+        solver.solve_block_in(&mut ws, op.as_ref(), &b, kind, &ctx)
+    });
     ws.give_mat(b);
     match result {
         Ok(res) => {
@@ -1038,6 +1053,7 @@ fn execute_batch(
             // `iterations × columns` cost
             let full = res.col_iterations.iter().copied().max().unwrap_or(0) * r;
             metrics.record_column_work(res.column_work as u64, full as u64);
+            metrics.record_precision(ctx_mixed, res.refine_sweeps as u64, res.precision_fallback);
             for (j, req) in valid.into_iter().enumerate() {
                 // the response vector is the request envelope — the one
                 // allocation a request intrinsically owns
@@ -1282,6 +1298,42 @@ mod tests {
         let w = svc.submit("k", ReqKind::Whiten, b.clone()).wait().unwrap();
         let s = svc.submit("k", ReqKind::Sample, w).wait().unwrap();
         assert!(rel_err(&s, &b) < 1e-4, "whiten→sample roundtrip");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_policy_service_answers_and_counts_refined_solves() {
+        use crate::linalg::{Precision, RefineConfig};
+        let n = 24;
+        let (op, _k) = make_op(n, 7);
+        let mut ops = HashMap::new();
+        ops.insert("k".to_string(), op);
+        let cfg = ServiceConfig {
+            ciq: CiqOptions {
+                tol: 1e-8,
+                precision: Precision::Mixed(RefineConfig::default()),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let svc = SamplingService::start(cfg, ops);
+        let mut rng = Pcg64::seeded(8);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let w = svc.submit("k", ReqKind::Whiten, b.clone()).wait().unwrap();
+        let s = svc.submit("k", ReqKind::Sample, w).wait().unwrap();
+        assert!(rel_err(&s, &b) < 1e-4, "whiten→sample roundtrip under mixed precision");
+        let m = svc.metrics();
+        let mixed = m.solves_mixed.load(Ordering::Relaxed);
+        let f64s = m.solves_f64.load(Ordering::Relaxed);
+        assert_eq!(mixed + f64s, 2, "every flush records exactly one precision outcome");
+        // a well-conditioned operator must be served by the mixed tier, not
+        // the f64 fallback
+        assert_eq!(m.precision_fallbacks.load(Ordering::Relaxed), 0);
+        assert_eq!(mixed, 2, "both flushes ran refined solves");
+        assert!(
+            m.refine_sweeps.load(Ordering::Relaxed) >= 1,
+            "refined solves must report their sweep counts"
+        );
         svc.shutdown();
     }
 

@@ -20,8 +20,10 @@
 //! signatures as thin wrappers that own a transient workspace, so no caller
 //! breaks and results are bit-for-bit those of the `_in` engines.
 
+use crate::linalg::mixed::RefineConfig;
 use crate::linalg::{Matrix, SolveWorkspace};
-use crate::operators::LinearOp;
+use crate::obs::trace::EventKind;
+use crate::operators::{LinearOp, MixedOp};
 use crate::util::{axpy, dot, norm2};
 
 /// Options for [`msminres`].
@@ -634,6 +636,143 @@ pub fn msminres_block_in(
     MsMinresBlockSolve { solutions: xs, col_iterations: iters, residuals, column_work }
 }
 
+/// Mixed-precision block solve with f64 iterative refinement
+/// (`rust/DESIGN.md` §9). Returns `(solve, refine_sweeps, precision_fallback)`.
+///
+/// The inner Krylov recurrence runs against the operator's f32-storage MVM
+/// ([`MixedOp`]) to a tolerance floored at `cfg.inner_tol_floor` (below
+/// that, the f32 forward error dominates and extra inner iterations buy
+/// nothing). An outer loop then measures the **true f64 residual**
+/// `r_jq = b_j − t_q·x_jq − K_{f64}·x_jq` — one stacked f64 matmat per
+/// sweep, never trusting the low-precision recurrence — and re-solves the
+/// corrections against the mixed operator, one single-shift block solve per
+/// quadrature node (corrections break shift invariance: each shift's
+/// residual is a different RHS).
+///
+/// Exit contract:
+/// - converged: the returned `residuals` are the *true f64* per-shift
+///   maxima, all `≤ opts.tol` — the same bound the pure-f64 path certifies;
+/// - stagnation (the worst residual fails to shrink by `cfg.stall_ratio`)
+///   or the `cfg.max_sweeps` cap: the mixed progress is discarded and the
+///   whole system is re-solved in pure f64 (`precision_fallback = true`),
+///   so callers never observe worse-than-f64 results.
+///
+/// All scratch (solution stack, residual stack, per-shift RHS) comes from
+/// `ws`; a warmed workspace keeps the refined solve allocation-free.
+pub fn msminres_block_refined_in(
+    ws: &mut SolveWorkspace,
+    op: &dyn LinearOp,
+    b_mat: &Matrix,
+    shifts: &[f64],
+    opts: &MsMinresOptions,
+    cfg: &RefineConfig,
+) -> (MsMinresBlockSolve, usize, bool) {
+    if !op.supports_mixed() {
+        // No f32 path behind this operator: the "mixed" policy is a no-op,
+        // not an error — serve the exact solve.
+        return (msminres_block_in(ws, op, b_mat, shifts, opts), 0, false);
+    }
+    let n = op.size();
+    let r = b_mat.cols();
+    assert_eq!(b_mat.rows(), n);
+    let nq = shifts.len();
+    let mop = MixedOp(op);
+    let inner_opts = MsMinresOptions {
+        max_iters: opts.max_iters,
+        tol: opts.tol.max(cfg.inner_tol_floor),
+        weights: opts.weights.clone(),
+    };
+    let mut blk = msminres_block_in(ws, &mop, b_mat, shifts, &inner_opts);
+
+    let mut beta1s = ws.take_vec(r);
+    for j in 0..r {
+        let mut sum = 0.0;
+        for i in 0..n {
+            let x = b_mat[(i, j)];
+            sum += x * x;
+        }
+        beta1s[j] = sum.sqrt();
+    }
+    let mut xstack = ws.take_mat(n, r * nq);
+    let mut rstack = ws.take_mat(n, r * nq);
+    let mut rq = ws.take_mat(n, r);
+    let mut worst_prev = f64::INFINITY;
+    let mut sweeps = 0usize;
+    let fallback = loop {
+        // True residual check: one stacked f64 matmat over every (column,
+        // shift) solution, then r ← b − t·x − Kx in place.
+        for c in 0..r * nq {
+            let row = blk.solutions.row(c);
+            for i in 0..n {
+                xstack[(i, c)] = row[i];
+            }
+        }
+        op.matmat_in(ws, &xstack, &mut rstack);
+        let mut worst = 0.0f64;
+        for v in blk.residuals.iter_mut() {
+            *v = 0.0;
+        }
+        for j in 0..r {
+            for q in 0..nq {
+                let c = j * nq + q;
+                let mut sum = 0.0;
+                for i in 0..n {
+                    let ri = b_mat[(i, j)] - shifts[q] * xstack[(i, c)] - rstack[(i, c)];
+                    rstack[(i, c)] = ri;
+                    sum += ri * ri;
+                }
+                let rel = if beta1s[j] > 0.0 { sum.sqrt() / beta1s[j] } else { 0.0 };
+                if rel > blk.residuals[q] {
+                    blk.residuals[q] = rel;
+                }
+                if rel > worst {
+                    worst = rel;
+                }
+            }
+        }
+        crate::trace!(EventKind::RefineSweep, sweeps, worst.to_bits());
+        if worst <= opts.tol {
+            break false;
+        }
+        if sweeps >= cfg.max_sweeps || worst > cfg.stall_ratio * worst_prev {
+            // Sweep cap or stagnation (the f32 floor, or an
+            // ill-conditioned system amplifying the f32 forward error
+            // beyond what refinement can contract): give up on mixed.
+            break true;
+        }
+        worst_prev = worst;
+        sweeps += 1;
+        // Correction sweep: per shift, re-solve (K + t_q)d = r against the
+        // mixed operator and fold the corrections into the solutions.
+        let corr_opts =
+            MsMinresOptions { max_iters: opts.max_iters, tol: inner_opts.tol, weights: None };
+        for (q, &t) in shifts.iter().enumerate() {
+            for j in 0..r {
+                for i in 0..n {
+                    rq[(i, j)] = rstack[(i, j * nq + q)];
+                }
+            }
+            let corr = msminres_block_in(ws, &mop, &rq, &[t], &corr_opts);
+            for j in 0..r {
+                axpy(1.0, corr.solutions.row(j), blk.solutions.row_mut(j * nq + q));
+                blk.col_iterations[j] += corr.col_iterations[j];
+            }
+            blk.column_work += corr.column_work;
+            corr.recycle(ws);
+        }
+    };
+    ws.give_vec(beta1s);
+    ws.give_mat(xstack);
+    ws.give_mat(rstack);
+    ws.give_mat(rq);
+    if !fallback {
+        return (blk, sweeps, false);
+    }
+    blk.recycle(ws);
+    let blk64 = msminres_block_in(ws, op, b_mat, shifts, opts);
+    (blk64, sweeps, true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1044,6 +1183,112 @@ mod tests {
         assert!(res.converged);
         assert_eq!(res.iterations, 0);
         assert!(res.solutions[0].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn refined_solve_meets_f64_tolerance_with_bounded_sweeps() {
+        // Well-conditioned system: the mixed inner solve plus refinement
+        // must reach the SAME tolerance the f64 path would certify, without
+        // falling back, in at most `max_sweeps` sweeps — and the returned
+        // residuals are true f64 residuals, not recurrence estimates.
+        let n = 50;
+        let k = random_spd(n, 71);
+        let op = DenseOp::new(k.clone());
+        let mut rng = Pcg64::seeded(72);
+        let b = Matrix::randn(n, 3, &mut rng);
+        let shifts = [0.1, 1.0, 10.0];
+        let opts = MsMinresOptions { max_iters: 300, tol: 1e-8, weights: None };
+        let cfg = RefineConfig::default();
+        let mut ws = SolveWorkspace::new();
+        let (blk, sweeps, fellback) =
+            msminres_block_refined_in(&mut ws, &op, &b, &shifts, &opts, &cfg);
+        assert!(!fellback, "well-conditioned solve must not fall back");
+        assert!(sweeps >= 1, "tol 1e-8 is below the inner floor: refinement must engage");
+        assert!(sweeps <= cfg.max_sweeps);
+        for q in 0..shifts.len() {
+            assert!(blk.residuals[q] <= opts.tol, "shift {q}: {}", blk.residuals[q]);
+        }
+        for (q, &t) in shifts.iter().enumerate() {
+            let mut kt = k.clone();
+            for i in 0..n {
+                kt[(i, i)] += t;
+            }
+            let ch = Cholesky::new(&kt).unwrap();
+            for j in 0..3 {
+                let exact = ch.solve(&b.col(j));
+                let err = rel_err(blk.solutions.row(j * shifts.len() + q), &exact);
+                assert!(err < 1e-6, "shift {t} col {j}: err {err}");
+            }
+        }
+        blk.recycle(&mut ws);
+    }
+
+    #[test]
+    fn ill_conditioned_refinement_falls_back_or_meets_tol() {
+        // κ = 1e8: the f32 forward error (κ·ε₃₂ ≈ 6) can swamp refinement.
+        // The contract is not "mixed always works" — it is "the caller never
+        // observes worse than f64": either the true residual meets the
+        // tolerance, or the engine re-solves in pure f64 (bit-identical to
+        // the direct f64 path) within a bounded number of sweeps.
+        let n = 60;
+        let mut k = Matrix::eye(n);
+        for i in 0..n {
+            let fr = i as f64 / (n - 1) as f64;
+            k[(i, i)] = 1e-8_f64.powf(1.0 - fr); // log-spaced spectrum 1e-8..1
+        }
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(73);
+        let b = Matrix::randn(n, 2, &mut rng);
+        let shifts = [0.0];
+        let opts = MsMinresOptions { max_iters: 500, tol: 1e-9, weights: None };
+        let cfg = RefineConfig::default();
+        let mut ws = SolveWorkspace::new();
+        let (blk, sweeps, fellback) =
+            msminres_block_refined_in(&mut ws, &op, &b, &shifts, &opts, &cfg);
+        assert!(sweeps <= cfg.max_sweeps, "sweep count must be bounded: {sweeps}");
+        let worst = blk.residuals.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            fellback || worst <= opts.tol,
+            "neither met tol ({worst:e}) nor fell back after {sweeps} sweeps"
+        );
+        if fellback {
+            // the fallback is the plain f64 engine on the original inputs —
+            // its outputs must be bit-identical to calling it directly
+            let direct = msminres_block_in(&mut ws, &op, &b, &shifts, &opts);
+            assert_eq!(blk.residuals, direct.residuals);
+            assert_eq!(blk.col_iterations, direct.col_iterations);
+            for c in 0..2 {
+                assert_eq!(blk.solutions.row(c), direct.solutions.row(c));
+            }
+            direct.recycle(&mut ws);
+        }
+        blk.recycle(&mut ws);
+    }
+
+    #[test]
+    fn refined_solve_reuses_warmed_workspace() {
+        // Same steady-state contract as the f64 engines: repeated refined
+        // solves on one workspace stop growing the pool after warmup
+        // (allocator-level proof lives in tests/alloc_regression.rs).
+        let n = 40;
+        let k = random_spd(n, 81);
+        let op = DenseOp::new(k);
+        let mut rng = Pcg64::seeded(82);
+        let b = Matrix::randn(n, 2, &mut rng);
+        let shifts = [0.5, 5.0];
+        let opts = MsMinresOptions { max_iters: 200, tol: 1e-8, weights: None };
+        let cfg = RefineConfig::default();
+        let mut ws = SolveWorkspace::new();
+        for _ in 0..2 {
+            let (blk, _, _) = msminres_block_refined_in(&mut ws, &op, &b, &shifts, &opts, &cfg);
+            blk.recycle(&mut ws);
+        }
+        let grows = ws.grows();
+        for _ in 0..3 {
+            let (blk, _, _) = msminres_block_refined_in(&mut ws, &op, &b, &shifts, &opts, &cfg);
+            blk.recycle(&mut ws);
+        }
+        assert_eq!(ws.grows(), grows, "warmed refined workspace must not re-allocate");
     }
 
     #[test]

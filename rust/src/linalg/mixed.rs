@@ -1,0 +1,2183 @@
+//! Mixed-precision (f32-storage / f64-accumulate) kernel tier + the
+//! `Precision` solve policy.
+//!
+//! The serving stack's hot MVMs are bandwidth-bound (DESIGN.md §7): at the
+//! sizes the paper targets, every Lanczos step streams O(N²) kernel-panel
+//! bytes and the FMA units wait on memory. Storing and streaming those
+//! panels in `f32` halves the bytes per entry — and on AVX2 doubles the
+//! lane count (8 × f32 vs 4 × f64) — while all *accumulation* stays in
+//! `f64`, so a single pass loses at most ~`k·ε₃₂` of forward accuracy.
+//! The solver then restores f64-grade residuals with iterative refinement
+//! (`krylov::msminres_block_refined_in`): the residual `r = b − K_{f64}·x`
+//! is always evaluated through the f64 operator, per the gating argument of
+//! Simpson et al. (PAPERS.md) — never trust the low-precision recurrence's
+//! own residual estimate.
+//!
+//! ## Layout of this module
+//!
+//! * [`Precision`] / [`RefineConfig`]: the solve-path policy knob carried on
+//!   `CiqOptions` → `SolverContext` (plus the `CIQ_PRECISION` env override).
+//! * [`MixedKernelTable`]: the f32-storage twin of
+//!   [`super::simd::KernelTable`] — same four entry families
+//!   (`gemm_nn`/`gemm_nt`/`gemm_tn`, `dot`, `rho_row`/`grad_row`), selected
+//!   by the *same* backend resolution ([`super::simd::backend`], including
+//!   the `CIQ_SIMD` override), so a forced backend forces both tiers.
+//! * Safe dispatch wrappers ([`gemm_nn`] …) mirroring [`super::gemm`], with
+//!   always-compiled scalar fallbacks that are also the property-test
+//!   oracles. There is no "pre-dispatch bit-identical" contract here (the
+//!   mixed tier is new); the contract is a documented forward-error bound
+//!   against the f64 oracles instead.
+//!
+//! ## Numeric contract
+//!
+//! * All GEMM/dot accumulation is f64; `f32 × f32` products are exact in
+//!   f64, so backend-vs-scalar differences are pure summation-order noise.
+//! * `gemm_nt` (the Gram stage) rounds its output to f32 once per entry —
+//!   it feeds `rho_row`, whose input is already f32.
+//! * `rho_row`/`grad_row` compute the distance in f32 (matching the f32
+//!   panel storage); AVX2 evaluates `ρ` with an 8-lane f32 `exp`
+//!   (degree-7 Taylor, ≤ ~4 ULP-f32; flushes below −87), AVX-512/NEON
+//!   widen to f64 lanes and reuse the f64 vector `exp`. The scalar
+//!   fallback computes `ρ` through glibc f64 on the f32 distance. All
+//!   variants agree to ~1e-5 relative (property-tested) — refinement
+//!   absorbs the rest.
+//!
+//! Narrowing `as f32` casts are intentionally *confined* to this module:
+//! structlint rule 7 requires a `// precision:` justification for any
+//! truncating cast elsewhere in the shimmed/hot modules.
+
+use super::simd::{self, Backend, RhoFamily};
+use std::sync::OnceLock;
+
+/// Arithmetic policy for a solve: pure f64, or f32-storage kernels wrapped
+/// in f64 iterative refinement. Carried on `CiqOptions`/`SolverContext`;
+/// `F64` keeps every code path bit-identical to the pre-mixed tree.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Precision {
+    /// Pure f64 (the default; bit-identical to pre-mixed behavior).
+    #[default]
+    F64,
+    /// f32-storage kernels + outer f64 iterative refinement.
+    Mixed(RefineConfig),
+}
+
+impl Precision {
+    /// Whether this policy runs the mixed-precision kernel tier.
+    pub fn is_mixed(self) -> bool {
+        matches!(self, Precision::Mixed(_))
+    }
+}
+
+/// Iterative-refinement loop parameters (see DESIGN.md §9). Each sweep
+/// contracts the error by ~`κ·ε₃₂`; stagnation or the sweep cap triggers a
+/// full fallback to the pure-f64 solve, so `Mixed` never returns a worse
+/// residual than the tolerance the f64 path is held to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RefineConfig {
+    /// Maximum refinement sweeps before falling back to pure f64.
+    pub max_sweeps: usize,
+    /// Floor for the inner (f32-operator) solve tolerance: asking the f32
+    /// recurrence for residuals below ~ε₃₂ just burns iterations.
+    pub inner_tol_floor: f64,
+    /// A sweep must shrink the worst column residual by at least this
+    /// factor, or the loop declares stagnation and falls back.
+    pub stall_ratio: f64,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        RefineConfig { max_sweeps: 4, inner_tol_floor: 3e-6, stall_ratio: 0.5 }
+    }
+}
+
+/// Parse a `CIQ_PRECISION` spec. Pure (no env access) so it is
+/// unit-testable; `auto`/empty mean "no override", unknown values warn to
+/// stderr and are ignored.
+pub fn parse_precision(spec: &str) -> Option<Precision> {
+    match spec.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => None,
+        "f64" => Some(Precision::F64),
+        "mixed" => Some(Precision::Mixed(RefineConfig::default())),
+        other => {
+            eprintln!("ciq: unknown CIQ_PRECISION value {other:?}; ignoring");
+            None
+        }
+    }
+}
+
+/// The process-wide `CIQ_PRECISION` override, resolved once (the
+/// service applies it to its config at startup; solves never re-read the
+/// environment).
+pub fn env_precision_override() -> Option<Precision> {
+    static CACHE: OnceLock<Option<Precision>> = OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("CIQ_PRECISION") {
+        Ok(spec) => parse_precision(&spec),
+        Err(_) => None,
+    })
+}
+
+/// Narrow an f64 slab into a same-length f32 slab (the one sanctioned bulk
+/// truncation site; pooled `SolveWorkspace::take_f32` buffers are the
+/// intended destination).
+pub fn downconvert(src: &[f64], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32;
+    }
+}
+
+/// Widen an f32 slab back into an f64 slab (exact).
+pub fn upconvert(src: &[f32], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f64::from(s);
+    }
+}
+
+/// Resolved mixed-precision function pointers for one backend — the
+/// f32-storage twin of [`super::simd::KernelTable`]. All entries are safe
+/// fns (thin wrappers over the `#[target_feature]` kernels), reachable only
+/// through [`table_for`]'s availability gate.
+///
+/// Contracts (validated by the dispatching wrappers below):
+/// * `gemm_nn(m, k, n, a, b, c, pack)`: `C(f64) += A(f32)·B(f32)`;
+///   `pack.len() ≥ k·NR` whenever `n ≥ NR`.
+/// * `gemm_nt(m, k, n, a, b, c)`: `C(f32) += A(f32)·B(f32)ᵀ`, accumulated
+///   in f64 per entry and rounded once on store (the Gram stage).
+/// * `gemm_tn(p, m, n, a, b, c)`: `C(f64) += A(f32)ᵀ·B(f32)`.
+/// * `dot(a, b)`: f64 accumulation, zip-truncation semantics.
+/// * `rho_row(fam, outputscale, sqi, sq, row)`: in-place
+///   `row[j] ← s²·ρ(√max(sqi + sq[j] − 2·row[j], 0))` on f32 storage.
+/// * `grad_row(fam, outputscale, li, sqi, sq, pan, rv)`: f32 panels, f64
+///   residual column, f64 partial sums (same meaning as the f64 entry).
+pub struct MixedKernelTable {
+    /// Which backend these pointers implement (for logs/benches).
+    pub backend: Backend,
+    /// `C(f64) += A(f32)·B(f32)` micro-kernel driver (packed-B panels).
+    pub gemm_nn: fn(usize, usize, usize, &[f32], &[f32], &mut [f64], &mut [f32]),
+    /// `C(f32) += A(f32)·B(f32)ᵀ` (f64-accumulated contiguous-row dots).
+    pub gemm_nt: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
+    /// `C(f64) += A(f32)ᵀ·B(f32)` (rank-1 updates).
+    pub gemm_tn: fn(usize, usize, usize, &[f32], &[f32], &mut [f64]),
+    /// f32-storage dot product with an f64 accumulator.
+    pub dot: fn(&[f32], &[f32]) -> f64,
+    /// Lane-parallel kernel-panel evaluation on f32 storage.
+    pub rho_row: fn(RhoFamily, f64, f32, &[f32], &mut [f32]),
+    /// Lane-parallel gradient-panel contraction (f32 panels, f64 sums).
+    pub grad_row: fn(RhoFamily, f64, f64, f32, &[f32], &[f32], &[f64]) -> (f64, f64),
+}
+
+/// The mixed table for the *current* backend (same resolution as
+/// [`super::simd::table`], including `CIQ_SIMD` and in-process overrides),
+/// or `None` when the scalar mixed fallbacks should run.
+pub fn table() -> Option<&'static MixedKernelTable> {
+    table_for(simd::backend())
+}
+
+/// The mixed table for a specific backend, if compiled *and* available on
+/// this CPU. As in the f64 tier, this availability check is the discharge
+/// of every reachable kernel's `#[target_feature]` contract.
+pub fn table_for(b: Backend) -> Option<&'static MixedKernelTable> {
+    if !b.available() {
+        return None;
+    }
+    match b {
+        Backend::Scalar => None,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => Some(&x86::AVX2_MIXED_TABLE),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 => Some(&x86::AVX512_MIXED_TABLE),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => Some(&neon::NEON_MIXED_TABLE),
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 | Backend::Avx512 => None,
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => None,
+    }
+}
+
+// ------------------------------------------------------- dispatch wrappers
+
+use super::gemm::NR;
+
+/// `C(f64) += A(f32)·B(f32)` with a caller-owned f32 pack buffer (grown as
+/// needed) — the mixed twin of [`super::gemm::gemm_nn_with_pack`].
+pub fn gemm_nn(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f64],
+    pack: &mut Vec<f32>,
+) {
+    assert_eq!(a.len(), m * k, "mixed gemm_nn: A buffer size");
+    assert_eq!(b.len(), k * n, "mixed gemm_nn: B buffer size");
+    assert_eq!(c.len(), m * n, "mixed gemm_nn: C buffer size");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // pack buffer only needed when at least one full NR panel exists
+    if n >= NR && pack.len() < k * NR {
+        pack.resize(k * NR, 0.0);
+    }
+    if let Some(t) = table() {
+        return (t.gemm_nn)(m, k, n, a, b, c, pack);
+    }
+    gemm_nn_scalar(m, k, n, a, b, c);
+}
+
+/// `C(f32) += A(f32)·B(f32)ᵀ` (f64-accumulated) — the Gram-panel stage.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "mixed gemm_nt: A buffer size");
+    assert_eq!(b.len(), n * k, "mixed gemm_nt: B buffer size");
+    assert_eq!(c.len(), m * n, "mixed gemm_nt: C buffer size");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if let Some(t) = table() {
+        return (t.gemm_nt)(m, k, n, a, b, c);
+    }
+    gemm_nt_scalar(m, k, n, a, b, c);
+}
+
+/// `C(f64) += A(f32)ᵀ·B(f32)` (rank-1 updates, zero-skip preserved).
+pub fn gemm_tn(p_rows: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+    assert_eq!(a.len(), p_rows * m, "mixed gemm_tn: A buffer size");
+    assert_eq!(b.len(), p_rows * n, "mixed gemm_tn: B buffer size");
+    assert_eq!(c.len(), m * n, "mixed gemm_tn: C buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if let Some(t) = table() {
+        return (t.gemm_tn)(p_rows, m, n, a, b, c);
+    }
+    gemm_tn_scalar(p_rows, m, n, a, b, c);
+}
+
+/// f32-storage dot product with an f64 accumulator.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    if let Some(t) = table() {
+        return (t.dot)(a, b);
+    }
+    dot_scalar(a, b)
+}
+
+/// Dispatching `rho_row` on f32 storage (see [`MixedKernelTable`]).
+pub fn rho_row(fam: RhoFamily, outputscale: f64, sqi: f32, sq: &[f32], row: &mut [f32]) {
+    if let Some(t) = table() {
+        return (t.rho_row)(fam, outputscale, sqi, sq, row);
+    }
+    rho_row_scalar(fam, outputscale, sqi, sq, row);
+}
+
+/// Dispatching `grad_row` on f32 panels (see [`MixedKernelTable`]).
+pub fn grad_row(
+    fam: RhoFamily,
+    outputscale: f64,
+    li: f64,
+    sqi: f32,
+    sq: &[f32],
+    pan: &[f32],
+    rv: &[f64],
+) -> (f64, f64) {
+    if let Some(t) = table() {
+        return (t.grad_row)(fam, outputscale, li, sqi, sq, pan, rv);
+    }
+    grad_row_scalar(fam, outputscale, li, sqi, sq, pan, rv)
+}
+
+// ------------------------------------------------------- scalar fallbacks
+
+/// Scalar mixed `gemm_nn` (fallback + oracle): f64 accumulation over f32
+/// storage in an i-p-j row-update order (no pack buffer needed).
+pub fn gemm_nn_scalar(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+    debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = f64::from(a[i * k + p]);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * f64::from(bv);
+            }
+        }
+    }
+}
+
+/// Scalar mixed `gemm_nt` (fallback + oracle): each output entry is one
+/// f64-accumulated dot, rounded to f32 exactly once on store.
+pub fn gemm_nt_scalar(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let s = dot_scalar(arow, &b[j * k..(j + 1) * k]);
+            let idx = i * n + j;
+            c[idx] = (f64::from(c[idx]) + s) as f32;
+        }
+    }
+}
+
+/// Scalar mixed `gemm_tn` (fallback + oracle): rank-1 row updates with the
+/// same zero-skip as the f64 kernel.
+pub fn gemm_tn_scalar(p_rows: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+    debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+    for p in 0..p_rows {
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = a[p * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            let av = f64::from(av);
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * f64::from(bv);
+            }
+        }
+    }
+}
+
+/// Scalar mixed dot (fallback + oracle): exact f64 products (24+24 < 53
+/// significand bits), zip-truncation semantics like the f64 kernel.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        s += f64::from(x) * f64::from(y);
+    }
+    s
+}
+
+/// Scalar mixed `rho_row` (fallback + oracle): the distance is computed in
+/// f32 (matching the vector kernels' storage precision), `ρ` through glibc
+/// f64, one f32 rounding on store.
+pub fn rho_row_scalar(fam: RhoFamily, outputscale: f64, sqi: f32, sq: &[f32], row: &mut [f32]) {
+    debug_assert_eq!(sq.len(), row.len());
+    for (v, &sj) in row.iter_mut().zip(sq) {
+        let d2 = (sqi + sj - 2.0 * *v).max(0.0);
+        *v = (outputscale * fam.rho(f64::from(d2).sqrt())) as f32;
+    }
+}
+
+/// Scalar mixed `grad_row` (fallback + oracle): f32 distances, f64 `ρ`/`dρ`
+/// and f64 partial sums (`lr = li·rv[j]·s²` in the f64 kernel's exact
+/// association).
+pub fn grad_row_scalar(
+    fam: RhoFamily,
+    outputscale: f64,
+    li: f64,
+    sqi: f32,
+    sq: &[f32],
+    pan: &[f32],
+    rv: &[f64],
+) -> (f64, f64) {
+    debug_assert_eq!(sq.len(), pan.len());
+    debug_assert_eq!(sq.len(), rv.len());
+    let mut d_ell = 0.0;
+    let mut d_s2 = 0.0;
+    for ((&xx, &sj), &rj) in pan.iter().zip(sq).zip(rv) {
+        let rr = f64::from((sqi + sj - 2.0 * xx).max(0.0)).sqrt();
+        let lr = li * rj * outputscale;
+        d_ell += lr * fam.drho_dlog_ell(rr);
+        d_s2 += lr * fam.rho(rr);
+    }
+    (d_ell, d_s2)
+}
+
+/// Shared scalar column tail for the vector `gemm_nn` drivers (columns
+/// `j0..n` that don't fill an NR panel).
+#[allow(dead_code)] // referenced only by the cfg(target_arch) kernel modules
+pub(crate) fn gemm_nn_coltail(
+    m: usize,
+    k: usize,
+    n: usize,
+    j0: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f64],
+) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = f64::from(a[i * k + p]);
+            if av == 0.0 {
+                continue;
+            }
+            for j in j0..n {
+                c[i * n + j] += av * f64::from(b[p * n + j]);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2+FMA and AVX-512F mixed-precision kernels. Same safety
+    //! convention as `simd::x86`: every `unsafe fn`'s single obligation is
+    //! "the named target features are available", discharged by
+    //! [`super::table_for`]'s `Backend::available` gate in front of the
+    //! safe `*_entry` wrappers (the only callers).
+    //!
+    //! AVX2 runs the `ρ` pipeline in 8 × f32 lanes with a dedicated f32
+    //! `exp` (twice the lane count of the f64 tier); AVX-512 widens each
+    //! 8 × f32 load to one 8 × f64 zmm and reuses the f64 vector `exp`, so
+    //! its math error matches the scalar mixed oracle more closely.
+
+    use super::super::gemm::{MR, NR};
+    use super::super::simd::x86::{exp_avx512, hsum_avx2, neg_avx512};
+    use super::{Backend, MixedKernelTable, RhoFamily};
+    use core::arch::x86_64::*;
+
+    const ROUND_NEAREST: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    /// Taylor coefficients `1/k!` for the degree-7 f32 `e^r` polynomial on
+    /// `|r| ≤ ln2/2` (truncation `r⁸/8!` ≈ 5e-9 at the interval edge —
+    /// far below f32 ε; total error ≤ ~4 ULP-f32).
+    const EXP_POLY_F32: [f32; 8] = [
+        1.0,
+        1.0,
+        1.0 / 2.0,
+        1.0 / 6.0,
+        1.0 / 24.0,
+        1.0 / 120.0,
+        1.0 / 720.0,
+        1.0 / 5040.0,
+    ];
+    const LOG2_E_F32: f32 = std::f32::consts::LOG2_E;
+    /// `ln 2` split: hi part exact in f32 (0x3F317000), lo the remainder.
+    const LN_2_HI_F32: f32 = 0.693_359_375;
+    const LN_2_LO_F32: f32 = -2.121_944_4e-4;
+
+    pub(super) static AVX2_MIXED_TABLE: MixedKernelTable = MixedKernelTable {
+        backend: Backend::Avx2,
+        gemm_nn: gemm_nn_avx2_entry,
+        gemm_nt: gemm_nt_avx2_entry,
+        gemm_tn: gemm_tn_avx2_entry,
+        dot: dot_avx2_entry,
+        rho_row: rho_row_avx2_entry,
+        grad_row: grad_row_avx2_entry,
+    };
+
+    // ---------------------------------------------------------------- AVX2
+
+    /// 8-lane f32 `e^x`: the f64 vector `exp`'s `2^n · 2^f` scheme at f32
+    /// width (degree-7 Taylor, f32 hi/lo `ln 2` split, exponent-bit
+    /// scaling). Flushes `x < −87` to zero (f32 normal range ends near
+    /// `e^{−87.3}`; the kernels treat subnormals and 0 alike).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn exp_ps_avx2(x: __m256) -> __m256 {
+        // SAFETY: register-only intrinsics (no memory access); avx2+fma
+        // hold by this fn's own contract.
+        unsafe {
+            // clamp keeps n in the convert range; the final mask zeroes
+            // the clamped lanes anyway
+            let xc = _mm256_max_ps(x, _mm256_set1_ps(-100.0));
+            let n = _mm256_round_ps::<ROUND_NEAREST>(_mm256_mul_ps(xc, _mm256_set1_ps(LOG2_E_F32)));
+            let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN_2_HI_F32), xc);
+            let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(LN_2_LO_F32), r);
+            let mut p = _mm256_set1_ps(EXP_POLY_F32[7]);
+            for idx in (0..7).rev() {
+                p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY_F32[idx]));
+            }
+            // 2^n through the exponent bits (n ≥ −126 for x ≥ −87, so the
+            // biased exponent stays normal)
+            let n32 = _mm256_cvtps_epi32(n);
+            let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(n32, _mm256_set1_epi32(127)));
+            let res = _mm256_mul_ps(p, _mm256_castsi256_ps(bits));
+            let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(x, _mm256_set1_ps(-87.0));
+            _mm256_and_ps(res, keep)
+        }
+    }
+
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn neg_ps_avx2(v: __m256) -> __m256 {
+        // SAFETY: register-only intrinsic; features per the fn contract.
+        unsafe { _mm256_xor_ps(v, _mm256_set1_ps(-0.0)) }
+    }
+
+    /// Load 8 f32 and widen to two 4 × f64 vectors (conversion is exact).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU, and that `p..p+8` is in bounds.
+    #[target_feature(enable = "avx2,fma")]
+    #[inline]
+    unsafe fn cvt8_avx2(p: *const f32) -> (__m256d, __m256d) {
+        // SAFETY: one 32-byte load at `p` (in bounds per the fn contract);
+        // the converts are register-only.
+        unsafe {
+            let v = _mm256_loadu_ps(p);
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            (lo, hi)
+        }
+    }
+
+    /// f32-storage dot with f64 accumulators, zip-truncation semantics.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: avx2+fma per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut p = 0;
+            while p + 8 <= n {
+                let (al, ah) = cvt8_avx2(ap.add(p));
+                let (bl, bh) = cvt8_avx2(bp.add(p));
+                acc0 = _mm256_fmadd_pd(al, bl, acc0);
+                acc1 = _mm256_fmadd_pd(ah, bh, acc1);
+                p += 8;
+            }
+            let mut s = hsum_avx2(_mm256_add_pd(acc0, acc1));
+            while p < n {
+                s += f64::from(*ap.add(p)) * f64::from(*bp.add(p));
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile of [`gemm_nn_avx2`]: identical accumulator
+    /// layout to the f64 tier; the B panel is f32 and widened on load, the
+    /// A broadcasts are widened scalars.
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn kernel_mrxnr_avx2(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f32],
+        bpack: &[f32],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: avx2+fma per the fn contract. Loads read a at
+        // mi·k + p < MR·k and bpack at p·NR + lane < k·NR; loads/stores on
+        // c touch rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all
+        // inside the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc00 = _mm256_setzero_pd();
+            let mut acc01 = _mm256_setzero_pd();
+            let mut acc10 = _mm256_setzero_pd();
+            let mut acc11 = _mm256_setzero_pd();
+            let mut acc20 = _mm256_setzero_pd();
+            let mut acc21 = _mm256_setzero_pd();
+            let mut acc30 = _mm256_setzero_pd();
+            let mut acc31 = _mm256_setzero_pd();
+            for p in 0..k {
+                let (b0, b1) = cvt8_avx2(bp.add(p * NR));
+                let a0 = _mm256_set1_pd(f64::from(*ap.add(p)));
+                acc00 = _mm256_fmadd_pd(a0, b0, acc00);
+                acc01 = _mm256_fmadd_pd(a0, b1, acc01);
+                let a1 = _mm256_set1_pd(f64::from(*ap.add(k + p)));
+                acc10 = _mm256_fmadd_pd(a1, b0, acc10);
+                acc11 = _mm256_fmadd_pd(a1, b1, acc11);
+                let a2 = _mm256_set1_pd(f64::from(*ap.add(2 * k + p)));
+                acc20 = _mm256_fmadd_pd(a2, b0, acc20);
+                acc21 = _mm256_fmadd_pd(a2, b1, acc21);
+                let a3 = _mm256_set1_pd(f64::from(*ap.add(3 * k + p)));
+                acc30 = _mm256_fmadd_pd(a3, b0, acc30);
+                acc31 = _mm256_fmadd_pd(a3, b1, acc31);
+            }
+            let cp = c.as_mut_ptr();
+            let c0 = cp.add(j);
+            _mm256_storeu_pd(c0, _mm256_add_pd(_mm256_loadu_pd(c0), acc00));
+            let c0h = cp.add(j + 4);
+            _mm256_storeu_pd(c0h, _mm256_add_pd(_mm256_loadu_pd(c0h), acc01));
+            let c1 = cp.add(n + j);
+            _mm256_storeu_pd(c1, _mm256_add_pd(_mm256_loadu_pd(c1), acc10));
+            let c1h = cp.add(n + j + 4);
+            _mm256_storeu_pd(c1h, _mm256_add_pd(_mm256_loadu_pd(c1h), acc11));
+            let c2 = cp.add(2 * n + j);
+            _mm256_storeu_pd(c2, _mm256_add_pd(_mm256_loadu_pd(c2), acc20));
+            let c2h = cp.add(2 * n + j + 4);
+            _mm256_storeu_pd(c2h, _mm256_add_pd(_mm256_loadu_pd(c2h), acc21));
+            let c3 = cp.add(3 * n + j);
+            _mm256_storeu_pd(c3, _mm256_add_pd(_mm256_loadu_pd(c3), acc30));
+            let c3h = cp.add(3 * n + j + 4);
+            _mm256_storeu_pd(c3h, _mm256_add_pd(_mm256_loadu_pd(c3h), acc31));
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_avx2`].
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn kernel_1xnr_avx2(j: usize, arow: &[f32], bpack: &[f32], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: avx2+fma per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the stores hit crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            for (p, &av) in arow.iter().enumerate() {
+                let avv = _mm256_set1_pd(f64::from(av));
+                let (b0, b1) = cvt8_avx2(bp.add(p * NR));
+                acc0 = _mm256_fmadd_pd(avv, b0, acc0);
+                acc1 = _mm256_fmadd_pd(avv, b1, acc1);
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), acc0));
+            let cph = cp.add(4);
+            _mm256_storeu_pd(cph, _mm256_add_pd(_mm256_loadu_pd(cph), acc1));
+        }
+    }
+
+    /// Driver for the packed-panel mixed `C += A·B` (same structure as the
+    /// f64 drivers: pack an NR-column f32 B panel, sweep MR-row tiles,
+    /// shared scalar column tail).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_nn_avx2(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the tile
+        // kernels; the panel slicing matches the (bounds-checked) f64
+        // driver exactly.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_avx2(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_avx2(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                super::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Mixed `C += A·Bᵀ`: one f64-accumulated dot per entry, rounded to
+    /// f32 once on store (the Gram stage runs at small k = input dim, so
+    /// plain row dots are enough here).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_nt_avx2(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the dot
+        // kernel; row slicing is bounds-checked safe code.
+        unsafe {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let s = dot_avx2(arow, &b[j * k..(j + 1) * k]);
+                    let idx = i * n + j;
+                    c[idx] = (f64::from(c[idx]) + s) as f32;
+                }
+            }
+        }
+    }
+
+    /// Single rank-1 row update of [`gemm_tn_avx2`] (f32 B row widened on
+    /// load, f64 C row).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rank1_row_avx2(av: f64, brow: &[f32], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: avx2+fma per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = _mm256_set1_pd(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j)));
+                let cv = _mm256_fmadd_pd(vv, bv, _mm256_loadu_pd(cp.add(j)));
+                _mm256_storeu_pd(cp.add(j), cv);
+                j += 4;
+            }
+            while j < n {
+                crow[j] += av * f64::from(brow[j]);
+                j += 1;
+            }
+        }
+    }
+
+    /// Mixed `C += Aᵀ·B`: rank-1 updates with the scalar kernel's
+    /// zero-skip (exercised off the hot path; tested like the rest).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gemm_tn_avx2(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: avx2+fma per the fn contract, forwarded to the row
+        // kernel; row slicing is bounds-checked safe code.
+        unsafe {
+            for p in 0..p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_avx2(f64::from(av), brow, &mut c[i * n..(i + 1) * n]);
+                }
+            }
+        }
+    }
+
+    /// 8 × f32-lane `row[j] ← s²·ρ(√max(sqi + sq[j] − 2·row[j], 0))` —
+    /// twice the lane count of the f64 tier. Lane remainders use the
+    /// scalar mixed path (f32 distance, glibc f64 `ρ`).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rho_row_avx2(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f32,
+        sq: &[f32],
+        row: &mut [f32],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n8 = n - n % 8;
+        // SAFETY: avx2+fma per the fn contract; loads/stores run at
+        // j + lane < n8 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = _mm256_set1_ps(sqi);
+            let vos = _mm256_set1_ps(outputscale as f32);
+            let vm2 = _mm256_set1_ps(-2.0);
+            let vzero = _mm256_setzero_ps();
+            let vone = _mm256_set1_ps(1.0);
+            let mut j = 0;
+            while j < n8 {
+                let v = _mm256_loadu_ps(rp.add(j));
+                let base = _mm256_add_ps(vsqi, _mm256_loadu_ps(sp.add(j)));
+                let d2 = _mm256_max_ps(_mm256_fmadd_ps(vm2, v, base), vzero);
+                let rho = match fam {
+                    RhoFamily::Rbf => exp_ps_avx2(_mm256_mul_ps(_mm256_set1_ps(-0.5), d2)),
+                    RhoFamily::Matern12 => exp_ps_avx2(neg_ps_avx2(_mm256_sqrt_ps(d2))),
+                    RhoFamily::Matern32 => {
+                        let aa = _mm256_sqrt_ps(_mm256_mul_ps(_mm256_set1_ps(3.0), d2));
+                        let e = exp_ps_avx2(neg_ps_avx2(aa));
+                        _mm256_mul_ps(_mm256_add_ps(vone, aa), e)
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm256_sqrt_ps(_mm256_mul_ps(_mm256_set1_ps(5.0), d2));
+                        let e = exp_ps_avx2(neg_ps_avx2(aa));
+                        let lin = _mm256_add_ps(vone, aa);
+                        let third = _mm256_set1_ps(1.0 / 3.0);
+                        let a2t = _mm256_mul_ps(_mm256_mul_ps(aa, aa), third);
+                        _mm256_mul_ps(_mm256_add_ps(lin, a2t), e)
+                    }
+                };
+                _mm256_storeu_ps(rp.add(j), _mm256_mul_ps(vos, rho));
+                j += 8;
+            }
+            for jj in n8..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = (outputscale * fam.rho(f64::from(d2).sqrt())) as f32;
+            }
+        }
+    }
+
+    /// 8 × f32-lane gradient-panel contraction: `ρ`/`dρ` evaluated in f32
+    /// lanes, widened once, then accumulated in f64 against the f64
+    /// residual column (`lr = (li·s²)·rv[j]`).
+    // SAFETY: caller must ensure the avx2 and fma target features are
+    // available on the executing CPU.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_avx2(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n8 = n - n % 8;
+        let scale = li * outputscale;
+        // SAFETY: avx2+fma per the fn contract; all loads run at
+        // j + lane < n8 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rvp = rv.as_ptr();
+            let vscale = _mm256_set1_pd(scale);
+            let vsqi = _mm256_set1_ps(sqi);
+            let vm2 = _mm256_set1_ps(-2.0);
+            let vzero = _mm256_setzero_ps();
+            let vone = _mm256_set1_ps(1.0);
+            let mut aell0 = _mm256_setzero_pd();
+            let mut aell1 = _mm256_setzero_pd();
+            let mut as20 = _mm256_setzero_pd();
+            let mut as21 = _mm256_setzero_pd();
+            let mut j = 0;
+            while j < n8 {
+                let x = _mm256_loadu_ps(pp.add(j));
+                let base = _mm256_add_ps(vsqi, _mm256_loadu_ps(sp.add(j)));
+                let d2 = _mm256_max_ps(_mm256_fmadd_ps(vm2, x, base), vzero);
+                // (ρ, dρ/dlogℓ) per family, f32 lanes (dρ formulas match
+                // RhoFamily::drho_dlog_ell: Rbf d2·e, M12 a·e, M32 a²·e,
+                // M52 (a²/3)(1+a)·e)
+                let (rho_ps, drho_ps) = match fam {
+                    RhoFamily::Rbf => {
+                        let e = exp_ps_avx2(_mm256_mul_ps(_mm256_set1_ps(-0.5), d2));
+                        (e, _mm256_mul_ps(d2, e))
+                    }
+                    RhoFamily::Matern12 => {
+                        let aa = _mm256_sqrt_ps(d2);
+                        let e = exp_ps_avx2(neg_ps_avx2(aa));
+                        (e, _mm256_mul_ps(aa, e))
+                    }
+                    RhoFamily::Matern32 => {
+                        let aa = _mm256_sqrt_ps(_mm256_mul_ps(_mm256_set1_ps(3.0), d2));
+                        let e = exp_ps_avx2(neg_ps_avx2(aa));
+                        let rho = _mm256_mul_ps(_mm256_add_ps(vone, aa), e);
+                        (rho, _mm256_mul_ps(_mm256_mul_ps(aa, aa), e))
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm256_sqrt_ps(_mm256_mul_ps(_mm256_set1_ps(5.0), d2));
+                        let e = exp_ps_avx2(neg_ps_avx2(aa));
+                        let lin = _mm256_add_ps(vone, aa);
+                        let third = _mm256_set1_ps(1.0 / 3.0);
+                        let a2t = _mm256_mul_ps(_mm256_mul_ps(aa, aa), third);
+                        let rho = _mm256_mul_ps(_mm256_add_ps(lin, a2t), e);
+                        (rho, _mm256_mul_ps(_mm256_mul_ps(a2t, lin), e))
+                    }
+                };
+                let rl = _mm256_cvtps_pd(_mm256_castps256_ps128(rho_ps));
+                let rh = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(rho_ps));
+                let dl = _mm256_cvtps_pd(_mm256_castps256_ps128(drho_ps));
+                let dh = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(drho_ps));
+                let lr0 = _mm256_mul_pd(vscale, _mm256_loadu_pd(rvp.add(j)));
+                let lr1 = _mm256_mul_pd(vscale, _mm256_loadu_pd(rvp.add(j + 4)));
+                aell0 = _mm256_fmadd_pd(lr0, dl, aell0);
+                aell1 = _mm256_fmadd_pd(lr1, dh, aell1);
+                as20 = _mm256_fmadd_pd(lr0, rl, as20);
+                as21 = _mm256_fmadd_pd(lr1, rh, as21);
+                j += 8;
+            }
+            let mut d_ell = hsum_avx2(_mm256_add_pd(aell0, aell1));
+            let mut d_s2 = hsum_avx2(_mm256_add_pd(as20, as21));
+            for jj in n8..n {
+                let rr = f64::from((sqi + sq[jj] - 2.0 * pan[jj]).max(0.0)).sqrt();
+                let lr = scale * rv[jj];
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe table entries. Every body's `unsafe` discharge is the same:
+    // these fns are reachable only through AVX2_MIXED_TABLE, which
+    // `table_for` exposes only after `Backend::Avx2.available()` confirmed
+    // the avx2 and fma features on this CPU.
+
+    fn gemm_nn_avx2_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_nn_avx2(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_avx2_entry(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_nt_avx2(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_avx2_entry(p_rows: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { gemm_tn_avx2(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_avx2_entry(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { dot_avx2(a, b) }
+    }
+
+    fn rho_row_avx2_entry(fam: RhoFamily, outputscale: f64, sqi: f32, sq: &[f32], row: &mut [f32]) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { rho_row_avx2(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_avx2_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: avx2+fma verified by `table_for` (see entry-block note).
+        unsafe { grad_row_avx2(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+
+    // ------------------------------------------------------------- AVX-512
+
+    pub(super) static AVX512_MIXED_TABLE: MixedKernelTable = MixedKernelTable {
+        backend: Backend::Avx512,
+        gemm_nn: gemm_nn_avx512_entry,
+        gemm_nt: gemm_nt_avx512_entry,
+        gemm_tn: gemm_tn_avx512_entry,
+        dot: dot_avx512_entry,
+        rho_row: rho_row_avx512_entry,
+        grad_row: grad_row_avx512_entry,
+    };
+
+    /// Load 8 f32 and widen to one 8 × f64 zmm (exact; the whole NR=8
+    /// panel row in one register — the mixed tier's AVX-512 advantage is
+    /// halved *loads*, not extra lanes).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU, and that `p..p+8` is in bounds.
+    #[target_feature(enable = "avx512f")]
+    #[inline]
+    unsafe fn cvt8_avx512(p: *const f32) -> __m512d {
+        // SAFETY: one 32-byte load at `p` (in bounds per the fn contract);
+        // the convert is register-only.
+        unsafe { _mm512_cvtps_pd(_mm256_loadu_ps(p)) }
+    }
+
+    /// 8-lane f32-storage dot with f64 accumulators.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot_avx512(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: avx512f per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = _mm512_setzero_pd();
+            let mut acc1 = _mm512_setzero_pd();
+            let mut p = 0;
+            while p + 16 <= n {
+                acc0 = _mm512_fmadd_pd(cvt8_avx512(ap.add(p)), cvt8_avx512(bp.add(p)), acc0);
+                let a1 = cvt8_avx512(ap.add(p + 8));
+                let b1 = cvt8_avx512(bp.add(p + 8));
+                acc1 = _mm512_fmadd_pd(a1, b1, acc1);
+                p += 16;
+            }
+            if p + 8 <= n {
+                acc0 = _mm512_fmadd_pd(cvt8_avx512(ap.add(p)), cvt8_avx512(bp.add(p)), acc0);
+                p += 8;
+            }
+            let mut s = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+            while p < n {
+                s += f64::from(*ap.add(p)) * f64::from(*bp.add(p));
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile, AVX-512 mixed: one widened zmm per packed B
+    /// row, four broadcast-FMA accumulators (mirrors the f64 tile).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn kernel_mrxnr_avx512(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f32],
+        bpack: &[f32],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: avx512f per the fn contract. Loads read a at
+        // mi·k + p < MR·k and bpack at p·NR + lane < k·NR; loads/stores on
+        // c touch rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all
+        // inside the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc0 = _mm512_setzero_pd();
+            let mut acc1 = _mm512_setzero_pd();
+            let mut acc2 = _mm512_setzero_pd();
+            let mut acc3 = _mm512_setzero_pd();
+            for p in 0..k {
+                let bv = cvt8_avx512(bp.add(p * NR));
+                acc0 = _mm512_fmadd_pd(_mm512_set1_pd(f64::from(*ap.add(p))), bv, acc0);
+                acc1 = _mm512_fmadd_pd(_mm512_set1_pd(f64::from(*ap.add(k + p))), bv, acc1);
+                acc2 = _mm512_fmadd_pd(_mm512_set1_pd(f64::from(*ap.add(2 * k + p))), bv, acc2);
+                acc3 = _mm512_fmadd_pd(_mm512_set1_pd(f64::from(*ap.add(3 * k + p))), bv, acc3);
+            }
+            let cp = c.as_mut_ptr();
+            let c0 = cp.add(j);
+            _mm512_storeu_pd(c0, _mm512_add_pd(_mm512_loadu_pd(c0), acc0));
+            let c1 = cp.add(n + j);
+            _mm512_storeu_pd(c1, _mm512_add_pd(_mm512_loadu_pd(c1), acc1));
+            let c2 = cp.add(2 * n + j);
+            _mm512_storeu_pd(c2, _mm512_add_pd(_mm512_loadu_pd(c2), acc2));
+            let c3 = cp.add(3 * n + j);
+            _mm512_storeu_pd(c3, _mm512_add_pd(_mm512_loadu_pd(c3), acc3));
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_avx512`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn kernel_1xnr_avx512(j: usize, arow: &[f32], bpack: &[f32], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: avx512f per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the store hits crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc = _mm512_setzero_pd();
+            for (p, &av) in arow.iter().enumerate() {
+                let bv = cvt8_avx512(bp.add(p * NR));
+                acc = _mm512_fmadd_pd(_mm512_set1_pd(f64::from(av)), bv, acc);
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), acc));
+        }
+    }
+
+    /// AVX-512 driver for the packed-panel mixed `C += A·B`.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_nn_avx512(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: avx512f per the fn contract, forwarded to the tile
+        // kernels; the panel slicing matches the (bounds-checked) f64
+        // driver exactly.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_avx512(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_avx512(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                super::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Mixed `C += A·Bᵀ`, AVX-512 (per-entry f64 dots, one f32 rounding).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_nt_avx512(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: avx512f per the fn contract, forwarded to the dot
+        // kernel; row slicing is bounds-checked safe code.
+        unsafe {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let s = dot_avx512(arow, &b[j * k..(j + 1) * k]);
+                    let idx = i * n + j;
+                    c[idx] = (f64::from(c[idx]) + s) as f32;
+                }
+            }
+        }
+    }
+
+    /// Single rank-1 row update of [`gemm_tn_avx512`].
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn rank1_row_avx512(av: f64, brow: &[f32], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: avx512f per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = _mm512_set1_pd(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                let cv = _mm512_fmadd_pd(vv, cvt8_avx512(bp.add(j)), _mm512_loadu_pd(cp.add(j)));
+                _mm512_storeu_pd(cp.add(j), cv);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += av * f64::from(brow[j]);
+                j += 1;
+            }
+        }
+    }
+
+    /// Mixed `C += Aᵀ·B`, AVX-512 (rank-1 updates, zero-skip preserved).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn gemm_tn_avx512(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: avx512f per the fn contract, forwarded to the row
+        // kernel; row slicing is bounds-checked safe code.
+        unsafe {
+            for p in 0..p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_avx512(f64::from(av), brow, &mut c[i * n..(i + 1) * n]);
+                }
+            }
+        }
+    }
+
+    /// AVX-512 mixed `rho_row`: widen 8 f32 to f64 lanes, run the f64-lane
+    /// family math + vector `exp`, narrow once on store — same lane count
+    /// as the f64 tier at half the panel bandwidth.
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn rho_row_avx512(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f32,
+        sq: &[f32],
+        row: &mut [f32],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n8 = n - n % 8;
+        // SAFETY: avx512f per the fn contract; loads/stores run at
+        // j + lane < n8 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = _mm512_set1_pd(f64::from(sqi));
+            let vos = _mm512_set1_pd(outputscale);
+            let vm2 = _mm512_set1_pd(-2.0);
+            let vzero = _mm512_setzero_pd();
+            let vone = _mm512_set1_pd(1.0);
+            let mut j = 0;
+            while j < n8 {
+                let v = cvt8_avx512(rp.add(j));
+                let base = _mm512_add_pd(vsqi, cvt8_avx512(sp.add(j)));
+                let d2 = _mm512_max_pd(_mm512_fmadd_pd(vm2, v, base), vzero);
+                let rho = match fam {
+                    RhoFamily::Rbf => exp_avx512(_mm512_mul_pd(_mm512_set1_pd(-0.5), d2)),
+                    RhoFamily::Matern12 => exp_avx512(neg_avx512(_mm512_sqrt_pd(d2))),
+                    RhoFamily::Matern32 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(3.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        _mm512_mul_pd(_mm512_add_pd(vone, aa), e)
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(5.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let lin = _mm512_add_pd(vone, aa);
+                        let third = _mm512_set1_pd(1.0 / 3.0);
+                        let a2t = _mm512_mul_pd(_mm512_mul_pd(aa, aa), third);
+                        _mm512_mul_pd(_mm512_add_pd(lin, a2t), e)
+                    }
+                };
+                _mm256_storeu_ps(rp.add(j), _mm512_cvtpd_ps(_mm512_mul_pd(vos, rho)));
+                j += 8;
+            }
+            for jj in n8..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = (outputscale * fam.rho(f64::from(d2).sqrt())) as f32;
+            }
+        }
+    }
+
+    /// AVX-512 mixed gradient-panel contraction (widened f64 lanes, f64
+    /// accumulators against the f64 residual column).
+    // SAFETY: caller must ensure the avx512f target feature is available
+    // on the executing CPU.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_avx512(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n8 = n - n % 8;
+        let scale = li * outputscale;
+        // SAFETY: avx512f per the fn contract; all loads run at
+        // j + lane < n8 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rvp = rv.as_ptr();
+            let vscale = _mm512_set1_pd(scale);
+            let vsqi = _mm512_set1_pd(f64::from(sqi));
+            let vm2 = _mm512_set1_pd(-2.0);
+            let vzero = _mm512_setzero_pd();
+            let vone = _mm512_set1_pd(1.0);
+            let mut aell = _mm512_setzero_pd();
+            let mut as2 = _mm512_setzero_pd();
+            let mut j = 0;
+            while j < n8 {
+                let x = cvt8_avx512(pp.add(j));
+                let base = _mm512_add_pd(vsqi, cvt8_avx512(sp.add(j)));
+                let d2 = _mm512_max_pd(_mm512_fmadd_pd(vm2, x, base), vzero);
+                let (rho, drho) = match fam {
+                    RhoFamily::Rbf => {
+                        let e = exp_avx512(_mm512_mul_pd(_mm512_set1_pd(-0.5), d2));
+                        (e, _mm512_mul_pd(d2, e))
+                    }
+                    RhoFamily::Matern12 => {
+                        let aa = _mm512_sqrt_pd(d2);
+                        let e = exp_avx512(neg_avx512(aa));
+                        (e, _mm512_mul_pd(aa, e))
+                    }
+                    RhoFamily::Matern32 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(3.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let rho = _mm512_mul_pd(_mm512_add_pd(vone, aa), e);
+                        (rho, _mm512_mul_pd(_mm512_mul_pd(aa, aa), e))
+                    }
+                    RhoFamily::Matern52 => {
+                        let aa = _mm512_sqrt_pd(_mm512_mul_pd(_mm512_set1_pd(5.0), d2));
+                        let e = exp_avx512(neg_avx512(aa));
+                        let lin = _mm512_add_pd(vone, aa);
+                        let third = _mm512_set1_pd(1.0 / 3.0);
+                        let a2t = _mm512_mul_pd(_mm512_mul_pd(aa, aa), third);
+                        let rho = _mm512_mul_pd(_mm512_add_pd(lin, a2t), e);
+                        (rho, _mm512_mul_pd(_mm512_mul_pd(a2t, lin), e))
+                    }
+                };
+                let lr = _mm512_mul_pd(vscale, _mm512_loadu_pd(rvp.add(j)));
+                aell = _mm512_fmadd_pd(lr, drho, aell);
+                as2 = _mm512_fmadd_pd(lr, rho, as2);
+                j += 8;
+            }
+            let mut d_ell = _mm512_reduce_add_pd(aell);
+            let mut d_s2 = _mm512_reduce_add_pd(as2);
+            for jj in n8..n {
+                let rr = f64::from((sqi + sq[jj] - 2.0 * pan[jj]).max(0.0)).sqrt();
+                let lr = scale * rv[jj];
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe table entries — reachable only through AVX512_MIXED_TABLE,
+    // which `table_for` exposes only after `Backend::Avx512.available()`
+    // confirmed the avx512f feature on this CPU.
+
+    fn gemm_nn_avx512_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_nn_avx512(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_avx512_entry(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_nt_avx512(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_avx512_entry(
+        p_rows: usize,
+        m: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { gemm_tn_avx512(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_avx512_entry(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { dot_avx512(a, b) }
+    }
+
+    fn rho_row_avx512_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f32,
+        sq: &[f32],
+        row: &mut [f32],
+    ) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { rho_row_avx512(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_avx512_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: avx512f verified by `table_for` (see entry-block note).
+        unsafe { grad_row_avx512(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON/AdvSIMD mixed-precision kernels (2 × f64 lanes over widened
+    //! 4 × f32 loads). Same safety convention as the x86 module; NEON is
+    //! baseline on `aarch64`, so the availability gate is unconditional
+    //! there.
+
+    use super::super::gemm::{MR, NR};
+    use super::super::simd::neon::exp_neon;
+    use super::{Backend, MixedKernelTable, RhoFamily};
+    use core::arch::aarch64::*;
+
+    pub(super) static NEON_MIXED_TABLE: MixedKernelTable = MixedKernelTable {
+        backend: Backend::Neon,
+        gemm_nn: gemm_nn_neon_entry,
+        gemm_nt: gemm_nt_neon_entry,
+        gemm_tn: gemm_tn_neon_entry,
+        dot: dot_neon_entry,
+        rho_row: rho_row_neon_entry,
+        grad_row: grad_row_neon_entry,
+    };
+
+    /// Load 4 f32 and widen to two 2 × f64 vectors (exact).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU, and that `p..p+4` is in bounds.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn cvt4_neon(p: *const f32) -> (float64x2_t, float64x2_t) {
+        // SAFETY: one 16-byte load at `p` (in bounds per the fn contract);
+        // the converts are register-only.
+        unsafe {
+            let v = vld1q_f32(p);
+            (vcvt_f64_f32(vget_low_f32(v)), vcvt_high_f64_f32(v))
+        }
+    }
+
+    /// `(ρ, dρ/dlogℓ)` on two f64 lanes (shared by the `rho_row` /
+    /// `grad_row` halves; formulas match `RhoFamily`).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn rho_drho_neon(fam: RhoFamily, d2: float64x2_t) -> (float64x2_t, float64x2_t) {
+        // SAFETY: register-only intrinsics; neon per the fn contract.
+        unsafe {
+            let vone = vdupq_n_f64(1.0);
+            match fam {
+                RhoFamily::Rbf => {
+                    let e = exp_neon(vmulq_f64(vdupq_n_f64(-0.5), d2));
+                    (e, vmulq_f64(d2, e))
+                }
+                RhoFamily::Matern12 => {
+                    let aa = vsqrtq_f64(d2);
+                    let e = exp_neon(vnegq_f64(aa));
+                    (e, vmulq_f64(aa, e))
+                }
+                RhoFamily::Matern32 => {
+                    let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(3.0), d2));
+                    let e = exp_neon(vnegq_f64(aa));
+                    (vmulq_f64(vaddq_f64(vone, aa), e), vmulq_f64(vmulq_f64(aa, aa), e))
+                }
+                RhoFamily::Matern52 => {
+                    let aa = vsqrtq_f64(vmulq_f64(vdupq_n_f64(5.0), d2));
+                    let e = exp_neon(vnegq_f64(aa));
+                    let lin = vaddq_f64(vone, aa);
+                    let a2t = vmulq_f64(vmulq_f64(aa, aa), vdupq_n_f64(1.0 / 3.0));
+                    let rho = vmulq_f64(vaddq_f64(lin, a2t), e);
+                    (rho, vmulq_f64(vmulq_f64(a2t, lin), e))
+                }
+            }
+        }
+    }
+
+    /// f32-storage dot with f64 accumulators, zip-truncation semantics.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len().min(b.len());
+        // SAFETY: neon per the fn contract; every load reads at
+        // p + lane < n ≤ min(a.len(), b.len()).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc0 = vdupq_n_f64(0.0);
+            let mut acc1 = vdupq_n_f64(0.0);
+            let mut p = 0;
+            while p + 4 <= n {
+                let (al, ah) = cvt4_neon(ap.add(p));
+                let (bl, bh) = cvt4_neon(bp.add(p));
+                acc0 = vfmaq_f64(acc0, al, bl);
+                acc1 = vfmaq_f64(acc1, ah, bh);
+                p += 4;
+            }
+            let mut s = vaddvq_f64(vaddq_f64(acc0, acc1));
+            while p < n {
+                s += f64::from(*ap.add(p)) * f64::from(*bp.add(p));
+                p += 1;
+            }
+            s
+        }
+    }
+
+    /// MR×NR register tile (widened f32 B panel, f64 accumulators).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn kernel_mrxnr_neon(
+        k: usize,
+        n: usize,
+        j: usize,
+        a: &[f32],
+        bpack: &[f32],
+        c: &mut [f64],
+    ) {
+        debug_assert!(a.len() >= MR * k && bpack.len() >= k * NR);
+        debug_assert!(j + NR <= n && c.len() >= (MR - 1) * n + j + NR);
+        // SAFETY: neon per the fn contract. Loads read a at mi·k + p <
+        // MR·k and bpack at p·NR + lane < k·NR; loads/stores on c touch
+        // rows mi·n + j .. +NR with j + NR ≤ n and mi < MR — all inside
+        // the slices the safe driver carved out (debug-asserted).
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = bpack.as_ptr();
+            let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+            for p in 0..k {
+                let (b0, b1) = cvt4_neon(bp.add(p * NR));
+                let (b2, b3) = cvt4_neon(bp.add(p * NR + 4));
+                let bv = [b0, b1, b2, b3];
+                for (mi, arow) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f64(f64::from(*ap.add(mi * k + p)));
+                    for (t, slot) in arow.iter_mut().enumerate() {
+                        *slot = vfmaq_f64(*slot, av, bv[t]);
+                    }
+                }
+            }
+            let cp = c.as_mut_ptr();
+            for (mi, arow) in acc.iter().enumerate() {
+                let cr = cp.add(mi * n + j);
+                for (t, slot) in arow.iter().enumerate() {
+                    let cv = vaddq_f64(vld1q_f64(cr.add(2 * t)), *slot);
+                    vst1q_f64(cr.add(2 * t), cv);
+                }
+            }
+        }
+    }
+
+    /// 1×NR edge tile for the row remainder of [`gemm_nn_neon`].
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn kernel_1xnr_neon(j: usize, arow: &[f32], bpack: &[f32], crow: &mut [f64]) {
+        debug_assert!(bpack.len() >= arow.len() * NR && j + NR <= crow.len());
+        // SAFETY: neon per the fn contract; bpack loads read at
+        // p·NR + lane < k·NR and the stores hit crow[j..j+NR] (both
+        // debug-asserted, guaranteed by the driver).
+        unsafe {
+            let bp = bpack.as_ptr();
+            let mut acc = [vdupq_n_f64(0.0); 4];
+            for (p, &av) in arow.iter().enumerate() {
+                let avv = vdupq_n_f64(f64::from(av));
+                let (b0, b1) = cvt4_neon(bp.add(p * NR));
+                let (b2, b3) = cvt4_neon(bp.add(p * NR + 4));
+                let bv = [b0, b1, b2, b3];
+                for (t, slot) in acc.iter_mut().enumerate() {
+                    *slot = vfmaq_f64(*slot, avv, bv[t]);
+                }
+            }
+            let cp = crow.as_mut_ptr().add(j);
+            for (t, slot) in acc.iter().enumerate() {
+                let cv = vaddq_f64(vld1q_f64(cp.add(2 * t)), *slot);
+                vst1q_f64(cp.add(2 * t), cv);
+            }
+        }
+    }
+
+    /// NEON driver for the packed-panel mixed `C += A·B`.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_nn_neon(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        debug_assert!(a.len() == m * k && b.len() == k * n && c.len() == m * n);
+        debug_assert!(n < NR || pack.len() >= k * NR);
+        // SAFETY: neon per the fn contract, forwarded to the tile kernels;
+        // the panel slicing matches the (bounds-checked) f64 driver.
+        unsafe {
+            let mut j = 0;
+            while j + NR <= n {
+                for p in 0..k {
+                    pack[p * NR..(p + 1) * NR].copy_from_slice(&b[p * n + j..p * n + j + NR]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let ar = &a[i * k..(i + MR) * k];
+                    let cr = &mut c[i * n..(i + MR) * n];
+                    kernel_mrxnr_neon(k, n, j, ar, pack, cr);
+                    i += MR;
+                }
+                while i < m {
+                    let ar = &a[i * k..(i + 1) * k];
+                    let cr = &mut c[i * n..(i + 1) * n];
+                    kernel_1xnr_neon(j, ar, pack, cr);
+                    i += 1;
+                }
+                j += NR;
+            }
+            if j < n {
+                super::gemm_nn_coltail(m, k, n, j, a, b, c);
+            }
+        }
+    }
+
+    /// Mixed `C += A·Bᵀ`, NEON (per-entry f64 dots, one f32 rounding).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_nt_neon(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert!(a.len() == m * k && b.len() == n * k && c.len() == m * n);
+        // SAFETY: neon per the fn contract, forwarded to the dot kernel;
+        // row slicing is bounds-checked safe code.
+        unsafe {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let s = dot_neon(arow, &b[j * k..(j + 1) * k]);
+                    let idx = i * n + j;
+                    c[idx] = (f64::from(c[idx]) + s) as f32;
+                }
+            }
+        }
+    }
+
+    /// Single rank-1 row update of [`gemm_tn_neon`].
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn rank1_row_neon(av: f64, brow: &[f32], crow: &mut [f64]) {
+        let n = crow.len();
+        debug_assert!(brow.len() == n);
+        // SAFETY: neon per the fn contract; loads/stores run at
+        // j + lane < n = crow.len() = brow.len() (debug-asserted).
+        unsafe {
+            let vv = vdupq_n_f64(av);
+            let bp = brow.as_ptr();
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let (bl, bh) = cvt4_neon(bp.add(j));
+                vst1q_f64(cp.add(j), vfmaq_f64(vld1q_f64(cp.add(j)), vv, bl));
+                vst1q_f64(cp.add(j + 2), vfmaq_f64(vld1q_f64(cp.add(j + 2)), vv, bh));
+                j += 4;
+            }
+            while j < n {
+                crow[j] += av * f64::from(brow[j]);
+                j += 1;
+            }
+        }
+    }
+
+    /// Mixed `C += Aᵀ·B`, NEON (rank-1 updates, zero-skip preserved).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn gemm_tn_neon(p_rows: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+        debug_assert!(a.len() == p_rows * m && b.len() == p_rows * n && c.len() == m * n);
+        // SAFETY: neon per the fn contract, forwarded to the row kernel;
+        // row slicing is bounds-checked safe code.
+        unsafe {
+            for p in 0..p_rows {
+                let brow = &b[p * n..(p + 1) * n];
+                for i in 0..m {
+                    let av = a[p * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    rank1_row_neon(f64::from(av), brow, &mut c[i * n..(i + 1) * n]);
+                }
+            }
+        }
+    }
+
+    /// NEON mixed `rho_row`: widen 4 f32 to two f64 lane pairs, run the
+    /// f64 family math + vector `exp`, narrow once on store.
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    unsafe fn rho_row_neon(
+        fam: RhoFamily,
+        outputscale: f64,
+        sqi: f32,
+        sq: &[f32],
+        row: &mut [f32],
+    ) {
+        let n = row.len();
+        debug_assert_eq!(sq.len(), n);
+        let n4 = n - n % 4;
+        // SAFETY: neon per the fn contract; loads/stores run at
+        // j + lane < n4 ≤ min(sq.len(), row.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let rp = row.as_mut_ptr();
+            let vsqi = vdupq_n_f64(f64::from(sqi));
+            let vos = vdupq_n_f64(outputscale);
+            let vm2 = vdupq_n_f64(-2.0);
+            let vzero = vdupq_n_f64(0.0);
+            let mut j = 0;
+            while j < n4 {
+                let (v0, v1) = cvt4_neon(rp.add(j));
+                let (s0, s1) = cvt4_neon(sp.add(j));
+                let d2l = vmaxq_f64(vfmaq_f64(vaddq_f64(vsqi, s0), vm2, v0), vzero);
+                let d2h = vmaxq_f64(vfmaq_f64(vaddq_f64(vsqi, s1), vm2, v1), vzero);
+                let (rl, _) = rho_drho_neon(fam, d2l);
+                let (rh, _) = rho_drho_neon(fam, d2h);
+                let lo = vcvt_f32_f64(vmulq_f64(vos, rl));
+                let hi = vcvt_f32_f64(vmulq_f64(vos, rh));
+                vst1q_f32(rp.add(j), vcombine_f32(lo, hi));
+                j += 4;
+            }
+            for jj in n4..n {
+                let d2 = (sqi + sq[jj] - 2.0 * row[jj]).max(0.0);
+                row[jj] = (outputscale * fam.rho(f64::from(d2).sqrt())) as f32;
+            }
+        }
+    }
+
+    /// NEON mixed gradient-panel contraction (widened f64 lanes, f64
+    /// accumulators against the f64 residual column).
+    // SAFETY: caller must ensure the neon target feature is available on
+    // the executing CPU.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn grad_row_neon(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        let n = pan.len();
+        debug_assert!(sq.len() == n && rv.len() == n);
+        let n4 = n - n % 4;
+        let scale = li * outputscale;
+        // SAFETY: neon per the fn contract; all loads run at
+        // j + lane < n4 ≤ min(sq.len(), pan.len(), rv.len()).
+        unsafe {
+            let sp = sq.as_ptr();
+            let pp = pan.as_ptr();
+            let rvp = rv.as_ptr();
+            let vscale = vdupq_n_f64(scale);
+            let vsqi = vdupq_n_f64(f64::from(sqi));
+            let vm2 = vdupq_n_f64(-2.0);
+            let vzero = vdupq_n_f64(0.0);
+            let mut aell0 = vdupq_n_f64(0.0);
+            let mut aell1 = vdupq_n_f64(0.0);
+            let mut as20 = vdupq_n_f64(0.0);
+            let mut as21 = vdupq_n_f64(0.0);
+            let mut j = 0;
+            while j < n4 {
+                let (x0, x1) = cvt4_neon(pp.add(j));
+                let (s0, s1) = cvt4_neon(sp.add(j));
+                let d2l = vmaxq_f64(vfmaq_f64(vaddq_f64(vsqi, s0), vm2, x0), vzero);
+                let d2h = vmaxq_f64(vfmaq_f64(vaddq_f64(vsqi, s1), vm2, x1), vzero);
+                let (rl, dl) = rho_drho_neon(fam, d2l);
+                let (rh, dh) = rho_drho_neon(fam, d2h);
+                let lr0 = vmulq_f64(vscale, vld1q_f64(rvp.add(j)));
+                let lr1 = vmulq_f64(vscale, vld1q_f64(rvp.add(j + 2)));
+                aell0 = vfmaq_f64(aell0, lr0, dl);
+                aell1 = vfmaq_f64(aell1, lr1, dh);
+                as20 = vfmaq_f64(as20, lr0, rl);
+                as21 = vfmaq_f64(as21, lr1, rh);
+                j += 4;
+            }
+            let mut d_ell = vaddvq_f64(vaddq_f64(aell0, aell1));
+            let mut d_s2 = vaddvq_f64(vaddq_f64(as20, as21));
+            for jj in n4..n {
+                let rr = f64::from((sqi + sq[jj] - 2.0 * pan[jj]).max(0.0)).sqrt();
+                let lr = scale * rv[jj];
+                d_ell += lr * fam.drho_dlog_ell(rr);
+                d_s2 += lr * fam.rho(rr);
+            }
+            (d_ell, d_s2)
+        }
+    }
+
+    // Safe table entries — reachable only through NEON_MIXED_TABLE, which
+    // `table_for` exposes only on aarch64 (NEON is baseline there).
+
+    fn gemm_nn_neon_entry(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f64],
+        pack: &mut [f32],
+    ) {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { gemm_nn_neon(m, k, n, a, b, c, pack) }
+    }
+
+    fn gemm_nt_neon_entry(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { gemm_nt_neon(m, k, n, a, b, c) }
+    }
+
+    fn gemm_tn_neon_entry(p_rows: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f64]) {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { gemm_tn_neon(p_rows, m, n, a, b, c) }
+    }
+
+    fn dot_neon_entry(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { dot_neon(a, b) }
+    }
+
+    fn rho_row_neon_entry(fam: RhoFamily, outputscale: f64, sqi: f32, sq: &[f32], row: &mut [f32]) {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { rho_row_neon(fam, outputscale, sqi, sq, row) }
+    }
+
+    fn grad_row_neon_entry(
+        fam: RhoFamily,
+        outputscale: f64,
+        li: f64,
+        sqi: f32,
+        sq: &[f32],
+        pan: &[f32],
+        rv: &[f64],
+    ) -> (f64, f64) {
+        // SAFETY: neon verified by `table_for` (baseline on aarch64).
+        unsafe { grad_row_neon(fam, outputscale, li, sqi, sq, pan, rv) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::simd::{Backend, RhoFamily};
+    use super::*;
+
+    /// Deterministic LCG in [-1, 1) — keeps every backend comparison
+    /// reproducible without touching the global RNG or process state.
+    fn lcg(state: &mut u64) -> f64 {
+        *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((*state >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0
+    }
+
+    fn fill(v: &mut [f32], state: &mut u64) {
+        for x in v.iter_mut() {
+            *x = lcg(state) as f32;
+        }
+    }
+
+    /// Hybrid absolute/relative tolerance, matching the simd.rs tests.
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    /// Every mixed table the host can actually run (scalar fallback is
+    /// exercised separately through the `*_scalar` fns). Deliberately
+    /// avoids `set_backend`: the global override is owned by one simd.rs
+    /// test, and lib tests run concurrently.
+    fn mixed_tables() -> Vec<&'static MixedKernelTable> {
+        Backend::all().iter().filter_map(|&b| table_for(b)).collect()
+    }
+
+    /// Shapes covering 1×1, exact MR×NR multiples, row/column remainders,
+    /// and panel tails on every lane width (4/8/16).
+    const SHAPES: &[(usize, usize, usize)] =
+        &[(1, 1, 1), (4, 4, 4), (5, 3, 9), (8, 8, 8), (9, 17, 6), (12, 8, 12), (3, 2, 13), (16, 24, 32)];
+
+    const FAMILIES: [RhoFamily; 4] =
+        [RhoFamily::Rbf, RhoFamily::Matern12, RhoFamily::Matern32, RhoFamily::Matern52];
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += f64::from(a[i * k + p]) * f64::from(b[p * n + j]);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn parse_precision_specs() {
+        assert_eq!(parse_precision(""), None);
+        assert_eq!(parse_precision("auto"), None);
+        assert_eq!(parse_precision("f64"), Some(Precision::F64));
+        assert_eq!(parse_precision("F64"), Some(Precision::F64));
+        assert_eq!(parse_precision("mixed"), Some(Precision::Mixed(RefineConfig::default())));
+        assert_eq!(parse_precision("bogus"), None);
+    }
+
+    #[test]
+    fn precision_default_is_f64() {
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(!Precision::F64.is_mixed());
+        assert!(Precision::Mixed(RefineConfig::default()).is_mixed());
+        let cfg = RefineConfig::default();
+        assert!(cfg.max_sweeps >= 1 && cfg.inner_tol_floor > 0.0 && cfg.stall_ratio < 1.0);
+    }
+
+    #[test]
+    fn convert_roundtrip_is_exact_for_f32_values() {
+        let mut state = 0x5EED_u64;
+        let src_f32: Vec<f32> = (0..97).map(|_| lcg(&mut state) as f32).collect();
+        let mut wide = vec![0.0f64; src_f32.len()];
+        upconvert(&src_f32, &mut wide);
+        let mut narrow = vec![0.0f32; src_f32.len()];
+        downconvert(&wide, &mut narrow);
+        // f32 → f64 → f32 is lossless; only the initial f64 → f32 rounds.
+        assert_eq!(narrow, src_f32);
+    }
+
+    #[test]
+    fn scalar_mixed_gemms_match_naive_oracle() {
+        let mut state = 0xA11CE_u64;
+        for &(m, k, n) in SHAPES {
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            fill(&mut a, &mut state);
+            fill(&mut b, &mut state);
+            // nn: f64 accumulation over exact f32 products ⇒ the only
+            // divergence from the oracle is summation order (~1e-12).
+            let mut c = vec![0.0; m * n];
+            gemm_nn_scalar(m, k, n, &a, &b, &mut c);
+            let oracle = naive_nn(m, k, n, &a, &b);
+            for (got, want) in c.iter().zip(oracle.iter()) {
+                assert!(approx(*got, *want, 1e-12), "nn {m}x{k}x{n}: {got} vs {want}");
+            }
+            // tn: A is k×m (transposed), same accumulation argument.
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..k {
+                for j in 0..m {
+                    at[i * m + j] = a[j * k + i];
+                }
+            }
+            let mut ct = vec![0.0; m * n];
+            gemm_tn_scalar(k, m, n, &at, &b, &mut ct);
+            for (got, want) in ct.iter().zip(oracle.iter()) {
+                assert!(approx(*got, *want, 1e-12), "tn {m}x{k}x{n}: {got} vs {want}");
+            }
+            // nt: output rounds to f32 once, so compare at f32 precision.
+            let mut bt = vec![0.0f32; n * k];
+            for i in 0..n {
+                for j in 0..k {
+                    bt[i * k + j] = b[j * n + i];
+                }
+            }
+            let mut cnt = vec![0.0f32; m * n];
+            gemm_nt_scalar(m, k, n, &a, &bt, &mut cnt);
+            for (got, want) in cnt.iter().zip(oracle.iter()) {
+                assert!(approx(f64::from(*got), *want, 1e-6), "nt {m}x{k}x{n}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_mixed_dot_matches_f64() {
+        let mut state = 0xD07_u64;
+        for n in [0usize, 1, 3, 4, 7, 8, 15, 64, 129] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            fill(&mut a, &mut state);
+            fill(&mut b, &mut state);
+            let want: f64 =
+                a.iter().zip(b.iter()).map(|(&x, &y)| f64::from(x) * f64::from(y)).sum();
+            assert!(approx(dot_scalar(&a, &b), want, 1e-12), "dot n={n}");
+            // Zip semantics: trailing elements of the longer slice ignored.
+            let longer = vec![1.0f32; n + 3];
+            assert!(approx(dot_scalar(&a, &longer[..n.min(longer.len())]), dot_scalar(&a, &longer), 1e-15));
+        }
+    }
+
+    #[test]
+    fn dispatched_gemms_match_scalar_mixed() {
+        // GEMM/dot kernels do pure f64 accumulation over exact widened
+        // products, so backends differ from the scalar-mixed reference
+        // only in summation order (1e-12 hybrid); gemm_nt additionally
+        // rounds its output to f32 once per entry on each side (1e-6).
+        let mut state = 0xBAC_u64;
+        for table in mixed_tables() {
+            for &(m, k, n) in SHAPES {
+                let mut a = vec![0.0f32; m * k];
+                let mut b = vec![0.0f32; k * n];
+                fill(&mut a, &mut state);
+                fill(&mut b, &mut state);
+
+                let mut want = vec![0.0; m * n];
+                gemm_nn_scalar(m, k, n, &a, &b, &mut want);
+                let mut got = vec![0.0; m * n];
+                let mut pack = vec![0.0f32; k * NR];
+                (table.gemm_nn)(m, k, n, &a, &b, &mut got, &mut pack);
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!(approx(*g, *w, 1e-12), "{:?} nn {m}x{k}x{n}", table.backend);
+                }
+
+                let mut at = vec![0.0f32; k * m];
+                for i in 0..k {
+                    for j in 0..m {
+                        at[i * m + j] = a[j * k + i];
+                    }
+                }
+                let mut got_tn = vec![0.0; m * n];
+                (table.gemm_tn)(k, m, n, &at, &b, &mut got_tn);
+                for (g, w) in got_tn.iter().zip(want.iter()) {
+                    assert!(approx(*g, *w, 1e-12), "{:?} tn {m}x{k}x{n}", table.backend);
+                }
+
+                let mut bt = vec![0.0f32; n * k];
+                for i in 0..n {
+                    for j in 0..k {
+                        bt[i * k + j] = b[j * n + i];
+                    }
+                }
+                let mut want_nt = vec![0.0f32; m * n];
+                gemm_nt_scalar(m, k, n, &a, &bt, &mut want_nt);
+                let mut got_nt = vec![0.0f32; m * n];
+                (table.gemm_nt)(m, k, n, &a, &bt, &mut got_nt);
+                for (g, w) in got_nt.iter().zip(want_nt.iter()) {
+                    assert!(
+                        approx(f64::from(*g), f64::from(*w), 1e-6),
+                        "{:?} nt {m}x{k}x{n}",
+                        table.backend
+                    );
+                }
+
+                let want_dot = dot_scalar(&a, &b[..a.len().min(b.len())]);
+                let got_dot = (table.dot)(&a, &b[..a.len().min(b.len())]);
+                assert!(approx(got_dot, want_dot, 1e-12), "{:?} dot", table.backend);
+            }
+        }
+    }
+
+    /// Build an n-point ρ-row problem in f32: squared norms, one panel of
+    /// inner products, and a residual column.
+    fn rho_inputs(n: usize, state: &mut u64) -> (f32, Vec<f32>, Vec<f32>, Vec<f64>) {
+        let d = 3;
+        let xi: Vec<f64> = (0..d).map(|_| lcg(state)).collect();
+        let sqi = xi.iter().map(|v| v * v).sum::<f64>() as f32;
+        let mut sq = vec![0.0f32; n];
+        let mut row = vec![0.0f32; n];
+        let mut rv = vec![0.0f64; n];
+        for j in 0..n {
+            let xj: Vec<f64> = (0..d).map(|_| lcg(state)).collect();
+            sq[j] = xj.iter().map(|v| v * v).sum::<f64>() as f32;
+            row[j] = xi.iter().zip(xj.iter()).map(|(a, b)| a * b).sum::<f64>() as f32;
+            rv[j] = lcg(state);
+        }
+        (sqi, sq, row, rv)
+    }
+
+    #[test]
+    fn dispatched_rho_row_matches_scalar_mixed_and_f64() {
+        // Backend ρ rows use a vector exp (f32 degree-7 on AVX2, widened
+        // f64 elsewhere) against the scalar-mixed glibc reference: 2e-5
+        // hybrid covers the f32-lane path. Against the pure-f64 oracle
+        // the f32 distance inputs dominate: 5e-4 hybrid.
+        let mut state = 0x0_5EED_u64;
+        for table in mixed_tables() {
+            for fam in FAMILIES {
+                for n in [1usize, 4, 7, 8, 15, 33, 64] {
+                    let (sqi, sq, row0, _) = rho_inputs(n, &mut state);
+                    let outputscale = 1.7;
+
+                    let mut want = row0.clone();
+                    rho_row_scalar(fam, outputscale, sqi, &sq, &mut want);
+                    let mut got = row0.clone();
+                    (table.rho_row)(fam, outputscale, sqi, &sq, &mut got);
+                    for (g, w) in got.iter().zip(want.iter()) {
+                        assert!(
+                            approx(f64::from(*g), f64::from(*w), 2e-5),
+                            "{:?} {fam:?} rho n={n}: {g} vs {w}",
+                            table.backend
+                        );
+                    }
+                    for (j, g) in got.iter().enumerate() {
+                        let d2 = (f64::from(sqi) + f64::from(sq[j]) - 2.0 * f64::from(row0[j]))
+                            .max(0.0);
+                        let oracle = outputscale * fam.rho(d2.sqrt());
+                        assert!(
+                            approx(f64::from(*g), oracle, 5e-4),
+                            "{:?} {fam:?} rho-vs-f64 n={n}",
+                            table.backend
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_grad_row_matches_scalar_mixed_and_f64() {
+        // grad_row reduces n f32-derived terms into two f64 sums; the
+        // f32 distance error accumulates across terms, hence 5e-4 hybrid
+        // for both comparisons.
+        let mut state = 0x6_4AD_u64;
+        for table in mixed_tables() {
+            for fam in FAMILIES {
+                for n in [1usize, 4, 7, 8, 15, 33, 64] {
+                    let (sqi, sq, pan, rv) = rho_inputs(n, &mut state);
+                    let (outputscale, li) = (1.3, 0.8);
+
+                    let (we, ws) = grad_row_scalar(fam, outputscale, li, sqi, &sq, &pan, &rv);
+                    let (ge, gs) = (table.grad_row)(fam, outputscale, li, sqi, &sq, &pan, &rv);
+                    assert!(approx(ge, we, 5e-4), "{:?} {fam:?} d_ell n={n}", table.backend);
+                    assert!(approx(gs, ws, 5e-4), "{:?} {fam:?} d_s2 n={n}", table.backend);
+
+                    let (mut oe, mut os) = (0.0, 0.0);
+                    for j in 0..n {
+                        let d2 = (f64::from(sqi) + f64::from(sq[j]) - 2.0 * f64::from(pan[j]))
+                            .max(0.0);
+                        let rr = d2.sqrt();
+                        let lr = li * outputscale * rv[j];
+                        oe += lr * fam.drho_dlog_ell(rr);
+                        os += lr * fam.rho(rr);
+                    }
+                    assert!(approx(ge, oe, 5e-4), "{:?} {fam:?} d_ell-vs-f64", table.backend);
+                    assert!(approx(gs, os, 5e-4), "{:?} {fam:?} d_s2-vs-f64", table.backend);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_wrappers_fall_back_to_scalar() {
+        // The safe wrappers must produce identical results whether or not
+        // a SIMD table resolved (scalar path exercised on every host by
+        // comparing against the oracle direct calls).
+        let mut state = 0xFA11_u64;
+        let (m, k, n) = (5, 7, 11);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        fill(&mut a, &mut state);
+        fill(&mut b, &mut state);
+        let mut c = vec![0.0; m * n];
+        let mut pack = Vec::new();
+        gemm_nn(m, k, n, &a, &b, &mut c, &mut pack);
+        let mut want = vec![0.0; m * n];
+        gemm_nn_scalar(m, k, n, &a, &b, &mut want);
+        for (g, w) in c.iter().zip(want.iter()) {
+            assert!(approx(*g, *w, 1e-12));
+        }
+        assert!(approx(dot(&a, &b[..a.len()]), dot_scalar(&a, &b[..a.len()]), 1e-12));
+    }
+}
+
+
+
+
+

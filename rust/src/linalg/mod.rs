@@ -12,16 +12,21 @@
 //! [`workspace`] buffer pool behind the solve stack's zero-allocation
 //! steady state (`rust/DESIGN.md` §4), and the runtime-dispatched SIMD
 //! micro-kernel engine ([`simd`], `rust/DESIGN.md` §7) that the [`gemm`]
-//! entry points route through on CPUs with AVX2/AVX-512/NEON.
+//! entry points route through on CPUs with AVX2/AVX-512/NEON, plus its
+//! mixed-precision tier ([`mixed`], `rust/DESIGN.md` §9): f32-storage /
+//! f64-accumulate kernel variants behind the [`mixed::Precision`] solve
+//! policy with f64 iterative refinement upstairs.
 
 mod matrix;
 pub mod batched;
 pub mod chol;
 pub mod eigen;
 pub mod gemm;
+pub mod mixed;
 pub mod simd;
 pub mod workspace;
 
 pub use chol::Cholesky;
 pub use matrix::Matrix;
+pub use mixed::{Precision, RefineConfig};
 pub use workspace::{SolveWorkspace, WorkspacePool, WsStats};

@@ -442,7 +442,7 @@ const EXP_POLY: [f64; 12] = [
 ];
 
 #[cfg(target_arch = "x86_64")]
-mod x86 {
+pub(crate) mod x86 {
     //! AVX2+FMA and AVX-512F kernel variants. Every `unsafe fn` here has a
     //! single safety obligation — the features named in its
     //! `#[target_feature]` are available on the executing CPU — discharged
@@ -476,7 +476,7 @@ mod x86 {
     // available on the executing CPU.
     #[target_feature(enable = "avx2,fma")]
     #[inline]
-    unsafe fn exp_avx2(x: __m256d) -> __m256d {
+    pub(crate) unsafe fn exp_avx2(x: __m256d) -> __m256d {
         // SAFETY: register-only intrinsics (no memory access); avx2+fma
         // hold by this fn's own contract.
         unsafe {
@@ -506,7 +506,7 @@ mod x86 {
     // available on the executing CPU.
     #[target_feature(enable = "avx2,fma")]
     #[inline]
-    unsafe fn neg_avx2(v: __m256d) -> __m256d {
+    pub(crate) unsafe fn neg_avx2(v: __m256d) -> __m256d {
         // SAFETY: register-only intrinsic; features per the fn contract.
         unsafe { _mm256_xor_pd(v, _mm256_set1_pd(-0.0)) }
     }
@@ -516,7 +516,7 @@ mod x86 {
     // available on the executing CPU.
     #[target_feature(enable = "avx2,fma")]
     #[inline]
-    unsafe fn hsum_avx2(v: __m256d) -> f64 {
+    pub(crate) unsafe fn hsum_avx2(v: __m256d) -> f64 {
         // SAFETY: register-only intrinsics; features per the fn contract.
         unsafe {
             let lo = _mm256_castpd256_pd128(v);
@@ -1128,7 +1128,7 @@ mod x86 {
     // on the executing CPU.
     #[target_feature(enable = "avx512f")]
     #[inline]
-    unsafe fn exp_avx512(x: __m512d) -> __m512d {
+    pub(crate) unsafe fn exp_avx512(x: __m512d) -> __m512d {
         // SAFETY: register-only intrinsics; avx512f holds by this fn's own
         // contract.
         unsafe {
@@ -1153,7 +1153,7 @@ mod x86 {
     // on the executing CPU.
     #[target_feature(enable = "avx512f")]
     #[inline]
-    unsafe fn neg_avx512(v: __m512d) -> __m512d {
+    pub(crate) unsafe fn neg_avx512(v: __m512d) -> __m512d {
         // SAFETY: register-only intrinsic; avx512f per the fn contract.
         // (`xor_pd` would need AVX512DQ; an exact 0−v negation does not.)
         unsafe { _mm512_sub_pd(_mm512_setzero_pd(), v) }
@@ -1718,7 +1718,7 @@ mod x86 {
 }
 
 #[cfg(target_arch = "aarch64")]
-mod neon {
+pub(crate) mod neon {
     //! NEON/AdvSIMD (2 × f64 lane) kernel variants — the `aarch64`
     //! baseline, so [`super::Backend::available`] is unconditionally true
     //! there; the `#[target_feature]`/`unsafe` structure still mirrors the
@@ -1745,7 +1745,7 @@ mod neon {
     // the executing CPU (baseline on aarch64).
     #[target_feature(enable = "neon")]
     #[inline]
-    unsafe fn exp_neon(x: float64x2_t) -> float64x2_t {
+    pub(crate) unsafe fn exp_neon(x: float64x2_t) -> float64x2_t {
         // SAFETY: register-only intrinsics; neon holds by this fn's own
         // contract.
         unsafe {

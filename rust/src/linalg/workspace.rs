@@ -93,6 +93,12 @@ pub struct WsCheckpoint {
 pub struct SolveWorkspace {
     /// Free `f64` buffers (matrices check in/out through here too).
     free: Vec<Vec<f64>>,
+    /// Free `f32` buffers — the mixed-precision slabs (downconverted kernel
+    /// inputs, f32 Newton–Schulz stacks; see `linalg::mixed`). A separate
+    /// pool rather than reinterpreted `f64` storage so the type system, not
+    /// a transmute, guarantees no pool ever hands out the wrong element
+    /// width.
+    free_f32: Vec<Vec<f32>>,
     /// Free `usize` buffers (iteration counters, active-column index lists).
     free_usize: Vec<Vec<usize>>,
     /// Lifetime checkouts.
@@ -155,6 +161,32 @@ impl SolveWorkspace {
         self.give_vec(m.into_vec());
     }
 
+    /// Check out a zero-filled `f32` buffer of length `n` (best-fit, like
+    /// [`Self::take_vec`]). The mixed-precision tier draws its downconverted
+    /// slabs and refinement scratch from here, so a warmed mixed solve is as
+    /// allocation-free as an f64 one.
+    pub fn take_f32(&mut self, n: usize) -> Vec<f32> {
+        self.checkouts += 1;
+        self.outstanding += 1;
+        let mut v = match best_fit(&self.free_f32, n) {
+            Some(i) => self.free_f32.swap_remove(i),
+            None => {
+                let v = Vec::with_capacity(n);
+                self.grew(v.capacity() as u64 * 4);
+                v
+            }
+        };
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return an `f32` buffer to the pool.
+    pub fn give_f32(&mut self, v: Vec<f32>) {
+        self.outstanding -= 1;
+        self.free_f32.push(v);
+    }
+
     /// Check out a zero-filled `usize` buffer of length `n` (best-fit, like
     /// [`Self::take_vec`]).
     pub fn take_usize(&mut self, n: usize) -> Vec<usize> {
@@ -215,7 +247,7 @@ impl SolveWorkspace {
 
     /// Free buffers currently pooled (telemetry / tests).
     pub fn pooled_buffers(&self) -> usize {
-        self.free.len() + self.free_usize.len()
+        self.free.len() + self.free_f32.len() + self.free_usize.len()
     }
 
     /// Drop every pooled buffer (outstanding checkouts are unaffected).
@@ -223,9 +255,11 @@ impl SolveWorkspace {
     /// changes for good (operator deregistration).
     pub fn clear(&mut self) {
         let freed: u64 = self.free.iter().map(|v| v.capacity() as u64 * 8).sum::<u64>()
+            + self.free_f32.iter().map(|v| v.capacity() as u64 * 4).sum::<u64>()
             + self.free_usize.iter().map(|v| v.capacity() as u64 * 8).sum::<u64>();
         self.bytes_owned = self.bytes_owned.saturating_sub(freed);
         self.free.clear();
+        self.free_f32.clear();
         self.free_usize.clear();
     }
 
@@ -381,6 +415,27 @@ mod tests {
         assert_eq!(ws.leaked_since(&cp), 1);
         ws.give_vec(b);
         assert_eq!(ws.leaked_since(&cp), 0);
+    }
+
+    #[test]
+    fn f32_pool_is_independent_and_stays_warm() {
+        let mut ws = SolveWorkspace::new();
+        // an f64 buffer in the pool must never satisfy an f32 take (and
+        // vice versa): separate pools, separate element widths
+        let v64 = ws.take_vec(64);
+        ws.give_vec(v64);
+        let mut s = ws.take_f32(64);
+        assert_eq!(ws.grows(), 2, "f32 take must not be served from the f64 pool");
+        assert!(s.iter().all(|&x| x == 0.0));
+        s.iter_mut().for_each(|x| *x = 7.0);
+        ws.give_f32(s);
+        let s = ws.take_f32(48);
+        assert_eq!(ws.grows(), 2, "warmed f32 pool must serve a smaller request");
+        assert!(s.iter().all(|&x| x == 0.0), "recycled f32 buffer must be zeroed");
+        ws.give_f32(s);
+        assert!(ws.bytes_high_water() >= 64 * 8 + 64 * 4);
+        ws.clear();
+        assert_eq!(ws.pooled_buffers(), 0, "clear must drop the f32 pool too");
     }
 
     #[test]

@@ -47,6 +47,14 @@ pub struct MetricsSnapshot {
     pub dense_fallbacks: u64,
     pub dense_factor_builds: u64,
     pub dense_crossover_n: u64,
+    /// Krylov block solves executed in pure f64 (fallbacks included).
+    pub solves_f64: u64,
+    /// Krylov block solves served by the mixed-precision engine.
+    pub solves_mixed: u64,
+    /// Iterative-refinement sweeps spent by mixed solves.
+    pub refine_sweeps: u64,
+    /// Mixed solves that stagnated and re-ran in pure f64.
+    pub precision_fallbacks: u64,
     /// End-to-end request latency in µs.
     pub latency_us: HistSnapshot,
     /// Dispatched batch sizes.
@@ -227,7 +235,8 @@ impl MetricsSnapshot {
             "policy={} submitted={} completed={} failed={} p50={}us p99={}us mean_batch={:.1} \
              mean_iters={:.1} cache_hit={} cache_miss={} warmed={} warm_starts={} saved_mvms={} \
              saved_colwork={} wakeups={} timer_fires={} ws_checkouts={} ws_grows={} ws_peak_bytes={} \
-             dense_solves={} dense_fallbacks={} dense_builds={} dense_crossover_n={}",
+             dense_solves={} dense_fallbacks={} dense_builds={} dense_crossover_n={} \
+             solves_f64={} solves_mixed={} refine_sweeps={} precision_fallbacks={}",
             self.policy,
             self.submitted,
             self.completed,
@@ -251,6 +260,10 @@ impl MetricsSnapshot {
             self.dense_fallbacks,
             self.dense_factor_builds,
             self.dense_crossover_n,
+            self.solves_f64,
+            self.solves_mixed,
+            self.refine_sweeps,
+            self.precision_fallbacks,
         )
     }
 
@@ -279,6 +292,10 @@ impl MetricsSnapshot {
             ("dense_fallbacks", self.dense_fallbacks),
             ("dense_factor_builds", self.dense_factor_builds),
             ("dense_crossover_n", self.dense_crossover_n),
+            ("solves_f64", self.solves_f64),
+            ("solves_mixed", self.solves_mixed),
+            ("refine_sweeps", self.refine_sweeps),
+            ("precision_fallbacks", self.precision_fallbacks),
         ]
     }
 }
@@ -319,6 +336,10 @@ mod tests {
             dense_fallbacks: 0,
             dense_factor_builds: 0,
             dense_crossover_n: 0,
+            solves_f64: 3,
+            solves_mixed: 2,
+            refine_sweeps: 5,
+            precision_fallbacks: 1,
             latency_us: lat.snapshot(),
             batch_sizes: batch.snapshot(),
             iterations: iters.snapshot(),
@@ -368,6 +389,9 @@ mod tests {
         assert!(line.contains("cache_hit=1"));
         assert!(line.contains("mean_batch=4.0"));
         assert!(line.contains("dense_crossover_n=0"));
+        assert!(line.contains("solves_mixed=2"));
+        assert!(line.contains("refine_sweeps=5"));
+        assert!(line.contains("precision_fallbacks=1"));
     }
 
     #[test]

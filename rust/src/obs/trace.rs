@@ -76,6 +76,11 @@ pub enum EventKind {
     /// Response sent to the client. `a` = request id, `b` = end-to-end
     /// latency in µs.
     Respond = 13,
+    /// One mixed-precision refinement residual check ran
+    /// (`rust/DESIGN.md` §9). `a` = refinement sweeps completed when the
+    /// check ran (0 = right after the inner mixed solve), `b` = the worst
+    /// true f64 relative residual observed, as `f64::to_bits`.
+    RefineSweep = 14,
 }
 
 impl EventKind {
@@ -94,6 +99,7 @@ impl EventKind {
             11 => EventKind::WarmDone,
             12 => EventKind::WarmFail,
             13 => EventKind::Respond,
+            14 => EventKind::RefineSweep,
             _ => return None,
         })
     }
@@ -114,6 +120,7 @@ impl EventKind {
             EventKind::WarmDone => "warm_done",
             EventKind::WarmFail => "warm_fail",
             EventKind::Respond => "respond",
+            EventKind::RefineSweep => "refine_sweep",
         }
     }
 }

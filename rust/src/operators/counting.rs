@@ -99,6 +99,19 @@ impl<T: LinearOp> LinearOp for CountingOp<T> {
         self.inner.matmat_in(ws, x, out)
     }
 
+    fn supports_mixed(&self) -> bool {
+        self.inner.supports_mixed()
+    }
+
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        // Mixed MVMs are paid hot-path work just like f64 ones — count them
+        // in the same tallies so MVM-budget tests hold under either policy.
+        // ordering: Relaxed — tallies only; no data is published through them.
+        self.matmats.fetch_add(1, Ordering::Relaxed);
+        self.matmat_cols.fetch_add(x.cols() as u64, Ordering::Relaxed);
+        self.inner.matmat_mixed_in(ws, x, out)
+    }
+
     fn diagonal(&self) -> Vec<f64> {
         self.inner.diagonal()
     }

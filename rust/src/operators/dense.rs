@@ -1,18 +1,24 @@
 //! Dense-matrix operator (testing and small-N baselines).
 
 use super::LinearOp;
-use crate::linalg::{Matrix, SolveWorkspace};
+use crate::linalg::gemm::NR;
+use crate::linalg::{mixed, Matrix, SolveWorkspace};
+use std::sync::OnceLock;
 
 /// Wrap an explicit symmetric matrix as a [`LinearOp`].
 pub struct DenseOp {
     k: Matrix,
+    /// f32 copy of `k`, built once on first mixed MVM (the operator is
+    /// immutable after construction, so one downconversion amortizes over
+    /// every mixed solve against it).
+    k32: OnceLock<Vec<f32>>,
 }
 
 impl DenseOp {
     /// Wrap `k` (must be square; symmetry is the caller's contract).
     pub fn new(k: Matrix) -> DenseOp {
         assert_eq!(k.rows(), k.cols(), "DenseOp needs square");
-        DenseOp { k }
+        DenseOp { k, k32: OnceLock::new() }
     }
 
     /// Access the underlying matrix.
@@ -52,6 +58,30 @@ impl LinearOp for DenseOp {
 
     fn to_dense(&self) -> Matrix {
         self.k.clone()
+    }
+
+    fn supports_mixed(&self) -> bool {
+        true
+    }
+
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        let n = self.size();
+        assert_eq!(x.rows(), n, "matmat_mixed_in x rows mismatch");
+        assert_eq!(out.rows(), n, "matmat_mixed_in out rows mismatch");
+        assert_eq!(out.cols(), x.cols(), "matmat_mixed_in out cols mismatch");
+        let cols = x.cols();
+        let k32 = self.k32.get_or_init(|| {
+            let mut v = vec![0.0f32; n * n];
+            mixed::downconvert(self.k.as_slice(), &mut v);
+            v
+        });
+        let mut b32 = ws.take_f32(n * cols);
+        mixed::downconvert(x.as_slice(), &mut b32);
+        let mut pack = ws.take_f32(n * NR);
+        out.as_mut_slice().fill(0.0);
+        mixed::gemm_nn(n, n, cols, k32, &b32, out.as_mut_slice(), &mut pack);
+        ws.give_f32(pack);
+        ws.give_f32(b32);
     }
 }
 

@@ -22,9 +22,10 @@
 
 use super::LinearOp;
 use crate::linalg::simd::{self, RhoFamily};
-use crate::linalg::{gemm, Matrix, SolveWorkspace};
+use crate::linalg::{gemm, mixed, Matrix, SolveWorkspace};
 use crate::util::threadpool::{num_threads, parallel_fill_scoped, parallel_fill_threads, parallel_map_threads};
 use std::cell::RefCell;
+use std::sync::OnceLock;
 
 std::thread_local! {
     // Per-thread (Gram panel, GEMM pack) scratch for the panel pipeline:
@@ -32,6 +33,13 @@ std::thread_local! {
     // allocation-free — the kernel-operator half of the solve stack's
     // zero-allocation steady state.
     static PANEL_SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+
+    // Mixed-precision twin of `PANEL_SCRATCH`: f32 (Gram panel, GEMM pack)
+    // scratch for the f32-storage pipeline (`rust/DESIGN.md` §9). Kept
+    // separate so flipping a request's precision policy never evicts the
+    // other tier's warmed buffers.
+    static PANEL_SCRATCH_F32: RefCell<(Vec<f32>, Vec<f32>)> =
         const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
@@ -101,6 +109,10 @@ pub struct KernelOp {
     /// thread-count override for this operator's panel pipeline
     /// (`None` = global [`num_threads`]; `Some(1)` = fully serial)
     threads: Option<usize>,
+    /// f32 copies of (`xs`, `sq`), built once on first mixed MVM — the
+    /// operator is immutable after construction, so the downconversion
+    /// amortizes across every mixed solve on this operator version.
+    mixed: OnceLock<(Vec<f32>, Vec<f32>)>,
 }
 
 impl KernelOp {
@@ -126,7 +138,8 @@ impl KernelOp {
         let sq: Vec<f64> = (0..n)
             .map(|i| xs.row(i).iter().map(|v| v * v).sum())
             .collect();
-        KernelOp { xs, sq, kind, outputscale, noise, tile: 128, threads: None }
+        let mixed = OnceLock::new();
+        KernelOp { xs, sq, kind, outputscale, noise, tile: 128, threads: None, mixed }
     }
 
     /// Number of data points.
@@ -210,6 +223,151 @@ impl KernelOp {
                 }
             });
         });
+    }
+
+    /// The f32 copies of (`xs`, `sq`), downconverted once per operator
+    /// (and thus once per operator *version* — `replace_operator` builds a
+    /// fresh `KernelOp`).
+    fn mixed_data(&self) -> (&[f32], &[f32]) {
+        let (xs32, sq32) = self.mixed.get_or_init(|| {
+            let mut xs32 = vec![0.0f32; self.xs.as_slice().len()];
+            mixed::downconvert(self.xs.as_slice(), &mut xs32);
+            let mut sq32 = vec![0.0f32; self.sq.len()];
+            mixed::downconvert(&self.sq, &mut sq32);
+            (xs32, sq32)
+        });
+        (xs32, sq32)
+    }
+
+    /// Mixed-precision twin of [`Self::matmat_into_slice`]: the same
+    /// three-stage panel pipeline with f32 storage and f64 accumulation
+    /// (`rust/DESIGN.md` §9). `B` is downconverted once per call into a
+    /// pooled workspace f32 slab; panels/packs come from
+    /// `PANEL_SCRATCH_F32`, so a warm call performs zero heap allocations.
+    /// Forward error is O(f32 ε) per entry — callers restore f64-grade
+    /// residuals through the iterative-refinement loop upstairs.
+    fn matmat_mixed_into_slice(&self, ws: &mut SolveWorkspace, b: &Matrix, flat: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.rows(), n, "kernel mixed matmat dim mismatch");
+        let r = b.cols();
+        assert_eq!(flat.len(), n * r, "kernel mixed matmat out size mismatch");
+        flat.fill(0.0);
+        if n == 0 || r == 0 {
+            return;
+        }
+        let tile = self.tile;
+        let d = self.xs.cols();
+        let (xs32, sq32) = self.mixed_data();
+        let mut b32 = ws.take_f32(n * r);
+        mixed::downconvert(b.as_slice(), &mut b32);
+        let nthreads = self.threads.unwrap_or_else(num_threads);
+        // resolve mixed SIMD dispatch once per matmat, outside the parallel
+        // closure (a `&'static` table is freely shared across workers)
+        let tbl = mixed::table();
+        let fam = self.kind.family();
+        // precision: σ² jitter narrowed once per matmat; |σ²| ≤ kernel scale,
+        // so the rounding is within the f32 panel's own O(ε₃₂) forward error.
+        let noise32 = self.noise as f32;
+        let b32_ref: &[f32] = &b32;
+        parallel_fill_threads(flat, tile * r, nthreads, |start_flat, block| {
+            let i0 = start_flat / r;
+            let rows = block.len() / r;
+            PANEL_SCRATCH_F32.with(|scratch| {
+                let (panel, pack) = &mut *scratch.borrow_mut();
+                if panel.len() < rows * tile {
+                    panel.resize(rows * tile, 0.0);
+                }
+                for jt in (0..n).step_by(tile) {
+                    let j1 = (jt + tile).min(n);
+                    let jw = j1 - jt;
+                    let pan = &mut panel[..rows * jw];
+                    pan.fill(0.0);
+                    // stage 1: pan = X₃₂(i-block) · X₃₂(j-tile)ᵀ (f64 dots,
+                    // one f32 rounding per Gram entry)
+                    mixed::gemm_nt(rows, d, jw, &xs32[i0 * d..(i0 + rows) * d], &xs32[jt * d..j1 * d], pan);
+                    // stage 2: pan ← s²·ρ(√max(‖xi‖²+‖xj‖²−2·pan, 0)) (+σ² diag)
+                    for bi in 0..rows {
+                        let i = i0 + bi;
+                        let sqi = sq32[i];
+                        let prow = &mut pan[bi * jw..(bi + 1) * jw];
+                        if let Some(t) = tbl {
+                            // lane-parallel ρ over the contiguous f32 panel row
+                            (t.rho_row)(fam, self.outputscale, sqi, &sq32[jt..j1], prow);
+                        } else {
+                            mixed::rho_row_scalar(fam, self.outputscale, sqi, &sq32[jt..j1], prow);
+                        }
+                        if i >= jt && i < j1 {
+                            prow[i - jt] += noise32;
+                        }
+                    }
+                    // stage 3: out-block += pan · B₃₂(j-tile) into f64
+                    mixed::gemm_nn(rows, jw, r, pan, &b32_ref[jt * r..j1 * r], block, pack);
+                }
+            });
+        });
+        ws.give_f32(b32);
+    }
+
+    /// Mixed-precision twin of [`Self::grad_contract`]: f32 panels and
+    /// distances, f64 contraction sums. The residual column `r` stays f64 —
+    /// gradients feed optimizer steps directly, so the reduction keeps full
+    /// precision even when the panel does not.
+    pub fn grad_contract_mixed(&self, l: &[f64], r: &[f64]) -> (f64, f64) {
+        let n = self.n();
+        assert_eq!(l.len(), n);
+        assert_eq!(r.len(), n);
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let tile = self.tile;
+        let d = self.xs.cols();
+        let (xs32, sq32) = self.mixed_data();
+        let ntiles = n.div_ceil(tile);
+        let nthreads = self.threads.unwrap_or_else(num_threads);
+        let tbl = mixed::table();
+        let fam = self.kind.family();
+        let partials: Vec<(f64, f64)> = parallel_map_threads(ntiles, nthreads, |ti| {
+            let it0 = ti * tile;
+            let it1 = (it0 + tile).min(n);
+            let rows = it1 - it0;
+            let mut panel = vec![0.0f32; rows * tile];
+            let mut d_ell = 0.0;
+            let mut d_s2 = 0.0;
+            for jt in (0..n).step_by(tile) {
+                let j1 = (jt + tile).min(n);
+                let jw = j1 - jt;
+                let pan = &mut panel[..rows * jw];
+                pan.fill(0.0);
+                mixed::gemm_nt(rows, d, jw, &xs32[it0 * d..it1 * d], &xs32[jt * d..j1 * d], pan);
+                for bi in 0..rows {
+                    let i = it0 + bi;
+                    let li = l[i];
+                    if li == 0.0 {
+                        continue;
+                    }
+                    let sqi = sq32[i];
+                    let prow = &pan[bi * jw..(bi + 1) * jw];
+                    let (de, ds) = if let Some(t) = tbl {
+                        // lane-parallel dρ/ρ contraction over the f32 panel row
+                        (t.grad_row)(fam, self.outputscale, li, sqi, &sq32[jt..j1], prow, &r[jt..j1])
+                    } else {
+                        mixed::grad_row_scalar(
+                            fam,
+                            self.outputscale,
+                            li,
+                            sqi,
+                            &sq32[jt..j1],
+                            prow,
+                            &r[jt..j1],
+                        )
+                    };
+                    d_ell += de;
+                    d_s2 += ds;
+                }
+            }
+            (d_ell, d_s2)
+        });
+        partials.into_iter().fold((0.0, 0.0), |(a, b), (x, y)| (a + x, b + y))
     }
 
     /// Kernel value between scaled rows `i` and `j`.
@@ -413,6 +571,22 @@ impl LinearOp for KernelOp {
             None
         }
     }
+
+    fn supports_mixed(&self) -> bool {
+        true
+    }
+
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, b: &Matrix, out: &mut Matrix) {
+        assert_eq!(out.rows(), self.n(), "kernel matmat_mixed_in out rows mismatch");
+        assert_eq!(out.cols(), b.cols(), "kernel matmat_mixed_in out cols mismatch");
+        // `out`'s flat storage and `ws` are disjoint borrows; the pipeline
+        // only draws its B₃₂ slab from `ws`.
+        let n = self.n();
+        let r = b.cols();
+        let flat = out.as_mut_slice();
+        debug_assert_eq!(flat.len(), n * r);
+        self.matmat_mixed_into_slice(ws, b, flat);
+    }
 }
 
 /// Cross-kernel matrix `K(X1, X2)` (`n1 × n2`), same scaling conventions as
@@ -581,6 +755,57 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn mixed_matmat_tracks_f64_within_f32_forward_error() {
+        use crate::linalg::SolveWorkspace;
+        let kinds =
+            [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52];
+        let x = data(70, 3, 21);
+        let mut rng = Pcg64::seeded(22);
+        let b = Matrix::randn(70, 4, &mut rng);
+        let mut ws = SolveWorkspace::new();
+        for kind in kinds {
+            for threads in [1, 4] {
+                let op =
+                    KernelOp::new(&x, kind, 0.7, 1.3, 0.05).with_tile(24).with_threads(threads);
+                let want = op.matmat(&b);
+                let mut got = Matrix::zeros(70, 4);
+                op.matmat_mixed_in(&mut ws, &b, &mut got);
+                // f32 storage bounds the per-entry forward error at
+                // O(ε₃₂·‖K‖·‖b‖): 5e-4 hybrid, same bound the dispatch
+                // sweep documents (tests/simd_dispatch.rs).
+                for (g, w) in got.as_slice().iter().zip(want.as_slice()) {
+                    assert!(
+                        (g - w).abs() < 5e-4 * (1.0 + w.abs()),
+                        "{kind:?} threads={threads}: {g} vs {w}"
+                    );
+                }
+            }
+            assert!(op_supports(&x, kind));
+        }
+
+        fn op_supports(x: &Matrix, kind: KernelType) -> bool {
+            KernelOp::new(x, kind, 0.7, 1.3, 0.05).supports_mixed()
+        }
+    }
+
+    #[test]
+    fn mixed_grad_contract_tracks_f64() {
+        let x = data(40, 2, 31);
+        let mut rng = Pcg64::seeded(32);
+        let l: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let r: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let kinds =
+            [KernelType::Rbf, KernelType::Matern12, KernelType::Matern32, KernelType::Matern52];
+        for kind in kinds {
+            let op = KernelOp::new(&x, kind, 0.8, 1.2, 0.0).with_tile(16).with_threads(1);
+            let (ge, gs) = op.grad_contract(&l, &r);
+            let (me, ms) = op.grad_contract_mixed(&l, &r);
+            assert!((ge - me).abs() < 5e-4 * (1.0 + ge.abs()), "{kind:?} ell {me} vs {ge}");
+            assert!((gs - ms).abs() < 5e-4 * (1.0 + gs.abs()), "{kind:?} s2 {ms} vs {gs}");
+        }
     }
 
     #[test]

@@ -113,6 +113,62 @@ pub trait LinearOp: Sync {
         }
         m
     }
+
+    /// Whether this operator has a genuine f32-storage MVM behind
+    /// [`Self::matmat_mixed_in`]. The refined solve path
+    /// (`rust/DESIGN.md` §9) only engages `Precision::Mixed` when this
+    /// returns `true`; otherwise it silently runs pure f64.
+    fn supports_mixed(&self) -> bool {
+        false
+    }
+
+    /// `out ≈ K X` computed with f32-storage kernels (f64 accumulation),
+    /// scratch drawn from `ws`. Only meaningful when
+    /// [`Self::supports_mixed`] is `true`; the default delegates to the
+    /// exact [`Self::matmat_in`] so callers never get garbage from an
+    /// operator that lacks a mixed path.
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.matmat_in(ws, x, out)
+    }
+}
+
+/// Adapter presenting an operator's *mixed-precision* MVM as its primary
+/// `matmat_in`, so the unmodified msMINRES recurrence can run against the
+/// f32 kernels while the refinement loop above it keeps the exact f64
+/// `matmat_in` for true residuals (`rust/DESIGN.md` §9).
+pub struct MixedOp<'a, T: LinearOp + ?Sized>(pub &'a T);
+
+impl<T: LinearOp + ?Sized> LinearOp for MixedOp<'_, T> {
+    fn size(&self) -> usize {
+        self.0.size()
+    }
+    fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.0.matvec(x)
+    }
+    fn matvec_in(&self, ws: &mut SolveWorkspace, x: &[f64], out: &mut [f64]) {
+        self.0.matvec_in(ws, x, out)
+    }
+    fn matmat(&self, x: &Matrix) -> Matrix {
+        self.0.matmat(x)
+    }
+    fn matmat_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.0.matmat_mixed_in(ws, x, out)
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        self.0.diagonal()
+    }
+    fn column(&self, j: usize) -> Vec<f64> {
+        self.0.column(j)
+    }
+    fn lambda_min_bound(&self) -> Option<f64> {
+        self.0.lambda_min_bound()
+    }
+    fn supports_mixed(&self) -> bool {
+        self.0.supports_mixed()
+    }
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        self.0.matmat_mixed_in(ws, x, out)
+    }
 }
 
 impl<T: LinearOp + ?Sized> LinearOp for &T {
@@ -142,5 +198,11 @@ impl<T: LinearOp + ?Sized> LinearOp for &T {
     }
     fn to_dense(&self) -> Matrix {
         (**self).to_dense()
+    }
+    fn supports_mixed(&self) -> bool {
+        (**self).supports_mixed()
+    }
+    fn matmat_mixed_in(&self, ws: &mut SolveWorkspace, x: &Matrix, out: &mut Matrix) {
+        (**self).matmat_mixed_in(ws, x, out)
     }
 }

@@ -20,7 +20,7 @@ use ciq::ciq::{recycle_block_result, Ciq, CiqOptions, SolveKind, SolverPolicy};
 use ciq::coordinator::Metrics;
 use ciq::krylov::msminres::{msminres_block_in, msminres_in, MsMinresOptions};
 use ciq::linalg::batched::{gemm_nn_batched, gemv_nn_batched};
-use ciq::linalg::{gemm, simd, Matrix, SolveWorkspace};
+use ciq::linalg::{gemm, simd, Matrix, Precision, RefineConfig, SolveWorkspace};
 use ciq::obs::trace::EventKind;
 use ciq::obs::{solvetrace, trace};
 use ciq::operators::DenseOp;
@@ -138,6 +138,49 @@ fn warmed_ciq_solve_block_in_performs_zero_heap_allocations() {
                 thread_allocs() - allocs_before,
                 0,
                 "warmed solve_block_in ({kind:?}) touched the heap under {backend:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn warmed_mixed_precision_solve_block_in_performs_zero_heap_allocations() {
+    // The mixed-precision tier's steady-state contract: the f32 panel slabs,
+    // the f64 residual carriers, and the refinement sweeps' Krylov scratch
+    // are all drawn from the same workspace pool — once warm, a refined
+    // solve is exactly as alloc-free as the pure-f64 one it wraps.
+    serial_mode();
+    let n = 40;
+    let r = 4;
+    let k = random_spd(n, 11);
+    let op = DenseOp::new(k);
+    let mut rng = Pcg64::seeded(12);
+    let b = Matrix::randn(n, r, &mut rng);
+    let solver = Ciq::new(CiqOptions {
+        tol: 1e-8,
+        precision: Precision::Mixed(RefineConfig::default()),
+        ..Default::default()
+    });
+    let ctx = solver.build_context(&op, &SolverPolicy::CachedBounds).unwrap();
+    assert!(ctx.precision.is_mixed(), "cached-bounds context must carry the mixed policy");
+    let mut ws = SolveWorkspace::new();
+    with_backends(|backend| {
+        for kind in [SolveKind::InvSqrt, SolveKind::Sqrt] {
+            // warm-up: grows the f64 pool *and* the f32 slab pool
+            for _ in 0..2 {
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+                assert!(!res.precision_fallback, "well-conditioned solve must not fall back");
+                recycle_block_result(&mut ws, res);
+            }
+            let allocs_before = thread_allocs();
+            for _ in 0..3 {
+                let res = solver.solve_block_in(&mut ws, &op, &b, kind, &ctx).unwrap();
+                recycle_block_result(&mut ws, res);
+            }
+            assert_eq!(
+                thread_allocs() - allocs_before,
+                0,
+                "warmed mixed solve_block_in ({kind:?}) touched the heap under {backend:?}"
             );
         }
     });

@@ -14,7 +14,7 @@
 //! auto dispatch, even across the harness's parallel test threads.
 
 use ciq::linalg::simd::{self, Backend};
-use ciq::linalg::Matrix;
+use ciq::linalg::{Matrix, SolveWorkspace};
 use ciq::operators::{KernelOp, KernelType, LinearOp};
 use ciq::rng::Pcg64;
 use std::sync::Mutex;
@@ -91,6 +91,65 @@ fn kernel_grad_contract_matches_naive_oracle_under_every_forced_backend() {
                 assert!(
                     (gs - ns).abs() < 1e-10 * (1.0 + ns.abs()),
                     "{backend:?} kind={kind:?} n={n} s2 grad {gs} vs {ns}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn kernel_mixed_matmat_stays_within_f32_forward_error_under_every_forced_backend() {
+    // The precision axis of the dispatch matrix: the mixed pipeline stores
+    // panels in f32 and accumulates in f64, so its documented per-entry
+    // bound against the f64 oracle is O(ε₃₂) of the row scale — the hybrid
+    // 5e-4 tolerance mirrors linalg::mixed's own backend equivalence tests.
+    forced_backends(|backend| {
+        let mut ws = SolveWorkspace::new();
+        for &(n, d, r) in &[(13usize, 3usize, 2usize), (34, 4, 5), (61, 2, 7)] {
+            let x = data(n, d, 51);
+            let mut rng = Pcg64::seeded(52);
+            let b = Matrix::randn(n, r, &mut rng);
+            for kind in KINDS {
+                let op = KernelOp::new(&x, kind, 0.7, 1.3, 1e-2).with_tile(16);
+                assert!(op.supports_mixed(), "kernel operator must expose the mixed path");
+                let want = op.matmat(&b);
+                let mut got = Matrix::zeros(n, r);
+                op.matmat_mixed_in(&mut ws, &b, &mut got);
+                for j in 0..r {
+                    for i in 0..n {
+                        let (g, w) = (got[(i, j)], want[(i, j)]);
+                        assert!(
+                            (g - w).abs() <= 5e-4 * (1.0 + w.abs()),
+                            "{backend:?} kind={kind:?} n={n} d={d} r={r} ({i},{j}): {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn kernel_mixed_grad_contract_stays_within_f32_forward_error_under_every_forced_backend() {
+    forced_backends(|backend| {
+        for &(n, d) in &[(17usize, 2usize), (45, 3)] {
+            let x = data(n, d, 61);
+            let mut rng = Pcg64::seeded(62);
+            let l: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for kind in KINDS {
+                let op = KernelOp::new(&x, kind, 0.6, 1.1, 1e-3).with_tile(16);
+                let (ge, gs) = op.grad_contract_mixed(&l, &r);
+                let (we, ws_) = op.grad_contract(&l, &r);
+                // f32 distance panel, f64 contraction sums: same hybrid
+                // forward-error budget as the mixed matmat above
+                assert!(
+                    (ge - we).abs() <= 5e-4 * (1.0 + we.abs()),
+                    "{backend:?} kind={kind:?} n={n} ell grad {ge} vs {we}"
+                );
+                assert!(
+                    (gs - ws_).abs() <= 5e-4 * (1.0 + ws_.abs()),
+                    "{backend:?} kind={kind:?} n={n} s2 grad {gs} vs {ws_}"
                 );
             }
         }

@@ -20,10 +20,11 @@
 //!    `OnceLock`, `mpsc`, and `Weak` stay allowed — they are not scheduling
 //!    points the checker needs to own.
 //! 4. **Arch escape** — `core::arch` / `std::arch` paths or
-//!    `#[target_feature]` attributes anywhere but `linalg/simd.rs`. All
-//!    intrinsics live behind the one dispatch layer whose `table_for`
-//!    availability check discharges their feature contracts; an intrinsic
-//!    elsewhere would be a second, unaudited unsafe surface.
+//!    `#[target_feature]` attributes anywhere but `linalg/simd.rs` and
+//!    `linalg/mixed.rs`. All intrinsics live behind the two dispatch layers
+//!    whose `table_for` availability checks discharge their feature
+//!    contracts; an intrinsic elsewhere would be a third, unaudited unsafe
+//!    surface.
 //! 5. **Feature-blind SAFETY** — a `#[target_feature(enable = "…")]` fn
 //!    whose preceding `SAFETY:` comment does not name every enabled
 //!    feature. The comment is the contract ("caller must ensure avx2 and
@@ -35,6 +36,12 @@
 //!    the same line or within the 6 preceding lines. Ad-hoc clock reads are
 //!    how timing becomes unauditable and unmockable; each one must say why
 //!    it cannot go through `obs::clock`.
+//! 7. **Unjustified precision narrowing** — an `as f32` cast anywhere but
+//!    `linalg/mixed.rs` without a `// precision:` justification comment on
+//!    the same line or within the 6 preceding lines. The mixed-precision
+//!    kernel layer owns the crate's forward-error analysis; a narrowing
+//!    cast elsewhere silently moves data out from under that analysis, so
+//!    each one must argue why the rounding is benign.
 //!
 //! Test regions are exempt: scanning stops at the first `#[cfg(test)]` line
 //! (by crate convention test modules sit at the bottom of each file). Scope
@@ -69,9 +76,18 @@ const SHIMMED: &[&str] =
 /// comment may sit (rule 6).
 const CLOCK_WINDOW: usize = 6;
 
-/// The single file allowed to contain `core::arch`/`std::arch` paths and
-/// `#[target_feature]` fns (rule 4). Matched as a path suffix.
-const ARCH_HOME: &str = "linalg/simd.rs";
+/// The files allowed to contain `core::arch`/`std::arch` paths and
+/// `#[target_feature]` fns (rule 4): the SIMD dispatch layer and the
+/// mixed-precision kernel layer built on the same availability gates.
+/// Matched as path suffixes.
+const ARCH_HOMES: &[&str] = &["linalg/simd.rs", "linalg/mixed.rs"];
+
+/// The single module allowed to narrow to `f32` freely (rule 7): the
+/// mixed-precision kernel layer, whose module-level forward-error analysis
+/// is the standing justification. Matched as a path suffix.
+const PRECISION_HOME: &str = "linalg/mixed.rs";
+/// How far above an `as f32` cast a `// precision:` comment may sit (rule 7).
+const PRECISION_WINDOW: usize = 6;
 
 #[derive(Debug, PartialEq, Eq)]
 struct Violation {
@@ -277,6 +293,27 @@ fn find_word(code: &str, word: &str, from: usize) -> Option<usize> {
     None
 }
 
+/// Does `code` contain an `as f32` cast (whole-word match on both tokens,
+/// any amount of whitespace between them)?
+fn has_as_f32(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(at) = find_word(code, "f32", from) {
+        let pre = code[..at].trim_end();
+        if pre.ends_with("as") {
+            let stem = &pre[..pre.len() - 2];
+            let boundary = stem
+                .chars()
+                .next_back()
+                .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+            if boundary && pre.len() < at {
+                return true;
+            }
+        }
+        from = at + "f32".len();
+    }
+    false
+}
+
 /// Does any comment in `lines[lo..=hi]` contain one of `needles`
 /// (case-insensitively)?
 fn comment_in_window(lines: &[Line], lo: usize, hi: usize, needles: &[&str]) -> bool {
@@ -364,7 +401,8 @@ fn enable_features(raw_line: &str) -> Option<Vec<String>> {
 /// shimmed-module suffix match).
 fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
     let shimmed = SHIMMED.iter().any(|s| relpath.ends_with(s));
-    let arch_home = relpath.ends_with(ARCH_HOME);
+    let arch_home = ARCH_HOMES.iter().any(|s| relpath.ends_with(s));
+    let precision_home = relpath.ends_with(PRECISION_HOME);
     // Rule 6 exemptions: obs/ owns the shared time base, the timer wheel
     // reads its own origin.
     let clock_home = relpath.contains("/obs/")
@@ -458,25 +496,27 @@ fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
         // dispatch layer.
         if !arch_home {
             if line.code.contains("core::arch") || line.code.contains("std::arch") {
+                let homes = ARCH_HOMES.join(", ");
                 out.push(Violation {
                     file: relpath.to_string(),
                     line: lineno,
                     rule: "arch-outside-simd",
                     msg: format!(
-                        "`core::arch`/`std::arch` outside {ARCH_HOME}; intrinsics live \
-                         behind the dispatch layer whose availability check discharges \
+                        "`core::arch`/`std::arch` outside {homes}; intrinsics live \
+                         behind the dispatch layers whose availability checks discharge \
                          their feature contracts"
                     ),
                 });
             }
             if line.code.contains("#[target_feature") {
+                let homes = ARCH_HOMES.join(", ");
                 out.push(Violation {
                     file: relpath.to_string(),
                     line: lineno,
                     rule: "arch-outside-simd",
                     msg: format!(
-                        "`#[target_feature]` outside {ARCH_HOME}; feature-gated kernels \
-                         belong in the dispatch layer"
+                        "`#[target_feature]` outside {homes}; feature-gated kernels \
+                         belong in the dispatch layers"
                     ),
                 });
             }
@@ -500,6 +540,23 @@ fn lint_file(relpath: &str, src: &str) -> Vec<Violation> {
                         });
                     }
                 }
+            }
+        }
+        // Rule 7: f32 narrowing outside the mixed-precision kernel layer
+        // needs a `// precision:` justification.
+        if !precision_home && has_as_f32(&line.code) {
+            let lo = idx.saturating_sub(PRECISION_WINDOW);
+            if !comment_in_window(&lines, lo, idx, &["precision:"]) {
+                out.push(Violation {
+                    file: relpath.to_string(),
+                    line: lineno,
+                    rule: "f32-cast-needs-justification",
+                    msg: format!(
+                        "`as f32` outside {PRECISION_HOME} without a `// precision:` \
+                         comment on the same line or within the {PRECISION_WINDOW} \
+                         preceding lines"
+                    ),
+                });
             }
         }
         // Rule 5: a target_feature fn's SAFETY comment must name every
@@ -652,6 +709,25 @@ fn g() -> std::time::SystemTime {
 }
 "#;
 
+const FIX_PRECISION_BAD: &str = r#"
+fn f(x: f64) -> f32 {
+    x as f32
+}
+"#;
+
+const FIX_PRECISION_GOOD: &str = r#"
+fn f(x: f64) -> f32 {
+    // precision: display-only narrowing; the value never feeds a solve.
+    x as f32
+}
+fn g(x: f64) -> f32 {
+    x as f32 // precision: same-line justification also counts.
+}
+fn h(x: f64) -> u32 {
+    x as u32
+}
+"#;
+
 const FIX_FALSE_POSITIVES: &str = r####"
 //! Docs may say unsafe and Ordering::Relaxed and std::sync::Mutex freely.
 fn f() -> &'static str {
@@ -705,8 +781,9 @@ fn self_test() -> Result<(), String> {
         "src/operators/kernel.rs",
         &["arch-outside-simd", "arch-outside-simd", "target-feature-safety-names-feature"],
     )?;
-    // ...a properly annotated kernel is clean inside linalg/simd.rs...
+    // ...a properly annotated kernel is clean inside either arch home...
     expect(FIX_TF_GOOD, "src/linalg/simd.rs", &[])?;
+    expect(FIX_TF_GOOD, "src/linalg/mixed.rs", &[])?;
     // ...but the identical source anywhere else is confined...
     expect(FIX_TF_GOOD, "src/util/fastmath.rs", &["arch-outside-simd", "arch-outside-simd"])?;
     // ...and a SAFETY comment that names no feature fails rule 5 even
@@ -719,6 +796,12 @@ fn self_test() -> Result<(), String> {
     expect(FIX_CLOCK_BAD, "src/exec/timer.rs", &[])?;
     // ...and justified reads pass anywhere.
     expect(FIX_CLOCK_GOOD, "src/svgp/mod.rs", &[])?;
+    // f32 narrowing: unjustified outside the mixed-precision home...
+    expect(FIX_PRECISION_BAD, "src/operators/kernel.rs", &["f32-cast-needs-justification"])?;
+    // ...exempt inside it (the module doc carries the error analysis)...
+    expect(FIX_PRECISION_BAD, "src/linalg/mixed.rs", &[])?;
+    // ...and justified casts (widening ones too) pass anywhere.
+    expect(FIX_PRECISION_GOOD, "src/coordinator/mod.rs", &[])?;
     Ok(())
 }
 
@@ -727,7 +810,7 @@ fn main() -> ExitCode {
     if args.iter().any(|a| a == "--self-test") {
         return match self_test() {
             Ok(()) => {
-                println!("structlint: self-test passed (16 fixtures)");
+                println!("structlint: self-test passed (20 fixtures)");
                 ExitCode::SUCCESS
             }
             Err(e) => {
@@ -801,6 +884,15 @@ mod tests {
         let far =
             format!("// ordering: too far\n{}let _ = a.load(Ordering::Relaxed);\n", "\n".repeat(10));
         assert_eq!(lint_file("x.rs", &far).len(), 1);
+    }
+
+    #[test]
+    fn as_f32_detector_matches_casts_only() {
+        assert!(has_as_f32("let y = x as f32;"));
+        assert!(has_as_f32("(a + b) as f32"));
+        assert!(!has_as_f32("let y = x as f64;"));
+        assert!(!has_as_f32("fn f(x: f32) -> f32 { x }"));
+        assert!(!has_as_f32("alias f32"));
     }
 
     #[test]
